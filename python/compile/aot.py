@@ -1,0 +1,241 @@
+"""AOT compile path: lower the L2/L1 entry points to HLO **text** artifacts.
+
+Run once by ``make artifacts``; the Rust runtime (rust/src/runtime/) loads
+the text with ``HloModuleProto::from_text_file``, compiles on the PJRT CPU
+client and executes — Python is never on the request path.
+
+HLO text (NOT ``lowered.compiler_ir('hlo')``/``.serialize()``) is the
+interchange format: jax >= 0.5 emits protos with 64-bit instruction ids
+that xla_extension 0.5.1 rejects; the text parser reassigns ids
+(/opt/xla-example/README.md).
+
+Every artifact is described in ``artifacts/manifest.json`` — name, entry
+kind, lattice, shapes, vvl_block and the baked free-energy parameters — so
+the Rust side never hard-codes shapes and always uses the identical
+constants (the copyConstantToTarget analog is "baked at AOT time").
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import time
+
+import jax
+
+jax.config.update("jax_enable_x64", True)  # before any tracing
+
+import numpy as np  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+from .kernels import ref  # noqa: E402
+
+F64 = "f64"
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange).
+
+    IMPORTANT: the default HLO text printer elides large array constants as
+    ``constant({...})``, which the downstream text parser silently turns
+    into ZEROS — the per-velocity projection tables inside the collision
+    kernel would vanish. ``print_large_constants`` keeps them verbatim
+    (pinned by tests/test_aot.py and the Rust xla_parity tests).
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # the 0.5.1 text parser rejects newer metadata attributes
+    # (source_end_line etc.), so strip metadata entirely
+    opts.print_metadata = False
+    return comp.get_hlo_module().to_string(opts)
+
+
+def spec(shape):
+    return jax.ShapeDtypeStruct(tuple(shape), np.float64)
+
+
+def _io(shapes):
+    return [{"shape": list(s), "dtype": F64} for s in shapes]
+
+
+@dataclasses.dataclass
+class Artifact:
+    name: str
+    kind: str               # collision | full_step | gradient | scale
+    lattice: str | None
+    vvl_block: int
+    inputs: list
+    outputs: list
+    extra: dict
+    hlo: str
+
+    def manifest_entry(self):
+        return {
+            "name": self.name,
+            "file": f"{self.name}.hlo.txt",
+            "kind": self.kind,
+            "lattice": self.lattice,
+            "vvl_block": self.vvl_block,
+            "inputs": self.inputs,
+            "outputs": self.outputs,
+            **self.extra,
+        }
+
+
+def build_collision(lattice: str, n: int, vvl_block: int,
+                    params: ref.FreeEnergyParams) -> Artifact:
+    nvel = ref.velocity_set(lattice)[0].shape[0]
+    shapes = [(nvel, n), (nvel, n), (3, n), (n,)]
+
+    def fn(f, g, grad, lap):
+        return model.collision_step(f, g, grad, lap, lattice=lattice,
+                                    vvl_block=vvl_block, params=params)
+
+    lowered = jax.jit(fn).lower(*map(spec, shapes))
+    name = f"collision_{lattice}_n{n}_vvl{vvl_block}"
+    return Artifact(name, "collision", lattice, vvl_block,
+                    _io(shapes), _io([(nvel, n), (nvel, n)]),
+                    {"n_sites": n, "nvel": nvel,
+                     "params": dataclasses.asdict(params)},
+                    to_hlo_text(lowered))
+
+
+def build_full_step(lattice: str, grid, vvl_block: int,
+                    params: ref.FreeEnergyParams) -> Artifact:
+    nvel = ref.velocity_set(lattice)[0].shape[0]
+    gshape = (nvel, *grid)
+
+    def fn(f, g):
+        return model.full_step(f, g, lattice=lattice,
+                               vvl_block=vvl_block, params=params)
+
+    lowered = jax.jit(fn).lower(spec(gshape), spec(gshape))
+    name = f"full_step_{lattice}_{'x'.join(map(str, grid))}_vvl{vvl_block}"
+    return Artifact(name, "full_step", lattice, vvl_block,
+                    _io([gshape, gshape]), _io([gshape, gshape]),
+                    {"grid": list(grid), "nvel": nvel,
+                     "n_sites": int(np.prod(grid)),
+                     "params": dataclasses.asdict(params)},
+                    to_hlo_text(lowered))
+
+
+def build_multi_step(lattice: str, grid, steps: int, vvl_block: int,
+                     params: ref.FreeEnergyParams) -> Artifact:
+    nvel = ref.velocity_set(lattice)[0].shape[0]
+    gshape = (nvel, *grid)
+
+    def fn(f, g):
+        return model.multi_step(f, g, steps=steps, lattice=lattice,
+                                vvl_block=vvl_block, params=params)
+
+    lowered = jax.jit(fn).lower(spec(gshape), spec(gshape))
+    name = (f"multi_step{steps}_{lattice}_"
+            f"{'x'.join(map(str, grid))}_vvl{vvl_block}")
+    return Artifact(name, "multi_step", lattice, vvl_block,
+                    _io([gshape, gshape]), _io([gshape, gshape]),
+                    {"grid": list(grid), "nvel": nvel, "steps": steps,
+                     "n_sites": int(np.prod(grid)),
+                     "params": dataclasses.asdict(params)},
+                    to_hlo_text(lowered))
+
+
+def build_gradient(grid) -> Artifact:
+    gshape = tuple(grid)
+    lowered = jax.jit(model.gradient_step).lower(spec(gshape))
+    name = f"gradient_{'x'.join(map(str, grid))}"
+    return Artifact(name, "gradient", None, 0,
+                    _io([gshape]), _io([(3, *gshape), gshape]),
+                    {"grid": list(grid), "n_sites": int(np.prod(grid))},
+                    to_hlo_text(lowered))
+
+
+def build_reduce(ncomp: int, n: int) -> Artifact:
+    """Per-component lattice sum — the paper's section-V reduction
+    extension, as an XLA artifact (kind "reduce")."""
+    import jax.numpy as jnp
+
+    def fn(x):
+        return (jnp.sum(x, axis=1),)
+
+    lowered = jax.jit(fn).lower(spec((ncomp, n)))
+    name = f"reduce_sum_c{ncomp}_n{n}"
+    return Artifact(name, "reduce", None, 0,
+                    _io([(ncomp, n)]), _io([(ncomp,)]),
+                    {"n_sites": n, "ncomp": ncomp},
+                    to_hlo_text(lowered))
+
+
+def build_scale(n: int, vvl_block: int, a: float) -> Artifact:
+    def fn(x):
+        return (model.scale_field(x, a=a, vvl_block=vvl_block),)
+
+    lowered = jax.jit(fn).lower(spec((3, n)))
+    name = f"scale_n{n}_vvl{vvl_block}"
+    return Artifact(name, "scale", None, vvl_block,
+                    _io([(3, n)]), _io([(3, n)]),
+                    {"n_sites": n, "a": a},
+                    to_hlo_text(lowered))
+
+
+def default_artifacts(quick: bool) -> list:
+    p = ref.FreeEnergyParams()
+    arts = [
+        build_scale(4096, 256, 1.5),
+        # test-sized collision kernels, both lattices
+        build_collision("d3q19", 4096, 256, p),
+        build_collision("d2q9", 1024, 128, p),
+        # end-to-end steps
+        build_full_step("d3q19", (16, 16, 16), 256, p),
+        build_full_step("d2q9", (64, 64, 1), 256, p),
+        build_multi_step("d3q19", (16, 16, 16), 10, 256, p),
+        build_gradient((16, 16, 16)),
+        build_reduce(19, 4096),
+        build_reduce(1, 4096),
+        build_reduce(19, 32 * 32 * 32),
+    ]
+    if not quick:
+        # E1/E2: Figure-1 benchmark size (32^3) with the vvl_block sweep —
+        # the GPU-side VVL analog (DESIGN.md section 3). Blocks beyond 1024
+        # added during the perf pass (EXPERIMENTS.md §Perf P5): on the
+        # interpret-mode substrate the per-grid-step loop overhead
+        # dominates, so fewer/larger blocks win monotonically.
+        for blk in (32, 64, 128, 256, 512, 1024, 2048, 4096):
+            arts.append(build_collision("d3q19", 32 * 32 * 32, blk, p))
+        # fused steps use a large block for the same reason (P5)
+        arts.append(build_full_step("d3q19", (32, 32, 32), 1024, p))
+        arts.append(build_multi_step("d3q19", (32, 32, 32), 10, 1024, p))
+        arts.append(build_multi_step("d2q9", (64, 64, 1), 10, 1024, p))
+    return arts
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--quick", action="store_true",
+                    help="skip the benchmark-sized artifacts")
+    args = ap.parse_args()
+
+    out = pathlib.Path(args.out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+
+    t0 = time.time()
+    manifest = []
+    for art in default_artifacts(args.quick):
+        path = out / f"{art.name}.hlo.txt"
+        path.write_text(art.hlo)
+        manifest.append(art.manifest_entry())
+        print(f"  wrote {path} ({len(art.hlo)} chars)")
+    (out / "manifest.json").write_text(json.dumps(manifest, indent=2) + "\n")
+    print(f"{len(manifest)} artifacts + manifest.json in {out} "
+          f"({time.time() - t0:.1f}s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,176 @@
+"""Layer-1 Pallas kernels: binary-fluid LB collision + the paper's scale demo.
+
+The paper exposes lattice parallelism as TLP x ILP by strip-mining the site
+loop into chunks of a virtual vector length (VVL). The Pallas analog
+(DESIGN.md section 3): the grid iterates over site *chunks* and the BlockSpec
+block width ``vvl_block`` is the VVL — each grid step owns a
+``(nvel, vvl_block)`` SoA slab resident in VMEM and performs the full
+collision for those sites. Tuning ``vvl_block`` trades grid steps against
+per-step vector work, exactly the paper's "fewer blocks x more ILP" knob.
+
+Kernels MUST be lowered with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls (see /opt/xla-example/README.md).
+
+Free-energy parameters are baked into the kernel at trace time — the
+``TARGET_CONST`` / ``copyConstantDoubleToTarget`` analog: constants live
+"as close to the registers as possible" (folded into the HLO).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Unique symmetric-tensor component order used throughout: xx xy xz yy yz zz
+SYM6 = [(0, 0), (0, 1), (0, 2), (1, 1), (1, 2), (2, 2)]
+# Off-diagonal components appear twice in S : Q contractions.
+SYM6_MULT = np.array([1.0, 2.0, 2.0, 1.0, 2.0, 1.0])
+
+
+def _projection_tables(lattice: str):
+    """Per-velocity constants for the moment-projection equilibrium.
+
+    Returns (c (nvel,3), w (nvel,), q6 (nvel,6)) where
+    q6[i,k] = multiplicity_k * (c_i c_i - I_d/3)_{ab(k)} — so that
+    sum_ab Q_iab S_ab == q6[i] . s6 for a symmetric S packed as s6.
+    I_d is the dimension-embedded identity (ref.lattice_eye): for D2Q9 the
+    zz/xz/yz rows vanish, which keeps mass/phi exactly conserved.
+    """
+    cv, wv = ref.velocity_set(lattice)
+    eye_d = ref.lattice_eye(lattice)
+    nvel = cv.shape[0]
+    q6 = np.empty((nvel, 6))
+    for k, (a, b) in enumerate(SYM6):
+        q = cv[:, a] * cv[:, b] - eye_d[a, b] / 3.0
+        q6[:, k] = SYM6_MULT[k] * q
+    return cv, wv, q6
+
+
+def _collision_body(f, g, grad, lap, cv, wv, q6, p: ref.FreeEnergyParams):
+    """Collision math over one SoA slab. f,g: (nvel,B); grad: (3,B); lap: (B,).
+
+    Shared between the Pallas kernel body and the jnp fallback so the two
+    cannot drift.
+    """
+    dt = f.dtype
+    c = jnp.asarray(cv, dt)          # (nvel, 3)
+    w = jnp.asarray(wv, dt)          # (nvel,)
+    q = jnp.asarray(q6, dt)          # (nvel, 6)
+
+    # Moments (the per-site reductions the paper's kernel performs).
+    rho = jnp.sum(f, axis=0)                     # (B,)
+    rho_u = jnp.einsum("ia,ib->ab", c, f)        # (3, B)
+    phi = jnp.sum(g, axis=0)
+    phi_u_over = jnp.einsum("ia,ib->ab", c, g)   # unused: g momentum not needed
+    del phi_u_over
+    u = rho_u / rho                              # (3, B)
+
+    # Free-energy sector (constants baked).
+    phi2 = phi * phi
+    mu = p.a * phi + p.b * phi * phi2 - p.kappa * lap
+    p0 = rho * ref.CS2 + 0.5 * p.a * phi2 + 0.75 * p.b * phi2 * phi2
+    gsq = grad[0] * grad[0] + grad[1] * grad[1] + grad[2] * grad[2]
+    iso = p0 - p.kappa * phi * lap - 0.5 * p.kappa * gsq
+
+    # Symmetric tensors packed as 6 components (xx xy xz yy yz zz).
+    def sym6(diag, off_scale_vec, uu_scale):
+        """diag: (B,) isotropic part; plus kappa grad grad / scale * u u."""
+        comps = []
+        for k, (a, b) in enumerate(SYM6):
+            val = uu_scale * u[a] * u[b] + off_scale_vec * grad[a] * grad[b]
+            if a == b:
+                val = val + diag
+            comps.append(val)
+        return jnp.stack(comps, axis=0)          # (6, B)
+
+    s_f6 = sym6(iso - rho * ref.CS2, p.kappa * jnp.ones_like(rho), rho)
+    s_g6 = sym6(p.gamma * mu - phi * ref.CS2, jnp.zeros_like(rho), phi)
+
+    cb_f = jnp.einsum("ia,ab->ib", c, rho_u)     # (nvel, B)
+    cb_g = jnp.einsum("ia,ab->ib", c, phi[None, :] * u)
+    qs_f = jnp.einsum("ik,kb->ib", q, s_f6)
+    qs_g = jnp.einsum("ik,kb->ib", q, s_g6)
+
+    feq = w[:, None] * (rho[None, :] + 3.0 * cb_f + 4.5 * qs_f)
+    geq = w[:, None] * (phi[None, :] + 3.0 * cb_g + 4.5 * qs_g)
+
+    f_out = f - (f - feq) / p.tau_f
+    g_out = g - (g - geq) / p.tau_g
+    return f_out, g_out
+
+
+def _collision_kernel(f_ref, g_ref, grad_ref, lap_ref, c_ref, w_ref, q_ref,
+                      fo_ref, go_ref, *, params):
+    # c/w/q are the small per-velocity constant tables, passed as operands —
+    # the copyConstant*ToTarget analog (Pallas forbids captured array consts).
+    f = f_ref[...]
+    g = g_ref[...]
+    grad = grad_ref[...]
+    lap = lap_ref[...][0]  # (1, B) block -> (B,)
+    f_out, g_out = _collision_body(
+        f, g, grad, lap, c_ref[...], w_ref[...][:, 0], q_ref[...], params)
+    fo_ref[...] = f_out
+    go_ref[...] = g_out
+
+
+@functools.partial(jax.jit, static_argnames=("lattice", "vvl_block", "params"))
+def collide(f, g, grad_phi, lap_phi, *, lattice: str = "d3q19",
+            vvl_block: int = 256,
+            params: ref.FreeEnergyParams = ref.FreeEnergyParams()):
+    """Pallas binary collision. f,g: (nvel,N); grad: (3,N); lap: (N,).
+
+    N must be a multiple of ``vvl_block`` (the lattice layer pads; DESIGN §3).
+    """
+    cv, wv, q6 = _projection_tables(lattice)
+    nvel = cv.shape[0]
+    n = f.shape[1]
+    if n % vvl_block:
+        raise ValueError(f"n={n} not a multiple of vvl_block={vvl_block}")
+    grid = (n // vvl_block,)
+
+    slab = lambda rows: pl.BlockSpec((rows, vvl_block), lambda i: (0, i))
+    const = lambda cols: pl.BlockSpec((nvel, cols), lambda i: (0, 0))
+    dt = f.dtype
+    return pl.pallas_call(
+        functools.partial(_collision_kernel, params=params),
+        grid=grid,
+        in_specs=[slab(nvel), slab(nvel), slab(3), slab(1),
+                  const(3), const(1), const(6)],
+        out_specs=[slab(nvel), slab(nvel)],
+        out_shape=[
+            jax.ShapeDtypeStruct((nvel, n), dt),
+            jax.ShapeDtypeStruct((nvel, n), dt),
+        ],
+        interpret=True,
+    )(f, g, grad_phi, lap_phi[None, :],
+      jnp.asarray(cv, dt), jnp.asarray(wv, dt)[:, None], jnp.asarray(q6, dt))
+
+
+# ---------------------------------------------------------------------------
+# The paper's section III running example: scale a 3-vector field by a const
+# ---------------------------------------------------------------------------
+
+def _scale_kernel(x_ref, o_ref, *, a):
+    o_ref[...] = a * x_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("a", "vvl_block"))
+def scale(field, *, a: float = 1.5, vvl_block: int = 256):
+    """field: (3, N) SoA 3-vector field; returns a*field via Pallas."""
+    ndim, n = field.shape
+    if n % vvl_block:
+        raise ValueError(f"n={n} not a multiple of vvl_block={vvl_block}")
+    return pl.pallas_call(
+        functools.partial(_scale_kernel, a=a),
+        grid=(n // vvl_block,),
+        in_specs=[pl.BlockSpec((ndim, vvl_block), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((ndim, vvl_block), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((ndim, n), field.dtype),
+        interpret=True,
+    )(field)

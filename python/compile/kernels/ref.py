@@ -1,0 +1,275 @@
+"""Pure-jnp reference oracle for the binary-fluid LB collision.
+
+This is the CORE correctness signal of the stack: the Pallas kernel
+(kernels/collision.py), the JAX model (model.py) and every Rust kernel
+(targetdp host targets, baseline) must agree with these functions
+(allclose at f64 tolerances).
+
+Physics (DESIGN.md section 5) — Ludwig/Kendon-style binary fluid:
+  rho  = sum_i f_i,   rho*u = sum_i f_i c_i,   phi = sum_i g_i
+  mu   = A phi + B phi^3 - kappa lap(phi)
+  p0   = rho cs2 + A/2 phi^2 + 3B/4 phi^4
+  Pth  = (p0 - kappa phi lap(phi) - kappa/2 |grad phi|^2) I
+         + kappa grad(phi) x grad(phi)
+  equilibria via moment projection
+      h_i^eq = w_i [ a + 3 b.c_i + 9/2 S : (c_i c_i - I/3) ]
+  f:  a=rho, b=rho u, S = Pth + rho u u - rho cs2 I
+  g:  a=phi, b=phi u, S = (Gamma mu - phi cs2) I + phi u u
+  BGK h <- h - (h - h^eq)/tau
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+CS2 = 1.0 / 3.0
+
+
+# ---------------------------------------------------------------------------
+# Velocity sets (SoA-friendly: arrays of shape (nvel, ndim) / (nvel,))
+# ---------------------------------------------------------------------------
+
+def d3q19_velocities() -> np.ndarray:
+    """The 19 D3Q19 lattice vectors, rest vector first (Ludwig ordering)."""
+    c = [(0, 0, 0)]
+    # 6 face neighbours
+    c += [(1, 0, 0), (-1, 0, 0), (0, 1, 0), (0, -1, 0), (0, 0, 1), (0, 0, -1)]
+    # 12 edge neighbours
+    c += [
+        (1, 1, 0), (-1, -1, 0), (1, -1, 0), (-1, 1, 0),
+        (1, 0, 1), (-1, 0, -1), (1, 0, -1), (-1, 0, 1),
+        (0, 1, 1), (0, -1, -1), (0, 1, -1), (0, -1, 1),
+    ]
+    return np.array(c, dtype=np.float64)
+
+
+def d3q19_weights() -> np.ndarray:
+    w = np.empty(19, dtype=np.float64)
+    w[0] = 1.0 / 3.0
+    w[1:7] = 1.0 / 18.0
+    w[7:19] = 1.0 / 36.0
+    return w
+
+
+def d2q9_velocities() -> np.ndarray:
+    """D2Q9 embedded in 3-D (z component zero) so the same kernel applies."""
+    c = [(0, 0, 0),
+         (1, 0, 0), (-1, 0, 0), (0, 1, 0), (0, -1, 0),
+         (1, 1, 0), (-1, -1, 0), (1, -1, 0), (-1, 1, 0)]
+    return np.array(c, dtype=np.float64)
+
+
+def d2q9_weights() -> np.ndarray:
+    w = np.empty(9, dtype=np.float64)
+    w[0] = 4.0 / 9.0
+    w[1:5] = 1.0 / 9.0
+    w[5:9] = 1.0 / 36.0
+    return w
+
+
+def velocity_set(name: str):
+    """Returns (c (nvel,3) float64, w (nvel,) float64)."""
+    if name == "d3q19":
+        return d3q19_velocities(), d3q19_weights()
+    if name == "d2q9":
+        return d2q9_velocities(), d2q9_weights()
+    raise ValueError(f"unknown velocity set {name!r}")
+
+
+def ndim_of(name: str) -> int:
+    return {"d3q19": 3, "d2q9": 2}[name]
+
+
+def lattice_eye(name: str) -> np.ndarray:
+    """I_d embedded in 3x3: diag(1,1,1) for D3Q19, diag(1,1,0) for D2Q9.
+
+    The moment-projection equilibrium needs (c c - I_d/3): with the full
+    3-D identity a D2Q9 set would violate Sum w_i (c c - I/3) = 0 on the
+    zz component and break mass/phi conservation.
+    """
+    e = np.zeros((3, 3))
+    d = ndim_of(name)
+    e[:d, :d] = np.eye(d)
+    return e
+
+
+@dataclasses.dataclass(frozen=True)
+class FreeEnergyParams:
+    """Symmetric (phi^4) binary free energy + mobility + relaxation times."""
+
+    a: float = -0.0625      # A < 0: two-phase region
+    b: float = 0.0625       # B > 0
+    kappa: float = 0.04     # interfacial penalty
+    gamma: float = 1.0      # order-parameter mobility prefactor Gamma
+    tau_f: float = 1.0      # fluid relaxation time
+    tau_g: float = 0.8      # order-parameter relaxation time
+
+    def as_array(self) -> np.ndarray:
+        """Pack in the order the kernels/artifacts expect (see collision.py)."""
+        return np.array(
+            [self.a, self.b, self.kappa, self.gamma, self.tau_f, self.tau_g],
+            dtype=np.float64,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Reference collision (SoA: f (nvel, n), g (nvel, n), grad (3, n), lap (n,))
+# ---------------------------------------------------------------------------
+
+def moments(h, cv):
+    """Zeroth and first moments of a distribution. h: (nvel, n)."""
+    dens = jnp.sum(h, axis=0)
+    mom = jnp.einsum("ia,in->an", jnp.asarray(cv, dtype=h.dtype), h)
+    return dens, mom
+
+
+def equilibrium(wv, cv, a, b_vec, s_tensor, eye_d=None):
+    """h_i = w_i [a + 3 b.c_i + 9/2 S : (c_i c_i - I_d/3)].
+
+    Shapes: a (n,), b_vec (3, n), s_tensor (3, 3, n) -> (nvel, n).
+    eye_d is the dimension-embedded identity (lattice_eye); default 3-D.
+    """
+    wv = jnp.asarray(wv, dtype=a.dtype)
+    cv = jnp.asarray(cv, dtype=a.dtype)
+    if eye_d is None:
+        eye_d = np.eye(3)
+    q = (
+        cv[:, :, None] * cv[:, None, :]
+        - jnp.asarray(eye_d, dtype=cv.dtype)[None, :, :] / 3.0
+    )  # (nvel, 3, 3)
+    term1 = a[None, :]
+    term2 = 3.0 * jnp.einsum("ia,an->in", cv, b_vec)
+    term3 = 4.5 * jnp.einsum("iab,abn->in", q, s_tensor)
+    return wv[:, None] * (term1 + term2 + term3)
+
+
+def chemical_potential(phi, lap_phi, p: FreeEnergyParams):
+    return p.a * phi + p.b * phi**3 - p.kappa * lap_phi
+
+
+def bulk_pressure(rho, phi, p: FreeEnergyParams):
+    return rho * CS2 + 0.5 * p.a * phi**2 + 0.75 * p.b * phi**4
+
+
+def thermodynamic_pressure_tensor(rho, phi, grad_phi, lap_phi,
+                                  p: FreeEnergyParams, eye_d=None):
+    """Pth, shape (3, 3, n)."""
+    p0 = bulk_pressure(rho, phi, p)
+    iso = p0 - p.kappa * phi * lap_phi - 0.5 * p.kappa * jnp.sum(
+        grad_phi**2, axis=0)
+    if eye_d is None:
+        eye_d = np.eye(3)
+    eye = jnp.asarray(eye_d, dtype=grad_phi.dtype)
+    return (
+        iso[None, None, :] * eye[:, :, None]
+        + p.kappa * grad_phi[:, None, :] * grad_phi[None, :, :]
+    )
+
+
+def collide(f, g, grad_phi, lap_phi, params: FreeEnergyParams,
+            lattice: str = "d3q19"):
+    """One BGK binary-fluid collision over n sites. All SoA, float64.
+
+    f, g: (nvel, n); grad_phi: (3, n); lap_phi: (n,).
+    Returns (f', g') post-collision (pre-streaming).
+    """
+    cv, wv = velocity_set(lattice)
+    eye_d = lattice_eye(lattice)
+    rho, rho_u = moments(f, cv)
+    phi, _ = moments(g, cv)
+    u = rho_u / rho
+    uu = u[:, None, :] * u[None, :, :]
+    eye = jnp.asarray(eye_d, dtype=f.dtype)
+
+    pth = thermodynamic_pressure_tensor(rho, phi, grad_phi, lap_phi, params,
+                                        eye_d)
+    s_f = (pth + rho[None, None, :] * uu
+           - (rho * CS2)[None, None, :] * eye[:, :, None])
+    feq = equilibrium(wv, cv, rho, rho_u, s_f, eye_d)
+
+    mu = chemical_potential(phi, lap_phi, params)
+    s_g = ((params.gamma * mu - phi * CS2)[None, None, :] * eye[:, :, None]
+           + phi[None, None, :] * uu)
+    geq = equilibrium(wv, cv, phi, phi[None, :] * u, s_g, eye_d)
+
+    f_out = f - (f - feq) / params.tau_f
+    g_out = g - (g - geq) / params.tau_g
+    return f_out, g_out
+
+
+# ---------------------------------------------------------------------------
+# Reference field ops on a full periodic lattice, grid shape (Lx, Ly, Lz)
+# ---------------------------------------------------------------------------
+
+def gradient_fd(phi_grid):
+    """Central-difference grad (3, ...) and laplacian of a periodic field."""
+    grads = []
+    lap = -6.0 * phi_grid
+    for axis in range(3):
+        up = jnp.roll(phi_grid, -1, axis=axis)
+        dn = jnp.roll(phi_grid, 1, axis=axis)
+        grads.append(0.5 * (up - dn))
+        lap = lap + up + dn
+    return jnp.stack(grads, axis=0), lap
+
+
+def stream(h_grid, cv):
+    """Push-streaming on a periodic grid. h_grid: (nvel, Lx, Ly, Lz)."""
+    cv = np.asarray(cv, dtype=np.int64)
+    out = []
+    for i in range(h_grid.shape[0]):
+        hi = h_grid[i]
+        for axis in range(3):
+            s = int(cv[i, axis])
+            if s:
+                hi = jnp.roll(hi, s, axis=axis)
+        out.append(hi)
+    return jnp.stack(out, axis=0)
+
+
+def timestep(f_grid, g_grid, params: FreeEnergyParams, lattice="d3q19"):
+    """Full reference LB step: moments -> gradients -> collide -> stream.
+
+    f_grid, g_grid: (nvel, Lx, Ly, Lz) periodic.
+    """
+    cv, _ = velocity_set(lattice)
+    shape = f_grid.shape
+    nvel, grid = shape[0], shape[1:]
+    phi_grid = jnp.sum(g_grid, axis=0)
+    grad_grid, lap_grid = gradient_fd(phi_grid)
+
+    n = int(np.prod(grid))
+    f = f_grid.reshape(nvel, n)
+    g = g_grid.reshape(nvel, n)
+    grad = grad_grid.reshape(3, n)
+    lap = lap_grid.reshape(n)
+    f2, g2 = collide(f, g, grad, lap, params, lattice)
+    f2 = f2.reshape(shape)
+    g2 = g2.reshape(shape)
+    return stream(f2, cv), stream(g2, cv)
+
+
+def equilibrium_init(rho, u, phi, params: FreeEnergyParams, lattice="d3q19"):
+    """Initial (f, g) at local equilibrium with zero phi gradients.
+
+    rho, phi: (n,); u: (3, n). Returns f, g of shape (nvel, n).
+    """
+    cv, wv = velocity_set(lattice)
+    eye_d = lattice_eye(lattice)
+    eye = jnp.asarray(eye_d, dtype=rho.dtype)
+    uu = u[:, None, :] * u[None, :, :]
+    zero_grad = jnp.zeros_like(u)
+    zero_lap = jnp.zeros_like(rho)
+    pth = thermodynamic_pressure_tensor(rho, phi, zero_grad, zero_lap, params,
+                                        eye_d)
+    s_f = (pth + rho[None, None, :] * uu
+           - (rho * CS2)[None, None, :] * eye[:, :, None])
+    f = equilibrium(wv, cv, rho, rho[None, :] * u, s_f, eye_d)
+    mu = chemical_potential(phi, zero_lap, params)
+    s_g = ((params.gamma * mu - phi * CS2)[None, None, :] * eye[:, :, None]
+           + phi[None, None, :] * uu)
+    g = equilibrium(wv, cv, phi, phi[None, :] * u, s_g, eye_d)
+    return f, g

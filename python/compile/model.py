@@ -1,0 +1,96 @@
+"""Layer-2 JAX model: the lattice-Boltzmann compute graph around the L1
+Pallas collision kernel.
+
+Exposed entry points (each AOT-lowered to an HLO artifact by aot.py and run
+from the Rust runtime; Python never executes on the request path):
+
+* ``collision_step`` — the paper's Figure-1 benchmark kernel: binary-fluid
+  BGK collision over N sites (SoA). Pure Pallas, no neighbour access.
+* ``gradient_step``  — central-difference grad/laplacian of the order
+  parameter on the periodic grid (roll-based; XLA fuses the rolls).
+* ``full_step``      — one complete LB timestep: phi moments -> gradients ->
+  Pallas collision -> streaming. Used by the end-to-end driver so the whole
+  "device side" of a timestep is a single fused executable (no host
+  round-trips mid-step, DESIGN.md section 9).
+
+All arrays are float64 (jax_enable_x64 is set in aot.py / tests).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import collision as kernels
+from .kernels import ref
+
+
+def collision_step(f, g, grad_phi, lap_phi, *, lattice="d3q19",
+                   vvl_block=256, params=ref.FreeEnergyParams()):
+    """Benchmark entry point: f,g (nvel,N), grad (3,N), lap (N,)."""
+    return kernels.collide(f, g, grad_phi, lap_phi, lattice=lattice,
+                           vvl_block=vvl_block, params=params)
+
+
+def gradient_step(phi_grid):
+    """grad (3,Lx,Ly,Lz) and laplacian (Lx,Ly,Lz) of a periodic field."""
+    return ref.gradient_fd(phi_grid)
+
+
+def _stream(h_grid, cv):
+    """Push-streaming via rolls; unrolled over the (static) velocity set."""
+    cv = np.asarray(cv, dtype=np.int64)
+    out = []
+    for i in range(h_grid.shape[0]):
+        hi = h_grid[i]
+        for axis in range(3):
+            s = int(cv[i, axis])
+            if s:
+                hi = jnp.roll(hi, s, axis=axis)
+        out.append(hi)
+    return jnp.stack(out, axis=0)
+
+
+def full_step(f_grid, g_grid, *, lattice="d3q19", vvl_block=256,
+              params=ref.FreeEnergyParams()):
+    """One LB timestep on the periodic grid. f,g: (nvel, Lx, Ly, Lz)."""
+    cv, _ = ref.velocity_set(lattice)
+    shape = f_grid.shape
+    nvel = shape[0]
+    n = int(np.prod(shape[1:]))
+
+    phi_grid = jnp.sum(g_grid, axis=0)
+    grad_grid, lap_grid = ref.gradient_fd(phi_grid)
+
+    f2, g2 = kernels.collide(
+        f_grid.reshape(nvel, n), g_grid.reshape(nvel, n),
+        grad_grid.reshape(3, n), lap_grid.reshape(n),
+        lattice=lattice, vvl_block=vvl_block, params=params)
+
+    f2 = _stream(f2.reshape(shape), cv)
+    g2 = _stream(g2.reshape(shape), cv)
+    return f2, g2
+
+
+def multi_step(f_grid, g_grid, *, steps=10, lattice="d3q19", vvl_block=256,
+               params=ref.FreeEnergyParams()):
+    """``steps`` fused LB timesteps in one executable.
+
+    The xla_extension 0.5.1 PJRT wrapper returns tuple results as a single
+    tuple buffer, so chaining device-resident state across launches would
+    need a host round-trip per step; fusing k steps into one launch
+    amortises the host<->target transfer exactly like the paper keeps the
+    master copy resident on the target (DESIGN.md section 2).
+    """
+    def body(_, carry):
+        f, g = carry
+        return full_step(f, g, lattice=lattice, vvl_block=vvl_block,
+                         params=params)
+
+    import jax
+    return jax.lax.fori_loop(0, steps, body, (f_grid, g_grid))
+
+
+def scale_field(field, *, a=1.5, vvl_block=256):
+    """The paper's section-III example (quickstart artifact)."""
+    return kernels.scale(field, a=a, vvl_block=vvl_block)

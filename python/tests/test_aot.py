@@ -1,0 +1,91 @@
+"""AOT path: the HLO-text interchange must preserve what the Rust runtime
+needs — in particular large array constants (the per-velocity projection
+tables) and parser-compatible attributes."""
+
+import json
+import pathlib
+
+import jax
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.kernels import ref
+
+
+def lower_collision(n=512, block=128):
+    shapes = [(19, n), (19, n), (3, n), (n,)]
+    fn = lambda f, g, gr, lp: model.collision_step(  # noqa: E731
+        f, g, gr, lp, vvl_block=block)
+    return jax.jit(fn).lower(*map(aot.spec, shapes))
+
+
+def test_hlo_text_keeps_large_constants():
+    """Default printing elides f64 tables as `constant({...})`, which the
+    xla_extension 0.5.1 text parser silently zero-fills — the bug class
+    that broke cross-layer parity. Must never reappear."""
+    text = aot.to_hlo_text(lower_collision())
+    assert "constant({...})" not in text
+    # the D3Q19 weight 1/36 appears verbatim in some form
+    assert "0.027777" in text or "1/36" in text
+
+
+def test_hlo_text_has_no_new_metadata_attrs():
+    """xla_extension 0.5.1 rejects source_end_line/source_end_column."""
+    text = aot.to_hlo_text(lower_collision())
+    assert "source_end_line" not in text
+    assert "metadata=" not in text
+
+
+def test_artifact_names_and_entries():
+    p = ref.FreeEnergyParams()
+    art = aot.build_collision("d3q19", 512, 128, p)
+    assert art.name == "collision_d3q19_n512_vvl128"
+    entry = art.manifest_entry()
+    assert entry["kind"] == "collision"
+    assert entry["n_sites"] == 512
+    assert entry["params"]["tau_g"] == p.tau_g
+    assert entry["inputs"][0]["shape"] == [19, 512]
+    assert entry["outputs"] == entry["inputs"][:2]
+
+
+def test_multi_step_entry_records_steps():
+    p = ref.FreeEnergyParams()
+    art = aot.build_multi_step("d2q9", (8, 8, 1), 3, 32, p)
+    e = art.manifest_entry()
+    assert e["steps"] == 3
+    assert e["grid"] == [8, 8, 1]
+    assert e["kind"] == "multi_step"
+
+
+def test_shipped_manifest_consistent():
+    """If artifacts/ exists, every manifest entry must point at a real file
+    whose text parses as HLO-ish content."""
+    out = pathlib.Path(__file__).resolve().parents[2] / "artifacts"
+    if not (out / "manifest.json").exists():
+        pytest.skip("run `make artifacts` first")
+    manifest = json.loads((out / "manifest.json").read_text())
+    assert len(manifest) >= 6
+    kinds = {m["kind"] for m in manifest}
+    assert {"collision", "full_step", "multi_step", "gradient",
+            "scale"} <= kinds
+    for m in manifest:
+        path = out / m["file"]
+        assert path.exists(), m["file"]
+        head = path.read_text()[:200]
+        assert head.startswith("HloModule"), m["file"]
+        # elided constants must never ship
+        assert "constant({...})" not in path.read_text(), m["file"]
+
+
+def test_quick_flag_subset():
+    quick = {a.name for a in aot.default_artifacts(quick=True)}
+    full = {a.name for a in aot.default_artifacts(quick=False)}
+    assert quick < full
+    assert any("n32768" in n for n in full - quick)
+
+
+def test_spec_is_f64():
+    s = aot.spec((3, 4))
+    assert s.dtype == np.float64
+    assert s.shape == (3, 4)

@@ -1,0 +1,123 @@
+"""L2 model (full timestep / gradients / streaming) vs the reference."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile import model
+from compile.kernels import ref
+
+
+def make_grids(lattice, grid, seed=0):
+    rng = np.random.default_rng(seed)
+    cv, wv = ref.velocity_set(lattice)
+    nvel = cv.shape[0]
+    f = np.abs(rng.normal(1.0, 0.02, (nvel, *grid))) * \
+        wv[:, None, None, None]
+    g = rng.normal(0.0, 0.02, (nvel, *grid)) * wv[:, None, None, None]
+    return jnp.asarray(f), jnp.asarray(g)
+
+
+@pytest.mark.parametrize("lattice,grid", [
+    ("d3q19", (8, 8, 8)),
+    ("d3q19", (16, 8, 4)),
+    ("d2q9", (16, 16, 1)),
+])
+def test_full_step_matches_ref(lattice, grid):
+    f, g = make_grids(lattice, grid)
+    p = ref.FreeEnergyParams()
+    fr, gr = ref.timestep(f, g, p, lattice)
+    fm, gm = model.full_step(f, g, lattice=lattice, vvl_block=64, params=p)
+    assert_allclose(np.asarray(fm), np.asarray(fr), rtol=0, atol=1e-13)
+    assert_allclose(np.asarray(gm), np.asarray(gr), rtol=0, atol=1e-13)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1),
+       steps=st.integers(min_value=1, max_value=5))
+def test_multi_step_conservation(seed, steps):
+    """Mass and order parameter conserved over repeated full steps."""
+    f, g = make_grids("d3q19", (8, 8, 8), seed)
+    p = ref.FreeEnergyParams()
+    m0, p0 = float(jnp.sum(f)), float(jnp.sum(g))
+    for _ in range(steps):
+        f, g = model.full_step(f, g, lattice="d3q19", vvl_block=64, params=p)
+    assert_allclose(float(jnp.sum(f)), m0, rtol=1e-12)
+    assert_allclose(float(jnp.sum(g)), p0, rtol=0, atol=1e-10)
+
+
+def test_gradient_matches_manual():
+    """Central differences on a periodic sinusoid."""
+    L = 32
+    x = np.arange(L)
+    phi = np.sin(2 * np.pi * x / L)
+    phi_grid = jnp.asarray(np.broadcast_to(phi[:, None, None], (L, 8, 4)))
+    grad, lap = model.gradient_step(phi_grid)
+    # d/dx sin(kx) with the 2nd-order stencil -> sin(k)/1 * cos factor
+    k = 2 * np.pi / L
+    expect_gx = np.cos(k * x) * np.sin(k)  # discrete derivative
+    assert_allclose(np.asarray(grad[0][:, 0, 0]), expect_gx,
+                    rtol=0, atol=1e-12)
+    assert_allclose(np.asarray(grad[1]), 0.0, atol=1e-12)
+    assert_allclose(np.asarray(grad[2]), 0.0, atol=1e-12)
+    expect_lap = (2 * np.cos(k) - 2) * np.sin(k * x)
+    assert_allclose(np.asarray(lap[:, 0, 0]), expect_lap, rtol=0, atol=1e-12)
+
+
+def test_gradient_constant_field_zero():
+    phi = jnp.full((8, 8, 8), 0.7)
+    grad, lap = model.gradient_step(phi)
+    assert_allclose(np.asarray(grad), 0.0, atol=1e-14)
+    assert_allclose(np.asarray(lap), 0.0, atol=1e-14)
+
+
+def test_stream_permutes_sites():
+    """Streaming is a pure permutation: sorted values invariant per velocity."""
+    rng = np.random.default_rng(2)
+    cv, _ = ref.velocity_set("d3q19")
+    h = jnp.asarray(rng.normal(size=(19, 6, 5, 4)))
+    hs = ref.stream(h, cv)
+    for i in range(19):
+        assert_allclose(np.sort(np.asarray(hs[i]).ravel()),
+                        np.sort(np.asarray(h[i]).ravel()), rtol=0, atol=0)
+
+
+def test_stream_roundtrip():
+    """Streaming with c then with -c is the identity (index parity pairs)."""
+    rng = np.random.default_rng(4)
+    cv, _ = ref.velocity_set("d3q19")
+    h = jnp.asarray(rng.normal(size=(19, 4, 4, 4)))
+    hs = ref.stream(ref.stream(h, cv), -cv)
+    assert_allclose(np.asarray(hs), np.asarray(h), rtol=0, atol=0)
+
+
+def test_multi_step_equals_repeated_full_step():
+    f, g = make_grids("d3q19", (8, 8, 8), seed=5)
+    p = ref.FreeEnergyParams()
+    fm, gm = model.multi_step(f, g, steps=4, lattice="d3q19",
+                              vvl_block=64, params=p)
+    fr, gr = f, g
+    for _ in range(4):
+        fr, gr = model.full_step(fr, gr, lattice="d3q19", vvl_block=64,
+                                 params=p)
+    assert_allclose(np.asarray(fm), np.asarray(fr), rtol=0, atol=1e-13)
+    assert_allclose(np.asarray(gm), np.asarray(gr), rtol=0, atol=1e-13)
+
+
+def test_uniform_state_is_steady():
+    """A uniform zero-velocity equilibrium is an exact fixed point of the
+    full step (collision + streaming)."""
+    grid = (8, 8, 8)
+    n = int(np.prod(grid))
+    rho = jnp.full((n,), 1.0)
+    phi = jnp.full((n,), 0.4)
+    u = jnp.zeros((3, n))
+    p = ref.FreeEnergyParams()
+    f, g = ref.equilibrium_init(rho, u, phi, p, "d3q19")
+    f = f.reshape(19, *grid)
+    g = g.reshape(19, *grid)
+    f2, g2 = model.full_step(f, g, lattice="d3q19", vvl_block=64, params=p)
+    assert_allclose(np.asarray(f2), np.asarray(f), rtol=0, atol=1e-14)
+    assert_allclose(np.asarray(g2), np.asarray(g), rtol=0, atol=1e-14)

@@ -1,0 +1,78 @@
+//! E3 — the SoA claim (paper section III-B): "Data should be stored in a
+//! Structure of Arrays format ... to allow chunks of lattice site data to
+//! be loaded as vectors". Crosses layout (SoA vs AoS) with kernel style
+//! (scalar vs VVL-chunked) to isolate how much of the Figure-1 gap is
+//! layout and how much is the explicit ILP exposure.
+
+use targetdp::bench::Bench;
+use targetdp::free_energy::symmetric::FeParams;
+use targetdp::lattice::field::soa_to_aos;
+use targetdp::lattice::geometry::Geometry;
+use targetdp::lb::collision::collide_lattice;
+use targetdp::lb::init;
+use targetdp::lb::model::d3q19;
+use targetdp::targetdp::tlp::TlpPool;
+
+fn main() {
+    let vs = d3q19();
+    let p = FeParams::default();
+    let geom = Geometry::new(32, 32, 32);
+    let n = geom.nsites();
+    let reps = 5;
+
+    let mut f0 = vec![0.0; vs.nvel * n];
+    let mut g0 = vec![0.0; vs.nvel * n];
+    init::init_spinodal(vs, &p, &geom, &mut f0, &mut g0, 0.05, 33);
+    let mut rng = init::Rng64::new(5);
+    let grad: Vec<f64> = (0..3 * n).map(|_| 0.01 * rng.uniform()).collect();
+    let lap: Vec<f64> = (0..n).map(|_| 0.01 * rng.uniform()).collect();
+    let sites = Some((n * reps) as f64);
+    let pool = TlpPool::default();
+
+    let mut bench = Bench::new("layout ablation: collision 32^3 D3Q19");
+
+    // AoS + model-extent loops (the original-Ludwig structure)
+    let f_aos0 = soa_to_aos(&f0, vs.nvel, n);
+    let g_aos0 = soa_to_aos(&g0, vs.nvel, n);
+    let grad_aos = soa_to_aos(&grad, 3, n);
+    let mut f_aos = f_aos0.clone();
+    let mut g_aos = g_aos0.clone();
+    bench.case("aos + scalar (original)", sites, || {
+        for _ in 0..reps {
+            targetdp::baseline::collide_aos(vs, &p, &mut f_aos, &mut g_aos,
+                                            &grad_aos, &lap, n, &pool);
+        }
+    });
+
+    // SoA + scalar site loops (layout change only)
+    let mut f = f0.clone();
+    let mut g = g0.clone();
+    bench.case("soa + scalar", sites, || {
+        for _ in 0..reps {
+            collide_lattice(vs, &p, &mut f, &mut g, &grad, &lap, n, &pool,
+                            32, true);
+        }
+    });
+
+    // SoA + VVL chunks (the full targetDP treatment)
+    let mut f = f0.clone();
+    let mut g = g0.clone();
+    bench.case("soa + vvl8 (targetDP)", sites, || {
+        for _ in 0..reps {
+            collide_lattice(vs, &p, &mut f, &mut g, &grad, &lap, n, &pool,
+                            8, false);
+        }
+    });
+
+    bench.report();
+
+    if let (Some(aos), Some(soa), Some(tdp)) =
+        (bench.mean_of("aos + scalar (original)"),
+         bench.mean_of("soa + scalar"),
+         bench.mean_of("soa + vvl8 (targetDP)"))
+    {
+        println!("\nlayout-only gain (AoS->SoA):     {:.2}x", aos / soa);
+        println!("ILP-exposure gain (scalar->VVL): {:.2}x", soa / tdp);
+        println!("combined (the Figure-1 C2 bar):  {:.2}x", aos / tdp);
+    }
+}

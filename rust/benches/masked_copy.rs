@@ -1,0 +1,99 @@
+//! E4 — the masked-copy mechanism (paper section III-B): transferring only
+//! a lattice subset "can be very computationally expensive [in full],
+//! especially when the target is an accelerator". Sweeps the selected
+//! fraction (halo shells of growing depth) and compares full vs masked
+//! transfer on both host and XLA targets, plus the pack/unpack scratch
+//! route vs the direct loop route.
+
+use targetdp::bench::Bench;
+use targetdp::lattice::geometry::Geometry;
+use targetdp::lattice::halo;
+use targetdp::targetdp::masked;
+use targetdp::targetdp::memory::FieldDesc;
+use targetdp::targetdp::target::Target;
+use targetdp::targetdp::tlp::TlpPool;
+use targetdp::targetdp::{HostTarget, XlaTarget};
+
+fn main() {
+    let geom = Geometry::new(32, 32, 32);
+    let n = geom.nsites();
+    let ncomp = 19; // a distribution-sized field
+    let host_data: Vec<f64> = (0..ncomp * n).map(|i| i as f64).collect();
+    let desc = FieldDesc::new("f", ncomp, n);
+    let reps = 10;
+
+    let mut bench = Bench::new("masked copies: 19-comp field, 32^3");
+
+    let mut targets: Vec<(&str, Box<dyn Target>)> = vec![(
+        "host",
+        Box::new(HostTarget::simd(8, TlpPool::serial()).unwrap()),
+    )];
+    if let Ok(x) = XlaTarget::from_default_artifacts() {
+        targets.push(("xla", Box::new(x)));
+    }
+
+    for (tname, target) in targets.iter_mut() {
+        let id = target.malloc(&desc).unwrap();
+        let mut out = vec![0.0; ncomp * n];
+
+        bench.case(&format!("{tname}: full copyToTarget"), None, || {
+            for _ in 0..reps {
+                target.copy_to_target(id, &host_data).unwrap();
+            }
+        });
+        bench.case(&format!("{tname}: full copyFromTarget"), None, || {
+            for _ in 0..reps {
+                target.copy_from_target(id, &mut out).unwrap();
+            }
+        });
+
+        for depth in [1usize, 2, 4, 8] {
+            let mask = halo::boundary_shell(&geom, depth);
+            let frac = halo::fill_fraction(&mask);
+            bench.case(
+                &format!("{tname}: masked to, depth={depth} \
+                          ({:.0}% of sites)", 100.0 * frac),
+                None,
+                || {
+                    for _ in 0..reps {
+                        target
+                            .copy_to_target_masked(id, &host_data, &mask)
+                            .unwrap();
+                    }
+                },
+            );
+            bench.case(
+                &format!("{tname}: masked from, depth={depth}"),
+                None,
+                || {
+                    for _ in 0..reps {
+                        target
+                            .copy_from_target_masked(id, &mut out, &mask)
+                            .unwrap();
+                    }
+                },
+            );
+        }
+        target.free(id).unwrap();
+    }
+
+    // mechanism ablation: pack/scratch route vs direct loops (the paper's
+    // CUDA vs C implementations of the same API)
+    let mask = halo::boundary_shell(&geom, 1);
+    let idx = masked::mask_indices(&mask);
+    let mut dst = vec![0.0; ncomp * n];
+    bench.case("mechanism: pack+unpack (CUDA route)", None, || {
+        for _ in 0..reps {
+            let packed = masked::pack(&host_data, n, ncomp, &idx);
+            masked::unpack(&mut dst, n, ncomp, &idx, &packed);
+        }
+    });
+    bench.case("mechanism: direct loop (C route)", None, || {
+        for _ in 0..reps {
+            masked::copy_masked_direct(&mut dst, &host_data, n, ncomp,
+                                       &mask);
+        }
+    });
+
+    bench.report();
+}

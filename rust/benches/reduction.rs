@@ -1,0 +1,58 @@
+//! E7 (extension) — the paper's §V reduction future-work, benchmarked:
+//! per-component lattice sum of a 19-component field across targets and
+//! VVL values, plus the naive serial loop as reference.
+
+use targetdp::bench::Bench;
+use targetdp::targetdp::reduce::reduce_sum;
+use targetdp::targetdp::tlp::TlpPool;
+use targetdp::runtime::Runtime;
+
+fn main() {
+    let n = 32 * 32 * 32;
+    let ncomp = 19;
+    let field: Vec<f64> =
+        (0..ncomp * n).map(|i| ((i % 101) as f64) * 0.5).collect();
+    let reps = 20;
+    let sites = Some((n * reps) as f64);
+
+    let mut bench = Bench::new("reduction: 19-comp sum, 32^3");
+
+    // naive serial reference
+    let mut sink = vec![0.0; ncomp];
+    bench.case("serial loop", sites, || {
+        for _ in 0..reps {
+            for c in 0..ncomp {
+                sink[c] = field[c * n..(c + 1) * n].iter().sum();
+            }
+        }
+    });
+
+    let pool = TlpPool::default();
+    for vvl in [1usize, 8, 32] {
+        bench.case(&format!("targetdp reduce vvl={vvl}"), sites, || {
+            for _ in 0..reps {
+                reduce_sum(&field, ncomp, n, &pool, vvl, &mut sink);
+            }
+        });
+    }
+
+    match Runtime::load(Runtime::default_dir()) {
+        Ok(mut rt) => {
+            let name = format!("reduce_sum_c{ncomp}_n{n}");
+            if rt.ensure_compiled(&name).is_ok() {
+                bench.case("xla reduce artifact", sites, || {
+                    for _ in 0..reps {
+                        sink = rt.execute(&name, &[&field]).unwrap()
+                            .pop()
+                            .unwrap();
+                    }
+                });
+            }
+        }
+        Err(e) => println!("xla reduce skipped: {e}"),
+    }
+
+    bench.report();
+    // keep `sink` observable so the loops are not optimised away
+    println!("checksum: {:.3}", sink.iter().sum::<f64>());
+}

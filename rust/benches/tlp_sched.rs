@@ -1,0 +1,56 @@
+//! E5 — launch-geometry tuning: the TLP analog of the paper's TPB (threads
+//! per block) knob. Sweeps thread count and static/dynamic chunk
+//! scheduling for the collision kernel. On this single-core testbed the
+//! thread sweep is structural (no speedup expected — DESIGN.md section 2);
+//! the scheduling-overhead comparison is still meaningful.
+
+use targetdp::bench::Bench;
+use targetdp::free_energy::symmetric::FeParams;
+use targetdp::lattice::geometry::Geometry;
+use targetdp::lb::collision::collide_lattice;
+use targetdp::lb::init;
+use targetdp::lb::model::d3q19;
+use targetdp::targetdp::tlp::{Schedule, TlpPool};
+
+fn main() {
+    let vs = d3q19();
+    let p = FeParams::default();
+    let geom = Geometry::new(32, 32, 32);
+    let n = geom.nsites();
+    let reps = 5;
+
+    let mut f0 = vec![0.0; vs.nvel * n];
+    let mut g0 = vec![0.0; vs.nvel * n];
+    init::init_spinodal(vs, &p, &geom, &mut f0, &mut g0, 0.05, 44);
+    let mut rng = init::Rng64::new(6);
+    let grad: Vec<f64> = (0..3 * n).map(|_| 0.01 * rng.uniform()).collect();
+    let lap: Vec<f64> = (0..n).map(|_| 0.01 * rng.uniform()).collect();
+    let sites = Some((n * reps) as f64);
+
+    let mut bench = Bench::new("tlp scheduling: collision 32^3 D3Q19");
+
+    for threads in [1usize, 2, 4] {
+        for (sname, sched) in [("static", Schedule::Static),
+                               ("dyn1", Schedule::Dynamic { batch: 1 }),
+                               ("dyn8", Schedule::Dynamic { batch: 8 })] {
+            // threads=1 executes inline; scheduling label still recorded
+            let pool = TlpPool::new(threads, sched);
+            let mut f = f0.clone();
+            let mut g = g0.clone();
+            bench.case(&format!("threads={threads} {sname}"), sites, || {
+                for _ in 0..reps {
+                    collide_lattice(vs, &p, &mut f, &mut g, &grad, &lap, n,
+                                    &pool, 8, false);
+                }
+            });
+        }
+    }
+
+    bench.report();
+
+    let avail = std::thread::available_parallelism()
+        .map(|v| v.get())
+        .unwrap_or(1);
+    println!("\navailable parallelism on this box: {avail} \
+              (thread sweep is structural when 1)");
+}

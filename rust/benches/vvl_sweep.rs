@@ -1,0 +1,93 @@
+//! E2 — the VVL tuning claim: "We tune the VVL, with 8 being the optimal
+//! value" (CPU) and "we tune VVL to be 2" (GPU). Sweeps the virtual vector
+//! length on the host-SIMD target and the Pallas `vvl_block` on the XLA
+//! target; the expected *shape* is a rise from VVL=1 to an interior
+//! optimum, then flat/decline.
+
+use targetdp::bench::Bench;
+use targetdp::free_energy::symmetric::FeParams;
+use targetdp::lattice::geometry::Geometry;
+use targetdp::lb::collision::collide_lattice;
+use targetdp::lb::init;
+use targetdp::lb::model::d3q19;
+use targetdp::runtime::Runtime;
+use targetdp::targetdp::ilp::SUPPORTED_VVL;
+use targetdp::targetdp::tlp::TlpPool;
+
+fn main() {
+    let vs = d3q19();
+    let p = FeParams::default();
+    let geom = Geometry::new(32, 32, 32);
+    let n = geom.nsites();
+    let reps = 5;
+
+    let mut f0 = vec![0.0; vs.nvel * n];
+    let mut g0 = vec![0.0; vs.nvel * n];
+    init::init_spinodal(vs, &p, &geom, &mut f0, &mut g0, 0.05, 21);
+    let mut rng = init::Rng64::new(4);
+    let grad: Vec<f64> = (0..3 * n).map(|_| 0.01 * rng.uniform()).collect();
+    let lap: Vec<f64> = (0..n).map(|_| 0.01 * rng.uniform()).collect();
+    let sites = Some((n * reps) as f64);
+    let pool = TlpPool::default();
+
+    let mut bench = Bench::new("vvl sweep: collision 32^3 D3Q19");
+
+    // host-SIMD target across all supported VVLs (paper Fig. 1 CPU story)
+    for &vvl in SUPPORTED_VVL {
+        let mut f = f0.clone();
+        let mut g = g0.clone();
+        bench.case(&format!("host-simd vvl={vvl}"), sites, || {
+            for _ in 0..reps {
+                collide_lattice(vs, &p, &mut f, &mut g, &grad, &lap, n,
+                                &pool, vvl, false);
+            }
+        });
+    }
+    // the scalar (per-site) path as the VVL-less reference
+    {
+        let mut f = f0.clone();
+        let mut g = g0.clone();
+        bench.case("host-scalar", sites, || {
+            for _ in 0..reps {
+                collide_lattice(vs, &p, &mut f, &mut g, &grad, &lap, n,
+                                &pool, 32, true);
+            }
+        });
+    }
+
+    // XLA target across Pallas block widths (paper Fig. 1 GPU story)
+    match Runtime::load(Runtime::default_dir()) {
+        Ok(mut rt) => {
+            for block in [32, 64, 128, 256, 512, 1024, 2048, 4096] {
+                let name = format!("collision_d3q19_n{n}_vvl{block}");
+                if rt.ensure_compiled(&name).is_err() {
+                    continue;
+                }
+                bench.case(&format!("xla vvl_block={block}"), sites, || {
+                    for _ in 0..reps {
+                        rt.execute(&name, &[&f0, &g0, &grad, &lap]).unwrap();
+                    }
+                });
+            }
+        }
+        Err(e) => println!("xla sweep skipped: {e}"),
+    }
+
+    bench.report();
+
+    // locate optima for the summary line
+    let best = |prefix: &str| -> Option<(String, f64)> {
+        bench
+            .results()
+            .iter()
+            .filter(|r| r.name.starts_with(prefix))
+            .map(|r| (r.name.clone(), r.mean))
+            .min_by(|a, b| a.1.total_cmp(&b.1))
+    };
+    if let Some((name, _)) = best("host-simd") {
+        println!("\nhost optimum: {name} (paper: VVL=8)");
+    }
+    if let Some((name, _)) = best("xla") {
+        println!("xla optimum:  {name} (paper GPU: VVL=2)");
+    }
+}

@@ -1,0 +1,165 @@
+//! The "original" comparator: the pre-targetDP Ludwig code structure.
+//!
+//! The paper's Figure-1 baseline is the existing CPU code, augmented with
+//! OpenMP for fairness: **AoS** storage (`f[site][vel]`), innermost loops
+//! over the discrete momenta (extent 19) or spatial dimensions (extent 3),
+//! and the compiler left to find ILP — extents that "do not map perfectly
+//! onto the AVX vector length of 4", leaving vector units under-utilised.
+//!
+//! This module reproduces that structure faithfully so the E1/E3 benches
+//! can measure exactly the contrast the paper reports. Physics is
+//! identical to [`crate::lb::collision`] (pinned by tests).
+
+use crate::free_energy::symmetric::FeParams;
+use crate::lb::model::{VelSet, CS2, SYM6};
+use crate::targetdp::tlp::TlpPool;
+
+/// AoS binary collision over sites `[0, nsites)`:
+/// `f[s * nvel + i]`, `grad[s * 3 + d]`, `lap[s]`.
+///
+/// The TLP decomposition (OpenMP analog) strides in single sites; all
+/// innermost loops have model extents (nvel, 3, 6), exactly the structure
+/// the paper's original code had.
+#[allow(clippy::too_many_arguments)]
+pub fn collide_aos(vs: &VelSet, p: &FeParams, f: &mut [f64], g: &mut [f64],
+                   grad: &[f64], lap: &[f64], nsites: usize,
+                   pool: &TlpPool) {
+    let nvel = vs.nvel;
+    debug_assert_eq!(f.len(), nvel * nsites);
+    debug_assert_eq!(grad.len(), 3 * nsites);
+
+    let f_ptr = SendMut(f.as_mut_ptr(), f.len());
+    let g_ptr = SendMut(g.as_mut_ptr(), g.len());
+
+    pool.for_chunks(nsites, 1, |s, _len| {
+        // rebind the wrappers so the closure captures the Send+Sync structs
+        // (edition-2021 disjoint capture would otherwise grab the raw field)
+        let (f_ptr, g_ptr) = (f_ptr, g_ptr);
+        let f = unsafe { std::slice::from_raw_parts_mut(f_ptr.0, f_ptr.1) };
+        let g = unsafe { std::slice::from_raw_parts_mut(g_ptr.0, g_ptr.1) };
+        let fs = &mut f[s * nvel..(s + 1) * nvel];
+        let gs = &mut g[s * nvel..(s + 1) * nvel];
+        let gd = [grad[s * 3], grad[s * 3 + 1], grad[s * 3 + 2]];
+        let lp = lap[s];
+
+        // moments: innermost loop over the 19 momenta
+        let mut rho = 0.0;
+        let mut phi = 0.0;
+        let mut ru = [0.0f64; 3];
+        for i in 0..nvel {
+            rho += fs[i];
+            phi += gs[i];
+            // inner loop of extent 3 over spatial dimensions
+            for a in 0..3 {
+                ru[a] += vs.cv[i][a] * fs[i];
+            }
+        }
+        let mut u = [0.0f64; 3];
+        for a in 0..3 {
+            u[a] = ru[a] / rho;
+        }
+
+        let mu = p.chemical_potential(phi, lp);
+        let iso_f = p.pth_iso(rho, phi, gd, lp) - rho * CS2;
+        let iso_g = p.gamma * mu - phi * CS2;
+
+        let mut s_f = [0.0f64; 6];
+        let mut s_g = [0.0f64; 6];
+        for (k, (a, b)) in SYM6.iter().enumerate() {
+            s_f[k] = rho * u[*a] * u[*b] + p.kappa * gd[*a] * gd[*b];
+            s_g[k] = phi * u[*a] * u[*b];
+            if a == b {
+                s_f[k] += iso_f;
+                s_g[k] += iso_g;
+            }
+        }
+
+        for i in 0..nvel {
+            let mut cb_f = 0.0;
+            let mut cb_g = 0.0;
+            for a in 0..3 {
+                cb_f += vs.cv[i][a] * ru[a];
+                cb_g += vs.cv[i][a] * phi * u[a];
+            }
+            let mut qs_f = 0.0;
+            let mut qs_g = 0.0;
+            for k in 0..6 {
+                qs_f += vs.q6[i][k] * s_f[k];
+                qs_g += vs.q6[i][k] * s_g[k];
+            }
+            let feq = vs.wv[i] * (rho + 3.0 * cb_f + 4.5 * qs_f);
+            let geq = vs.wv[i] * (phi + 3.0 * cb_g + 4.5 * qs_g);
+            fs[i] -= (fs[i] - feq) / p.tau_f;
+            gs[i] -= (gs[i] - geq) / p.tau_g;
+        }
+    });
+}
+
+#[derive(Clone, Copy)]
+struct SendMut(*mut f64, usize);
+unsafe impl Send for SendMut {}
+unsafe impl Sync for SendMut {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lattice::field::{aos_to_soa, soa_to_aos};
+    use crate::lb::collision::collide_lattice;
+    use crate::lb::model::{d2q9, d3q19};
+
+    #[test]
+    fn aos_matches_targetdp_physics() {
+        for vs in [d3q19(), d2q9()] {
+            let nsites = 120;
+            let p = FeParams::default();
+
+            // build an SoA state, run the targetDP kernel
+            let mut f_soa = vec![0.0; vs.nvel * nsites];
+            let mut g_soa = vec![0.0; vs.nvel * nsites];
+            let mut grad_soa = vec![0.0; 3 * nsites];
+            let mut lap = vec![0.0; nsites];
+            let mut seed = 12345u64;
+            let mut next = move || {
+                seed ^= seed >> 12;
+                seed ^= seed << 25;
+                seed ^= seed >> 27;
+                (seed.wrapping_mul(0x2545F4914F6CDD1D) >> 11) as f64
+                    / (1u64 << 53) as f64
+                    - 0.5
+            };
+            for i in 0..vs.nvel {
+                for s in 0..nsites {
+                    f_soa[i * nsites + s] = vs.wv[i] * (1.0 + 0.1 * next());
+                    g_soa[i * nsites + s] = vs.wv[i] * 0.1 * next();
+                }
+            }
+            for d in 0..vs.ndim {
+                for s in 0..nsites {
+                    grad_soa[d * nsites + s] = 0.02 * next();
+                }
+            }
+            for l in lap.iter_mut() {
+                *l = 0.02 * next();
+            }
+
+            // AoS copies
+            let mut f_aos = soa_to_aos(&f_soa, vs.nvel, nsites);
+            let mut g_aos = soa_to_aos(&g_soa, vs.nvel, nsites);
+            let grad_aos = soa_to_aos(&grad_soa, 3, nsites);
+
+            collide_lattice(vs, &p, &mut f_soa, &mut g_soa, &grad_soa, &lap,
+                            nsites, &TlpPool::serial(), 8, false);
+            collide_aos(vs, &p, &mut f_aos, &mut g_aos, &grad_aos, &lap,
+                        nsites, &TlpPool::serial());
+
+            let f_back = aos_to_soa(&f_aos, vs.nvel, nsites);
+            let g_back = aos_to_soa(&g_aos, vs.nvel, nsites);
+            for (a, b) in f_back.iter().zip(&f_soa) {
+                assert!((a - b).abs() < 1e-14, "{}: f", vs.name);
+            }
+            for (a, b) in g_back.iter().zip(&g_soa) {
+                assert!((a - b).abs() < 1e-14, "{}: g", vs.name);
+            }
+        }
+    }
+}

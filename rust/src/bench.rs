@@ -1,0 +1,146 @@
+//! Minimal benchmarking harness (offline replacement for criterion).
+//!
+//! Each `cargo bench` target is a plain `main()` (harness = false) that
+//! builds a [`Bench`] and reports mean / std / throughput per case,
+//! printing both a human table and machine-readable `BENCH-CSV` lines the
+//! experiment scripts grep for.
+
+use std::time::Instant;
+
+use crate::coordinator::metrics::mean_std;
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct CaseResult {
+    pub name: String,
+    /// Mean seconds per iteration.
+    pub mean: f64,
+    pub std: f64,
+    /// Lattice-site updates per iteration (for MLUPS), if applicable.
+    pub sites_per_iter: Option<f64>,
+}
+
+impl CaseResult {
+    pub fn mlups(&self) -> Option<f64> {
+        self.sites_per_iter.map(|s| s / self.mean / 1e6)
+    }
+}
+
+/// Fixed-iteration benchmark runner.
+pub struct Bench {
+    pub title: String,
+    pub warmup_iters: u32,
+    pub iters: u32,
+    results: Vec<CaseResult>,
+}
+
+impl Bench {
+    pub fn new(title: &str) -> Self {
+        // honour a quick mode for CI-ish runs
+        let quick = std::env::var("TARGETDP_BENCH_QUICK").is_ok();
+        Bench {
+            title: title.to_string(),
+            warmup_iters: if quick { 1 } else { 3 },
+            iters: if quick { 3 } else { 10 },
+            results: Vec::new(),
+        }
+    }
+
+    pub fn with_iters(mut self, warmup: u32, iters: u32) -> Self {
+        self.warmup_iters = warmup;
+        self.iters = iters.max(1);
+        self
+    }
+
+    /// Time `f` (which performs one full iteration of work).
+    pub fn case(&mut self, name: &str, sites_per_iter: Option<f64>,
+                mut f: impl FnMut()) -> &CaseResult {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.iters as usize);
+        for _ in 0..self.iters {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_secs_f64());
+        }
+        let (mean, std) = mean_std(&samples);
+        self.results.push(CaseResult {
+            name: name.to_string(),
+            mean,
+            std,
+            sites_per_iter,
+        });
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[CaseResult] {
+        &self.results
+    }
+
+    /// Mean seconds of a named case (for ratio reporting).
+    pub fn mean_of(&self, name: &str) -> Option<f64> {
+        self.results.iter().find(|r| r.name == name).map(|r| r.mean)
+    }
+
+    /// Print the human table + BENCH-CSV lines.
+    pub fn report(&self) {
+        println!("\n== {} ==", self.title);
+        println!("{:<44} {:>12} {:>10} {:>10}", "case", "mean", "std",
+                 "MLUPS");
+        for r in &self.results {
+            println!(
+                "{:<44} {:>12} {:>10} {:>10}",
+                r.name,
+                format_secs(r.mean),
+                format_secs(r.std),
+                r.mlups().map(|m| format!("{m:.2}")).unwrap_or_default()
+            );
+        }
+        for r in &self.results {
+            println!(
+                "BENCH-CSV,{},{},{:.9},{:.9},{}",
+                self.title,
+                r.name,
+                r.mean,
+                r.std,
+                r.mlups().map(|m| format!("{m:.3}")).unwrap_or_default()
+            );
+        }
+    }
+}
+
+fn format_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.1} us", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn case_records_and_reports() {
+        let mut b = Bench::new("t").with_iters(1, 3);
+        let mut count = 0;
+        b.case("noop", Some(1e6), || count += 1);
+        assert_eq!(count, 4); // 1 warmup + 3 iters
+        let r = &b.results()[0];
+        assert!(r.mean >= 0.0);
+        assert!(r.mlups().unwrap() > 0.0);
+        assert_eq!(b.mean_of("noop"), Some(r.mean));
+        assert!(b.mean_of("absent").is_none());
+    }
+
+    #[test]
+    fn format_is_scaled() {
+        assert!(format_secs(2.0).ends_with(" s"));
+        assert!(format_secs(2e-3).ends_with(" ms"));
+        assert!(format_secs(2e-6).ends_with(" us"));
+    }
+}

@@ -1,0 +1,276 @@
+//! TOML configuration for the simulation driver (the launcher's input).
+//!
+//! Parsed with the in-tree TOML-subset reader ([`crate::util::toml`]);
+//! every key has a documented default so minimal configs stay short.
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::free_energy::symmetric::FeParams;
+use crate::lattice::geometry::Geometry;
+use crate::lb::model::LatticeModel;
+use crate::targetdp::tlp::{Schedule, TlpPool};
+use crate::targetdp::{HostTarget, Target, XlaTarget};
+use crate::util::toml::{parse, Section};
+
+/// Complete run configuration.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub simulation: SimulationCfg,
+    pub target: TargetCfg,
+    pub free_energy: FeParams,
+    pub output: OutputCfg,
+}
+
+#[derive(Debug, Clone)]
+pub struct SimulationCfg {
+    /// "d3q19" or "d2q9".
+    pub lattice: String,
+    pub lx: usize,
+    pub ly: usize,
+    pub lz: usize,
+    pub steps: u64,
+    /// Initial condition: "spinodal" or "droplet".
+    pub init: String,
+    pub noise: f64,
+    pub seed: u64,
+    /// Droplet radius (init = "droplet").
+    pub radius: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct TargetCfg {
+    /// "host-simd", "host-scalar" or "xla".
+    pub backend: String,
+    pub vvl: usize,
+    /// 0 = autodetect.
+    pub threads: usize,
+    /// "static" or "dynamic".
+    pub schedule: String,
+    /// dynamic-schedule batch size.
+    pub batch: usize,
+    /// Preferred Pallas block for the xla backend (0 = any).
+    pub xla_vvl_block: usize,
+}
+
+impl Default for TargetCfg {
+    fn default() -> Self {
+        TargetCfg {
+            backend: "host-simd".into(),
+            vvl: 8,
+            threads: 1,
+            schedule: "static".into(),
+            batch: 4,
+            xla_vvl_block: 0,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct OutputCfg {
+    /// Log observables every N steps (0 = only at the end).
+    pub every: u64,
+    /// Output directory for CSV/VTK ("" = no files).
+    pub dir: String,
+    /// Dump a phi VTK snapshot at the end.
+    pub vtk: bool,
+}
+
+impl Default for OutputCfg {
+    fn default() -> Self {
+        OutputCfg { every: 50, dir: String::new(), vtk: false }
+    }
+}
+
+impl Config {
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_toml_str(&text)
+    }
+
+    pub fn from_toml_str(text: &str) -> Result<Self> {
+        let doc = parse(text)?;
+
+        let sim = Section::of(&doc, "simulation");
+        if sim.0.is_none() {
+            return Err(Error::Parse("missing [simulation] section".into()));
+        }
+        let simulation = SimulationCfg {
+            lattice: sim.require_str("lattice")?,
+            lx: sim.require_usize("lx")?,
+            ly: sim.require_usize("ly")?,
+            lz: sim.require_usize("lz")?,
+            steps: sim.u64_or("steps", 100)?,
+            init: sim.str_or("init", "spinodal")?,
+            noise: sim.f64_or("noise", 0.05)?,
+            seed: sim.u64_or("seed", 1234)?,
+            radius: sim.f64_or("radius", 8.0)?,
+        };
+
+        let tgt = Section::of(&doc, "target");
+        let dt = TargetCfg::default();
+        let target = TargetCfg {
+            backend: tgt.str_or("backend", &dt.backend)?,
+            vvl: tgt.usize_or("vvl", dt.vvl)?,
+            threads: tgt.usize_or("threads", dt.threads)?,
+            schedule: tgt.str_or("schedule", &dt.schedule)?,
+            batch: tgt.usize_or("batch", dt.batch)?,
+            xla_vvl_block: tgt.usize_or("xla_vvl_block", 0)?,
+        };
+
+        let fe = Section::of(&doc, "free_energy");
+        let dp = FeParams::default();
+        let free_energy = FeParams {
+            a: fe.f64_or("a", dp.a)?,
+            b: fe.f64_or("b", dp.b)?,
+            kappa: fe.f64_or("kappa", dp.kappa)?,
+            gamma: fe.f64_or("gamma", dp.gamma)?,
+            tau_f: fe.f64_or("tau_f", dp.tau_f)?,
+            tau_g: fe.f64_or("tau_g", dp.tau_g)?,
+        };
+
+        let out = Section::of(&doc, "output");
+        let output = OutputCfg {
+            every: out.u64_or("every", 50)?,
+            dir: out.str_or("dir", "")?,
+            vtk: out.bool_or("vtk", false)?,
+        };
+
+        Ok(Config { simulation, target, free_energy, output })
+    }
+
+    pub fn geometry(&self) -> Geometry {
+        Geometry::new(self.simulation.lx, self.simulation.ly,
+                      self.simulation.lz)
+    }
+
+    pub fn model(&self) -> Result<LatticeModel> {
+        LatticeModel::from_name(&self.simulation.lattice).ok_or_else(|| {
+            Error::Parse(format!(
+                "unknown lattice {:?} (want d3q19 or d2q9)",
+                self.simulation.lattice
+            ))
+        })
+    }
+
+    pub fn tlp_pool(&self) -> TlpPool {
+        let threads = if self.target.threads == 0 {
+            crate::targetdp::tlp::default_threads()
+        } else {
+            self.target.threads
+        };
+        let schedule = match self.target.schedule.as_str() {
+            "dynamic" => Schedule::Dynamic { batch: self.target.batch },
+            _ => Schedule::Static,
+        };
+        TlpPool::new(threads, schedule)
+    }
+
+    /// Instantiate the configured execution target.
+    pub fn build_target(&self) -> Result<Box<dyn Target>> {
+        match self.target.backend.as_str() {
+            "host-simd" => Ok(Box::new(HostTarget::simd(self.target.vvl,
+                                                        self.tlp_pool())?)),
+            "host-scalar" => {
+                Ok(Box::new(HostTarget::scalar(self.tlp_pool())))
+            }
+            "xla" => {
+                let mut t = XlaTarget::from_default_artifacts()?;
+                if self.target.xla_vvl_block > 0 {
+                    use crate::targetdp::constant::Constant;
+                    use crate::targetdp::Target as _;
+                    t.copy_constant(
+                        "xla_vvl_block",
+                        Constant::Int(self.target.xla_vvl_block as i64),
+                    )?;
+                }
+                Ok(Box::new(t))
+            }
+            other => Err(Error::Parse(format!(
+                "unknown backend {other:?} (want host-simd, host-scalar \
+                 or xla)"
+            ))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+        [simulation]
+        lattice = "d3q19"
+        lx = 16
+        ly = 16
+        lz = 16
+        steps = 100
+
+        [target]
+        backend = "host-simd"
+        vvl = 8
+
+        [free_energy]
+        a = -0.0625
+        b = 0.0625
+        kappa = 0.04
+        gamma = 1.0
+        tau_f = 1.0
+        tau_g = 0.8
+    "#;
+
+    #[test]
+    fn parses_sample_config() {
+        let cfg = Config::from_toml_str(SAMPLE).unwrap();
+        assert_eq!(cfg.simulation.steps, 100);
+        assert_eq!(cfg.simulation.init, "spinodal");
+        assert_eq!(cfg.target.vvl, 8);
+        assert_eq!(cfg.geometry().nsites(), 4096);
+        assert!(cfg.model().is_ok());
+        assert_eq!(cfg.free_energy, FeParams::default());
+    }
+
+    #[test]
+    fn defaults_fill_missing_sections() {
+        let cfg = Config::from_toml_str(
+            "[simulation]\nlattice = \"d2q9\"\nlx = 8\nly = 8\nlz = 1\n\
+             steps = 5\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.target.backend, "host-simd");
+        assert_eq!(cfg.output.every, 50);
+        assert_eq!(cfg.free_energy, FeParams::default());
+    }
+
+    #[test]
+    fn missing_simulation_section_rejected() {
+        assert!(Config::from_toml_str("[target]\nvvl = 8\n").is_err());
+    }
+
+    #[test]
+    fn bad_lattice_and_backend_rejected() {
+        let mut cfg = Config::from_toml_str(SAMPLE).unwrap();
+        cfg.simulation.lattice = "d5q99".into();
+        assert!(cfg.model().is_err());
+        cfg.target.backend = "tpu".into();
+        assert!(cfg.build_target().is_err());
+    }
+
+    #[test]
+    fn builds_host_targets() {
+        let cfg = Config::from_toml_str(SAMPLE).unwrap();
+        let t = cfg.build_target().unwrap();
+        assert_eq!(t.describe(), "host-simd(vvl=8,threads=1)");
+    }
+
+    #[test]
+    fn dynamic_schedule_parsed() {
+        let mut cfg = Config::from_toml_str(SAMPLE).unwrap();
+        cfg.target.schedule = "dynamic".into();
+        cfg.target.threads = 3;
+        let pool = cfg.tlp_pool();
+        assert_eq!(pool.nthreads, 3);
+        assert!(matches!(pool.schedule,
+                         Schedule::Dynamic { batch } if batch == 4));
+    }
+}

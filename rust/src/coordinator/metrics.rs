@@ -1,0 +1,118 @@
+//! Timing and throughput metrics. The LB community's headline figure is
+//! MLUPS — million lattice-site updates per second — which is what the
+//! Figure-1 runtime bars translate to.
+
+use std::time::{Duration, Instant};
+
+/// Simple wall-clock timer.
+#[derive(Debug)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn seconds(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+}
+
+impl Default for Timer {
+    fn default() -> Self {
+        Self::start()
+    }
+}
+
+/// Throughput accumulator.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct Mlups {
+    site_updates: u64,
+    seconds: f64,
+}
+
+impl Mlups {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, nsites: usize, steps: u64, seconds: f64) {
+        self.site_updates += nsites as u64 * steps;
+        self.seconds += seconds;
+    }
+
+    /// Million lattice updates per second.
+    pub fn value(&self) -> f64 {
+        if self.seconds == 0.0 {
+            return 0.0;
+        }
+        self.site_updates as f64 / self.seconds / 1e6
+    }
+
+    pub fn site_updates(&self) -> u64 {
+        self.site_updates
+    }
+
+    pub fn seconds(&self) -> f64 {
+        self.seconds
+    }
+}
+
+/// Mean and standard deviation of repeated timings.
+pub fn mean_std(samples: &[f64]) -> (f64, f64) {
+    if samples.is_empty() {
+        return (0.0, 0.0);
+    }
+    let n = samples.len() as f64;
+    let mean = samples.iter().sum::<f64>() / n;
+    if samples.len() < 2 {
+        return (mean, 0.0);
+    }
+    let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>()
+        / (n - 1.0);
+    (mean, var.sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mlups_arithmetic() {
+        let mut m = Mlups::new();
+        m.record(1_000_000, 10, 2.0);
+        assert!((m.value() - 5.0).abs() < 1e-12);
+        m.record(1_000_000, 10, 2.0);
+        assert!((m.value() - 5.0).abs() < 1e-12);
+        assert_eq!(m.site_updates(), 20_000_000);
+    }
+
+    #[test]
+    fn mlups_empty_is_zero() {
+        assert_eq!(Mlups::new().value(), 0.0);
+    }
+
+    #[test]
+    fn mean_std_basics() {
+        let (m, s) = mean_std(&[1.0, 1.0, 1.0]);
+        assert_eq!(m, 1.0);
+        assert_eq!(s, 0.0);
+        let (m, s) = mean_std(&[1.0, 3.0]);
+        assert_eq!(m, 2.0);
+        assert!((s - std::f64::consts::SQRT_2).abs() < 1e-12);
+        assert_eq!(mean_std(&[]), (0.0, 0.0));
+    }
+
+    #[test]
+    fn timer_monotonic() {
+        let t = Timer::start();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        assert!(t.seconds() > 0.0);
+    }
+}

@@ -1,0 +1,9 @@
+//! The L3 coordinator: configuration -> target -> timestep pipeline ->
+//! metrics/IO. This is the launcher a user drives via the CLI
+//! (`rust/src/main.rs`) or embeds via [`pipeline::run_simulation`].
+
+pub mod metrics;
+pub mod pipeline;
+
+pub use metrics::{Mlups, Timer};
+pub use pipeline::{run_simulation, RunSummary};

@@ -1,0 +1,52 @@
+//! Library-wide error type.
+
+use std::fmt;
+
+/// Errors produced by the targetDP library.
+#[derive(Debug)]
+pub enum Error {
+    /// Invalid argument / state (shape mismatch, unknown kernel, ...).
+    Invalid(String),
+    /// A kernel was launched on a target that does not implement it.
+    UnsupportedKernel { target: String, kernel: String },
+    /// Buffer handle not found in the target's pool.
+    BadBuffer(usize),
+    /// I/O failure (artifact files, VTK output, ...).
+    Io(std::io::Error),
+    /// Failure inside the XLA/PJRT runtime.
+    Xla(String),
+    /// Manifest / config parse failure.
+    Parse(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Invalid(m) => write!(f, "invalid: {m}"),
+            Error::UnsupportedKernel { target, kernel } => {
+                write!(f, "target {target} does not implement kernel {kernel}")
+            }
+            Error::BadBuffer(id) => write!(f, "unknown buffer handle {id}"),
+            Error::Io(e) => write!(f, "io: {e}"),
+            Error::Xla(m) => write!(f, "xla: {m}"),
+            Error::Parse(m) => write!(f, "parse: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+/// Library-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,125 @@
+//! Finite-difference gradient kernel: central differences of the order
+//! parameter on the periodic lattice (feeds grad(phi), lap(phi) into the
+//! collision). Matches `ref.gradient_fd` (roll-based) exactly, including
+//! the 2-D degenerate case `lz == 1` where the z terms cancel and the
+//! laplacian reduces to the 5-point stencil.
+
+use crate::lattice::geometry::Geometry;
+use crate::targetdp::tlp::TlpPool;
+
+/// grad layout: `grad[d * nsites + s]`, d in x,y,z; lap layout: `lap[s]`.
+pub fn gradient_fd(geom: &Geometry, phi: &[f64], grad: &mut [f64],
+                   lap: &mut [f64], pool: &TlpPool, vvl: usize) {
+    let n = geom.nsites();
+    debug_assert_eq!(phi.len(), n);
+    debug_assert_eq!(grad.len(), 3 * n);
+    debug_assert_eq!(lap.len(), n);
+
+    // SAFETY of the parallel writes: chunks partition the site range, and
+    // each site writes only its own grad/lap entries.
+    let grad_ptr = SendPtr(grad.as_mut_ptr());
+    let lap_ptr = SendPtr(lap.as_mut_ptr());
+
+    pool.for_chunks(n, vvl, |base, len| {
+        let grad = grad_ptr;
+        let lap = lap_ptr;
+        for s in base..base + len {
+            let (x, y, z) = geom.coords(s);
+            let xp = phi[geom.neighbor(x, y, z, 1, 0, 0)];
+            let xm = phi[geom.neighbor(x, y, z, -1, 0, 0)];
+            let yp = phi[geom.neighbor(x, y, z, 0, 1, 0)];
+            let ym = phi[geom.neighbor(x, y, z, 0, -1, 0)];
+            let zp = phi[geom.neighbor(x, y, z, 0, 0, 1)];
+            let zm = phi[geom.neighbor(x, y, z, 0, 0, -1)];
+            unsafe {
+                *grad.0.add(s) = 0.5 * (xp - xm);
+                *grad.0.add(n + s) = 0.5 * (yp - ym);
+                *grad.0.add(2 * n + s) = 0.5 * (zp - zm);
+                *lap.0.add(s) = xp + xm + yp + ym + zp + zm - 6.0 * phi[s];
+            }
+        }
+    });
+}
+
+/// Raw pointer wrapper to move disjoint-write pointers into TLP closures.
+#[derive(Clone, Copy)]
+struct SendPtr(*mut f64);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(geom: &Geometry, phi: &[f64]) -> (Vec<f64>, Vec<f64>) {
+        let n = geom.nsites();
+        let mut grad = vec![0.0; 3 * n];
+        let mut lap = vec![0.0; n];
+        gradient_fd(geom, phi, &mut grad, &mut lap, &TlpPool::serial(), 8);
+        (grad, lap)
+    }
+
+    #[test]
+    fn constant_field_zero_gradient() {
+        let geom = Geometry::new(4, 4, 4);
+        let phi = vec![0.7; geom.nsites()];
+        let (grad, lap) = run(&geom, &phi);
+        assert!(grad.iter().all(|&v| v.abs() < 1e-15));
+        assert!(lap.iter().all(|&v| v.abs() < 1e-13));
+    }
+
+    #[test]
+    fn sinusoid_matches_discrete_derivative() {
+        let l = 16usize;
+        let geom = Geometry::new(l, 4, 4);
+        let k = 2.0 * std::f64::consts::PI / l as f64;
+        let phi: Vec<f64> = (0..geom.nsites())
+            .map(|s| {
+                let (x, _, _) = geom.coords(s);
+                (k * x as f64).sin()
+            })
+            .collect();
+        let (grad, lap) = run(&geom, &phi);
+        let n = geom.nsites();
+        for s in 0..n {
+            let (x, _, _) = geom.coords(s);
+            let gx = (k * x as f64).cos() * k.sin();
+            assert!((grad[s] - gx).abs() < 1e-12, "site {s}");
+            assert!(grad[n + s].abs() < 1e-13);
+            assert!(grad[2 * n + s].abs() < 1e-13);
+            let want_lap = (2.0 * k.cos() - 2.0) * (k * x as f64).sin();
+            assert!((lap[s] - want_lap).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn degenerate_z_reduces_to_2d_stencil() {
+        // lz == 1: zp == zm == self, so lap = 5-point 2-D stencil
+        let geom = Geometry::new(4, 4, 1);
+        let mut phi = vec![0.0; geom.nsites()];
+        phi[geom.index(2, 2, 0)] = 1.0;
+        let (_, lap) = run(&geom, &phi);
+        assert!((lap[geom.index(2, 2, 0)] + 4.0).abs() < 1e-15);
+        assert!((lap[geom.index(1, 2, 0)] - 1.0).abs() < 1e-15);
+        assert!((lap[geom.index(2, 1, 0)] - 1.0).abs() < 1e-15);
+        assert!(lap[geom.index(1, 1, 0)].abs() < 1e-15);
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let geom = Geometry::new(8, 8, 8);
+        let phi: Vec<f64> = (0..geom.nsites())
+            .map(|s| ((s * 2654435761) % 997) as f64 / 997.0)
+            .collect();
+        let (g1, l1) = run(&geom, &phi);
+        let n = geom.nsites();
+        let mut g2 = vec![0.0; 3 * n];
+        let mut l2 = vec![0.0; n];
+        let pool = TlpPool::new(4, crate::targetdp::tlp::Schedule::Dynamic {
+            batch: 3,
+        });
+        gradient_fd(&geom, &phi, &mut g2, &mut l2, &pool, 4);
+        assert_eq!(g1, g2);
+        assert_eq!(l1, l2);
+    }
+}

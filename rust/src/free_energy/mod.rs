@@ -1,0 +1,8 @@
+//! Free-energy sector of the binary fluid: the symmetric (phi^4)
+//! functional, its chemical potential and pressure tensor, and the
+//! finite-difference gradient kernel that feeds the collision.
+
+pub mod gradient;
+pub mod symmetric;
+
+pub use symmetric::FeParams;

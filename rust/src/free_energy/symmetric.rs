@@ -1,0 +1,128 @@
+//! Symmetric binary free energy
+//! `V(phi) = A/2 phi^2 + B/4 phi^4 + kappa/2 |grad phi|^2` (A < 0 < B),
+//! the standard Ludwig/Kendon two-phase functional.
+//!
+//! Must agree exactly with `python/compile/kernels/ref.py` — both layers
+//! compute `mu`, `p0` and `Pth` from the same formulas and the parameter
+//! values baked into each AOT artifact are recorded in the manifest so the
+//! host targets can be configured identically.
+
+use crate::lb::model::CS2;
+
+/// Free-energy + relaxation parameters (the kernel's constant memory).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FeParams {
+    /// Bulk coefficient A (< 0 inside the two-phase region).
+    pub a: f64,
+    /// Bulk coefficient B (> 0).
+    pub b: f64,
+    /// Interfacial penalty kappa.
+    pub kappa: f64,
+    /// Order-parameter mobility prefactor Gamma.
+    pub gamma: f64,
+    /// Fluid relaxation time tau_f.
+    pub tau_f: f64,
+    /// Order-parameter relaxation time tau_g.
+    pub tau_g: f64,
+}
+
+impl Default for FeParams {
+    /// Identical to `ref.FreeEnergyParams()` defaults.
+    fn default() -> Self {
+        FeParams {
+            a: -0.0625,
+            b: 0.0625,
+            kappa: 0.04,
+            gamma: 1.0,
+            tau_f: 1.0,
+            tau_g: 0.8,
+        }
+    }
+}
+
+impl FeParams {
+    /// Chemical potential `mu = A phi + B phi^3 - kappa lap(phi)`.
+    #[inline(always)]
+    pub fn chemical_potential(&self, phi: f64, lap_phi: f64) -> f64 {
+        self.a * phi + self.b * phi * phi * phi - self.kappa * lap_phi
+    }
+
+    /// Bulk pressure `p0 = rho cs2 + A/2 phi^2 + 3B/4 phi^4`.
+    #[inline(always)]
+    pub fn bulk_pressure(&self, rho: f64, phi: f64) -> f64 {
+        let phi2 = phi * phi;
+        rho * CS2 + 0.5 * self.a * phi2 + 0.75 * self.b * phi2 * phi2
+    }
+
+    /// Isotropic part of the thermodynamic pressure tensor:
+    /// `p0 - kappa phi lap - kappa/2 |grad|^2`.
+    #[inline(always)]
+    pub fn pth_iso(&self, rho: f64, phi: f64, grad: [f64; 3],
+                   lap_phi: f64) -> f64 {
+        let gsq = grad[0] * grad[0] + grad[1] * grad[1] + grad[2] * grad[2];
+        self.bulk_pressure(rho, phi) - self.kappa * phi * lap_phi
+            - 0.5 * self.kappa * gsq
+    }
+
+    /// Equilibrium interface width `xi = sqrt(-2 kappa / A)`.
+    pub fn interface_width(&self) -> f64 {
+        (-2.0 * self.kappa / self.a).sqrt()
+    }
+
+    /// Interfacial tension `sigma = sqrt(-8 kappa A^3 / 9 B^2)` for the
+    /// symmetric functional (used by the droplet Laplace-law example).
+    pub fn surface_tension(&self) -> f64 {
+        (-8.0 * self.kappa * self.a.powi(3) / (9.0 * self.b * self.b)).sqrt()
+    }
+
+    /// Equilibrium bulk order parameter `phi* = sqrt(-A/B)`.
+    pub fn phi_star(&self) -> f64 {
+        (-self.a / self.b).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_python_oracle() {
+        let p = FeParams::default();
+        assert_eq!(p.a, -0.0625);
+        assert_eq!(p.b, 0.0625);
+        assert_eq!(p.kappa, 0.04);
+        assert_eq!(p.gamma, 1.0);
+        assert_eq!(p.tau_f, 1.0);
+        assert_eq!(p.tau_g, 0.8);
+    }
+
+    #[test]
+    fn chemical_potential_at_bulk_minimum_is_zero() {
+        let p = FeParams::default();
+        let phi_star = p.phi_star();
+        assert!((p.chemical_potential(phi_star, 0.0)).abs() < 1e-14);
+        assert!((p.chemical_potential(-phi_star, 0.0)).abs() < 1e-14);
+        assert!(p.chemical_potential(0.5 * phi_star, 0.0) < 0.0);
+    }
+
+    #[test]
+    fn bulk_pressure_ideal_gas_limit() {
+        let p = FeParams::default();
+        assert!((p.bulk_pressure(1.0, 0.0) - CS2).abs() < 1e-15);
+    }
+
+    #[test]
+    fn pth_iso_reduces_to_p0_without_gradients() {
+        let p = FeParams::default();
+        let iso = p.pth_iso(1.0, 0.3, [0.0; 3], 0.0);
+        assert!((iso - p.bulk_pressure(1.0, 0.3)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn derived_scales_positive() {
+        let p = FeParams::default();
+        assert!(p.interface_width() > 0.0);
+        assert!(p.surface_tension() > 0.0);
+        assert!((p.phi_star() - 1.0).abs() < 1e-14);
+    }
+}

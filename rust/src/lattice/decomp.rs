@@ -1,0 +1,312 @@
+//! Domain decomposition: the coarse-grained (MPI) level above targetDP.
+//!
+//! The paper's framework is explicitly designed to combine with node-level
+//! parallelism ("targetDP may be used in conjunction with ... MPI"). This
+//! module provides the slab decomposition Ludwig uses along the x axis:
+//! each subdomain owns `lxl` interior planes plus one halo plane on each
+//! side, and halo exchange moves interior boundary planes into the
+//! neighbours' halos — in a real MPI run those are the messages; here the
+//! "ranks" are in-process and the exchange is a bulk-synchronous copy,
+//! which keeps the data flow identical and testable.
+//!
+//! With z fastest in memory, an x plane is a contiguous `ly * lz` block
+//! per SoA component, so exchanges are pure slice copies (and the masked-
+//! copy API of [`crate::targetdp::masked`] generalises them to arbitrary
+//! subsets; see `halo::x_planes`).
+
+use crate::error::{Error, Result};
+use crate::free_energy::gradient::gradient_fd;
+use crate::free_energy::symmetric::FeParams;
+use crate::lattice::geometry::Geometry;
+use crate::lb::collision::collide_lattice;
+use crate::lb::model::VelSet;
+use crate::lb::moments::phi_from_g;
+use crate::lb::propagation::stream;
+use crate::targetdp::tlp::TlpPool;
+
+/// One slab subdomain: interior `lxl` planes + 2 halo planes.
+#[derive(Debug, Clone)]
+pub struct SubDomain {
+    pub rank: usize,
+    /// Global x of the first interior plane.
+    pub x0: usize,
+    /// Interior extent along x.
+    pub lxl: usize,
+    /// Local geometry *including* the two halo planes.
+    pub local: Geometry,
+}
+
+impl SubDomain {
+    /// Sites per x plane.
+    pub fn plane(&self) -> usize {
+        self.local.ly * self.local.lz
+    }
+
+    /// Local site range covering the interior (contiguous by layout).
+    pub fn interior(&self) -> std::ops::Range<usize> {
+        self.plane()..(self.lxl + 1) * self.plane()
+    }
+}
+
+/// Slab decomposition of a global periodic lattice along x.
+#[derive(Debug, Clone)]
+pub struct SlabDecomposition {
+    pub global: Geometry,
+    pub domains: Vec<SubDomain>,
+}
+
+impl SlabDecomposition {
+    pub fn new(global: Geometry, ndom: usize) -> Result<Self> {
+        if ndom == 0 || global.lx < ndom {
+            return Err(Error::Invalid(format!(
+                "cannot split lx={} into {ndom} slabs", global.lx
+            )));
+        }
+        let mut domains = Vec::with_capacity(ndom);
+        let mut x0 = 0;
+        for rank in 0..ndom {
+            let lxl = global.lx / ndom + usize::from(rank < global.lx % ndom);
+            domains.push(SubDomain {
+                rank,
+                x0,
+                lxl,
+                local: Geometry::new(lxl + 2, global.ly, global.lz),
+            });
+            x0 += lxl;
+        }
+        Ok(SlabDecomposition { global, domains })
+    }
+
+    /// Scatter a global SoA field into per-domain local fields (halos
+    /// filled by a subsequent [`Self::exchange`]).
+    pub fn scatter(&self, global: &[f64], ncomp: usize) -> Vec<Vec<f64>> {
+        let gn = self.global.nsites();
+        debug_assert_eq!(global.len(), ncomp * gn);
+        self.domains
+            .iter()
+            .map(|d| {
+                let ln = d.local.nsites();
+                let plane = d.plane();
+                let mut local = vec![0.0; ncomp * ln];
+                for c in 0..ncomp {
+                    let src = &global[c * gn + d.x0 * plane
+                        ..c * gn + (d.x0 + d.lxl) * plane];
+                    local[c * ln + plane..c * ln + (d.lxl + 1) * plane]
+                        .copy_from_slice(src);
+                }
+                local
+            })
+            .collect()
+    }
+
+    /// Gather per-domain interiors back into a global SoA field.
+    pub fn gather(&self, locals: &[Vec<f64>], ncomp: usize) -> Vec<f64> {
+        let gn = self.global.nsites();
+        let mut global = vec![0.0; ncomp * gn];
+        for (d, local) in self.domains.iter().zip(locals) {
+            let ln = d.local.nsites();
+            let plane = d.plane();
+            for c in 0..ncomp {
+                let dst = &mut global[c * gn + d.x0 * plane
+                    ..c * gn + (d.x0 + d.lxl) * plane];
+                dst.copy_from_slice(
+                    &local[c * ln + plane..c * ln + (d.lxl + 1) * plane],
+                );
+            }
+        }
+        global
+    }
+
+    /// Bulk-synchronous halo exchange of one field across all domains
+    /// (periodic at the global x boundaries) — the MPI sendrecv analog.
+    pub fn exchange(&self, locals: &mut [Vec<f64>], ncomp: usize) {
+        let ndom = self.domains.len();
+        // collect boundary planes first (so the copy is order-independent)
+        let mut lows = Vec::with_capacity(ndom);
+        let mut highs = Vec::with_capacity(ndom);
+        for (d, local) in self.domains.iter().zip(locals.iter()) {
+            let ln = d.local.nsites();
+            let plane = d.plane();
+            let mut low = vec![0.0; ncomp * plane];
+            let mut high = vec![0.0; ncomp * plane];
+            for c in 0..ncomp {
+                low[c * plane..(c + 1) * plane].copy_from_slice(
+                    &local[c * ln + plane..c * ln + 2 * plane],
+                );
+                high[c * plane..(c + 1) * plane].copy_from_slice(
+                    &local[c * ln + d.lxl * plane
+                        ..c * ln + (d.lxl + 1) * plane],
+                );
+            }
+            lows.push(low);
+            highs.push(high);
+        }
+        // deliver: my low halo <- left neighbour's high interior plane
+        for (i, d) in self.domains.iter().enumerate() {
+            let ln = d.local.nsites();
+            let plane = d.plane();
+            let left = (i + ndom - 1) % ndom;
+            let right = (i + 1) % ndom;
+            let local = &mut locals[i];
+            for c in 0..ncomp {
+                local[c * ln..c * ln + plane]
+                    .copy_from_slice(&highs[left][c * plane..(c + 1) * plane]);
+                local[c * ln + (d.lxl + 1) * plane..c * ln + (d.lxl + 2) * plane]
+                    .copy_from_slice(&lows[right][c * plane..(c + 1) * plane]);
+            }
+        }
+    }
+}
+
+/// One full binary-fluid LB timestep over the decomposed lattice
+/// (exchange -> moments/gradients -> collide -> exchange -> stream).
+/// Matches the single-domain step exactly (see tests).
+#[allow(clippy::too_many_arguments)]
+pub fn step_multidomain(dec: &SlabDecomposition, vs: &VelSet, p: &FeParams,
+                        f: &mut [Vec<f64>], g: &mut [Vec<f64>],
+                        pool: &TlpPool, vvl: usize) {
+    let nvel = vs.nvel;
+    dec.exchange(f, nvel);
+    dec.exchange(g, nvel);
+
+    // per-domain scratch + local kernels over ALL local sites: halo results
+    // are garbage but are overwritten by the next exchange before use
+    let mut streamed_f = Vec::with_capacity(dec.domains.len());
+    let mut streamed_g = Vec::with_capacity(dec.domains.len());
+    for (i, d) in dec.domains.iter().enumerate() {
+        let ln = d.local.nsites();
+        let mut phi = vec![0.0; ln];
+        let mut grad = vec![0.0; 3 * ln];
+        let mut lap = vec![0.0; ln];
+        phi_from_g(vs, &g[i], &mut phi, ln, pool, vvl);
+        gradient_fd(&d.local, &phi, &mut grad, &mut lap, pool, vvl);
+        collide_lattice(vs, p, &mut f[i], &mut g[i], &grad, &lap, ln, pool,
+                        vvl, false);
+        streamed_f.push(vec![0.0; nvel * ln]);
+        streamed_g.push(vec![0.0; nvel * ln]);
+    }
+
+    dec.exchange(f, nvel);
+    dec.exchange(g, nvel);
+
+    for (i, d) in dec.domains.iter().enumerate() {
+        stream(vs, &d.local, &f[i], &mut streamed_f[i], pool, vvl);
+        stream(vs, &d.local, &g[i], &mut streamed_g[i], pool, vvl);
+        f[i].copy_from_slice(&streamed_f[i]);
+        g[i].copy_from_slice(&streamed_g[i]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lb::model::d3q19;
+
+    fn global_state(geom: &Geometry, vs: &VelSet)
+                    -> (Vec<f64>, Vec<f64>) {
+        let n = geom.nsites();
+        let mut f = vec![0.0; vs.nvel * n];
+        let mut g = vec![0.0; vs.nvel * n];
+        crate::lb::init::init_spinodal(vs, &FeParams::default(), geom,
+                                       &mut f, &mut g, 0.05, 99);
+        (f, g)
+    }
+
+    #[test]
+    fn uneven_split_covers_lattice() {
+        let geom = Geometry::new(10, 4, 4);
+        let dec = SlabDecomposition::new(geom, 3).unwrap();
+        let total: usize = dec.domains.iter().map(|d| d.lxl).sum();
+        assert_eq!(total, 10);
+        assert_eq!(dec.domains[0].lxl, 4); // 10 = 4 + 3 + 3
+        assert_eq!(dec.domains[1].x0, 4);
+        assert_eq!(dec.domains[2].x0, 7);
+    }
+
+    #[test]
+    fn invalid_splits_rejected() {
+        let geom = Geometry::new(4, 4, 4);
+        assert!(SlabDecomposition::new(geom, 0).is_err());
+        assert!(SlabDecomposition::new(geom, 5).is_err());
+    }
+
+    #[test]
+    fn scatter_gather_roundtrip() {
+        let geom = Geometry::new(8, 3, 5);
+        let dec = SlabDecomposition::new(geom, 3).unwrap();
+        let field: Vec<f64> =
+            (0..2 * geom.nsites()).map(|i| i as f64).collect();
+        let locals = dec.scatter(&field, 2);
+        assert_eq!(dec.gather(&locals, 2), field);
+    }
+
+    #[test]
+    fn exchange_fills_halos_periodically() {
+        let geom = Geometry::new(6, 2, 2);
+        let dec = SlabDecomposition::new(geom, 2).unwrap();
+        let n = geom.nsites();
+        let field: Vec<f64> = (0..n).map(|i| i as f64).collect();
+        let mut locals = dec.scatter(&field, 1);
+        dec.exchange(&mut locals, 1);
+        // domain 0 low halo should hold global plane x = 5 (periodic)
+        let d0 = &dec.domains[0];
+        let plane = d0.plane();
+        let want: Vec<f64> = (0..plane)
+            .map(|k| field[5 * plane + k])
+            .collect();
+        assert_eq!(&locals[0][..plane], &want[..]);
+        // domain 1 high halo holds global plane x = 0
+        let d1 = &dec.domains[1];
+        let ln = d1.local.nsites();
+        let got = &locals[1][(d1.lxl + 1) * plane..ln];
+        let want: Vec<f64> = (0..plane).map(|k| field[k]).collect();
+        assert_eq!(got, &want[..]);
+    }
+
+    #[test]
+    fn multidomain_step_matches_single_domain() {
+        let vs = d3q19();
+        let p = FeParams::default();
+        let geom = Geometry::new(12, 4, 4);
+        let (f_ref, g_ref) = global_state(&geom, vs);
+        let pool = TlpPool::serial();
+
+        // reference: single-domain step (phi -> grad -> collide -> stream)
+        let n = geom.nsites();
+        let mut f1 = f_ref.clone();
+        let mut g1 = g_ref.clone();
+        for _ in 0..3 {
+            let mut phi = vec![0.0; n];
+            let mut grad = vec![0.0; 3 * n];
+            let mut lap = vec![0.0; n];
+            phi_from_g(vs, &g1, &mut phi, n, &pool, 8);
+            gradient_fd(&geom, &phi, &mut grad, &mut lap, &pool, 8);
+            collide_lattice(vs, &p, &mut f1, &mut g1, &grad, &lap, n, &pool,
+                            8, false);
+            let mut fs = vec![0.0; vs.nvel * n];
+            let mut gs = vec![0.0; vs.nvel * n];
+            stream(vs, &geom, &f1, &mut fs, &pool, 8);
+            stream(vs, &geom, &g1, &mut gs, &pool, 8);
+            f1 = fs;
+            g1 = gs;
+        }
+
+        // decomposed: 3 uneven slabs
+        for ndom in [2, 3] {
+            let dec = SlabDecomposition::new(geom, ndom).unwrap();
+            let mut fl = dec.scatter(&f_ref, vs.nvel);
+            let mut gl = dec.scatter(&g_ref, vs.nvel);
+            for _ in 0..3 {
+                step_multidomain(&dec, vs, &p, &mut fl, &mut gl, &pool, 8);
+            }
+            let f2 = dec.gather(&fl, vs.nvel);
+            let g2 = dec.gather(&gl, vs.nvel);
+            for (a, b) in f1.iter().zip(&f2) {
+                assert!((a - b).abs() < 1e-13, "ndom={ndom}");
+            }
+            for (a, b) in g1.iter().zip(&g2) {
+                assert!((a - b).abs() < 1e-13, "ndom={ndom}");
+            }
+        }
+    }
+}

@@ -1,0 +1,131 @@
+//! Host-side lattice fields and the SoA/AoS layout conversions.
+//!
+//! targetDP mandates SoA ("Structure of Arrays") so that consecutive site
+//! indices are consecutive in memory and VVL chunks load as vectors
+//! (paper section III-B). The AoS layout (`data[site * ncomp + c]`) is kept
+//! for the [`crate::baseline`] comparator and the E3 layout ablation.
+
+use crate::lattice::geometry::Geometry;
+
+/// A host lattice field in SoA layout: `data[c * nsites + s]`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostField {
+    pub name: String,
+    pub ncomp: usize,
+    pub nsites: usize,
+    pub data: Vec<f64>,
+}
+
+impl HostField {
+    pub fn zeros(name: impl Into<String>, ncomp: usize, nsites: usize) -> Self {
+        HostField {
+            name: name.into(),
+            ncomp,
+            nsites,
+            data: vec![0.0; ncomp * nsites],
+        }
+    }
+
+    pub fn from_fn(name: impl Into<String>, ncomp: usize, geom: &Geometry,
+                   f: impl Fn(usize, usize, usize, usize) -> f64) -> Self {
+        let nsites = geom.nsites();
+        let mut field = Self::zeros(name, ncomp, nsites);
+        for c in 0..ncomp {
+            for (x, y, z, s) in geom.iter() {
+                field.data[c * nsites + s] = f(c, x, y, z);
+            }
+        }
+        field
+    }
+
+    #[inline(always)]
+    pub fn get(&self, c: usize, s: usize) -> f64 {
+        self.data[c * self.nsites + s]
+    }
+
+    #[inline(always)]
+    pub fn set(&mut self, c: usize, s: usize, v: f64) {
+        self.data[c * self.nsites + s] = v;
+    }
+
+    /// SoA component row.
+    pub fn row(&self, c: usize) -> &[f64] {
+        &self.data[c * self.nsites..(c + 1) * self.nsites]
+    }
+
+    /// Convert to AoS: `out[s * ncomp + c]`.
+    pub fn to_aos(&self) -> Vec<f64> {
+        soa_to_aos(&self.data, self.ncomp, self.nsites)
+    }
+
+    /// Build from an AoS buffer.
+    pub fn from_aos(name: impl Into<String>, aos: &[f64], ncomp: usize,
+                    nsites: usize) -> Self {
+        HostField {
+            name: name.into(),
+            ncomp,
+            nsites,
+            data: aos_to_soa(aos, ncomp, nsites),
+        }
+    }
+}
+
+/// `soa[c * nsites + s]` -> `aos[s * ncomp + c]`.
+pub fn soa_to_aos(soa: &[f64], ncomp: usize, nsites: usize) -> Vec<f64> {
+    debug_assert_eq!(soa.len(), ncomp * nsites);
+    let mut aos = vec![0.0; soa.len()];
+    for c in 0..ncomp {
+        for s in 0..nsites {
+            aos[s * ncomp + c] = soa[c * nsites + s];
+        }
+    }
+    aos
+}
+
+/// `aos[s * ncomp + c]` -> `soa[c * nsites + s]`.
+pub fn aos_to_soa(aos: &[f64], ncomp: usize, nsites: usize) -> Vec<f64> {
+    debug_assert_eq!(aos.len(), ncomp * nsites);
+    let mut soa = vec![0.0; aos.len()];
+    for c in 0..ncomp {
+        for s in 0..nsites {
+            soa[c * nsites + s] = aos[s * ncomp + c];
+        }
+    }
+    soa
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_conversions_roundtrip() {
+        let ncomp = 19;
+        let nsites = 37;
+        let soa: Vec<f64> = (0..ncomp * nsites).map(|i| i as f64).collect();
+        let aos = soa_to_aos(&soa, ncomp, nsites);
+        assert_eq!(aos_to_soa(&aos, ncomp, nsites), soa);
+        // spot-check addressing
+        assert_eq!(aos[5 * ncomp + 3], soa[3 * nsites + 5]);
+    }
+
+    #[test]
+    fn from_fn_and_accessors() {
+        let geom = Geometry::new(2, 3, 4);
+        let f = HostField::from_fn("v", 3, &geom,
+                                   |c, x, y, z| (c * 100 + x * 16 + y * 4 + z)
+                                       as f64);
+        assert_eq!(f.get(2, geom.index(1, 2, 3)), 227.0);
+        assert_eq!(f.row(1).len(), geom.nsites());
+    }
+
+    #[test]
+    fn field_aos_roundtrip() {
+        let geom = Geometry::new(3, 3, 3);
+        let f = HostField::from_fn("x", 2, &geom,
+                                   |c, x, _, _| c as f64 + x as f64);
+        let aos = f.to_aos();
+        let back = HostField::from_aos("x", &aos, 2, geom.nsites());
+        assert_eq!(back.data, f.data);
+    }
+}

@@ -1,0 +1,110 @@
+//! Cartesian lattice geometry and periodic index arithmetic.
+//!
+//! Site order matches the AOT artifacts: a `(Lx, Ly, Lz)` grid flattened in
+//! C order — `site = (x * Ly + y) * Lz + z` (z fastest). Consecutive `z`
+//! (and wrapped `y`, `x`) sites are therefore memory-consecutive, which is
+//! what the SoA layout vectorises over.
+
+/// A periodic Cartesian lattice. 2-D models use `lz == 1`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Geometry {
+    pub lx: usize,
+    pub ly: usize,
+    pub lz: usize,
+}
+
+impl Geometry {
+    pub fn new(lx: usize, ly: usize, lz: usize) -> Self {
+        assert!(lx > 0 && ly > 0 && lz > 0, "lattice extents must be positive");
+        Geometry { lx, ly, lz }
+    }
+
+    /// Total number of sites.
+    pub fn nsites(&self) -> usize {
+        self.lx * self.ly * self.lz
+    }
+
+    /// Flattened index of `(x, y, z)`; caller guarantees in-range coords.
+    #[inline(always)]
+    pub fn index(&self, x: usize, y: usize, z: usize) -> usize {
+        (x * self.ly + y) * self.lz + z
+    }
+
+    /// Inverse of [`Self::index`].
+    #[inline(always)]
+    pub fn coords(&self, site: usize) -> (usize, usize, usize) {
+        let z = site % self.lz;
+        let y = (site / self.lz) % self.ly;
+        let x = site / (self.ly * self.lz);
+        (x, y, z)
+    }
+
+    /// Periodic wrap of a possibly out-of-range signed coordinate.
+    #[inline(always)]
+    pub fn wrap(coord: i64, extent: usize) -> usize {
+        let e = extent as i64;
+        (((coord % e) + e) % e) as usize
+    }
+
+    /// Site index of the periodic neighbour at offset `(dx, dy, dz)`.
+    #[inline(always)]
+    pub fn neighbor(&self, x: usize, y: usize, z: usize,
+                    dx: i64, dy: i64, dz: i64) -> usize {
+        let nx = Self::wrap(x as i64 + dx, self.lx);
+        let ny = Self::wrap(y as i64 + dy, self.ly);
+        let nz = Self::wrap(z as i64 + dz, self.lz);
+        self.index(nx, ny, nz)
+    }
+
+    /// Iterate all `(x, y, z, site)` in flattened order.
+    pub fn iter(&self) -> impl Iterator<Item = (usize, usize, usize, usize)> + '_ {
+        (0..self.nsites()).map(move |s| {
+            let (x, y, z) = self.coords(s);
+            (x, y, z, s)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_coords_roundtrip() {
+        let g = Geometry::new(3, 4, 5);
+        for s in 0..g.nsites() {
+            let (x, y, z) = g.coords(s);
+            assert_eq!(g.index(x, y, z), s);
+        }
+    }
+
+    #[test]
+    fn z_is_fastest() {
+        let g = Geometry::new(2, 2, 4);
+        assert_eq!(g.index(0, 0, 1), 1);
+        assert_eq!(g.index(0, 1, 0), 4);
+        assert_eq!(g.index(1, 0, 0), 8);
+    }
+
+    #[test]
+    fn wrap_is_periodic() {
+        assert_eq!(Geometry::wrap(-1, 8), 7);
+        assert_eq!(Geometry::wrap(8, 8), 0);
+        assert_eq!(Geometry::wrap(-9, 8), 7);
+        assert_eq!(Geometry::wrap(3, 8), 3);
+    }
+
+    #[test]
+    fn neighbor_wraps_all_axes() {
+        let g = Geometry::new(4, 4, 4);
+        assert_eq!(g.neighbor(0, 0, 0, -1, 0, 0), g.index(3, 0, 0));
+        assert_eq!(g.neighbor(3, 3, 3, 1, 1, 1), g.index(0, 0, 0));
+        assert_eq!(g.neighbor(1, 2, 3, 0, 0, 1), g.index(1, 2, 0));
+    }
+
+    #[test]
+    #[should_panic(expected = "positive")]
+    fn zero_extent_rejected() {
+        Geometry::new(0, 4, 4);
+    }
+}

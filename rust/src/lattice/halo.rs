@@ -1,0 +1,80 @@
+//! Halo masks: boolean site-subsets for the paper's masked copies.
+//!
+//! The masked transfer API (section III-B) exists because halo exchange
+//! between MPI subdomains only needs the boundary shell of the lattice —
+//! these helpers build the standard masks, and `benches/masked_copy.rs`
+//! (E4) measures full vs masked transfer exactly as the paper motivates.
+
+use crate::lattice::geometry::Geometry;
+
+/// Mask selecting all sites within `depth` of any domain face.
+pub fn boundary_shell(geom: &Geometry, depth: usize) -> Vec<bool> {
+    let mut mask = vec![false; geom.nsites()];
+    for (x, y, z, s) in geom.iter() {
+        let near = |c: usize, l: usize| c < depth || c + depth >= l;
+        // axes with extent 1 (2-D lattices) have no halo in that direction
+        let hit = (geom.lx > 1 && near(x, geom.lx))
+            || (geom.ly > 1 && near(y, geom.ly))
+            || (geom.lz > 1 && near(z, geom.lz));
+        if hit {
+            mask[s] = true;
+        }
+    }
+    mask
+}
+
+/// Mask selecting the `depth` planes at the low (`low = true`) or high end
+/// of the x axis — the slab-decomposition exchange mask.
+pub fn x_planes(geom: &Geometry, depth: usize, low: bool) -> Vec<bool> {
+    let mut mask = vec![false; geom.nsites()];
+    for (x, _, _, s) in geom.iter() {
+        let hit = if low { x < depth } else { x + depth >= geom.lx };
+        if hit {
+            mask[s] = true;
+        }
+    }
+    mask
+}
+
+/// Fraction of sites selected by a mask.
+pub fn fill_fraction(mask: &[bool]) -> f64 {
+    mask.iter().filter(|&&m| m).count() as f64 / mask.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shell_depth1_counts() {
+        let geom = Geometry::new(4, 4, 4);
+        let mask = boundary_shell(&geom, 1);
+        // interior is 2^3 = 8, so shell = 64 - 8
+        assert_eq!(mask.iter().filter(|&&m| m).count(), 56);
+    }
+
+    #[test]
+    fn shell_2d_ignores_z() {
+        let geom = Geometry::new(4, 4, 1);
+        let mask = boundary_shell(&geom, 1);
+        assert_eq!(mask.iter().filter(|&&m| m).count(), 12);
+    }
+
+    #[test]
+    fn x_planes_select_slabs() {
+        let geom = Geometry::new(4, 2, 2);
+        let low = x_planes(&geom, 1, true);
+        let high = x_planes(&geom, 1, false);
+        for (x, _, _, s) in geom.iter() {
+            assert_eq!(low[s], x == 0);
+            assert_eq!(high[s], x == 3);
+        }
+    }
+
+    #[test]
+    fn fill_fraction_sane() {
+        let geom = Geometry::new(8, 8, 8);
+        let f = fill_fraction(&boundary_shell(&geom, 1));
+        assert!((f - (512.0 - 216.0) / 512.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,94 @@
+//! Output: legacy-VTK structured points (for visualisation) and CSV time
+//! series (for the benchmark/experiment harnesses).
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use crate::error::Result;
+use crate::lattice::geometry::Geometry;
+
+/// Write a scalar field as a legacy VTK STRUCTURED_POINTS file.
+pub fn write_vtk_scalar(path: &Path, geom: &Geometry, name: &str,
+                        field: &[f64]) -> Result<()> {
+    assert_eq!(field.len(), geom.nsites());
+    let mut w = BufWriter::new(File::create(path)?);
+    writeln!(w, "# vtk DataFile Version 3.0")?;
+    writeln!(w, "targetdp field {name}")?;
+    writeln!(w, "ASCII")?;
+    writeln!(w, "DATASET STRUCTURED_POINTS")?;
+    writeln!(w, "DIMENSIONS {} {} {}", geom.lx, geom.ly, geom.lz)?;
+    writeln!(w, "ORIGIN 0 0 0")?;
+    writeln!(w, "SPACING 1 1 1")?;
+    writeln!(w, "POINT_DATA {}", geom.nsites())?;
+    writeln!(w, "SCALARS {name} double 1")?;
+    writeln!(w, "LOOKUP_TABLE default")?;
+    // VTK expects x fastest; our layout has z fastest, so emit transposed
+    for z in 0..geom.lz {
+        for y in 0..geom.ly {
+            for x in 0..geom.lx {
+                writeln!(w, "{}", field[geom.index(x, y, z)])?;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Incremental CSV writer for time series.
+pub struct CsvWriter {
+    w: BufWriter<File>,
+}
+
+impl CsvWriter {
+    pub fn create(path: &Path, header: &[&str]) -> Result<Self> {
+        let mut w = BufWriter::new(File::create(path)?);
+        writeln!(w, "{}", header.join(","))?;
+        Ok(CsvWriter { w })
+    }
+
+    pub fn row(&mut self, values: &[f64]) -> Result<()> {
+        let line: Vec<String> = values.iter().map(|v| v.to_string()).collect();
+        writeln!(self.w, "{}", line.join(","))?;
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        self.w.flush()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vtk_roundtrip_header() {
+        let dir = std::env::temp_dir().join("targetdp_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("phi.vtk");
+        let geom = Geometry::new(2, 2, 2);
+        let field: Vec<f64> = (0..8).map(|i| i as f64).collect();
+        write_vtk_scalar(&path, &geom, "phi", &field).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("DIMENSIONS 2 2 2"));
+        assert!(text.contains("SCALARS phi double 1"));
+        // first emitted value is site (0,0,0), then x fastest: (1,0,0)
+        let tail: Vec<&str> = text.lines().rev().take(8).collect();
+        assert_eq!(tail.len(), 8);
+    }
+
+    #[test]
+    fn csv_writes_rows() {
+        let dir = std::env::temp_dir().join("targetdp_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("series.csv");
+        let mut csv = CsvWriter::create(&path, &["t", "mass"]).unwrap();
+        csv.row(&[0.0, 1.0]).unwrap();
+        csv.row(&[1.0, 1.0]).unwrap();
+        csv.flush().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 3);
+        assert!(text.starts_with("t,mass"));
+    }
+}

@@ -1,0 +1,11 @@
+//! Structured-grid substrate: geometry, SoA lattice fields, halo masks,
+//! domain decomposition and output.
+
+pub mod decomp;
+pub mod field;
+pub mod geometry;
+pub mod halo;
+pub mod io;
+
+pub use field::HostField;
+pub use geometry::Geometry;

@@ -1,0 +1,165 @@
+//! Solid boundaries: full-way bounce-back walls.
+//!
+//! Sites flagged solid act as reflectors: after streaming, every
+//! population resident on a solid site is reversed in place
+//! (`h_i <-> h_opposite(i)`); the next streaming step carries it back into
+//! the fluid. The effective no-slip plane sits half a lattice spacing
+//! inside the solid row. Solid sites are excluded from collision
+//! ([`restore_solid`] keeps their populations intact across a whole-lattice
+//! collision launch, so the collision kernels stay mask-free and
+//! data-parallel — the targetDP-friendly formulation).
+
+use crate::lattice::geometry::Geometry;
+use crate::lb::model::VelSet;
+
+/// Site classification for boundary handling.
+#[derive(Debug, Clone)]
+pub struct SolidMask {
+    pub solid: Vec<bool>,
+}
+
+impl SolidMask {
+    pub fn fluid(nsites: usize) -> Self {
+        SolidMask { solid: vec![false; nsites] }
+    }
+
+    /// Walls at y = 0 and y = ly-1 (the Poiseuille channel).
+    pub fn channel_walls_y(geom: &Geometry) -> Self {
+        let mut solid = vec![false; geom.nsites()];
+        for (x, y, z, s) in geom.iter() {
+            let _ = (x, z);
+            if y == 0 || y == geom.ly - 1 {
+                solid[s] = true;
+            }
+        }
+        SolidMask { solid }
+    }
+
+    pub fn n_solid(&self) -> usize {
+        self.solid.iter().filter(|&&b| b).count()
+    }
+}
+
+/// Post-streaming full-way bounce-back: reverse all populations in place
+/// at every solid site.
+pub fn bounce_back(vs: &VelSet, geom: &Geometry, h: &mut [f64],
+                   mask: &SolidMask) {
+    let n = geom.nsites();
+    debug_assert_eq!(h.len(), vs.nvel * n);
+    debug_assert_eq!(mask.solid.len(), n);
+    for s in 0..n {
+        if !mask.solid[s] {
+            continue;
+        }
+        for i in 1..vs.nvel {
+            let j = vs.opposite(i);
+            if j > i {
+                h.swap(i * n + s, j * n + s);
+            }
+        }
+    }
+}
+
+/// Snapshot the populations of the solid sites (call before a
+/// whole-lattice collision launch).
+pub fn save_solid(vs: &VelSet, h: &[f64], mask: &SolidMask,
+                  nsites: usize) -> Vec<f64> {
+    let mut saved = Vec::new();
+    for s in 0..nsites {
+        if mask.solid[s] {
+            for i in 0..vs.nvel {
+                saved.push(h[i * nsites + s]);
+            }
+        }
+    }
+    saved
+}
+
+/// Restore the snapshot taken by [`save_solid`] (call after collision), so
+/// solid sites are effectively excluded from the collision.
+pub fn restore_solid(vs: &VelSet, h: &mut [f64], mask: &SolidMask,
+                     nsites: usize, saved: &[f64]) {
+    let mut k = 0;
+    for s in 0..nsites {
+        if mask.solid[s] {
+            for i in 0..vs.nvel {
+                h[i * nsites + s] = saved[k];
+                k += 1;
+            }
+        }
+    }
+    debug_assert_eq!(k, saved.len());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lb::model::d2q9;
+
+    #[test]
+    fn channel_mask_counts() {
+        let geom = Geometry::new(4, 6, 1);
+        let mask = SolidMask::channel_walls_y(&geom);
+        assert_eq!(mask.n_solid(), 2 * 4);
+    }
+
+    #[test]
+    fn bounce_back_conserves_mass_and_reverses() {
+        let vs = d2q9();
+        let geom = Geometry::new(4, 6, 1);
+        let n = geom.nsites();
+        let mask = SolidMask::channel_walls_y(&geom);
+        let mut h: Vec<f64> =
+            (0..vs.nvel * n).map(|i| (i % 13) as f64).collect();
+        let before: f64 = h.iter().sum();
+        let h0 = h.clone();
+        bounce_back(vs, &geom, &mut h, &mask);
+        let after: f64 = h.iter().sum();
+        assert_eq!(before, after);
+        // at a solid site every population moved to its opposite slot
+        let s = geom.index(1, 0, 0);
+        for i in 0..vs.nvel {
+            assert_eq!(h[i * n + s], h0[vs.opposite(i) * n + s]);
+        }
+        // fluid sites untouched
+        let sf = geom.index(1, 2, 0);
+        for i in 0..vs.nvel {
+            assert_eq!(h[i * n + sf], h0[i * n + sf]);
+        }
+    }
+
+    #[test]
+    fn double_bounce_back_is_identity() {
+        let vs = d2q9();
+        let geom = Geometry::new(3, 4, 1);
+        let mask = SolidMask::channel_walls_y(&geom);
+        let mut h: Vec<f64> =
+            (0..vs.nvel * geom.nsites()).map(|i| i as f64).collect();
+        let h0 = h.clone();
+        bounce_back(vs, &geom, &mut h, &mask);
+        bounce_back(vs, &geom, &mut h, &mask);
+        assert_eq!(h, h0);
+    }
+
+    #[test]
+    fn save_restore_roundtrip_excludes_collision() {
+        let vs = d2q9();
+        let geom = Geometry::new(3, 4, 1);
+        let n = geom.nsites();
+        let mask = SolidMask::channel_walls_y(&geom);
+        let h0: Vec<f64> = (0..vs.nvel * n).map(|i| i as f64 * 0.1).collect();
+        let mut h = h0.clone();
+        let saved = save_solid(vs, &h, &mask, n);
+        // simulate a whole-lattice collision trashing everything
+        for v in h.iter_mut() {
+            *v = -1.0;
+        }
+        restore_solid(vs, &mut h, &mask, n, &saved);
+        for s in 0..n {
+            for i in 0..vs.nvel {
+                let want = if mask.solid[s] { h0[i * n + s] } else { -1.0 };
+                assert_eq!(h[i * n + s], want);
+            }
+        }
+    }
+}

@@ -1,0 +1,449 @@
+//! The paper's Figure-1 hot spot: binary-fluid BGK collision.
+//!
+//! Two implementations of the identical physics (DESIGN.md section 5):
+//!
+//! * [`collide_sites_scalar`] — one site at a time over SoA data, inner
+//!   loops over the `nvel` (19) velocities; the compiler is left to find
+//!   ILP, exactly like the paper's *original* CPU code (which the AoS
+//!   [`crate::baseline`] variant reproduces even more literally).
+//! * [`collide_chunk`] — the targetDP version: a `const VVL` chunk of
+//!   consecutive sites processed lane-wise (`[f64; VVL]` arrays, innermost
+//!   loops of compile-time extent VVL over contiguous SoA lanes), which the
+//!   auto-vectorizer maps onto SIMD — the `TARGET_ILP` mechanism.
+//!
+//! Both must agree with `python/compile/kernels/ref.py` to f64 round-off;
+//! `rust/tests/xla_parity.rs` pins all three layers together.
+
+use crate::free_energy::symmetric::FeParams;
+use crate::lb::model::{VelSet, CS2, MAX_NVEL};
+use crate::targetdp::tlp::TlpPool;
+
+/// Scalar reference path: collide sites `[base, base+len)` of SoA fields.
+///
+/// Layout: `f[i * nsites + s]`, `grad[d * nsites + s]`, `lap[s]`.
+#[allow(clippy::too_many_arguments)]
+pub fn collide_sites_scalar(vs: &VelSet, p: &FeParams, f: &mut [f64],
+                            g: &mut [f64], grad: &[f64], lap: &[f64],
+                            nsites: usize, base: usize, len: usize) {
+    for s in base..base + len {
+        // moments
+        let mut rho = 0.0;
+        let mut ru = [0.0f64; 3];
+        let mut phi = 0.0;
+        for i in 0..vs.nvel {
+            let fi = f[i * nsites + s];
+            rho += fi;
+            for a in 0..3 {
+                ru[a] += vs.cv[i][a] * fi;
+            }
+            phi += g[i * nsites + s];
+        }
+        let u = [ru[0] / rho, ru[1] / rho, ru[2] / rho];
+        let gd = [grad[s], grad[nsites + s], grad[2 * nsites + s]];
+        let lp = lap[s];
+
+        // free-energy sector
+        let mu = p.chemical_potential(phi, lp);
+        let iso_f = p.pth_iso(rho, phi, gd, lp) - rho * CS2;
+        let iso_g = p.gamma * mu - phi * CS2;
+
+        // packed symmetric tensors (xx xy xz yy yz zz)
+        let mut s_f = [0.0f64; 6];
+        let mut s_g = [0.0f64; 6];
+        for (k, (a, b)) in crate::lb::model::SYM6.iter().enumerate() {
+            let uu = u[*a] * u[*b];
+            s_f[k] = rho * uu + p.kappa * gd[*a] * gd[*b];
+            s_g[k] = phi * uu;
+            if a == b {
+                s_f[k] += iso_f;
+                s_g[k] += iso_g;
+            }
+        }
+
+        // relax toward the moment-projection equilibrium
+        let pu = [phi * u[0], phi * u[1], phi * u[2]];
+        for i in 0..vs.nvel {
+            let mut cb_f = 0.0;
+            let mut cb_g = 0.0;
+            for a in 0..3 {
+                cb_f += vs.cv[i][a] * ru[a];
+                cb_g += vs.cv[i][a] * pu[a];
+            }
+            let mut qs_f = 0.0;
+            let mut qs_g = 0.0;
+            for k in 0..6 {
+                qs_f += vs.q6[i][k] * s_f[k];
+                qs_g += vs.q6[i][k] * s_g[k];
+            }
+            let feq = vs.wv[i] * (rho + 3.0 * cb_f + 4.5 * qs_f);
+            let geq = vs.wv[i] * (phi + 3.0 * cb_g + 4.5 * qs_g);
+            let fi = &mut f[i * nsites + s];
+            *fi -= (*fi - feq) / p.tau_f;
+            let gi = &mut g[i * nsites + s];
+            *gi -= (*gi - geq) / p.tau_g;
+        }
+    }
+}
+
+/// targetDP path: collide one chunk of `VVL` consecutive sites lane-wise.
+///
+/// `len == VVL` except for the tail chunk; dead lanes are computed with
+/// neutral fill values (rho = 1) and never stored.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+pub fn collide_chunk<const VVL: usize>(vs: &VelSet, p: &FeParams,
+                                       f: &mut [f64], g: &mut [f64],
+                                       grad: &[f64], lap: &[f64],
+                                       nsites: usize, base: usize,
+                                       len: usize) {
+    // Load the distribution slab once: fl/gl[i] holds lane values for
+    // velocity i (stack resident, 19 * VVL * 8 B <= 4.75 KiB each).
+    let mut fl = [[0.0f64; VVL]; MAX_NVEL];
+    let mut gl = [[0.0f64; VVL]; MAX_NVEL];
+    let nvel = vs.nvel;
+    let full = len == VVL;
+    for i in 0..nvel {
+        let fr = &f[i * nsites + base..];
+        let gr = &g[i * nsites + base..];
+        if full {
+            for v in 0..VVL {
+                fl[i][v] = fr[v];
+                gl[i][v] = gr[v];
+            }
+        } else {
+            // tail: neutral fill keeps rho lanes at w_i sum == 1
+            for v in 0..VVL {
+                fl[i][v] = if v < len { fr[v] } else { vs.wv[i] };
+                gl[i][v] = if v < len { gr[v] } else { 0.0 };
+            }
+        }
+    }
+
+    // moments, lane-wise (TARGET_ILP loops of compile-time extent VVL)
+    let mut rho = [0.0f64; VVL];
+    let mut rux = [0.0f64; VVL];
+    let mut ruy = [0.0f64; VVL];
+    let mut ruz = [0.0f64; VVL];
+    let mut phi = [0.0f64; VVL];
+    for i in 0..nvel {
+        let c = vs.cv[i];
+        for v in 0..VVL {
+            // f64::mul_add: FMA keeps the lane loops on the FP throughput
+            // roofline (see EXPERIMENTS.md §Perf P3)
+            let fi = fl[i][v];
+            rho[v] += fi;
+            rux[v] = c[0].mul_add(fi, rux[v]);
+            ruy[v] = c[1].mul_add(fi, ruy[v]);
+            ruz[v] = c[2].mul_add(fi, ruz[v]);
+            phi[v] += gl[i][v];
+        }
+    }
+
+    let mut gx = [0.0f64; VVL];
+    let mut gy = [0.0f64; VVL];
+    let mut gz = [0.0f64; VVL];
+    let mut lp = [0.0f64; VVL];
+    for v in 0..VVL.min(len) {
+        gx[v] = grad[base + v];
+        gy[v] = grad[nsites + base + v];
+        gz[v] = grad[2 * nsites + base + v];
+        lp[v] = lap[base + v];
+    }
+
+    // per-lane free-energy quantities and packed tensors
+    let mut s_f = [[0.0f64; VVL]; 6];
+    let mut s_g = [[0.0f64; VVL]; 6];
+    let mut pux = [0.0f64; VVL];
+    let mut puy = [0.0f64; VVL];
+    let mut puz = [0.0f64; VVL];
+    for v in 0..VVL {
+        let r = rho[v];
+        let ph = phi[v];
+        let inv = 1.0 / r;
+        let ux = rux[v] * inv;
+        let uy = ruy[v] * inv;
+        let uz = ruz[v] * inv;
+        pux[v] = ph * ux;
+        puy[v] = ph * uy;
+        puz[v] = ph * uz;
+
+        let ph2 = ph * ph;
+        let mu = p.a * ph + p.b * ph * ph2 - p.kappa * lp[v];
+        let p0 = r * CS2 + 0.5 * p.a * ph2 + 0.75 * p.b * ph2 * ph2;
+        let gsq = gx[v] * gx[v] + gy[v] * gy[v] + gz[v] * gz[v];
+        let iso_f = p0 - p.kappa * ph * lp[v] - 0.5 * p.kappa * gsq - r * CS2;
+        let iso_g = p.gamma * mu - ph * CS2;
+
+        // order: xx xy xz yy yz zz
+        s_f[0][v] = r * ux * ux + p.kappa * gx[v] * gx[v] + iso_f;
+        s_f[1][v] = r * ux * uy + p.kappa * gx[v] * gy[v];
+        s_f[2][v] = r * ux * uz + p.kappa * gx[v] * gz[v];
+        s_f[3][v] = r * uy * uy + p.kappa * gy[v] * gy[v] + iso_f;
+        s_f[4][v] = r * uy * uz + p.kappa * gy[v] * gz[v];
+        s_f[5][v] = r * uz * uz + p.kappa * gz[v] * gz[v] + iso_f;
+
+        s_g[0][v] = ph * ux * ux + iso_g;
+        s_g[1][v] = ph * ux * uy;
+        s_g[2][v] = ph * ux * uz;
+        s_g[3][v] = ph * uy * uy + iso_g;
+        s_g[4][v] = ph * uy * uz;
+        s_g[5][v] = ph * uz * uz + iso_g;
+    }
+
+    // equilibrium + BGK relaxation, store lanes
+    let inv_tf = 1.0 / p.tau_f;
+    let inv_tg = 1.0 / p.tau_g;
+    for i in 0..nvel {
+        let c = vs.cv[i];
+        let q = vs.q6[i];
+        let w = vs.wv[i];
+        let mut fo = [0.0f64; VVL];
+        let mut go = [0.0f64; VVL];
+        for v in 0..VVL {
+            let cb_f = c[0].mul_add(rux[v],
+                        c[1].mul_add(ruy[v], c[2] * ruz[v]));
+            let cb_g = c[0].mul_add(pux[v],
+                        c[1].mul_add(puy[v], c[2] * puz[v]));
+            let qs_f = q[0].mul_add(s_f[0][v],
+                        q[1].mul_add(s_f[1][v],
+                         q[2].mul_add(s_f[2][v],
+                          q[3].mul_add(s_f[3][v],
+                           q[4].mul_add(s_f[4][v], q[5] * s_f[5][v])))));
+            let qs_g = q[0].mul_add(s_g[0][v],
+                        q[1].mul_add(s_g[1][v],
+                         q[2].mul_add(s_g[2][v],
+                          q[3].mul_add(s_g[3][v],
+                           q[4].mul_add(s_g[4][v], q[5] * s_g[5][v])))));
+            let feq = w * 3.0f64.mul_add(cb_f, 4.5f64.mul_add(qs_f, rho[v]));
+            let geq = w * 3.0f64.mul_add(cb_g, 4.5f64.mul_add(qs_g, phi[v]));
+            fo[v] = (fl[i][v] - feq).mul_add(-inv_tf, fl[i][v]);
+            go[v] = (gl[i][v] - geq).mul_add(-inv_tg, gl[i][v]);
+        }
+        let fr = &mut f[i * nsites + base..];
+        for v in 0..len {
+            fr[v] = fo[v];
+        }
+        let gr = &mut g[i * nsites + base..];
+        for v in 0..len {
+            gr[v] = go[v];
+        }
+    }
+}
+
+/// Full-lattice collision with TLP + ILP partitioning (the targetDP
+/// execution model): TLP distributes VVL-chunks over threads, each chunk
+/// runs the const-generic lane kernel.
+#[allow(clippy::too_many_arguments)]
+pub fn collide_lattice(vs: &VelSet, p: &FeParams, f: &mut [f64],
+                       g: &mut [f64], grad: &[f64], lap: &[f64],
+                       nsites: usize, pool: &TlpPool, vvl: usize,
+                       scalar: bool) {
+    debug_assert_eq!(f.len(), vs.nvel * nsites);
+    debug_assert_eq!(g.len(), vs.nvel * nsites);
+    debug_assert_eq!(grad.len(), 3 * nsites);
+    debug_assert_eq!(lap.len(), nsites);
+
+    // SAFETY: chunks partition [0, nsites); every lane write of a chunk
+    // touches only sites in [base, base+len), so the parallel mutable
+    // accesses are disjoint.
+    let f_ptr = SendPtr(f.as_mut_ptr(), f.len());
+    let g_ptr = SendPtr(g.as_mut_ptr(), g.len());
+
+    pool.for_chunks(nsites, vvl, |base, len| {
+        // rebind so the closure captures the Send+Sync wrappers whole
+        let (f_ptr, g_ptr) = (f_ptr, g_ptr);
+        let f = unsafe { std::slice::from_raw_parts_mut(f_ptr.0, f_ptr.1) };
+        let g = unsafe { std::slice::from_raw_parts_mut(g_ptr.0, g_ptr.1) };
+        if scalar {
+            collide_sites_scalar(vs, p, f, g, grad, lap, nsites, base, len);
+        } else {
+            crate::dispatch_vvl!(
+                vvl,
+                collide_chunk(vs, p, f, g, grad, lap, nsites, base, len)
+            );
+        }
+    });
+}
+
+#[derive(Clone, Copy)]
+struct SendPtr(*mut f64, usize);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lb::model::{d2q9, d3q19};
+
+    /// Deterministic near-equilibrium state (mirrors tests/test_kernel.py).
+    pub fn make_state(vs: &VelSet, nsites: usize, seed: u64)
+                      -> (Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>) {
+        let mut rng = seed.max(1);
+        let mut next = move || {
+            // xorshift64*
+            rng ^= rng >> 12;
+            rng ^= rng << 25;
+            rng ^= rng >> 27;
+            (rng.wrapping_mul(0x2545F4914F6CDD1D) >> 11) as f64
+                / (1u64 << 53) as f64
+                - 0.5
+        };
+        let mut f = vec![0.0; vs.nvel * nsites];
+        let mut g = vec![0.0; vs.nvel * nsites];
+        for i in 0..vs.nvel {
+            for s in 0..nsites {
+                f[i * nsites + s] = vs.wv[i] * (1.0 + 0.1 * next());
+                g[i * nsites + s] = vs.wv[i] * 0.1 * next();
+            }
+        }
+        let mut grad = vec![0.0; 3 * nsites];
+        for d in 0..vs.ndim {
+            for s in 0..nsites {
+                grad[d * nsites + s] = 0.02 * next();
+            }
+        }
+        let lap: Vec<f64> = (0..nsites).map(|_| 0.02 * next()).collect();
+        (f, g, grad, lap)
+    }
+
+    fn moments(vs: &VelSet, f: &[f64], nsites: usize) -> (f64, [f64; 3]) {
+        let mut mass = 0.0;
+        let mut mom = [0.0f64; 3];
+        for i in 0..vs.nvel {
+            for s in 0..nsites {
+                let fi = f[i * nsites + s];
+                mass += fi;
+                for a in 0..3 {
+                    mom[a] += vs.cv[i][a] * fi;
+                }
+            }
+        }
+        (mass, mom)
+    }
+
+    #[test]
+    fn chunk_matches_scalar_all_vvl() {
+        for vs in [d3q19(), d2q9()] {
+            let nsites = 160;
+            let p = FeParams::default();
+            let (f0, g0, grad, lap) = make_state(vs, nsites, 42);
+
+            let mut f_ref = f0.clone();
+            let mut g_ref = g0.clone();
+            collide_sites_scalar(vs, &p, &mut f_ref, &mut g_ref, &grad,
+                                 &lap, nsites, 0, nsites);
+
+            for &vvl in crate::targetdp::ilp::SUPPORTED_VVL {
+                let mut f = f0.clone();
+                let mut g = g0.clone();
+                collide_lattice(vs, &p, &mut f, &mut g, &grad, &lap, nsites,
+                                &TlpPool::serial(), vvl, false);
+                for (a, b) in f.iter().zip(&f_ref) {
+                    assert!((a - b).abs() < 1e-14,
+                            "{} vvl={vvl}: f {a} vs {b}", vs.name);
+                }
+                for (a, b) in g.iter().zip(&g_ref) {
+                    assert!((a - b).abs() < 1e-14,
+                            "{} vvl={vvl}: g {a} vs {b}", vs.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tail_chunks_handled() {
+        // nsites not a multiple of VVL exercises the fill path
+        let vs = d3q19();
+        let nsites = 37;
+        let p = FeParams::default();
+        let (f0, g0, grad, lap) = make_state(vs, nsites, 7);
+        let mut f_ref = f0.clone();
+        let mut g_ref = g0.clone();
+        collide_sites_scalar(vs, &p, &mut f_ref, &mut g_ref, &grad, &lap,
+                             nsites, 0, nsites);
+        let mut f = f0.clone();
+        let mut g = g0.clone();
+        collide_lattice(vs, &p, &mut f, &mut g, &grad, &lap, nsites,
+                        &TlpPool::serial(), 16, false);
+        for (a, b) in f.iter().zip(&f_ref) {
+            assert!((a - b).abs() < 1e-14);
+        }
+        for (a, b) in g.iter().zip(&g_ref) {
+            assert!((a - b).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn collision_conserves_invariants() {
+        for vs in [d3q19(), d2q9()] {
+            let nsites = 96;
+            let p = FeParams::default();
+            let (mut f, mut g, grad, lap) = make_state(vs, nsites, 3);
+            let (mass0, mom0) = moments(vs, &f, nsites);
+            let phi0: f64 = g.iter().sum();
+            collide_lattice(vs, &p, &mut f, &mut g, &grad, &lap, nsites,
+                            &TlpPool::serial(), 8, false);
+            let (mass1, mom1) = moments(vs, &f, nsites);
+            let phi1: f64 = g.iter().sum();
+            assert!((mass1 - mass0).abs() < 1e-11, "{} mass", vs.name);
+            assert!((phi1 - phi0).abs() < 1e-11, "{} phi", vs.name);
+            for a in 0..3 {
+                assert!((mom1[a] - mom0[a]).abs() < 1e-11,
+                        "{} mom[{a}]", vs.name);
+            }
+        }
+    }
+
+    #[test]
+    fn threads_match_serial() {
+        let vs = d3q19();
+        let nsites = 200;
+        let p = FeParams::default();
+        let (f0, g0, grad, lap) = make_state(vs, nsites, 9);
+        let mut f1 = f0.clone();
+        let mut g1 = g0.clone();
+        collide_lattice(vs, &p, &mut f1, &mut g1, &grad, &lap, nsites,
+                        &TlpPool::serial(), 8, false);
+        let mut f2 = f0;
+        let mut g2 = g0;
+        let pool = TlpPool::new(4, crate::targetdp::tlp::Schedule::Dynamic {
+            batch: 2,
+        });
+        collide_lattice(vs, &p, &mut f2, &mut g2, &grad, &lap, nsites,
+                        &pool, 8, false);
+        assert_eq!(f1, f2);
+        assert_eq!(g1, g2);
+    }
+
+    #[test]
+    fn equilibrium_is_fixed_point() {
+        // a uniform zero-velocity equilibrium state must be invariant
+        let vs = d3q19();
+        let nsites = 64;
+        let p = FeParams::default();
+        let rho = 1.0;
+        let phi = 0.4;
+        let mut f = vec![0.0; vs.nvel * nsites];
+        let mut g = vec![0.0; vs.nvel * nsites];
+        let (feq, geq) = crate::lb::equilibrium::equilibrium_site(
+            vs, &p, rho, phi, [0.0; 3], [0.0; 3], 0.0);
+        for i in 0..vs.nvel {
+            for s in 0..nsites {
+                f[i * nsites + s] = feq[i];
+                g[i * nsites + s] = geq[i];
+            }
+        }
+        let f0 = f.clone();
+        let g0 = g.clone();
+        let grad = vec![0.0; 3 * nsites];
+        let lap = vec![0.0; nsites];
+        collide_lattice(vs, &p, &mut f, &mut g, &grad, &lap, nsites,
+                        &TlpPool::serial(), 4, false);
+        for (a, b) in f.iter().zip(&f0) {
+            assert!((a - b).abs() < 1e-14);
+        }
+        for (a, b) in g.iter().zip(&g0) {
+            assert!((a - b).abs() < 1e-14);
+        }
+    }
+}

@@ -1,0 +1,108 @@
+//! Moment-projection equilibria (DESIGN.md section 5):
+//! `h_i = w_i [a + 3 b.c_i + 9/2 S : (c_i c_i - I_d/3)]`.
+//!
+//! Used for initialisation and by tests; the collision kernels inline the
+//! same algebra for speed.
+
+use crate::free_energy::symmetric::FeParams;
+use crate::lb::model::{VelSet, CS2, MAX_NVEL, SYM6};
+
+/// Generic projection for one site: scalar moment `a`, vector moment `b`,
+/// traceless-adjusted tensor `s` packed as (xx xy xz yy yz zz).
+pub fn project(vs: &VelSet, a: f64, b: [f64; 3], s6: [f64; 6])
+               -> [f64; MAX_NVEL] {
+    let mut h = [0.0f64; MAX_NVEL];
+    for i in 0..vs.nvel {
+        let c = vs.cv[i];
+        let cb = c[0] * b[0] + c[1] * b[1] + c[2] * b[2];
+        let mut qs = 0.0;
+        for k in 0..6 {
+            qs += vs.q6[i][k] * s6[k];
+        }
+        h[i] = vs.wv[i] * (a + 3.0 * cb + 4.5 * qs);
+    }
+    h
+}
+
+/// Binary-fluid equilibrium pair (f_eq, g_eq) for one site.
+///
+/// `grad`/`lap` are the order-parameter gradients (zero for bulk init).
+pub fn equilibrium_site(vs: &VelSet, p: &FeParams, rho: f64, phi: f64,
+                        u: [f64; 3], grad: [f64; 3], lap: f64)
+                        -> ([f64; MAX_NVEL], [f64; MAX_NVEL]) {
+    let iso_f = p.pth_iso(rho, phi, grad, lap) - rho * CS2;
+    let mu = p.chemical_potential(phi, lap);
+    let iso_g = p.gamma * mu - phi * CS2;
+
+    let mut s_f = [0.0f64; 6];
+    let mut s_g = [0.0f64; 6];
+    for (k, (a, b)) in SYM6.iter().enumerate() {
+        let uu = u[*a] * u[*b];
+        s_f[k] = rho * uu + p.kappa * grad[*a] * grad[*b];
+        s_g[k] = phi * uu;
+        if a == b {
+            s_f[k] += iso_f;
+            s_g[k] += iso_g;
+        }
+    }
+    let f = project(vs, rho, [rho * u[0], rho * u[1], rho * u[2]], s_f);
+    let g = project(vs, phi, [phi * u[0], phi * u[1], phi * u[2]], s_g);
+    (f, g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lb::model::{d2q9, d3q19};
+
+    #[test]
+    fn projection_reproduces_moments() {
+        for vs in [d3q19(), d2q9()] {
+            let a = 1.1;
+            let mut b = [0.01, -0.02, 0.03];
+            let mut s6 = [0.02, -0.01, 0.005, 0.015, -0.003, 0.01];
+            if vs.ndim == 2 {
+                b[2] = 0.0;
+                s6[2] = 0.0; // xz
+                s6[4] = 0.0; // yz
+                s6[5] = 0.0; // zz
+            }
+            let h = project(vs, a, b, s6);
+
+            let m0: f64 = h[..vs.nvel].iter().sum();
+            assert!((m0 - a).abs() < 1e-14, "{}: zeroth", vs.name);
+
+            for d in 0..3 {
+                let m1: f64 = (0..vs.nvel).map(|i| vs.cv[i][d] * h[i]).sum();
+                assert!((m1 - b[d]).abs() < 1e-14, "{}: first {d}", vs.name);
+            }
+
+            // second moment = a/3 I_d + S
+            for (k, (x, y)) in SYM6.iter().enumerate() {
+                let m2: f64 = (0..vs.nvel)
+                    .map(|i| vs.cv[i][*x] * vs.cv[i][*y] * h[i])
+                    .sum();
+                let delta = if x == y && *x < vs.ndim { a / 3.0 } else { 0.0 };
+                assert!((m2 - (delta + s6[k])).abs() < 1e-13,
+                        "{}: second ({x},{y}): {m2}", vs.name);
+            }
+        }
+    }
+
+    #[test]
+    fn equilibrium_site_moments() {
+        let vs = d3q19();
+        let p = FeParams::default();
+        let (f, g) = equilibrium_site(vs, &p, 1.05, -0.3,
+                                      [0.01, 0.0, -0.02], [0.0; 3], 0.0);
+        let rho: f64 = f[..vs.nvel].iter().sum();
+        let phi: f64 = g[..vs.nvel].iter().sum();
+        assert!((rho - 1.05).abs() < 1e-14);
+        assert!((phi + 0.3).abs() < 1e-14);
+        for d in 0..3 {
+            let m: f64 = (0..vs.nvel).map(|i| vs.cv[i][d] * f[i]).sum();
+            let want = 1.05 * [0.01, 0.0, -0.02][d];
+            assert!((m - want).abs() < 1e-14);
+        }
+    }
+}

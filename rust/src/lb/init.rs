@@ -1,0 +1,130 @@
+//! Initial conditions for the binary-fluid simulations.
+
+use crate::free_energy::symmetric::FeParams;
+use crate::lattice::geometry::Geometry;
+use crate::lb::equilibrium::equilibrium_site;
+use crate::lb::model::VelSet;
+
+/// Deterministic xorshift64* RNG — reproducible initial noise without an
+/// external crate.
+#[derive(Debug, Clone)]
+pub struct Rng64(u64);
+
+impl Rng64 {
+    pub fn new(seed: u64) -> Self {
+        Rng64(seed.max(1))
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.0 ^= self.0 >> 12;
+        self.0 ^= self.0 << 25;
+        self.0 ^= self.0 >> 27;
+        self.0.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform in [-0.5, 0.5).
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64 - 0.5
+    }
+}
+
+/// Fill (f, g) with equilibria for given per-site (rho, phi, u) profiles.
+pub fn init_equilibrium<FR, FP, FU>(vs: &VelSet, p: &FeParams,
+                                    geom: &Geometry, f: &mut [f64],
+                                    g: &mut [f64], rho_of: FR, phi_of: FP,
+                                    u_of: FU)
+where
+    FR: Fn(usize, usize, usize) -> f64,
+    FP: Fn(usize, usize, usize) -> f64,
+    FU: Fn(usize, usize, usize) -> [f64; 3],
+{
+    let n = geom.nsites();
+    for (x, y, z, s) in geom.iter() {
+        let (fe, ge) = equilibrium_site(vs, p, rho_of(x, y, z),
+                                        phi_of(x, y, z), u_of(x, y, z),
+                                        [0.0; 3], 0.0);
+        for i in 0..vs.nvel {
+            f[i * n + s] = fe[i];
+            g[i * n + s] = ge[i];
+        }
+    }
+}
+
+/// Spinodal quench: rho = 1, phi = small symmetric noise, u = 0.
+pub fn init_spinodal(vs: &VelSet, p: &FeParams, geom: &Geometry,
+                     f: &mut [f64], g: &mut [f64], amplitude: f64,
+                     seed: u64) {
+    let n = geom.nsites();
+    let mut rng = Rng64::new(seed);
+    let noise: Vec<f64> =
+        (0..n).map(|_| 2.0 * amplitude * rng.uniform()).collect();
+    init_equilibrium(vs, p, geom, f, g, |_, _, _| 1.0,
+                     |x, y, z| noise[geom.index(x, y, z)],
+                     |_, _, _| [0.0; 3]);
+}
+
+/// Circular droplet of phi = -phi* in a phi = +phi* background, with a
+/// tanh profile of the equilibrium interface width.
+#[allow(clippy::too_many_arguments)]
+pub fn init_droplet(vs: &VelSet, p: &FeParams, geom: &Geometry,
+                    f: &mut [f64], g: &mut [f64], cx: f64, cy: f64,
+                    radius: f64) {
+    let phi_star = p.phi_star();
+    let xi = p.interface_width();
+    init_equilibrium(vs, p, geom, f, g, |_, _, _| 1.0, |x, y, _| {
+        let dx = x as f64 - cx;
+        let dy = y as f64 - cy;
+        let r = (dx * dx + dy * dy).sqrt();
+        phi_star * ((r - radius) / xi).tanh()
+    }, |_, _, _| [0.0; 3]);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lb::model::d3q19;
+    use crate::lb::moments::totals;
+
+    #[test]
+    fn rng_is_deterministic() {
+        let mut a = Rng64::new(42);
+        let mut b = Rng64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let u = a.uniform();
+        assert!((-0.5..0.5).contains(&u));
+    }
+
+    #[test]
+    fn spinodal_has_unit_density_and_zero_momentum() {
+        let vs = d3q19();
+        let p = FeParams::default();
+        let geom = Geometry::new(8, 8, 8);
+        let n = geom.nsites();
+        let mut f = vec![0.0; vs.nvel * n];
+        let mut g = vec![0.0; vs.nvel * n];
+        init_spinodal(vs, &p, &geom, &mut f, &mut g, 0.05, 1234);
+        let (mass, mom, phi) = totals(vs, &f, &g, n);
+        assert!((mass - n as f64).abs() < 1e-9);
+        assert!(mom.iter().all(|&m| m.abs() < 1e-10));
+        assert!(phi.abs() < 0.05 * n as f64, "noise is mean-ish-zero");
+    }
+
+    #[test]
+    fn droplet_phi_signs() {
+        let vs = d3q19();
+        let p = FeParams::default();
+        let geom = Geometry::new(32, 32, 1);
+        let n = geom.nsites();
+        let mut f = vec![0.0; vs.nvel * n];
+        let mut g = vec![0.0; vs.nvel * n];
+        init_droplet(vs, &p, &geom, &mut f, &mut g, 16.0, 16.0, 8.0);
+        // phi at the centre is -phi*, far away +phi*
+        let phi_at = |x: usize, y: usize| -> f64 {
+            (0..vs.nvel).map(|i| g[i * n + geom.index(x, y, 0)]).sum()
+        };
+        assert!(phi_at(16, 16) < -0.9 * p.phi_star());
+        assert!(phi_at(0, 0) > 0.9 * p.phi_star());
+    }
+}

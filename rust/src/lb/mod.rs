@@ -1,0 +1,20 @@
+//! The motivating application (paper section II-A): a binary-fluid
+//! lattice-Boltzmann engine in the style of Ludwig.
+//!
+//! The *binary collision* kernel ([`collision`]) is the computational
+//! kernel the paper extracts for its Figure-1 benchmark; the rest of the
+//! engine (moments, equilibria, propagation, boundaries, initialisation,
+//! and the [`engine::LbEngine`] driver that runs everything through a
+//! [`crate::targetdp::Target`]) is the substrate it lives in.
+
+pub mod boundary;
+pub mod collision;
+pub mod engine;
+pub mod equilibrium;
+pub mod init;
+pub mod model;
+pub mod moments;
+pub mod propagation;
+
+pub use engine::LbEngine;
+pub use model::{LatticeModel, VelSet};

@@ -1,0 +1,226 @@
+//! Velocity sets (D3Q19, D2Q9) and the moment-projection tables.
+//!
+//! Ordering, weights and the packed `q6` projection tensor are **identical**
+//! to `python/compile/kernels/ref.py` — the cross-layer agreement the whole
+//! stack's correctness rests on (verified by `tests/xla_parity.rs`).
+
+use std::sync::OnceLock;
+
+/// Speed of sound squared, c_s^2 = 1/3 for both sets.
+pub const CS2: f64 = 1.0 / 3.0;
+
+/// Unique symmetric-tensor components in packed order: xx xy xz yy yz zz.
+pub const SYM6: [(usize, usize); 6] =
+    [(0, 0), (0, 1), (0, 2), (1, 1), (1, 2), (2, 2)];
+
+/// Contraction multiplicity of each packed component (off-diagonals twice).
+pub const SYM6_MULT: [f64; 6] = [1.0, 2.0, 2.0, 1.0, 2.0, 1.0];
+
+/// Maximum nvel over the supported sets (stack-buffer capacity in kernels).
+pub const MAX_NVEL: usize = 19;
+
+/// Which velocity set a simulation uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LatticeModel {
+    D3Q19,
+    D2Q9,
+}
+
+impl LatticeModel {
+    pub fn velset(&self) -> &'static VelSet {
+        match self {
+            LatticeModel::D3Q19 => d3q19(),
+            LatticeModel::D2Q9 => d2q9(),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            LatticeModel::D3Q19 => "d3q19",
+            LatticeModel::D2Q9 => "d2q9",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<Self> {
+        match name {
+            "d3q19" => Some(LatticeModel::D3Q19),
+            "d2q9" => Some(LatticeModel::D2Q9),
+            _ => None,
+        }
+    }
+}
+
+/// A discrete velocity set plus the precomputed projection tables.
+#[derive(Debug)]
+pub struct VelSet {
+    pub name: &'static str,
+    pub nvel: usize,
+    /// Spatial dimensionality (2 for D2Q9; vectors still embedded in 3-D).
+    pub ndim: usize,
+    /// Lattice vectors as f64 (for moment arithmetic).
+    pub cv: Vec<[f64; 3]>,
+    /// Lattice vectors as integers (for streaming / neighbour offsets).
+    pub ci: Vec<[i64; 3]>,
+    /// Quadrature weights.
+    pub wv: Vec<f64>,
+    /// Packed projection tensor: `q6[i][k] = mult_k * (c_i c_i - I_d/3)_k`
+    /// so `sum_ab Q_iab S_ab == q6[i] . s6` for symmetric S.
+    pub q6: Vec<[f64; 6]>,
+}
+
+impl VelSet {
+    fn build(name: &'static str, ndim: usize, ci: Vec<[i64; 3]>,
+             wv: Vec<f64>) -> Self {
+        let nvel = ci.len();
+        let cv: Vec<[f64; 3]> = ci
+            .iter()
+            .map(|c| [c[0] as f64, c[1] as f64, c[2] as f64])
+            .collect();
+        // I_d embedded in 3x3 (ref.lattice_eye)
+        let mut eye = [0.0f64; 3];
+        for e in eye.iter_mut().take(ndim) {
+            *e = 1.0;
+        }
+        let q6 = cv
+            .iter()
+            .map(|c| {
+                let mut q = [0.0f64; 6];
+                for (k, (a, b)) in SYM6.iter().enumerate() {
+                    let delta = if a == b { eye[*a] } else { 0.0 };
+                    q[k] = SYM6_MULT[k] * (c[*a] * c[*b] - delta / 3.0);
+                }
+                q
+            })
+            .collect();
+        VelSet { name, nvel, ndim, cv, ci, wv, q6 }
+    }
+
+    /// Index of the velocity opposite to `i` (for bounce-back).
+    pub fn opposite(&self, i: usize) -> usize {
+        let c = self.ci[i];
+        self.ci
+            .iter()
+            .position(|d| d[0] == -c[0] && d[1] == -c[1] && d[2] == -c[2])
+            .expect("velocity set is parity symmetric")
+    }
+}
+
+/// D3Q19, Ludwig ordering: rest, 6 faces, 12 edges (matches ref.py).
+pub fn d3q19() -> &'static VelSet {
+    static SET: OnceLock<VelSet> = OnceLock::new();
+    SET.get_or_init(|| {
+        let ci = vec![
+            [0, 0, 0],
+            [1, 0, 0], [-1, 0, 0], [0, 1, 0], [0, -1, 0], [0, 0, 1],
+            [0, 0, -1],
+            [1, 1, 0], [-1, -1, 0], [1, -1, 0], [-1, 1, 0],
+            [1, 0, 1], [-1, 0, -1], [1, 0, -1], [-1, 0, 1],
+            [0, 1, 1], [0, -1, -1], [0, 1, -1], [0, -1, 1],
+        ];
+        let mut wv = vec![1.0 / 36.0; 19];
+        wv[0] = 1.0 / 3.0;
+        for w in wv.iter_mut().take(7).skip(1) {
+            *w = 1.0 / 18.0;
+        }
+        VelSet::build("d3q19", 3, ci, wv)
+    })
+}
+
+/// D2Q9 embedded in 3-D, z component zero (matches ref.py).
+pub fn d2q9() -> &'static VelSet {
+    static SET: OnceLock<VelSet> = OnceLock::new();
+    SET.get_or_init(|| {
+        let ci = vec![
+            [0, 0, 0],
+            [1, 0, 0], [-1, 0, 0], [0, 1, 0], [0, -1, 0],
+            [1, 1, 0], [-1, -1, 0], [1, -1, 0], [-1, 1, 0],
+        ];
+        let mut wv = vec![1.0 / 36.0; 9];
+        wv[0] = 4.0 / 9.0;
+        for w in wv.iter_mut().take(5).skip(1) {
+            *w = 1.0 / 9.0;
+        }
+        VelSet::build("d2q9", 2, ci, wv)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check_moment_identities(vs: &VelSet) {
+        // sum w = 1
+        let sw: f64 = vs.wv.iter().sum();
+        assert!((sw - 1.0).abs() < 1e-14, "{}: sum w = {sw}", vs.name);
+        // sum w c_a = 0
+        for a in 0..3 {
+            let s: f64 = (0..vs.nvel).map(|i| vs.wv[i] * vs.cv[i][a]).sum();
+            assert!(s.abs() < 1e-14, "{}: first moment", vs.name);
+        }
+        // sum w c_a c_b = (1/3) I_d
+        for a in 0..3 {
+            for b in 0..3 {
+                let s: f64 = (0..vs.nvel)
+                    .map(|i| vs.wv[i] * vs.cv[i][a] * vs.cv[i][b])
+                    .sum();
+                let want = if a == b && a < vs.ndim { CS2 } else { 0.0 };
+                assert!((s - want).abs() < 1e-14,
+                        "{}: second moment ({a},{b}) = {s}", vs.name);
+            }
+        }
+        // sum w q6 = 0 (conservation of the projection)
+        for k in 0..6 {
+            let s: f64 = (0..vs.nvel).map(|i| vs.wv[i] * vs.q6[i][k]).sum();
+            assert!(s.abs() < 1e-14, "{}: q6[{k}]", vs.name);
+        }
+        // fourth-moment isotropy: sum w c_a c_b (c_a c_b - delta/3) = 2/9
+        // for a != b within the active dimensions
+        for (a, b) in [(0, 1), (0, 2), (1, 2)] {
+            if b >= vs.ndim {
+                continue;
+            }
+            let s: f64 = (0..vs.nvel)
+                .map(|i| vs.wv[i] * vs.cv[i][a] * vs.cv[i][b]
+                     * vs.cv[i][a] * vs.cv[i][b])
+                .sum();
+            assert!((s - 1.0 / 9.0).abs() < 1e-14,
+                    "{}: fourth moment ({a},{b}) = {s}", vs.name);
+        }
+    }
+
+    #[test]
+    fn d3q19_identities() {
+        let vs = d3q19();
+        assert_eq!(vs.nvel, 19);
+        check_moment_identities(vs);
+    }
+
+    #[test]
+    fn d2q9_identities() {
+        let vs = d2q9();
+        assert_eq!(vs.nvel, 9);
+        check_moment_identities(vs);
+    }
+
+    #[test]
+    fn opposite_velocities() {
+        for vs in [d3q19(), d2q9()] {
+            assert_eq!(vs.opposite(0), 0);
+            for i in 0..vs.nvel {
+                let j = vs.opposite(i);
+                assert_eq!(vs.opposite(j), i);
+                for a in 0..3 {
+                    assert_eq!(vs.ci[i][a], -vs.ci[j][a]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn model_names_roundtrip() {
+        for m in [LatticeModel::D3Q19, LatticeModel::D2Q9] {
+            assert_eq!(LatticeModel::from_name(m.name()), Some(m));
+        }
+        assert_eq!(LatticeModel::from_name("d1q3"), None);
+    }
+}

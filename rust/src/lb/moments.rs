@@ -1,0 +1,102 @@
+//! Hydrodynamic moments of the distributions (observables + the phi-moment
+//! kernel feeding the gradient step).
+
+use crate::lb::model::VelSet;
+use crate::targetdp::tlp::TlpPool;
+
+/// phi(s) = sum_i g_i(s), SoA layout.
+pub fn phi_from_g(vs: &VelSet, g: &[f64], phi: &mut [f64], nsites: usize,
+                  pool: &TlpPool, vvl: usize) {
+    debug_assert_eq!(g.len(), vs.nvel * nsites);
+    debug_assert_eq!(phi.len(), nsites);
+    let phi_ptr = SendPtr(phi.as_mut_ptr());
+    pool.for_chunks(nsites, vvl, |base, len| {
+        let phi = phi_ptr;
+        for s in base..base + len {
+            let mut acc = 0.0;
+            for i in 0..vs.nvel {
+                acc += g[i * nsites + s];
+            }
+            unsafe {
+                *phi.0.add(s) = acc;
+            }
+        }
+    });
+}
+
+/// Density and velocity for one site.
+pub fn hydro_site(vs: &VelSet, f: &[f64], nsites: usize, s: usize)
+                  -> (f64, [f64; 3]) {
+    let mut rho = 0.0;
+    let mut ru = [0.0f64; 3];
+    for i in 0..vs.nvel {
+        let fi = f[i * nsites + s];
+        rho += fi;
+        for a in 0..3 {
+            ru[a] += vs.cv[i][a] * fi;
+        }
+    }
+    (rho, [ru[0] / rho, ru[1] / rho, ru[2] / rho])
+}
+
+/// Global invariants: (total mass, total momentum, total phi).
+pub fn totals(vs: &VelSet, f: &[f64], g: &[f64], nsites: usize)
+              -> (f64, [f64; 3], f64) {
+    let mut mass = 0.0;
+    let mut mom = [0.0f64; 3];
+    for i in 0..vs.nvel {
+        for s in 0..nsites {
+            let fi = f[i * nsites + s];
+            mass += fi;
+            for a in 0..3 {
+                mom[a] += vs.cv[i][a] * fi;
+            }
+        }
+    }
+    let phi: f64 = g.iter().sum();
+    (mass, mom, phi)
+}
+
+#[derive(Clone, Copy)]
+struct SendPtr(*mut f64);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lb::model::d3q19;
+
+    #[test]
+    fn phi_moment_sums_components() {
+        let vs = d3q19();
+        let nsites = 10;
+        let mut g = vec![0.0; vs.nvel * nsites];
+        for i in 0..vs.nvel {
+            for s in 0..nsites {
+                g[i * nsites + s] = (i + 1) as f64 * (s + 1) as f64;
+            }
+        }
+        let mut phi = vec![0.0; nsites];
+        phi_from_g(vs, &g, &mut phi, nsites, &TlpPool::serial(), 4);
+        let csum: f64 = (1..=vs.nvel).map(|i| i as f64).sum();
+        for s in 0..nsites {
+            assert!((phi[s] - csum * (s + 1) as f64).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn hydro_site_uniform_rest() {
+        let vs = d3q19();
+        let nsites = 4;
+        let mut f = vec![0.0; vs.nvel * nsites];
+        for i in 0..vs.nvel {
+            for s in 0..nsites {
+                f[i * nsites + s] = vs.wv[i];
+            }
+        }
+        let (rho, u) = hydro_site(vs, &f, nsites, 2);
+        assert!((rho - 1.0).abs() < 1e-14);
+        assert!(u.iter().all(|&x| x.abs() < 1e-14));
+    }
+}

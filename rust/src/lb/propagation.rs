@@ -1,0 +1,119 @@
+//! LB propagation (streaming): `h_i(x + c_i, t+1) = h_i(x, t)`.
+//!
+//! Implemented as a *pull* over the destination lattice with periodic
+//! wrap — equivalent to the roll-based push in the reference/JAX layer
+//! (`ref.stream`), as pinned by the parity tests.
+
+use crate::lattice::geometry::Geometry;
+use crate::lb::model::VelSet;
+use crate::targetdp::tlp::TlpPool;
+
+/// Stream `src` into `dst` (both `nvel * nsites`, SoA).
+#[allow(clippy::too_many_arguments)]
+pub fn stream(vs: &VelSet, geom: &Geometry, src: &[f64], dst: &mut [f64],
+              pool: &TlpPool, vvl: usize) {
+    let n = geom.nsites();
+    debug_assert_eq!(src.len(), vs.nvel * n);
+    debug_assert_eq!(dst.len(), vs.nvel * n);
+
+    let dst_ptr = SendPtr(dst.as_mut_ptr());
+    pool.for_chunks(n, vvl, |base, len| {
+        let dst = dst_ptr;
+        for s in base..base + len {
+            let (x, y, z) = geom.coords(s);
+            for i in 0..vs.nvel {
+                let c = vs.ci[i];
+                // pull: the value arriving at (x,y,z) left from x - c
+                let from = geom.neighbor(x, y, z, -c[0], -c[1], -c[2]);
+                unsafe {
+                    *dst.0.add(i * n + s) = src[i * n + from];
+                }
+            }
+        }
+    });
+}
+
+#[derive(Clone, Copy)]
+struct SendPtr(*mut f64);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lb::model::{d2q9, d3q19};
+
+    #[test]
+    fn rest_population_is_unmoved() {
+        let vs = d3q19();
+        let geom = Geometry::new(4, 3, 2);
+        let n = geom.nsites();
+        let src: Vec<f64> = (0..vs.nvel * n).map(|i| i as f64).collect();
+        let mut dst = vec![0.0; vs.nvel * n];
+        stream(vs, &geom, &src, &mut dst, &TlpPool::serial(), 8);
+        assert_eq!(&dst[..n], &src[..n], "i = 0 is the rest velocity");
+    }
+
+    #[test]
+    fn single_pulse_moves_by_c() {
+        let vs = d3q19();
+        let geom = Geometry::new(4, 4, 4);
+        let n = geom.nsites();
+        for i in 1..vs.nvel {
+            let mut src = vec![0.0; vs.nvel * n];
+            let origin = geom.index(1, 2, 3);
+            src[i * n + origin] = 1.0;
+            let mut dst = vec![0.0; vs.nvel * n];
+            stream(vs, &geom, &src, &mut dst, &TlpPool::serial(), 8);
+            let c = vs.ci[i];
+            let want = geom.neighbor(1, 2, 3, c[0], c[1], c[2]);
+            for s in 0..n {
+                let expect = if s == want { 1.0 } else { 0.0 };
+                assert_eq!(dst[i * n + s], expect, "i={i} s={s}");
+            }
+        }
+    }
+
+    #[test]
+    fn streaming_is_a_permutation() {
+        let vs = d2q9();
+        let geom = Geometry::new(5, 7, 1);
+        let n = geom.nsites();
+        let src: Vec<f64> = (0..vs.nvel * n).map(|i| (i * i) as f64).collect();
+        let mut dst = vec![0.0; vs.nvel * n];
+        stream(vs, &geom, &src, &mut dst, &TlpPool::serial(), 4);
+        for i in 0..vs.nvel {
+            let mut a: Vec<f64> = src[i * n..(i + 1) * n].to_vec();
+            let mut b: Vec<f64> = dst[i * n..(i + 1) * n].to_vec();
+            a.sort_by(f64::total_cmp);
+            b.sort_by(f64::total_cmp);
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn forward_backward_roundtrip() {
+        let vs = d3q19();
+        let geom = Geometry::new(3, 4, 5);
+        let n = geom.nsites();
+        let src: Vec<f64> = (0..vs.nvel * n).map(|i| i as f64 * 0.5).collect();
+        let mut fwd = vec![0.0; vs.nvel * n];
+        stream(vs, &geom, &src, &mut fwd, &TlpPool::serial(), 8);
+        // streaming with the opposite set = inverse permutation
+        let mut back = vec![0.0; vs.nvel * n];
+        let pool = TlpPool::serial();
+        pool.for_chunks(n, 8, |base, len| {
+            let _ = (base, len);
+        });
+        // build the reverse by pulling with +c (push)
+        for s in 0..n {
+            let (x, y, z) = geom.coords(s);
+            for i in 0..vs.nvel {
+                let c = vs.ci[i];
+                let from = geom.neighbor(x, y, z, c[0], c[1], c[2]);
+                back[i * n + s] = fwd[i * n + from];
+            }
+        }
+        assert_eq!(back, src);
+    }
+}

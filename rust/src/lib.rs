@@ -1,0 +1,48 @@
+//! # targetDP — lattice data parallelism with portable performance
+//!
+//! Reproduction of Gray & Stratford, *"targetDP: an Abstraction of Lattice
+//! Based Parallelism with Portable Performance"* (HPCC 2014) as a
+//! three-layer Rust + JAX + Pallas stack.
+//!
+//! The paper's C-preprocessor framework maps lattice-site parallelism onto
+//! **TLP** (thread-level) and **ILP** (instruction-level, via a tunable
+//! *virtual vector length*, VVL) for either SIMD multi-core CPUs or GPUs,
+//! behind a host/target memory model. Here:
+//!
+//! * [`targetdp`] — the programming layer itself: host/target memory
+//!   management (`targetMalloc`, `copyToTarget`, masked copies, constant
+//!   tables), the TLP chunk scheduler, VVL strip-mined ILP kernels, and the
+//!   [`targetdp::Target`] trait with three backends: *host-scalar* (the
+//!   paper's original-code analog), *host-SIMD* (VVL strip-mining for the
+//!   auto-vectorizer) and *XLA* (the accelerator analog: AOT-compiled
+//!   JAX/Pallas kernels executed through PJRT).
+//! * [`lattice`] — structured-grid substrate: geometry, SoA lattice fields,
+//!   halo masks, domain decomposition, VTK/CSV output.
+//! * [`lb`] — the motivating application: a binary-fluid lattice-Boltzmann
+//!   engine (D2Q9/D3Q19) whose *binary collision* kernel is the paper's
+//!   Figure-1 benchmark.
+//! * [`free_energy`] — symmetric (phi^4) free-energy sector: chemical
+//!   potential, thermodynamic pressure tensor, finite-difference gradients.
+//! * [`baseline`] — the "original Ludwig" comparator: AoS layout, model-
+//!   extent (19/3) innermost loops, compiler-found ILP.
+//! * [`runtime`] — PJRT client wrapper that loads `artifacts/*.hlo.txt`
+//!   (AOT-lowered by `python/compile/aot.py`) and executes them; Python is
+//!   never on the request path.
+//! * [`coordinator`] — configuration, the timestep pipeline, metrics.
+//!
+//! See `DESIGN.md` for the paper-to-system map and `EXPERIMENTS.md` for the
+//! reproduced results.
+
+pub mod baseline;
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod error;
+pub mod free_energy;
+pub mod lattice;
+pub mod lb;
+pub mod runtime;
+pub mod targetdp;
+pub mod util;
+
+pub use error::{Error, Result};

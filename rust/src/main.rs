@@ -1,0 +1,117 @@
+//! targetDP CLI: run simulations, inspect artifacts/targets.
+//!
+//! ```text
+//! targetdp run --config examples/spinodal.toml
+//! targetdp run --backend xla --lattice d3q19 --size 16 --steps 100
+//! targetdp info
+//! ```
+
+use std::process::ExitCode;
+
+use targetdp::config::{Config, OutputCfg, SimulationCfg, TargetCfg};
+use targetdp::coordinator::run_simulation;
+use targetdp::runtime::Runtime;
+use targetdp::util::cli::Args;
+
+const USAGE: &str = "\
+targetdp — lattice-based data parallelism with portable performance
+(reproduction of Gray & Stratford, HPCC 2014)
+
+USAGE:
+    targetdp run [--config FILE] [--backend B] [--lattice L] [--size N]
+                 [--steps K] [--vvl V] [--threads T] [--out DIR] [--vtk]
+    targetdp info
+    targetdp help
+
+run options (ignored when --config is given):
+    --backend   host-simd | host-scalar | xla     [host-simd]
+    --lattice   d3q19 | d2q9                      [d3q19]
+    --size      cubic extent (d2q9: size^2 x 1)   [16]
+    --steps     timesteps                         [100]
+    --vvl       virtual vector length             [8]
+    --threads   TLP threads (0 = autodetect)      [1]
+    --out       output directory for CSV/VTK      [none]
+    --vtk       dump a phi snapshot at the end
+";
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn run() -> targetdp::Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    match args.command.as_str() {
+        "run" => {
+            let cfg = match args.get("config") {
+                Some(path) => Config::from_file(std::path::Path::new(path))?,
+                None => {
+                    let lattice = args.str_or("lattice", "d3q19");
+                    let size = args.usize_or("size", 16)?;
+                    let lz = if lattice == "d2q9" { 1 } else { size };
+                    Config {
+                        simulation: SimulationCfg {
+                            lattice,
+                            lx: size,
+                            ly: size,
+                            lz,
+                            steps: args.u64_or("steps", 100)?,
+                            init: args.str_or("init", "spinodal"),
+                            noise: 0.05,
+                            seed: 1234,
+                            radius: size as f64 / 4.0,
+                        },
+                        target: TargetCfg {
+                            backend: args.str_or("backend", "host-simd"),
+                            vvl: args.usize_or("vvl", 8)?,
+                            threads: args.usize_or("threads", 1)?,
+                            ..Default::default()
+                        },
+                        free_energy: Default::default(),
+                        output: OutputCfg {
+                            every: args.u64_or("every", 50)?,
+                            dir: args.str_or("out", ""),
+                            vtk: args.has("vtk"),
+                        },
+                    }
+                }
+            };
+            run_simulation(&cfg)?;
+            Ok(())
+        }
+        "info" => {
+            println!("targetDP targets:");
+            println!("  host-scalar  per-site loops, compiler-found ILP");
+            println!("  host-simd    TLP x ILP (VVL strip-mining)");
+            println!("  xla          AOT JAX/Pallas via PJRT");
+            match Runtime::load(Runtime::default_dir()) {
+                Ok(rt) => {
+                    println!("\nPJRT platform: {}", rt.platform());
+                    println!("artifacts ({}):", rt.artifacts().len());
+                    for m in rt.artifacts() {
+                        println!(
+                            "  {:<42} kind={:<10} vvl_block={}",
+                            m.name, m.kind, m.vvl_block
+                        );
+                    }
+                }
+                Err(e) => println!(
+                    "\nno artifacts loaded ({e}); run `make artifacts`"
+                ),
+            }
+            Ok(())
+        }
+        "" | "help" | "--help" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => Err(targetdp::Error::Invalid(format!(
+            "unknown command {other:?}; try `targetdp help`"
+        ))),
+    }
+}

@@ -1,0 +1,140 @@
+//! PJRT execution engine: HLO-text artifacts -> compiled executables ->
+//! f64 in / f64 out, with an executable cache so each artifact is compiled
+//! exactly once per process (the paper's "one compiled executable per
+//! model variant").
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+
+use super::manifest::{self, ArtifactMeta};
+
+/// Owns the PJRT client, the manifest and the compile cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    metas: Vec<ArtifactMeta>,
+    compiled: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Load the manifest in `dir` and connect the PJRT CPU client.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let metas = manifest::load_manifest(&dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime { client, dir, metas, compiled: HashMap::new() })
+    }
+
+    /// Default artifact directory: `$TARGETDP_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("TARGETDP_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| {
+                Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+            })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifacts(&self) -> &[ArtifactMeta] {
+        &self.metas
+    }
+
+    /// First artifact satisfying `pred`.
+    pub fn find(&self, pred: impl Fn(&ArtifactMeta) -> bool)
+                -> Option<&ArtifactMeta> {
+        self.metas.iter().find(|m| pred(m))
+    }
+
+    /// Compile (or fetch from cache) the named artifact.
+    pub fn ensure_compiled(&mut self, name: &str) -> Result<()> {
+        if self.compiled.contains_key(name) {
+            return Ok(());
+        }
+        let meta = self
+            .metas
+            .iter()
+            .find(|m| m.name == name)
+            .ok_or_else(|| Error::Invalid(format!("unknown artifact {name}")))?;
+        let path = self.dir.join(&meta.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| {
+                Error::Invalid(format!("non-utf8 path {path:?}"))
+            })?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.compiled.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute artifact `name` with flat f64 inputs (shapes from the
+    /// manifest) and return the flat f64 outputs (tuple decomposed).
+    pub fn execute(&mut self, name: &str, inputs: &[&[f64]])
+                   -> Result<Vec<Vec<f64>>> {
+        self.ensure_compiled(name)?;
+        let meta = self
+            .metas
+            .iter()
+            .find(|m| m.name == name)
+            .expect("checked by ensure_compiled");
+
+        if inputs.len() != meta.inputs.len() {
+            return Err(Error::Invalid(format!(
+                "{name}: expected {} inputs, got {}",
+                meta.inputs.len(),
+                inputs.len()
+            )));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, spec) in inputs.iter().zip(&meta.inputs) {
+            if data.len() != spec.len() {
+                return Err(Error::Invalid(format!(
+                    "{name}: input size {} != manifest {:?}",
+                    data.len(),
+                    spec.shape
+                )));
+            }
+            let dims: Vec<i64> =
+                spec.shape.iter().map(|&d| d as i64).collect();
+            literals.push(xla::Literal::vec1(data).reshape(&dims)?);
+        }
+
+        let exe = self.compiled.get(name).expect("compiled above");
+        let result = exe.execute::<xla::Literal>(&literals)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: decompose and flatten
+        let parts = tuple.to_tuple()?;
+        if parts.len() != meta.outputs.len() {
+            return Err(Error::Xla(format!(
+                "{name}: executable returned {} outputs, manifest says {}",
+                parts.len(),
+                meta.outputs.len()
+            )));
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for part in parts {
+            out.push(part.to_vec::<f64>()?);
+        }
+        Ok(out)
+    }
+
+    /// Number of compiled executables held in the cache.
+    pub fn compiled_count(&self) -> usize {
+        self.compiled.len()
+    }
+}
+
+impl std::fmt::Debug for Runtime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Runtime")
+            .field("dir", &self.dir)
+            .field("artifacts", &self.metas.len())
+            .field("compiled", &self.compiled.len())
+            .finish()
+    }
+}

@@ -1,0 +1,226 @@
+//! `artifacts/manifest.json` — the contract between the AOT compile path
+//! and the Rust runtime: shapes, lattice, VVL block and the constant
+//! values baked into each executable.
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::free_energy::symmetric::FeParams;
+use crate::util::json::Json;
+
+/// Shape/dtype of one executable input or output.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct IoSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl IoSpec {
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn from_json(v: &Json) -> Result<IoSpec> {
+        let shape = v
+            .get("shape")
+            .as_array()?
+            .iter()
+            .map(Json::as_usize)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(IoSpec { shape, dtype: v.get("dtype").as_str()?.to_string() })
+    }
+}
+
+/// One AOT artifact as described by the manifest.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    /// collision | full_step | multi_step | gradient | scale
+    pub kind: String,
+    pub lattice: Option<String>,
+    pub vvl_block: usize,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+    pub n_sites: Option<usize>,
+    pub nvel: Option<usize>,
+    pub grid: Option<Vec<usize>>,
+    /// Timesteps fused into one launch (multi_step artifacts).
+    pub steps: Option<u64>,
+    /// Free-energy constants baked into the executable at AOT time.
+    pub params: Option<FeParams>,
+    /// Scale factor baked into `scale` artifacts.
+    pub a: Option<f64>,
+}
+
+impl ArtifactMeta {
+    fn from_json(v: &Json) -> Result<ArtifactMeta> {
+        let io = |key: &str| -> Result<Vec<IoSpec>> {
+            v.get(key)
+                .as_array()?
+                .iter()
+                .map(IoSpec::from_json)
+                .collect()
+        };
+        let opt_usize = |key: &str| -> Result<Option<usize>> {
+            let f = v.get(key);
+            if f.is_null() { Ok(None) } else { Ok(Some(f.as_usize()?)) }
+        };
+        let params = {
+            let p = v.get("params");
+            if p.is_null() {
+                None
+            } else {
+                Some(FeParams {
+                    a: p.get("a").as_f64()?,
+                    b: p.get("b").as_f64()?,
+                    kappa: p.get("kappa").as_f64()?,
+                    gamma: p.get("gamma").as_f64()?,
+                    tau_f: p.get("tau_f").as_f64()?,
+                    tau_g: p.get("tau_g").as_f64()?,
+                })
+            }
+        };
+        Ok(ArtifactMeta {
+            name: v.get("name").as_str()?.to_string(),
+            file: v.get("file").as_str()?.to_string(),
+            kind: v.get("kind").as_str()?.to_string(),
+            lattice: if v.get("lattice").is_null() {
+                None
+            } else {
+                Some(v.get("lattice").as_str()?.to_string())
+            },
+            vvl_block: v.get("vvl_block").as_usize().unwrap_or(0),
+            inputs: io("inputs")?,
+            outputs: io("outputs")?,
+            n_sites: opt_usize("n_sites")?,
+            nvel: opt_usize("nvel")?,
+            grid: if v.get("grid").is_null() {
+                None
+            } else {
+                Some(
+                    v.get("grid")
+                        .as_array()?
+                        .iter()
+                        .map(Json::as_usize)
+                        .collect::<Result<Vec<_>>>()?,
+                )
+            },
+            steps: opt_usize("steps")?.map(|s| s as u64),
+            params,
+            a: if v.get("a").is_null() {
+                None
+            } else {
+                Some(v.get("a").as_f64()?)
+            },
+        })
+    }
+
+    /// Whether this artifact serves `(kind, lattice, grid)`.
+    pub fn matches_grid(&self, kind: &str, lattice: &str,
+                        grid: &[usize]) -> bool {
+        self.kind == kind
+            && self.lattice.as_deref() == Some(lattice)
+            && self.grid.as_deref() == Some(grid)
+    }
+
+    /// Whether this artifact serves a flat-`n` kernel `(kind, lattice, n)`.
+    pub fn matches_flat(&self, kind: &str, lattice: &str, n: usize) -> bool {
+        self.kind == kind
+            && self.lattice.as_deref() == Some(lattice)
+            && self.n_sites == Some(n)
+    }
+}
+
+/// Load and parse the manifest in `dir`.
+pub fn load_manifest(dir: &Path) -> Result<Vec<ArtifactMeta>> {
+    let path = dir.join("manifest.json");
+    let text = std::fs::read_to_string(&path).map_err(|e| {
+        Error::Parse(format!(
+            "cannot read {}: {e}; run `make artifacts`",
+            path.display()
+        ))
+    })?;
+    Json::parse(&text)?
+        .as_array()?
+        .iter()
+        .map(ArtifactMeta::from_json)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"[
+      {"name": "collision_d3q19_n4096_vvl256", "file": "c.hlo.txt",
+       "kind": "collision", "lattice": "d3q19", "vvl_block": 256,
+       "inputs": [{"shape": [19, 4096], "dtype": "f64"},
+                  {"shape": [19, 4096], "dtype": "f64"},
+                  {"shape": [3, 4096], "dtype": "f64"},
+                  {"shape": [4096], "dtype": "f64"}],
+       "outputs": [{"shape": [19, 4096], "dtype": "f64"},
+                   {"shape": [19, 4096], "dtype": "f64"}],
+       "n_sites": 4096, "nvel": 19,
+       "params": {"a": -0.0625, "b": 0.0625, "kappa": 0.04,
+                  "gamma": 1.0, "tau_f": 1.0, "tau_g": 0.8}},
+      {"name": "gradient_16x16x16", "file": "g.hlo.txt",
+       "kind": "gradient", "lattice": null, "vvl_block": 0,
+       "inputs": [{"shape": [16, 16, 16], "dtype": "f64"}],
+       "outputs": [{"shape": [3, 16, 16, 16], "dtype": "f64"},
+                   {"shape": [16, 16, 16], "dtype": "f64"}],
+       "grid": [16, 16, 16], "n_sites": 4096}
+    ]"#;
+
+    fn parse_sample() -> Vec<ArtifactMeta> {
+        Json::parse(SAMPLE)
+            .unwrap()
+            .as_array()
+            .unwrap()
+            .iter()
+            .map(ArtifactMeta::from_json)
+            .map(|r| r.unwrap())
+            .collect()
+    }
+
+    #[test]
+    fn parses_sample() {
+        let metas = parse_sample();
+        assert_eq!(metas.len(), 2);
+        let c = &metas[0];
+        assert!(c.matches_flat("collision", "d3q19", 4096));
+        assert!(!c.matches_flat("collision", "d2q9", 4096));
+        assert_eq!(c.inputs[0].len(), 19 * 4096);
+        assert_eq!(c.params.unwrap().tau_g, 0.8);
+        let g = &metas[1];
+        assert!(g.lattice.is_none());
+        assert_eq!(g.grid.as_deref(), Some(&[16, 16, 16][..]));
+        assert!(g.matches_grid("gradient", "x", &[16, 16, 16]) == false);
+    }
+
+    #[test]
+    fn real_manifest_parses_if_present() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let metas = load_manifest(&dir).unwrap();
+            assert!(!metas.is_empty());
+            assert!(metas.iter().any(|m| m.kind == "collision"));
+            // every entry's file exists
+            for m in &metas {
+                assert!(dir.join(&m.file).exists(), "{} missing", m.file);
+            }
+        }
+    }
+
+    #[test]
+    fn missing_manifest_is_helpful() {
+        let err = load_manifest(std::path::Path::new("/nonexistent"))
+            .unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

@@ -1,0 +1,10 @@
+//! The AOT runtime: loads `artifacts/*.hlo.txt` (lowered once by
+//! `python/compile/aot.py`) and executes them on the PJRT CPU client.
+//! Python is never on this path — the Rust binary is self-contained once
+//! the artifacts exist.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::Runtime;
+pub use manifest::{ArtifactMeta, IoSpec};

@@ -1,0 +1,136 @@
+//! Target constant memory: the `TARGET_CONST` / `copyConstant<X>ToTarget`
+//! analog (paper section III-B).
+//!
+//! Lattice operations use small read-only parameters (relaxation times,
+//! free-energy coefficients, scale factors). The paper keeps host and
+//! target copies and provides a family of typed copy functions
+//! (`copyConstantDoubleToTarget`, `copyConstantInt...`, `...1DArray...`);
+//! the CUDA implementation maps them to `__constant__` memory, the C one
+//! to plain `memcpy`. Here each target owns a [`ConstantTable`] that
+//! kernels read at launch time; for the XLA target the constants are baked
+//! into the HLO at AOT time and the table is used for *validation* (the
+//! launch refuses to run if the table disagrees with the artifact's baked
+//! values — catching exactly the host/target desynchronisation bug class
+//! the paper's API prevents).
+
+use std::collections::HashMap;
+
+use crate::error::{Error, Result};
+
+/// A typed constant, mirroring the paper's `copyConstant<X>ToTarget` family.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Constant {
+    Double(f64),
+    Int(i64),
+    Double1DArray(Vec<f64>),
+}
+
+impl Constant {
+    pub fn as_double(&self) -> Result<f64> {
+        match self {
+            Constant::Double(v) => Ok(*v),
+            other => Err(Error::Invalid(format!(
+                "constant is {other:?}, expected Double"
+            ))),
+        }
+    }
+
+    pub fn as_int(&self) -> Result<i64> {
+        match self {
+            Constant::Int(v) => Ok(*v),
+            other => Err(Error::Invalid(format!(
+                "constant is {other:?}, expected Int"
+            ))),
+        }
+    }
+
+    pub fn as_array(&self) -> Result<&[f64]> {
+        match self {
+            Constant::Double1DArray(v) => Ok(v),
+            other => Err(Error::Invalid(format!(
+                "constant is {other:?}, expected Double1DArray"
+            ))),
+        }
+    }
+}
+
+/// Per-target table of named constants.
+#[derive(Debug, Default, Clone)]
+pub struct ConstantTable {
+    values: HashMap<String, Constant>,
+}
+
+impl ConstantTable {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// `copyConstant<X>ToTarget`.
+    pub fn set(&mut self, name: impl Into<String>, value: Constant) {
+        self.values.insert(name.into(), value);
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Constant> {
+        self.values
+            .get(name)
+            .ok_or_else(|| Error::Invalid(format!("constant {name:?} not set")))
+    }
+
+    pub fn get_double(&self, name: &str) -> Result<f64> {
+        self.get(name)?.as_double()
+    }
+
+    pub fn get_int(&self, name: &str) -> Result<i64> {
+        self.get(name)?.as_int()
+    }
+
+    pub fn get_array(&self, name: &str) -> Result<&[f64]> {
+        self.get(name)?.as_array()
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.values.contains_key(name)
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn typed_roundtrip() {
+        let mut t = ConstantTable::new();
+        t.set("a", Constant::Double(1.5));
+        t.set("n", Constant::Int(7));
+        t.set("w", Constant::Double1DArray(vec![0.5, 0.25]));
+        assert_eq!(t.get_double("a").unwrap(), 1.5);
+        assert_eq!(t.get_int("n").unwrap(), 7);
+        assert_eq!(t.get_array("w").unwrap(), &[0.5, 0.25]);
+    }
+
+    #[test]
+    fn missing_and_wrong_type_errors() {
+        let mut t = ConstantTable::new();
+        t.set("a", Constant::Double(1.0));
+        assert!(t.get_double("b").is_err());
+        assert!(t.get_int("a").is_err());
+        assert!(t.get_array("a").is_err());
+    }
+
+    #[test]
+    fn overwrite_updates() {
+        let mut t = ConstantTable::new();
+        t.set("a", Constant::Double(1.0));
+        t.set("a", Constant::Double(2.0));
+        assert_eq!(t.get_double("a").unwrap(), 2.0);
+        assert_eq!(t.len(), 1);
+    }
+}

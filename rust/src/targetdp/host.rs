@@ -1,0 +1,362 @@
+//! Host CPU backends: the paper's C/OpenMP implementation of targetDP.
+//!
+//! Two modes of the same backend:
+//!
+//! * [`HostMode::Scalar`] — kernels run site-at-a-time; the compiler is
+//!   left to discover ILP (the paper's pre-targetDP structure, but on SoA
+//!   data; the AoS "original" lives in [`crate::baseline`]).
+//! * [`HostMode::Simd`] — the targetDP execution model: `TARGET_TLP`
+//!   strip-mines the site loop into VVL chunks distributed over threads
+//!   ([`TlpPool`]), and `TARGET_ILP` lane loops of compile-time extent VVL
+//!   run inside each chunk ([`crate::dispatch_vvl!`]).
+//!
+//! Host and target memory are distinct allocations even though both live
+//! in DRAM — the paper keeps the same distinction for the CPU target
+//! (section III-A), which is what lets the identical application code also
+//! drive the XLA backend.
+
+use crate::error::{Error, Result};
+use crate::free_energy::gradient::gradient_fd;
+use crate::free_energy::symmetric::FeParams;
+use crate::lb::collision::collide_lattice;
+use crate::lb::moments::phi_from_g;
+use crate::lb::propagation::stream;
+
+use super::constant::{Constant, ConstantTable};
+use super::ilp;
+use super::masked;
+use super::memory::{BufId, FieldDesc, HostPool};
+use super::target::{KernelId, LaunchArgs, Target, TargetKind};
+use super::tlp::TlpPool;
+
+/// Execution mode of the host backend.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HostMode {
+    /// Per-site loops, compiler-found ILP.
+    Scalar,
+    /// VVL strip-mined lane kernels (the targetDP model).
+    Simd,
+}
+
+/// Host CPU target.
+pub struct HostTarget {
+    mode: HostMode,
+    vvl: usize,
+    pool: TlpPool,
+    bufs: HostPool,
+    constants: ConstantTable,
+}
+
+impl HostTarget {
+    /// targetDP SIMD mode with the given VVL (must be in
+    /// [`ilp::SUPPORTED_VVL`]) and TLP pool.
+    pub fn simd(vvl: usize, pool: TlpPool) -> Result<Self> {
+        if !ilp::is_supported(vvl) {
+            return Err(Error::Invalid(format!(
+                "VVL {vvl} unsupported; pick one of {:?}",
+                ilp::SUPPORTED_VVL
+            )));
+        }
+        Ok(HostTarget {
+            mode: HostMode::Simd,
+            vvl,
+            pool,
+            bufs: HostPool::new(),
+            constants: ConstantTable::new(),
+        })
+    }
+
+    /// Scalar mode (site loops; chunking still used for TLP decomposition).
+    pub fn scalar(pool: TlpPool) -> Self {
+        HostTarget {
+            mode: HostMode::Scalar,
+            vvl: 32, // TLP chunk granularity only; no lane kernels
+            pool,
+            bufs: HostPool::new(),
+            constants: ConstantTable::new(),
+        }
+    }
+
+    /// Serial SIMD target with the paper's optimal CPU VVL (8).
+    pub fn default_simd() -> Self {
+        Self::simd(8, TlpPool::serial()).expect("8 is a supported VVL")
+    }
+
+    pub fn vvl(&self) -> usize {
+        self.vvl
+    }
+
+    pub fn mode(&self) -> HostMode {
+        self.mode
+    }
+
+    /// Free-energy parameters from the constant table (set by the engine
+    /// via `copyConstant*ToTarget`; defaults if unset).
+    fn fe_params(&self) -> FeParams {
+        let d = FeParams::default();
+        FeParams {
+            a: self.constants.get_double("fe_a").unwrap_or(d.a),
+            b: self.constants.get_double("fe_b").unwrap_or(d.b),
+            kappa: self.constants.get_double("fe_kappa").unwrap_or(d.kappa),
+            gamma: self.constants.get_double("fe_gamma").unwrap_or(d.gamma),
+            tau_f: self.constants.get_double("tau_f").unwrap_or(d.tau_f),
+            tau_g: self.constants.get_double("tau_g").unwrap_or(d.tau_g),
+        }
+    }
+}
+
+impl Target for HostTarget {
+    fn kind(&self) -> TargetKind {
+        match self.mode {
+            HostMode::Scalar => TargetKind::HostScalar,
+            HostMode::Simd => TargetKind::HostSimd,
+        }
+    }
+
+    fn describe(&self) -> String {
+        match self.mode {
+            HostMode::Scalar => {
+                format!("host-scalar(threads={})", self.pool.nthreads)
+            }
+            HostMode::Simd => format!(
+                "host-simd(vvl={},threads={})",
+                self.vvl, self.pool.nthreads
+            ),
+        }
+    }
+
+    fn malloc(&mut self, desc: &FieldDesc) -> Result<BufId> {
+        Ok(self.bufs.malloc(desc))
+    }
+
+    fn free(&mut self, id: BufId) -> Result<()> {
+        self.bufs.free(id);
+        Ok(())
+    }
+
+    fn copy_to_target(&mut self, id: BufId, host: &[f64]) -> Result<()> {
+        self.bufs.copy_in(id, host)
+    }
+
+    fn copy_from_target(&mut self, id: BufId, host: &mut [f64]) -> Result<()> {
+        self.bufs.copy_out(id, host)
+    }
+
+    fn copy_to_target_masked(&mut self, id: BufId, host: &[f64],
+                             mask: &[bool]) -> Result<()> {
+        let buf = self.bufs.get_mut(id)?;
+        let (ncomp, nsites) = (buf.desc.ncomp, buf.desc.nsites);
+        if host.len() != buf.data.len() || mask.len() != nsites {
+            return Err(Error::Invalid(format!(
+                "masked copyToTarget size mismatch for {}", buf.desc.name
+            )));
+        }
+        masked::copy_masked_direct(&mut buf.data, host, nsites, ncomp, mask);
+        Ok(())
+    }
+
+    fn copy_from_target_masked(&mut self, id: BufId, host: &mut [f64],
+                               mask: &[bool]) -> Result<()> {
+        let buf = self.bufs.get(id)?;
+        let (ncomp, nsites) = (buf.desc.ncomp, buf.desc.nsites);
+        if host.len() != buf.data.len() || mask.len() != nsites {
+            return Err(Error::Invalid(format!(
+                "masked copyFromTarget size mismatch for {}", buf.desc.name
+            )));
+        }
+        masked::copy_masked_direct(host, &buf.data, nsites, ncomp, mask);
+        Ok(())
+    }
+
+    fn copy_constant(&mut self, name: &str, value: Constant) -> Result<()> {
+        self.constants.set(name, value);
+        Ok(())
+    }
+
+    fn supports(&self, kernel: KernelId) -> bool {
+        !matches!(kernel, KernelId::FullStep | KernelId::MultiStep)
+    }
+
+    fn launch(&mut self, kernel: KernelId, args: &LaunchArgs) -> Result<()> {
+        let vs = args.model.velset();
+        let scalar = self.mode == HostMode::Scalar;
+        match kernel {
+            KernelId::Scale => {
+                let a = self.constants.get_double("scale_a")?;
+                let buf = self.bufs.get_mut(args.buf("field")?)?;
+                let (ncomp, nsites) = (buf.desc.ncomp, buf.desc.nsites);
+                let data = SendMut(buf.data.as_mut_ptr(), buf.data.len());
+                self.pool.for_chunks(nsites, self.vvl, |base, len| {
+                    let data = data; // capture the Send+Sync wrapper whole
+                    let data =
+                        unsafe { std::slice::from_raw_parts_mut(data.0, data.1) };
+                    for c in 0..ncomp {
+                        let row = &mut data[c * nsites..(c + 1) * nsites];
+                        for v in row[base..base + len].iter_mut() {
+                            *v *= a;
+                        }
+                    }
+                });
+                Ok(())
+            }
+            KernelId::PhiMoment => {
+                let g = self.bufs.take(args.buf("g")?)?;
+                let mut phi = self.bufs.take(args.buf("phi")?)?;
+                let n = phi.desc.nsites;
+                phi_from_g(vs, &g.data, &mut phi.data, n, &self.pool,
+                           self.vvl);
+                self.bufs.restore(args.buf("g")?, g);
+                self.bufs.restore(args.buf("phi")?, phi);
+                Ok(())
+            }
+            KernelId::Gradient => {
+                let phi = self.bufs.take(args.buf("phi")?)?;
+                let mut grad = self.bufs.take(args.buf("grad")?)?;
+                let mut lap = self.bufs.take(args.buf("lap")?)?;
+                gradient_fd(&args.geometry, &phi.data, &mut grad.data,
+                            &mut lap.data, &self.pool, self.vvl);
+                self.bufs.restore(args.buf("phi")?, phi);
+                self.bufs.restore(args.buf("grad")?, grad);
+                self.bufs.restore(args.buf("lap")?, lap);
+                Ok(())
+            }
+            KernelId::BinaryCollision => {
+                let p = self.fe_params();
+                let mut f = self.bufs.take(args.buf("f")?)?;
+                let mut g = self.bufs.take(args.buf("g")?)?;
+                let grad = self.bufs.take(args.buf("grad")?)?;
+                let lap = self.bufs.take(args.buf("lap")?)?;
+                let n = lap.desc.nsites;
+                collide_lattice(vs, &p, &mut f.data, &mut g.data, &grad.data,
+                                &lap.data, n, &self.pool, self.vvl, scalar);
+                self.bufs.restore(args.buf("f")?, f);
+                self.bufs.restore(args.buf("g")?, g);
+                self.bufs.restore(args.buf("grad")?, grad);
+                self.bufs.restore(args.buf("lap")?, lap);
+                Ok(())
+            }
+            KernelId::Stream => {
+                let src = self.bufs.take(args.buf("src")?)?;
+                let mut dst = self.bufs.take(args.buf("dst")?)?;
+                stream(vs, &args.geometry, &src.data, &mut dst.data,
+                       &self.pool, self.vvl);
+                self.bufs.restore(args.buf("src")?, src);
+                self.bufs.restore(args.buf("dst")?, dst);
+                Ok(())
+            }
+            KernelId::ReduceSum => {
+                let field = self.bufs.take(args.buf("field")?)?;
+                let mut result = self.bufs.take(args.buf("result")?)?;
+                let (ncomp, nsites) =
+                    (field.desc.ncomp, field.desc.nsites);
+                if result.desc.len() != ncomp {
+                    let e = Error::Invalid(format!(
+                        "reduce_sum result buffer has {} elements, field \
+                         has {ncomp} components",
+                        result.desc.len()
+                    ));
+                    self.bufs.restore(args.buf("field")?, field);
+                    self.bufs.restore(args.buf("result")?, result);
+                    return Err(e);
+                }
+                super::reduce::reduce_sum(&field.data, ncomp, nsites,
+                                          &self.pool, self.vvl,
+                                          &mut result.data);
+                self.bufs.restore(args.buf("field")?, field);
+                self.bufs.restore(args.buf("result")?, result);
+                Ok(())
+            }
+            KernelId::FullStep | KernelId::MultiStep => {
+                Err(Error::UnsupportedKernel {
+                    target: self.describe(),
+                    kernel: kernel.name().into(),
+                })
+            }
+        }
+    }
+
+    fn sync(&mut self) -> Result<()> {
+        // host launches are synchronous (the paper's C syncTarget no-op)
+        Ok(())
+    }
+}
+
+#[derive(Clone, Copy)]
+struct SendMut(*mut f64, usize);
+unsafe impl Send for SendMut {}
+unsafe impl Sync for SendMut {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lattice::geometry::Geometry;
+    use crate::lb::model::LatticeModel;
+
+    fn scale_args(field: BufId) -> LaunchArgs {
+        LaunchArgs::new(Geometry::new(4, 4, 4), LatticeModel::D3Q19)
+            .bind("field", field)
+    }
+
+    #[test]
+    fn scale_kernel_paper_example() {
+        // the paper's section III running example end to end
+        for target in [&mut HostTarget::scalar(TlpPool::serial()),
+                       &mut HostTarget::default_simd()] {
+            let n = 64;
+            let desc = FieldDesc::new("field", 3, n);
+            let host: Vec<f64> = (0..3 * n).map(|i| i as f64).collect();
+
+            let t_field = target.malloc(&desc).unwrap();
+            target.copy_to_target(t_field, &host).unwrap();
+            target
+                .copy_constant("scale_a", Constant::Double(1.5))
+                .unwrap();
+            target.launch(KernelId::Scale, &scale_args(t_field)).unwrap();
+            target.sync().unwrap();
+
+            let mut out = vec![0.0; 3 * n];
+            target.copy_from_target(t_field, &mut out).unwrap();
+            target.free(t_field).unwrap();
+            for (i, v) in out.iter().enumerate() {
+                assert_eq!(*v, 1.5 * i as f64);
+            }
+        }
+    }
+
+    #[test]
+    fn scale_requires_constant() {
+        let mut t = HostTarget::default_simd();
+        let id = t.malloc(&FieldDesc::new("field", 3, 8)).unwrap();
+        assert!(t.launch(KernelId::Scale, &scale_args(id)).is_err());
+    }
+
+    #[test]
+    fn masked_copies_only_touch_selected_sites() {
+        let mut t = HostTarget::default_simd();
+        let n = 8;
+        let id = t.malloc(&FieldDesc::new("x", 2, n)).unwrap();
+        let host: Vec<f64> = (0..2 * n).map(|i| i as f64).collect();
+        let mask: Vec<bool> = (0..n).map(|s| s % 2 == 0).collect();
+        t.copy_to_target_masked(id, &host, &mask).unwrap();
+        let mut out = vec![0.0; 2 * n];
+        t.copy_from_target(id, &mut out).unwrap();
+        for c in 0..2 {
+            for s in 0..n {
+                let want = if mask[s] { host[c * n + s] } else { 0.0 };
+                assert_eq!(out[c * n + s], want);
+            }
+        }
+    }
+
+    #[test]
+    fn unsupported_vvl_rejected() {
+        assert!(HostTarget::simd(3, TlpPool::serial()).is_err());
+    }
+
+    #[test]
+    fn fused_kernels_unsupported() {
+        let t = HostTarget::default_simd();
+        assert!(!t.supports(KernelId::FullStep));
+        assert!(t.supports(KernelId::BinaryCollision));
+    }
+}

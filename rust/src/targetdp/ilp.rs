@@ -1,0 +1,109 @@
+//! Instruction-level parallelism: the `TARGET_ILP` analog.
+//!
+//! The paper's `TARGET_ILP(vecIndex)` expands to a fixed-extent loop
+//!
+//! ```c
+//! for (vecIndex = 0; vecIndex < VVL; vecIndex++)
+//! ```
+//!
+//! over the chunk of VVL consecutive lattice sites owned by the current
+//! thread; because the extent is a compile-time constant and SoA data makes
+//! the accesses contiguous, the compiler maps the loop onto SIMD lanes.
+//!
+//! In Rust the compile-time VVL is a **const generic**: kernels are written
+//! as `fn chunk<const VVL: usize>(...)` with `for v in 0..VVL` innermost
+//! loops over `[f64; VVL]` lane arrays, and [`dispatch_vvl!`] selects the
+//! monomorphised instance from the runtime `vvl` value — the same
+//! "edit VVL in the header" tunability, without rebuilding.
+
+/// VVL values for which kernels are monomorphised. Mirrors the paper's
+/// sweep: 1 (no ILP) up to 32 (m*AVX-width for m = 1..8 at f64).
+pub const SUPPORTED_VVL: &[usize] = &[1, 2, 4, 8, 16, 32];
+
+/// True if [`dispatch_vvl!`] can dispatch this VVL.
+pub fn is_supported(vvl: usize) -> bool {
+    SUPPORTED_VVL.contains(&vvl)
+}
+
+/// Dispatch `$body::<VVL>($($args),*)` for a runtime `vvl` value.
+///
+/// Panics on unsupported VVL — callers validate with [`is_supported`]
+/// (the paper equivalent is a compile error when VVL is edited wrongly).
+#[macro_export]
+macro_rules! dispatch_vvl {
+    ($vvl:expr, $body:ident ( $($args:expr),* $(,)? )) => {
+        match $vvl {
+            1 => $body::<1>($($args),*),
+            2 => $body::<2>($($args),*),
+            4 => $body::<4>($($args),*),
+            8 => $body::<8>($($args),*),
+            16 => $body::<16>($($args),*),
+            32 => $body::<32>($($args),*),
+            other => panic!(
+                "unsupported VVL {other}; supported: {:?}",
+                $crate::targetdp::ilp::SUPPORTED_VVL
+            ),
+        }
+    };
+}
+
+/// Lane-wise helpers for chunk kernels. A "lane array" is `[f64; VVL]`
+/// holding one scalar quantity for each site of the chunk.
+pub mod lanes {
+    /// Load VVL contiguous values from an SoA row starting at `base`.
+    /// For a short tail (`len < VVL`) missing lanes are filled with `fill`.
+    #[inline(always)]
+    pub fn load<const VVL: usize>(row: &[f64], base: usize, len: usize,
+                                  fill: f64) -> [f64; VVL] {
+        let mut out = [fill; VVL];
+        out[..len].copy_from_slice(&row[base..base + len]);
+        out
+    }
+
+    /// Store the first `len` lanes back to an SoA row at `base`.
+    #[inline(always)]
+    pub fn store<const VVL: usize>(row: &mut [f64], base: usize, len: usize,
+                                   vals: &[f64; VVL]) {
+        row[base..base + len].copy_from_slice(&vals[..len]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sum_chunk<const VVL: usize>(x: &[f64]) -> f64 {
+        let mut acc = [0.0; VVL];
+        for (i, v) in x.iter().enumerate() {
+            acc[i % VVL] += v;
+        }
+        acc.iter().sum()
+    }
+
+    #[test]
+    fn dispatch_selects_width() {
+        let x: Vec<f64> = (0..64).map(|i| i as f64).collect();
+        for &vvl in SUPPORTED_VVL {
+            let s = dispatch_vvl!(vvl, sum_chunk(&x));
+            assert_eq!(s, 2016.0);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "unsupported VVL 3")]
+    fn dispatch_rejects_unsupported() {
+        let x = [0.0; 4];
+        let _ = dispatch_vvl!(3, sum_chunk(&x));
+    }
+
+    #[test]
+    fn lane_load_store_with_tail() {
+        let row: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let v = lanes::load::<4>(&row, 8, 2, 99.0);
+        assert_eq!(v, [8.0, 9.0, 99.0, 99.0]);
+        let mut out = vec![0.0; 10];
+        lanes::store::<4>(&mut out, 8, 2, &v);
+        assert_eq!(&out[8..], &[8.0, 9.0]);
+        assert!(out[..8].iter().all(|&x| x == 0.0));
+    }
+}

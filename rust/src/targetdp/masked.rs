@@ -1,0 +1,128 @@
+//! Masked host<->target copies (paper section III-B).
+//!
+//! `copyToTargetMasked` / `copyFromTargetMasked` take a boolean mask over
+//! the `nsites` lattice sites and transfer only the selected sites. The
+//! CUDA implementation packs the selected sites into a scratch structure on
+//! the device, moves the packed data, and unpacks on the other side; the C
+//! implementation does the same with loops. Both shapes are reproduced
+//! here: [`pack`] / [`unpack`] are the scratch-structure route (used by the
+//! XLA target, where the transfer itself is the expensive step) and
+//! [`copy_masked_direct`] is the loop route (used by the host targets).
+//!
+//! Masks follow the paper's convention: one flag per *site*; all `ncomp`
+//! SoA components of a selected site are transferred.
+
+/// Indices of the selected sites (the packed layout order).
+pub fn mask_indices(mask: &[bool]) -> Vec<usize> {
+    mask.iter()
+        .enumerate()
+        .filter_map(|(i, &m)| m.then_some(i))
+        .collect()
+}
+
+/// Pack the masked sites of an SoA field into a dense scratch buffer.
+///
+/// `src` has `ncomp * nsites` elements; the result has
+/// `ncomp * indices.len()` elements, still SoA (component-major).
+pub fn pack(src: &[f64], nsites: usize, ncomp: usize,
+            indices: &[usize]) -> Vec<f64> {
+    debug_assert_eq!(src.len(), ncomp * nsites);
+    let nsel = indices.len();
+    let mut out = vec![0.0; ncomp * nsel];
+    for c in 0..ncomp {
+        let row = &src[c * nsites..(c + 1) * nsites];
+        let orow = &mut out[c * nsel..(c + 1) * nsel];
+        for (k, &s) in indices.iter().enumerate() {
+            orow[k] = row[s];
+        }
+    }
+    out
+}
+
+/// Unpack a dense scratch buffer back into the masked sites of `dst`.
+pub fn unpack(dst: &mut [f64], nsites: usize, ncomp: usize,
+              indices: &[usize], packed: &[f64]) {
+    debug_assert_eq!(dst.len(), ncomp * nsites);
+    debug_assert_eq!(packed.len(), ncomp * indices.len());
+    let nsel = indices.len();
+    for c in 0..ncomp {
+        let row = &mut dst[c * nsites..(c + 1) * nsites];
+        let prow = &packed[c * nsel..(c + 1) * nsel];
+        for (k, &s) in indices.iter().enumerate() {
+            row[s] = prow[k];
+        }
+    }
+}
+
+/// Loop-based masked copy (the paper's C implementation): copy the selected
+/// sites of `src` into `dst` in place, both full SoA fields.
+pub fn copy_masked_direct(dst: &mut [f64], src: &[f64], nsites: usize,
+                          ncomp: usize, mask: &[bool]) {
+    debug_assert_eq!(src.len(), ncomp * nsites);
+    debug_assert_eq!(dst.len(), ncomp * nsites);
+    debug_assert_eq!(mask.len(), nsites);
+    for c in 0..ncomp {
+        let off = c * nsites;
+        for s in 0..nsites {
+            if mask[s] {
+                dst[off + s] = src[off + s];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn field(ncomp: usize, nsites: usize) -> Vec<f64> {
+        (0..ncomp * nsites).map(|i| i as f64).collect()
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let nsites = 10;
+        let ncomp = 3;
+        let src = field(ncomp, nsites);
+        let mask: Vec<bool> = (0..nsites).map(|i| i % 3 == 0).collect();
+        let idx = mask_indices(&mask);
+        let packed = pack(&src, nsites, ncomp, &idx);
+        assert_eq!(packed.len(), ncomp * idx.len());
+
+        let mut dst = vec![-1.0; ncomp * nsites];
+        unpack(&mut dst, nsites, ncomp, &idx, &packed);
+        for c in 0..ncomp {
+            for s in 0..nsites {
+                let want = if mask[s] { src[c * nsites + s] } else { -1.0 };
+                assert_eq!(dst[c * nsites + s], want);
+            }
+        }
+    }
+
+    #[test]
+    fn direct_equals_pack_route() {
+        let nsites = 17;
+        let ncomp = 19;
+        let src = field(ncomp, nsites);
+        let mask: Vec<bool> = (0..nsites).map(|i| i % 2 == 1).collect();
+
+        let mut via_direct = vec![0.0; ncomp * nsites];
+        copy_masked_direct(&mut via_direct, &src, nsites, ncomp, &mask);
+
+        let idx = mask_indices(&mask);
+        let packed = pack(&src, nsites, ncomp, &idx);
+        let mut via_pack = vec![0.0; ncomp * nsites];
+        unpack(&mut via_pack, nsites, ncomp, &idx, &packed);
+
+        assert_eq!(via_direct, via_pack);
+    }
+
+    #[test]
+    fn empty_and_full_masks() {
+        let src = field(2, 5);
+        let idx_none = mask_indices(&[false; 5]);
+        assert!(pack(&src, 5, 2, &idx_none).is_empty());
+        let idx_all = mask_indices(&[true; 5]);
+        assert_eq!(pack(&src, 5, 2, &idx_all), src);
+    }
+}

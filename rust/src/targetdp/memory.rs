@@ -1,0 +1,192 @@
+//! Host-side buffer pool: the `targetMalloc`/`targetFree` substrate.
+//!
+//! Lattice fields are stored **SoA** (structure of arrays): component `c`
+//! of site `s` lives at `data[c * nsites + s]`, so a VVL-chunk of
+//! consecutive sites is a contiguous vector lane (paper section III-B).
+
+use crate::error::{Error, Result};
+
+/// Opaque handle to a target-resident buffer (the `t_field` pointer analog).
+pub type BufId = usize;
+
+/// Shape of a lattice field buffer: `ncomp` SoA components over `nsites`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FieldDesc {
+    /// Human-readable name (diagnostics only).
+    pub name: String,
+    /// Number of per-site values (e.g. 3 for a velocity field, 19 for f).
+    pub ncomp: usize,
+    /// Number of lattice sites covered by the buffer.
+    pub nsites: usize,
+}
+
+impl FieldDesc {
+    pub fn new(name: impl Into<String>, ncomp: usize, nsites: usize) -> Self {
+        FieldDesc { name: name.into(), ncomp, nsites }
+    }
+
+    /// Total number of f64 elements.
+    pub fn len(&self) -> usize {
+        self.ncomp * self.nsites
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// One allocated target buffer.
+#[derive(Debug)]
+pub struct HostBuf {
+    pub desc: FieldDesc,
+    pub data: Vec<f64>,
+}
+
+/// Slab of host-side buffers used by the host targets (and as the staging
+/// descriptor table for the XLA target).
+#[derive(Debug, Default)]
+pub struct HostPool {
+    bufs: Vec<Option<HostBuf>>,
+}
+
+impl HostPool {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// `targetMalloc`: allocate a zero-initialised buffer.
+    pub fn malloc(&mut self, desc: &FieldDesc) -> BufId {
+        let buf = HostBuf { desc: desc.clone(), data: vec![0.0; desc.len()] };
+        // reuse the first free slot to keep handles dense
+        if let Some(slot) = self.bufs.iter().position(Option::is_none) {
+            self.bufs[slot] = Some(buf);
+            slot
+        } else {
+            self.bufs.push(Some(buf));
+            self.bufs.len() - 1
+        }
+    }
+
+    /// `targetFree`.
+    pub fn free(&mut self, id: BufId) {
+        if id < self.bufs.len() {
+            self.bufs[id] = None;
+        }
+    }
+
+    pub fn get(&self, id: BufId) -> Result<&HostBuf> {
+        self.bufs
+            .get(id)
+            .and_then(Option::as_ref)
+            .ok_or(Error::BadBuffer(id))
+    }
+
+    pub fn get_mut(&mut self, id: BufId) -> Result<&mut HostBuf> {
+        self.bufs
+            .get_mut(id)
+            .and_then(Option::as_mut)
+            .ok_or(Error::BadBuffer(id))
+    }
+
+    /// Temporarily remove a buffer (split-borrow helper for kernels that
+    /// read some buffers while writing others). Pair with [`Self::restore`].
+    pub fn take(&mut self, id: BufId) -> Result<HostBuf> {
+        self.bufs
+            .get_mut(id)
+            .and_then(Option::take)
+            .ok_or(Error::BadBuffer(id))
+    }
+
+    pub fn restore(&mut self, id: BufId, buf: HostBuf) {
+        debug_assert!(id < self.bufs.len() && self.bufs[id].is_none());
+        self.bufs[id] = Some(buf);
+    }
+
+    /// `copyToTarget`: full-lattice host -> target transfer.
+    pub fn copy_in(&mut self, id: BufId, host: &[f64]) -> Result<()> {
+        let buf = self.get_mut(id)?;
+        if host.len() != buf.data.len() {
+            return Err(Error::Invalid(format!(
+                "copyToTarget size mismatch for {}: host {} vs target {}",
+                buf.desc.name,
+                host.len(),
+                buf.data.len()
+            )));
+        }
+        buf.data.copy_from_slice(host);
+        Ok(())
+    }
+
+    /// `copyFromTarget`.
+    pub fn copy_out(&self, id: BufId, host: &mut [f64]) -> Result<()> {
+        let buf = self.get(id)?;
+        if host.len() != buf.data.len() {
+            return Err(Error::Invalid(format!(
+                "copyFromTarget size mismatch for {}: host {} vs target {}",
+                buf.desc.name,
+                host.len(),
+                buf.data.len()
+            )));
+        }
+        host.copy_from_slice(&buf.data);
+        Ok(())
+    }
+
+    /// Number of live buffers.
+    pub fn live(&self) -> usize {
+        self.bufs.iter().filter(|b| b.is_some()).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn malloc_free_reuses_slots() {
+        let mut pool = HostPool::new();
+        let a = pool.malloc(&FieldDesc::new("a", 3, 8));
+        let b = pool.malloc(&FieldDesc::new("b", 1, 8));
+        assert_ne!(a, b);
+        pool.free(a);
+        let c = pool.malloc(&FieldDesc::new("c", 2, 4));
+        assert_eq!(c, a, "freed slot is reused");
+        assert_eq!(pool.live(), 2);
+    }
+
+    #[test]
+    fn copy_roundtrip() {
+        let mut pool = HostPool::new();
+        let id = pool.malloc(&FieldDesc::new("x", 2, 4));
+        let host: Vec<f64> = (0..8).map(|i| i as f64).collect();
+        pool.copy_in(id, &host).unwrap();
+        let mut out = vec![0.0; 8];
+        pool.copy_out(id, &mut out).unwrap();
+        assert_eq!(out, host);
+    }
+
+    #[test]
+    fn copy_size_mismatch_is_rejected() {
+        let mut pool = HostPool::new();
+        let id = pool.malloc(&FieldDesc::new("x", 2, 4));
+        assert!(pool.copy_in(id, &[0.0; 7]).is_err());
+        let mut small = vec![0.0; 3];
+        assert!(pool.copy_out(id, &mut small).is_err());
+    }
+
+    #[test]
+    fn bad_handle_is_rejected() {
+        let pool = HostPool::new();
+        assert!(matches!(pool.get(3), Err(Error::BadBuffer(3))));
+    }
+
+    #[test]
+    fn take_restore() {
+        let mut pool = HostPool::new();
+        let id = pool.malloc(&FieldDesc::new("x", 1, 4));
+        let buf = pool.take(id).unwrap();
+        assert!(pool.get(id).is_err());
+        pool.restore(id, buf);
+        assert!(pool.get(id).is_ok());
+    }
+}

@@ -1,0 +1,44 @@
+//! The targetDP programming layer (the paper's contribution).
+//!
+//! targetDP exposes the data parallelism of lattice-based applications to
+//! the hardware hierarchy:
+//!
+//! * **TLP** — the lattice-site loop is decomposed over threads in strides
+//!   of a *virtual vector length* (VVL): the paper's `TARGET_TLP` macro is
+//!   [`tlp::TlpPool::for_chunks`].
+//! * **ILP** — each thread owns a chunk of VVL consecutive sites; the
+//!   innermost loop over the chunk (`TARGET_ILP`) has a fixed, tunable
+//!   extent the compiler can map onto SIMD lanes: [`ilp`].
+//! * **Memory model** — host and target copies of each lattice field; the
+//!   target copy is the master during lattice operations. `targetMalloc`,
+//!   `copyToTarget`, `copyFromTarget` and the *masked* variants are methods
+//!   on [`Target`]; `TARGET_CONST` + `copyConstant*ToTarget` is
+//!   [`constant::ConstantTable`].
+//!
+//! Three backends implement [`Target`]:
+//!
+//! | paper            | here                                             |
+//! |------------------|--------------------------------------------------|
+//! | C + OpenMP       | [`host::HostTarget`] (scalar or SIMD/VVL mode)   |
+//! | CUDA on a GPU    | [`xla::XlaTarget`]: AOT JAX/Pallas HLO via PJRT  |
+//!
+//! A kernel is written once against the [`Target`] trait and dispatched by
+//! [`KernelId`]; the deviation from the paper's literal single-source C
+//! macro trick (impossible across Rust/XLA) is documented in DESIGN.md §10.
+
+pub mod constant;
+pub mod host;
+pub mod ilp;
+pub mod masked;
+pub mod memory;
+pub mod reduce;
+pub mod target;
+pub mod tlp;
+pub mod xla;
+
+pub use constant::{Constant, ConstantTable};
+pub use host::{HostMode, HostTarget};
+pub use memory::{BufId, FieldDesc};
+pub use target::{KernelId, LaunchArgs, Target, TargetKind};
+pub use tlp::{Schedule, TlpPool};
+pub use xla::XlaTarget;

@@ -1,0 +1,120 @@
+//! Lattice reductions — the extension the paper names in §V ("we also
+//! plan to extend the library to provide more lattice-based operations
+//! such as reductions, which at the moment ... must be implemented using
+//! the lower level CUDA/OpenMP syntax directly").
+//!
+//! Provided as a first-class kernel: per-component sum over all lattice
+//! sites of an SoA field (`result[c] = sum_s field[c][s]`), with the same
+//! TLP x ILP execution model as every other kernel — the site loop is
+//! strip-mined into VVL chunks, each chunk produces a partial sum, and
+//! partials combine in chunk order so the result is *deterministic* for a
+//! fixed (nsites, vvl), independent of thread count or schedule.
+
+use crate::targetdp::tlp::TlpPool;
+
+/// Per-component lattice sum. `field`: `ncomp * nsites` SoA; `out`: ncomp.
+pub fn reduce_sum(field: &[f64], ncomp: usize, nsites: usize,
+                  pool: &TlpPool, vvl: usize, out: &mut [f64]) {
+    debug_assert_eq!(field.len(), ncomp * nsites);
+    debug_assert_eq!(out.len(), ncomp);
+    if nsites == 0 {
+        out.fill(0.0);
+        return;
+    }
+
+    // one partial per (chunk, component), written disjointly by chunks
+    let nchunks = nsites.div_ceil(vvl);
+    let mut partials = vec![0.0f64; nchunks * ncomp];
+    let ptr = SendPtr(partials.as_mut_ptr());
+    pool.for_chunks(nsites, vvl, |base, len| {
+        let ptr = ptr;
+        let chunk = base / vvl;
+        for c in 0..ncomp {
+            let row = &field[c * nsites + base..c * nsites + base + len];
+            // TARGET_ILP: fixed-extent lane loop the compiler vectorises
+            let mut acc = 0.0;
+            for v in row {
+                acc += v;
+            }
+            unsafe {
+                *ptr.0.add(chunk * ncomp + c) = acc;
+            }
+        }
+    });
+
+    // deterministic combine in chunk order
+    out.fill(0.0);
+    for chunk in 0..nchunks {
+        for c in 0..ncomp {
+            out[c] += partials[chunk * ncomp + c];
+        }
+    }
+}
+
+#[derive(Clone, Copy)]
+struct SendPtr(*mut f64);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::targetdp::tlp::Schedule;
+
+    fn field(ncomp: usize, nsites: usize) -> Vec<f64> {
+        (0..ncomp * nsites).map(|i| (i % 97) as f64 * 0.25).collect()
+    }
+
+    fn expected(f: &[f64], ncomp: usize, nsites: usize) -> Vec<f64> {
+        (0..ncomp)
+            .map(|c| f[c * nsites..(c + 1) * nsites].iter().sum())
+            .collect()
+    }
+
+    #[test]
+    fn sums_per_component() {
+        let (ncomp, nsites) = (3, 100);
+        let f = field(ncomp, nsites);
+        let mut out = vec![0.0; ncomp];
+        reduce_sum(&f, ncomp, nsites, &TlpPool::serial(), 8, &mut out);
+        let want = expected(&f, ncomp, nsites);
+        for (a, b) in out.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn deterministic_across_schedules() {
+        let (ncomp, nsites) = (19, 333);
+        let f = field(ncomp, nsites);
+        let mut ref_out = vec![0.0; ncomp];
+        reduce_sum(&f, ncomp, nsites, &TlpPool::serial(), 8, &mut ref_out);
+        for pool in [TlpPool::new(3, Schedule::Static),
+                     TlpPool::new(4, Schedule::Dynamic { batch: 2 })] {
+            let mut out = vec![0.0; ncomp];
+            reduce_sum(&f, ncomp, nsites, &pool, 8, &mut out);
+            assert_eq!(out, ref_out, "bitwise deterministic");
+        }
+    }
+
+    #[test]
+    fn vvl_changes_grouping_not_value() {
+        let (ncomp, nsites) = (2, 257);
+        let f = field(ncomp, nsites);
+        let want = expected(&f, ncomp, nsites);
+        for vvl in [1, 4, 32] {
+            let mut out = vec![0.0; ncomp];
+            reduce_sum(&f, ncomp, nsites, &TlpPool::serial(), vvl, &mut out);
+            for (a, b) in out.iter().zip(&want) {
+                assert!((a - b).abs() < 1e-9, "vvl={vvl}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_lattice() {
+        let mut out = vec![1.0; 2];
+        reduce_sum(&[], 2, 0, &TlpPool::serial(), 8, &mut out);
+        assert_eq!(out, vec![0.0, 0.0]);
+    }
+}

@@ -1,0 +1,174 @@
+//! The [`Target`] abstraction: one trait, three backends.
+//!
+//! The paper keeps a strict host/target distinction *even when the target
+//! is the host CPU itself* (section III-A); lattice data has a master copy
+//! in target memory and all lattice operations are launched on the target.
+//! This trait is the Rust rendering of that contract: the memory-plane
+//! methods map 1:1 onto the paper's C API, and the compute plane replaces
+//! the `TARGET_ENTRY`/`TARGET_LAUNCH` single-source macros with a named
+//! kernel registry ([`KernelId`]) — each backend provides its own compiled
+//! implementation of every kernel it supports (DESIGN.md section 10).
+
+use crate::error::{Error, Result};
+use crate::lattice::geometry::Geometry;
+use crate::lb::model::LatticeModel;
+
+use super::constant::Constant;
+use super::memory::{BufId, FieldDesc};
+
+/// Which hardware story a target tells.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TargetKind {
+    /// Per-site loops, compiler left to find ILP (the "original" style).
+    HostScalar,
+    /// VVL strip-mined chunks for the auto-vectorizer (targetDP CPU).
+    HostSimd,
+    /// AOT-compiled JAX/Pallas executables on the PJRT client (the
+    /// accelerator analog of the paper's CUDA implementation).
+    Xla,
+}
+
+/// The lattice kernels known to the framework.
+///
+/// Host targets implement them in Rust ([`crate::lb`], [`crate::free_energy`]);
+/// the XLA target maps them onto AOT artifacts from `artifacts/manifest.json`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum KernelId {
+    /// Scale a vector field by the constant `scale_a` (paper section III).
+    Scale,
+    /// phi(s) = sum_i g_i(s).
+    PhiMoment,
+    /// Central-difference gradient + laplacian of a periodic scalar field.
+    Gradient,
+    /// The paper's Figure-1 hot spot: binary-fluid BGK collision.
+    BinaryCollision,
+    /// LB propagation (pull streaming) for one distribution.
+    Stream,
+    /// One fused LB timestep (gradients + collision + streaming).
+    FullStep,
+    /// `steps` fused LB timesteps in one launch.
+    MultiStep,
+    /// Per-component lattice sum: `result[c] = sum_s field[c][s]` — the
+    /// reduction extension the paper's §V names as future work.
+    ReduceSum,
+}
+
+impl KernelId {
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelId::Scale => "scale",
+            KernelId::PhiMoment => "phi_moment",
+            KernelId::Gradient => "gradient",
+            KernelId::BinaryCollision => "binary_collision",
+            KernelId::Stream => "stream",
+            KernelId::FullStep => "full_step",
+            KernelId::MultiStep => "multi_step",
+            KernelId::ReduceSum => "reduce_sum",
+        }
+    }
+}
+
+/// Named buffer bindings + lattice context for a kernel launch
+/// (the argument list of the paper's `kernel TARGET_LAUNCH(N) (args)`).
+#[derive(Debug, Clone)]
+pub struct LaunchArgs {
+    pub geometry: Geometry,
+    pub model: LatticeModel,
+    bufs: Vec<(&'static str, BufId)>,
+}
+
+impl LaunchArgs {
+    pub fn new(geometry: Geometry, model: LatticeModel) -> Self {
+        LaunchArgs { geometry, model, bufs: Vec::new() }
+    }
+
+    /// Bind a target buffer to a kernel parameter name.
+    pub fn bind(mut self, name: &'static str, id: BufId) -> Self {
+        self.bufs.push((name, id));
+        self
+    }
+
+    pub fn buf(&self, name: &str) -> Result<BufId> {
+        self.bufs
+            .iter()
+            .find(|(n, _)| *n == name)
+            .map(|(_, id)| *id)
+            .ok_or_else(|| {
+                Error::Invalid(format!("launch missing buffer binding {name:?}"))
+            })
+    }
+
+    pub fn bindings(&self) -> &[(&'static str, BufId)] {
+        &self.bufs
+    }
+}
+
+/// A targetDP execution target (host CPU or accelerator).
+pub trait Target {
+    fn kind(&self) -> TargetKind;
+
+    /// Diagnostic name, e.g. `host-simd(vvl=8,threads=1)`.
+    fn describe(&self) -> String;
+
+    /// `targetMalloc`.
+    fn malloc(&mut self, desc: &FieldDesc) -> Result<BufId>;
+
+    /// `targetFree`.
+    fn free(&mut self, id: BufId) -> Result<()>;
+
+    /// `copyToTarget` (full lattice).
+    fn copy_to_target(&mut self, id: BufId, host: &[f64]) -> Result<()>;
+
+    /// `copyFromTarget` (full lattice).
+    fn copy_from_target(&mut self, id: BufId, host: &mut [f64]) -> Result<()>;
+
+    /// `copyToTargetMasked`: transfer only the sites flagged in `mask`
+    /// (one flag per site; all components of a selected site move).
+    fn copy_to_target_masked(&mut self, id: BufId, host: &[f64],
+                             mask: &[bool]) -> Result<()>;
+
+    /// `copyFromTargetMasked`.
+    fn copy_from_target_masked(&mut self, id: BufId, host: &mut [f64],
+                               mask: &[bool]) -> Result<()>;
+
+    /// `copyConstant<X>ToTarget`.
+    fn copy_constant(&mut self, name: &str, value: Constant) -> Result<()>;
+
+    /// Whether this backend has an implementation of `kernel`.
+    fn supports(&self, kernel: KernelId) -> bool;
+
+    /// If the backend has a k-step fused `MultiStep` kernel for this
+    /// geometry/model, the number of timesteps one launch advances.
+    fn multi_step_width(&self, _geom: &Geometry,
+                        _model: LatticeModel) -> Option<u64> {
+        None
+    }
+
+    /// `kernel TARGET_LAUNCH(N) (args)`: run a lattice kernel on the target.
+    fn launch(&mut self, kernel: KernelId, args: &LaunchArgs) -> Result<()>;
+
+    /// `syncTarget`.
+    fn sync(&mut self) -> Result<()>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn launch_args_bindings() {
+        let args = LaunchArgs::new(Geometry::new(4, 4, 4), LatticeModel::D3Q19)
+            .bind("f", 0)
+            .bind("g", 1);
+        assert_eq!(args.buf("f").unwrap(), 0);
+        assert_eq!(args.buf("g").unwrap(), 1);
+        assert!(args.buf("phi").is_err());
+        assert_eq!(args.bindings().len(), 2);
+    }
+
+    #[test]
+    fn kernel_names_are_stable() {
+        assert_eq!(KernelId::BinaryCollision.name(), "binary_collision");
+        assert_eq!(KernelId::MultiStep.name(), "multi_step");
+    }
+}

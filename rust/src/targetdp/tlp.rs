@@ -1,0 +1,201 @@
+//! Thread-level parallelism: the `TARGET_TLP` analog.
+//!
+//! The paper's C implementation expands `TARGET_TLP(baseIndex, N)` to
+//!
+//! ```c
+//! _Pragma("omp parallel for")
+//! for (baseIndex = 0; baseIndex < N; baseIndex += VVL)
+//! ```
+//!
+//! i.e. the site loop is strip-mined in strides of VVL and the chunks are
+//! decomposed between OpenMP threads. [`TlpPool::for_chunks`] reproduces
+//! exactly that: the closure receives `(base, len)` for each chunk of at
+//! most `vvl` sites and chunks are distributed over `nthreads` workers with
+//! either static (OpenMP `schedule(static)`) or dynamic
+//! (`schedule(dynamic, k)`) assignment — the launch-geometry tuning knob
+//! benchmarked in `benches/tlp_sched.rs` (E5).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Chunk-to-thread assignment policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Schedule {
+    /// Contiguous block of chunks per thread (OpenMP `schedule(static)`).
+    Static,
+    /// Threads grab batches of `chunk` chunks from a shared cursor
+    /// (OpenMP `schedule(dynamic, chunk)`).
+    Dynamic { batch: usize },
+}
+
+impl Default for Schedule {
+    fn default() -> Self {
+        Schedule::Static
+    }
+}
+
+/// The TLP worker pool configuration.
+///
+/// Threads are scoped per launch (no persistent worker state), which keeps
+/// kernels free to borrow stack data; with `nthreads == 1` the launch runs
+/// inline with zero overhead — the hot path on this single-core testbed.
+#[derive(Debug, Clone, Copy)]
+pub struct TlpPool {
+    pub nthreads: usize,
+    pub schedule: Schedule,
+}
+
+impl Default for TlpPool {
+    fn default() -> Self {
+        TlpPool { nthreads: default_threads(), schedule: Schedule::Static }
+    }
+}
+
+/// `TARGETDP_NUM_THREADS` env var, else available parallelism.
+pub fn default_threads() -> usize {
+    std::env::var("TARGETDP_NUM_THREADS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        })
+}
+
+impl TlpPool {
+    pub fn new(nthreads: usize, schedule: Schedule) -> Self {
+        TlpPool { nthreads: nthreads.max(1), schedule }
+    }
+
+    /// Serial pool (inline execution).
+    pub fn serial() -> Self {
+        TlpPool { nthreads: 1, schedule: Schedule::Static }
+    }
+
+    /// Strip-mine `nsites` into chunks of at most `vvl` sites and run
+    /// `body(base, len)` for every chunk (`len < vvl` only for the tail).
+    pub fn for_chunks<F>(&self, nsites: usize, vvl: usize, body: F)
+    where
+        F: Fn(usize, usize) + Sync,
+    {
+        assert!(vvl > 0, "VVL must be positive");
+        if nsites == 0 {
+            return;
+        }
+        let nchunks = nsites.div_ceil(vvl);
+        let run_chunk = |c: usize| {
+            let base = c * vvl;
+            let len = vvl.min(nsites - base);
+            body(base, len);
+        };
+
+        if self.nthreads <= 1 || nchunks == 1 {
+            for c in 0..nchunks {
+                run_chunk(c);
+            }
+            return;
+        }
+
+        let nthreads = self.nthreads.min(nchunks);
+        match self.schedule {
+            Schedule::Static => {
+                // contiguous ranges of chunks, remainder spread over the
+                // first threads (OpenMP static semantics)
+                let per = nchunks / nthreads;
+                let rem = nchunks % nthreads;
+                std::thread::scope(|s| {
+                    let mut start = 0;
+                    for t in 0..nthreads {
+                        let count = per + usize::from(t < rem);
+                        let range = start..start + count;
+                        start += count;
+                        let run_chunk = &run_chunk;
+                        s.spawn(move || {
+                            for c in range {
+                                run_chunk(c);
+                            }
+                        });
+                    }
+                });
+            }
+            Schedule::Dynamic { batch } => {
+                let batch = batch.max(1);
+                let cursor = AtomicUsize::new(0);
+                std::thread::scope(|s| {
+                    for _ in 0..nthreads {
+                        let cursor = &cursor;
+                        let run_chunk = &run_chunk;
+                        s.spawn(move || loop {
+                            let begin =
+                                cursor.fetch_add(batch, Ordering::Relaxed);
+                            if begin >= nchunks {
+                                break;
+                            }
+                            for c in begin..(begin + batch).min(nchunks) {
+                                run_chunk(c);
+                            }
+                        });
+                    }
+                });
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+
+    fn cover(nsites: usize, vvl: usize, pool: TlpPool) -> Vec<u32> {
+        let hits = Mutex::new(vec![0u32; nsites]);
+        pool.for_chunks(nsites, vvl, |base, len| {
+            let mut h = hits.lock().unwrap();
+            for s in base..base + len {
+                h[s] += 1;
+            }
+        });
+        hits.into_inner().unwrap()
+    }
+
+    #[test]
+    fn every_site_exactly_once_serial() {
+        for (n, vvl) in [(0, 4), (1, 4), (7, 4), (8, 4), (100, 8), (5, 16)] {
+            let hits = cover(n, vvl, TlpPool::serial());
+            assert!(hits.iter().all(|&h| h == 1), "n={n} vvl={vvl}");
+        }
+    }
+
+    #[test]
+    fn every_site_exactly_once_static_threads() {
+        for threads in [2, 3, 5] {
+            let pool = TlpPool::new(threads, Schedule::Static);
+            let hits = cover(103, 8, pool);
+            assert!(hits.iter().all(|&h| h == 1), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn every_site_exactly_once_dynamic() {
+        for batch in [1, 2, 7] {
+            let pool = TlpPool::new(4, Schedule::Dynamic { batch });
+            let hits = cover(97, 4, pool);
+            assert!(hits.iter().all(|&h| h == 1), "batch={batch}");
+        }
+    }
+
+    #[test]
+    fn tail_chunk_is_short() {
+        let pool = TlpPool::serial();
+        let lens = Mutex::new(vec![]);
+        pool.for_chunks(10, 4, |base, len| {
+            lens.lock().unwrap().push((base, len));
+        });
+        assert_eq!(lens.into_inner().unwrap(), vec![(0, 4), (4, 4), (8, 2)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "VVL must be positive")]
+    fn zero_vvl_panics() {
+        TlpPool::serial().for_chunks(8, 0, |_, _| {});
+    }
+}

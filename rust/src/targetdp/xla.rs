@@ -1,0 +1,349 @@
+//! The accelerator backend: targetDP's CUDA implementation analog.
+//!
+//! Kernels are the AOT-compiled JAX/Pallas executables produced by
+//! `python/compile/aot.py` (Layer 2/1) and run through the PJRT client
+//! ([`crate::runtime::Runtime`]). The paper's mapping holds piecewise:
+//!
+//! * `targetMalloc`/`copyToTarget` — the target keeps a device mirror of
+//!   every buffer; launches feed it to the executable and write results
+//!   back (the 0.5.1 PJRT wrapper returns tuple results as one tuple
+//!   buffer, so state cannot stay device-resident *between* launches —
+//!   the fused `FullStep`/`MultiStep` kernels restore the "master copy
+//!   lives on the target" performance model; DESIGN.md section 2).
+//! * `TARGET_CONST` — constants are baked into the HLO at AOT time; the
+//!   launch *validates* the runtime constant table against the manifest's
+//!   baked values, turning host/target constant drift into a hard error.
+//! * `TPB` / VVL — the Pallas `vvl_block` recorded per artifact; the
+//!   `xla_vvl_block` constant selects among compiled variants (E2).
+
+use crate::error::{Error, Result};
+use crate::free_energy::symmetric::FeParams;
+use crate::lattice::geometry::Geometry;
+use crate::lb::model::LatticeModel;
+use crate::runtime::{ArtifactMeta, Runtime};
+
+use super::constant::{Constant, ConstantTable};
+use super::memory::{BufId, FieldDesc, HostPool};
+use super::masked;
+use super::target::{KernelId, LaunchArgs, Target, TargetKind};
+
+/// Accelerator target backed by AOT XLA executables.
+pub struct XlaTarget {
+    runtime: Runtime,
+    bufs: HostPool,
+    constants: ConstantTable,
+}
+
+impl XlaTarget {
+    pub fn new(runtime: Runtime) -> Self {
+        XlaTarget {
+            runtime,
+            bufs: HostPool::new(),
+            constants: ConstantTable::new(),
+        }
+    }
+
+    /// Connect using the default artifact directory.
+    pub fn from_default_artifacts() -> Result<Self> {
+        Ok(Self::new(Runtime::load(Runtime::default_dir())?))
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.runtime
+    }
+
+    fn grid_of(geom: &Geometry) -> Vec<usize> {
+        vec![geom.lx, geom.ly, geom.lz]
+    }
+
+    /// Preferred Pallas block (the GPU-side VVL knob), if set.
+    fn preferred_block(&self) -> Option<usize> {
+        self.constants
+            .get_int("xla_vvl_block")
+            .ok()
+            .map(|v| v as usize)
+    }
+
+    /// Validate that the constant table agrees with the artifact's baked
+    /// free-energy parameters (constant-memory coherence check).
+    fn validate_params(&self, meta: &ArtifactMeta) -> Result<()> {
+        let Some(baked) = meta.params else { return Ok(()) };
+        let pairs = [
+            ("fe_a", baked.a),
+            ("fe_b", baked.b),
+            ("fe_kappa", baked.kappa),
+            ("fe_gamma", baked.gamma),
+            ("tau_f", baked.tau_f),
+            ("tau_g", baked.tau_g),
+        ];
+        for (name, want) in pairs {
+            if let Ok(have) = self.constants.get_double(name) {
+                if have != want {
+                    return Err(Error::Invalid(format!(
+                        "constant {name}={have} disagrees with value {want} \
+                         baked into artifact {}; re-run `make artifacts` \
+                         with matching parameters",
+                        meta.name
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Baked free-energy parameters of the collision artifact this target
+    /// would use for (`model`, `n`) — the engine can mirror them exactly.
+    pub fn baked_params(&self, model: LatticeModel, n: usize)
+                        -> Option<FeParams> {
+        self.runtime
+            .find(|m| m.matches_flat("collision", model.name(), n))
+            .and_then(|m| m.params)
+    }
+
+    fn pick_artifact(&self, kind: &str, lattice: Option<&str>,
+                     flat_n: Option<usize>, grid: Option<&[usize]>)
+                     -> Result<String> {
+        let pref = self.preferred_block();
+        let matches = |m: &&ArtifactMeta| -> bool {
+            m.kind == kind
+                && (lattice.is_none() || m.lattice.as_deref() == lattice)
+                && (flat_n.is_none() || m.n_sites == flat_n)
+                && (grid.is_none() || m.grid.as_deref() == grid)
+        };
+        let metas: Vec<&ArtifactMeta> =
+            self.runtime.artifacts().iter().filter(matches).collect();
+        if metas.is_empty() {
+            return Err(Error::Invalid(format!(
+                "no {kind} artifact for lattice={lattice:?} n={flat_n:?} \
+                 grid={grid:?}; add it to python/compile/aot.py and re-run \
+                 `make artifacts`"
+            )));
+        }
+        let chosen = pref
+            .and_then(|b| metas.iter().find(|m| m.vvl_block == b).copied())
+            .unwrap_or(metas[0]);
+        Ok(chosen.name.clone())
+    }
+
+    /// Run one artifact with pool-resident inputs, writing pool outputs.
+    fn run(&mut self, name: &str, input_ids: &[BufId],
+           output_ids: &[BufId]) -> Result<()> {
+        // borrow all inputs out of the pool
+        let mut inputs = Vec::with_capacity(input_ids.len());
+        for &id in input_ids {
+            inputs.push(self.bufs.take(id)?);
+        }
+        let input_slices: Vec<&[f64]> =
+            inputs.iter().map(|b| b.data.as_slice()).collect();
+        let result = self.runtime.execute(name, &input_slices);
+        for (&id, buf) in input_ids.iter().zip(inputs) {
+            self.bufs.restore(id, buf);
+        }
+        let outputs = result?;
+        if outputs.len() != output_ids.len() {
+            return Err(Error::Xla(format!(
+                "{name}: got {} outputs, caller expected {}",
+                outputs.len(),
+                output_ids.len()
+            )));
+        }
+        for (&id, data) in output_ids.iter().zip(outputs) {
+            self.bufs.copy_in(id, &data)?;
+        }
+        Ok(())
+    }
+}
+
+impl Target for XlaTarget {
+    fn kind(&self) -> TargetKind {
+        TargetKind::Xla
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "xla({}, {} artifacts{})",
+            self.runtime.platform(),
+            self.runtime.artifacts().len(),
+            self.preferred_block()
+                .map(|b| format!(", vvl_block={b}"))
+                .unwrap_or_default()
+        )
+    }
+
+    fn malloc(&mut self, desc: &FieldDesc) -> Result<BufId> {
+        Ok(self.bufs.malloc(desc))
+    }
+
+    fn free(&mut self, id: BufId) -> Result<()> {
+        self.bufs.free(id);
+        Ok(())
+    }
+
+    fn copy_to_target(&mut self, id: BufId, host: &[f64]) -> Result<()> {
+        self.bufs.copy_in(id, host)
+    }
+
+    fn copy_from_target(&mut self, id: BufId, host: &mut [f64]) -> Result<()> {
+        self.bufs.copy_out(id, host)
+    }
+
+    fn copy_to_target_masked(&mut self, id: BufId, host: &[f64],
+                             mask: &[bool]) -> Result<()> {
+        // the CUDA route: pack on the source, move packed, unpack on target
+        let buf = self.bufs.get_mut(id)?;
+        let (ncomp, nsites) = (buf.desc.ncomp, buf.desc.nsites);
+        if host.len() != buf.data.len() || mask.len() != nsites {
+            return Err(Error::Invalid(format!(
+                "masked copyToTarget size mismatch for {}", buf.desc.name
+            )));
+        }
+        let idx = masked::mask_indices(mask);
+        let packed = masked::pack(host, nsites, ncomp, &idx);
+        masked::unpack(&mut buf.data, nsites, ncomp, &idx, &packed);
+        Ok(())
+    }
+
+    fn copy_from_target_masked(&mut self, id: BufId, host: &mut [f64],
+                               mask: &[bool]) -> Result<()> {
+        let buf = self.bufs.get(id)?;
+        let (ncomp, nsites) = (buf.desc.ncomp, buf.desc.nsites);
+        if host.len() != buf.data.len() || mask.len() != nsites {
+            return Err(Error::Invalid(format!(
+                "masked copyFromTarget size mismatch for {}", buf.desc.name
+            )));
+        }
+        let idx = masked::mask_indices(mask);
+        let packed = masked::pack(&buf.data, nsites, ncomp, &idx);
+        masked::unpack(host, nsites, ncomp, &idx, &packed);
+        Ok(())
+    }
+
+    fn copy_constant(&mut self, name: &str, value: Constant) -> Result<()> {
+        self.constants.set(name, value);
+        Ok(())
+    }
+
+    fn supports(&self, kernel: KernelId) -> bool {
+        let kind = match kernel {
+            KernelId::Scale => "scale",
+            KernelId::BinaryCollision => "collision",
+            KernelId::Gradient => "gradient",
+            KernelId::FullStep => "full_step",
+            KernelId::MultiStep => "multi_step",
+            KernelId::ReduceSum => "reduce",
+            KernelId::PhiMoment | KernelId::Stream => return false,
+        };
+        self.runtime.artifacts().iter().any(|m| m.kind == kind)
+    }
+
+    fn multi_step_width(&self, geom: &Geometry,
+                        model: LatticeModel) -> Option<u64> {
+        let grid = Self::grid_of(geom);
+        self.runtime
+            .find(|m| m.matches_grid("multi_step", model.name(), &grid))
+            .and_then(|m| m.steps)
+    }
+
+    fn launch(&mut self, kernel: KernelId, args: &LaunchArgs) -> Result<()> {
+        let lattice = args.model.name();
+        let n = args.geometry.nsites();
+        let grid = Self::grid_of(&args.geometry);
+        match kernel {
+            KernelId::Scale => {
+                let field = args.buf("field")?;
+                let nsites = self.bufs.get(field)?.desc.nsites;
+                let name = self.pick_artifact("scale", None, Some(nsites),
+                                              None)?;
+                // constant coherence: baked a must equal the table's value
+                let baked = self
+                    .runtime
+                    .find(|m| m.name == name)
+                    .and_then(|m| m.a);
+                if let (Some(baked), Ok(have)) =
+                    (baked, self.constants.get_double("scale_a"))
+                {
+                    if have != baked {
+                        return Err(Error::Invalid(format!(
+                            "scale_a={have} disagrees with baked a={baked} \
+                             in artifact {name}"
+                        )));
+                    }
+                }
+                self.run(&name, &[field], &[field])
+            }
+            KernelId::BinaryCollision => {
+                let name = self.pick_artifact("collision", Some(lattice),
+                                              Some(n), None)?;
+                let meta = self.runtime.find(|m| m.name == name).unwrap()
+                    .clone();
+                self.validate_params(&meta)?;
+                let f = args.buf("f")?;
+                let g = args.buf("g")?;
+                let grad = args.buf("grad")?;
+                let lap = args.buf("lap")?;
+                self.run(&name, &[f, g, grad, lap], &[f, g])
+            }
+            KernelId::Gradient => {
+                let name = self.pick_artifact("gradient", None, None,
+                                              Some(&grid))?;
+                let phi = args.buf("phi")?;
+                let grad = args.buf("grad")?;
+                let lap = args.buf("lap")?;
+                self.run(&name, &[phi], &[grad, lap])
+            }
+            KernelId::FullStep => {
+                let name = self.pick_artifact("full_step", Some(lattice),
+                                              None, Some(&grid))?;
+                let meta = self.runtime.find(|m| m.name == name).unwrap()
+                    .clone();
+                self.validate_params(&meta)?;
+                let f = args.buf("f")?;
+                let g = args.buf("g")?;
+                self.run(&name, &[f, g], &[f, g])
+            }
+            KernelId::MultiStep => {
+                let name = self.pick_artifact("multi_step", Some(lattice),
+                                              None, Some(&grid))?;
+                let meta = self.runtime.find(|m| m.name == name).unwrap()
+                    .clone();
+                self.validate_params(&meta)?;
+                let f = args.buf("f")?;
+                let g = args.buf("g")?;
+                self.run(&name, &[f, g], &[f, g])
+            }
+            KernelId::ReduceSum => {
+                let field = args.buf("field")?;
+                let result = args.buf("result")?;
+                let (ncomp, nsites) = {
+                    let b = self.bufs.get(field)?;
+                    (b.desc.ncomp, b.desc.nsites)
+                };
+                let name = self
+                    .runtime
+                    .find(|m| m.kind == "reduce"
+                          && m.n_sites == Some(nsites)
+                          && m.inputs.first()
+                              .map(|s| s.shape.first() == Some(&ncomp))
+                              .unwrap_or(false))
+                    .map(|m| m.name.clone())
+                    .ok_or_else(|| Error::Invalid(format!(
+                        "no reduce artifact for ncomp={ncomp} n={nsites}; \
+                         add it to python/compile/aot.py and re-run \
+                         `make artifacts`"
+                    )))?;
+                self.run(&name, &[field], &[result])
+            }
+            KernelId::PhiMoment | KernelId::Stream => {
+                Err(Error::UnsupportedKernel {
+                    target: self.describe(),
+                    kernel: kernel.name().into(),
+                })
+            }
+        }
+    }
+
+    fn sync(&mut self) -> Result<()> {
+        // execute() is synchronous through this wrapper
+        Ok(())
+    }
+}

@@ -1,0 +1,111 @@
+//! Tiny `--flag value` argument parser for the CLI binary (offline
+//! replacement for clap).
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// Parsed command line: subcommand + `--key value` flags.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub command: String,
+    flags: BTreeMap<String, String>,
+    /// Flags present without a value (e.g. `--vtk`).
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse `args` (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut iter = args.into_iter().peekable();
+        if let Some(first) = iter.peek() {
+            if !first.starts_with("--") {
+                out.command = iter.next().unwrap();
+            }
+        }
+        while let Some(arg) = iter.next() {
+            let key = arg.strip_prefix("--").ok_or_else(|| {
+                Error::Parse(format!("unexpected argument {arg:?}"))
+            })?;
+            // --key=value or --key value or bare switch
+            if let Some((k, v)) = key.split_once('=') {
+                out.flags.insert(k.to_string(), v.to_string());
+            } else if iter.peek().is_some_and(|next| !next.starts_with("--"))
+            {
+                out.flags.insert(key.to_string(), iter.next().unwrap());
+            } else {
+                out.switches.push(key.to_string());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            Some(v) => v.parse().map_err(|_| {
+                Error::Parse(format!("--{key} expects an integer, got {v:?}"))
+            }),
+            None => Ok(default),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            Some(v) => v.parse().map_err(|_| {
+                Error::Parse(format!("--{key} expects an integer, got {v:?}"))
+            }),
+            None => Ok(default),
+        }
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.switches.iter().any(|s| s == key) || self.flags.contains_key(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(words: &[&str]) -> Args {
+        Args::parse(words.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse(&["run", "--size", "16", "--backend=xla", "--vtk"]);
+        assert_eq!(a.command, "run");
+        assert_eq!(a.usize_or("size", 0).unwrap(), 16);
+        assert_eq!(a.str_or("backend", ""), "xla");
+        assert!(a.has("vtk"));
+        assert!(!a.has("nope"));
+        assert_eq!(a.u64_or("steps", 100).unwrap(), 100);
+    }
+
+    #[test]
+    fn no_subcommand() {
+        let a = parse(&["--x", "1"]);
+        assert_eq!(a.command, "");
+        assert_eq!(a.usize_or("x", 0).unwrap(), 1);
+    }
+
+    #[test]
+    fn bad_int_rejected() {
+        let a = parse(&["run", "--size", "big"]);
+        assert!(a.usize_or("size", 0).is_err());
+    }
+
+    #[test]
+    fn stray_positional_rejected() {
+        assert!(Args::parse(["run".into(), "extra".into()]).is_err());
+    }
+}

@@ -1,0 +1,6 @@
+//! Self-contained utilities (this build environment is offline, so the
+//! usual ecosystem crates are replaced by minimal in-tree implementations).
+
+pub mod cli;
+pub mod json;
+pub mod toml;

@@ -1,0 +1,253 @@
+//! Minimal TOML-subset reader for the run configuration files.
+//!
+//! Supported: `[section]` headers, `key = value` with string / integer /
+//! float / boolean values, `#` comments, blank lines. That covers every
+//! config this project ships; anything fancier is a parse error rather
+//! than a silent misread.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// A TOML-subset scalar.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    String(String),
+    Integer(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            TomlValue::String(s) => Ok(s),
+            other => Err(Error::Parse(format!("expected string, got {other:?}"))),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            TomlValue::Float(f) => Ok(*f),
+            TomlValue::Integer(i) => Ok(*i as f64),
+            other => Err(Error::Parse(format!("expected number, got {other:?}"))),
+        }
+    }
+
+    pub fn as_i64(&self) -> Result<i64> {
+        match self {
+            TomlValue::Integer(i) => Ok(*i),
+            other => Err(Error::Parse(format!("expected integer, got {other:?}"))),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        let i = self.as_i64()?;
+        usize::try_from(i)
+            .map_err(|_| Error::Parse(format!("expected unsigned, got {i}")))
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            TomlValue::Bool(b) => Ok(*b),
+            other => Err(Error::Parse(format!("expected bool, got {other:?}"))),
+        }
+    }
+}
+
+/// section -> key -> value.
+pub type TomlDoc = BTreeMap<String, BTreeMap<String, TomlValue>>;
+
+/// Parse a TOML-subset document.
+pub fn parse(text: &str) -> Result<TomlDoc> {
+    let mut doc: TomlDoc = BTreeMap::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest.strip_suffix(']').ok_or_else(|| {
+                Error::Parse(format!("line {}: unterminated [section]",
+                                     lineno + 1))
+            })?;
+            section = name.trim().to_string();
+            doc.entry(section.clone()).or_default();
+            continue;
+        }
+        let (key, value) = line.split_once('=').ok_or_else(|| {
+            Error::Parse(format!("line {}: expected key = value", lineno + 1))
+        })?;
+        let value = parse_value(value.trim()).map_err(|e| {
+            Error::Parse(format!("line {}: {e}", lineno + 1))
+        })?;
+        doc.entry(section.clone())
+            .or_default()
+            .insert(key.trim().to_string(), value);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // a '#' inside a quoted string does not start a comment
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(text: &str) -> Result<TomlValue> {
+    if let Some(rest) = text.strip_prefix('"') {
+        let inner = rest.strip_suffix('"').ok_or_else(|| {
+            Error::Parse("unterminated string".into())
+        })?;
+        return Ok(TomlValue::String(inner.to_string()));
+    }
+    match text {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if !text.contains(['.', 'e', 'E']) {
+        if let Ok(i) = text.parse::<i64>() {
+            return Ok(TomlValue::Integer(i));
+        }
+    }
+    if let Ok(f) = text.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(Error::Parse(format!("cannot parse value {text:?}")))
+}
+
+/// Typed lookup helpers with defaults.
+pub struct Section<'a>(pub Option<&'a BTreeMap<String, TomlValue>>);
+
+impl<'a> Section<'a> {
+    pub fn of(doc: &'a TomlDoc, name: &str) -> Self {
+        Section(doc.get(name))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&'a TomlValue> {
+        self.0.and_then(|m| m.get(key))
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> Result<String> {
+        match self.get(key) {
+            Some(v) => Ok(v.as_str()?.to_string()),
+            None => Ok(default.to_string()),
+        }
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            Some(v) => v.as_usize(),
+            None => Ok(default),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            Some(v) => Ok(v.as_i64()? as u64),
+            None => Ok(default),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            Some(v) => v.as_f64(),
+            None => Ok(default),
+        }
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> Result<bool> {
+        match self.get(key) {
+            Some(v) => v.as_bool(),
+            None => Ok(default),
+        }
+    }
+
+    pub fn require_usize(&self, key: &str) -> Result<usize> {
+        self.get(key)
+            .ok_or_else(|| Error::Parse(format!("missing key {key:?}")))?
+            .as_usize()
+    }
+
+    pub fn require_str(&self, key: &str) -> Result<String> {
+        Ok(self
+            .get(key)
+            .ok_or_else(|| Error::Parse(format!("missing key {key:?}")))?
+            .as_str()?
+            .to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+        # run config
+        [simulation]
+        lattice = "d3q19"   # model
+        lx = 16
+        steps = 100
+        noise = 0.05
+        vtk = true
+
+        [target]
+        backend = "host-simd"
+    "#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = parse(SAMPLE).unwrap();
+        let sim = Section::of(&doc, "simulation");
+        assert_eq!(sim.require_str("lattice").unwrap(), "d3q19");
+        assert_eq!(sim.require_usize("lx").unwrap(), 16);
+        assert_eq!(sim.u64_or("steps", 0).unwrap(), 100);
+        assert_eq!(sim.f64_or("noise", 0.0).unwrap(), 0.05);
+        assert!(sim.bool_or("vtk", false).unwrap());
+        let tgt = Section::of(&doc, "target");
+        assert_eq!(tgt.str_or("backend", "x").unwrap(), "host-simd");
+        assert_eq!(tgt.usize_or("vvl", 8).unwrap(), 8);
+    }
+
+    #[test]
+    fn defaults_for_missing_section() {
+        let doc = parse("").unwrap();
+        let s = Section::of(&doc, "nope");
+        assert_eq!(s.usize_or("x", 7).unwrap(), 7);
+        assert!(s.require_usize("x").is_err());
+    }
+
+    #[test]
+    fn integers_vs_floats() {
+        let doc = parse("[a]\ni = 3\nf = 3.0\nn = -2\n").unwrap();
+        let a = Section::of(&doc, "a");
+        assert_eq!(a.get("i").unwrap(), &TomlValue::Integer(3));
+        assert_eq!(a.get("f").unwrap(), &TomlValue::Float(3.0));
+        assert!(a.get("n").unwrap().as_usize().is_err());
+        assert_eq!(a.f64_or("i", 0.0).unwrap(), 3.0);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse("[open").is_err());
+        assert!(parse("keyvalue").is_err());
+        assert!(parse("k = \"unterminated").is_err());
+        assert!(parse("k = what").is_err());
+    }
+
+    #[test]
+    fn hash_inside_string_is_kept() {
+        let doc = parse("[s]\nname = \"a#b\" # comment\n").unwrap();
+        assert_eq!(Section::of(&doc, "s").require_str("name").unwrap(),
+                   "a#b");
+    }
+}

@@ -1,0 +1,244 @@
+//! Cross-module integration: the full engine pipeline on every backend,
+//! target equivalence, decomposition, and the coordinator.
+
+use targetdp::config::Config;
+use targetdp::coordinator::pipeline::quick_spinodal;
+use targetdp::free_energy::symmetric::FeParams;
+use targetdp::lattice::geometry::Geometry;
+use targetdp::lb::engine::LbEngine;
+use targetdp::lb::init;
+use targetdp::lb::model::LatticeModel;
+use targetdp::targetdp::tlp::{Schedule, TlpPool};
+use targetdp::targetdp::{HostTarget, Target, XlaTarget};
+
+fn spinodal_state(model: LatticeModel, geom: &Geometry, seed: u64)
+                  -> (Vec<f64>, Vec<f64>) {
+    let vs = model.velset();
+    let n = geom.nsites();
+    let mut f = vec![0.0; vs.nvel * n];
+    let mut g = vec![0.0; vs.nvel * n];
+    init::init_spinodal(vs, &FeParams::default(), geom, &mut f, &mut g,
+                        0.05, seed);
+    (f, g)
+}
+
+/// Run `steps` on a target and return the final (f, g).
+fn run_on(target: &mut dyn Target, model: LatticeModel, geom: Geometry,
+          steps: u64, seed: u64) -> (Vec<f64>, Vec<f64>) {
+    let vs = model.velset();
+    let n = geom.nsites();
+    let (f0, g0) = spinodal_state(model, &geom, seed);
+    let mut engine =
+        LbEngine::new(target, geom, model, FeParams::default()).unwrap();
+    engine.load_state(&f0, &g0).unwrap();
+    engine.run(steps).unwrap();
+    let mut f = vec![0.0; vs.nvel * n];
+    let mut g = vec![0.0; vs.nvel * n];
+    engine.fetch_state(&mut f, &mut g).unwrap();
+    (f, g)
+}
+
+fn max_diff(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max)
+}
+
+#[test]
+fn all_host_targets_agree_bitwise_physics() {
+    let model = LatticeModel::D3Q19;
+    let geom = Geometry::new(8, 8, 8);
+    let mut scalar = HostTarget::scalar(TlpPool::serial());
+    let (f_ref, g_ref) = run_on(&mut scalar, model, geom, 5, 77);
+    for vvl in [1, 2, 4, 8, 16, 32] {
+        let mut simd = HostTarget::simd(vvl, TlpPool::serial()).unwrap();
+        let (f, g) = run_on(&mut simd, model, geom, 5, 77);
+        assert!(max_diff(&f, &f_ref) < 1e-12, "vvl={vvl}");
+        assert!(max_diff(&g, &g_ref) < 1e-12, "vvl={vvl}");
+    }
+}
+
+#[test]
+fn threaded_and_dynamic_schedules_agree() {
+    let model = LatticeModel::D2Q9;
+    let geom = Geometry::new(16, 16, 1);
+    let mut serial = HostTarget::simd(8, TlpPool::serial()).unwrap();
+    let (f_ref, g_ref) = run_on(&mut serial, model, geom, 4, 5);
+    for (threads, sched) in [(2, Schedule::Static),
+                             (4, Schedule::Dynamic { batch: 2 })] {
+        let mut t =
+            HostTarget::simd(8, TlpPool::new(threads, sched)).unwrap();
+        let (f, g) = run_on(&mut t, model, geom, 4, 5);
+        assert_eq!(max_diff(&f, &f_ref), 0.0, "threads={threads}");
+        assert_eq!(max_diff(&g, &g_ref), 0.0);
+    }
+}
+
+#[test]
+fn xla_target_matches_host_over_multiple_steps() {
+    let Ok(mut xla) = XlaTarget::from_default_artifacts() else {
+        eprintln!("SKIP: no artifacts");
+        return;
+    };
+    let model = LatticeModel::D3Q19;
+    let geom = Geometry::new(16, 16, 16);
+    // use the parameters baked into the artifact for an exact comparison
+    let p = xla
+        .baked_params(model, geom.nsites())
+        .unwrap_or_default();
+    assert_eq!(p, FeParams::default(),
+               "artifacts must be built with default params");
+
+    let (f, g) = run_on(&mut xla, model, geom, 10, 2020);
+    let mut host = HostTarget::simd(8, TlpPool::serial()).unwrap();
+    let (fh, gh) = run_on(&mut host, model, geom, 10, 2020);
+    assert!(max_diff(&f, &fh) < 1e-11, "f: {:e}", max_diff(&f, &fh));
+    assert!(max_diff(&g, &gh) < 1e-11, "g: {:e}", max_diff(&g, &gh));
+}
+
+#[test]
+fn xla_d2q9_full_step_matches_host() {
+    let Ok(mut xla) = XlaTarget::from_default_artifacts() else {
+        eprintln!("SKIP: no artifacts");
+        return;
+    };
+    let model = LatticeModel::D2Q9;
+    let geom = Geometry::new(64, 64, 1);
+    let (f, g) = run_on(&mut xla, model, geom, 3, 808);
+    let mut host = HostTarget::simd(8, TlpPool::serial()).unwrap();
+    let (fh, gh) = run_on(&mut host, model, geom, 3, 808);
+    assert!(max_diff(&f, &fh) < 1e-11);
+    assert!(max_diff(&g, &gh) < 1e-11);
+}
+
+#[test]
+fn conservation_long_run() {
+    let s = quick_spinodal("host-simd", LatticeModel::D3Q19, (12, 12, 12),
+                           50, 8)
+        .unwrap();
+    assert!(s.mass_drift() < 1e-11, "mass drift {:e}", s.mass_drift());
+    assert!(s.phi_drift() < 1e-11);
+}
+
+#[test]
+fn spinodal_decomposition_coarsens() {
+    // physics sanity: after the noise smooths out, phi variance must grow
+    // toward the two-phase state (the headline behaviour of the model)
+    let cfg = Config::from_toml_str(
+        "[simulation]\nlattice = \"d2q9\"\nlx = 32\nly = 32\nlz = 1\n\
+         steps = 400\nnoise = 0.1\nseed = 42\n\n[output]\nevery = 0\n",
+    )
+    .unwrap();
+    let s = targetdp::coordinator::run_simulation(&cfg).unwrap();
+    assert!(
+        s.r#final.phi_variance > 4.0 * s.initial.phi_variance,
+        "variance should grow: {:e} -> {:e}",
+        s.initial.phi_variance,
+        s.r#final.phi_variance
+    );
+}
+
+#[test]
+fn scale_example_on_xla_target() {
+    // the paper's section III host-code sequence against the XLA target
+    use targetdp::targetdp::constant::Constant;
+    use targetdp::targetdp::memory::FieldDesc;
+    use targetdp::targetdp::target::{KernelId, LaunchArgs};
+
+    let Ok(mut t) = XlaTarget::from_default_artifacts() else {
+        eprintln!("SKIP: no artifacts");
+        return;
+    };
+    let n = 4096;
+    let host: Vec<f64> = (0..3 * n).map(|i| i as f64).collect();
+    let id = t.malloc(&FieldDesc::new("field", 3, n)).unwrap();
+    t.copy_to_target(id, &host).unwrap();
+    t.copy_constant("scale_a", Constant::Double(1.5)).unwrap();
+    let args = LaunchArgs::new(Geometry::new(16, 16, 16),
+                               LatticeModel::D3Q19)
+        .bind("field", id);
+    t.launch(KernelId::Scale, &args).unwrap();
+    t.sync().unwrap();
+    let mut out = vec![0.0; 3 * n];
+    t.copy_from_target(id, &mut out).unwrap();
+    for (i, v) in out.iter().enumerate() {
+        assert_eq!(*v, 1.5 * i as f64);
+    }
+}
+
+#[test]
+fn xla_constant_mismatch_is_detected() {
+    use targetdp::targetdp::constant::Constant;
+    use targetdp::targetdp::memory::FieldDesc;
+    use targetdp::targetdp::target::{KernelId, LaunchArgs};
+
+    let Ok(mut t) = XlaTarget::from_default_artifacts() else {
+        eprintln!("SKIP: no artifacts");
+        return;
+    };
+    let n = 4096;
+    let id = t.malloc(&FieldDesc::new("field", 3, n)).unwrap();
+    t.copy_to_target(id, &vec![1.0; 3 * n]).unwrap();
+    // wrong scale constant: the launch must refuse (constant coherence)
+    t.copy_constant("scale_a", Constant::Double(2.0)).unwrap();
+    let args = LaunchArgs::new(Geometry::new(16, 16, 16),
+                               LatticeModel::D3Q19)
+        .bind("field", id);
+    let err = t.launch(KernelId::Scale, &args).unwrap_err();
+    assert!(err.to_string().contains("disagrees"), "{err}");
+}
+
+#[test]
+fn reduce_sum_kernel_all_targets() {
+    // the paper's section-V reduction extension: same API on host + xla
+    use targetdp::targetdp::memory::FieldDesc;
+    use targetdp::targetdp::target::{KernelId, LaunchArgs};
+
+    let n = 4096;
+    let ncomp = 19;
+    let host_data: Vec<f64> =
+        (0..ncomp * n).map(|i| ((i % 101) as f64) * 0.5).collect();
+    let want: Vec<f64> = (0..ncomp)
+        .map(|c| host_data[c * n..(c + 1) * n].iter().sum())
+        .collect();
+
+    let mut targets: Vec<Box<dyn Target>> = vec![
+        Box::new(HostTarget::scalar(TlpPool::serial())),
+        Box::new(HostTarget::simd(8, TlpPool::new(
+            3, Schedule::Dynamic { batch: 2 })).unwrap()),
+    ];
+    if let Ok(x) = XlaTarget::from_default_artifacts() {
+        targets.push(Box::new(x));
+    }
+    for t in targets.iter_mut() {
+        let field = t.malloc(&FieldDesc::new("field", ncomp, n)).unwrap();
+        let result = t.malloc(&FieldDesc::new("result", ncomp, 1)).unwrap();
+        t.copy_to_target(field, &host_data).unwrap();
+        let args = LaunchArgs::new(Geometry::new(16, 16, 16),
+                                   LatticeModel::D3Q19)
+            .bind("field", field)
+            .bind("result", result);
+        t.launch(KernelId::ReduceSum, &args).unwrap();
+        let mut out = vec![0.0; ncomp];
+        t.copy_from_target(result, &mut out).unwrap();
+        for (c, (a, b)) in out.iter().zip(&want).enumerate() {
+            assert!((a - b).abs() < 1e-8 * b.abs(),
+                    "{}: comp {c}: {a} vs {b}", t.describe());
+        }
+    }
+}
+
+#[test]
+fn missing_artifact_error_is_actionable() {
+    let Ok(mut t) = XlaTarget::from_default_artifacts() else {
+        eprintln!("SKIP: no artifacts");
+        return;
+    };
+    // no collision/full_step artifact exists for this odd size
+    let geom = Geometry::new(5, 5, 5);
+    let model = LatticeModel::D3Q19;
+    let (f0, g0) = spinodal_state(model, &geom, 1);
+    let mut engine =
+        LbEngine::new(&mut t, geom, model, FeParams::default()).unwrap();
+    engine.load_state(&f0, &g0).unwrap();
+    let err = engine.run(1).unwrap_err().to_string();
+    assert!(err.contains("make artifacts"), "{err}");
+}

@@ -1,0 +1,289 @@
+//! Property-based tests (in-tree generator; proptest is unavailable in
+//! this offline environment). Each property runs over many randomized
+//! cases seeded deterministically, and failures print the seed.
+
+use targetdp::free_energy::symmetric::FeParams;
+use targetdp::lattice::decomp::{step_multidomain, SlabDecomposition};
+use targetdp::lattice::geometry::Geometry;
+use targetdp::lb::collision::{collide_lattice, collide_sites_scalar};
+use targetdp::lb::init::Rng64;
+use targetdp::lb::model::{d2q9, d3q19, VelSet};
+use targetdp::lb::propagation::stream;
+use targetdp::targetdp::masked;
+use targetdp::targetdp::tlp::{Schedule, TlpPool};
+
+/// Random admissible free-energy parameters.
+fn random_params(rng: &mut Rng64) -> FeParams {
+    let a = -(0.01 + 0.15 * (rng.uniform() + 0.5));
+    FeParams {
+        a,
+        b: -a * (0.5 + (rng.uniform() + 0.5)),
+        kappa: 0.01 + 0.1 * (rng.uniform() + 0.5),
+        gamma: 0.5 + (rng.uniform() + 0.5),
+        tau_f: 0.6 + 1.5 * (rng.uniform() + 0.5),
+        tau_g: 0.6 + 1.5 * (rng.uniform() + 0.5),
+    }
+}
+
+fn random_state(vs: &VelSet, nsites: usize, rng: &mut Rng64)
+                -> (Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>) {
+    let mut f = vec![0.0; vs.nvel * nsites];
+    let mut g = vec![0.0; vs.nvel * nsites];
+    for i in 0..vs.nvel {
+        for s in 0..nsites {
+            f[i * nsites + s] = vs.wv[i] * (1.0 + 0.15 * rng.uniform());
+            g[i * nsites + s] = vs.wv[i] * 0.2 * rng.uniform();
+        }
+    }
+    let mut grad = vec![0.0; 3 * nsites];
+    for d in 0..vs.ndim {
+        for s in 0..nsites {
+            grad[d * nsites + s] = 0.02 * rng.uniform();
+        }
+    }
+    let lap: Vec<f64> = (0..nsites).map(|_| 0.02 * rng.uniform()).collect();
+    (f, g, grad, lap)
+}
+
+fn invariants(vs: &VelSet, f: &[f64], g: &[f64], nsites: usize)
+              -> (f64, [f64; 3], f64) {
+    let mut mass = 0.0;
+    let mut mom = [0.0f64; 3];
+    for i in 0..vs.nvel {
+        for s in 0..nsites {
+            let fi = f[i * nsites + s];
+            mass += fi;
+            for a in 0..3 {
+                mom[a] += vs.cv[i][a] * fi;
+            }
+        }
+    }
+    (mass, mom, g.iter().sum())
+}
+
+/// PROPERTY: collision conserves mass, momentum and phi for any admissible
+/// parameters, lattice, VVL and state.
+#[test]
+fn prop_collision_conserves() {
+    for case in 0..40u64 {
+        let mut rng = Rng64::new(1000 + case);
+        let vs = if case % 2 == 0 { d3q19() } else { d2q9() };
+        let nsites = 32 + (rng.next_u64() % 200) as usize;
+        let vvl = [1, 2, 4, 8, 16, 32][(rng.next_u64() % 6) as usize];
+        let p = random_params(&mut rng);
+        let (mut f, mut g, grad, lap) = random_state(vs, nsites, &mut rng);
+        let (m0, mom0, phi0) = invariants(vs, &f, &g, nsites);
+        collide_lattice(vs, &p, &mut f, &mut g, &grad, &lap, nsites,
+                        &TlpPool::serial(), vvl, false);
+        let (m1, mom1, phi1) = invariants(vs, &f, &g, nsites);
+        assert!((m1 - m0).abs() < 1e-10, "case {case}: mass");
+        assert!((phi1 - phi0).abs() < 1e-10, "case {case}: phi");
+        for a in 0..3 {
+            assert!((mom1[a] - mom0[a]).abs() < 1e-10,
+                    "case {case}: mom[{a}]");
+        }
+    }
+}
+
+/// PROPERTY: the VVL partitioning never changes the physics (chunked ==
+/// scalar for every VVL, nsites, alignment).
+#[test]
+fn prop_vvl_invariance() {
+    for case in 0..30u64 {
+        let mut rng = Rng64::new(9000 + case);
+        let vs = if case % 2 == 0 { d3q19() } else { d2q9() };
+        // deliberately misaligned sizes to exercise tail chunks
+        let nsites = 17 + (rng.next_u64() % 150) as usize;
+        let p = random_params(&mut rng);
+        let (f0, g0, grad, lap) = random_state(vs, nsites, &mut rng);
+
+        let mut f_ref = f0.clone();
+        let mut g_ref = g0.clone();
+        collide_sites_scalar(vs, &p, &mut f_ref, &mut g_ref, &grad, &lap,
+                             nsites, 0, nsites);
+
+        let vvl = [2, 4, 8, 16, 32][(rng.next_u64() % 5) as usize];
+        let mut f = f0;
+        let mut g = g0;
+        collide_lattice(vs, &p, &mut f, &mut g, &grad, &lap, nsites,
+                        &TlpPool::serial(), vvl, false);
+        for (a, b) in f.iter().zip(&f_ref) {
+            assert!((a - b).abs() < 1e-13, "case {case} vvl={vvl}");
+        }
+        for (a, b) in g.iter().zip(&g_ref) {
+            assert!((a - b).abs() < 1e-13, "case {case} vvl={vvl}");
+        }
+    }
+}
+
+/// PROPERTY: TLP scheduling (threads, static/dynamic, batch) never changes
+/// results — bitwise.
+#[test]
+fn prop_tlp_schedule_invariance() {
+    for case in 0..15u64 {
+        let mut rng = Rng64::new(4000 + case);
+        let vs = d3q19();
+        let nsites = 64 + (rng.next_u64() % 100) as usize;
+        let p = random_params(&mut rng);
+        let (f0, g0, grad, lap) = random_state(vs, nsites, &mut rng);
+        let mut f_ref = f0.clone();
+        let mut g_ref = g0.clone();
+        collide_lattice(vs, &p, &mut f_ref, &mut g_ref, &grad, &lap, nsites,
+                        &TlpPool::serial(), 8, false);
+        let threads = 2 + (rng.next_u64() % 3) as usize;
+        let batch = 1 + (rng.next_u64() % 4) as usize;
+        let pool = TlpPool::new(threads, Schedule::Dynamic { batch });
+        let mut f = f0;
+        let mut g = g0;
+        collide_lattice(vs, &p, &mut f, &mut g, &grad, &lap, nsites, &pool,
+                        8, false);
+        assert_eq!(f, f_ref, "case {case}");
+        assert_eq!(g, g_ref, "case {case}");
+    }
+}
+
+/// PROPERTY: streaming is a bijection — forward then backward is identity.
+#[test]
+fn prop_stream_bijective() {
+    for case in 0..20u64 {
+        let mut rng = Rng64::new(7000 + case);
+        let vs = if case % 2 == 0 { d3q19() } else { d2q9() };
+        let (lx, ly) = (2 + (rng.next_u64() % 6) as usize,
+                        2 + (rng.next_u64() % 6) as usize);
+        let lz = if vs.ndim == 3 { 2 + (rng.next_u64() % 4) as usize }
+                 else { 1 };
+        let geom = Geometry::new(lx, ly, lz);
+        let n = geom.nsites();
+        let src: Vec<f64> =
+            (0..vs.nvel * n).map(|_| rng.uniform()).collect();
+        let mut fwd = vec![0.0; vs.nvel * n];
+        stream(vs, &geom, &src, &mut fwd, &TlpPool::serial(), 4);
+        // pull with +c inverts the permutation
+        let mut back = vec![0.0; vs.nvel * n];
+        for s in 0..n {
+            let (x, y, z) = geom.coords(s);
+            for i in 0..vs.nvel {
+                let c = vs.ci[i];
+                let from = geom.neighbor(x, y, z, c[0], c[1], c[2]);
+                back[i * n + s] = fwd[i * n + from];
+            }
+        }
+        assert_eq!(back, src, "case {case}");
+    }
+}
+
+/// PROPERTY: masked pack/unpack restores exactly the masked subset and
+/// never touches the complement.
+#[test]
+fn prop_masked_copy_partition() {
+    for case in 0..25u64 {
+        let mut rng = Rng64::new(3000 + case);
+        let nsites = 8 + (rng.next_u64() % 64) as usize;
+        let ncomp = 1 + (rng.next_u64() % 19) as usize;
+        let src: Vec<f64> =
+            (0..ncomp * nsites).map(|_| rng.uniform()).collect();
+        let mask: Vec<bool> =
+            (0..nsites).map(|_| rng.next_u64() % 3 == 0).collect();
+        let idx = masked::mask_indices(&mask);
+        let packed = masked::pack(&src, nsites, ncomp, &idx);
+        let sentinel = -42.0;
+        let mut dst = vec![sentinel; ncomp * nsites];
+        masked::unpack(&mut dst, nsites, ncomp, &idx, &packed);
+        for c in 0..ncomp {
+            for s in 0..nsites {
+                let got = dst[c * nsites + s];
+                if mask[s] {
+                    assert_eq!(got, src[c * nsites + s], "case {case}");
+                } else {
+                    assert_eq!(got, sentinel, "case {case}");
+                }
+            }
+        }
+    }
+}
+
+/// PROPERTY: domain decomposition is exact for any domain count.
+#[test]
+fn prop_decomposition_exact() {
+    for case in 0..6u64 {
+        let mut rng = Rng64::new(5000 + case);
+        let vs = d3q19();
+        let p = FeParams::default();
+        let lx = 6 + (rng.next_u64() % 7) as usize;
+        let geom = Geometry::new(lx, 4, 3);
+        let n = geom.nsites();
+        let mut f = vec![0.0; vs.nvel * n];
+        let mut g = vec![0.0; vs.nvel * n];
+        targetdp::lb::init::init_spinodal(vs, &p, &geom, &mut f, &mut g,
+                                          0.05, 60 + case);
+        let pool = TlpPool::serial();
+
+        // single-domain reference: 2 steps
+        let mut f1 = f.clone();
+        let mut g1 = g.clone();
+        for _ in 0..2 {
+            let mut phi = vec![0.0; n];
+            let mut grad = vec![0.0; 3 * n];
+            let mut lap = vec![0.0; n];
+            targetdp::lb::moments::phi_from_g(vs, &g1, &mut phi, n, &pool,
+                                              8);
+            targetdp::free_energy::gradient::gradient_fd(
+                &geom, &phi, &mut grad, &mut lap, &pool, 8);
+            collide_lattice(vs, &p, &mut f1, &mut g1, &grad, &lap, n, &pool,
+                            8, false);
+            let mut fs = vec![0.0; vs.nvel * n];
+            let mut gs = vec![0.0; vs.nvel * n];
+            stream(vs, &geom, &f1, &mut fs, &pool, 8);
+            stream(vs, &geom, &g1, &mut gs, &pool, 8);
+            f1 = fs;
+            g1 = gs;
+        }
+
+        let ndom = 2 + (rng.next_u64() % (lx as u64 - 2)) as usize;
+        let dec = SlabDecomposition::new(geom, ndom).unwrap();
+        let mut fl = dec.scatter(&f, vs.nvel);
+        let mut gl = dec.scatter(&g, vs.nvel);
+        for _ in 0..2 {
+            step_multidomain(&dec, vs, &p, &mut fl, &mut gl, &pool, 8);
+        }
+        let f2 = dec.gather(&fl, vs.nvel);
+        let g2 = dec.gather(&gl, vs.nvel);
+        for (a, b) in f1.iter().zip(&f2) {
+            assert!((a - b).abs() < 1e-13, "case {case} ndom={ndom}");
+        }
+        for (a, b) in g1.iter().zip(&g2) {
+            assert!((a - b).abs() < 1e-13, "case {case} ndom={ndom}");
+        }
+    }
+}
+
+/// PROPERTY: TLP chunk coverage is an exact partition for random (n, vvl,
+/// threads, schedule).
+#[test]
+fn prop_tlp_partition() {
+    use std::sync::atomic::{AtomicU32, Ordering};
+    for case in 0..40u64 {
+        let mut rng = Rng64::new(8000 + case);
+        let n = (rng.next_u64() % 500) as usize;
+        let vvl = 1 + (rng.next_u64() % 33) as usize;
+        let threads = 1 + (rng.next_u64() % 4) as usize;
+        let pool = if rng.next_u64() % 2 == 0 {
+            TlpPool::new(threads, Schedule::Static)
+        } else {
+            TlpPool::new(threads, Schedule::Dynamic {
+                batch: 1 + (rng.next_u64() % 5) as usize,
+            })
+        };
+        let hits: Vec<AtomicU32> =
+            (0..n).map(|_| AtomicU32::new(0)).collect();
+        pool.for_chunks(n, vvl, |base, len| {
+            for s in base..base + len {
+                hits[s].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        for (s, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1,
+                       "case {case}: site {s} n={n} vvl={vvl}");
+        }
+    }
+}

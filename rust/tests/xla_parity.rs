@@ -1,0 +1,198 @@
+//! Cross-layer parity: the AOT JAX/Pallas executables (L1/L2) must agree
+//! with the Rust host kernels (L3) to f64 round-off. This is the test that
+//! pins all three layers of the stack together.
+//!
+//! Requires `make artifacts` (skipped with a message otherwise).
+
+use targetdp::lattice::geometry::Geometry;
+use targetdp::lb::collision::collide_lattice;
+use targetdp::lb::init;
+use targetdp::lb::model::{d3q19, LatticeModel};
+use targetdp::runtime::Runtime;
+use targetdp::targetdp::tlp::TlpPool;
+
+fn runtime_or_skip() -> Option<Runtime> {
+    match Runtime::load(Runtime::default_dir()) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP xla parity: {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn scale_artifact_matches_host() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let n = 4096;
+    let field: Vec<f64> = (0..3 * n).map(|i| (i as f64).sin()).collect();
+    let out = rt
+        .execute("scale_n4096_vvl256", &[&field])
+        .expect("scale executes");
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].len(), 3 * n);
+    for (i, (a, b)) in out[0].iter().zip(&field).enumerate() {
+        assert!((a - 1.5 * b).abs() < 1e-15, "elem {i}: {a} vs {}", 1.5 * b);
+    }
+}
+
+#[test]
+fn gradient_artifact_matches_host() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let geom = Geometry::new(16, 16, 16);
+    let n = geom.nsites();
+    let phi: Vec<f64> = (0..n)
+        .map(|s| {
+            let (x, y, z) = geom.coords(s);
+            (x as f64 * 0.39).sin() + (y as f64 * 0.17).cos()
+                + (z as f64 * 0.58).sin()
+        })
+        .collect();
+    let out = rt.execute("gradient_16x16x16", &[&phi]).expect("gradient");
+    assert_eq!(out.len(), 2);
+
+    let mut grad = vec![0.0; 3 * n];
+    let mut lap = vec![0.0; n];
+    targetdp::free_energy::gradient::gradient_fd(
+        &geom, &phi, &mut grad, &mut lap, &TlpPool::serial(), 8);
+
+    for (i, (a, b)) in out[0].iter().zip(&grad).enumerate() {
+        assert!((a - b).abs() < 1e-12, "grad[{i}]: {a} vs {b}");
+    }
+    for (i, (a, b)) in out[1].iter().zip(&lap).enumerate() {
+        assert!((a - b).abs() < 1e-12, "lap[{i}]: {a} vs {b}");
+    }
+}
+
+#[test]
+fn collision_artifact_matches_host_kernel() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let meta = rt
+        .find(|m| m.matches_flat("collision", "d3q19", 4096))
+        .expect("collision artifact")
+        .clone();
+    let p = meta.params.expect("baked params");
+    let vs = d3q19();
+    let n = 4096;
+
+    // deterministic near-equilibrium state
+    let geom = Geometry::new(16, 16, 16);
+    let mut f = vec![0.0; vs.nvel * n];
+    let mut g = vec![0.0; vs.nvel * n];
+    init::init_spinodal(vs, &p, &geom, &mut f, &mut g, 0.05, 2024);
+    let mut rng = init::Rng64::new(7);
+    let grad: Vec<f64> = (0..3 * n).map(|_| 0.01 * rng.uniform()).collect();
+    let lap: Vec<f64> = (0..n).map(|_| 0.01 * rng.uniform()).collect();
+
+    let out = rt
+        .execute(&meta.name, &[&f, &g, &grad, &lap])
+        .expect("collision executes");
+    assert_eq!(out.len(), 2);
+
+    let mut f_host = f.clone();
+    let mut g_host = g.clone();
+    collide_lattice(vs, &p, &mut f_host, &mut g_host, &grad, &lap, n,
+                    &TlpPool::serial(), 8, false);
+
+    let mut max_f: f64 = 0.0;
+    for (a, b) in out[0].iter().zip(&f_host) {
+        max_f = max_f.max((a - b).abs());
+    }
+    let mut max_g: f64 = 0.0;
+    for (a, b) in out[1].iter().zip(&g_host) {
+        max_g = max_g.max((a - b).abs());
+    }
+    assert!(max_f < 1e-13, "f parity: max |diff| = {max_f:e}");
+    assert!(max_g < 1e-13, "g parity: max |diff| = {max_g:e}");
+}
+
+#[test]
+fn full_step_artifact_matches_host_pipeline() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let vs = d3q19();
+    let geom = Geometry::new(16, 16, 16);
+    let n = geom.nsites();
+    let meta = rt
+        .find(|m| m.matches_grid("full_step", "d3q19", &[16, 16, 16]))
+        .expect("full_step artifact")
+        .clone();
+    let p = meta.params.expect("baked params");
+
+    let mut f = vec![0.0; vs.nvel * n];
+    let mut g = vec![0.0; vs.nvel * n];
+    init::init_spinodal(vs, &p, &geom, &mut f, &mut g, 0.05, 31337);
+
+    // host pipeline: phi -> grad -> collide -> stream
+    let pool = TlpPool::serial();
+    let mut f_host = f.clone();
+    let mut g_host = g.clone();
+    let mut phi = vec![0.0; n];
+    let mut grad = vec![0.0; 3 * n];
+    let mut lap = vec![0.0; n];
+    targetdp::lb::moments::phi_from_g(vs, &g_host, &mut phi, n, &pool, 8);
+    targetdp::free_energy::gradient::gradient_fd(&geom, &phi, &mut grad,
+                                                 &mut lap, &pool, 8);
+    collide_lattice(vs, &p, &mut f_host, &mut g_host, &grad, &lap, n, &pool,
+                    8, false);
+    let mut fs = vec![0.0; vs.nvel * n];
+    let mut gs = vec![0.0; vs.nvel * n];
+    targetdp::lb::propagation::stream(vs, &geom, &f_host, &mut fs, &pool, 8);
+    targetdp::lb::propagation::stream(vs, &geom, &g_host, &mut gs, &pool, 8);
+
+    let out = rt.execute(&meta.name, &[&f, &g]).expect("full_step executes");
+    let mut max_f: f64 = 0.0;
+    for (a, b) in out[0].iter().zip(&fs) {
+        max_f = max_f.max((a - b).abs());
+    }
+    let mut max_g: f64 = 0.0;
+    for (a, b) in out[1].iter().zip(&gs) {
+        max_g = max_g.max((a - b).abs());
+    }
+    assert!(max_f < 1e-12, "full step f parity: {max_f:e}");
+    assert!(max_g < 1e-12, "full step g parity: {max_g:e}");
+}
+
+#[test]
+fn multi_step_equals_repeated_full_step() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let Some(multi) = rt
+        .find(|m| m.matches_grid("multi_step", "d3q19", &[16, 16, 16]))
+        .cloned()
+    else {
+        eprintln!("SKIP: no multi_step artifact");
+        return;
+    };
+    let steps = multi.steps.unwrap();
+    let full = rt
+        .find(|m| m.matches_grid("full_step", "d3q19", &[16, 16, 16]))
+        .expect("full_step artifact")
+        .clone();
+
+    let vs = d3q19();
+    let geom = Geometry::new(16, 16, 16);
+    let n = geom.nsites();
+    let p = multi.params.expect("params");
+    let mut f = vec![0.0; vs.nvel * n];
+    let mut g = vec![0.0; vs.nvel * n];
+    init::init_spinodal(vs, &p, &geom, &mut f, &mut g, 0.05, 5150);
+
+    let fused = rt.execute(&multi.name, &[&f, &g]).expect("multi_step");
+
+    let mut fr = f.clone();
+    let mut gr = g.clone();
+    for _ in 0..steps {
+        let out = rt.execute(&full.name, &[&fr, &gr]).expect("full_step");
+        fr = out[0].clone();
+        gr = out[1].clone();
+    }
+
+    let mut max_d: f64 = 0.0;
+    for (a, b) in fused[0].iter().zip(&fr) {
+        max_d = max_d.max((a - b).abs());
+    }
+    for (a, b) in fused[1].iter().zip(&gr) {
+        max_d = max_d.max((a - b).abs());
+    }
+    assert!(max_d < 1e-11, "multi-step parity: {max_d:e}");
+    let _ = LatticeModel::D3Q19;
+}
