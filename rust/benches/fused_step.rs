@@ -1,0 +1,73 @@
+//! E7 — the host fusion tier: fused `FullStep` (collide→push-stream over
+//! the precomputed StreamTable) vs the unfused 5-kernel pipeline, swept
+//! over VVL and TLP thread count. The fused sweep performs 2 instead of 4
+//! full 19-component f/g traversals per step, so on a memory-bound
+//! lattice it should land well above the unfused MLUPS; the persistent
+//! TLP worker pool means the thread axis carries no per-launch spawn cost
+//! (see `targetdp/tlp.rs`).
+//!
+//! Reports the usual BENCH-CSV lines plus `FUSED-SPEEDUP` ratio lines the
+//! experiment scripts grep for.
+
+use targetdp::bench::Bench;
+use targetdp::free_energy::symmetric::FeParams;
+use targetdp::lattice::geometry::Geometry;
+use targetdp::lb::engine::LbEngine;
+use targetdp::lb::init;
+use targetdp::lb::model::LatticeModel;
+use targetdp::targetdp::tlp::{Schedule, TlpPool};
+use targetdp::targetdp::HostTarget;
+
+const THREADS: [usize; 3] = [1, 2, 4];
+const VVLS: [usize; 5] = [1, 2, 4, 8, 16];
+
+fn label(threads: usize, vvl: usize, fused: bool) -> String {
+    format!("threads={threads} vvl={vvl} {}",
+            if fused { "fused" } else { "unfused" })
+}
+
+fn main() {
+    let model = LatticeModel::D3Q19;
+    let vs = model.velset();
+    let geom = Geometry::new(24, 24, 24);
+    let n = geom.nsites();
+    let steps_per_iter = 2u64;
+    let p = FeParams::default();
+
+    let mut f0 = vec![0.0; vs.nvel * n];
+    let mut g0 = vec![0.0; vs.nvel * n];
+    init::init_spinodal(vs, &p, &geom, &mut f0, &mut g0, 0.05, 2024);
+
+    let mut bench = Bench::new("host FullStep fusion: 24^3 D3Q19");
+    let sites = Some((n as u64 * steps_per_iter) as f64);
+
+    for threads in THREADS {
+        for vvl in VVLS {
+            for fused in [false, true] {
+                let pool = TlpPool::new(threads, Schedule::Static);
+                let mut target = HostTarget::simd(vvl, pool).unwrap();
+                let mut engine =
+                    LbEngine::new(&mut target, geom, model, p).unwrap();
+                engine.set_fusion(fused);
+                engine.load_state(&f0, &g0).unwrap();
+                bench.case(&label(threads, vvl, fused), sites, || {
+                    engine.run(steps_per_iter).unwrap();
+                });
+            }
+        }
+    }
+
+    bench.report();
+
+    println!();
+    for threads in THREADS {
+        for vvl in VVLS {
+            let unfused = bench.mean_of(&label(threads, vvl, false));
+            let fused = bench.mean_of(&label(threads, vvl, true));
+            if let (Some(u), Some(f)) = (unfused, fused) {
+                println!("FUSED-SPEEDUP,threads={threads},vvl={vvl},\
+                          {:.3}", u / f);
+            }
+        }
+    }
+}

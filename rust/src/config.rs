@@ -49,6 +49,9 @@ pub struct TargetCfg {
     pub schedule: String,
     /// dynamic-schedule batch size.
     pub batch: usize,
+    /// Use the fused `FullStep`/`MultiStep` tiers when the target has them
+    /// (`false` forces the unfused 5-kernel pipeline).
+    pub fusion: bool,
     /// Preferred Pallas block for the xla backend (0 = any).
     pub xla_vvl_block: usize,
 }
@@ -61,6 +64,7 @@ impl Default for TargetCfg {
             threads: 1,
             schedule: "static".into(),
             batch: 4,
+            fusion: true,
             xla_vvl_block: 0,
         }
     }
@@ -115,6 +119,7 @@ impl Config {
             threads: tgt.usize_or("threads", dt.threads)?,
             schedule: tgt.str_or("schedule", &dt.schedule)?,
             batch: tgt.usize_or("batch", dt.batch)?,
+            fusion: tgt.bool_or("fusion", dt.fusion)?,
             xla_vvl_block: tgt.usize_or("xla_vvl_block", 0)?,
         };
 
@@ -261,6 +266,18 @@ mod tests {
         let cfg = Config::from_toml_str(SAMPLE).unwrap();
         let t = cfg.build_target().unwrap();
         assert_eq!(t.describe(), "host-simd(vvl=8,threads=1)");
+    }
+
+    #[test]
+    fn fusion_defaults_on_and_parses_off() {
+        let cfg = Config::from_toml_str(SAMPLE).unwrap();
+        assert!(cfg.target.fusion);
+        let cfg = Config::from_toml_str(
+            "[simulation]\nlattice = \"d2q9\"\nlx = 8\nly = 8\nlz = 1\n\
+             steps = 5\n\n[target]\nfusion = false\n",
+        )
+        .unwrap();
+        assert!(!cfg.target.fusion);
     }
 
     #[test]

@@ -20,6 +20,8 @@ pub struct RunSummary {
     pub nsites: usize,
     pub seconds: f64,
     pub mlups: f64,
+    /// Whether the run used a fused (`FullStep`/`MultiStep`) kernel tier.
+    pub fused: bool,
     pub initial: Observables,
     pub r#final: Observables,
 }
@@ -51,6 +53,10 @@ pub fn run_simulation(cfg: &Config) -> Result<RunSummary> {
 
     let mut engine =
         LbEngine::new(target.as_mut(), geom, model, cfg.free_energy)?;
+    engine.set_fusion(cfg.target.fusion);
+    let fused = engine.fused_active();
+    println!("pipeline : {}",
+             if fused { "fused full-step" } else { "unfused (5 kernels)" });
 
     // initial condition
     let mut f = vec![0.0; vs.nvel * n];
@@ -126,6 +132,7 @@ pub fn run_simulation(cfg: &Config) -> Result<RunSummary> {
         nsites: n,
         seconds: timer.seconds(),
         mlups: mlups.value(),
+        fused,
         initial,
         r#final: final_obs,
     };
@@ -174,9 +181,39 @@ mod tests {
                                10, 8)
             .unwrap();
         assert_eq!(s.steps, 10);
+        assert!(s.fused, "host backend defaults to the fused tier");
         assert!(s.mass_drift() < 1e-12, "mass drift {}", s.mass_drift());
         assert!(s.phi_drift() < 1e-12);
         assert!(s.mlups > 0.0);
+    }
+
+    #[test]
+    fn fusion_off_runs_unfused_with_same_physics() {
+        let mk = |fusion: bool| {
+            let mut cfg = Config {
+                simulation: crate::config::SimulationCfg {
+                    lattice: "d2q9".into(),
+                    lx: 12,
+                    ly: 12,
+                    lz: 1,
+                    steps: 6,
+                    init: "spinodal".into(),
+                    noise: 0.05,
+                    seed: 99,
+                    radius: 4.0,
+                },
+                target: Default::default(),
+                free_energy: Default::default(),
+                output: Default::default(),
+            };
+            cfg.target.fusion = fusion;
+            run_simulation(&cfg).unwrap()
+        };
+        let fused = mk(true);
+        let unfused = mk(false);
+        assert!(fused.fused && !unfused.fused);
+        assert_eq!(fused.r#final.phi_variance, unfused.r#final.phi_variance,
+                   "fused and unfused pipelines are bit-identical");
     }
 
     #[test]

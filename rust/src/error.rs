@@ -2,6 +2,10 @@
 
 use std::fmt;
 
+// keep the From impl below building against whatever stands in for the
+// PJRT bindings (see runtime/pjrt_stub.rs)
+use crate::runtime::pjrt_stub as xla;
+
 /// Errors produced by the targetDP library.
 #[derive(Debug)]
 pub enum Error {

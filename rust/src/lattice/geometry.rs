@@ -6,7 +6,7 @@
 //! what the SoA layout vectorises over.
 
 /// A periodic Cartesian lattice. 2-D models use `lz == 1`.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct Geometry {
     pub lx: usize,
     pub ly: usize,
@@ -44,6 +44,15 @@ impl Geometry {
     pub fn wrap(coord: i64, extent: usize) -> usize {
         let e = extent as i64;
         (((coord % e) + e) % e) as usize
+    }
+
+    /// Flattened-index delta of a lattice vector, ignoring periodic wrap:
+    /// `index(x+c) - index(x)` whenever no coordinate wraps. This is what
+    /// makes interior streaming a contiguous copy at constant offset
+    /// ([`crate::lattice::stream_table::StreamTable`]).
+    #[inline(always)]
+    pub fn linear_offset(&self, c: [i64; 3]) -> i64 {
+        (c[0] * self.ly as i64 + c[1]) * self.lz as i64 + c[2]
     }
 
     /// Site index of the periodic neighbour at offset `(dx, dy, dz)`.

@@ -1,11 +1,13 @@
 //! Structured-grid substrate: geometry, SoA lattice fields, halo masks,
-//! domain decomposition and output.
+//! precomputed streaming tables, domain decomposition and output.
 
 pub mod decomp;
 pub mod field;
 pub mod geometry;
 pub mod halo;
 pub mod io;
+pub mod stream_table;
 
 pub use field::HostField;
 pub use geometry::Geometry;
+pub use stream_table::StreamTable;

@@ -1,0 +1,286 @@
+//! Precomputed streaming tables: no index arithmetic in the hot loop.
+//!
+//! LB propagation moves each population along its lattice vector. On a
+//! periodic grid flattened in C order the destination (push) or source
+//! (pull) of almost every site is at a *constant* linear offset
+//! ([`Geometry::linear_offset`]); only sites on the faces the vector
+//! crosses wrap around. The naive loop therefore spends its time in
+//! `coords`/`wrap` div-mod arithmetic to handle a minority of sites.
+//!
+//! [`StreamTable`] precomputes, per velocity,
+//!
+//! * the constant interior offset, and
+//! * a sorted **exception list** of the boundary sites whose periodic
+//!   image breaks the linear rule (`O(surface)` entries, built once per
+//!   `(velocity set, geometry)` and cached process-wide),
+//!
+//! so the hot loop degenerates into `memcpy`-able interior runs plus a
+//! short patch-up pass — used by both the standalone `Stream` kernel
+//! (pull) and the fused host `FullStep` collide→push-stream path.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::lattice::geometry::Geometry;
+use crate::lb::model::VelSet;
+
+/// One boundary-site exception: at `site` the linear-offset rule fails and
+/// the periodic partner is `other` (the pull *source* or push
+/// *destination*).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Hop {
+    pub site: u32,
+    pub other: u32,
+}
+
+/// Streaming map for one velocity.
+#[derive(Debug)]
+pub struct VelStream {
+    /// Linear index delta of the lattice vector: interior push goes to
+    /// `s + offset`, interior pull comes from `s - offset`.
+    pub offset: i64,
+    /// Sites (sorted) whose pull source wraps.
+    pub pull: Vec<Hop>,
+    /// Sites (sorted) whose push destination wraps.
+    pub push: Vec<Hop>,
+}
+
+/// Per-velocity streaming maps for one `(velocity set, geometry)` pair.
+#[derive(Debug)]
+pub struct StreamTable {
+    pub nsites: usize,
+    pub vels: Vec<VelStream>,
+}
+
+impl StreamTable {
+    /// Build the table by checking every site's periodic neighbour against
+    /// the linear rule — definitionally correct, O(nsites * nvel), done
+    /// once (prefer [`StreamTable::cached`]).
+    pub fn new(vs: &VelSet, geom: &Geometry) -> Self {
+        let n = geom.nsites();
+        assert!(n <= u32::MAX as usize, "lattice too large for u32 sites");
+        let mut vels = Vec::with_capacity(vs.nvel);
+        for i in 0..vs.nvel {
+            let c = vs.ci[i];
+            let offset = geom.linear_offset(c);
+            let mut pull = Vec::new();
+            let mut push = Vec::new();
+            for (x, y, z, s) in geom.iter() {
+                let from = geom.neighbor(x, y, z, -c[0], -c[1], -c[2]);
+                if from as i64 != s as i64 - offset {
+                    pull.push(Hop { site: s as u32, other: from as u32 });
+                }
+                let to = geom.neighbor(x, y, z, c[0], c[1], c[2]);
+                if to as i64 != s as i64 + offset {
+                    push.push(Hop { site: s as u32, other: to as u32 });
+                }
+            }
+            vels.push(VelStream { offset, pull, push });
+        }
+        StreamTable { nsites: n, vels }
+    }
+
+    /// Process-wide table cache keyed by `(velocity set, geometry)` — the
+    /// paper's "build launch geometry once, reuse every step" amortisation.
+    ///
+    /// Velocity sets are identified by `(name, nvel)`: the in-tree sets
+    /// are singletons, so this is exact; a hand-built [`VelSet`] aliasing
+    /// a stock name is caught by the debug offset check below.
+    pub fn cached(vs: &VelSet, geom: &Geometry) -> Arc<StreamTable> {
+        type Key = (&'static str, usize, Geometry);
+        static CACHE: OnceLock<Mutex<HashMap<Key, Arc<StreamTable>>>> =
+            OnceLock::new();
+        let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+        let key = (vs.name, vs.nvel, *geom);
+        let mut map = cache.lock().unwrap();
+        let table = map
+            .entry(key)
+            .or_insert_with(|| Arc::new(StreamTable::new(vs, geom)))
+            .clone();
+        debug_assert!(
+            (0..vs.nvel)
+                .all(|i| table.vels[i].offset == geom.linear_offset(vs.ci[i])),
+            "cached StreamTable does not match this velocity set \
+             (two distinct VelSets share the name {:?})",
+            vs.name
+        );
+        table
+    }
+
+    /// Pull source of `site` for velocity `i` (boundary-aware).
+    #[inline]
+    pub fn pull_from(&self, i: usize, site: usize) -> usize {
+        let v = &self.vels[i];
+        match v.pull.binary_search_by_key(&(site as u32), |h| h.site) {
+            Ok(k) => v.pull[k].other as usize,
+            Err(_) => (site as i64 - v.offset) as usize,
+        }
+    }
+
+    /// Push destination of `site` for velocity `i` (boundary-aware).
+    #[inline]
+    pub fn push_to(&self, i: usize, site: usize) -> usize {
+        let v = &self.vels[i];
+        match v.push.binary_search_by_key(&(site as u32), |h| h.site) {
+            Ok(k) => v.push[k].other as usize,
+            Err(_) => (site as i64 + v.offset) as usize,
+        }
+    }
+
+    /// Pull-stream the chunk of sites `[base, base + dst_chunk.len())` of
+    /// one SoA velocity row: `dst_chunk[k] = src_row[pull_from(i, base+k)]`.
+    /// Interior runs between exceptions are contiguous `copy_from_slice`s.
+    /// The destination is exactly the chunk's own slice, so parallel
+    /// chunks hold genuinely disjoint `&mut` borrows.
+    pub fn pull_chunk(&self, i: usize, src_row: &[f64],
+                      dst_chunk: &mut [f64], base: usize) {
+        let v = &self.vels[i];
+        let end = base + dst_chunk.len();
+        let lo = v.pull.partition_point(|h| (h.site as usize) < base);
+        let hi =
+            lo + v.pull[lo..].partition_point(|h| (h.site as usize) < end);
+        let mut cur = base;
+        for h in &v.pull[lo..hi] {
+            let s = h.site as usize;
+            if s > cur {
+                let src0 = (cur as i64 - v.offset) as usize;
+                dst_chunk[cur - base..s - base]
+                    .copy_from_slice(&src_row[src0..src0 + (s - cur)]);
+            }
+            dst_chunk[s - base] = src_row[h.other as usize];
+            cur = s + 1;
+        }
+        if end > cur {
+            let src0 = (cur as i64 - v.offset) as usize;
+            dst_chunk[cur - base..]
+                .copy_from_slice(&src_row[src0..src0 + (end - cur)]);
+        }
+    }
+
+    /// Push-stream the post-collision values of sites `[base, base + len)`
+    /// (`vals[k]` belongs to site `base + k`) into one SoA velocity row:
+    /// `dst_row[push_to(i, s)] = vals[s - base]`.
+    pub fn push_row(&self, i: usize, dst_row: &mut [f64], base: usize,
+                    len: usize, vals: &[f64]) {
+        debug_assert!(vals.len() >= len);
+        let v = &self.vels[i];
+        let end = base + len;
+        let lo = v.push.partition_point(|h| (h.site as usize) < base);
+        let hi =
+            lo + v.push[lo..].partition_point(|h| (h.site as usize) < end);
+        let mut cur = base;
+        for h in &v.push[lo..hi] {
+            let s = h.site as usize;
+            if s > cur {
+                let d0 = (cur as i64 + v.offset) as usize;
+                dst_row[d0..d0 + (s - cur)]
+                    .copy_from_slice(&vals[cur - base..s - base]);
+            }
+            dst_row[h.other as usize] = vals[s - base];
+            cur = s + 1;
+        }
+        if end > cur {
+            let d0 = (cur as i64 + v.offset) as usize;
+            dst_row[d0..d0 + (end - cur)]
+                .copy_from_slice(&vals[cur - base..end - base]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lb::model::{d2q9, d3q19};
+
+    #[test]
+    fn maps_match_geometry_neighbor() {
+        for (vs, geom) in [(d3q19(), Geometry::new(4, 3, 2)),
+                           (d2q9(), Geometry::new(5, 4, 1))] {
+            let table = StreamTable::new(vs, &geom);
+            for i in 0..vs.nvel {
+                let c = vs.ci[i];
+                for (x, y, z, s) in geom.iter() {
+                    let from = geom.neighbor(x, y, z, -c[0], -c[1], -c[2]);
+                    let to = geom.neighbor(x, y, z, c[0], c[1], c[2]);
+                    assert_eq!(table.pull_from(i, s), from,
+                               "{} i={i} s={s} pull", vs.name);
+                    assert_eq!(table.push_to(i, s), to,
+                               "{} i={i} s={s} push", vs.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rest_velocity_has_no_exceptions() {
+        let geom = Geometry::new(4, 4, 4);
+        let table = StreamTable::new(d3q19(), &geom);
+        assert_eq!(table.vels[0].offset, 0);
+        assert!(table.vels[0].pull.is_empty());
+        assert!(table.vels[0].push.is_empty());
+        // face velocities wrap exactly one face worth of sites
+        let face = geom.nsites() / 4;
+        assert_eq!(table.vels[1].pull.len(), face);
+        assert_eq!(table.vels[1].push.len(), face);
+    }
+
+    #[test]
+    fn exceptions_are_sorted_by_site() {
+        let table = StreamTable::new(d3q19(), &Geometry::new(3, 4, 5));
+        for v in &table.vels {
+            assert!(v.pull.windows(2).all(|w| w[0].site < w[1].site));
+            assert!(v.push.windows(2).all(|w| w[0].site < w[1].site));
+        }
+    }
+
+    #[test]
+    fn pull_chunk_matches_per_site_pull() {
+        let vs = d3q19();
+        let geom = Geometry::new(4, 3, 5);
+        let n = geom.nsites();
+        let table = StreamTable::new(vs, &geom);
+        let src: Vec<f64> = (0..n).map(|k| k as f64 * 0.25 + 1.0).collect();
+        for i in 0..vs.nvel {
+            // whole row and an interior sub-range with odd alignment
+            for (base, len) in [(0, n), (3, n - 7)] {
+                let mut dst = vec![-1.0; len];
+                table.pull_chunk(i, &src, &mut dst, base);
+                for (k, d) in dst.iter().enumerate() {
+                    let s = base + k;
+                    assert_eq!(*d, src[table.pull_from(i, s)],
+                               "i={i} s={s}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn push_row_is_inverse_of_pull_chunk() {
+        let vs = d2q9();
+        let geom = Geometry::new(6, 5, 1);
+        let n = geom.nsites();
+        let table = StreamTable::new(vs, &geom);
+        let src: Vec<f64> = (0..n).map(|k| (k * k) as f64).collect();
+        for i in 0..vs.nvel {
+            // push the whole row in two unaligned chunks
+            let mut pushed = vec![0.0; n];
+            let split = 13;
+            table.push_row(i, &mut pushed, 0, split, &src[..split]);
+            table.push_row(i, &mut pushed, split, n - split, &src[split..]);
+            // pulling the pushed row recovers the original
+            let mut back = vec![0.0; n];
+            table.pull_chunk(i, &pushed, &mut back, 0);
+            assert_eq!(back, src, "i={i}");
+        }
+    }
+
+    #[test]
+    fn cached_tables_are_shared() {
+        let geom = Geometry::new(7, 2, 3);
+        let a = StreamTable::cached(d3q19(), &geom);
+        let b = StreamTable::cached(d3q19(), &geom);
+        assert!(Arc::ptr_eq(&a, &b));
+        let c = StreamTable::cached(d2q9(), &Geometry::new(7, 2, 1));
+        assert_eq!(c.vels.len(), 9);
+    }
+}

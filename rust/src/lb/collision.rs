@@ -11,98 +11,142 @@
 //!   loops of compile-time extent VVL over contiguous SoA lanes), which the
 //!   auto-vectorizer maps onto SIMD — the `TARGET_ILP` mechanism.
 //!
-//! Both must agree with `python/compile/kernels/ref.py` to f64 round-off;
-//! `rust/tests/xla_parity.rs` pins all three layers together.
+//! Both store through a shared per-site/per-lane core, which is also what
+//! the **fused collide→push-stream** variants ([`collide_stream_lattice`])
+//! reuse: the post-collision populations are scattered straight to their
+//! streaming destinations (via a precomputed
+//! [`StreamTable`]) instead of being written back and
+//! re-read by a separate `Stream` sweep — halving the f/g memory traffic
+//! of a timestep. Because fused and unfused paths run the *same* collision
+//! core and streaming is a pure permutation, they agree bit-for-bit
+//! (pinned by `tests/fused_parity.rs`).
+//!
+//! All paths must agree with `python/compile/kernels/ref.py` to f64
+//! round-off; `rust/tests/xla_parity.rs` pins the layers together.
 
 use crate::free_energy::symmetric::FeParams;
+use crate::lattice::stream_table::StreamTable;
 use crate::lb::model::{VelSet, CS2, MAX_NVEL};
 use crate::targetdp::tlp::TlpPool;
 
-/// Scalar reference path: collide sites `[base, base+len)` of SoA fields.
+/// Post-collision populations of one site (the scalar core shared by the
+/// in-place and fused scalar paths).
 ///
 /// Layout: `f[i * nsites + s]`, `grad[d * nsites + s]`, `lap[s]`.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn collide_site(vs: &VelSet, p: &FeParams, f: &[f64], g: &[f64],
+                grad: &[f64], lap: &[f64], nsites: usize, s: usize,
+                f_out: &mut [f64; MAX_NVEL], g_out: &mut [f64; MAX_NVEL]) {
+    // moments
+    let mut rho = 0.0;
+    let mut ru = [0.0f64; 3];
+    let mut phi = 0.0;
+    for i in 0..vs.nvel {
+        let fi = f[i * nsites + s];
+        rho += fi;
+        for a in 0..3 {
+            ru[a] += vs.cv[i][a] * fi;
+        }
+        phi += g[i * nsites + s];
+    }
+    let u = [ru[0] / rho, ru[1] / rho, ru[2] / rho];
+    let gd = [grad[s], grad[nsites + s], grad[2 * nsites + s]];
+    let lp = lap[s];
+
+    // free-energy sector
+    let mu = p.chemical_potential(phi, lp);
+    let iso_f = p.pth_iso(rho, phi, gd, lp) - rho * CS2;
+    let iso_g = p.gamma * mu - phi * CS2;
+
+    // packed symmetric tensors (xx xy xz yy yz zz)
+    let mut s_f = [0.0f64; 6];
+    let mut s_g = [0.0f64; 6];
+    for (k, (a, b)) in crate::lb::model::SYM6.iter().enumerate() {
+        let uu = u[*a] * u[*b];
+        s_f[k] = rho * uu + p.kappa * gd[*a] * gd[*b];
+        s_g[k] = phi * uu;
+        if a == b {
+            s_f[k] += iso_f;
+            s_g[k] += iso_g;
+        }
+    }
+
+    // relax toward the moment-projection equilibrium
+    let pu = [phi * u[0], phi * u[1], phi * u[2]];
+    for i in 0..vs.nvel {
+        let mut cb_f = 0.0;
+        let mut cb_g = 0.0;
+        for a in 0..3 {
+            cb_f += vs.cv[i][a] * ru[a];
+            cb_g += vs.cv[i][a] * pu[a];
+        }
+        let mut qs_f = 0.0;
+        let mut qs_g = 0.0;
+        for k in 0..6 {
+            qs_f += vs.q6[i][k] * s_f[k];
+            qs_g += vs.q6[i][k] * s_g[k];
+        }
+        let feq = vs.wv[i] * (rho + 3.0 * cb_f + 4.5 * qs_f);
+        let geq = vs.wv[i] * (phi + 3.0 * cb_g + 4.5 * qs_g);
+        let fi = f[i * nsites + s];
+        f_out[i] = fi - (fi - feq) / p.tau_f;
+        let gi = g[i * nsites + s];
+        g_out[i] = gi - (gi - geq) / p.tau_g;
+    }
+}
+
+/// Scalar reference path: collide sites `[base, base+len)` of SoA fields
+/// in place.
 #[allow(clippy::too_many_arguments)]
 pub fn collide_sites_scalar(vs: &VelSet, p: &FeParams, f: &mut [f64],
                             g: &mut [f64], grad: &[f64], lap: &[f64],
                             nsites: usize, base: usize, len: usize) {
+    let mut f_out = [0.0f64; MAX_NVEL];
+    let mut g_out = [0.0f64; MAX_NVEL];
     for s in base..base + len {
-        // moments
-        let mut rho = 0.0;
-        let mut ru = [0.0f64; 3];
-        let mut phi = 0.0;
+        collide_site(vs, p, f, g, grad, lap, nsites, s, &mut f_out,
+                     &mut g_out);
         for i in 0..vs.nvel {
-            let fi = f[i * nsites + s];
-            rho += fi;
-            for a in 0..3 {
-                ru[a] += vs.cv[i][a] * fi;
-            }
-            phi += g[i * nsites + s];
-        }
-        let u = [ru[0] / rho, ru[1] / rho, ru[2] / rho];
-        let gd = [grad[s], grad[nsites + s], grad[2 * nsites + s]];
-        let lp = lap[s];
-
-        // free-energy sector
-        let mu = p.chemical_potential(phi, lp);
-        let iso_f = p.pth_iso(rho, phi, gd, lp) - rho * CS2;
-        let iso_g = p.gamma * mu - phi * CS2;
-
-        // packed symmetric tensors (xx xy xz yy yz zz)
-        let mut s_f = [0.0f64; 6];
-        let mut s_g = [0.0f64; 6];
-        for (k, (a, b)) in crate::lb::model::SYM6.iter().enumerate() {
-            let uu = u[*a] * u[*b];
-            s_f[k] = rho * uu + p.kappa * gd[*a] * gd[*b];
-            s_g[k] = phi * uu;
-            if a == b {
-                s_f[k] += iso_f;
-                s_g[k] += iso_g;
-            }
-        }
-
-        // relax toward the moment-projection equilibrium
-        let pu = [phi * u[0], phi * u[1], phi * u[2]];
-        for i in 0..vs.nvel {
-            let mut cb_f = 0.0;
-            let mut cb_g = 0.0;
-            for a in 0..3 {
-                cb_f += vs.cv[i][a] * ru[a];
-                cb_g += vs.cv[i][a] * pu[a];
-            }
-            let mut qs_f = 0.0;
-            let mut qs_g = 0.0;
-            for k in 0..6 {
-                qs_f += vs.q6[i][k] * s_f[k];
-                qs_g += vs.q6[i][k] * s_g[k];
-            }
-            let feq = vs.wv[i] * (rho + 3.0 * cb_f + 4.5 * qs_f);
-            let geq = vs.wv[i] * (phi + 3.0 * cb_g + 4.5 * qs_g);
-            let fi = &mut f[i * nsites + s];
-            *fi -= (*fi - feq) / p.tau_f;
-            let gi = &mut g[i * nsites + s];
-            *gi -= (*gi - geq) / p.tau_g;
+            f[i * nsites + s] = f_out[i];
+            g[i * nsites + s] = g_out[i];
         }
     }
 }
 
-/// targetDP path: collide one chunk of `VVL` consecutive sites lane-wise.
-///
-/// `len == VVL` except for the tail chunk; dead lanes are computed with
-/// neutral fill values (rho = 1) and never stored.
+/// Fused scalar path: collide sites `[base, base+len)` of `f_src`/`g_src`
+/// and push-stream the post-collision populations into `f_dst`/`g_dst`.
+#[allow(clippy::too_many_arguments)]
+pub fn collide_stream_sites_scalar(vs: &VelSet, p: &FeParams,
+                                   f_src: &[f64], g_src: &[f64],
+                                   f_dst: &mut [f64], g_dst: &mut [f64],
+                                   grad: &[f64], lap: &[f64],
+                                   table: &StreamTable, nsites: usize,
+                                   base: usize, len: usize) {
+    let mut f_out = [0.0f64; MAX_NVEL];
+    let mut g_out = [0.0f64; MAX_NVEL];
+    for s in base..base + len {
+        collide_site(vs, p, f_src, g_src, grad, lap, nsites, s, &mut f_out,
+                     &mut g_out);
+        for i in 0..vs.nvel {
+            let to = table.push_to(i, s);
+            f_dst[i * nsites + to] = f_out[i];
+            g_dst[i * nsites + to] = g_out[i];
+        }
+    }
+}
+
+/// Load the distribution slab of one chunk: `fl/gl[i]` holds lane values
+/// for velocity i (stack resident, 19 * VVL * 8 B <= 4.75 KiB each).
+/// For a short tail (`len < VVL`) dead lanes get neutral fill (rho = 1).
 #[allow(clippy::too_many_arguments)]
 #[inline]
-pub fn collide_chunk<const VVL: usize>(vs: &VelSet, p: &FeParams,
-                                       f: &mut [f64], g: &mut [f64],
-                                       grad: &[f64], lap: &[f64],
-                                       nsites: usize, base: usize,
-                                       len: usize) {
-    // Load the distribution slab once: fl/gl[i] holds lane values for
-    // velocity i (stack resident, 19 * VVL * 8 B <= 4.75 KiB each).
-    let mut fl = [[0.0f64; VVL]; MAX_NVEL];
-    let mut gl = [[0.0f64; VVL]; MAX_NVEL];
-    let nvel = vs.nvel;
+fn load_lanes<const VVL: usize>(vs: &VelSet, f: &[f64], g: &[f64],
+                                nsites: usize, base: usize, len: usize,
+                                fl: &mut [[f64; VVL]; MAX_NVEL],
+                                gl: &mut [[f64; VVL]; MAX_NVEL]) {
     let full = len == VVL;
-    for i in 0..nvel {
+    for i in 0..vs.nvel {
         let fr = &f[i * nsites + base..];
         let gr = &g[i * nsites + base..];
         if full {
@@ -118,8 +162,22 @@ pub fn collide_chunk<const VVL: usize>(vs: &VelSet, p: &FeParams,
             }
         }
     }
+}
 
-    // moments, lane-wise (TARGET_ILP loops of compile-time extent VVL)
+/// The lane-wise collision core (`TARGET_ILP` loops of compile-time extent
+/// VVL): relax the loaded slab in place, `fl/gl[i]` becoming the
+/// post-collision populations. Shared by the in-place and fused chunks so
+/// the two paths are arithmetically identical.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn collide_lanes<const VVL: usize>(vs: &VelSet, p: &FeParams,
+                                   fl: &mut [[f64; VVL]; MAX_NVEL],
+                                   gl: &mut [[f64; VVL]; MAX_NVEL],
+                                   grad: &[f64], lap: &[f64],
+                                   nsites: usize, base: usize, len: usize) {
+    let nvel = vs.nvel;
+
+    // moments, lane-wise
     let mut rho = [0.0f64; VVL];
     let mut rux = [0.0f64; VVL];
     let mut ruy = [0.0f64; VVL];
@@ -190,15 +248,13 @@ pub fn collide_chunk<const VVL: usize>(vs: &VelSet, p: &FeParams,
         s_g[5][v] = ph * uz * uz + iso_g;
     }
 
-    // equilibrium + BGK relaxation, store lanes
+    // equilibrium + BGK relaxation, lanes updated in place
     let inv_tf = 1.0 / p.tau_f;
     let inv_tg = 1.0 / p.tau_g;
     for i in 0..nvel {
         let c = vs.cv[i];
         let q = vs.q6[i];
         let w = vs.wv[i];
-        let mut fo = [0.0f64; VVL];
-        let mut go = [0.0f64; VVL];
         for v in 0..VVL {
             let cb_f = c[0].mul_add(rux[v],
                         c[1].mul_add(ruy[v], c[2] * ruz[v]));
@@ -216,17 +272,61 @@ pub fn collide_chunk<const VVL: usize>(vs: &VelSet, p: &FeParams,
                            q[4].mul_add(s_g[4][v], q[5] * s_g[5][v])))));
             let feq = w * 3.0f64.mul_add(cb_f, 4.5f64.mul_add(qs_f, rho[v]));
             let geq = w * 3.0f64.mul_add(cb_g, 4.5f64.mul_add(qs_g, phi[v]));
-            fo[v] = (fl[i][v] - feq).mul_add(-inv_tf, fl[i][v]);
-            go[v] = (gl[i][v] - geq).mul_add(-inv_tg, gl[i][v]);
+            fl[i][v] = (fl[i][v] - feq).mul_add(-inv_tf, fl[i][v]);
+            gl[i][v] = (gl[i][v] - geq).mul_add(-inv_tg, gl[i][v]);
         }
+    }
+}
+
+/// targetDP path: collide one chunk of `VVL` consecutive sites lane-wise,
+/// in place.
+///
+/// `len == VVL` except for the tail chunk; dead lanes are computed with
+/// neutral fill values (rho = 1) and never stored.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+pub fn collide_chunk<const VVL: usize>(vs: &VelSet, p: &FeParams,
+                                       f: &mut [f64], g: &mut [f64],
+                                       grad: &[f64], lap: &[f64],
+                                       nsites: usize, base: usize,
+                                       len: usize) {
+    let mut fl = [[0.0f64; VVL]; MAX_NVEL];
+    let mut gl = [[0.0f64; VVL]; MAX_NVEL];
+    load_lanes(vs, f, g, nsites, base, len, &mut fl, &mut gl);
+    collide_lanes(vs, p, &mut fl, &mut gl, grad, lap, nsites, base, len);
+    for i in 0..vs.nvel {
         let fr = &mut f[i * nsites + base..];
         for v in 0..len {
-            fr[v] = fo[v];
+            fr[v] = fl[i][v];
         }
         let gr = &mut g[i * nsites + base..];
         for v in 0..len {
-            gr[v] = go[v];
+            gr[v] = gl[i][v];
         }
+    }
+}
+
+/// Fused targetDP path: collide one chunk lane-wise and push-stream the
+/// post-collision lanes straight into the destination buffers — the
+/// store side becomes one [`StreamTable::push_row`] scatter per velocity
+/// (contiguous interior runs + wrapped boundary patch-up) instead of a
+/// write-back that a later `Stream` sweep would have to re-read.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+pub fn collide_stream_chunk<const VVL: usize>(
+    vs: &VelSet, p: &FeParams, f_src: &[f64], g_src: &[f64],
+    f_dst: &mut [f64], g_dst: &mut [f64], grad: &[f64], lap: &[f64],
+    table: &StreamTable, nsites: usize, base: usize, len: usize,
+) {
+    let mut fl = [[0.0f64; VVL]; MAX_NVEL];
+    let mut gl = [[0.0f64; VVL]; MAX_NVEL];
+    load_lanes(vs, f_src, g_src, nsites, base, len, &mut fl, &mut gl);
+    collide_lanes(vs, p, &mut fl, &mut gl, grad, lap, nsites, base, len);
+    for i in 0..vs.nvel {
+        table.push_row(i, &mut f_dst[i * nsites..(i + 1) * nsites], base,
+                       len, &fl[i]);
+        table.push_row(i, &mut g_dst[i * nsites..(i + 1) * nsites], base,
+                       len, &gl[i]);
     }
 }
 
@@ -265,6 +365,50 @@ pub fn collide_lattice(vs: &VelSet, p: &FeParams, f: &mut [f64],
     });
 }
 
+/// Fused full-lattice collide→push-stream (the host `FullStep` hot loop):
+/// every chunk is collided in registers and scattered straight to its
+/// streaming destinations in `f_dst`/`g_dst`. Reads `f_src`/`g_src` and
+/// `grad`/`lap` exactly once; the separate `Stream` read-modify-write
+/// sweeps of the unfused pipeline disappear.
+#[allow(clippy::too_many_arguments)]
+pub fn collide_stream_lattice(vs: &VelSet, p: &FeParams, f_src: &[f64],
+                              g_src: &[f64], f_dst: &mut [f64],
+                              g_dst: &mut [f64], grad: &[f64], lap: &[f64],
+                              table: &StreamTable, nsites: usize,
+                              pool: &TlpPool, vvl: usize, scalar: bool) {
+    debug_assert_eq!(f_src.len(), vs.nvel * nsites);
+    debug_assert_eq!(g_src.len(), vs.nvel * nsites);
+    debug_assert_eq!(f_dst.len(), vs.nvel * nsites);
+    debug_assert_eq!(g_dst.len(), vs.nvel * nsites);
+    debug_assert_eq!(grad.len(), 3 * nsites);
+    debug_assert_eq!(lap.len(), nsites);
+    debug_assert_eq!(table.nsites, nsites);
+
+    // SAFETY: per velocity, push-streaming is a bijection on sites, so the
+    // destination sets of disjoint chunks are disjoint; chunks partition
+    // [0, nsites).
+    let f_ptr = SendPtr(f_dst.as_mut_ptr(), f_dst.len());
+    let g_ptr = SendPtr(g_dst.as_mut_ptr(), g_dst.len());
+
+    pool.for_chunks(nsites, vvl, |base, len| {
+        let (f_ptr, g_ptr) = (f_ptr, g_ptr);
+        let f_dst =
+            unsafe { std::slice::from_raw_parts_mut(f_ptr.0, f_ptr.1) };
+        let g_dst =
+            unsafe { std::slice::from_raw_parts_mut(g_ptr.0, g_ptr.1) };
+        if scalar {
+            collide_stream_sites_scalar(vs, p, f_src, g_src, f_dst, g_dst,
+                                        grad, lap, table, nsites, base, len);
+        } else {
+            crate::dispatch_vvl!(
+                vvl,
+                collide_stream_chunk(vs, p, f_src, g_src, f_dst, g_dst,
+                                     grad, lap, table, nsites, base, len)
+            );
+        }
+    });
+}
+
 #[derive(Clone, Copy)]
 struct SendPtr(*mut f64, usize);
 unsafe impl Send for SendPtr {}
@@ -273,7 +417,9 @@ unsafe impl Sync for SendPtr {}
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::lattice::geometry::Geometry;
     use crate::lb::model::{d2q9, d3q19};
+    use crate::lb::propagation::stream;
 
     /// Deterministic near-equilibrium state (mirrors tests/test_kernel.py).
     pub fn make_state(vs: &VelSet, nsites: usize, seed: u64)
@@ -445,5 +591,70 @@ mod tests {
         for (a, b) in g.iter().zip(&g0) {
             assert!((a - b).abs() < 1e-14);
         }
+    }
+
+    #[test]
+    fn fused_matches_collide_then_stream_bitwise() {
+        // the fused sweep must be indistinguishable from the 2-kernel
+        // sequence — exact equality, not a tolerance
+        for (vs, geom) in [(d3q19(), Geometry::new(5, 4, 3)),
+                           (d2q9(), Geometry::new(9, 7, 1))] {
+            let n = geom.nsites();
+            let p = FeParams::default();
+            let (f0, g0, grad, lap) = make_state(vs, n, 1234);
+            let table = StreamTable::new(vs, &geom);
+            let pool = TlpPool::serial();
+
+            for scalar in [false, true] {
+                for &vvl in crate::targetdp::ilp::SUPPORTED_VVL {
+                    // unfused reference: collide in place, then stream
+                    let mut f_ref = f0.clone();
+                    let mut g_ref = g0.clone();
+                    collide_lattice(vs, &p, &mut f_ref, &mut g_ref, &grad,
+                                    &lap, n, &pool, vvl, scalar);
+                    let mut fs = vec![0.0; vs.nvel * n];
+                    let mut gs = vec![0.0; vs.nvel * n];
+                    stream(vs, &geom, &f_ref, &mut fs, &pool, vvl);
+                    stream(vs, &geom, &g_ref, &mut gs, &pool, vvl);
+
+                    // fused
+                    let mut fd = vec![0.0; vs.nvel * n];
+                    let mut gd = vec![0.0; vs.nvel * n];
+                    collide_stream_lattice(vs, &p, &f0, &g0, &mut fd,
+                                           &mut gd, &grad, &lap, &table, n,
+                                           &pool, vvl, scalar);
+                    assert_eq!(fd, fs,
+                               "{} vvl={vvl} scalar={scalar}: f", vs.name);
+                    assert_eq!(gd, gs,
+                               "{} vvl={vvl} scalar={scalar}: g", vs.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_threads_match_serial() {
+        let vs = d3q19();
+        let geom = Geometry::new(6, 5, 4);
+        let n = geom.nsites();
+        let p = FeParams::default();
+        let (f0, g0, grad, lap) = make_state(vs, n, 77);
+        let table = StreamTable::new(vs, &geom);
+
+        let mut f1 = vec![0.0; vs.nvel * n];
+        let mut g1 = vec![0.0; vs.nvel * n];
+        collide_stream_lattice(vs, &p, &f0, &g0, &mut f1, &mut g1, &grad,
+                               &lap, &table, n, &TlpPool::serial(), 8,
+                               false);
+
+        let pool = TlpPool::new(4, crate::targetdp::tlp::Schedule::Dynamic {
+            batch: 1,
+        });
+        let mut f2 = vec![0.0; vs.nvel * n];
+        let mut g2 = vec![0.0; vs.nvel * n];
+        collide_stream_lattice(vs, &p, &f0, &g0, &mut f2, &mut g2, &grad,
+                               &lap, &table, n, &pool, 8, false);
+        assert_eq!(f1, f2);
+        assert_eq!(g1, g2);
     }
 }

@@ -2,17 +2,28 @@
 //! [`Target`] abstraction (section III-C's host-code shape: malloc +
 //! copyToTarget + constants + kernel launches + sync + copyFromTarget).
 //!
-//! Per timestep the engine launches
+//! Per timestep the engine launches either
 //!
-//! 1. `PhiMoment`  g -> phi
-//! 2. `Gradient`   phi -> grad, lap        (finite differences)
-//! 3. `BinaryCollision`                    (the Figure-1 hot spot)
-//! 4. `Stream` f and g                     (pull propagation, double-buffered)
+//! * the **unfused pipeline** —
+//!   1. `PhiMoment`  g -> phi
+//!   2. `Gradient`   phi -> grad, lap     (finite differences)
+//!   3. `BinaryCollision`                 (the Figure-1 hot spot)
+//!   4. `Stream` f and g                  (pull propagation, double-buffered)
 //!
-//! A target that advertises `FullStep`/`MultiStep` (the XLA backend, where
-//! the whole step is one fused AOT executable) is driven with the fused
-//! kernels instead — the same optimisation the paper applies by keeping
-//! the master copy resident on the target between kernels.
+//! * or, on any target advertising it, the fused `FullStep` — one launch
+//!   per step. Both the XLA backend (whole step in one AOT executable) and
+//!   the host backend (fused collide→push-stream sweep, see
+//!   [`crate::targetdp::host`]) support this tier; `MultiStep` (k fused
+//!   steps per launch) remains XLA-only. The engine always prefers the
+//!   most fused kernel available — the paper's single-source promise: the
+//!   application never changes, the target picks its fastest path. Use
+//!   [`LbEngine::set_fusion`] to force the unfused pipeline (parity tests,
+//!   fused-vs-unfused benches).
+//!
+//! Observables are reduced **on the target** when it provides `PhiMoment`
+//! + `ReduceSum`: only the per-component sums and the 1-component phi
+//! field cross the target→host boundary, not the full 19-component f/g
+//! state (a 19x smaller transfer).
 
 use crate::error::Result;
 use crate::free_energy::symmetric::FeParams;
@@ -46,7 +57,10 @@ pub struct LbEngine<'t> {
     phi: BufId,
     grad: BufId,
     lap: BufId,
+    /// `nvel`-component scratch for on-target `ReduceSum` results.
+    reduce: BufId,
     steps_done: u64,
+    fusion: bool,
 }
 
 impl<'t> LbEngine<'t> {
@@ -61,6 +75,7 @@ impl<'t> LbEngine<'t> {
         let phi = target.malloc(&FieldDesc::new("phi", 1, n))?;
         let grad = target.malloc(&FieldDesc::new("grad_phi", 3, n))?;
         let lap = target.malloc(&FieldDesc::new("lap_phi", 1, n))?;
+        let reduce = target.malloc(&FieldDesc::new("reduce_out", nvel, 1))?;
 
         // copyConstant*ToTarget: the free-energy sector parameters
         target.copy_constant("fe_a", Constant::Double(params.a))?;
@@ -82,8 +97,36 @@ impl<'t> LbEngine<'t> {
             phi,
             grad,
             lap,
+            reduce,
             steps_done: 0,
+            fusion: true,
         })
+    }
+
+    /// Enable/disable the fused `FullStep`/`MultiStep` tiers (on by
+    /// default). With fusion off the engine always drives the unfused
+    /// 5-kernel pipeline — the reference path for parity and benchmarks.
+    pub fn set_fusion(&mut self, fusion: bool) {
+        self.fusion = fusion;
+    }
+
+    /// True when the next `run` will use a fused kernel — mirrors the
+    /// dispatch in [`LbEngine::run`], including the `multi_step_width`
+    /// check (a target may advertise `MultiStep` yet have no usable width
+    /// for this geometry/model).
+    pub fn fused_active(&self) -> bool {
+        if !self.fusion {
+            return false;
+        }
+        if self.target.supports(KernelId::FullStep) {
+            return true;
+        }
+        self.target.supports(KernelId::MultiStep)
+            && self
+                .target
+                .multi_step_width(&self.geom, self.model)
+                .unwrap_or(0)
+                > 0
     }
 
     /// Upload an initial state (SoA `nvel * nsites` each).
@@ -100,6 +143,20 @@ impl<'t> LbEngine<'t> {
 
     fn args(&self) -> LaunchArgs {
         LaunchArgs::new(self.geom, self.model)
+    }
+
+    /// Bindings for the fused step: f/g plus the double-buffer and moment
+    /// scratch the host tier streams through (accelerator targets that
+    /// fuse internally simply ignore the extra bindings).
+    fn full_step_args(&self) -> LaunchArgs {
+        self.args()
+            .bind("f", self.f)
+            .bind("g", self.g)
+            .bind("f_tmp", self.f_tmp)
+            .bind("g_tmp", self.g_tmp)
+            .bind("phi", self.phi)
+            .bind("grad", self.grad)
+            .bind("lap", self.lap)
     }
 
     /// Advance one timestep with the unfused kernel pipeline.
@@ -130,11 +187,14 @@ impl<'t> LbEngine<'t> {
     }
 
     /// Advance `nsteps` timesteps, using the most fused kernel the target
-    /// supports.
+    /// supports (unless fusion is disabled).
     pub fn run(&mut self, nsteps: u64) -> Result<()> {
         let mut remaining = nsteps;
         // prefer the k-step fused kernel when the target has one
-        if self.target.supports(KernelId::MultiStep) && remaining > 0 {
+        if self.fusion
+            && self.target.supports(KernelId::MultiStep)
+            && remaining > 0
+        {
             let k = self
                 .target
                 .multi_step_width(&self.geom, self.model)
@@ -151,11 +211,9 @@ impl<'t> LbEngine<'t> {
             }
         }
         while remaining > 0 {
-            if self.target.supports(KernelId::FullStep) {
-                self.target.launch(
-                    KernelId::FullStep,
-                    &self.args().bind("f", self.f).bind("g", self.g),
-                )?;
+            if self.fusion && self.target.supports(KernelId::FullStep) {
+                self.target
+                    .launch(KernelId::FullStep, &self.full_step_args())?;
             } else {
                 self.step_unfused()?;
             }
@@ -169,10 +227,46 @@ impl<'t> LbEngine<'t> {
         self.steps_done
     }
 
-    /// Download and reduce the state to global observables.
+    /// Reduce the state to global observables, on the target when it
+    /// provides the kernels (downloads `nvel + nsites` doubles instead of
+    /// the full `2 * nvel * nsites` state).
     pub fn observables(&mut self) -> Result<Observables> {
         let vs = self.model.velset();
         let n = self.geom.nsites();
+
+        if self.target.supports(KernelId::PhiMoment)
+            && self.target.supports(KernelId::ReduceSum)
+        {
+            let red_args =
+                self.args().bind("field", self.f).bind("result", self.reduce);
+            self.target.launch(KernelId::ReduceSum, &red_args)?;
+            let mut comp = vec![0.0; vs.nvel];
+            self.target.copy_from_target(self.reduce, &mut comp)?;
+            let mass: f64 = comp.iter().sum();
+            let mut momentum = [0.0f64; 3];
+            for i in 0..vs.nvel {
+                for (a, m) in momentum.iter_mut().enumerate() {
+                    *m += vs.cv[i][a] * comp[i];
+                }
+            }
+
+            let phi = self.phi_field()?;
+            let phi_total: f64 = phi.iter().sum();
+            let mean = phi_total / n as f64;
+            let var = phi
+                .iter()
+                .map(|p| (p - mean) * (p - mean))
+                .sum::<f64>()
+                / n as f64;
+            return Ok(Observables {
+                mass,
+                momentum,
+                phi_total,
+                phi_variance: var,
+            });
+        }
+
+        // fallback: download the full state and reduce on the host
         let mut f = vec![0.0; vs.nvel * n];
         let mut g = vec![0.0; vs.nvel * n];
         self.fetch_state(&mut f, &mut g)?;
@@ -194,10 +288,18 @@ impl<'t> LbEngine<'t> {
         })
     }
 
-    /// Per-site phi field (for IO / analysis).
+    /// Per-site phi field (for IO / analysis), computed on the target when
+    /// it has the `PhiMoment` kernel so only `nsites` doubles transfer.
     pub fn phi_field(&mut self) -> Result<Vec<f64>> {
         let vs = self.model.velset();
         let n = self.geom.nsites();
+        if self.target.supports(KernelId::PhiMoment) {
+            let args = self.args().bind("g", self.g).bind("phi", self.phi);
+            self.target.launch(KernelId::PhiMoment, &args)?;
+            let mut phi = vec![0.0; n];
+            self.target.copy_from_target(self.phi, &mut phi)?;
+            return Ok(phi);
+        }
         let mut g = vec![0.0; vs.nvel * n];
         self.target.copy_from_target(self.g, &mut g)?;
         let mut phi = vec![0.0; n];
@@ -213,7 +315,7 @@ impl<'t> LbEngine<'t> {
 impl Drop for LbEngine<'_> {
     fn drop(&mut self) {
         for id in [self.f, self.g, self.f_tmp, self.g_tmp, self.phi,
-                   self.grad, self.lap] {
+                   self.grad, self.lap, self.reduce] {
             let _ = self.target.free(id);
         }
     }
@@ -244,6 +346,7 @@ mod tests {
         let mut e = LbEngine::new(&mut t, geom, LatticeModel::D3Q19,
                                   FeParams::default())
             .unwrap();
+        assert!(e.fused_active(), "host target now has the fused tier");
         e.load_state(&f, &g).unwrap();
         let mut f2 = vec![0.0; f.len()];
         let mut g2 = vec![0.0; g.len()];
@@ -276,6 +379,33 @@ mod tests {
     }
 
     #[test]
+    fn on_target_observables_match_host_fallback() {
+        // the ReduceSum path and the download-everything path must agree
+        let geom = Geometry::new(5, 3, 4);
+        let (f, g) = setup(geom);
+        let mut t = HostTarget::simd(8, TlpPool::serial()).unwrap();
+        let mut e = LbEngine::new(&mut t, geom, LatticeModel::D3Q19,
+                                  FeParams::default())
+            .unwrap();
+        e.load_state(&f, &g).unwrap();
+        e.run(2).unwrap();
+        let on_target = e.observables().unwrap();
+
+        // host-side reference from the downloaded state
+        let vs = LatticeModel::D3Q19.velset();
+        let n = geom.nsites();
+        let mut fh = vec![0.0; vs.nvel * n];
+        let mut gh = vec![0.0; vs.nvel * n];
+        e.fetch_state(&mut fh, &mut gh).unwrap();
+        let (mass, momentum, phi_total) = moments::totals(vs, &fh, &gh, n);
+        assert!((on_target.mass - mass).abs() < 1e-10);
+        assert!((on_target.phi_total - phi_total).abs() < 1e-10);
+        for a in 0..3 {
+            assert!((on_target.momentum[a] - momentum[a]).abs() < 1e-10);
+        }
+    }
+
+    #[test]
     fn zero_steps_is_identity() {
         let geom = Geometry::new(4, 4, 4);
         let (f, g) = setup(geom);
@@ -290,5 +420,29 @@ mod tests {
         e.fetch_state(&mut f2, &mut g2).unwrap();
         assert_eq!(f, f2);
         assert_eq!(g, g2);
+    }
+
+    #[test]
+    fn fusion_toggle_changes_nothing_physical() {
+        let geom = Geometry::new(4, 5, 3);
+        let (f, g) = setup(geom);
+        let run = |fusion: bool| {
+            let mut t = HostTarget::simd(8, TlpPool::serial()).unwrap();
+            let mut e = LbEngine::new(&mut t, geom, LatticeModel::D3Q19,
+                                      FeParams::default())
+                .unwrap();
+            e.set_fusion(fusion);
+            assert_eq!(e.fused_active(), fusion);
+            e.load_state(&f, &g).unwrap();
+            e.run(4).unwrap();
+            let mut fo = vec![0.0; f.len()];
+            let mut go = vec![0.0; g.len()];
+            e.fetch_state(&mut fo, &mut go).unwrap();
+            (fo, go)
+        };
+        let (ff, gf) = run(true);
+        let (fu, gu) = run(false);
+        assert_eq!(ff, fu, "fused f must bit-match unfused");
+        assert_eq!(gf, gu, "fused g must bit-match unfused");
     }
 }

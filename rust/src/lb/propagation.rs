@@ -3,32 +3,47 @@
 //! Implemented as a *pull* over the destination lattice with periodic
 //! wrap — equivalent to the roll-based push in the reference/JAX layer
 //! (`ref.stream`), as pinned by the parity tests.
+//!
+//! The hot loop does no index arithmetic: a cached
+//! [`StreamTable`] turns each velocity row into contiguous
+//! interior `memcpy` runs at a constant offset plus a short list of
+//! wrapped boundary sites (see `lattice/stream_table.rs`).
 
 use crate::lattice::geometry::Geometry;
+use crate::lattice::stream_table::StreamTable;
 use crate::lb::model::VelSet;
 use crate::targetdp::tlp::TlpPool;
 
-/// Stream `src` into `dst` (both `nvel * nsites`, SoA).
+/// Stream `src` into `dst` (both `nvel * nsites`, SoA), building/fetching
+/// the streaming table from the process-wide cache.
 #[allow(clippy::too_many_arguments)]
 pub fn stream(vs: &VelSet, geom: &Geometry, src: &[f64], dst: &mut [f64],
               pool: &TlpPool, vvl: usize) {
-    let n = geom.nsites();
+    let table = StreamTable::cached(vs, geom);
+    stream_with_table(vs, &table, src, dst, pool, vvl);
+}
+
+/// Stream `src` into `dst` using a prebuilt table (the form the host
+/// target's `Stream`/`FullStep` kernels use).
+pub fn stream_with_table(vs: &VelSet, table: &StreamTable, src: &[f64],
+                         dst: &mut [f64], pool: &TlpPool, vvl: usize) {
+    let n = table.nsites;
     debug_assert_eq!(src.len(), vs.nvel * n);
     debug_assert_eq!(dst.len(), vs.nvel * n);
 
+    // SAFETY of the raw pointer: chunks partition [0, n), and each chunk
+    // materialises a &mut slice over exactly its own destination range
+    // dst[i*n + base .. i*n + base + len] per velocity — the parallel
+    // borrows are disjoint.
     let dst_ptr = SendPtr(dst.as_mut_ptr());
     pool.for_chunks(n, vvl, |base, len| {
-        let dst = dst_ptr;
-        for s in base..base + len {
-            let (x, y, z) = geom.coords(s);
-            for i in 0..vs.nvel {
-                let c = vs.ci[i];
-                // pull: the value arriving at (x,y,z) left from x - c
-                let from = geom.neighbor(x, y, z, -c[0], -c[1], -c[2]);
-                unsafe {
-                    *dst.0.add(i * n + s) = src[i * n + from];
-                }
-            }
+        let dst_ptr = dst_ptr;
+        for i in 0..vs.nvel {
+            let dst_chunk = unsafe {
+                std::slice::from_raw_parts_mut(
+                    dst_ptr.0.add(i * n + base), len)
+            };
+            table.pull_chunk(i, &src[i * n..(i + 1) * n], dst_chunk, base);
         }
     });
 }
@@ -99,13 +114,9 @@ mod tests {
         let src: Vec<f64> = (0..vs.nvel * n).map(|i| i as f64 * 0.5).collect();
         let mut fwd = vec![0.0; vs.nvel * n];
         stream(vs, &geom, &src, &mut fwd, &TlpPool::serial(), 8);
-        // streaming with the opposite set = inverse permutation
-        let mut back = vec![0.0; vs.nvel * n];
-        let pool = TlpPool::serial();
-        pool.for_chunks(n, 8, |base, len| {
-            let _ = (base, len);
-        });
+        // streaming with the opposite set = inverse permutation:
         // build the reverse by pulling with +c (push)
+        let mut back = vec![0.0; vs.nvel * n];
         for s in 0..n {
             let (x, y, z) = geom.coords(s);
             for i in 0..vs.nvel {
@@ -115,5 +126,22 @@ mod tests {
             }
         }
         assert_eq!(back, src);
+    }
+
+    #[test]
+    fn threaded_stream_matches_serial() {
+        let vs = d3q19();
+        let geom = Geometry::new(5, 4, 3);
+        let n = geom.nsites();
+        let src: Vec<f64> =
+            (0..vs.nvel * n).map(|i| (i % 41) as f64 * 0.5).collect();
+        let mut serial = vec![0.0; vs.nvel * n];
+        stream(vs, &geom, &src, &mut serial, &TlpPool::serial(), 8);
+        let pool = TlpPool::new(4, crate::targetdp::tlp::Schedule::Dynamic {
+            batch: 2,
+        });
+        let mut par = vec![0.0; vs.nvel * n];
+        stream(vs, &geom, &src, &mut par, &pool, 4);
+        assert_eq!(serial, par);
     }
 }

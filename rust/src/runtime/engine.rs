@@ -8,7 +8,11 @@ use std::path::{Path, PathBuf};
 
 use crate::error::{Error, Result};
 
+// The pure-std build stands the PJRT bindings in with a stub whose client
+// construction fails (XLA tests then skip). Swap this alias for the real
+// `xla` crate to enable the accelerator path — see runtime/pjrt_stub.rs.
 use super::manifest::{self, ArtifactMeta};
+use super::pjrt_stub as xla;
 
 /// Owns the PJRT client, the manifest and the compile cache.
 pub struct Runtime {

@@ -5,6 +5,7 @@
 
 pub mod engine;
 pub mod manifest;
+pub mod pjrt_stub;
 
 pub use engine::Runtime;
 pub use manifest::{ArtifactMeta, IoSpec};

@@ -14,8 +14,19 @@
 //! either static (OpenMP `schedule(static)`) or dynamic
 //! (`schedule(dynamic, k)`) assignment — the launch-geometry tuning knob
 //! benchmarked in `benches/tlp_sched.rs` (E5).
+//!
+//! Like an OpenMP runtime, the worker threads are **persistent**: they are
+//! spawned once when the pool is created and parked on a condvar between
+//! launches, so a kernel launch costs one wake broadcast instead of
+//! `nthreads` OS thread spawns. A generation counter tells parked workers
+//! that a new launch has been published; the launching thread blocks until
+//! every participating worker has checked back in, which is what makes it
+//! sound for kernel bodies to borrow stack data.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
 
 /// Chunk-to-thread assignment policy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -33,20 +44,37 @@ impl Default for Schedule {
     }
 }
 
-/// The TLP worker pool configuration.
+/// The TLP worker pool.
 ///
-/// Threads are scoped per launch (no persistent worker state), which keeps
-/// kernels free to borrow stack data; with `nthreads == 1` the launch runs
-/// inline with zero overhead — the hot path on this single-core testbed.
-#[derive(Debug, Clone, Copy)]
+/// `nthreads > 1` spawns persistent parked workers at construction; with
+/// `nthreads == 1` launches run inline with zero overhead — the hot path
+/// on a single-core testbed. Dropping the pool shuts the workers down.
 pub struct TlpPool {
     pub nthreads: usize,
     pub schedule: Schedule,
+    workers: Option<WorkerPool>,
 }
 
 impl Default for TlpPool {
     fn default() -> Self {
-        TlpPool { nthreads: default_threads(), schedule: Schedule::Static }
+        TlpPool::new(default_threads(), Schedule::Static)
+    }
+}
+
+impl Clone for TlpPool {
+    /// Clones the *configuration*; the clone gets its own fresh workers.
+    fn clone(&self) -> Self {
+        TlpPool::new(self.nthreads, self.schedule)
+    }
+}
+
+impl std::fmt::Debug for TlpPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TlpPool")
+            .field("nthreads", &self.nthreads)
+            .field("schedule", &self.schedule)
+            .field("persistent", &self.workers.is_some())
+            .finish()
     }
 }
 
@@ -63,12 +91,14 @@ pub fn default_threads() -> usize {
 
 impl TlpPool {
     pub fn new(nthreads: usize, schedule: Schedule) -> Self {
-        TlpPool { nthreads: nthreads.max(1), schedule }
+        let nthreads = nthreads.max(1);
+        let workers = (nthreads > 1).then(|| WorkerPool::spawn(nthreads));
+        TlpPool { nthreads, schedule, workers }
     }
 
-    /// Serial pool (inline execution).
+    /// Serial pool (inline execution, no worker threads).
     pub fn serial() -> Self {
-        TlpPool { nthreads: 1, schedule: Schedule::Static }
+        TlpPool { nthreads: 1, schedule: Schedule::Static, workers: None }
     }
 
     /// Strip-mine `nsites` into chunks of at most `vvl` sites and run
@@ -95,48 +125,189 @@ impl TlpPool {
             return;
         }
 
-        let nthreads = self.nthreads.min(nchunks);
+        let workers =
+            self.workers.as_ref().expect("nthreads > 1 spawns workers");
+        let nworkers = self.nthreads.min(nchunks);
         match self.schedule {
             Schedule::Static => {
                 // contiguous ranges of chunks, remainder spread over the
                 // first threads (OpenMP static semantics)
-                let per = nchunks / nthreads;
-                let rem = nchunks % nthreads;
-                std::thread::scope(|s| {
-                    let mut start = 0;
-                    for t in 0..nthreads {
-                        let count = per + usize::from(t < rem);
-                        let range = start..start + count;
-                        start += count;
-                        let run_chunk = &run_chunk;
-                        s.spawn(move || {
-                            for c in range {
-                                run_chunk(c);
-                            }
-                        });
+                let per = nchunks / nworkers;
+                let rem = nchunks % nworkers;
+                workers.run(nworkers, &|t: usize| {
+                    let start = t * per + t.min(rem);
+                    let count = per + usize::from(t < rem);
+                    for c in start..start + count {
+                        run_chunk(c);
                     }
                 });
             }
             Schedule::Dynamic { batch } => {
                 let batch = batch.max(1);
                 let cursor = AtomicUsize::new(0);
-                std::thread::scope(|s| {
-                    for _ in 0..nthreads {
-                        let cursor = &cursor;
-                        let run_chunk = &run_chunk;
-                        s.spawn(move || loop {
-                            let begin =
-                                cursor.fetch_add(batch, Ordering::Relaxed);
-                            if begin >= nchunks {
-                                break;
-                            }
-                            for c in begin..(begin + batch).min(nchunks) {
-                                run_chunk(c);
-                            }
-                        });
+                workers.run(nworkers, &|_t: usize| loop {
+                    let begin = cursor.fetch_add(batch, Ordering::Relaxed);
+                    if begin >= nchunks {
+                        break;
+                    }
+                    for c in begin..(begin + batch).min(nchunks) {
+                        run_chunk(c);
                     }
                 });
             }
+        }
+    }
+}
+
+/// Type-erased pointer to the per-worker job body (`fn(worker_index)`).
+///
+/// The lifetime is erased so the job can be published through the shared
+/// slot; [`WorkerPool::run`] does not return until every participating
+/// worker has finished calling it, so the borrow never escapes.
+#[derive(Clone, Copy)]
+struct TaskRef(*const (dyn Fn(usize) + Sync));
+unsafe impl Send for TaskRef {}
+
+/// The job slot workers poll: one launch at a time, identified by a
+/// monotonically increasing generation.
+struct JobSlot {
+    generation: u64,
+    task: Option<TaskRef>,
+    nworkers: usize,
+    /// Participating workers that have not yet finished the current job.
+    active: usize,
+    /// A worker's job body panicked (re-raised on the launcher).
+    panicked: bool,
+    /// A launch is in flight (serialises concurrent submitters).
+    busy: bool,
+    shutdown: bool,
+}
+
+struct Shared {
+    slot: Mutex<JobSlot>,
+    /// Workers park here between launches.
+    go: Condvar,
+    /// The launcher parks here until `active` drains to zero.
+    done: Condvar,
+}
+
+/// Persistent parked worker threads (spawned once per [`TlpPool`]).
+struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    fn spawn(nthreads: usize) -> Self {
+        let shared = Arc::new(Shared {
+            slot: Mutex::new(JobSlot {
+                generation: 0,
+                task: None,
+                nworkers: 0,
+                active: 0,
+                panicked: false,
+                busy: false,
+                shutdown: false,
+            }),
+            go: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let handles = (0..nthreads)
+            .map(|idx| {
+                let shared = Arc::clone(&shared);
+                std::thread::spawn(move || worker_loop(&shared, idx))
+            })
+            .collect();
+        WorkerPool { shared, handles }
+    }
+
+    /// Publish `task` to the workers and block until workers
+    /// `0..nworkers` have each run `task(worker_index)` to completion.
+    fn run(&self, nworkers: usize, task: &(dyn Fn(usize) + Sync)) {
+        // SAFETY: the erased borrow is only dereferenced by workers between
+        // the publish below and the `active == 0` handshake; this function
+        // does not return before that handshake completes.
+        let task: &'static (dyn Fn(usize) + Sync) =
+            unsafe { std::mem::transmute(task) };
+
+        let mut slot = self.shared.slot.lock().unwrap();
+        while slot.busy {
+            slot = self.shared.done.wait(slot).unwrap();
+        }
+        slot.busy = true;
+        slot.task = Some(TaskRef(task as *const _));
+        slot.nworkers = nworkers;
+        slot.active = nworkers;
+        slot.generation += 1;
+        drop(slot);
+        self.shared.go.notify_all();
+
+        let mut slot = self.shared.slot.lock().unwrap();
+        while slot.active > 0 {
+            slot = self.shared.done.wait(slot).unwrap();
+        }
+        let panicked = slot.panicked;
+        slot.panicked = false;
+        slot.task = None;
+        slot.busy = false;
+        drop(slot);
+        // wake any launcher queued behind `busy`
+        self.shared.done.notify_all();
+        if panicked {
+            // the scoped-thread implementation re-raised worker panics on
+            // join; preserve that instead of silently losing chunks
+            panic!("TLP kernel body panicked in a worker thread");
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shared.slot.lock().unwrap().shutdown = true;
+        self.shared.go.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared, idx: usize) {
+    let mut seen = 0u64;
+    loop {
+        let (generation, task, nworkers) = {
+            let mut slot = shared.slot.lock().unwrap();
+            loop {
+                if slot.shutdown {
+                    return;
+                }
+                if slot.generation != seen {
+                    break;
+                }
+                slot = shared.go.wait(slot).unwrap();
+            }
+            (slot.generation, slot.task, slot.nworkers)
+        };
+        seen = generation;
+        // a worker beyond the launch width (or one that raced a cleared
+        // slot) just acknowledges the generation and parks again
+        let Some(task) = task else { continue };
+        if idx >= nworkers {
+            continue;
+        }
+        // a panicking body must still check in, or the launcher would wait
+        // on `active` forever; the panic is re-raised by `run`
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            unsafe { (&*task.0)(idx) };
+        }));
+        let mut slot = shared.slot.lock().unwrap();
+        slot.active -= 1;
+        if result.is_err() {
+            slot.panicked = true;
+        }
+        let finished = slot.active == 0;
+        drop(slot);
+        if finished {
+            shared.done.notify_all();
         }
     }
 }
@@ -197,5 +368,79 @@ mod tests {
     #[should_panic(expected = "VVL must be positive")]
     fn zero_vvl_panics() {
         TlpPool::serial().for_chunks(8, 0, |_, _| {});
+    }
+
+    #[test]
+    fn workers_are_persistent_across_launches() {
+        // the whole point of the rewrite: repeated launches reuse the same
+        // parked workers instead of spawning fresh OS threads (the old
+        // scoped implementation would show ~3 new ids per launch here)
+        use std::collections::HashSet;
+        let pool = TlpPool::new(3, Schedule::Static);
+        let ids = Mutex::new(HashSet::new());
+        for _ in 0..50 {
+            pool.for_chunks(64, 4, |_, _| {
+                ids.lock().unwrap().insert(std::thread::current().id());
+            });
+        }
+        let ids = ids.into_inner().unwrap();
+        assert!(!ids.is_empty());
+        assert!(ids.len() <= 3, "saw {} distinct worker threads", ids.len());
+    }
+
+    #[test]
+    fn launch_width_can_vary_between_launches() {
+        // nworkers = min(nthreads, nchunks) changes per launch; parked
+        // non-participants must not wedge the generation handshake
+        let pool = TlpPool::new(4, Schedule::Static);
+        for nsites in [4, 40, 8, 400, 4] {
+            let hits = Mutex::new(vec![0u32; nsites]);
+            pool.for_chunks(nsites, 4, |base, len| {
+                let mut h = hits.lock().unwrap();
+                for s in base..base + len {
+                    h[s] += 1;
+                }
+            });
+            let h = hits.into_inner().unwrap();
+            assert!(h.iter().all(|&x| x == 1), "nsites={nsites}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "kernel body panicked")]
+    fn worker_panic_propagates_to_launcher() {
+        let pool = TlpPool::new(2, Schedule::Static);
+        pool.for_chunks(8, 2, |base, _len| {
+            assert!(base != 4, "boom");
+        });
+    }
+
+    #[test]
+    fn pool_survives_a_panicked_launch() {
+        let pool = TlpPool::new(2, Schedule::Static);
+        let poisoned = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| {
+                pool.for_chunks(8, 2, |base, _len| {
+                    assert!(base != 4, "boom");
+                });
+            }),
+        );
+        assert!(poisoned.is_err());
+        // the workers parked cleanly and the next launch works
+        let hits = cover(40, 4, pool);
+        assert!(hits.iter().all(|&h| h == 1));
+    }
+
+    #[test]
+    fn clone_gets_independent_workers() {
+        let pool = TlpPool::new(2, Schedule::Dynamic { batch: 1 });
+        let copy = pool.clone();
+        assert_eq!(copy.nthreads, 2);
+        assert_eq!(copy.schedule, pool.schedule);
+        let hits = cover(33, 4, copy);
+        assert!(hits.iter().all(|&h| h == 1));
+        // original still works after the clone is dropped
+        let hits = cover(33, 4, pool);
+        assert!(hits.iter().all(|&h| h == 1));
     }
 }

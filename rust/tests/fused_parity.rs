@@ -1,0 +1,120 @@
+//! Host fusion-tier parity: the fused `FullStep` sweep must reproduce the
+//! unfused 5-kernel pipeline **bit-for-bit** — same collision core, and
+//! streaming is a pure permutation, so there is no tolerance to hide
+//! behind. Covered axes: lattice model (D3Q19 / D2Q9), execution mode
+//! (scalar + every supported VVL), and TLP pool shape (serial, static
+//! threads, dynamic threads).
+
+use targetdp::free_energy::symmetric::FeParams;
+use targetdp::lattice::geometry::Geometry;
+use targetdp::lb::engine::LbEngine;
+use targetdp::lb::init;
+use targetdp::lb::model::LatticeModel;
+use targetdp::targetdp::ilp::SUPPORTED_VVL;
+use targetdp::targetdp::target::KernelId;
+use targetdp::targetdp::tlp::{Schedule, TlpPool};
+use targetdp::targetdp::{HostTarget, Target};
+
+const STEPS: u64 = 10;
+const POOLS: [&str; 3] = ["serial", "static4", "dyn3"];
+
+fn pool_by_name(name: &str) -> TlpPool {
+    match name {
+        "serial" => TlpPool::serial(),
+        "static4" => TlpPool::new(4, Schedule::Static),
+        "dyn3" => TlpPool::new(3, Schedule::Dynamic { batch: 2 }),
+        other => unreachable!("unknown pool {other}"),
+    }
+}
+
+fn spinodal_state(model: LatticeModel, geom: &Geometry)
+                  -> (Vec<f64>, Vec<f64>) {
+    let vs = model.velset();
+    let n = geom.nsites();
+    let mut f = vec![0.0; vs.nvel * n];
+    let mut g = vec![0.0; vs.nvel * n];
+    init::init_spinodal(vs, &FeParams::default(), geom, &mut f, &mut g,
+                        0.05, 4242);
+    (f, g)
+}
+
+/// Run `STEPS` steps on `target` with the given fusion setting.
+fn run_steps(target: &mut dyn Target, fusion: bool, model: LatticeModel,
+             geom: Geometry) -> (Vec<f64>, Vec<f64>) {
+    let vs = model.velset();
+    let n = geom.nsites();
+    let (f0, g0) = spinodal_state(model, &geom);
+    let mut engine =
+        LbEngine::new(target, geom, model, FeParams::default()).unwrap();
+    engine.set_fusion(fusion);
+    engine.load_state(&f0, &g0).unwrap();
+    engine.run(STEPS).unwrap();
+    assert_eq!(engine.steps_done(), STEPS);
+    let mut f = vec![0.0; vs.nvel * n];
+    let mut g = vec![0.0; vs.nvel * n];
+    engine.fetch_state(&mut f, &mut g).unwrap();
+    (f, g)
+}
+
+#[test]
+fn host_target_advertises_full_step() {
+    assert!(HostTarget::default_simd().supports(KernelId::FullStep));
+    assert!(HostTarget::scalar(TlpPool::serial())
+        .supports(KernelId::FullStep));
+}
+
+#[test]
+fn fused_matches_unfused_simd_all_vvl() {
+    // geometries with nsites not a multiple of any VVL exercise the tail
+    for (model, geom) in [(LatticeModel::D3Q19, Geometry::new(6, 5, 4)),
+                          (LatticeModel::D2Q9, Geometry::new(12, 9, 1))] {
+        for pname in POOLS {
+            for &vvl in SUPPORTED_VVL {
+                let mut t_ref =
+                    HostTarget::simd(vvl, pool_by_name(pname)).unwrap();
+                let (f_ref, g_ref) =
+                    run_steps(&mut t_ref, false, model, geom);
+                let mut t_fused =
+                    HostTarget::simd(vvl, pool_by_name(pname)).unwrap();
+                let (f, g) = run_steps(&mut t_fused, true, model, geom);
+                assert_eq!(f, f_ref,
+                           "{} vvl={vvl} pool={pname}: f diverged",
+                           model.name());
+                assert_eq!(g, g_ref,
+                           "{} vvl={vvl} pool={pname}: g diverged",
+                           model.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_matches_unfused_scalar_mode() {
+    for (model, geom) in [(LatticeModel::D3Q19, Geometry::new(5, 4, 3)),
+                          (LatticeModel::D2Q9, Geometry::new(9, 7, 1))] {
+        for pname in POOLS {
+            let mut t_ref = HostTarget::scalar(pool_by_name(pname));
+            let (f_ref, g_ref) = run_steps(&mut t_ref, false, model, geom);
+            let mut t_fused = HostTarget::scalar(pool_by_name(pname));
+            let (f, g) = run_steps(&mut t_fused, true, model, geom);
+            assert_eq!(f, f_ref, "{} scalar pool={pname}: f", model.name());
+            assert_eq!(g, g_ref, "{} scalar pool={pname}: g", model.name());
+        }
+    }
+}
+
+#[test]
+fn fused_scalar_matches_fused_simd_to_roundoff() {
+    // cross-mode agreement (not bitwise: different summation order)
+    let model = LatticeModel::D3Q19;
+    let geom = Geometry::new(6, 6, 6);
+    let mut scalar = HostTarget::scalar(TlpPool::serial());
+    let (f_s, g_s) = run_steps(&mut scalar, true, model, geom);
+    let mut simd = HostTarget::simd(8, TlpPool::serial()).unwrap();
+    let (f_v, g_v) = run_steps(&mut simd, true, model, geom);
+    let max = |a: &[f64], b: &[f64]| {
+        a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max)
+    };
+    assert!(max(&f_s, &f_v) < 1e-12);
+    assert!(max(&g_s, &g_v) < 1e-12);
+}
