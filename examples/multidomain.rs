@@ -9,7 +9,8 @@
 //! ```
 
 use targetdp::free_energy::symmetric::FeParams;
-use targetdp::lattice::decomp::{step_multidomain, SlabDecomposition};
+use targetdp::lattice::decomp::{step_multidomain, MultiDomainScratch,
+                                SlabDecomposition};
 use targetdp::lattice::geometry::Geometry;
 use targetdp::lb::init;
 use targetdp::lb::model::d3q19;
@@ -37,9 +38,11 @@ fn main() {
         let dec = SlabDecomposition::new(geom, ndom).unwrap();
         let mut fl = dec.scatter(&f0, vs.nvel);
         let mut gl = dec.scatter(&g0, vs.nvel);
+        let mut scratch = MultiDomainScratch::new(&dec, vs.nvel);
         let t = std::time::Instant::now();
         for _ in 0..steps {
-            step_multidomain(&dec, vs, &p, &mut fl, &mut gl, &pool, 8);
+            step_multidomain(&dec, vs, &p, &mut fl, &mut gl, &mut scratch,
+                             &pool, 8);
         }
         let dt = t.elapsed().as_secs_f64();
         let f = dec.gather(&fl, vs.nvel);

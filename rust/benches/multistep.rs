@@ -1,0 +1,93 @@
+//! E8 — the host MultiStep temporal-blocking tier: k fused timesteps per
+//! launch over cache-resident x-slabs vs the one-step fused `FullStep`.
+//! Per k steps, `FullStep` traverses the global f/g state k times (plus k
+//! phi/gradient sweeps); the blocked sweep reads and writes the global
+//! state once and keeps all intermediate traffic inside the slab scratch,
+//! at the price of recomputing the depth-2k overlap planes. A long-thin
+//! lattice (many x-planes, small plane cross-section) is the shape the
+//! auto planner targets.
+//!
+//! Reports BENCH-CSV lines plus `MULTISTEP-SPEEDUP` ratios vs `FullStep`
+//! for the experiment scripts.
+
+use targetdp::free_energy::symmetric::FeParams;
+use targetdp::lattice::geometry::Geometry;
+use targetdp::lb::engine::LbEngine;
+use targetdp::lb::init;
+use targetdp::lb::model::LatticeModel;
+use targetdp::targetdp::constant::Constant;
+use targetdp::targetdp::tlp::{Schedule, TlpPool};
+use targetdp::targetdp::{HostTarget, Target};
+
+const THREADS: [usize; 2] = [1, 4];
+const KS: [u64; 4] = [1, 2, 4, 8];
+
+fn label(threads: usize, tier: &str) -> String {
+    format!("threads={threads} {tier}")
+}
+
+/// Host target with the MultiStep knobs pinned. `k == 0` disables the
+/// tier outright (a 1 KB planner budget admits no slab), giving a clean
+/// `FullStep` baseline on a lattice the auto planner would otherwise
+/// claim.
+fn make_target(threads: usize, k: u64) -> HostTarget {
+    let pool = TlpPool::new(threads, Schedule::Static);
+    let mut t = HostTarget::simd(8, pool).unwrap();
+    if k > 0 {
+        t.copy_constant("multi_step", Constant::Int(k as i64)).unwrap();
+    } else {
+        t.copy_constant("multi_step_cache_kb", Constant::Int(1)).unwrap();
+    }
+    t
+}
+
+fn main() {
+    let model = LatticeModel::D3Q19;
+    let vs = model.velset();
+    // long-thin: 512 x-planes of 8x8 — ~10 MB of f/g state streamed
+    // through ~41 KB planes, the shape temporal blocking amortises
+    let geom = Geometry::new(512, 8, 8);
+    let n = geom.nsites();
+    let steps_per_iter = 8u64; // divisible by every k in KS
+    let p = FeParams::default();
+
+    let mut f0 = vec![0.0; vs.nvel * n];
+    let mut g0 = vec![0.0; vs.nvel * n];
+    init::init_spinodal(vs, &p, &geom, &mut f0, &mut g0, 0.05, 31);
+
+    let mut bench = targetdp::bench::Bench::new(
+        "host MultiStep temporal blocking: 512x8x8 D3Q19");
+    let sites = Some((n as u64 * steps_per_iter) as f64);
+
+    for threads in THREADS {
+        for k in std::iter::once(0u64).chain(KS) {
+            let tier = if k == 0 {
+                "full-step".to_string()
+            } else {
+                format!("multi-step k={k}")
+            };
+            let mut target = make_target(threads, k);
+            let mut engine =
+                LbEngine::new(&mut target, geom, model, p).unwrap();
+            engine.load_state(&f0, &g0).unwrap();
+            bench.case(&label(threads, &tier), sites, || {
+                engine.run(steps_per_iter).unwrap();
+            });
+        }
+    }
+
+    bench.report();
+
+    println!();
+    for threads in THREADS {
+        let base = bench.mean_of(&label(threads, "full-step"));
+        for k in KS {
+            let blk = bench
+                .mean_of(&label(threads, &format!("multi-step k={k}")));
+            if let (Some(b), Some(m)) = (base, blk) {
+                println!("MULTISTEP-SPEEDUP,threads={threads},k={k},{:.3}",
+                         b / m);
+            }
+        }
+    }
+}

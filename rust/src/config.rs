@@ -52,6 +52,10 @@ pub struct TargetCfg {
     /// Use the fused `FullStep`/`MultiStep` tiers when the target has them
     /// (`false` forces the unfused 5-kernel pipeline).
     pub fusion: bool,
+    /// Host MultiStep blocked depth: 0 = auto (the target's cache
+    /// heuristic decides, and may leave the tier off), k > 0 forces k
+    /// fused timesteps per launch.
+    pub multi_step: u64,
     /// Preferred Pallas block for the xla backend (0 = any).
     pub xla_vvl_block: usize,
 }
@@ -65,6 +69,7 @@ impl Default for TargetCfg {
             schedule: "static".into(),
             batch: 4,
             fusion: true,
+            multi_step: 0,
             xla_vvl_block: 0,
         }
     }
@@ -120,6 +125,7 @@ impl Config {
             schedule: tgt.str_or("schedule", &dt.schedule)?,
             batch: tgt.usize_or("batch", dt.batch)?,
             fusion: tgt.bool_or("fusion", dt.fusion)?,
+            multi_step: tgt.u64_or("multi_step", dt.multi_step)?,
             xla_vvl_block: tgt.usize_or("xla_vvl_block", 0)?,
         };
 
@@ -173,16 +179,33 @@ impl Config {
 
     /// Instantiate the configured execution target.
     pub fn build_target(&self) -> Result<Box<dyn Target>> {
+        use crate::targetdp::constant::Constant;
         match self.target.backend.as_str() {
-            "host-simd" => Ok(Box::new(HostTarget::simd(self.target.vvl,
-                                                        self.tlp_pool())?)),
-            "host-scalar" => {
-                Ok(Box::new(HostTarget::scalar(self.tlp_pool())))
+            "host-simd" | "host-scalar" => {
+                let mut t = if self.target.backend == "host-simd" {
+                    HostTarget::simd(self.target.vvl, self.tlp_pool())?
+                } else {
+                    HostTarget::scalar(self.tlp_pool())
+                };
+                if self.target.multi_step > 0 {
+                    t.copy_constant(
+                        "multi_step",
+                        Constant::Int(self.target.multi_step as i64),
+                    )?;
+                }
+                Ok(Box::new(t))
             }
             "xla" => {
+                if self.target.multi_step > 0 {
+                    return Err(Error::Parse(
+                        "multi_step is a host-backend knob; the xla \
+                         MultiStep width is baked into the AOT artifact \
+                         (re-run `make artifacts` to change it)"
+                            .into(),
+                    ));
+                }
                 let mut t = XlaTarget::from_default_artifacts()?;
                 if self.target.xla_vvl_block > 0 {
-                    use crate::targetdp::constant::Constant;
                     use crate::targetdp::Target as _;
                     t.copy_constant(
                         "xla_vvl_block",
@@ -278,6 +301,31 @@ mod tests {
         )
         .unwrap();
         assert!(!cfg.target.fusion);
+    }
+
+    #[test]
+    fn multi_step_knob_defaults_auto_and_reaches_target() {
+        let cfg = Config::from_toml_str(SAMPLE).unwrap();
+        assert_eq!(cfg.target.multi_step, 0, "default is auto");
+
+        let mut forced = cfg.clone();
+        forced.target.multi_step = 3;
+        let t = forced.build_target().unwrap();
+        // the knob lands in the target's constant table and pins the
+        // blocked depth for any geometry
+        assert_eq!(t.multi_step_width(&forced.geometry(),
+                                      forced.model().unwrap()),
+                   Some(3));
+        // auto on the 16^3 sample lattice: heuristic leaves the tier off
+        let t = cfg.build_target().unwrap();
+        assert_eq!(t.multi_step_width(&cfg.geometry(),
+                                      cfg.model().unwrap()),
+                   None);
+        // host-only knob: forcing it with the xla backend is an error,
+        // not a silent no-op (the artifact bakes the width)
+        forced.target.backend = "xla".into();
+        let err = forced.build_target().unwrap_err();
+        assert!(err.to_string().contains("multi_step"), "{err}");
     }
 
     #[test]

@@ -9,6 +9,7 @@ use crate::lattice::io::{write_vtk_scalar, CsvWriter};
 use crate::lb::engine::{LbEngine, Observables};
 use crate::lb::init;
 use crate::lb::model::LatticeModel;
+use crate::targetdp::target::KernelId;
 
 use super::metrics::{Mlups, Timer};
 
@@ -27,11 +28,19 @@ pub struct RunSummary {
 }
 
 impl RunSummary {
-    /// Relative drift of a conserved quantity over the run.
+    /// Relative drift of the conserved mass over the run. A zero-mass
+    /// initial state has no meaningful relative scale — the absolute
+    /// drift is returned instead of dividing through to NaN/inf.
     pub fn mass_drift(&self) -> f64 {
-        ((self.r#final.mass - self.initial.mass) / self.initial.mass).abs()
+        let drift = (self.r#final.mass - self.initial.mass).abs();
+        if self.initial.mass == 0.0 {
+            drift
+        } else {
+            drift / self.initial.mass.abs()
+        }
     }
 
+    /// Per-site absolute drift of the order parameter total.
     pub fn phi_drift(&self) -> f64 {
         (self.r#final.phi_total - self.initial.phi_total).abs()
             / self.nsites as f64
@@ -55,8 +64,13 @@ pub fn run_simulation(cfg: &Config) -> Result<RunSummary> {
         LbEngine::new(target.as_mut(), geom, model, cfg.free_energy)?;
     engine.set_fusion(cfg.target.fusion);
     let fused = engine.fused_active();
-    println!("pipeline : {}",
-             if fused { "fused full-step" } else { "unfused (5 kernels)" });
+    println!("pipeline : {}", match engine.fused_tier() {
+        Some((KernelId::MultiStep, k)) => {
+            format!("fused multi-step (k={k} per launch)")
+        }
+        Some(_) => "fused full-step".into(),
+        None => "unfused (5 kernels)".to_string(),
+    });
 
     // initial condition
     let mut f = vec![0.0; vs.nvel * n];
@@ -214,6 +228,38 @@ mod tests {
         assert!(fused.fused && !unfused.fused);
         assert_eq!(fused.r#final.phi_variance, unfused.r#final.phi_variance,
                    "fused and unfused pipelines are bit-identical");
+    }
+
+    #[test]
+    fn zero_mass_initial_state_has_finite_drift() {
+        // regression: mass_drift divided by initial.mass, so a zero-mass
+        // state (e.g. a pure order-parameter relaxation) reported NaN
+        let zero = Observables {
+            mass: 0.0,
+            momentum: [0.0; 3],
+            phi_total: 0.0,
+            phi_variance: 0.0,
+        };
+        let mut s = RunSummary {
+            target: "test".into(),
+            steps: 1,
+            nsites: 8,
+            seconds: 1.0,
+            mlups: 1.0,
+            fused: false,
+            initial: zero,
+            r#final: zero,
+        };
+        assert_eq!(s.mass_drift(), 0.0);
+        assert!(s.mass_drift().is_finite());
+        // any drift away from zero mass is reported absolutely
+        s.r#final.mass = 0.5;
+        assert_eq!(s.mass_drift(), 0.5);
+        assert!(s.phi_drift().is_finite());
+        // negative initial mass must not flip the sign of the ratio
+        s.initial.mass = -2.0;
+        s.r#final.mass = -1.0;
+        assert_eq!(s.mass_drift(), 0.5);
     }
 
     #[test]

@@ -4,26 +4,42 @@
 //! the 2-D degenerate case `lz == 1` where the z terms cancel and the
 //! laplacian reduces to the 5-point stencil.
 
+use std::ops::Range;
+
 use crate::lattice::geometry::Geometry;
 use crate::targetdp::tlp::TlpPool;
 
 /// grad layout: `grad[d * nsites + s]`, d in x,y,z; lap layout: `lap[s]`.
 pub fn gradient_fd(geom: &Geometry, phi: &[f64], grad: &mut [f64],
                    lap: &mut [f64], pool: &TlpPool, vvl: usize) {
+    gradient_fd_range(geom, phi, grad, lap, 0..geom.nsites(), pool, vvl);
+}
+
+/// Ranged variant: compute grad/lap only for the sites in `sites`. The
+/// caller guarantees `phi` is valid at every periodic neighbour of those
+/// sites (the MultiStep blocked sweep and the multidomain interior
+/// restriction both arrange exactly that); entries outside the range are
+/// left untouched.
+pub fn gradient_fd_range(geom: &Geometry, phi: &[f64], grad: &mut [f64],
+                         lap: &mut [f64], sites: Range<usize>,
+                         pool: &TlpPool, vvl: usize) {
     let n = geom.nsites();
     debug_assert_eq!(phi.len(), n);
     debug_assert_eq!(grad.len(), 3 * n);
     debug_assert_eq!(lap.len(), n);
+    debug_assert!(sites.end <= n);
+    let start = sites.start;
+    let count = sites.len();
 
     // SAFETY of the parallel writes: chunks partition the site range, and
     // each site writes only its own grad/lap entries.
     let grad_ptr = SendPtr(grad.as_mut_ptr());
     let lap_ptr = SendPtr(lap.as_mut_ptr());
 
-    pool.for_chunks(n, vvl, |base, len| {
+    pool.for_chunks(count, vvl, |base, len| {
         let grad = grad_ptr;
         let lap = lap_ptr;
-        for s in base..base + len {
+        for s in start + base..start + base + len {
             let (x, y, z) = geom.coords(s);
             let xp = phi[geom.neighbor(x, y, z, 1, 0, 0)];
             let xm = phi[geom.neighbor(x, y, z, -1, 0, 0)];
@@ -103,6 +119,31 @@ mod tests {
         assert!((lap[geom.index(1, 2, 0)] - 1.0).abs() < 1e-15);
         assert!((lap[geom.index(2, 1, 0)] - 1.0).abs() < 1e-15);
         assert!(lap[geom.index(1, 1, 0)].abs() < 1e-15);
+    }
+
+    #[test]
+    fn ranged_matches_full_inside_and_leaves_rest_alone() {
+        let geom = Geometry::new(6, 5, 4);
+        let n = geom.nsites();
+        let phi: Vec<f64> = (0..n)
+            .map(|s| ((s * 2654435761) % 113) as f64 / 113.0)
+            .collect();
+        let (g_full, l_full) = run(&geom, &phi);
+        let range = 2 * 20..4 * 20; // planes 2..4 (plane = ly * lz = 20)
+        let mut g = vec![-9.0; 3 * n];
+        let mut l = vec![-9.0; n];
+        gradient_fd_range(&geom, &phi, &mut g, &mut l, range.clone(),
+                          &TlpPool::serial(), 8);
+        for s in 0..n {
+            if range.contains(&s) {
+                for d in 0..3 {
+                    assert_eq!(g[d * n + s], g_full[d * n + s], "s={s}");
+                }
+                assert_eq!(l[s], l_full[s], "s={s}");
+            } else {
+                assert_eq!(l[s], -9.0, "s={s} must be untouched");
+            }
+        }
     }
 
     #[test]

@@ -15,10 +15,10 @@
 //! subsets; see `halo::x_planes`).
 
 use crate::error::{Error, Result};
-use crate::free_energy::gradient::gradient_fd;
+use crate::free_energy::gradient::gradient_fd_range;
 use crate::free_energy::symmetric::FeParams;
 use crate::lattice::geometry::Geometry;
-use crate::lb::collision::collide_lattice;
+use crate::lb::collision::collide_lattice_range;
 use crate::lb::model::VelSet;
 use crate::lb::moments::phi_from_g;
 use crate::lb::propagation::stream;
@@ -119,16 +119,30 @@ impl SlabDecomposition {
 
     /// Bulk-synchronous halo exchange of one field across all domains
     /// (periodic at the global x boundaries) — the MPI sendrecv analog.
+    /// Convenience form that allocates staging per call; steady-state
+    /// callers should hold an [`ExchangeStaging`] and use
+    /// [`Self::exchange_with`] (4 exchanges per timestep otherwise churn
+    /// two fresh `ndom * ncomp * plane` vectors each).
     pub fn exchange(&self, locals: &mut [Vec<f64>], ncomp: usize) {
+        self.exchange_with(locals, ncomp,
+                           &mut ExchangeStaging::new(self, ncomp));
+    }
+
+    /// Halo exchange through caller-owned staging buffers (no allocation).
+    pub fn exchange_with(&self, locals: &mut [Vec<f64>], ncomp: usize,
+                         staging: &mut ExchangeStaging) {
         let ndom = self.domains.len();
+        let plane = self.global.ly * self.global.lz;
+        let seg = ncomp * plane;
+        assert_eq!(staging.lows.len(), ndom * seg,
+                   "staging sized for another decomposition/field shape");
         // collect boundary planes first (so the copy is order-independent)
-        let mut lows = Vec::with_capacity(ndom);
-        let mut highs = Vec::with_capacity(ndom);
-        for (d, local) in self.domains.iter().zip(locals.iter()) {
+        for (i, (d, local)) in
+            self.domains.iter().zip(locals.iter()).enumerate()
+        {
             let ln = d.local.nsites();
-            let plane = d.plane();
-            let mut low = vec![0.0; ncomp * plane];
-            let mut high = vec![0.0; ncomp * plane];
+            let low = &mut staging.lows[i * seg..(i + 1) * seg];
+            let high = &mut staging.highs[i * seg..(i + 1) * seg];
             for c in 0..ncomp {
                 low[c * plane..(c + 1) * plane].copy_from_slice(
                     &local[c * ln + plane..c * ln + 2 * plane],
@@ -138,22 +152,73 @@ impl SlabDecomposition {
                         ..c * ln + (d.lxl + 1) * plane],
                 );
             }
-            lows.push(low);
-            highs.push(high);
         }
         // deliver: my low halo <- left neighbour's high interior plane
         for (i, d) in self.domains.iter().enumerate() {
             let ln = d.local.nsites();
-            let plane = d.plane();
             let left = (i + ndom - 1) % ndom;
             let right = (i + 1) % ndom;
             let local = &mut locals[i];
             for c in 0..ncomp {
-                local[c * ln..c * ln + plane]
-                    .copy_from_slice(&highs[left][c * plane..(c + 1) * plane]);
-                local[c * ln + (d.lxl + 1) * plane..c * ln + (d.lxl + 2) * plane]
-                    .copy_from_slice(&lows[right][c * plane..(c + 1) * plane]);
+                local[c * ln..c * ln + plane].copy_from_slice(
+                    &staging.highs
+                        [left * seg + c * plane..left * seg + (c + 1) * plane],
+                );
+                local[c * ln + (d.lxl + 1) * plane
+                    ..c * ln + (d.lxl + 2) * plane]
+                    .copy_from_slice(
+                        &staging.lows[right * seg + c * plane
+                            ..right * seg + (c + 1) * plane],
+                    );
             }
+        }
+    }
+}
+
+/// Reusable boundary-plane staging for [`SlabDecomposition::exchange_with`]
+/// — one `ndom * ncomp * plane` buffer per direction, allocated once.
+#[derive(Debug, Clone)]
+pub struct ExchangeStaging {
+    lows: Vec<f64>,
+    highs: Vec<f64>,
+}
+
+impl ExchangeStaging {
+    pub fn new(dec: &SlabDecomposition, ncomp: usize) -> Self {
+        let plane = dec.global.ly * dec.global.lz;
+        let len = dec.domains.len() * ncomp * plane;
+        ExchangeStaging { lows: vec![0.0; len], highs: vec![0.0; len] }
+    }
+}
+
+/// Persistent per-domain scratch for [`step_multidomain`]: moment fields,
+/// streaming double buffers and exchange staging, allocated once per
+/// decomposition instead of per step.
+#[derive(Debug, Clone)]
+pub struct MultiDomainScratch {
+    phi: Vec<Vec<f64>>,
+    grad: Vec<Vec<f64>>,
+    lap: Vec<Vec<f64>>,
+    streamed_f: Vec<Vec<f64>>,
+    streamed_g: Vec<Vec<f64>>,
+    staging: ExchangeStaging,
+}
+
+impl MultiDomainScratch {
+    pub fn new(dec: &SlabDecomposition, nvel: usize) -> Self {
+        let sized = |per: usize| -> Vec<Vec<f64>> {
+            dec.domains
+                .iter()
+                .map(|d| vec![0.0; per * d.local.nsites()])
+                .collect()
+        };
+        MultiDomainScratch {
+            phi: sized(1),
+            grad: sized(3),
+            lap: sized(1),
+            streamed_f: sized(nvel),
+            streamed_g: sized(nvel),
+            staging: ExchangeStaging::new(dec, nvel),
         }
     }
 }
@@ -161,45 +226,49 @@ impl SlabDecomposition {
 /// One full binary-fluid LB timestep over the decomposed lattice
 /// (exchange -> moments/gradients -> collide -> exchange -> stream).
 /// Matches the single-domain step exactly (see tests).
+///
+/// Gradients and collision run over the **interior** site range only: the
+/// halo planes have garbage gradients (their x-stencil wraps inside the
+/// local lattice) and their post-collision values were overwritten by the
+/// next exchange anyway — colliding them was pure waste. phi still covers
+/// the halo planes because the interior-boundary gradient stencil reads
+/// them.
 #[allow(clippy::too_many_arguments)]
 pub fn step_multidomain(dec: &SlabDecomposition, vs: &VelSet, p: &FeParams,
                         f: &mut [Vec<f64>], g: &mut [Vec<f64>],
-                        pool: &TlpPool, vvl: usize) {
+                        scratch: &mut MultiDomainScratch, pool: &TlpPool,
+                        vvl: usize) {
     let nvel = vs.nvel;
-    dec.exchange(f, nvel);
-    dec.exchange(g, nvel);
+    dec.exchange_with(f, nvel, &mut scratch.staging);
+    dec.exchange_with(g, nvel, &mut scratch.staging);
 
-    // per-domain scratch + local kernels over ALL local sites: halo results
-    // are garbage but are overwritten by the next exchange before use
-    let mut streamed_f = Vec::with_capacity(dec.domains.len());
-    let mut streamed_g = Vec::with_capacity(dec.domains.len());
     for (i, d) in dec.domains.iter().enumerate() {
         let ln = d.local.nsites();
-        let mut phi = vec![0.0; ln];
-        let mut grad = vec![0.0; 3 * ln];
-        let mut lap = vec![0.0; ln];
-        phi_from_g(vs, &g[i], &mut phi, ln, pool, vvl);
-        gradient_fd(&d.local, &phi, &mut grad, &mut lap, pool, vvl);
-        collide_lattice(vs, p, &mut f[i], &mut g[i], &grad, &lap, ln, pool,
-                        vvl, false);
-        streamed_f.push(vec![0.0; nvel * ln]);
-        streamed_g.push(vec![0.0; nvel * ln]);
+        let interior = d.interior();
+        phi_from_g(vs, &g[i], &mut scratch.phi[i], ln, pool, vvl);
+        gradient_fd_range(&d.local, &scratch.phi[i], &mut scratch.grad[i],
+                          &mut scratch.lap[i], interior.clone(), pool, vvl);
+        collide_lattice_range(vs, p, &mut f[i], &mut g[i], &scratch.grad[i],
+                              &scratch.lap[i], ln, interior, pool, vvl,
+                              false);
     }
 
-    dec.exchange(f, nvel);
-    dec.exchange(g, nvel);
+    dec.exchange_with(f, nvel, &mut scratch.staging);
+    dec.exchange_with(g, nvel, &mut scratch.staging);
 
     for (i, d) in dec.domains.iter().enumerate() {
-        stream(vs, &d.local, &f[i], &mut streamed_f[i], pool, vvl);
-        stream(vs, &d.local, &g[i], &mut streamed_g[i], pool, vvl);
-        f[i].copy_from_slice(&streamed_f[i]);
-        g[i].copy_from_slice(&streamed_g[i]);
+        stream(vs, &d.local, &f[i], &mut scratch.streamed_f[i], pool, vvl);
+        stream(vs, &d.local, &g[i], &mut scratch.streamed_g[i], pool, vvl);
+        f[i].copy_from_slice(&scratch.streamed_f[i]);
+        g[i].copy_from_slice(&scratch.streamed_g[i]);
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::free_energy::gradient::gradient_fd;
+    use crate::lb::collision::collide_lattice;
     use crate::lb::model::d3q19;
 
     fn global_state(geom: &Geometry, vs: &VelSet)
@@ -296,8 +365,10 @@ mod tests {
             let dec = SlabDecomposition::new(geom, ndom).unwrap();
             let mut fl = dec.scatter(&f_ref, vs.nvel);
             let mut gl = dec.scatter(&g_ref, vs.nvel);
+            let mut scratch = MultiDomainScratch::new(&dec, vs.nvel);
             for _ in 0..3 {
-                step_multidomain(&dec, vs, &p, &mut fl, &mut gl, &pool, 8);
+                step_multidomain(&dec, vs, &p, &mut fl, &mut gl,
+                                 &mut scratch, &pool, 8);
             }
             let f2 = dec.gather(&fl, vs.nvel);
             let g2 = dec.gather(&gl, vs.nvel);
@@ -308,5 +379,22 @@ mod tests {
                 assert!((a - b).abs() < 1e-13, "ndom={ndom}");
             }
         }
+    }
+
+    #[test]
+    fn exchange_with_reuses_staging_across_calls() {
+        let geom = Geometry::new(6, 3, 2);
+        let dec = SlabDecomposition::new(geom, 3).unwrap();
+        let field: Vec<f64> =
+            (0..2 * geom.nsites()).map(|i| i as f64 * 0.5).collect();
+        // reference: allocating exchange
+        let mut want = dec.scatter(&field, 2);
+        dec.exchange(&mut want, 2);
+        // staged exchange, run twice through the same buffers
+        let mut got = dec.scatter(&field, 2);
+        let mut staging = ExchangeStaging::new(&dec, 2);
+        dec.exchange_with(&mut got, 2, &mut staging);
+        dec.exchange_with(&mut got, 2, &mut staging);
+        assert_eq!(got, want, "exchange is idempotent on filled halos");
     }
 }

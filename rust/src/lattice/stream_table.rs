@@ -19,10 +19,33 @@
 //! (pull) and the fused host `FullStep` collide→push-stream path.
 
 use std::collections::HashMap;
+use std::ops::Range;
 use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::lattice::geometry::Geometry;
 use crate::lb::model::VelSet;
+
+/// Upper bound on the number of tables the process-wide cache retains.
+/// Sweeps over many geometries (benchmarks, uneven slab widths, the
+/// MultiStep slab planner) would otherwise pin one table per geometry
+/// forever.
+const CACHE_CAP: usize = 16;
+
+type CacheKey = (&'static str, usize, Geometry);
+
+struct Cache {
+    /// Monotone access counter for LRU ordering.
+    tick: u64,
+    map: HashMap<CacheKey, (Arc<StreamTable>, u64)>,
+}
+
+static CACHE: OnceLock<Mutex<Cache>> = OnceLock::new();
+
+/// Number of tables currently retained by the process-wide cache
+/// (diagnostics; bounded by `CACHE_CAP`).
+pub fn cached_table_count() -> usize {
+    CACHE.get().map_or(0, |m| m.lock().unwrap().map.len())
+}
 
 /// One boundary-site exception: at `site` the linear-offset rule fails and
 /// the periodic partner is `other` (the pull *source* or push
@@ -83,27 +106,56 @@ impl StreamTable {
     /// Process-wide table cache keyed by `(velocity set, geometry)` — the
     /// paper's "build launch geometry once, reuse every step" amortisation.
     ///
+    /// The cache is **bounded** at `CACHE_CAP` entries: on overflow the
+    /// least-recently-used table no longer referenced outside the cache
+    /// (`Arc` strong count 1) is dropped first, falling back to the LRU
+    /// entry outright — callers holding an `Arc` keep their table alive
+    /// either way, but a sweep over distinct geometries can no longer grow
+    /// the map without bound.
+    ///
     /// Velocity sets are identified by `(name, nvel)`: the in-tree sets
     /// are singletons, so this is exact; a hand-built [`VelSet`] aliasing
     /// a stock name is caught by the debug offset check below.
     pub fn cached(vs: &VelSet, geom: &Geometry) -> Arc<StreamTable> {
-        type Key = (&'static str, usize, Geometry);
-        static CACHE: OnceLock<Mutex<HashMap<Key, Arc<StreamTable>>>> =
-            OnceLock::new();
-        let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+        let cache = CACHE.get_or_init(|| {
+            Mutex::new(Cache { tick: 0, map: HashMap::new() })
+        });
         let key = (vs.name, vs.nvel, *geom);
-        let mut map = cache.lock().unwrap();
-        let table = map
-            .entry(key)
-            .or_insert_with(|| Arc::new(StreamTable::new(vs, geom)))
-            .clone();
-        debug_assert!(
-            (0..vs.nvel)
-                .all(|i| table.vels[i].offset == geom.linear_offset(vs.ci[i])),
-            "cached StreamTable does not match this velocity set \
-             (two distinct VelSets share the name {:?})",
-            vs.name
-        );
+        let mut c = cache.lock().unwrap();
+        c.tick += 1;
+        let now = c.tick;
+        if let Some((table, used)) = c.map.get_mut(&key) {
+            *used = now;
+            let table = table.clone();
+            debug_assert!(
+                (0..vs.nvel).all(|i| {
+                    table.vels[i].offset == geom.linear_offset(vs.ci[i])
+                }),
+                "cached StreamTable does not match this velocity set \
+                 (two distinct VelSets share the name {:?})",
+                vs.name
+            );
+            return table;
+        }
+        if c.map.len() >= CACHE_CAP {
+            let victim = c
+                .map
+                .iter()
+                .filter(|(_, (t, _))| Arc::strong_count(t) == 1)
+                .min_by_key(|(_, (_, used))| *used)
+                .map(|(k, _)| *k)
+                .or_else(|| {
+                    c.map
+                        .iter()
+                        .min_by_key(|(_, (_, used))| *used)
+                        .map(|(k, _)| *k)
+                });
+            if let Some(v) = victim {
+                c.map.remove(&v);
+            }
+        }
+        let table = Arc::new(StreamTable::new(vs, geom));
+        c.map.insert(key, (table.clone(), now));
         table
     }
 
@@ -127,6 +179,27 @@ impl StreamTable {
         }
     }
 
+    /// Sorted slice of hops in `hops` whose `site` lies in `sites`.
+    fn hops_in(hops: &[Hop], sites: &Range<usize>) -> &[Hop] {
+        let lo =
+            hops.partition_point(|h| (h.site as usize) < sites.start);
+        let hi = lo
+            + hops[lo..].partition_point(|h| (h.site as usize) < sites.end);
+        &hops[lo..hi]
+    }
+
+    /// Pull exceptions of velocity `i` whose site lies in `sites` — the
+    /// slab-ranged boundary query (empty slice ⇔ the range pulls purely at
+    /// the constant interior offset).
+    pub fn pull_hops(&self, i: usize, sites: Range<usize>) -> &[Hop] {
+        Self::hops_in(&self.vels[i].pull, &sites)
+    }
+
+    /// Push exceptions of velocity `i` whose site lies in `sites`.
+    pub fn push_hops(&self, i: usize, sites: Range<usize>) -> &[Hop] {
+        Self::hops_in(&self.vels[i].push, &sites)
+    }
+
     /// Pull-stream the chunk of sites `[base, base + dst_chunk.len())` of
     /// one SoA velocity row: `dst_chunk[k] = src_row[pull_from(i, base+k)]`.
     /// Interior runs between exceptions are contiguous `copy_from_slice`s.
@@ -136,11 +209,8 @@ impl StreamTable {
                       dst_chunk: &mut [f64], base: usize) {
         let v = &self.vels[i];
         let end = base + dst_chunk.len();
-        let lo = v.pull.partition_point(|h| (h.site as usize) < base);
-        let hi =
-            lo + v.pull[lo..].partition_point(|h| (h.site as usize) < end);
         let mut cur = base;
-        for h in &v.pull[lo..hi] {
+        for h in self.pull_hops(i, base..end) {
             let s = h.site as usize;
             if s > cur {
                 let src0 = (cur as i64 - v.offset) as usize;
@@ -165,11 +235,8 @@ impl StreamTable {
         debug_assert!(vals.len() >= len);
         let v = &self.vels[i];
         let end = base + len;
-        let lo = v.push.partition_point(|h| (h.site as usize) < base);
-        let hi =
-            lo + v.push[lo..].partition_point(|h| (h.site as usize) < end);
         let mut cur = base;
-        for h in &v.push[lo..hi] {
+        for h in self.push_hops(i, base..end) {
             let s = h.site as usize;
             if s > cur {
                 let d0 = (cur as i64 + v.offset) as usize;
@@ -282,5 +349,72 @@ mod tests {
         assert!(Arc::ptr_eq(&a, &b));
         let c = StreamTable::cached(d2q9(), &Geometry::new(7, 2, 1));
         assert_eq!(c.vels.len(), 9);
+    }
+
+    #[test]
+    fn cache_is_bounded() {
+        // sweeping many distinct geometries must not pin a table each —
+        // the regression the LRU bound exists for
+        for lx in 2..40 {
+            let _ = StreamTable::cached(d2q9(), &Geometry::new(lx, 3, 1));
+        }
+        assert!(cached_table_count() <= CACHE_CAP,
+                "cache grew to {} tables", cached_table_count());
+        // a held Arc survives eviction of its cache entry
+        let keep = StreamTable::cached(d2q9(), &Geometry::new(41, 3, 1));
+        for lx in 2..40 {
+            let _ = StreamTable::cached(d2q9(), &Geometry::new(lx, 5, 1));
+        }
+        assert_eq!(keep.nsites, 41 * 3);
+        assert!(cached_table_count() <= CACHE_CAP);
+    }
+
+    #[test]
+    fn ranged_hop_queries_match_bruteforce() {
+        let vs = d3q19();
+        let geom = Geometry::new(5, 4, 3);
+        let n = geom.nsites();
+        let table = StreamTable::new(vs, &geom);
+        for i in 0..vs.nvel {
+            for range in [0..n, 7..n - 5, 13..13, n / 2..n] {
+                let want_pull: Vec<Hop> = table.vels[i]
+                    .pull
+                    .iter()
+                    .copied()
+                    .filter(|h| range.contains(&(h.site as usize)))
+                    .collect();
+                assert_eq!(table.pull_hops(i, range.clone()), &want_pull[..],
+                           "i={i} pull {range:?}");
+                let want_push: Vec<Hop> = table.vels[i]
+                    .push
+                    .iter()
+                    .copied()
+                    .filter(|h| range.contains(&(h.site as usize)))
+                    .collect();
+                assert_eq!(table.push_hops(i, range.clone()), &want_push[..],
+                           "i={i} push {range:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn interior_slab_ranges_have_no_x_face_hops() {
+        // the MultiStep blocked sweep collides ranges that exclude the
+        // first and last x planes, so x-moving velocities see no wrap there
+        let vs = d3q19();
+        let geom = Geometry::new(8, 3, 4);
+        let plane = geom.ly * geom.lz;
+        let table = StreamTable::new(vs, &geom);
+        let interior = plane..(geom.lx - 1) * plane;
+        for i in 0..vs.nvel {
+            let c = vs.ci[i];
+            if c[1] == 0 && c[2] == 0 {
+                // pure-x velocities wrap only at the faces
+                assert!(table.push_hops(i, interior.clone()).is_empty(),
+                        "i={i}");
+                assert!(table.pull_hops(i, interior.clone()).is_empty(),
+                        "i={i}");
+            }
+        }
     }
 }

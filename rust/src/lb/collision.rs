@@ -24,6 +24,8 @@
 //! All paths must agree with `python/compile/kernels/ref.py` to f64
 //! round-off; `rust/tests/xla_parity.rs` pins the layers together.
 
+use std::ops::Range;
+
 use crate::free_energy::symmetric::FeParams;
 use crate::lattice::stream_table::StreamTable;
 use crate::lb::model::{VelSet, CS2, MAX_NVEL};
@@ -338,20 +340,37 @@ pub fn collide_lattice(vs: &VelSet, p: &FeParams, f: &mut [f64],
                        g: &mut [f64], grad: &[f64], lap: &[f64],
                        nsites: usize, pool: &TlpPool, vvl: usize,
                        scalar: bool) {
+    collide_lattice_range(vs, p, f, g, grad, lap, nsites, 0..nsites, pool,
+                          vvl, scalar);
+}
+
+/// Ranged in-place collision: only the sites in `sites` are collided
+/// (used by the multidomain step to skip the halo planes, whose gradients
+/// are garbage). Per-site arithmetic is chunk-position independent, so a
+/// restricted range produces bitwise the same values as the full sweep.
+#[allow(clippy::too_many_arguments)]
+pub fn collide_lattice_range(vs: &VelSet, p: &FeParams, f: &mut [f64],
+                             g: &mut [f64], grad: &[f64], lap: &[f64],
+                             nsites: usize, sites: Range<usize>,
+                             pool: &TlpPool, vvl: usize, scalar: bool) {
     debug_assert_eq!(f.len(), vs.nvel * nsites);
     debug_assert_eq!(g.len(), vs.nvel * nsites);
     debug_assert_eq!(grad.len(), 3 * nsites);
     debug_assert_eq!(lap.len(), nsites);
+    debug_assert!(sites.end <= nsites);
+    let start = sites.start;
+    let count = sites.len();
 
-    // SAFETY: chunks partition [0, nsites); every lane write of a chunk
+    // SAFETY: chunks partition `sites`; every lane write of a chunk
     // touches only sites in [base, base+len), so the parallel mutable
     // accesses are disjoint.
     let f_ptr = SendPtr(f.as_mut_ptr(), f.len());
     let g_ptr = SendPtr(g.as_mut_ptr(), g.len());
 
-    pool.for_chunks(nsites, vvl, |base, len| {
+    pool.for_chunks(count, vvl, |base, len| {
         // rebind so the closure captures the Send+Sync wrappers whole
         let (f_ptr, g_ptr) = (f_ptr, g_ptr);
+        let base = start + base;
         let f = unsafe { std::slice::from_raw_parts_mut(f_ptr.0, f_ptr.1) };
         let g = unsafe { std::slice::from_raw_parts_mut(g_ptr.0, g_ptr.1) };
         if scalar {
@@ -376,6 +395,22 @@ pub fn collide_stream_lattice(vs: &VelSet, p: &FeParams, f_src: &[f64],
                               g_dst: &mut [f64], grad: &[f64], lap: &[f64],
                               table: &StreamTable, nsites: usize,
                               pool: &TlpPool, vvl: usize, scalar: bool) {
+    collide_stream_range(vs, p, f_src, g_src, f_dst, g_dst, grad, lap,
+                         table, nsites, 0..nsites, pool, vvl, scalar);
+}
+
+/// Ranged fused collide→push-stream: only the sites in `sites` are
+/// collided and scattered — the inner sweep of the temporal-blocked
+/// `MultiStep` tier, which shrinks the collided slab region by one plane
+/// per side per blocked step. Destination entries whose unique source site
+/// lies outside `sites` are left untouched.
+#[allow(clippy::too_many_arguments)]
+pub fn collide_stream_range(vs: &VelSet, p: &FeParams, f_src: &[f64],
+                            g_src: &[f64], f_dst: &mut [f64],
+                            g_dst: &mut [f64], grad: &[f64], lap: &[f64],
+                            table: &StreamTable, nsites: usize,
+                            sites: Range<usize>, pool: &TlpPool,
+                            vvl: usize, scalar: bool) {
     debug_assert_eq!(f_src.len(), vs.nvel * nsites);
     debug_assert_eq!(g_src.len(), vs.nvel * nsites);
     debug_assert_eq!(f_dst.len(), vs.nvel * nsites);
@@ -383,15 +418,19 @@ pub fn collide_stream_lattice(vs: &VelSet, p: &FeParams, f_src: &[f64],
     debug_assert_eq!(grad.len(), 3 * nsites);
     debug_assert_eq!(lap.len(), nsites);
     debug_assert_eq!(table.nsites, nsites);
+    debug_assert!(sites.end <= nsites);
+    let start = sites.start;
+    let count = sites.len();
 
     // SAFETY: per velocity, push-streaming is a bijection on sites, so the
     // destination sets of disjoint chunks are disjoint; chunks partition
-    // [0, nsites).
+    // `sites`.
     let f_ptr = SendPtr(f_dst.as_mut_ptr(), f_dst.len());
     let g_ptr = SendPtr(g_dst.as_mut_ptr(), g_dst.len());
 
-    pool.for_chunks(nsites, vvl, |base, len| {
+    pool.for_chunks(count, vvl, |base, len| {
         let (f_ptr, g_ptr) = (f_ptr, g_ptr);
+        let base = start + base;
         let f_dst =
             unsafe { std::slice::from_raw_parts_mut(f_ptr.0, f_ptr.1) };
         let g_dst =
@@ -516,6 +555,36 @@ mod tests {
         }
         for (a, b) in g.iter().zip(&g_ref) {
             assert!((a - b).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn ranged_collide_is_bitwise_restriction_of_full_sweep() {
+        // unaligned range start: chunk bases shift, values must not —
+        // the property the MultiStep temporal blocking relies on
+        let vs = d3q19();
+        let nsites = 120;
+        let p = FeParams::default();
+        let (f0, g0, grad, lap) = make_state(vs, nsites, 21);
+        let mut f_full = f0.clone();
+        let mut g_full = g0.clone();
+        collide_lattice(vs, &p, &mut f_full, &mut g_full, &grad, &lap,
+                        nsites, &TlpPool::serial(), 8, false);
+        let range = 17..93;
+        let mut f = f0.clone();
+        let mut g = g0.clone();
+        collide_lattice_range(vs, &p, &mut f, &mut g, &grad, &lap, nsites,
+                              range.clone(), &TlpPool::serial(), 8, false);
+        for i in 0..vs.nvel {
+            for s in 0..nsites {
+                let (wf, wg) = if range.contains(&s) {
+                    (f_full[i * nsites + s], g_full[i * nsites + s])
+                } else {
+                    (f0[i * nsites + s], g0[i * nsites + s])
+                };
+                assert_eq!(f[i * nsites + s], wf, "i={i} s={s}");
+                assert_eq!(g[i * nsites + s], wg, "i={i} s={s}");
+            }
         }
     }
 

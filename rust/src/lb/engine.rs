@@ -10,15 +10,26 @@
 //!   3. `BinaryCollision`                 (the Figure-1 hot spot)
 //!   4. `Stream` f and g                  (pull propagation, double-buffered)
 //!
-//! * or, on any target advertising it, the fused `FullStep` — one launch
-//!   per step. Both the XLA backend (whole step in one AOT executable) and
-//!   the host backend (fused collide→push-stream sweep, see
-//!   [`crate::targetdp::host`]) support this tier; `MultiStep` (k fused
-//!   steps per launch) remains XLA-only. The engine always prefers the
-//!   most fused kernel available — the paper's single-source promise: the
-//!   application never changes, the target picks its fastest path. Use
-//!   [`LbEngine::set_fusion`] to force the unfused pipeline (parity tests,
-//!   fused-vs-unfused benches).
+//! * the fused `FullStep` — one launch per step. Both the XLA backend
+//!   (whole step in one AOT executable) and the host backend (fused
+//!   collide→push-stream sweep, see [`crate::targetdp::host`]) support
+//!   this tier;
+//!
+//! * or the `MultiStep` tier — k fused timesteps per launch. On XLA this
+//!   is an AOT executable with the step loop unrolled inside; on the host
+//!   it is the temporal-blocking sweep of
+//!   [`crate::lb::multistep::MultiStepPlan`] (cache-resident x-slabs with
+//!   depth-2k halo recompute). A target advertises a usable depth through
+//!   [`Target::multi_step_width`]; `run` drains whole k-blocks through it
+//!   and lets the remainder fall through to `FullStep` (or the unfused
+//!   pipeline) so any step count is served exactly.
+//!
+//! The engine always prefers the most fused tier available — the paper's
+//! single-source promise: the application never changes, the target picks
+//! its fastest path. All tiers are bit-identical
+//! (`tests/fused_parity.rs`, `tests/multistep_parity.rs`). Use
+//! [`LbEngine::set_fusion`] to force the unfused pipeline (parity tests,
+//! fused-vs-unfused benches).
 //!
 //! Observables are reduced **on the target** when it provides `PhiMoment`
 //! + `ReduceSum`: only the per-component sums and the 1-component phi
@@ -110,23 +121,35 @@ impl<'t> LbEngine<'t> {
         self.fusion = fusion;
     }
 
-    /// True when the next `run` will use a fused kernel — mirrors the
-    /// dispatch in [`LbEngine::run`], including the `multi_step_width`
-    /// check (a target may advertise `MultiStep` yet have no usable width
-    /// for this geometry/model).
-    pub fn fused_active(&self) -> bool {
+    /// The fused tier the next `run` will drive, most fused first:
+    /// `(MultiStep, k)` when the target has a usable blocked depth for
+    /// this geometry/model, else `(FullStep, 1)`, else `None` (unfused
+    /// pipeline). This is the single dispatch decision shared by
+    /// [`LbEngine::run`] and [`LbEngine::fused_active`].
+    pub fn fused_tier(&self) -> Option<(KernelId, u64)> {
         if !self.fusion {
-            return false;
+            return None;
         }
-        if self.target.supports(KernelId::FullStep) {
-            return true;
-        }
-        self.target.supports(KernelId::MultiStep)
-            && self
+        if self.target.supports(KernelId::MultiStep) {
+            let k = self
                 .target
                 .multi_step_width(&self.geom, self.model)
-                .unwrap_or(0)
-                > 0
+                .unwrap_or(0);
+            if k > 0 {
+                return Some((KernelId::MultiStep, k));
+            }
+        }
+        if self.target.supports(KernelId::FullStep) {
+            return Some((KernelId::FullStep, 1));
+        }
+        None
+    }
+
+    /// True when the next `run` will use a fused kernel (a target may
+    /// advertise `MultiStep` yet have no usable width for this
+    /// geometry/model — see [`LbEngine::fused_tier`]).
+    pub fn fused_active(&self) -> bool {
+        self.fused_tier().is_some()
     }
 
     /// Upload an initial state (SoA `nvel * nsites` each).
@@ -190,26 +213,19 @@ impl<'t> LbEngine<'t> {
     /// supports (unless fusion is disabled).
     pub fn run(&mut self, nsteps: u64) -> Result<()> {
         let mut remaining = nsteps;
-        // prefer the k-step fused kernel when the target has one
-        if self.fusion
-            && self.target.supports(KernelId::MultiStep)
-            && remaining > 0
-        {
-            let k = self
-                .target
-                .multi_step_width(&self.geom, self.model)
-                .unwrap_or(0);
-            if k > 0 {
-                while remaining >= k {
-                    self.target.launch(
-                        KernelId::MultiStep,
-                        &self.args().bind("f", self.f).bind("g", self.g),
-                    )?;
-                    remaining -= k;
-                    self.steps_done += k;
-                }
+        // drain whole k-blocks through the k-step fused kernel; like
+        // FullStep it receives the double-buffer + moment scratch
+        // bindings (targets that fuse internally ignore the extras)
+        if let Some((KernelId::MultiStep, k)) = self.fused_tier() {
+            let args = self.full_step_args();
+            while remaining >= k {
+                self.target.launch(KernelId::MultiStep, &args)?;
+                remaining -= k;
+                self.steps_done += k;
             }
         }
+        // remainder (or everything, without a usable MultiStep): one
+        // step at a time, fused when the target has FullStep
         while remaining > 0 {
             if self.fusion && self.target.supports(KernelId::FullStep) {
                 self.target

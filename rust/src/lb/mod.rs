@@ -14,6 +14,7 @@ pub mod equilibrium;
 pub mod init;
 pub mod model;
 pub mod moments;
+pub mod multistep;
 pub mod propagation;
 
 pub use engine::LbEngine;

@@ -1,18 +1,33 @@
 //! Hydrodynamic moments of the distributions (observables + the phi-moment
 //! kernel feeding the gradient step).
 
+use std::ops::Range;
+
 use crate::lb::model::VelSet;
 use crate::targetdp::tlp::TlpPool;
 
 /// phi(s) = sum_i g_i(s), SoA layout.
 pub fn phi_from_g(vs: &VelSet, g: &[f64], phi: &mut [f64], nsites: usize,
                   pool: &TlpPool, vvl: usize) {
+    phi_from_g_range(vs, g, phi, nsites, 0..nsites, pool, vvl);
+}
+
+/// Ranged variant: compute phi only for the sites in `sites` (used by the
+/// temporal-blocked `MultiStep` sweep, which shrinks the valid slab region
+/// step by step). Per-site arithmetic is identical to the full sweep, so
+/// restricting the range cannot change any computed value.
+pub fn phi_from_g_range(vs: &VelSet, g: &[f64], phi: &mut [f64],
+                        nsites: usize, sites: Range<usize>, pool: &TlpPool,
+                        vvl: usize) {
     debug_assert_eq!(g.len(), vs.nvel * nsites);
     debug_assert_eq!(phi.len(), nsites);
+    debug_assert!(sites.end <= nsites);
+    let start = sites.start;
+    let count = sites.len();
     let phi_ptr = SendPtr(phi.as_mut_ptr());
-    pool.for_chunks(nsites, vvl, |base, len| {
+    pool.for_chunks(count, vvl, |base, len| {
         let phi = phi_ptr;
-        for s in base..base + len {
+        for s in start + base..start + base + len {
             let mut acc = 0.0;
             for i in 0..vs.nvel {
                 acc += g[i * nsites + s];

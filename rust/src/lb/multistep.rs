@@ -1,0 +1,282 @@
+//! Host k-step temporal blocking: the `MultiStep` tier on the CPU backend.
+//!
+//! The fused `FullStep` still traverses the full f/g state (plus the
+//! phi/gradient fields) once per timestep. [`MultiStepPlan`] amortises
+//! those traversals over **k timesteps per launch** with the classic
+//! structured-grid trapezoid scheme:
+//!
+//! 1. the lattice is partitioned into x-slabs of `slab_w` interior planes;
+//! 2. each slab is gathered into a local scratch lattice extended by
+//!    `2k` halo planes per side ([`HALO_PER_STEP`] planes per blocked
+//!    step: one for the gradient stencil, one for streaming), filled with
+//!    periodic neighbour planes — the depth-k generalisation of the
+//!    [`crate::lattice::decomp::SlabDecomposition`] halo-plane copies;
+//! 3. the slab advances k fused collide→push-stream timesteps while it is
+//!    cache resident, the valid region shrinking by two planes per side
+//!    per step (the overlap is *recomputed*, wavefront style — no
+//!    inter-slab communication inside the block);
+//! 4. after k steps exactly the interior planes remain valid and are
+//!    scattered back to the global double buffer.
+//!
+//! Every per-site update (phi moment, gradient stencil, collision,
+//! streaming scatter) is arithmetically independent of chunk placement,
+//! so the blocked sweep is **bit-identical** to k successive `FullStep`
+//! launches (`tests/multistep_parity.rs`) — including when the extended
+//! slab wraps around a small lattice and some planes are redundantly
+//! recomputed copies of each other.
+
+use std::sync::Arc;
+
+use crate::free_energy::gradient::gradient_fd_range;
+use crate::free_energy::symmetric::FeParams;
+use crate::lattice::geometry::Geometry;
+use crate::lattice::stream_table::StreamTable;
+use crate::lb::collision::collide_stream_range;
+use crate::lb::model::VelSet;
+use crate::lb::moments::phi_from_g_range;
+use crate::targetdp::tlp::TlpPool;
+
+/// Halo planes consumed per blocked timestep per side: one for the
+/// gradient stencil plus one for streaming.
+pub const HALO_PER_STEP: usize = 2;
+
+/// Reusable blocked-sweep state for one `(geometry, model, k, slab_w)`
+/// combination: the local slab geometry, its streaming table and the
+/// per-slab scratch buffers (sized once, reused across launches — no
+/// allocation on the step path).
+pub struct MultiStepPlan {
+    /// Timesteps advanced per launch.
+    pub k: usize,
+    /// Interior planes per slab (the last slab may be narrower).
+    pub slab_w: usize,
+    global: Geometry,
+    nvel: usize,
+    /// Extended slab geometry: `slab_w + 2 * HALO_PER_STEP * k` x-planes.
+    local: Geometry,
+    table: Arc<StreamTable>,
+    // ping/pong distribution scratch plus the moment fields, all local
+    f_a: Vec<f64>,
+    g_a: Vec<f64>,
+    f_b: Vec<f64>,
+    g_b: Vec<f64>,
+    phi: Vec<f64>,
+    grad: Vec<f64>,
+    lap: Vec<f64>,
+}
+
+impl MultiStepPlan {
+    pub fn new(vs: &VelSet, global: Geometry, k: usize, slab_w: usize)
+               -> Self {
+        assert!(k >= 1, "MultiStep depth must be at least 1");
+        let slab_w = slab_w.clamp(1, global.lx);
+        let halo = HALO_PER_STEP * k;
+        let local =
+            Geometry::new(slab_w + 2 * halo, global.ly, global.lz);
+        let table = StreamTable::cached(vs, &local);
+        let ln = local.nsites();
+        MultiStepPlan {
+            k,
+            slab_w,
+            global,
+            nvel: vs.nvel,
+            local,
+            table,
+            f_a: vec![0.0; vs.nvel * ln],
+            g_a: vec![0.0; vs.nvel * ln],
+            f_b: vec![0.0; vs.nvel * ln],
+            g_b: vec![0.0; vs.nvel * ln],
+            phi: vec![0.0; ln],
+            grad: vec![0.0; 3 * ln],
+            lap: vec![0.0; ln],
+        }
+    }
+
+    /// Whether this plan can serve a launch with these parameters.
+    pub fn matches(&self, global: &Geometry, nvel: usize, k: usize,
+                   slab_w: usize) -> bool {
+        self.global == *global
+            && self.nvel == nvel
+            && self.k == k
+            && self.slab_w == slab_w.clamp(1, global.lx)
+    }
+
+    /// Advance the whole lattice `k` timesteps: read `f`/`g` at time t,
+    /// write `f_out`/`g_out` at time t+k (the engine's double buffer).
+    #[allow(clippy::too_many_arguments)]
+    pub fn run(&mut self, vs: &VelSet, p: &FeParams, f: &[f64], g: &[f64],
+               f_out: &mut [f64], g_out: &mut [f64], pool: &TlpPool,
+               vvl: usize, scalar: bool) {
+        let n = self.global.nsites();
+        let ln = self.local.nsites();
+        let plane = self.global.ly * self.global.lz;
+        let lloc = self.local.lx;
+        let halo = HALO_PER_STEP * self.k;
+        debug_assert_eq!(vs.nvel, self.nvel);
+        debug_assert_eq!(f.len(), self.nvel * n);
+        debug_assert_eq!(g.len(), self.nvel * n);
+        debug_assert_eq!(f_out.len(), self.nvel * n);
+        debug_assert_eq!(g_out.len(), self.nvel * n);
+
+        let nslab = self.global.lx.div_ceil(self.slab_w);
+        for b in 0..nslab {
+            let x0 = b * self.slab_w;
+            let wb = self.slab_w.min(self.global.lx - x0);
+
+            // gather the extended slab [x0 - halo, x0 + slab_w + halo)
+            // with periodic x wrap; planes are contiguous per component
+            for (q0, gx, len) in
+                wrapped_runs(self.global.lx, x0 as i64 - halo as i64, lloc)
+            {
+                for c in 0..self.nvel {
+                    let dst = c * ln + q0 * plane;
+                    let src = c * n + gx * plane;
+                    self.f_a[dst..dst + len * plane]
+                        .copy_from_slice(&f[src..src + len * plane]);
+                    self.g_a[dst..dst + len * plane]
+                        .copy_from_slice(&g[src..src + len * plane]);
+                }
+            }
+
+            // k blocked timesteps, the valid window shrinking by
+            // HALO_PER_STEP planes per side per step
+            for j in 1..=self.k {
+                let c0 = 2 * j - 1;
+                let c1 = lloc - (2 * j - 1);
+                let p0 = 2 * j - 2;
+                let p1 = lloc - (2 * j - 2);
+                phi_from_g_range(vs, &self.g_a, &mut self.phi, ln,
+                                 p0 * plane..p1 * plane, pool, vvl);
+                gradient_fd_range(&self.local, &self.phi, &mut self.grad,
+                                  &mut self.lap, c0 * plane..c1 * plane,
+                                  pool, vvl);
+                collide_stream_range(vs, p, &self.f_a, &self.g_a,
+                                     &mut self.f_b, &mut self.g_b,
+                                     &self.grad, &self.lap, &self.table,
+                                     ln, c0 * plane..c1 * plane, pool, vvl,
+                                     scalar);
+                std::mem::swap(&mut self.f_a, &mut self.f_b);
+                std::mem::swap(&mut self.g_a, &mut self.g_b);
+            }
+
+            // scatter the (now fully advanced) interior planes back
+            for c in 0..self.nvel {
+                let src = c * ln + halo * plane;
+                let dst = c * n + x0 * plane;
+                f_out[dst..dst + wb * plane]
+                    .copy_from_slice(&self.f_a[src..src + wb * plane]);
+                g_out[dst..dst + wb * plane]
+                    .copy_from_slice(&self.g_a[src..src + wb * plane]);
+            }
+        }
+    }
+}
+
+/// Decompose `count` consecutive x-planes starting at (possibly negative
+/// or wrapping) global plane `start` into `(local_offset, global_x, len)`
+/// runs that are contiguous in both the local and the global lattice.
+/// Lazy so the gather path stays allocation-free.
+fn wrapped_runs(lx: usize, start: i64, count: usize)
+                -> impl Iterator<Item = (usize, usize, usize)> {
+    let mut q = 0usize;
+    std::iter::from_fn(move || {
+        if q >= count {
+            return None;
+        }
+        let gx = (start + q as i64).rem_euclid(lx as i64) as usize;
+        let len = (lx - gx).min(count - q);
+        let run = (q, gx, len);
+        q += len;
+        Some(run)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::free_energy::gradient::gradient_fd;
+    use crate::lb::collision::collide_stream_lattice;
+    use crate::lb::init;
+    use crate::lb::model::{d2q9, d3q19};
+    use crate::lb::moments::phi_from_g;
+
+    #[test]
+    fn wrapped_runs_cover_and_wrap() {
+        let runs = |lx, start, count| {
+            wrapped_runs(lx, start, count).collect::<Vec<_>>()
+        };
+        // 12-plane lattice, extended slab [-4, 9): wraps low
+        assert_eq!(runs(12, -4, 13), vec![(0, 8, 4), (4, 0, 9)]);
+        // no wrap
+        assert_eq!(runs(12, 3, 5), vec![(0, 3, 5)]);
+        // extended extent larger than the lattice: multiple wraps
+        assert_eq!(runs(4, -2, 11),
+                   vec![(0, 2, 2), (2, 0, 4), (6, 0, 4), (10, 0, 1)]);
+    }
+
+    /// Reference: k global fused full steps (phi → grad → collide-stream).
+    fn full_steps(vs: &VelSet, p: &FeParams, geom: &Geometry, k: usize,
+                  f: &mut Vec<f64>, g: &mut Vec<f64>) {
+        let n = geom.nsites();
+        let pool = TlpPool::serial();
+        let table = StreamTable::cached(vs, geom);
+        let mut phi = vec![0.0; n];
+        let mut grad = vec![0.0; 3 * n];
+        let mut lap = vec![0.0; n];
+        let mut f_dst = vec![0.0; vs.nvel * n];
+        let mut g_dst = vec![0.0; vs.nvel * n];
+        for _ in 0..k {
+            phi_from_g(vs, g, &mut phi, n, &pool, 8);
+            gradient_fd(geom, &phi, &mut grad, &mut lap, &pool, 8);
+            collide_stream_lattice(vs, p, f, g, &mut f_dst, &mut g_dst,
+                                   &grad, &lap, &table, n, &pool, 8,
+                                   false);
+            std::mem::swap(f, &mut f_dst);
+            std::mem::swap(g, &mut g_dst);
+        }
+    }
+
+    #[test]
+    fn blocked_sweep_is_bitwise_equal_to_k_full_steps() {
+        let p = FeParams::default();
+        for (vs, geom) in [(d3q19(), Geometry::new(10, 4, 3)),
+                           (d2q9(), Geometry::new(9, 6, 1))] {
+            let n = geom.nsites();
+            let mut f0 = vec![0.0; vs.nvel * n];
+            let mut g0 = vec![0.0; vs.nvel * n];
+            init::init_spinodal(vs, &p, &geom, &mut f0, &mut g0, 0.05, 5);
+
+            for k in [1usize, 2, 3] {
+                // slab widths: single slab, even split, uneven remainder,
+                // and width 2 (heavy overlap recompute + self-wrap)
+                for w in [geom.lx, 5, 4, 2] {
+                    let mut f_ref = f0.clone();
+                    let mut g_ref = g0.clone();
+                    full_steps(vs, &p, &geom, k, &mut f_ref, &mut g_ref);
+
+                    let mut plan = MultiStepPlan::new(vs, geom, k, w);
+                    let mut f_out = vec![0.0; vs.nvel * n];
+                    let mut g_out = vec![0.0; vs.nvel * n];
+                    plan.run(vs, &p, &f0, &g0, &mut f_out, &mut g_out,
+                             &TlpPool::serial(), 8, false);
+                    assert_eq!(f_out, f_ref, "{} k={k} w={w}: f", vs.name);
+                    assert_eq!(g_out, g_ref, "{} k={k} w={w}: g", vs.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn plan_matches_is_exact() {
+        let vs = d3q19();
+        let geom = Geometry::new(8, 4, 4);
+        let plan = MultiStepPlan::new(vs, geom, 2, 4);
+        assert!(plan.matches(&geom, vs.nvel, 2, 4));
+        assert!(!plan.matches(&geom, vs.nvel, 3, 4));
+        assert!(!plan.matches(&geom, vs.nvel, 2, 5));
+        assert!(!plan.matches(&Geometry::new(8, 4, 5), vs.nvel, 2, 4));
+        // widths clamp identically on both sides
+        let wide = MultiStepPlan::new(vs, geom, 1, 99);
+        assert!(wide.matches(&geom, vs.nvel, 1, 99));
+        assert_eq!(wide.slab_w, geom.lx);
+    }
+}

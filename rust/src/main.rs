@@ -19,19 +19,21 @@ targetdp — lattice-based data parallelism with portable performance
 
 USAGE:
     targetdp run [--config FILE] [--backend B] [--lattice L] [--size N]
-                 [--steps K] [--vvl V] [--threads T] [--out DIR] [--vtk]
+                 [--steps K] [--vvl V] [--threads T] [--multi-step M]
+                 [--out DIR] [--vtk]
     targetdp info
     targetdp help
 
 run options (ignored when --config is given):
-    --backend   host-simd | host-scalar | xla     [host-simd]
-    --lattice   d3q19 | d2q9                      [d3q19]
-    --size      cubic extent (d2q9: size^2 x 1)   [16]
-    --steps     timesteps                         [100]
-    --vvl       virtual vector length             [8]
-    --threads   TLP threads (0 = autodetect)      [1]
-    --out       output directory for CSV/VTK      [none]
-    --vtk       dump a phi snapshot at the end
+    --backend     host-simd | host-scalar | xla     [host-simd]
+    --lattice     d3q19 | d2q9                      [d3q19]
+    --size        cubic extent (d2q9: size^2 x 1)   [16]
+    --steps       timesteps                         [100]
+    --vvl         virtual vector length             [8]
+    --threads     TLP threads (0 = autodetect)      [1]
+    --multi-step  host blocked steps/launch, 0=auto [0]
+    --out         output directory for CSV/VTK      [none]
+    --vtk         dump a phi snapshot at the end
 ";
 
 fn main() -> ExitCode {
@@ -70,6 +72,7 @@ fn run() -> targetdp::Result<()> {
                             backend: args.str_or("backend", "host-simd"),
                             vvl: args.usize_or("vvl", 8)?,
                             threads: args.usize_or("threads", 1)?,
+                            multi_step: args.u64_or("multi-step", 0)?,
                             ..Default::default()
                         },
                         free_energy: Default::default(),

@@ -15,26 +15,41 @@
 //! (section III-A), which is what lets the identical application code also
 //! drive the XLA backend.
 //!
-//! # The host fusion tier
+//! # The host fusion tiers
 //!
-//! Besides the five per-step kernels, the host backend implements the
-//! fused [`KernelId::FullStep`]: one launch advances a whole timestep,
-//! with the collision chunk scattered straight to its streaming
-//! destinations ([`crate::lb::collision::collide_stream_lattice`] over a
-//! cached [`StreamTable`]). That removes the separate `Stream` sweeps —
-//! per step, f and g are each read and written **once** instead of twice
-//! (4 → 2 full 19-component traversals) — the same "keep the master copy
-//! resident and fuse" optimisation the XLA backend gets from its AOT
-//! executables, picked up by the engine's `supports(FullStep)` dispatch
-//! with no application-code change. Fused and unfused pipelines agree
-//! bit-for-bit (`tests/fused_parity.rs`).
+//! Besides the five per-step kernels, the host backend implements two
+//! fused tiers, giving the engine three execution levels to pick from:
+//!
+//! 1. **unfused** — the reference 5-kernel pipeline (phi → gradient →
+//!    collision → 2× stream), 4 full f/g traversals per step;
+//! 2. **[`KernelId::FullStep`]** — one launch per timestep: the collision
+//!    chunk is scattered straight to its streaming destinations
+//!    ([`crate::lb::collision::collide_stream_lattice`] over a cached
+//!    [`StreamTable`]), so f and g are each read and written **once**
+//!    per step (4 → 2 traversals);
+//! 3. **[`KernelId::MultiStep`]** — k timesteps per launch via temporal
+//!    blocking ([`crate::lb::multistep::MultiStepPlan`]): the lattice is
+//!    swept in x-slabs extended by depth-2k periodic halo planes, each
+//!    slab advancing k fused steps while cache resident, amortising the
+//!    global f/g (and phi/gradient) traversals over k steps. The
+//!    [`multi_step_plan`] heuristic sizes slabs from an assumed cache
+//!    budget and only volunteers the tier when it plausibly wins; the
+//!    `multi_step` / `multi_step_slab` / `multi_step_cache_kb` constants
+//!    force or tune it.
+//!
+//! All three tiers agree bit-for-bit (`tests/fused_parity.rs`,
+//! `tests/multistep_parity.rs`) — the paper's single-source promise: the
+//! application never changes, the target picks its fastest path.
 
 use crate::error::{Error, Result};
 use crate::free_energy::gradient::gradient_fd;
 use crate::free_energy::symmetric::FeParams;
+use crate::lattice::geometry::Geometry;
 use crate::lattice::stream_table::StreamTable;
 use crate::lb::collision::{collide_lattice, collide_stream_lattice};
+use crate::lb::model::LatticeModel;
 use crate::lb::moments::phi_from_g;
+use crate::lb::multistep::{MultiStepPlan, HALO_PER_STEP};
 use crate::lb::propagation::stream_with_table;
 
 use super::constant::{Constant, ConstantTable};
@@ -43,6 +58,48 @@ use super::masked;
 use super::memory::{BufId, FieldDesc, HostPool};
 use super::target::{KernelId, LaunchArgs, Target, TargetKind};
 use super::tlp::TlpPool;
+
+/// Assumed cache budget per slab for the MultiStep planner when the
+/// `multi_step_cache_kb` constant is unset: 2 MiB, a typical per-core L2.
+pub const MULTI_STEP_CACHE_BYTES: usize = 2 << 20;
+
+/// Size the host temporal-blocking tier for a geometry/model: returns
+/// `(k, slab_w)` — blocked depth and interior slab width in x-planes — or
+/// `None` when the tier should stay off and the engine should fall back
+/// to `FullStep`.
+///
+/// `force_k`/`force_w` (0 = auto) pin the knobs; with `force_k == 0` the
+/// heuristic only volunteers a plan when it plausibly wins: the slab
+/// scratch (f/g ping+pong plus phi/grad/lap) must fit `cache_bytes` with
+/// at most 50% halo-overlap recompute, and the lattice must be wider than
+/// one slab (otherwise `FullStep` is already cache resident and the
+/// overlap is pure overhead).
+pub fn multi_step_plan(geom: &Geometry, model: LatticeModel,
+                       force_k: usize, force_w: usize,
+                       cache_bytes: usize) -> Option<(usize, usize)> {
+    let vs = model.velset();
+    let plane = geom.ly * geom.lz;
+    // slab scratch per x-plane: 4 distribution rows (f/g ping+pong) plus
+    // phi, grad (3) and lap, all f64
+    let bytes_per_plane = plane * (4 * vs.nvel + 5) * 8;
+    let fit_w = |k: usize| {
+        (cache_bytes / bytes_per_plane)
+            .saturating_sub(2 * HALO_PER_STEP * k)
+    };
+    if force_k > 0 {
+        let w = if force_w > 0 { force_w } else { fit_w(force_k).max(1) };
+        return Some((force_k, w.clamp(1, geom.lx)));
+    }
+    // auto depth: deepest k whose slab width (pinned by force_w when set)
+    // passes the overlap and multi-slab conditions
+    for k in [4usize, 3, 2] {
+        let w = if force_w > 0 { force_w } else { fit_w(k) };
+        if w >= 2 * HALO_PER_STEP * k && w < geom.lx {
+            return Some((k, w));
+        }
+    }
+    None
+}
 
 /// Execution mode of the host backend.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -60,6 +117,9 @@ pub struct HostTarget {
     pool: TlpPool,
     bufs: HostPool,
     constants: ConstantTable,
+    /// Cached temporal-blocking plan (scratch + local stream table),
+    /// rebuilt only when geometry/model/knobs change.
+    multistep: Option<MultiStepPlan>,
 }
 
 impl HostTarget {
@@ -78,6 +138,7 @@ impl HostTarget {
             pool,
             bufs: HostPool::new(),
             constants: ConstantTable::new(),
+            multistep: None,
         })
     }
 
@@ -89,6 +150,7 @@ impl HostTarget {
             pool,
             bufs: HostPool::new(),
             constants: ConstantTable::new(),
+            multistep: None,
         }
     }
 
@@ -103,6 +165,29 @@ impl HostTarget {
 
     pub fn mode(&self) -> HostMode {
         self.mode
+    }
+
+    /// Resolve the MultiStep knobs from the constant table and run the
+    /// planner: `multi_step` (blocked depth k, 0 = auto), `multi_step_slab`
+    /// (interior slab width, 0 = auto) and `multi_step_cache_kb` (planner
+    /// cache budget, 0/unset = [`MULTI_STEP_CACHE_BYTES`]).
+    fn multi_step_params(&self, geom: &Geometry, model: LatticeModel)
+                         -> Option<(usize, usize)> {
+        let knob = |name: &str| {
+            self.constants
+                .get_int(name)
+                .ok()
+                .filter(|&v| v > 0)
+                .map_or(0, |v| v as usize)
+        };
+        let cache = self
+            .constants
+            .get_int("multi_step_cache_kb")
+            .ok()
+            .filter(|&v| v > 0)
+            .map_or(MULTI_STEP_CACHE_BYTES, |v| (v as usize) << 10);
+        multi_step_plan(geom, model, knob("multi_step"),
+                        knob("multi_step_slab"), cache)
     }
 
     /// Free-energy parameters from the constant table (set by the engine
@@ -188,10 +273,16 @@ impl Target for HostTarget {
         Ok(())
     }
 
-    fn supports(&self, kernel: KernelId) -> bool {
-        // FullStep is native (the fused collide→stream sweep); only the
-        // k-step MultiStep remains an accelerator-only artifact kernel.
-        !matches!(kernel, KernelId::MultiStep)
+    fn supports(&self, _kernel: KernelId) -> bool {
+        // every kernel tier is native, including the temporal-blocked
+        // MultiStep; whether MultiStep is *worth using* for a given
+        // geometry is a separate question answered by `multi_step_width`
+        true
+    }
+
+    fn multi_step_width(&self, geom: &Geometry,
+                        model: LatticeModel) -> Option<u64> {
+        self.multi_step_params(geom, model).map(|(k, _)| k as u64)
     }
 
     fn launch(&mut self, kernel: KernelId, args: &LaunchArgs) -> Result<()> {
@@ -325,10 +416,53 @@ impl Target for HostTarget {
                 self.bufs.restore(args.buf("result")?, result);
                 Ok(())
             }
-            KernelId::MultiStep => Err(Error::UnsupportedKernel {
-                target: self.describe(),
-                kernel: kernel.name().into(),
-            }),
+            KernelId::MultiStep => {
+                // the temporal-blocking tier: k fused timesteps per
+                // launch over cache-resident x-slabs (lb/multistep.rs);
+                // like FullStep, the result lands in the *_tmp double
+                // buffer and the data vectors swap
+                let p = self.fe_params();
+                // validate bindings before building the (multi-MB) plan
+                let (f_id, g_id) = (args.buf("f")?, args.buf("g")?);
+                let (ft_id, gt_id) =
+                    (args.buf("f_tmp")?, args.buf("g_tmp")?);
+                let (k, w) = self
+                    .multi_step_params(&args.geometry, args.model)
+                    .ok_or_else(|| {
+                        Error::Invalid(format!(
+                            "no MultiStep plan for {}x{}x{} {} on {} — \
+                             set the multi_step constant or launch \
+                             FullStep",
+                            args.geometry.lx, args.geometry.ly,
+                            args.geometry.lz, args.model.name(),
+                            self.describe()
+                        ))
+                    })?;
+                let stale = self.multistep.as_ref().map_or(true, |pl| {
+                    !pl.matches(&args.geometry, vs.nvel, k, w)
+                });
+                if stale {
+                    self.multistep =
+                        Some(MultiStepPlan::new(vs, args.geometry, k, w));
+                }
+                let mut f = self.bufs.take(f_id)?;
+                let mut g = self.bufs.take(g_id)?;
+                let mut f_tmp = self.bufs.take(ft_id)?;
+                let mut g_tmp = self.bufs.take(gt_id)?;
+
+                let plan =
+                    self.multistep.as_mut().expect("plan built above");
+                plan.run(vs, &p, &f.data, &g.data, &mut f_tmp.data,
+                         &mut g_tmp.data, &self.pool, self.vvl, scalar);
+                std::mem::swap(&mut f.data, &mut f_tmp.data);
+                std::mem::swap(&mut g.data, &mut g_tmp.data);
+
+                self.bufs.restore(f_id, f);
+                self.bufs.restore(g_id, g);
+                self.bufs.restore(ft_id, f_tmp);
+                self.bufs.restore(gt_id, g_tmp);
+                Ok(())
+            }
         }
     }
 
@@ -411,11 +545,55 @@ mod tests {
     }
 
     #[test]
-    fn full_step_supported_multi_step_not() {
-        let t = HostTarget::default_simd();
+    fn all_kernels_supported_multi_step_width_gated() {
+        let mut t = HostTarget::default_simd();
         assert!(t.supports(KernelId::FullStep));
         assert!(t.supports(KernelId::BinaryCollision));
-        assert!(!t.supports(KernelId::MultiStep));
+        assert!(t.supports(KernelId::MultiStep));
+        // tiny lattice: the auto heuristic keeps temporal blocking off
+        // (FullStep is already cache resident)
+        let geom = Geometry::new(4, 4, 4);
+        assert_eq!(t.multi_step_width(&geom, LatticeModel::D3Q19), None);
+        // forcing the knob turns the tier on at exactly that depth
+        t.copy_constant("multi_step", Constant::Int(3)).unwrap();
+        assert_eq!(t.multi_step_width(&geom, LatticeModel::D3Q19),
+                   Some(3));
+    }
+
+    #[test]
+    fn auto_heuristic_enables_on_slab_friendly_lattices() {
+        // long-thin 2-D lattice: slabs fit the cache budget with modest
+        // overlap, so auto picks the deepest k it tries
+        let geom = Geometry::new(4096, 8, 1);
+        let plan = multi_step_plan(&geom, LatticeModel::D2Q9, 0, 0,
+                                   MULTI_STEP_CACHE_BYTES);
+        let (k, w) = plan.expect("auto plan for long-thin lattice");
+        assert_eq!(k, 4);
+        assert!(w >= 2 * HALO_PER_STEP * k && w < geom.lx, "w={w}");
+        // fat cross-section: a single plane blows the budget, stay off
+        let fat = Geometry::new(128, 64, 64);
+        assert_eq!(multi_step_plan(&fat, LatticeModel::D3Q19, 0, 0,
+                                   MULTI_STEP_CACHE_BYTES),
+                   None);
+        // forced knobs are honoured and clamped to the lattice
+        assert_eq!(multi_step_plan(&fat, LatticeModel::D3Q19, 2, 500,
+                                   MULTI_STEP_CACHE_BYTES),
+                   Some((2, 128)));
+    }
+
+    #[test]
+    fn multi_step_launch_requires_double_buffer_bindings() {
+        let mut t = HostTarget::default_simd();
+        t.copy_constant("multi_step", Constant::Int(2)).unwrap();
+        let n = 2 * 2 * 2;
+        let f = t.malloc(&FieldDesc::new("f", 19, n)).unwrap();
+        let g = t.malloc(&FieldDesc::new("g", 19, n)).unwrap();
+        let args = LaunchArgs::new(Geometry::new(2, 2, 2),
+                                   LatticeModel::D3Q19)
+            .bind("f", f)
+            .bind("g", g);
+        let err = t.launch(KernelId::MultiStep, &args).unwrap_err();
+        assert!(err.to_string().contains("f_tmp"), "{err}");
     }
 
     #[test]

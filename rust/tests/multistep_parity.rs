@@ -1,0 +1,181 @@
+//! Host MultiStep parity: k temporal-blocked timesteps per launch must be
+//! **bit-identical** to k successive `FullStep` launches — streaming is a
+//! permutation and every per-site update is chunk-position independent,
+//! so there is no tolerance to hide behind. Covered axes: lattice model
+//! (D3Q19 / D2Q9), blocked depth k ∈ {1, 2, 4}, TLP pool shape (serial,
+//! static, dynamic), slab width (auto, narrow, uneven, wrap-overlapping),
+//! scalar mode, and step counts not divisible by k (the remainder must
+//! fall through to `FullStep` with exact `steps_done` accounting).
+
+use targetdp::free_energy::symmetric::FeParams;
+use targetdp::lattice::geometry::Geometry;
+use targetdp::lb::engine::LbEngine;
+use targetdp::lb::init;
+use targetdp::lb::model::LatticeModel;
+use targetdp::targetdp::constant::Constant;
+use targetdp::targetdp::target::KernelId;
+use targetdp::targetdp::tlp::{Schedule, TlpPool};
+use targetdp::targetdp::{HostTarget, Target};
+
+const POOLS: [&str; 3] = ["serial", "static4", "dyn2"];
+
+fn pool_by_name(name: &str) -> TlpPool {
+    match name {
+        "serial" => TlpPool::serial(),
+        "static4" => TlpPool::new(4, Schedule::Static),
+        "dyn2" => TlpPool::new(2, Schedule::Dynamic { batch: 2 }),
+        other => unreachable!("unknown pool {other}"),
+    }
+}
+
+fn spinodal_state(model: LatticeModel, geom: &Geometry)
+                  -> (Vec<f64>, Vec<f64>) {
+    let vs = model.velset();
+    let n = geom.nsites();
+    let mut f = vec![0.0; vs.nvel * n];
+    let mut g = vec![0.0; vs.nvel * n];
+    init::init_spinodal(vs, &FeParams::default(), geom, &mut f, &mut g,
+                        0.05, 777);
+    (f, g)
+}
+
+/// Run `nsteps` on a host target. `k == 0` leaves the multi_step knob
+/// unset, which on these small lattices means pure `FullStep`; `k > 0`
+/// forces the temporal-blocked tier at that depth (`slab > 0` also pins
+/// the slab width).
+fn run_host(target: &mut HostTarget, k: u64, slab: u64,
+            model: LatticeModel, geom: Geometry, nsteps: u64)
+            -> (Vec<f64>, Vec<f64>) {
+    if k > 0 {
+        target
+            .copy_constant("multi_step", Constant::Int(k as i64))
+            .unwrap();
+    }
+    if slab > 0 {
+        target
+            .copy_constant("multi_step_slab", Constant::Int(slab as i64))
+            .unwrap();
+    }
+    let vs = model.velset();
+    let n = geom.nsites();
+    let (f0, g0) = spinodal_state(model, &geom);
+    let mut engine =
+        LbEngine::new(target, geom, model, FeParams::default()).unwrap();
+    assert!(engine.fused_active());
+    if k > 0 {
+        assert_eq!(engine.fused_tier(),
+                   Some((KernelId::MultiStep, k)),
+                   "forced knob must select the blocked tier");
+    } else {
+        assert_eq!(engine.fused_tier(), Some((KernelId::FullStep, 1)),
+                   "auto heuristic must stay off on this small lattice");
+    }
+    engine.load_state(&f0, &g0).unwrap();
+    engine.run(nsteps).unwrap();
+    assert_eq!(engine.steps_done(), nsteps);
+    let mut f = vec![0.0; vs.nvel * n];
+    let mut g = vec![0.0; vs.nvel * n];
+    engine.fetch_state(&mut f, &mut g).unwrap();
+    (f, g)
+}
+
+#[test]
+fn multi_step_matches_full_step_bitwise() {
+    for (model, geom) in [(LatticeModel::D3Q19, Geometry::new(12, 5, 4)),
+                          (LatticeModel::D2Q9, Geometry::new(16, 7, 1))] {
+        for pname in POOLS {
+            for k in [1u64, 2, 4] {
+                let nsteps = 2 * k; // two MultiStep launches, no remainder
+                let mut t_ref =
+                    HostTarget::simd(8, pool_by_name(pname)).unwrap();
+                let (f_ref, g_ref) =
+                    run_host(&mut t_ref, 0, 0, model, geom, nsteps);
+                let mut t_blk =
+                    HostTarget::simd(8, pool_by_name(pname)).unwrap();
+                let (f, g) =
+                    run_host(&mut t_blk, k, 0, model, geom, nsteps);
+                assert_eq!(f, f_ref, "{} k={k} pool={pname}: f diverged",
+                           model.name());
+                assert_eq!(g, g_ref, "{} k={k} pool={pname}: g diverged",
+                           model.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn remainder_falls_through_to_full_step() {
+    let model = LatticeModel::D3Q19;
+    let geom = Geometry::new(10, 4, 3);
+    // 6 = 4 + 2: one MultiStep launch + two FullStep remainder steps;
+    // 3 < 4: no MultiStep launch at all
+    for nsteps in [6u64, 3] {
+        let mut t_ref = HostTarget::simd(8, TlpPool::serial()).unwrap();
+        let (f_ref, g_ref) = run_host(&mut t_ref, 0, 0, model, geom, nsteps);
+        let mut t_blk = HostTarget::simd(8, TlpPool::serial()).unwrap();
+        let (f, g) = run_host(&mut t_blk, 4, 0, model, geom, nsteps);
+        assert_eq!(f, f_ref, "nsteps={nsteps}: f");
+        assert_eq!(g, g_ref, "nsteps={nsteps}: g");
+    }
+}
+
+#[test]
+fn slab_widths_including_wrap_overlap_agree() {
+    // w=12 → one slab covering the lattice; w=5 → uneven last slab;
+    // w=3 with k=2 → extended slab (3 + 8 = 11 planes) nearly wraps;
+    // w=1 → extended slab (9 planes) per single interior plane
+    let model = LatticeModel::D3Q19;
+    let geom = Geometry::new(12, 4, 3);
+    let nsteps = 4u64;
+    let mut t_ref = HostTarget::simd(8, TlpPool::serial()).unwrap();
+    let (f_ref, g_ref) = run_host(&mut t_ref, 0, 0, model, geom, nsteps);
+    for pname in ["serial", "dyn2"] {
+        for w in [12u64, 5, 3, 1] {
+            let mut t =
+                HostTarget::simd(8, pool_by_name(pname)).unwrap();
+            let (f, g) = run_host(&mut t, 2, w, model, geom, nsteps);
+            assert_eq!(f, f_ref, "pool={pname} w={w}: f diverged");
+            assert_eq!(g, g_ref, "pool={pname} w={w}: g diverged");
+        }
+    }
+}
+
+#[test]
+fn scalar_mode_multi_step_parity() {
+    let model = LatticeModel::D2Q9;
+    let geom = Geometry::new(14, 6, 1);
+    let nsteps = 4u64;
+    let mut t_ref = HostTarget::scalar(TlpPool::serial());
+    let (f_ref, g_ref) = run_host(&mut t_ref, 0, 0, model, geom, nsteps);
+    let mut t_blk = HostTarget::scalar(TlpPool::serial());
+    let (f, g) = run_host(&mut t_blk, 2, 4, model, geom, nsteps);
+    assert_eq!(f, f_ref, "scalar mode: f diverged");
+    assert_eq!(g, g_ref, "scalar mode: g diverged");
+}
+
+#[test]
+fn multi_step_matches_unfused_pipeline() {
+    // transitivity check straight to the reference 5-kernel pipeline
+    let model = LatticeModel::D3Q19;
+    let geom = Geometry::new(9, 5, 3);
+    let nsteps = 4u64;
+    let vs = model.velset();
+    let n = geom.nsites();
+    let (f0, g0) = spinodal_state(model, &geom);
+
+    let mut t_unf = HostTarget::simd(8, TlpPool::serial()).unwrap();
+    let mut e = LbEngine::new(&mut t_unf, geom, model, FeParams::default())
+        .unwrap();
+    e.set_fusion(false);
+    e.load_state(&f0, &g0).unwrap();
+    e.run(nsteps).unwrap();
+    let mut f_ref = vec![0.0; vs.nvel * n];
+    let mut g_ref = vec![0.0; vs.nvel * n];
+    e.fetch_state(&mut f_ref, &mut g_ref).unwrap();
+    drop(e);
+
+    let mut t_blk = HostTarget::simd(8, TlpPool::serial()).unwrap();
+    let (f, g) = run_host(&mut t_blk, 2, 0, model, geom, nsteps);
+    assert_eq!(f, f_ref, "multi-step vs unfused: f diverged");
+    assert_eq!(g, g_ref, "multi-step vs unfused: g diverged");
+}

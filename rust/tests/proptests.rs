@@ -3,7 +3,8 @@
 //! cases seeded deterministically, and failures print the seed.
 
 use targetdp::free_energy::symmetric::FeParams;
-use targetdp::lattice::decomp::{step_multidomain, SlabDecomposition};
+use targetdp::lattice::decomp::{step_multidomain, MultiDomainScratch,
+                                SlabDecomposition};
 use targetdp::lattice::geometry::Geometry;
 use targetdp::lb::collision::{collide_lattice, collide_sites_scalar};
 use targetdp::lb::init::Rng64;
@@ -243,8 +244,10 @@ fn prop_decomposition_exact() {
         let dec = SlabDecomposition::new(geom, ndom).unwrap();
         let mut fl = dec.scatter(&f, vs.nvel);
         let mut gl = dec.scatter(&g, vs.nvel);
+        let mut scratch = MultiDomainScratch::new(&dec, vs.nvel);
         for _ in 0..2 {
-            step_multidomain(&dec, vs, &p, &mut fl, &mut gl, &pool, 8);
+            step_multidomain(&dec, vs, &p, &mut fl, &mut gl, &mut scratch,
+                             &pool, 8);
         }
         let f2 = dec.gather(&fl, vs.nvel);
         let g2 = dec.gather(&gl, vs.nvel);
