@@ -1,0 +1,76 @@
+//! E9 — halo-exchange overlap: bulk-synchronous vs overlapped exchange
+//! schedules across rank counts and lattice shapes.
+//!
+//! Every rank posts its boundary-plane sends, then either (bulk-sync)
+//! waits for the halos before touching anything, or (overlapped) sweeps
+//! the interior sites — whose stencils provably stay inside the slab —
+//! while the planes are in flight and finishes the edge planes on
+//! arrival. The schedules move identical bytes and produce identical
+//! bits; the only difference is where the wait lands, which is exactly
+//! what the MLUPS ratio exposes. Thin slabs (few planes per rank) have
+//! the highest exchange-to-compute ratio and show the effect most.
+//!
+//! Reports BENCH-CSV lines plus `OVERLAP-SPEEDUP` ratios for the
+//! experiment scripts.
+
+use targetdp::comms::{run_decomposed, CommsConfig};
+use targetdp::free_energy::symmetric::FeParams;
+use targetdp::lattice::geometry::Geometry;
+use targetdp::lb::init;
+use targetdp::lb::model::d3q19;
+
+const RANKS: [usize; 3] = [1, 2, 4];
+const STEPS: u64 = 4;
+
+fn label(tag: &str, ranks: usize, mode: &str) -> String {
+    format!("{tag} ranks={ranks} {mode}")
+}
+
+fn main() {
+    let vs = d3q19();
+    let p = FeParams::default();
+    // (tag, geometry): a compact cube and a thin-slab shape where halo
+    // traffic is proportionally heaviest per rank
+    let shapes = [("32x16x16", Geometry::new(32, 16, 16)),
+                  ("16x32x32", Geometry::new(16, 32, 32))];
+
+    let mut bench = targetdp::bench::Bench::new(
+        "halo exchange: bulk-sync vs overlapped, D3Q19");
+
+    for (tag, geom) in &shapes {
+        let n = geom.nsites();
+        let mut f0 = vec![0.0; vs.nvel * n];
+        let mut g0 = vec![0.0; vs.nvel * n];
+        init::init_spinodal(vs, &p, geom, &mut f0, &mut g0, 0.05, 7);
+        let sites = Some((n as u64 * STEPS) as f64);
+
+        for ranks in RANKS {
+            for (mode, overlap) in [("bulk-sync", false),
+                                    ("overlapped", true)] {
+                let cfg = CommsConfig { ranks, overlap, threads: 0,
+                                        ..CommsConfig::default() };
+                let mut f = f0.clone();
+                let mut g = g0.clone();
+                bench.case(&label(tag, ranks, mode), sites, || {
+                    run_decomposed(geom, vs, &p, &mut f, &mut g, STEPS,
+                                   &cfg)
+                        .unwrap();
+                });
+            }
+        }
+    }
+
+    bench.report();
+
+    println!();
+    for (tag, _) in &shapes {
+        for ranks in RANKS {
+            let bulk = bench.mean_of(&label(tag, ranks, "bulk-sync"));
+            let over = bench.mean_of(&label(tag, ranks, "overlapped"));
+            if let (Some(b), Some(o)) = (bulk, over) {
+                println!("OVERLAP-SPEEDUP,shape={tag},ranks={ranks},{:.3}",
+                         b / o);
+            }
+        }
+    }
+}

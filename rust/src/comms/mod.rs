@@ -1,0 +1,46 @@
+//! `comms` — the rank-parallel distribution level above targetDP.
+//!
+//! The paper positions targetDP as the *intra-node* layer, "used in
+//! conjunction with higher-level paradigms such as MPI" for the
+//! *inter-node* level; the follow-up paper (arXiv:1609.01479) scales that
+//! stack to thousands of GPUs with slab/pencil halo exchange as the
+//! dominant communication pattern. This module is that level: every
+//! subdomain of the x-slab decomposition becomes a **rank** running
+//! concurrently on its own thread with its own TLP pool and its own
+//! first-touch-allocated fields, exchanging serialized halo planes
+//! through a pluggable [`transport::Transport`] — in-process channels
+//! today, sockets tomorrow, the rank-side code unchanged either way.
+//!
+//! Concept map for readers coming from MPI:
+//!
+//! | here                                  | MPI                                    |
+//! |---------------------------------------|----------------------------------------|
+//! | [`world::CommsWorld`]                 | `MPI_COMM_WORLD` + `mpirun -np N`      |
+//! | [`world::Rank`], `rank`/`nranks`      | rank, `MPI_Comm_rank`/`MPI_Comm_size`  |
+//! | [`world::Rank::isend`]                | `MPI_Isend` (returns once buffered)    |
+//! | [`world::Rank::wait`]                 | posted `MPI_Irecv` + `MPI_Wait`        |
+//! | the per-exchange pair of `wait` calls | `MPI_Waitall` on the recv requests     |
+//! | [`wire::Tag`] matching                | `(source, tag, comm)` envelope match   |
+//! | `Rank`'s pending-frame map            | the unexpected-message queue           |
+//! | [`transport::ChannelTransport`]       | a shared-memory BTL                    |
+//! | [`wire::PlaneMsg`] byte frames        | the network wire format                |
+//! | halo `pack_x_plane`/`unpack_x_plane`  | derived-datatype pack/unpack           |
+//!
+//! The point of the subsystem is **communication/computation overlap**
+//! (`CommsConfig::overlap`, on by default): a rank posts its boundary
+//! planes, computes every site whose stencil does not reach a halo while
+//! the messages are in flight, and finishes the edge planes on arrival —
+//! the classic `isend/irecv → interior → waitall → boundary` pattern,
+//! driven by the `StreamTable` boundary/interior exception lists. The
+//! bulk-synchronous schedule is kept as a config toggle and is
+//! bit-identical (as is the single-domain path; `tests/comms_parity.rs`
+//! pins both, and `benches/halo_overlap.rs` measures the difference).
+
+pub mod transport;
+pub mod wire;
+pub mod world;
+
+pub use transport::{ChannelTransport, Transport};
+pub use wire::{FieldId, Phase, PlaneMsg, Side, Tag};
+pub use world::{run_decomposed, CommsConfig, CommsWorld, Rank, RankReport,
+                WorldReport};

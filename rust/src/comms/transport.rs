@@ -1,0 +1,208 @@
+//! Pluggable rank-to-rank transports.
+//!
+//! A [`Transport`] is one rank's endpoint into the communication fabric —
+//! the role MPI's BTL/PML stack plays under `MPI_Isend`/`MPI_Recv`. The
+//! contract is deliberately minimal and byte-oriented: addressed,
+//! non-blocking sends of encoded [`PlaneMsg`] frames, and a blocking
+//! receive of the next frame addressed to this rank. Ordering is only
+//! guaranteed *per sender pair* (like MPI's non-overtaking rule); message
+//! matching by [`crate::comms::wire::Tag`] happens one layer up in
+//! [`crate::comms::world::Rank`].
+//!
+//! [`ChannelTransport`] is the in-process implementation: every rank runs
+//! on its own OS thread and frames travel through `std::sync::mpsc`
+//! channels (the shared-memory BTL analog). It still moves *encoded
+//! bytes*, not structs, so every run exercises the exact frames a socket
+//! transport would put on a TCP stream — dropping in a remote transport
+//! is implementing this trait over a socket pair (ROADMAP follow-up).
+
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::time::Duration;
+
+use crate::comms::wire::{PlaneMsg, Tag};
+use crate::error::{Error, Result};
+
+/// One rank's endpoint into the communication fabric.
+pub trait Transport: Send {
+    /// This endpoint's rank id.
+    fn rank(&self) -> usize;
+    /// Number of ranks in the world (`MPI_Comm_size`).
+    fn nranks(&self) -> usize;
+    /// Non-blocking addressed send (`MPI_Isend`): encode one tagged plane
+    /// for `dst` and return immediately — the frame is built straight
+    /// from the borrowed payload, no owned message needs to exist on the
+    /// sender side. Self-sends (`dst == rank()`) are legal — a 1-rank
+    /// world talks to itself across the periodic seam.
+    fn send_plane(&mut self, dst: usize, src: u32, tag: Tag, data: &[f64])
+                  -> Result<()>;
+    /// Send an owned [`PlaneMsg`] (convenience over
+    /// [`Transport::send_plane`]).
+    fn send(&mut self, dst: usize, msg: &PlaneMsg) -> Result<()> {
+        self.send_plane(dst, msg.src, msg.tag, &msg.data)
+    }
+    /// Blocking receive of the next frame addressed to this rank, in
+    /// per-sender arrival order.
+    fn recv(&mut self) -> Result<PlaneMsg>;
+    /// Like [`Transport::recv`] but gives up after `timeout`, returning
+    /// `Ok(None)` — the hook [`crate::comms::world::Rank::wait`] uses to
+    /// turn a lost neighbour into an error instead of a hung world.
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<Option<PlaneMsg>>;
+}
+
+/// In-process transport: one mpsc inbox per rank, frames as encoded bytes.
+pub struct ChannelTransport {
+    rank: usize,
+    nranks: usize,
+    /// Senders to every rank. For `nranks > 1` the slot for *this* rank
+    /// is `None`: the slab ring never self-sends then, and holding our
+    /// own `Sender` would keep our inbox "connected" even after every
+    /// real peer died — dropping it makes a dead 2-rank world surface as
+    /// `Disconnected` immediately instead of waiting out a full recv
+    /// timeout.
+    peers: Vec<Option<Sender<Vec<u8>>>>,
+    inbox: Receiver<Vec<u8>>,
+}
+
+impl ChannelTransport {
+    /// Build a fully connected world of `nranks` endpoints.
+    pub fn mesh(nranks: usize) -> Vec<ChannelTransport> {
+        let (senders, inboxes): (Vec<_>, Vec<_>) =
+            (0..nranks).map(|_| channel::<Vec<u8>>()).unzip();
+        inboxes
+            .into_iter()
+            .enumerate()
+            .map(|(rank, inbox)| ChannelTransport {
+                rank,
+                nranks,
+                peers: senders
+                    .iter()
+                    .enumerate()
+                    .map(|(dst, s)| {
+                        (nranks == 1 || dst != rank).then(|| s.clone())
+                    })
+                    .collect(),
+                inbox,
+            })
+            .collect()
+    }
+}
+
+impl Transport for ChannelTransport {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn nranks(&self) -> usize {
+        self.nranks
+    }
+
+    fn send_plane(&mut self, dst: usize, src: u32, tag: Tag, data: &[f64])
+                  -> Result<()> {
+        let peer = self
+            .peers
+            .get(dst)
+            .and_then(Option::as_ref)
+            .ok_or_else(|| {
+                Error::Invalid(format!(
+                    "comms: send to rank {dst} of {} (self-sends only \
+                     exist in a 1-rank world)",
+                    self.nranks
+                ))
+            })?;
+        peer.send(PlaneMsg::encode_from(src, tag, data)).map_err(|_| {
+            Error::Invalid(format!("comms: rank {dst} hung up"))
+        })
+    }
+
+    fn recv(&mut self) -> Result<PlaneMsg> {
+        let bytes = self.inbox.recv().map_err(|_| {
+            Error::Invalid(
+                "comms: all peers hung up while receiving".to_string(),
+            )
+        })?;
+        PlaneMsg::decode(&bytes)
+    }
+
+    fn recv_timeout(&mut self, timeout: Duration)
+                    -> Result<Option<PlaneMsg>> {
+        match self.inbox.recv_timeout(timeout) {
+            Ok(bytes) => PlaneMsg::decode(&bytes).map(Some),
+            Err(RecvTimeoutError::Timeout) => Ok(None),
+            Err(RecvTimeoutError::Disconnected) => Err(Error::Invalid(
+                "comms: all peers hung up while receiving".to_string(),
+            )),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comms::wire::{FieldId, Phase, Side, Tag};
+
+    fn msg(src: u32, step: u64, data: Vec<f64>) -> PlaneMsg {
+        PlaneMsg {
+            src,
+            tag: Tag {
+                step,
+                phase: Phase::Moments,
+                field: FieldId::G,
+                side: Side::Low,
+            },
+            data,
+        }
+    }
+
+    #[test]
+    fn mesh_delivers_across_threads() {
+        let mut world = ChannelTransport::mesh(3);
+        assert_eq!(world[1].rank(), 1);
+        assert_eq!(world[1].nranks(), 3);
+        let mut r2 = world.pop().unwrap();
+        let mut r1 = world.pop().unwrap();
+        let mut r0 = world.pop().unwrap();
+        let t = std::thread::spawn(move || {
+            r1.send(2, &msg(1, 7, vec![1.0, 2.0])).unwrap();
+            r1.recv().unwrap()
+        });
+        r0.send(1, &msg(0, 9, vec![-4.0])).unwrap();
+        let got2 = r2.recv().unwrap();
+        assert_eq!(got2.src, 1);
+        assert_eq!(got2.data, vec![1.0, 2.0]);
+        let got1 = t.join().unwrap();
+        assert_eq!(got1.src, 0);
+        assert_eq!(got1.tag.step, 9);
+    }
+
+    #[test]
+    fn self_send_loops_back() {
+        let mut world = ChannelTransport::mesh(1);
+        let mut r0 = world.pop().unwrap();
+        r0.send(0, &msg(0, 3, vec![0.5])).unwrap();
+        let got = r0.recv().unwrap();
+        assert_eq!(got.tag.step, 3);
+        assert_eq!(got.data, vec![0.5]);
+    }
+
+    #[test]
+    fn out_of_range_destination_rejected() {
+        let mut world = ChannelTransport::mesh(2);
+        let mut r0 = world.remove(0);
+        assert!(r0.send(5, &msg(0, 0, vec![])).is_err());
+        // multi-rank worlds never self-send (the slab ring has distinct
+        // neighbours), and the dropped self-Sender makes it an error
+        assert!(r0.send(0, &msg(0, 0, vec![])).is_err());
+    }
+
+    #[test]
+    fn dead_world_disconnects_instead_of_hanging() {
+        let mut world = ChannelTransport::mesh(2);
+        let mut r1 = world.pop().unwrap();
+        drop(world); // rank 0 (and its Sender clones) are gone
+        // without the dropped self-Sender this would block forever
+        assert!(r1.recv().is_err());
+        assert!(r1
+            .recv_timeout(Duration::from_secs(30))
+            .is_err());
+    }
+}

@@ -1,0 +1,250 @@
+//! Serialized halo-plane wire format.
+//!
+//! Every message between ranks is one x-plane of one SoA field, tagged
+//! with enough metadata for the receiver to match it against the exchange
+//! it is waiting on — the envelope an MPI implementation carries as
+//! `(source, tag, communicator)`. Payload doubles travel as little-endian
+//! `f64::to_le_bytes` images, so a decoded plane is **bit-identical** to
+//! the sent one: the multidomain parity guarantee survives serialization.
+//!
+//! The in-process [`crate::comms::transport::ChannelTransport`] ships
+//! these exact bytes through channels, so the wire format is exercised on
+//! every run; a socket transport writes the same frames to a TCP stream
+//! (ROADMAP follow-up).
+//!
+//! Frame layout (all integers little-endian):
+//!
+//! ```text
+//! offset  size  field
+//!      0     4  magic  "TDPW"
+//!      4     1  version (1)
+//!      5     1  phase   (0 = Moments, 1 = Stream)
+//!      6     1  field   (0 = F, 1 = G)
+//!      7     1  side    (0 = Low halo, 1 = High halo, at the receiver)
+//!      8     4  src rank
+//!     12     8  step index
+//!     20     4  payload element count
+//!     24  8*ec  payload (f64 LE)
+//! ```
+
+use crate::error::{Error, Result};
+
+/// Frame magic: "targetDP wire".
+pub const MAGIC: [u8; 4] = *b"TDPW";
+/// Wire format version.
+pub const VERSION: u8 = 1;
+/// Fixed header size in bytes.
+pub const HEADER_LEN: usize = 24;
+
+/// Which of the two per-step exchanges a plane belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Phase {
+    /// Pre-collision exchange of post-stream `g` boundary planes — feeds
+    /// the phi moment / gradient stencil at the subdomain edge.
+    Moments = 0,
+    /// Pre-stream exchange of post-collision `f` and `g` boundary planes
+    /// — feeds the pull-streaming of the edge destination planes.
+    Stream = 1,
+}
+
+/// Which distribution field a plane carries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FieldId {
+    F = 0,
+    G = 1,
+}
+
+/// Which halo plane the payload fills **at the receiver**: `Low` arrives
+/// from the left neighbour (its high boundary plane), `High` from the
+/// right.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Side {
+    Low = 0,
+    High = 1,
+}
+
+/// Message envelope: the MPI `(tag)` analog the receiver matches on.
+/// Unique per (step, exchange phase, field, halo side), so out-of-order
+/// arrival — a neighbour running up to a step ahead — is unambiguous.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Tag {
+    pub step: u64,
+    pub phase: Phase,
+    pub field: FieldId,
+    pub side: Side,
+}
+
+/// One halo plane in flight: envelope + payload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlaneMsg {
+    /// Sending rank (diagnostics; matching is by [`Tag`]).
+    pub src: u32,
+    pub tag: Tag,
+    /// `ncomp * plane_sites` doubles, SoA component-major (the
+    /// `halo::pack_x_plane` layout).
+    pub data: Vec<f64>,
+}
+
+impl PlaneMsg {
+    /// Encoded frame size for a payload of `count` doubles.
+    pub fn frame_len(count: usize) -> usize {
+        HEADER_LEN + 8 * count
+    }
+
+    /// Serialize to the wire frame.
+    pub fn encode(&self) -> Vec<u8> {
+        Self::encode_from(self.src, self.tag, &self.data)
+    }
+
+    /// Build the wire frame straight from a borrowed payload — the
+    /// zero-intermediate-copy form the send hot path uses (no `PlaneMsg`
+    /// with an owned `Vec<f64>` needs to exist on the sender side).
+    pub fn encode_from(src: u32, tag: Tag, data: &[f64]) -> Vec<u8> {
+        let mut out = Vec::with_capacity(Self::frame_len(data.len()));
+        out.extend_from_slice(&MAGIC);
+        out.push(VERSION);
+        out.push(tag.phase as u8);
+        out.push(tag.field as u8);
+        out.push(tag.side as u8);
+        out.extend_from_slice(&src.to_le_bytes());
+        out.extend_from_slice(&tag.step.to_le_bytes());
+        out.extend_from_slice(&(data.len() as u32).to_le_bytes());
+        for v in data {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+
+    /// Parse a wire frame (strict: magic, version, enum ranges and exact
+    /// length are all validated — a socket transport feeds this arbitrary
+    /// bytes).
+    pub fn decode(bytes: &[u8]) -> Result<PlaneMsg> {
+        let bad = |m: String| Error::Invalid(format!("comms wire: {m}"));
+        if bytes.len() < HEADER_LEN {
+            return Err(bad(format!("frame too short ({} B)", bytes.len())));
+        }
+        if bytes[..4] != MAGIC {
+            return Err(bad(format!("bad magic {:02x?}", &bytes[..4])));
+        }
+        if bytes[4] != VERSION {
+            return Err(bad(format!(
+                "version {} (want {VERSION})", bytes[4]
+            )));
+        }
+        let phase = match bytes[5] {
+            0 => Phase::Moments,
+            1 => Phase::Stream,
+            v => return Err(bad(format!("unknown phase {v}"))),
+        };
+        let field = match bytes[6] {
+            0 => FieldId::F,
+            1 => FieldId::G,
+            v => return Err(bad(format!("unknown field {v}"))),
+        };
+        let side = match bytes[7] {
+            0 => Side::Low,
+            1 => Side::High,
+            v => return Err(bad(format!("unknown side {v}"))),
+        };
+        let le32 = |o: usize| {
+            u32::from_le_bytes(bytes[o..o + 4].try_into().unwrap())
+        };
+        let src = le32(8);
+        let step = u64::from_le_bytes(bytes[12..20].try_into().unwrap());
+        let count = le32(20) as usize;
+        // checked: an arbitrary (socket-fed) count must not overflow the
+        // expected-length computation on 32-bit targets
+        let expected = count
+            .checked_mul(8)
+            .and_then(|p| p.checked_add(HEADER_LEN));
+        if expected != Some(bytes.len()) {
+            return Err(bad(format!(
+                "length {} != header + {count} doubles", bytes.len()
+            )));
+        }
+        let data = bytes[HEADER_LEN..]
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Ok(PlaneMsg {
+            src,
+            tag: Tag { step, phase, field, side },
+            data,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> PlaneMsg {
+        PlaneMsg {
+            src: 3,
+            tag: Tag {
+                step: 41,
+                phase: Phase::Stream,
+                field: FieldId::G,
+                side: Side::High,
+            },
+            data: vec![0.0, -1.5, f64::MIN_POSITIVE, 1.0 / 3.0, -0.0,
+                       f64::MAX, 1e-300],
+        }
+    }
+
+    #[test]
+    fn round_trip_is_bit_exact() {
+        let msg = sample();
+        let back = PlaneMsg::decode(&msg.encode()).unwrap();
+        assert_eq!(back.src, msg.src);
+        assert_eq!(back.tag, msg.tag);
+        assert_eq!(back.data.len(), msg.data.len());
+        for (a, b) in back.data.iter().zip(&msg.data) {
+            assert_eq!(a.to_bits(), b.to_bits(), "bitwise f64 transport");
+        }
+    }
+
+    #[test]
+    fn empty_payload_round_trips() {
+        let msg = PlaneMsg {
+            src: 0,
+            tag: Tag {
+                step: 0,
+                phase: Phase::Moments,
+                field: FieldId::F,
+                side: Side::Low,
+            },
+            data: vec![],
+        };
+        let bytes = msg.encode();
+        assert_eq!(bytes.len(), HEADER_LEN);
+        assert_eq!(PlaneMsg::decode(&bytes).unwrap(), msg);
+    }
+
+    #[test]
+    fn corrupt_frames_rejected() {
+        let good = sample().encode();
+        // truncated header
+        assert!(PlaneMsg::decode(&good[..10]).is_err());
+        // bad magic
+        let mut bad = good.clone();
+        bad[0] = b'X';
+        assert!(PlaneMsg::decode(&bad).is_err());
+        // bad version
+        let mut bad = good.clone();
+        bad[4] = 9;
+        assert!(PlaneMsg::decode(&bad).is_err());
+        // enum out of range
+        let mut bad = good.clone();
+        bad[5] = 7;
+        assert!(PlaneMsg::decode(&bad).is_err());
+        // payload length mismatch
+        let mut bad = good.clone();
+        bad.pop();
+        assert!(PlaneMsg::decode(&bad).is_err());
+        // declared count larger than payload
+        let mut bad = good.clone();
+        bad[20] = bad[20].wrapping_add(1);
+        assert!(PlaneMsg::decode(&bad).is_err());
+    }
+}

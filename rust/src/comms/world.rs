@@ -1,0 +1,703 @@
+//! The rank world: concurrent slab ranks with overlapped halo exchange.
+//!
+//! [`CommsWorld`] plays the role of `MPI_COMM_WORLD`: it owns the slab
+//! decomposition and, per [`CommsWorld::run`], spawns **one OS thread per
+//! rank**. Each rank owns its local lattice (allocated and first-touched
+//! by its own TLP pool), steps independently, and talks to its two x
+//! neighbours only through [`Rank::isend`]/[`Rank::wait`] — there is no
+//! shared mutable state and no sequential domain loop anywhere.
+//!
+//! Per timestep a rank performs two exchanges (three plane messages per
+//! side, down from the four the old bulk-synchronous loop copied):
+//!
+//! 1. **Moments exchange** — post-stream `g` boundary planes, feeding the
+//!    phi moment and the gradient stencil of the edge planes;
+//! 2. **Stream exchange** — post-collision `f` and `g` boundary planes,
+//!    feeding the pull-streaming of the edge destination planes.
+//!
+//! In overlapped mode (the default) the rank posts its sends, then
+//! collides/streams the sites that do not depend on incoming halos while
+//! the messages are in flight — the `StreamTable` exception lists prove
+//! the interior split is safe (`pull_sources_within`) — and completes the
+//! boundary planes on arrival. Bulk-sync mode waits for all halos before
+//! computing (the `MPI_Sendrecv`-everything reference schedule). Both
+//! orders run the identical per-site arithmetic, so they are bit-identical
+//! to each other *and* to the single-domain fused `FullStep` path
+//! (`tests/comms_parity.rs`).
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use crate::comms::transport::{ChannelTransport, Transport};
+use crate::comms::wire::{FieldId, Phase, PlaneMsg, Side, Tag};
+use crate::error::{Error, Result};
+use crate::free_energy::gradient::gradient_fd_range;
+use crate::free_energy::symmetric::FeParams;
+use crate::lattice::decomp::{SlabDecomposition, SubDomain};
+use crate::lattice::geometry::Geometry;
+use crate::lattice::halo::{pack_x_plane, unpack_x_plane};
+use crate::lattice::stream_table::StreamTable;
+use crate::lb::collision::collide_lattice_range;
+use crate::lb::model::VelSet;
+use crate::lb::moments::phi_from_g_range;
+use crate::lb::propagation::stream_range;
+use crate::targetdp::ilp;
+use crate::targetdp::tlp::{threads_per_rank, Schedule, TlpPool};
+
+/// A blocked [`Rank::wait`] gives up after this long — it converts the
+/// MPI-style deadlock of a lost neighbour into a diagnosable error
+/// instead of a hung world.
+const WAIT_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// Knobs for a decomposed run.
+#[derive(Debug, Clone)]
+pub struct CommsConfig {
+    /// Number of slab ranks (1 = a single rank talking to itself across
+    /// the periodic seam).
+    pub ranks: usize,
+    /// Overlap halo exchange with interior compute (`false` = the
+    /// bulk-synchronous reference schedule; identical results).
+    pub overlap: bool,
+    /// Total TLP thread budget shared by all ranks (0 = machine width);
+    /// each rank's pool gets `threads / ranks`, at least 1.
+    pub threads: usize,
+    /// Virtual vector length for the per-rank kernels (must be a
+    /// supported VVL unless `scalar`).
+    pub vvl: usize,
+    /// Use the scalar collision kernel (host-scalar analog).
+    pub scalar: bool,
+    /// Chunk→thread assignment inside each rank's pool (the `[target]
+    /// schedule` knob, honoured here exactly like the engine path).
+    pub schedule: Schedule,
+}
+
+impl Default for CommsConfig {
+    fn default() -> Self {
+        CommsConfig {
+            ranks: 1,
+            overlap: true,
+            threads: 1,
+            vvl: 8,
+            scalar: false,
+            schedule: Schedule::Static,
+        }
+    }
+}
+
+/// Per-rank timing/traffic summary (the output of one rank's run).
+#[derive(Debug, Clone)]
+pub struct RankReport {
+    pub rank: usize,
+    /// Owned (interior) sites — halo planes excluded.
+    pub interior_sites: usize,
+    pub steps: u64,
+    /// Wall time spent computing (total minus blocked-in-wait).
+    pub compute_s: f64,
+    /// Wall time blocked waiting for halo planes.
+    pub wait_s: f64,
+    pub bytes_sent: u64,
+    pub msgs_sent: u64,
+}
+
+impl RankReport {
+    /// Million (interior) lattice-site updates per second of rank wall
+    /// time (compute + wait).
+    pub fn mlups(&self) -> f64 {
+        let wall = self.compute_s + self.wait_s;
+        if wall <= 0.0 {
+            return 0.0;
+        }
+        self.interior_sites as f64 * self.steps as f64 / wall / 1e6
+    }
+
+    /// Fraction of this rank's wall time spent blocked on halo arrival.
+    pub fn wait_fraction(&self) -> f64 {
+        let wall = self.compute_s + self.wait_s;
+        if wall <= 0.0 { 0.0 } else { self.wait_s / wall }
+    }
+}
+
+/// Whole-world summary of one decomposed run.
+#[derive(Debug, Clone)]
+pub struct WorldReport {
+    pub ranks: Vec<RankReport>,
+    /// Wall time of the whole run (spawn to join).
+    pub seconds: f64,
+    pub overlap: bool,
+}
+
+impl WorldReport {
+    /// Aggregate MLUPS: all interior site-updates over the run wall time.
+    pub fn mlups(&self) -> f64 {
+        if self.seconds <= 0.0 {
+            return 0.0;
+        }
+        let updates: f64 = self
+            .ranks
+            .iter()
+            .map(|r| r.interior_sites as f64 * r.steps as f64)
+            .sum();
+        updates / self.seconds / 1e6
+    }
+
+    /// Worst per-rank exchange wait.
+    pub fn max_wait_s(&self) -> f64 {
+        self.ranks.iter().map(|r| r.wait_s).fold(0.0, f64::max)
+    }
+}
+
+/// One rank's communication endpoint: tag-matched, non-blocking sends and
+/// blocking waits over a pluggable [`Transport`].
+///
+/// MPI mapping: [`Rank::isend`] is `MPI_Isend` (completes locally — the
+/// transport owns the bytes as soon as it returns), [`Rank::wait`] is a
+/// posted `MPI_Irecv` + `MPI_Wait` pair, and the internal `pending` map is
+/// the unexpected-message queue an MPI progress engine keeps for frames
+/// that arrive before their receive is posted.
+pub struct Rank {
+    pub rank: usize,
+    pub nranks: usize,
+    transport: Box<dyn Transport>,
+    /// Frames that arrived while waiting for a different tag.
+    pending: HashMap<Tag, Vec<f64>>,
+    /// Seconds spent blocked in [`Rank::wait`].
+    pub wait_s: f64,
+    pub bytes_sent: u64,
+    pub msgs_sent: u64,
+}
+
+impl Rank {
+    pub fn new(transport: Box<dyn Transport>) -> Rank {
+        Rank {
+            rank: transport.rank(),
+            nranks: transport.nranks(),
+            transport,
+            pending: HashMap::new(),
+            wait_s: 0.0,
+            bytes_sent: 0,
+            msgs_sent: 0,
+        }
+    }
+
+    /// Left (lower-x) neighbour, periodic.
+    pub fn left(&self) -> usize {
+        (self.rank + self.nranks - 1) % self.nranks
+    }
+
+    /// Right (higher-x) neighbour, periodic.
+    pub fn right(&self) -> usize {
+        (self.rank + 1) % self.nranks
+    }
+
+    /// Non-blocking tagged send of one packed plane (`MPI_Isend`). The
+    /// wire frame is encoded straight from `data` — the only copy on the
+    /// send path.
+    pub fn isend(&mut self, dst: usize, tag: Tag, data: &[f64])
+                 -> Result<()> {
+        self.bytes_sent += PlaneMsg::frame_len(data.len()) as u64;
+        self.msgs_sent += 1;
+        self.transport.send_plane(dst, self.rank as u32, tag, data)
+    }
+
+    /// Block until the plane tagged `tag` has arrived and return its
+    /// payload (`MPI_Wait` on the matching receive). Frames for other
+    /// tags encountered on the way are parked for their own waits.
+    pub fn wait(&mut self, tag: Tag) -> Result<Vec<f64>> {
+        if let Some(data) = self.pending.remove(&tag) {
+            return Ok(data);
+        }
+        let t0 = Instant::now();
+        let data = loop {
+            match self.transport.recv_timeout(WAIT_TIMEOUT)? {
+                Some(msg) if msg.tag == tag => break msg.data,
+                Some(msg) => {
+                    // a duplicate tag means the transport broke the
+                    // one-frame-per-tag protocol (e.g. a retransmitting
+                    // socket); overwriting silently would corrupt physics
+                    if self.pending.insert(msg.tag, msg.data).is_some() {
+                        return Err(Error::Invalid(format!(
+                            "comms: rank {} received a duplicate frame \
+                             for {:?}",
+                            self.rank, msg.tag
+                        )));
+                    }
+                }
+                None => {
+                    return Err(Error::Invalid(format!(
+                        "comms: rank {} timed out after {WAIT_TIMEOUT:?} \
+                         waiting for {tag:?} — neighbour lost?",
+                        self.rank
+                    )))
+                }
+            }
+        };
+        self.wait_s += t0.elapsed().as_secs_f64();
+        Ok(data)
+    }
+}
+
+/// The rank world (`MPI_COMM_WORLD`): a slab decomposition plus the run
+/// configuration, ready to spawn concurrent ranks.
+#[derive(Debug, Clone)]
+pub struct CommsWorld {
+    pub dec: SlabDecomposition,
+    pub cfg: CommsConfig,
+}
+
+impl CommsWorld {
+    pub fn new(geom: Geometry, cfg: CommsConfig) -> Result<Self> {
+        if !cfg.scalar && !ilp::is_supported(cfg.vvl) {
+            return Err(Error::Invalid(format!(
+                "comms: VVL {} unsupported (pick one of {:?}, or scalar)",
+                cfg.vvl,
+                ilp::SUPPORTED_VVL
+            )));
+        }
+        let dec = SlabDecomposition::new(geom, cfg.ranks)?;
+        Ok(CommsWorld { dec, cfg })
+    }
+
+    /// Advance the global state `nsteps` timesteps with one concurrent
+    /// rank per slab: scatter (each rank copies its own planes), run,
+    /// gather back into `f`/`g`. Blocks until every rank has finished.
+    pub fn run(&self, vs: &VelSet, p: &FeParams, f: &mut [f64],
+               g: &mut [f64], nsteps: u64) -> Result<WorldReport> {
+        let n = self.dec.global.nsites();
+        if f.len() != vs.nvel * n || g.len() != vs.nvel * n {
+            return Err(Error::Invalid(format!(
+                "comms: state is {}+{} doubles, want {} each",
+                f.len(),
+                g.len(),
+                vs.nvel * n
+            )));
+        }
+        let transports = ChannelTransport::mesh(self.cfg.ranks);
+        let nthreads = threads_per_rank(self.cfg.threads, self.cfg.ranks);
+        let cfg = &self.cfg;
+        let f_in: &[f64] = f;
+        let g_in: &[f64] = g;
+        let t0 = Instant::now();
+        let results: Vec<Result<(Vec<f64>, Vec<f64>, RankReport)>> =
+            std::thread::scope(|s| {
+                let handles: Vec<_> = transports
+                    .into_iter()
+                    .zip(&self.dec.domains)
+                    .map(|(tr, d)| {
+                        s.spawn(move || {
+                            rank_main(d, vs, p, f_in, g_in, nsteps, cfg,
+                                      nthreads, tr)
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| match h.join() {
+                        Ok(r) => r,
+                        Err(e) => std::panic::resume_unwind(e),
+                    })
+                    .collect()
+            });
+        let seconds = t0.elapsed().as_secs_f64();
+
+        // a failing rank makes its neighbours fail too (timeout /
+        // hung-up errors); surface the root cause, not the knock-on —
+        // prefer the first error that is neither a wait timeout nor a
+        // dropped-peer symptom
+        if results.iter().any(|r| r.is_err()) {
+            let knock_on =
+                |e: &Error| {
+                    let msg = e.to_string();
+                    msg.contains("timed out") || msg.contains("hung up")
+                };
+            let mut first_any = None;
+            for r in results {
+                if let Err(e) = r {
+                    if !knock_on(&e) {
+                        return Err(e);
+                    }
+                    first_any.get_or_insert(e);
+                }
+            }
+            return Err(first_any.expect("an error exists"));
+        }
+        let mut reports = Vec::with_capacity(self.cfg.ranks);
+        let mut f_locals = Vec::with_capacity(self.cfg.ranks);
+        let mut g_locals = Vec::with_capacity(self.cfg.ranks);
+        for r in results {
+            let (lf, lg, rep) = r?;
+            f_locals.push(lf);
+            g_locals.push(lg);
+            reports.push(rep);
+        }
+        self.dec.gather_into(&f_locals, vs.nvel, f);
+        self.dec.gather_into(&g_locals, vs.nvel, g);
+        Ok(WorldReport {
+            ranks: reports,
+            seconds,
+            overlap: self.cfg.overlap,
+        })
+    }
+}
+
+/// Convenience: build a [`CommsWorld`] and run it once.
+pub fn run_decomposed(geom: &Geometry, vs: &VelSet, p: &FeParams,
+                      f: &mut [f64], g: &mut [f64], nsteps: u64,
+                      cfg: &CommsConfig) -> Result<WorldReport> {
+    CommsWorld::new(*geom, cfg.clone())?.run(vs, p, f, g, nsteps)
+}
+
+/// Per-rank working state: local SoA fields + streaming double buffers +
+/// moment scratch + the plane pack buffer. Everything is allocated by the
+/// rank's own pool ([`TlpPool::zeros`]) so first touch happens on the
+/// thread(s) that sweep it.
+struct RankState {
+    f: Vec<f64>,
+    g: Vec<f64>,
+    f_tmp: Vec<f64>,
+    g_tmp: Vec<f64>,
+    phi: Vec<f64>,
+    grad: Vec<f64>,
+    lap: Vec<f64>,
+    send_buf: Vec<f64>,
+}
+
+/// Body of one rank thread: allocate + scatter, step `nsteps` times,
+/// return the local state and a timing report.
+#[allow(clippy::too_many_arguments)]
+fn rank_main(d: &SubDomain, vs: &VelSet, p: &FeParams, f_global: &[f64],
+             g_global: &[f64], nsteps: u64, cfg: &CommsConfig,
+             nthreads: usize, transport: ChannelTransport)
+             -> Result<(Vec<f64>, Vec<f64>, RankReport)> {
+    let pool = TlpPool::new(nthreads, cfg.schedule);
+    let ln = d.local.nsites();
+    let nvel = vs.nvel;
+    let mut st = RankState {
+        f: pool.zeros(nvel * ln),
+        g: pool.zeros(nvel * ln),
+        f_tmp: pool.zeros(nvel * ln),
+        g_tmp: pool.zeros(nvel * ln),
+        phi: pool.zeros(ln),
+        grad: pool.zeros(3 * ln),
+        lap: pool.zeros(ln),
+        send_buf: vec![0.0; nvel * d.plane()],
+    };
+    d.scatter_into(f_global, nvel, &mut st.f);
+    d.scatter_into(g_global, nvel, &mut st.g);
+    let table = StreamTable::cached(vs, &d.local);
+    let mut rank = Rank::new(Box::new(transport));
+
+    let t0 = Instant::now();
+    for step in 0..nsteps {
+        step_rank(d, vs, p, &table, &mut st, &mut rank, step, cfg, &pool)?;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    let report = RankReport {
+        rank: d.rank,
+        interior_sites: d.lxl * d.plane(),
+        steps: nsteps,
+        compute_s: (wall - rank.wait_s).max(0.0),
+        wait_s: rank.wait_s,
+        bytes_sent: rank.bytes_sent,
+        msgs_sent: rank.msgs_sent,
+    };
+    Ok((st.f, st.g, report))
+}
+
+/// Validate a received plane payload and scatter it into halo plane `p`.
+fn unpack_checked(field: &mut [f64], nvel: usize, ln: usize, plane: usize,
+                  p: usize, data: &[f64]) -> Result<()> {
+    if data.len() != nvel * plane {
+        return Err(Error::Invalid(format!(
+            "comms: halo payload is {} doubles, want {}",
+            data.len(),
+            nvel * plane
+        )));
+    }
+    unpack_x_plane(field, nvel, ln, plane, p, data);
+    Ok(())
+}
+
+/// One binary-fluid LB timestep on this rank's slab.
+///
+/// Schedule (overlapped mode; bulk-sync waits where marked instead):
+///
+/// ```text
+/// isend g[1], g[lxl]            — moments exchange        (MPI_Isend x2)
+/// phi   interior                                          ┐ overlapped
+/// grad + collide  deep interior (planes 2..lxl-1)         ┘ with flight
+/// wait  g halos; phi halos; grad + collide edge planes    (MPI_Waitall)
+/// isend f[1], f[lxl], g[1], g[lxl] — stream exchange      (MPI_Isend x4)
+/// stream deep interior destinations                       ─ overlapped
+/// wait  f,g halos; stream edge destinations               (MPI_Waitall)
+/// swap double buffers
+/// ```
+///
+/// Every site's arithmetic is position-independent, so the split ranges
+/// produce bitwise the values of the bulk schedule and of a single-domain
+/// sweep.
+#[allow(clippy::too_many_arguments)]
+fn step_rank(d: &SubDomain, vs: &VelSet, p: &FeParams, table: &StreamTable,
+             st: &mut RankState, rank: &mut Rank, step: u64,
+             cfg: &CommsConfig, pool: &TlpPool) -> Result<()> {
+    let (vvl, scalar) = (cfg.vvl, cfg.scalar);
+    let plane = d.plane();
+    let lxl = d.lxl;
+    let ln = d.local.nsites();
+    let nvel = vs.nvel;
+    let interior = d.interior();
+    let halo_lo = 0..plane;
+    let halo_hi = (lxl + 1) * plane..ln;
+    let edge_lo = plane..2 * plane;
+    let edge_hi = lxl * plane..(lxl + 1) * plane;
+    // planes 2..=lxl-1: the sites whose whole stencil stays interior
+    let deep = if lxl >= 2 { 2 * plane..lxl * plane } else { 0..0 };
+    // with a single interior plane the low and high edges coincide
+    let single = lxl == 1;
+    let tag = |phase: Phase, field: FieldId, side: Side| Tag {
+        step,
+        phase,
+        field,
+        side,
+    };
+
+    // ---- exchange 1: post-stream g edge planes (moments halo) ----
+    // my low edge fills the left neighbour's HIGH halo and vice versa
+    pack_x_plane(&st.g, nvel, ln, plane, 1, &mut st.send_buf);
+    rank.isend(rank.left(), tag(Phase::Moments, FieldId::G, Side::High),
+               &st.send_buf)?;
+    pack_x_plane(&st.g, nvel, ln, plane, lxl, &mut st.send_buf);
+    rank.isend(rank.right(), tag(Phase::Moments, FieldId::G, Side::Low),
+               &st.send_buf)?;
+
+    if !cfg.overlap {
+        // bulk-sync: halos first, then everything in one sweep
+        let lo = rank.wait(tag(Phase::Moments, FieldId::G, Side::Low))?;
+        unpack_checked(&mut st.g, nvel, ln, plane, 0, &lo)?;
+        let hi = rank.wait(tag(Phase::Moments, FieldId::G, Side::High))?;
+        unpack_checked(&mut st.g, nvel, ln, plane, lxl + 1, &hi)?;
+        phi_from_g_range(vs, &st.g, &mut st.phi, ln, 0..ln, pool, vvl);
+        gradient_fd_range(&d.local, &st.phi, &mut st.grad, &mut st.lap,
+                          interior.clone(), pool, vvl);
+        collide_lattice_range(vs, p, &mut st.f, &mut st.g, &st.grad,
+                              &st.lap, ln, interior.clone(), pool, vvl,
+                              scalar);
+    } else {
+        // overlap: the interior needs no halo — compute it while the
+        // edge planes are in flight
+        phi_from_g_range(vs, &st.g, &mut st.phi, ln, interior.clone(),
+                         pool, vvl);
+        gradient_fd_range(&d.local, &st.phi, &mut st.grad, &mut st.lap,
+                          deep.clone(), pool, vvl);
+        collide_lattice_range(vs, p, &mut st.f, &mut st.g, &st.grad,
+                              &st.lap, ln, deep.clone(), pool, vvl, scalar);
+        // complete the edges on arrival
+        let lo = rank.wait(tag(Phase::Moments, FieldId::G, Side::Low))?;
+        unpack_checked(&mut st.g, nvel, ln, plane, 0, &lo)?;
+        let hi = rank.wait(tag(Phase::Moments, FieldId::G, Side::High))?;
+        unpack_checked(&mut st.g, nvel, ln, plane, lxl + 1, &hi)?;
+        phi_from_g_range(vs, &st.g, &mut st.phi, ln, halo_lo, pool, vvl);
+        phi_from_g_range(vs, &st.g, &mut st.phi, ln, halo_hi, pool, vvl);
+        gradient_fd_range(&d.local, &st.phi, &mut st.grad, &mut st.lap,
+                          edge_lo.clone(), pool, vvl);
+        collide_lattice_range(vs, p, &mut st.f, &mut st.g, &st.grad,
+                              &st.lap, ln, edge_lo.clone(), pool, vvl,
+                              scalar);
+        if !single {
+            gradient_fd_range(&d.local, &st.phi, &mut st.grad, &mut st.lap,
+                              edge_hi.clone(), pool, vvl);
+            collide_lattice_range(vs, p, &mut st.f, &mut st.g, &st.grad,
+                                  &st.lap, ln, edge_hi.clone(), pool, vvl,
+                                  scalar);
+        }
+    }
+
+    // ---- exchange 2: post-collision f,g edge planes (stream halo) ----
+    pack_x_plane(&st.f, nvel, ln, plane, 1, &mut st.send_buf);
+    rank.isend(rank.left(), tag(Phase::Stream, FieldId::F, Side::High),
+               &st.send_buf)?;
+    pack_x_plane(&st.f, nvel, ln, plane, lxl, &mut st.send_buf);
+    rank.isend(rank.right(), tag(Phase::Stream, FieldId::F, Side::Low),
+               &st.send_buf)?;
+    pack_x_plane(&st.g, nvel, ln, plane, 1, &mut st.send_buf);
+    rank.isend(rank.left(), tag(Phase::Stream, FieldId::G, Side::High),
+               &st.send_buf)?;
+    pack_x_plane(&st.g, nvel, ln, plane, lxl, &mut st.send_buf);
+    rank.isend(rank.right(), tag(Phase::Stream, FieldId::G, Side::Low),
+               &st.send_buf)?;
+
+    let wait_stream_halos =
+        |rank: &mut Rank, st: &mut RankState| -> Result<()> {
+            let f_lo = rank.wait(tag(Phase::Stream, FieldId::F, Side::Low))?;
+            unpack_checked(&mut st.f, nvel, ln, plane, 0, &f_lo)?;
+            let f_hi =
+                rank.wait(tag(Phase::Stream, FieldId::F, Side::High))?;
+            unpack_checked(&mut st.f, nvel, ln, plane, lxl + 1, &f_hi)?;
+            let g_lo = rank.wait(tag(Phase::Stream, FieldId::G, Side::Low))?;
+            unpack_checked(&mut st.g, nvel, ln, plane, 0, &g_lo)?;
+            let g_hi =
+                rank.wait(tag(Phase::Stream, FieldId::G, Side::High))?;
+            unpack_checked(&mut st.g, nvel, ln, plane, lxl + 1, &g_hi)?;
+            Ok(())
+        };
+
+    if !cfg.overlap {
+        wait_stream_halos(rank, st)?;
+        stream_range(vs, table, &st.f, &mut st.f_tmp, interior.clone(),
+                     pool, vvl);
+        stream_range(vs, table, &st.g, &mut st.g_tmp, interior, pool, vvl);
+    } else {
+        // deep destinations pull only post-collision interior sources —
+        // exactly what the StreamTable exception lists certify
+        debug_assert!((0..nvel).all(|i| {
+            table.pull_sources_within(i, deep.clone(), &d.interior())
+        }));
+        stream_range(vs, table, &st.f, &mut st.f_tmp, deep.clone(), pool,
+                     vvl);
+        stream_range(vs, table, &st.g, &mut st.g_tmp, deep, pool, vvl);
+        wait_stream_halos(rank, st)?;
+        stream_range(vs, table, &st.f, &mut st.f_tmp, edge_lo.clone(),
+                     pool, vvl);
+        stream_range(vs, table, &st.g, &mut st.g_tmp, edge_lo, pool, vvl);
+        if !single {
+            stream_range(vs, table, &st.f, &mut st.f_tmp, edge_hi.clone(),
+                         pool, vvl);
+            stream_range(vs, table, &st.g, &mut st.g_tmp, edge_hi, pool,
+                         vvl);
+        }
+    }
+    std::mem::swap(&mut st.f, &mut st.f_tmp);
+    std::mem::swap(&mut st.g, &mut st.g_tmp);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lb::init::init_spinodal;
+    use crate::lb::model::{d2q9, d3q19};
+    use crate::lb::propagation::stream;
+
+    fn spinodal(vs: &VelSet, geom: &Geometry) -> (Vec<f64>, Vec<f64>) {
+        let n = geom.nsites();
+        let mut f = vec![0.0; vs.nvel * n];
+        let mut g = vec![0.0; vs.nvel * n];
+        init_spinodal(vs, &FeParams::default(), geom, &mut f, &mut g, 0.05,
+                      77);
+        (f, g)
+    }
+
+    /// Single-domain reference: the unfused per-kernel pipeline.
+    fn reference(vs: &VelSet, geom: &Geometry, steps: u64)
+                 -> (Vec<f64>, Vec<f64>) {
+        let p = FeParams::default();
+        let n = geom.nsites();
+        let (mut f, mut g) = spinodal(vs, geom);
+        let pool = TlpPool::serial();
+        for _ in 0..steps {
+            let mut phi = vec![0.0; n];
+            let mut grad = vec![0.0; 3 * n];
+            let mut lap = vec![0.0; n];
+            crate::lb::moments::phi_from_g(vs, &g, &mut phi, n, &pool, 8);
+            crate::free_energy::gradient::gradient_fd(geom, &phi, &mut grad,
+                                                      &mut lap, &pool, 8);
+            crate::lb::collision::collide_lattice(vs, &p, &mut f, &mut g,
+                                                  &grad, &lap, n, &pool, 8,
+                                                  false);
+            let mut fs = vec![0.0; vs.nvel * n];
+            let mut gs = vec![0.0; vs.nvel * n];
+            stream(vs, geom, &f, &mut fs, &pool, 8);
+            stream(vs, geom, &g, &mut gs, &pool, 8);
+            f = fs;
+            g = gs;
+        }
+        (f, g)
+    }
+
+    #[test]
+    fn concurrent_ranks_match_single_domain_bitwise() {
+        let vs = d3q19();
+        let geom = Geometry::new(11, 4, 3); // 11 -> uneven splits
+        let steps = 4;
+        let (f_want, g_want) = reference(vs, &geom, steps);
+        for ranks in [1usize, 2, 3] {
+            for overlap in [false, true] {
+                let (mut f, mut g) = spinodal(vs, &geom);
+                let cfg = CommsConfig { ranks, overlap,
+                                        ..CommsConfig::default() };
+                let rep = run_decomposed(&geom, vs, &FeParams::default(),
+                                         &mut f, &mut g, steps, &cfg)
+                    .unwrap();
+                assert_eq!(rep.ranks.len(), ranks);
+                assert_eq!(f, f_want, "ranks={ranks} overlap={overlap}");
+                assert_eq!(g, g_want, "ranks={ranks} overlap={overlap}");
+            }
+        }
+    }
+
+    #[test]
+    fn single_plane_slabs_work() {
+        // lxl == 1 everywhere: edge planes coincide, deep interior empty
+        let vs = d2q9();
+        let geom = Geometry::new(4, 6, 1);
+        let steps = 3;
+        let (f_want, g_want) = reference(vs, &geom, steps);
+        for overlap in [false, true] {
+            let (mut f, mut g) = spinodal(vs, &geom);
+            let cfg = CommsConfig { ranks: 4, overlap,
+                                    ..CommsConfig::default() };
+            run_decomposed(&geom, vs, &FeParams::default(), &mut f, &mut g,
+                           steps, &cfg)
+                .unwrap();
+            assert_eq!(f, f_want, "overlap={overlap}");
+            assert_eq!(g, g_want, "overlap={overlap}");
+        }
+    }
+
+    #[test]
+    fn report_accounts_for_all_ranks() {
+        let vs = d2q9();
+        let geom = Geometry::new(10, 4, 1);
+        let (mut f, mut g) = spinodal(vs, &geom);
+        let cfg = CommsConfig { ranks: 3, ..CommsConfig::default() };
+        let rep = run_decomposed(&geom, vs, &FeParams::default(), &mut f,
+                                 &mut g, 5, &cfg)
+            .unwrap();
+        let owned: usize = rep.ranks.iter().map(|r| r.interior_sites).sum();
+        assert_eq!(owned, geom.nsites());
+        for r in &rep.ranks {
+            assert_eq!(r.steps, 5);
+            // 2 + 4 messages per step
+            assert_eq!(r.msgs_sent, 30);
+            assert!(r.bytes_sent > 0);
+            assert!(r.compute_s >= 0.0 && r.wait_s >= 0.0);
+        }
+        assert!(rep.mlups() >= 0.0);
+        assert!(rep.max_wait_s() >= 0.0);
+    }
+
+    #[test]
+    fn world_rejects_bad_shapes_and_vvl() {
+        let vs = d2q9();
+        let geom = Geometry::new(8, 4, 1);
+        assert!(CommsWorld::new(geom, CommsConfig {
+            vvl: 3,
+            ..CommsConfig::default()
+        })
+        .is_err(), "unsupported VVL must be rejected up front");
+        // scalar mode takes any vvl (it only sets the chunk grain)
+        assert!(CommsWorld::new(geom, CommsConfig {
+            vvl: 3,
+            scalar: true,
+            ..CommsConfig::default()
+        })
+        .is_ok());
+        let world =
+            CommsWorld::new(geom, CommsConfig::default()).unwrap();
+        let mut short = vec![0.0; 7];
+        let mut g = vec![0.0; vs.nvel * geom.nsites()];
+        assert!(world
+            .run(vs, &FeParams::default(), &mut short, &mut g, 1)
+            .is_err());
+    }
+}

@@ -58,6 +58,14 @@ pub struct TargetCfg {
     pub multi_step: u64,
     /// Preferred Pallas block for the xla backend (0 = any).
     pub xla_vvl_block: usize,
+    /// Concurrent slab ranks above the target level (the comms
+    /// subsystem). 1 = single-domain through the engine; > 1 decomposes
+    /// along x and runs one rank thread per slab (host backends only —
+    /// `threads` then becomes the *total* TLP budget shared by the ranks).
+    pub ranks: usize,
+    /// Overlap halo exchange with interior compute when `ranks > 1`
+    /// (`false` = bulk-synchronous reference schedule; same results).
+    pub overlap: bool,
 }
 
 impl Default for TargetCfg {
@@ -71,6 +79,8 @@ impl Default for TargetCfg {
             fusion: true,
             multi_step: 0,
             xla_vvl_block: 0,
+            ranks: 1,
+            overlap: true,
         }
     }
 }
@@ -127,6 +137,8 @@ impl Config {
             fusion: tgt.bool_or("fusion", dt.fusion)?,
             multi_step: tgt.u64_or("multi_step", dt.multi_step)?,
             xla_vvl_block: tgt.usize_or("xla_vvl_block", 0)?,
+            ranks: tgt.usize_or("ranks", dt.ranks)?,
+            overlap: tgt.bool_or("overlap", dt.overlap)?,
         };
 
         let fe = Section::of(&doc, "free_energy");
@@ -162,6 +174,32 @@ impl Config {
                 self.simulation.lattice
             ))
         })
+    }
+
+    /// Comms-layer knobs for a decomposed (`ranks > 1`) run. The rank
+    /// world drives the host kernels directly, so the backend must be a
+    /// host one; `threads` is handed over as the total TLP budget the
+    /// ranks share.
+    pub fn comms_config(&self) -> Result<crate::comms::CommsConfig> {
+        match self.target.backend.as_str() {
+            "host-simd" | "host-scalar" => Ok(crate::comms::CommsConfig {
+                ranks: self.target.ranks,
+                overlap: self.target.overlap,
+                threads: self.target.threads,
+                vvl: self.target.vvl,
+                scalar: self.target.backend == "host-scalar",
+                schedule: match self.target.schedule.as_str() {
+                    "dynamic" => Schedule::Dynamic {
+                        batch: self.target.batch,
+                    },
+                    _ => Schedule::Static,
+                },
+            }),
+            other => Err(Error::Parse(format!(
+                "ranks > 1 needs a host backend (the comms ranks run the \
+                 host kernels), got {other:?}"
+            ))),
+        }
     }
 
     pub fn tlp_pool(&self) -> TlpPool {
@@ -326,6 +364,38 @@ mod tests {
         forced.target.backend = "xla".into();
         let err = forced.build_target().unwrap_err();
         assert!(err.to_string().contains("multi_step"), "{err}");
+    }
+
+    #[test]
+    fn ranks_and_overlap_knobs() {
+        let cfg = Config::from_toml_str(SAMPLE).unwrap();
+        assert_eq!(cfg.target.ranks, 1, "default is single-domain");
+        assert!(cfg.target.overlap, "overlap defaults on");
+
+        let cfg = Config::from_toml_str(
+            "[simulation]\nlattice = \"d2q9\"\nlx = 8\nly = 8\nlz = 1\n\
+             steps = 5\n\n[target]\nranks = 4\noverlap = false\n\
+             threads = 8\nschedule = \"dynamic\"\nbatch = 2\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.target.ranks, 4);
+        assert!(!cfg.target.overlap);
+        let cc = cfg.comms_config().unwrap();
+        assert_eq!(cc.ranks, 4);
+        assert!(!cc.overlap);
+        assert_eq!(cc.threads, 8);
+        assert!(!cc.scalar);
+        // the schedule knob reaches the rank pools, same as tlp_pool()
+        assert!(matches!(cc.schedule,
+                         Schedule::Dynamic { batch } if batch == 2));
+
+        // the comms ranks drive host kernels; xla cannot back them
+        let mut xla = cfg.clone();
+        xla.target.backend = "xla".into();
+        assert!(xla.comms_config().is_err());
+        let mut scalar = cfg;
+        scalar.target.backend = "host-scalar".into();
+        assert!(scalar.comms_config().unwrap().scalar);
     }
 
     #[test]

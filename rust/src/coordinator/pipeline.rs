@@ -6,7 +6,7 @@ use std::path::Path;
 use crate::config::Config;
 use crate::error::Result;
 use crate::lattice::io::{write_vtk_scalar, CsvWriter};
-use crate::lb::engine::{LbEngine, Observables};
+use crate::lb::engine::{state_observables, LbEngine, Observables};
 use crate::lb::init;
 use crate::lb::model::LatticeModel;
 use crate::targetdp::target::KernelId;
@@ -47,11 +47,62 @@ impl RunSummary {
     }
 }
 
+/// Build the configured initial condition (shared by the single-engine
+/// and decomposed pipelines so the two paths cannot drift).
+fn init_state(cfg: &Config, geom: &crate::lattice::geometry::Geometry)
+              -> (Vec<f64>, Vec<f64>) {
+    let vs = cfg.model().expect("validated by caller").velset();
+    let n = geom.nsites();
+    let mut f = vec![0.0; vs.nvel * n];
+    let mut g = vec![0.0; vs.nvel * n];
+    match cfg.simulation.init.as_str() {
+        "droplet" => init::init_droplet(vs, &cfg.free_energy, geom, &mut f,
+                                        &mut g, geom.lx as f64 / 2.0,
+                                        geom.ly as f64 / 2.0,
+                                        cfg.simulation.radius),
+        _ => init::init_spinodal(vs, &cfg.free_energy, geom, &mut f,
+                                 &mut g, cfg.simulation.noise,
+                                 cfg.simulation.seed),
+    }
+    (f, g)
+}
+
+/// Open the observables CSV (when an output dir is configured) and write
+/// the step-0 row — shared column schema for both pipelines.
+fn open_observables_csv(cfg: &Config, initial: &Observables)
+                        -> Result<Option<CsvWriter>> {
+    if cfg.output.dir.is_empty() {
+        return Ok(None);
+    }
+    std::fs::create_dir_all(&cfg.output.dir)?;
+    let path = Path::new(&cfg.output.dir).join("observables.csv");
+    let mut w = CsvWriter::create(
+        &path,
+        &["step", "mass", "phi_total", "phi_variance", "mlups"],
+    )?;
+    w.row(&[0.0, initial.mass, initial.phi_total, initial.phi_variance,
+            0.0])?;
+    Ok(Some(w))
+}
+
+/// Steps per logging block.
+fn block_size(cfg: &Config) -> u64 {
+    if cfg.output.every == 0 {
+        cfg.simulation.steps
+    } else {
+        cfg.output.every
+    }
+}
+
 /// Run a full simulation according to `cfg`, logging to stdout.
+/// `ranks > 1` routes through the comms subsystem (concurrent slab ranks
+/// with overlapped halo exchange) instead of a single engine.
 pub fn run_simulation(cfg: &Config) -> Result<RunSummary> {
+    if cfg.target.ranks > 1 {
+        return run_decomposed_simulation(cfg);
+    }
     let geom = cfg.geometry();
     let model = cfg.model()?;
-    let vs = model.velset();
     let n = geom.nsites();
 
     let mut target = cfg.build_target()?;
@@ -73,42 +124,15 @@ pub fn run_simulation(cfg: &Config) -> Result<RunSummary> {
     });
 
     // initial condition
-    let mut f = vec![0.0; vs.nvel * n];
-    let mut g = vec![0.0; vs.nvel * n];
-    match cfg.simulation.init.as_str() {
-        "droplet" => init::init_droplet(vs, &cfg.free_energy, &geom, &mut f,
-                                        &mut g, geom.lx as f64 / 2.0,
-                                        geom.ly as f64 / 2.0,
-                                        cfg.simulation.radius),
-        _ => init::init_spinodal(vs, &cfg.free_energy, &geom, &mut f,
-                                 &mut g, cfg.simulation.noise,
-                                 cfg.simulation.seed),
-    }
+    let (f, g) = init_state(cfg, &geom);
     engine.load_state(&f, &g)?;
 
     let initial = engine.observables()?;
     println!("initial  : mass={:.6} phi={:.6} var={:.3e}", initial.mass,
              initial.phi_total, initial.phi_variance);
 
-    let mut csv = if cfg.output.dir.is_empty() {
-        None
-    } else {
-        std::fs::create_dir_all(&cfg.output.dir)?;
-        let path = Path::new(&cfg.output.dir).join("observables.csv");
-        let mut w = CsvWriter::create(
-            &path,
-            &["step", "mass", "phi_total", "phi_variance", "mlups"],
-        )?;
-        w.row(&[0.0, initial.mass, initial.phi_total,
-                initial.phi_variance, 0.0])?;
-        Some(w)
-    };
-
-    let block = if cfg.output.every == 0 {
-        cfg.simulation.steps
-    } else {
-        cfg.output.every
-    };
+    let mut csv = open_observables_csv(cfg, &initial)?;
+    let block = block_size(cfg);
     let mut mlups = Mlups::new();
     let timer = Timer::start();
     let mut done = 0;
@@ -147,6 +171,131 @@ pub fn run_simulation(cfg: &Config) -> Result<RunSummary> {
         seconds: timer.seconds(),
         mlups: mlups.value(),
         fused,
+        initial,
+        r#final: final_obs,
+    };
+    println!(
+        "done     : {} steps in {:.3}s = {:.2} MLUPS, mass drift {:.2e}",
+        summary.steps, summary.seconds, summary.mlups, summary.mass_drift()
+    );
+    Ok(summary)
+}
+
+/// The `ranks > 1` pipeline: scatter the state over a comms rank world,
+/// advance in logging blocks, report per-rank MLUPS and exchange-wait
+/// breakdowns, and gather for observables/output exactly like the
+/// single-engine path.
+///
+/// Each logging block is one [`crate::comms::CommsWorld::run`]: the
+/// block observables need the gathered global state, so every block pays
+/// rank-thread spawn + scatter + gather (all included in the reported
+/// seconds/MLUPS). With `output.every = 0` the whole run is a single
+/// block; pick a coarse `every` for long decomposed runs — keeping the
+/// rank threads resident across blocks is a noted ROADMAP refinement.
+fn run_decomposed_simulation(cfg: &Config) -> Result<RunSummary> {
+    let geom = cfg.geometry();
+    let model = cfg.model()?;
+    let vs = model.velset();
+    let n = geom.nsites();
+    let ccfg = cfg.comms_config()?;
+    let world = crate::comms::CommsWorld::new(geom, ccfg.clone())?;
+    let target_desc = format!(
+        "comms(ranks={},{},{},vvl={},threads={})",
+        ccfg.ranks,
+        if ccfg.overlap { "overlap" } else { "bulk-sync" },
+        if ccfg.scalar { "host-scalar" } else { "host-simd" },
+        ccfg.vvl,
+        ccfg.threads,
+    );
+    println!("target   : {target_desc}");
+    println!("lattice  : {} {}x{}x{} ({} sites)", model.name(), geom.lx,
+             geom.ly, geom.lz, n);
+    println!("pipeline : rank-parallel unfused (halo exchange {})",
+             if ccfg.overlap { "overlapped with interior compute" }
+             else { "bulk-synchronous" });
+    for d in &world.dec.domains {
+        println!("rank {:>4}: x = [{}, {}) ({} planes)", d.rank, d.x0,
+                 d.x0 + d.lxl, d.lxl);
+    }
+
+    let (mut f, mut g) = init_state(cfg, &geom);
+    let initial = state_observables(vs, &f, &g, n);
+    println!("initial  : mass={:.6} phi={:.6} var={:.3e}", initial.mass,
+             initial.phi_total, initial.phi_variance);
+
+    let mut csv = open_observables_csv(cfg, &initial)?;
+    let block = block_size(cfg);
+    let mut mlups = Mlups::new();
+    let timer = Timer::start();
+    let mut done = 0;
+    // accumulated per-rank compute/wait over all blocks
+    let mut compute_s = vec![0.0f64; ccfg.ranks];
+    let mut wait_s = vec![0.0f64; ccfg.ranks];
+    let mut bytes_sent = 0u64;
+    while done < cfg.simulation.steps {
+        let todo = block.min(cfg.simulation.steps - done);
+        let rep = world.run(vs, &cfg.free_energy, &mut f, &mut g, todo)?;
+        mlups.record(n, todo, rep.seconds);
+        for r in &rep.ranks {
+            compute_s[r.rank] += r.compute_s;
+            wait_s[r.rank] += r.wait_s;
+            bytes_sent += r.bytes_sent;
+        }
+        done += todo;
+        let obs = state_observables(vs, &f, &g, n);
+        println!(
+            "step {done:>6}: mass={:.6} phi={:.6} var={:.4e} [{:.2} MLUPS]",
+            obs.mass, obs.phi_total, obs.phi_variance, mlups.value()
+        );
+        if let Some(w) = csv.as_mut() {
+            w.row(&[done as f64, obs.mass, obs.phi_total, obs.phi_variance,
+                    mlups.value()])?;
+        }
+    }
+
+    let final_obs = state_observables(vs, &f, &g, n);
+    println!("per-rank : (exchange wait share of wall time)");
+    for (d, (c, w)) in
+        world.dec.domains.iter().zip(compute_s.iter().zip(&wait_s))
+    {
+        let wall = c + w;
+        let rank_mlups = if wall > 0.0 {
+            (d.lxl * d.plane()) as f64 * done as f64 / wall / 1e6
+        } else {
+            0.0
+        };
+        println!(
+            "rank {:>4}: {:>8.2} MLUPS  compute {:.3}s  wait {:.3}s \
+             ({:.1}%)",
+            d.rank, rank_mlups, c, w,
+            if wall > 0.0 { 100.0 * w / wall } else { 0.0 }
+        );
+    }
+    println!("exchange : {:.2} MiB total over {} steps",
+             bytes_sent as f64 / (1024.0 * 1024.0), done);
+
+    if cfg.output.vtk && !cfg.output.dir.is_empty() {
+        // phi from the gathered g state (no engine/target in this path)
+        let mut phi = vec![0.0; n];
+        crate::lb::moments::phi_from_g(
+            vs, &g, &mut phi, n,
+            &crate::targetdp::tlp::TlpPool::serial(), 8,
+        );
+        let path = Path::new(&cfg.output.dir).join("phi_final.vtk");
+        write_vtk_scalar(&path, &geom, "phi", &phi)?;
+        println!("wrote {}", path.display());
+    }
+    if let Some(w) = csv.as_mut() {
+        w.flush()?;
+    }
+
+    let summary = RunSummary {
+        target: target_desc,
+        steps: cfg.simulation.steps,
+        nsites: n,
+        seconds: timer.seconds(),
+        mlups: mlups.value(),
+        fused: false,
         initial,
         r#final: final_obs,
     };
@@ -228,6 +377,41 @@ mod tests {
         assert!(fused.fused && !unfused.fused);
         assert_eq!(fused.r#final.phi_variance, unfused.r#final.phi_variance,
                    "fused and unfused pipelines are bit-identical");
+    }
+
+    #[test]
+    fn decomposed_run_matches_single_engine_run() {
+        let mk = |ranks: usize, overlap: bool| {
+            let mut cfg = Config {
+                simulation: crate::config::SimulationCfg {
+                    lattice: "d2q9".into(),
+                    lx: 9, // uneven over 2 ranks
+                    ly: 8,
+                    lz: 1,
+                    steps: 6,
+                    init: "spinodal".into(),
+                    noise: 0.05,
+                    seed: 42,
+                    radius: 4.0,
+                },
+                target: Default::default(),
+                free_energy: Default::default(),
+                output: Default::default(),
+            };
+            cfg.target.ranks = ranks;
+            cfg.target.overlap = overlap;
+            run_simulation(&cfg).unwrap()
+        };
+        let single = mk(1, true); // engine path (fused FullStep)
+        let multi = mk(2, true); // comms path, overlapped
+        let bulk = mk(2, false); // comms path, bulk-synchronous
+        assert!(single.fused && !multi.fused);
+        assert!(multi.target.starts_with("comms(ranks=2"));
+        // the distribution level must not change the physics at all
+        assert_eq!(single.r#final.phi_variance, multi.r#final.phi_variance);
+        assert_eq!(single.r#final.mass, multi.r#final.mass);
+        assert_eq!(multi.r#final.phi_variance, bulk.r#final.phi_variance);
+        assert!(multi.mass_drift() < 1e-12);
     }
 
     #[test]

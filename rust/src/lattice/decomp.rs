@@ -1,28 +1,22 @@
-//! Domain decomposition: the coarse-grained (MPI) level above targetDP.
+//! Slab domain decomposition: the partitioning layer under the
+//! rank-parallel [`crate::comms`] subsystem.
 //!
 //! The paper's framework is explicitly designed to combine with node-level
 //! parallelism ("targetDP may be used in conjunction with ... MPI"). This
-//! module provides the slab decomposition Ludwig uses along the x axis:
-//! each subdomain owns `lxl` interior planes plus one halo plane on each
-//! side, and halo exchange moves interior boundary planes into the
-//! neighbours' halos — in a real MPI run those are the messages; here the
-//! "ranks" are in-process and the exchange is a bulk-synchronous copy,
-//! which keeps the data flow identical and testable.
+//! module owns the *geometry* of that level — the slab decomposition
+//! Ludwig uses along the x axis: each subdomain holds `lxl` interior
+//! planes plus one halo plane on each side. Everything that *moves* data
+//! between subdomains (halo exchange, overlap with compute, transports)
+//! lives in [`crate::comms`], which runs one concurrent rank per
+//! subdomain; this module only answers "which global sites does rank r
+//! own, and where do they sit in its local lattice".
 //!
 //! With z fastest in memory, an x plane is a contiguous `ly * lz` block
-//! per SoA component, so exchanges are pure slice copies (and the masked-
-//! copy API of [`crate::targetdp::masked`] generalises them to arbitrary
-//! subsets; see `halo::x_planes`).
+//! per SoA component, so scatters/gathers and halo-plane packing are pure
+//! slice copies (see `halo::pack_x_plane`).
 
 use crate::error::{Error, Result};
-use crate::free_energy::gradient::gradient_fd_range;
-use crate::free_energy::symmetric::FeParams;
 use crate::lattice::geometry::Geometry;
-use crate::lb::collision::collide_lattice_range;
-use crate::lb::model::VelSet;
-use crate::lb::moments::phi_from_g;
-use crate::lb::propagation::stream;
-use crate::targetdp::tlp::TlpPool;
 
 /// One slab subdomain: interior `lxl` planes + 2 halo planes.
 #[derive(Debug, Clone)]
@@ -45,6 +39,45 @@ impl SubDomain {
     /// Local site range covering the interior (contiguous by layout).
     pub fn interior(&self) -> std::ops::Range<usize> {
         self.plane()..(self.lxl + 1) * self.plane()
+    }
+
+    /// Copy this subdomain's interior planes out of a global SoA field
+    /// into `local` (`ncomp * local.nsites()`; halo planes untouched).
+    /// This is the per-rank half of [`SlabDecomposition::scatter`] — the
+    /// comms ranks call it from their *own* threads so a freshly
+    /// first-touch-allocated local field is filled where it will be swept.
+    pub fn scatter_into(&self, global: &[f64], ncomp: usize,
+                        local: &mut [f64]) {
+        let ln = self.local.nsites();
+        let gn = global.len() / ncomp;
+        let plane = self.plane();
+        debug_assert_eq!(global.len(), ncomp * gn);
+        debug_assert_eq!(local.len(), ncomp * ln);
+        debug_assert!((self.x0 + self.lxl) * plane <= gn);
+        for c in 0..ncomp {
+            let src = &global[c * gn + self.x0 * plane
+                ..c * gn + (self.x0 + self.lxl) * plane];
+            local[c * ln + plane..c * ln + (self.lxl + 1) * plane]
+                .copy_from_slice(src);
+        }
+    }
+
+    /// Copy this subdomain's interior planes back into a global SoA field
+    /// — the inverse of [`SubDomain::scatter_into`].
+    pub fn gather_from(&self, local: &[f64], ncomp: usize,
+                       global: &mut [f64]) {
+        let ln = self.local.nsites();
+        let gn = global.len() / ncomp;
+        let plane = self.plane();
+        debug_assert_eq!(global.len(), ncomp * gn);
+        debug_assert_eq!(local.len(), ncomp * ln);
+        for c in 0..ncomp {
+            let dst = &mut global[c * gn + self.x0 * plane
+                ..c * gn + (self.x0 + self.lxl) * plane];
+            dst.copy_from_slice(
+                &local[c * ln + plane..c * ln + (self.lxl + 1) * plane],
+            );
+        }
     }
 }
 
@@ -78,22 +111,14 @@ impl SlabDecomposition {
     }
 
     /// Scatter a global SoA field into per-domain local fields (halos
-    /// filled by a subsequent [`Self::exchange`]).
+    /// left zero; the first comms exchange fills them).
     pub fn scatter(&self, global: &[f64], ncomp: usize) -> Vec<Vec<f64>> {
-        let gn = self.global.nsites();
-        debug_assert_eq!(global.len(), ncomp * gn);
+        debug_assert_eq!(global.len(), ncomp * self.global.nsites());
         self.domains
             .iter()
             .map(|d| {
-                let ln = d.local.nsites();
-                let plane = d.plane();
-                let mut local = vec![0.0; ncomp * ln];
-                for c in 0..ncomp {
-                    let src = &global[c * gn + d.x0 * plane
-                        ..c * gn + (d.x0 + d.lxl) * plane];
-                    local[c * ln + plane..c * ln + (d.lxl + 1) * plane]
-                        .copy_from_slice(src);
-                }
+                let mut local = vec![0.0; ncomp * d.local.nsites()];
+                d.scatter_into(global, ncomp, &mut local);
                 local
             })
             .collect()
@@ -101,185 +126,23 @@ impl SlabDecomposition {
 
     /// Gather per-domain interiors back into a global SoA field.
     pub fn gather(&self, locals: &[Vec<f64>], ncomp: usize) -> Vec<f64> {
-        let gn = self.global.nsites();
-        let mut global = vec![0.0; ncomp * gn];
-        for (d, local) in self.domains.iter().zip(locals) {
-            let ln = d.local.nsites();
-            let plane = d.plane();
-            for c in 0..ncomp {
-                let dst = &mut global[c * gn + d.x0 * plane
-                    ..c * gn + (d.x0 + d.lxl) * plane];
-                dst.copy_from_slice(
-                    &local[c * ln + plane..c * ln + (d.lxl + 1) * plane],
-                );
-            }
-        }
+        let mut global = vec![0.0; ncomp * self.global.nsites()];
+        self.gather_into(locals, ncomp, &mut global);
         global
     }
 
-    /// Bulk-synchronous halo exchange of one field across all domains
-    /// (periodic at the global x boundaries) — the MPI sendrecv analog.
-    /// Convenience form that allocates staging per call; steady-state
-    /// callers should hold an [`ExchangeStaging`] and use
-    /// [`Self::exchange_with`] (4 exchanges per timestep otherwise churn
-    /// two fresh `ndom * ncomp * plane` vectors each).
-    pub fn exchange(&self, locals: &mut [Vec<f64>], ncomp: usize) {
-        self.exchange_with(locals, ncomp,
-                           &mut ExchangeStaging::new(self, ncomp));
-    }
-
-    /// Halo exchange through caller-owned staging buffers (no allocation).
-    pub fn exchange_with(&self, locals: &mut [Vec<f64>], ncomp: usize,
-                         staging: &mut ExchangeStaging) {
-        let ndom = self.domains.len();
-        let plane = self.global.ly * self.global.lz;
-        let seg = ncomp * plane;
-        assert_eq!(staging.lows.len(), ndom * seg,
-                   "staging sized for another decomposition/field shape");
-        // collect boundary planes first (so the copy is order-independent)
-        for (i, (d, local)) in
-            self.domains.iter().zip(locals.iter()).enumerate()
-        {
-            let ln = d.local.nsites();
-            let low = &mut staging.lows[i * seg..(i + 1) * seg];
-            let high = &mut staging.highs[i * seg..(i + 1) * seg];
-            for c in 0..ncomp {
-                low[c * plane..(c + 1) * plane].copy_from_slice(
-                    &local[c * ln + plane..c * ln + 2 * plane],
-                );
-                high[c * plane..(c + 1) * plane].copy_from_slice(
-                    &local[c * ln + d.lxl * plane
-                        ..c * ln + (d.lxl + 1) * plane],
-                );
-            }
+    /// Gather into a caller-owned global buffer (no allocation).
+    pub fn gather_into(&self, locals: &[Vec<f64>], ncomp: usize,
+                       global: &mut [f64]) {
+        for (d, local) in self.domains.iter().zip(locals) {
+            d.gather_from(local, ncomp, global);
         }
-        // deliver: my low halo <- left neighbour's high interior plane
-        for (i, d) in self.domains.iter().enumerate() {
-            let ln = d.local.nsites();
-            let left = (i + ndom - 1) % ndom;
-            let right = (i + 1) % ndom;
-            let local = &mut locals[i];
-            for c in 0..ncomp {
-                local[c * ln..c * ln + plane].copy_from_slice(
-                    &staging.highs
-                        [left * seg + c * plane..left * seg + (c + 1) * plane],
-                );
-                local[c * ln + (d.lxl + 1) * plane
-                    ..c * ln + (d.lxl + 2) * plane]
-                    .copy_from_slice(
-                        &staging.lows[right * seg + c * plane
-                            ..right * seg + (c + 1) * plane],
-                    );
-            }
-        }
-    }
-}
-
-/// Reusable boundary-plane staging for [`SlabDecomposition::exchange_with`]
-/// — one `ndom * ncomp * plane` buffer per direction, allocated once.
-#[derive(Debug, Clone)]
-pub struct ExchangeStaging {
-    lows: Vec<f64>,
-    highs: Vec<f64>,
-}
-
-impl ExchangeStaging {
-    pub fn new(dec: &SlabDecomposition, ncomp: usize) -> Self {
-        let plane = dec.global.ly * dec.global.lz;
-        let len = dec.domains.len() * ncomp * plane;
-        ExchangeStaging { lows: vec![0.0; len], highs: vec![0.0; len] }
-    }
-}
-
-/// Persistent per-domain scratch for [`step_multidomain`]: moment fields,
-/// streaming double buffers and exchange staging, allocated once per
-/// decomposition instead of per step.
-#[derive(Debug, Clone)]
-pub struct MultiDomainScratch {
-    phi: Vec<Vec<f64>>,
-    grad: Vec<Vec<f64>>,
-    lap: Vec<Vec<f64>>,
-    streamed_f: Vec<Vec<f64>>,
-    streamed_g: Vec<Vec<f64>>,
-    staging: ExchangeStaging,
-}
-
-impl MultiDomainScratch {
-    pub fn new(dec: &SlabDecomposition, nvel: usize) -> Self {
-        let sized = |per: usize| -> Vec<Vec<f64>> {
-            dec.domains
-                .iter()
-                .map(|d| vec![0.0; per * d.local.nsites()])
-                .collect()
-        };
-        MultiDomainScratch {
-            phi: sized(1),
-            grad: sized(3),
-            lap: sized(1),
-            streamed_f: sized(nvel),
-            streamed_g: sized(nvel),
-            staging: ExchangeStaging::new(dec, nvel),
-        }
-    }
-}
-
-/// One full binary-fluid LB timestep over the decomposed lattice
-/// (exchange -> moments/gradients -> collide -> exchange -> stream).
-/// Matches the single-domain step exactly (see tests).
-///
-/// Gradients and collision run over the **interior** site range only: the
-/// halo planes have garbage gradients (their x-stencil wraps inside the
-/// local lattice) and their post-collision values were overwritten by the
-/// next exchange anyway — colliding them was pure waste. phi still covers
-/// the halo planes because the interior-boundary gradient stencil reads
-/// them.
-#[allow(clippy::too_many_arguments)]
-pub fn step_multidomain(dec: &SlabDecomposition, vs: &VelSet, p: &FeParams,
-                        f: &mut [Vec<f64>], g: &mut [Vec<f64>],
-                        scratch: &mut MultiDomainScratch, pool: &TlpPool,
-                        vvl: usize) {
-    let nvel = vs.nvel;
-    dec.exchange_with(f, nvel, &mut scratch.staging);
-    dec.exchange_with(g, nvel, &mut scratch.staging);
-
-    for (i, d) in dec.domains.iter().enumerate() {
-        let ln = d.local.nsites();
-        let interior = d.interior();
-        phi_from_g(vs, &g[i], &mut scratch.phi[i], ln, pool, vvl);
-        gradient_fd_range(&d.local, &scratch.phi[i], &mut scratch.grad[i],
-                          &mut scratch.lap[i], interior.clone(), pool, vvl);
-        collide_lattice_range(vs, p, &mut f[i], &mut g[i], &scratch.grad[i],
-                              &scratch.lap[i], ln, interior, pool, vvl,
-                              false);
-    }
-
-    dec.exchange_with(f, nvel, &mut scratch.staging);
-    dec.exchange_with(g, nvel, &mut scratch.staging);
-
-    for (i, d) in dec.domains.iter().enumerate() {
-        stream(vs, &d.local, &f[i], &mut scratch.streamed_f[i], pool, vvl);
-        stream(vs, &d.local, &g[i], &mut scratch.streamed_g[i], pool, vvl);
-        f[i].copy_from_slice(&scratch.streamed_f[i]);
-        g[i].copy_from_slice(&scratch.streamed_g[i]);
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::free_energy::gradient::gradient_fd;
-    use crate::lb::collision::collide_lattice;
-    use crate::lb::model::d3q19;
-
-    fn global_state(geom: &Geometry, vs: &VelSet)
-                    -> (Vec<f64>, Vec<f64>) {
-        let n = geom.nsites();
-        let mut f = vec![0.0; vs.nvel * n];
-        let mut g = vec![0.0; vs.nvel * n];
-        crate::lb::init::init_spinodal(vs, &FeParams::default(), geom,
-                                       &mut f, &mut g, 0.05, 99);
-        (f, g)
-    }
 
     #[test]
     fn uneven_split_covers_lattice() {
@@ -310,91 +173,19 @@ mod tests {
     }
 
     #[test]
-    fn exchange_fills_halos_periodically() {
-        let geom = Geometry::new(6, 2, 2);
+    fn per_rank_scatter_matches_bulk_scatter() {
+        let geom = Geometry::new(7, 2, 3);
         let dec = SlabDecomposition::new(geom, 2).unwrap();
-        let n = geom.nsites();
-        let field: Vec<f64> = (0..n).map(|i| i as f64).collect();
-        let mut locals = dec.scatter(&field, 1);
-        dec.exchange(&mut locals, 1);
-        // domain 0 low halo should hold global plane x = 5 (periodic)
-        let d0 = &dec.domains[0];
-        let plane = d0.plane();
-        let want: Vec<f64> = (0..plane)
-            .map(|k| field[5 * plane + k])
-            .collect();
-        assert_eq!(&locals[0][..plane], &want[..]);
-        // domain 1 high halo holds global plane x = 0
-        let d1 = &dec.domains[1];
-        let ln = d1.local.nsites();
-        let got = &locals[1][(d1.lxl + 1) * plane..ln];
-        let want: Vec<f64> = (0..plane).map(|k| field[k]).collect();
-        assert_eq!(got, &want[..]);
-    }
-
-    #[test]
-    fn multidomain_step_matches_single_domain() {
-        let vs = d3q19();
-        let p = FeParams::default();
-        let geom = Geometry::new(12, 4, 4);
-        let (f_ref, g_ref) = global_state(&geom, vs);
-        let pool = TlpPool::serial();
-
-        // reference: single-domain step (phi -> grad -> collide -> stream)
-        let n = geom.nsites();
-        let mut f1 = f_ref.clone();
-        let mut g1 = g_ref.clone();
-        for _ in 0..3 {
-            let mut phi = vec![0.0; n];
-            let mut grad = vec![0.0; 3 * n];
-            let mut lap = vec![0.0; n];
-            phi_from_g(vs, &g1, &mut phi, n, &pool, 8);
-            gradient_fd(&geom, &phi, &mut grad, &mut lap, &pool, 8);
-            collide_lattice(vs, &p, &mut f1, &mut g1, &grad, &lap, n, &pool,
-                            8, false);
-            let mut fs = vec![0.0; vs.nvel * n];
-            let mut gs = vec![0.0; vs.nvel * n];
-            stream(vs, &geom, &f1, &mut fs, &pool, 8);
-            stream(vs, &geom, &g1, &mut gs, &pool, 8);
-            f1 = fs;
-            g1 = gs;
-        }
-
-        // decomposed: 3 uneven slabs
-        for ndom in [2, 3] {
-            let dec = SlabDecomposition::new(geom, ndom).unwrap();
-            let mut fl = dec.scatter(&f_ref, vs.nvel);
-            let mut gl = dec.scatter(&g_ref, vs.nvel);
-            let mut scratch = MultiDomainScratch::new(&dec, vs.nvel);
-            for _ in 0..3 {
-                step_multidomain(&dec, vs, &p, &mut fl, &mut gl,
-                                 &mut scratch, &pool, 8);
-            }
-            let f2 = dec.gather(&fl, vs.nvel);
-            let g2 = dec.gather(&gl, vs.nvel);
-            for (a, b) in f1.iter().zip(&f2) {
-                assert!((a - b).abs() < 1e-13, "ndom={ndom}");
-            }
-            for (a, b) in g1.iter().zip(&g2) {
-                assert!((a - b).abs() < 1e-13, "ndom={ndom}");
-            }
-        }
-    }
-
-    #[test]
-    fn exchange_with_reuses_staging_across_calls() {
-        let geom = Geometry::new(6, 3, 2);
-        let dec = SlabDecomposition::new(geom, 3).unwrap();
         let field: Vec<f64> =
-            (0..2 * geom.nsites()).map(|i| i as f64 * 0.5).collect();
-        // reference: allocating exchange
-        let mut want = dec.scatter(&field, 2);
-        dec.exchange(&mut want, 2);
-        // staged exchange, run twice through the same buffers
-        let mut got = dec.scatter(&field, 2);
-        let mut staging = ExchangeStaging::new(&dec, 2);
-        dec.exchange_with(&mut got, 2, &mut staging);
-        dec.exchange_with(&mut got, 2, &mut staging);
-        assert_eq!(got, want, "exchange is idempotent on filled halos");
+            (0..3 * geom.nsites()).map(|i| i as f64 * 0.5).collect();
+        let bulk = dec.scatter(&field, 3);
+        for (d, want) in dec.domains.iter().zip(&bulk) {
+            let mut local = vec![0.0; 3 * d.local.nsites()];
+            d.scatter_into(&field, 3, &mut local);
+            assert_eq!(&local, want, "rank {}", d.rank);
+            // and the interior range really is the middle planes
+            let plane = d.plane();
+            assert_eq!(d.interior(), plane..(d.lxl + 1) * plane);
+        }
     }
 }

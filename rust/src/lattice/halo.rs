@@ -36,6 +36,37 @@ pub fn x_planes(geom: &Geometry, depth: usize, low: bool) -> Vec<bool> {
     mask
 }
 
+/// Pack x-plane `p` of an SoA field (`ncomp * nsites`, z fastest so a
+/// plane is `plane_sites` contiguous values per component) into a
+/// contiguous `ncomp * plane_sites` buffer — the halo-exchange message
+/// payload (the send-buffer packing an MPI code does before `MPI_Isend`).
+pub fn pack_x_plane(field: &[f64], ncomp: usize, nsites: usize,
+                    plane_sites: usize, p: usize, out: &mut [f64]) {
+    debug_assert_eq!(field.len(), ncomp * nsites);
+    debug_assert_eq!(out.len(), ncomp * plane_sites);
+    debug_assert!((p + 1) * plane_sites <= nsites);
+    for c in 0..ncomp {
+        let src = c * nsites + p * plane_sites;
+        out[c * plane_sites..(c + 1) * plane_sites]
+            .copy_from_slice(&field[src..src + plane_sites]);
+    }
+}
+
+/// Inverse of [`pack_x_plane`]: scatter a received plane payload into
+/// x-plane `p` of the SoA field (the recv-buffer unpacking after
+/// `MPI_Wait`).
+pub fn unpack_x_plane(field: &mut [f64], ncomp: usize, nsites: usize,
+                      plane_sites: usize, p: usize, payload: &[f64]) {
+    debug_assert_eq!(field.len(), ncomp * nsites);
+    debug_assert_eq!(payload.len(), ncomp * plane_sites);
+    debug_assert!((p + 1) * plane_sites <= nsites);
+    for c in 0..ncomp {
+        let dst = c * nsites + p * plane_sites;
+        field[dst..dst + plane_sites]
+            .copy_from_slice(&payload[c * plane_sites..(c + 1) * plane_sites]);
+    }
+}
+
 /// Fraction of sites selected by a mask.
 pub fn fill_fraction(mask: &[bool]) -> f64 {
     mask.iter().filter(|&&m| m).count() as f64 / mask.len() as f64
@@ -68,6 +99,32 @@ mod tests {
         for (x, _, _, s) in geom.iter() {
             assert_eq!(low[s], x == 0);
             assert_eq!(high[s], x == 3);
+        }
+    }
+
+    #[test]
+    fn plane_pack_unpack_roundtrip() {
+        let geom = Geometry::new(5, 3, 2);
+        let (ncomp, n, plane) = (2usize, geom.nsites(), geom.ly * geom.lz);
+        let field: Vec<f64> = (0..ncomp * n).map(|i| i as f64).collect();
+        for p in [0, 2, 4] {
+            let mut buf = vec![0.0; ncomp * plane];
+            pack_x_plane(&field, ncomp, n, plane, p, &mut buf);
+            // component c of site s in plane p came from the right spot
+            for c in 0..ncomp {
+                for k in 0..plane {
+                    assert_eq!(buf[c * plane + k],
+                               field[c * n + p * plane + k]);
+                }
+            }
+            let mut back = vec![-1.0; ncomp * n];
+            unpack_x_plane(&mut back, ncomp, n, plane, p, &buf);
+            for c in 0..ncomp {
+                for k in 0..plane {
+                    assert_eq!(back[c * n + p * plane + k],
+                               field[c * n + p * plane + k]);
+                }
+            }
         }
     }
 

@@ -200,6 +200,16 @@ impl StreamTable {
         Self::hops_in(&self.vels[i].push, &sites)
     }
 
+    /// True when every pull *source* of the destination range `sites` for
+    /// velocity `i` lies inside `bounds` — the safety predicate for
+    /// streaming a destination sub-range before the halo planes outside
+    /// `bounds` have arrived (the comms overlap asserts exactly this for
+    /// its interior split). O(|sites| log) — intended for debug checks.
+    pub fn pull_sources_within(&self, i: usize, sites: Range<usize>,
+                               bounds: &Range<usize>) -> bool {
+        sites.into_iter().all(|s| bounds.contains(&self.pull_from(i, s)))
+    }
+
     /// Pull-stream the chunk of sites `[base, base + dst_chunk.len())` of
     /// one SoA velocity row: `dst_chunk[k] = src_row[pull_from(i, base+k)]`.
     /// Interior runs between exceptions are contiguous `copy_from_slice`s.
@@ -394,6 +404,32 @@ mod tests {
                 assert_eq!(table.push_hops(i, range.clone()), &want_push[..],
                            "i={i} push {range:?}");
             }
+        }
+    }
+
+    #[test]
+    fn pull_sources_within_splits_interior_from_boundary() {
+        // the comms overlap invariant: destinations excluding one plane on
+        // each side of a slab pull only from inside the slab, while the
+        // edge planes need the (halo) planes beyond it
+        let vs = d3q19();
+        let geom = Geometry::new(6, 3, 4); // a 4-plane "slab" + 2 halos
+        let plane = geom.ly * geom.lz;
+        let n = geom.nsites();
+        let table = StreamTable::new(vs, &geom);
+        let interior = plane..(geom.lx - 1) * plane;
+        let deep = 2 * plane..(geom.lx - 2) * plane;
+        for i in 0..vs.nvel {
+            assert!(table.pull_sources_within(i, deep.clone(), &interior),
+                    "i={i}: deep destinations must not read the halos");
+            let c = vs.ci[i];
+            if c[0] != 0 {
+                // x-moving velocities at the edge planes reach outside
+                assert!(!table.pull_sources_within(i, interior.clone(),
+                                                   &interior),
+                        "i={i}");
+            }
+            assert!(table.pull_sources_within(i, 0..n, &(0..n)));
         }
     }
 

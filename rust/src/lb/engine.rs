@@ -35,6 +35,13 @@
 //! + `ReduceSum`: only the per-component sums and the 1-component phi
 //! field cross the target→host boundary, not the full 19-component f/g
 //! state (a 19x smaller transfer).
+//!
+//! The engine drives **one** target over one lattice. The level above —
+//! several concurrent ranks each sweeping a slab, with halo exchange
+//! overlapped against interior compute — is [`crate::comms`]; its ranks
+//! run the same host kernels the engine's host target dispatches, and its
+//! results are bit-identical to this engine's fused `FullStep` path
+//! (`tests/comms_parity.rs`).
 
 use crate::error::Result;
 use crate::free_energy::symmetric::FeParams;
@@ -53,6 +60,30 @@ pub struct Observables {
     pub phi_total: f64,
     /// Variance of phi over sites — grows during spinodal decomposition.
     pub phi_variance: f64,
+}
+
+/// Reduce a host-resident SoA state to global [`Observables`] — the
+/// engine's fallback for targets without on-target reduction, and the
+/// reduction the comms path applies to its gathered global state (the
+/// place an `MPI_Allreduce` would sit).
+pub fn state_observables(vs: &crate::lb::model::VelSet, f: &[f64],
+                         g: &[f64], n: usize) -> Observables {
+    let (mass, momentum, phi_total) = moments::totals(vs, f, g, n);
+    let mean = phi_total / n as f64;
+    let mut var = 0.0;
+    for s in 0..n {
+        let mut phi = 0.0;
+        for i in 0..vs.nvel {
+            phi += g[i * n + s];
+        }
+        var += (phi - mean) * (phi - mean);
+    }
+    Observables {
+        mass,
+        momentum,
+        phi_total,
+        phi_variance: var / n as f64,
+    }
 }
 
 /// Binary-fluid LB simulation bound to one execution target.
@@ -286,22 +317,7 @@ impl<'t> LbEngine<'t> {
         let mut f = vec![0.0; vs.nvel * n];
         let mut g = vec![0.0; vs.nvel * n];
         self.fetch_state(&mut f, &mut g)?;
-        let (mass, momentum, phi_total) = moments::totals(vs, &f, &g, n);
-        let mean = phi_total / n as f64;
-        let mut var = 0.0;
-        for s in 0..n {
-            let mut phi = 0.0;
-            for i in 0..vs.nvel {
-                phi += g[i * n + s];
-            }
-            var += (phi - mean) * (phi - mean);
-        }
-        Ok(Observables {
-            mass,
-            momentum,
-            phi_total,
-            phi_variance: var / n as f64,
-        })
+        Ok(state_observables(vs, &f, &g, n))
     }
 
     /// Per-site phi field (for IO / analysis), computed on the target when

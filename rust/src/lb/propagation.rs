@@ -27,17 +27,33 @@ pub fn stream(vs: &VelSet, geom: &Geometry, src: &[f64], dst: &mut [f64],
 /// target's `Stream`/`FullStep` kernels use).
 pub fn stream_with_table(vs: &VelSet, table: &StreamTable, src: &[f64],
                          dst: &mut [f64], pool: &TlpPool, vvl: usize) {
+    stream_range(vs, table, src, dst, 0..table.nsites, pool, vvl);
+}
+
+/// Ranged pull-stream: only destination sites in `sites` are written
+/// (entries outside are untouched). The comms layer streams the interior
+/// destination range while halo planes are still in flight, then
+/// completes the boundary destinations on arrival — per-site values are
+/// identical to the full sweep, the split only reorders independent
+/// copies.
+pub fn stream_range(vs: &VelSet, table: &StreamTable, src: &[f64],
+                    dst: &mut [f64], sites: std::ops::Range<usize>,
+                    pool: &TlpPool, vvl: usize) {
     let n = table.nsites;
     debug_assert_eq!(src.len(), vs.nvel * n);
     debug_assert_eq!(dst.len(), vs.nvel * n);
+    debug_assert!(sites.end <= n);
+    let start = sites.start;
+    let count = sites.len();
 
-    // SAFETY of the raw pointer: chunks partition [0, n), and each chunk
+    // SAFETY of the raw pointer: chunks partition `sites`, and each chunk
     // materialises a &mut slice over exactly its own destination range
     // dst[i*n + base .. i*n + base + len] per velocity — the parallel
     // borrows are disjoint.
     let dst_ptr = SendPtr(dst.as_mut_ptr());
-    pool.for_chunks(n, vvl, |base, len| {
+    pool.for_chunks(count, vvl, |base, len| {
         let dst_ptr = dst_ptr;
+        let base = start + base;
         for i in 0..vs.nvel {
             let dst_chunk = unsafe {
                 std::slice::from_raw_parts_mut(
@@ -126,6 +142,28 @@ mod tests {
             }
         }
         assert_eq!(back, src);
+    }
+
+    #[test]
+    fn ranged_stream_pieces_reassemble_full_sweep() {
+        let vs = d3q19();
+        let geom = Geometry::new(6, 3, 4);
+        let n = geom.nsites();
+        let table = crate::lattice::StreamTable::cached(vs, &geom);
+        let src: Vec<f64> =
+            (0..vs.nvel * n).map(|i| (i % 113) as f64 * 0.25).collect();
+        let mut whole = vec![0.0; vs.nvel * n];
+        stream(vs, &geom, &src, &mut whole, &TlpPool::serial(), 8);
+        // interior planes first, then the two boundary planes — the comms
+        // overlap split
+        let plane = geom.ly * geom.lz;
+        let mut split = vec![-7.0; vs.nvel * n];
+        let pool = TlpPool::serial();
+        stream_range(vs, &table, &src, &mut split, plane..5 * plane, &pool,
+                     4);
+        stream_range(vs, &table, &src, &mut split, 0..plane, &pool, 4);
+        stream_range(vs, &table, &src, &mut split, 5 * plane..n, &pool, 4);
+        assert_eq!(split, whole);
     }
 
     #[test]

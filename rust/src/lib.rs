@@ -18,6 +18,9 @@
 //!   JAX/Pallas kernels executed through PJRT).
 //! * [`lattice`] — structured-grid substrate: geometry, SoA lattice fields,
 //!   halo masks, domain decomposition, VTK/CSV output.
+//! * [`comms`] — the distribution level above targetDP (the paper's
+//!   "combined with MPI" tier): concurrent slab ranks over pluggable
+//!   transports with halo exchange overlapped against interior compute.
 //! * [`lb`] — the motivating application: a binary-fluid lattice-Boltzmann
 //!   engine (D2Q9/D3Q19) whose *binary collision* kernel is the paper's
 //!   Figure-1 benchmark.
@@ -35,6 +38,7 @@
 
 pub mod baseline;
 pub mod bench;
+pub mod comms;
 pub mod config;
 pub mod coordinator;
 pub mod error;

@@ -20,7 +20,7 @@ targetdp — lattice-based data parallelism with portable performance
 USAGE:
     targetdp run [--config FILE] [--backend B] [--lattice L] [--size N]
                  [--steps K] [--vvl V] [--threads T] [--multi-step M]
-                 [--out DIR] [--vtk]
+                 [--ranks R] [--overlap true|false] [--out DIR] [--vtk]
     targetdp info
     targetdp help
 
@@ -32,6 +32,8 @@ run options (ignored when --config is given):
     --vvl         virtual vector length             [8]
     --threads     TLP threads (0 = autodetect)      [1]
     --multi-step  host blocked steps/launch, 0=auto [0]
+    --ranks       concurrent slab ranks (comms)     [1]
+    --overlap     overlap halo exchange w/ compute  [true]
     --out         output directory for CSV/VTK      [none]
     --vtk         dump a phi snapshot at the end
 ";
@@ -73,6 +75,8 @@ fn run() -> targetdp::Result<()> {
                             vvl: args.usize_or("vvl", 8)?,
                             threads: args.usize_or("threads", 1)?,
                             multi_step: args.u64_or("multi-step", 0)?,
+                            ranks: args.usize_or("ranks", 1)?,
+                            overlap: args.bool_or("overlap", true)?,
                             ..Default::default()
                         },
                         free_energy: Default::default(),

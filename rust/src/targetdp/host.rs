@@ -226,7 +226,9 @@ impl Target for HostTarget {
     }
 
     fn malloc(&mut self, desc: &FieldDesc) -> Result<BufId> {
-        Ok(self.bufs.malloc(desc))
+        // first-touch: zero the field from the TLP workers that will sweep
+        // it, so its pages land on their NUMA nodes (ROADMAP item)
+        Ok(self.bufs.malloc_first_touch(desc, &self.pool))
     }
 
     fn free(&mut self, id: BufId) -> Result<()> {

@@ -56,7 +56,21 @@ impl HostPool {
 
     /// `targetMalloc`: allocate a zero-initialised buffer.
     pub fn malloc(&mut self, desc: &FieldDesc) -> BufId {
-        let buf = HostBuf { desc: desc.clone(), data: vec![0.0; desc.len()] };
+        self.insert(HostBuf { desc: desc.clone(), data: vec![0.0; desc.len()] })
+    }
+
+    /// `targetMalloc` with NUMA-friendly first-touch initialisation: the
+    /// buffer's pages are zeroed by `pool`'s workers under the same static
+    /// chunk→thread assignment the kernels sweep with, so each page lands
+    /// on the socket that will process it (see
+    /// [`crate::targetdp::tlp::TlpPool::zeros`]).
+    pub fn malloc_first_touch(&mut self, desc: &FieldDesc,
+                              pool: &crate::targetdp::tlp::TlpPool) -> BufId {
+        let data = pool.zeros(desc.len());
+        self.insert(HostBuf { desc: desc.clone(), data })
+    }
+
+    fn insert(&mut self, buf: HostBuf) -> BufId {
         // reuse the first free slot to keep handles dense
         if let Some(slot) = self.bufs.iter().position(Option::is_none) {
             self.bufs[slot] = Some(buf);

@@ -80,6 +80,20 @@ impl std::fmt::Debug for TlpPool {
 
 /// `TARGETDP_NUM_THREADS` env var, else available parallelism.
 pub fn default_threads() -> usize {
+    env_or_available()
+}
+
+/// TLP threads *per rank* when a thread budget of `total` is shared by
+/// `nranks` concurrently running ranks (the comms layer's pool sizing):
+/// an even split, never below 1, with `total == 0` meaning "divide the
+/// machine". Ranks are themselves OS threads, so a rank whose share is 1
+/// runs its kernels inline with zero pool overhead.
+pub fn threads_per_rank(total: usize, nranks: usize) -> usize {
+    let total = if total == 0 { env_or_available() } else { total };
+    (total / nranks.max(1)).max(1)
+}
+
+fn env_or_available() -> usize {
     std::env::var("TARGETDP_NUM_THREADS")
         .ok()
         .and_then(|v| v.parse().ok())
@@ -157,7 +171,44 @@ impl TlpPool {
             }
         }
     }
+
+    /// First-touch allocation: a `len`-element zeroed buffer whose pages
+    /// are written for the first time by this pool's own workers, under
+    /// the pool's normal chunk→thread assignment. On a NUMA machine
+    /// first-touch placement puts each page on the socket of the thread
+    /// that touched it, so a field zeroed here lands next to the workers
+    /// that will sweep it — `vec![0.0; len]` from the main thread pins
+    /// everything to the main thread's node instead.
+    ///
+    /// Zeroing runs at a coarse grain (`FIRST_TOUCH_GRAIN` sites) rather
+    /// than per-VVL-chunk: static scheduling still hands each worker one
+    /// contiguous block, and page (4 KiB = 512 f64) placement only cares
+    /// about which worker's block a page falls in, not the exact chunk
+    /// boundaries inside it.
+    pub fn zeros(&self, len: usize) -> Vec<f64> {
+        let mut v: Vec<f64> = Vec::with_capacity(len);
+        if len == 0 {
+            return v;
+        }
+        let ptr = ZeroPtr(v.as_mut_ptr());
+        self.for_chunks(len, FIRST_TOUCH_GRAIN, |base, n| {
+            // SAFETY: chunks partition [0, len) within the reserved
+            // capacity; disjoint ranges, each written exactly once
+            unsafe { std::ptr::write_bytes(ptr.0.add(base), 0, n) };
+        });
+        // SAFETY: every element in [0, len) was initialised above
+        unsafe { v.set_len(len) };
+        v
+    }
 }
+
+/// Zeroing grain (in f64 elements) for [`TlpPool::zeros`]: 8 pages.
+const FIRST_TOUCH_GRAIN: usize = 4096;
+
+#[derive(Clone, Copy)]
+struct ZeroPtr(*mut f64);
+unsafe impl Send for ZeroPtr {}
+unsafe impl Sync for ZeroPtr {}
 
 /// Type-erased pointer to the per-worker job body (`fn(worker_index)`).
 ///
@@ -429,6 +480,30 @@ mod tests {
         // the workers parked cleanly and the next launch works
         let hits = cover(40, 4, pool);
         assert!(hits.iter().all(|&h| h == 1));
+    }
+
+    #[test]
+    fn zeros_is_fully_initialised() {
+        for pool in [TlpPool::serial(), TlpPool::new(3, Schedule::Static),
+                     TlpPool::new(2, Schedule::Dynamic { batch: 2 })] {
+            for len in [0usize, 1, 511, 4096, 3 * 4096 + 17] {
+                let v = pool.zeros(len);
+                assert_eq!(v.len(), len);
+                assert!(v.iter().all(|&x| x == 0.0),
+                        "len={len} pool={pool:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn threads_per_rank_splits_evenly() {
+        assert_eq!(threads_per_rank(8, 2), 4);
+        assert_eq!(threads_per_rank(8, 3), 2);
+        // never below one thread per rank
+        assert_eq!(threads_per_rank(2, 8), 1);
+        assert_eq!(threads_per_rank(1, 1), 1);
+        // 0 = divide the detected machine width: at least 1 each
+        assert!(threads_per_rank(0, 4) >= 1);
     }
 
     #[test]

@@ -67,6 +67,19 @@ impl Args {
         }
     }
 
+    /// Boolean flag: `--key true|false|1|0` with a value, bare `--key`
+    /// means true, absent means `default`.
+    pub fn bool_or(&self, key: &str, default: bool) -> Result<bool> {
+        match self.get(key) {
+            Some("true") | Some("1") | Some("on") => Ok(true),
+            Some("false") | Some("0") | Some("off") => Ok(false),
+            Some(v) => Err(Error::Parse(format!(
+                "--{key} expects true/false, got {v:?}"
+            ))),
+            None => Ok(self.switches.iter().any(|s| s == key) || default),
+        }
+    }
+
     pub fn has(&self, key: &str) -> bool {
         self.switches.iter().any(|s| s == key) || self.flags.contains_key(key)
     }
@@ -96,6 +109,20 @@ mod tests {
         let a = parse(&["--x", "1"]);
         assert_eq!(a.command, "");
         assert_eq!(a.usize_or("x", 0).unwrap(), 1);
+    }
+
+    #[test]
+    fn bool_flags() {
+        let a = parse(&["run", "--overlap", "false", "--vtk"]);
+        assert!(!a.bool_or("overlap", true).unwrap());
+        // bare switch means true; absent falls back to the default
+        assert!(a.bool_or("vtk", false).unwrap());
+        assert!(a.bool_or("missing", true).unwrap());
+        assert!(!a.bool_or("missing", false).unwrap());
+        let a = parse(&["run", "--overlap=1"]);
+        assert!(a.bool_or("overlap", false).unwrap());
+        let a = parse(&["run", "--overlap", "maybe"]);
+        assert!(a.bool_or("overlap", true).is_err());
     }
 
     #[test]

@@ -1,0 +1,166 @@
+//! Distribution-level parity: the comms rank world — concurrent slab
+//! ranks exchanging serialized halo planes, with or without
+//! compute/communication overlap — must be **bit-identical** to the
+//! single-domain fused `FullStep` engine run. If any of scatter, wire
+//! encode/decode, overlap scheduling, edge-plane completion or gather
+//! moved a single ULP, these `assert_eq!`s on raw f64 vectors would see
+//! it.
+
+use targetdp::comms::{run_decomposed, CommsConfig, PlaneMsg};
+use targetdp::free_energy::symmetric::FeParams;
+use targetdp::lattice::geometry::Geometry;
+use targetdp::lb::engine::LbEngine;
+use targetdp::lb::init;
+use targetdp::lb::model::LatticeModel;
+use targetdp::targetdp::tlp::TlpPool;
+use targetdp::targetdp::HostTarget;
+
+const STEPS: u64 = 10;
+
+fn initial_state(model: LatticeModel, geom: &Geometry)
+                 -> (Vec<f64>, Vec<f64>) {
+    let vs = model.velset();
+    let n = geom.nsites();
+    let mut f = vec![0.0; vs.nvel * n];
+    let mut g = vec![0.0; vs.nvel * n];
+    init::init_spinodal(vs, &FeParams::default(), geom, &mut f, &mut g,
+                        0.06, 2024);
+    (f, g)
+}
+
+/// Single-domain reference through the engine's fused `FullStep` tier.
+fn fullstep_reference(model: LatticeModel, geom: &Geometry)
+                      -> (Vec<f64>, Vec<f64>) {
+    let (f0, g0) = initial_state(model, geom);
+    let mut target = HostTarget::simd(8, TlpPool::serial()).unwrap();
+    let mut engine =
+        LbEngine::new(&mut target, *geom, model, FeParams::default())
+            .unwrap();
+    assert!(engine.fused_active(), "host target must take the fused tier");
+    engine.load_state(&f0, &g0).unwrap();
+    engine.run(STEPS).unwrap();
+    let mut f = vec![0.0; f0.len()];
+    let mut g = vec![0.0; g0.len()];
+    engine.fetch_state(&mut f, &mut g).unwrap();
+    (f, g)
+}
+
+fn check_model(model: LatticeModel, geom: Geometry) {
+    let vs = model.velset();
+    let (f_want, g_want) = fullstep_reference(model, &geom);
+    for ranks in [1usize, 2, 4] {
+        for overlap in [false, true] {
+            let (mut f, mut g) = initial_state(model, &geom);
+            let cfg = CommsConfig {
+                ranks,
+                overlap,
+                threads: 4, // shared budget: ranks get 4/ranks workers
+                ..CommsConfig::default()
+            };
+            let rep = run_decomposed(&geom, vs, &FeParams::default(),
+                                     &mut f, &mut g, STEPS, &cfg)
+                .unwrap();
+            assert_eq!(rep.ranks.len(), ranks);
+            assert!(rep.ranks.iter().all(|r| r.steps == STEPS));
+            assert_eq!(
+                f, f_want,
+                "{} ranks={ranks} overlap={overlap}: f diverged",
+                model.name()
+            );
+            assert_eq!(
+                g, g_want,
+                "{} ranks={ranks} overlap={overlap}: g diverged",
+                model.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn d3q19_ranks_match_fullstep_bitwise() {
+    // lx = 13 over 4 ranks -> slabs of 4,3,3,3: uneven split exercised
+    check_model(LatticeModel::D3Q19, Geometry::new(13, 4, 4));
+}
+
+#[test]
+fn d2q9_ranks_match_fullstep_bitwise() {
+    // lx = 10 over 4 ranks -> slabs of 3,3,2,2
+    check_model(LatticeModel::D2Q9, Geometry::new(10, 12, 1));
+}
+
+#[test]
+fn scalar_rank_kernels_match_too() {
+    // host-scalar analog inside the ranks (vvl only sets the chunk grain)
+    let model = LatticeModel::D3Q19;
+    let geom = Geometry::new(8, 3, 5);
+    let vs = model.velset();
+    let (f_want, g_want) = fullstep_reference(model, &geom);
+    let (mut f, mut g) = initial_state(model, &geom);
+    let cfg = CommsConfig {
+        ranks: 2,
+        scalar: true,
+        vvl: 5, // arbitrary grain is fine in scalar mode
+        ..CommsConfig::default()
+    };
+    run_decomposed(&geom, vs, &FeParams::default(), &mut f, &mut g, STEPS,
+                   &cfg)
+        .unwrap();
+    assert_eq!(f, f_want);
+    assert_eq!(g, g_want);
+}
+
+#[test]
+fn overlap_vs_bulk_sync_report_same_traffic() {
+    // both schedules exchange exactly the same planes: 2 moments + 4
+    // stream messages per rank per step, identical byte counts
+    let model = LatticeModel::D2Q9;
+    let geom = Geometry::new(12, 6, 1);
+    let vs = model.velset();
+    let mut traffic = vec![];
+    for overlap in [false, true] {
+        let (mut f, mut g) = initial_state(model, &geom);
+        let cfg = CommsConfig { ranks: 3, overlap,
+                                ..CommsConfig::default() };
+        let rep = run_decomposed(&geom, vs, &FeParams::default(), &mut f,
+                                 &mut g, STEPS, &cfg)
+            .unwrap();
+        for r in &rep.ranks {
+            assert_eq!(r.msgs_sent, 6 * STEPS, "overlap={overlap}");
+        }
+        traffic.push(rep.ranks.iter().map(|r| r.bytes_sent).sum::<u64>());
+    }
+    assert_eq!(traffic[0], traffic[1]);
+}
+
+#[test]
+fn wire_round_trip_preserves_halo_planes_bitwise() {
+    // the serialized plane format must be lossless for arbitrary f64
+    // payloads — the property the in-process transport exercises on
+    // every message and a socket transport will inherit
+    use targetdp::comms::{FieldId, Phase, Side, Tag};
+    let payload: Vec<f64> = (0..19 * 16)
+        .map(|i| {
+            let x = (i as f64 * 0.7351).sin() * 1e3;
+            x.powi(3) / 7.0 // irrational-looking, full-mantissa values
+        })
+        .chain([0.0, -0.0, f64::MIN_POSITIVE, f64::MAX, 1e-308])
+        .collect();
+    let msg = PlaneMsg {
+        src: 2,
+        tag: Tag {
+            step: 123_456_789,
+            phase: Phase::Stream,
+            field: FieldId::F,
+            side: Side::Low,
+        },
+        data: payload,
+    };
+    let bytes = msg.encode();
+    let back = PlaneMsg::decode(&bytes).unwrap();
+    assert_eq!(back.tag, msg.tag);
+    assert_eq!(back.src, msg.src);
+    assert_eq!(back.data.len(), msg.data.len());
+    for (k, (a, b)) in back.data.iter().zip(&msg.data).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "payload element {k}");
+    }
+}

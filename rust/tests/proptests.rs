@@ -2,9 +2,8 @@
 //! this offline environment). Each property runs over many randomized
 //! cases seeded deterministically, and failures print the seed.
 
+use targetdp::comms::{run_decomposed, CommsConfig};
 use targetdp::free_energy::symmetric::FeParams;
-use targetdp::lattice::decomp::{step_multidomain, MultiDomainScratch,
-                                SlabDecomposition};
 use targetdp::lattice::geometry::Geometry;
 use targetdp::lb::collision::{collide_lattice, collide_sites_scalar};
 use targetdp::lb::init::Rng64;
@@ -240,23 +239,17 @@ fn prop_decomposition_exact() {
             g1 = gs;
         }
 
+        // concurrent comms ranks, random count and schedule: must be
+        // *bitwise* equal to the single-domain sweep
         let ndom = 2 + (rng.next_u64() % (lx as u64 - 2)) as usize;
-        let dec = SlabDecomposition::new(geom, ndom).unwrap();
-        let mut fl = dec.scatter(&f, vs.nvel);
-        let mut gl = dec.scatter(&g, vs.nvel);
-        let mut scratch = MultiDomainScratch::new(&dec, vs.nvel);
-        for _ in 0..2 {
-            step_multidomain(&dec, vs, &p, &mut fl, &mut gl, &mut scratch,
-                             &pool, 8);
-        }
-        let f2 = dec.gather(&fl, vs.nvel);
-        let g2 = dec.gather(&gl, vs.nvel);
-        for (a, b) in f1.iter().zip(&f2) {
-            assert!((a - b).abs() < 1e-13, "case {case} ndom={ndom}");
-        }
-        for (a, b) in g1.iter().zip(&g2) {
-            assert!((a - b).abs() < 1e-13, "case {case} ndom={ndom}");
-        }
+        let overlap = rng.next_u64() % 2 == 0;
+        let cfg = CommsConfig { ranks: ndom, overlap,
+                                ..CommsConfig::default() };
+        let mut f2 = f.clone();
+        let mut g2 = g.clone();
+        run_decomposed(&geom, vs, &p, &mut f2, &mut g2, 2, &cfg).unwrap();
+        assert_eq!(f1, f2, "case {case} ndom={ndom} overlap={overlap}");
+        assert_eq!(g1, g2, "case {case} ndom={ndom} overlap={overlap}");
     }
 }
 
