@@ -11,24 +11,69 @@
 //!
 //! ```text
 //! cargo run --release --example multidomain [-- --ranks N] [--steps K]
+//!                                           [--block B]
 //! ```
 //!
 //! `--ranks N` restricts the sweep to one rank count (the CI smoke runs
-//! 2 and 4); the default sweeps 1, 2, 3, 4.
+//! 2 and 4); the default sweeps 1, 2, 3, 4. `--block B` (B > 0) drives a
+//! **resident** session in logging blocks of B steps — rank threads
+//! spawned once, a distributed observable reduction at every block
+//! boundary, state gathered only at the end — and additionally checks
+//! the reduced observables against the gathered-state reduction.
 
-use targetdp::comms::{run_decomposed, CommsConfig};
+use targetdp::comms::{run_decomposed, CommsConfig, CommsWorld,
+                      WorldReport};
 use targetdp::free_energy::symmetric::FeParams;
 use targetdp::lattice::geometry::Geometry;
+use targetdp::lb::engine::state_observables;
 use targetdp::lb::init;
 use targetdp::lb::model::d3q19;
 use targetdp::util::cli::Args;
 
+#[allow(clippy::too_many_arguments)]
+fn run_resident(geom: &Geometry, vs: &'static targetdp::lb::model::VelSet,
+                p: &FeParams, f0: &[f64], g0: &[f64], steps: u64,
+                block: u64, cfg: &CommsConfig)
+                -> (Vec<f64>, Vec<f64>, WorldReport) {
+    let n = geom.nsites();
+    let world = CommsWorld::new(*geom, cfg.clone()).expect("world");
+    let mut session = world
+        .session(vs, p, f0.to_vec(), g0.to_vec())
+        .expect("session");
+    let mut done = 0;
+    let mut last = None;
+    while done < steps {
+        let todo = block.min(steps - done);
+        session.advance(todo).expect("advance");
+        last = Some(session.observables().expect("observables"));
+        done += todo;
+    }
+    let mut f = vec![0.0; vs.nvel * n];
+    let mut g = vec![0.0; vs.nvel * n];
+    session.gather(&mut f, &mut g).expect("gather");
+    let rep = session.finish().expect("finish");
+
+    // the distributed per-block reduction must track the gathered state
+    // to summation-order rounding (Observables::from_sums contract)
+    if let Some(got) = last {
+        let want = state_observables(vs, &f, &g, n);
+        let close = |a: f64, b: f64| (a - b).abs() <= 1e-12 + 1e-9 * b.abs();
+        assert!(close(got.mass, want.mass)
+                    && close(got.phi_total, want.phi_total)
+                    && close(got.phi_variance, want.phi_variance),
+                "reduced observables diverged from the gathered state");
+    }
+    (f, g, rep)
+}
+
 fn main() {
     let args = Args::parse(std::env::args().skip(1))
-        .expect("usage: multidomain [--ranks N] [--steps K] [--threads T]");
+        .expect("usage: multidomain [--ranks N] [--steps K] [--threads T] \
+                 [--block B]");
     let only_ranks = args.usize_or("ranks", 0).unwrap();
     let steps = args.u64_or("steps", 20).unwrap();
     let threads = args.usize_or("threads", 0).unwrap(); // 0 = machine
+    let block = args.u64_or("block", 0).unwrap(); // 0 = one-shot world
 
     let vs = d3q19();
     let p = FeParams::default();
@@ -40,7 +85,12 @@ fn main() {
     init::init_spinodal(vs, &p, &geom, &mut f0, &mut g0, 0.08, 99);
 
     println!("48x16x16 D3Q19 binary fluid, {steps} steps, concurrent \
-              x-slab ranks\n");
+              x-slab ranks{}\n",
+             if block > 0 {
+                 format!(" (resident session, blocks of {block})")
+             } else {
+                 String::new()
+             });
 
     let rank_counts: Vec<usize> = if only_ranks > 0 {
         vec![only_ranks]
@@ -61,11 +111,16 @@ fn main() {
             let mode = if overlap { "overlapped" } else { "bulk-sync " };
             let cfg = CommsConfig { ranks, overlap, threads,
                                     ..CommsConfig::default() };
-            let mut f = f0.clone();
-            let mut g = g0.clone();
-            let rep = run_decomposed(&geom, vs, &p, &mut f, &mut g, steps,
-                                     &cfg)
-                .expect("decomposed run");
+            let (f, g, rep) = if block > 0 {
+                run_resident(&geom, vs, &p, &f0, &g0, steps, block, &cfg)
+            } else {
+                let mut f = f0.clone();
+                let mut g = g0.clone();
+                let rep = run_decomposed(&geom, vs, &p, &mut f, &mut g,
+                                         steps, &cfg)
+                    .expect("decomposed run");
+                (f, g, rep)
+            };
 
             let max_df = f
                 .iter()
@@ -104,5 +159,6 @@ fn main() {
               wire format move, {:.1}% of a 4-rank slab",
              100.0 * (2.0 * plane as f64) / (n as f64 / 4.0));
     println!("PASS: all rank counts and both exchange schedules \
-              bit-identical");
+              bit-identical{}",
+             if block > 0 { " across resident blocks" } else { "" });
 }

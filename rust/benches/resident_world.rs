@@ -1,0 +1,90 @@
+//! Resident vs per-block-respawn rank worlds across logging-block sizes.
+//!
+//! The PR-3 decomposed driver paid O(global state) memcpy + one thread
+//! spawn per rank at **every logging block**: each block was a one-shot
+//! `CommsWorld::run` (scatter + spawn + run + gather) followed by a
+//! full-state reduction for the observables. The resident session spawns
+//! the rank threads once, keeps the state slab-local, and reduces
+//! observables as distributed partials — per block only O(ranks) sums
+//! travel. The smaller the block (the finer the observable logging), the
+//! more the respawn overhead dominates; block = total steps makes the two
+//! nearly identical, bounding the resident fixed cost.
+//!
+//! Reports BENCH-CSV lines plus `RESIDENT-SPEEDUP` ratios (respawn mean /
+//! resident mean) for the experiment scripts.
+
+use targetdp::comms::{CommsConfig, CommsWorld};
+use targetdp::free_energy::symmetric::FeParams;
+use targetdp::lattice::geometry::Geometry;
+use targetdp::lb::engine::state_observables;
+use targetdp::lb::init;
+use targetdp::lb::model::d3q19;
+
+const STEPS: u64 = 100;
+const BLOCKS: [u64; 3] = [1, 10, 100];
+const RANKS: usize = 4;
+
+fn main() {
+    let vs = d3q19();
+    let p = FeParams::default();
+    let geom = Geometry::new(32, 16, 16);
+    let n = geom.nsites();
+    let mut f0 = vec![0.0; vs.nvel * n];
+    let mut g0 = vec![0.0; vs.nvel * n];
+    init::init_spinodal(vs, &p, &geom, &mut f0, &mut g0, 0.05, 7);
+    let cfg = CommsConfig { ranks: RANKS, threads: 0,
+                            ..CommsConfig::default() };
+    let sites = Some((n as u64 * STEPS) as f64);
+
+    let mut bench = targetdp::bench::Bench::new(
+        "resident vs per-block-respawn rank worlds, D3Q19 32x16x16");
+
+    for block in BLOCKS {
+        // resident: one session for the whole run; per block one Advance
+        // command + a distributed observable reduction
+        bench.case(&format!("resident block={block}"), sites, || {
+            let world = CommsWorld::new(geom, cfg.clone()).unwrap();
+            let mut session = world
+                .session(vs, &p, f0.clone(), g0.clone())
+                .unwrap();
+            let mut done = 0;
+            while done < STEPS {
+                let todo = block.min(STEPS - done);
+                session.advance(todo).unwrap();
+                session.observables().unwrap();
+                done += todo;
+            }
+            session.finish().unwrap();
+        });
+
+        // respawn: the per-block one-shot wrapper — every block pays the
+        // driver-side f/g copy into the session (PR 3's borrow-based
+        // scatter avoided that copy, so a slice of this gap is the
+        // wrapper's copy, the rest is thread spawn + scatter + gather),
+        // then a full-state host reduction for the observables
+        bench.case(&format!("respawn block={block}"), sites, || {
+            let world = CommsWorld::new(geom, cfg.clone()).unwrap();
+            let mut f = f0.clone();
+            let mut g = g0.clone();
+            let mut done = 0;
+            while done < STEPS {
+                let todo = block.min(STEPS - done);
+                world.run(vs, &p, &mut f, &mut g, todo).unwrap();
+                let _ = state_observables(vs, &f, &g, n);
+                done += todo;
+            }
+        });
+    }
+
+    bench.report();
+
+    println!();
+    for block in BLOCKS {
+        let resident = bench.mean_of(&format!("resident block={block}"));
+        let respawn = bench.mean_of(&format!("respawn block={block}"));
+        if let (Some(res), Some(spawn)) = (resident, respawn) {
+            println!("RESIDENT-SPEEDUP,ranks={RANKS},block={block},{:.3}",
+                     spawn / res);
+        }
+    }
+}

@@ -4,26 +4,75 @@
 //! conjunction with higher-level paradigms such as MPI" for the
 //! *inter-node* level; the follow-up paper (arXiv:1609.01479) scales that
 //! stack to thousands of GPUs with slab/pencil halo exchange as the
-//! dominant communication pattern. This module is that level: every
-//! subdomain of the x-slab decomposition becomes a **rank** running
-//! concurrently on its own thread with its own TLP pool and its own
-//! first-touch-allocated fields, exchanging serialized halo planes
-//! through a pluggable [`transport::Transport`] — in-process channels
-//! today, sockets tomorrow, the rank-side code unchanged either way.
+//! dominant communication pattern — and keeps the ranks **resident** for
+//! the whole run. This module is that level: every subdomain of the
+//! x-slab decomposition becomes a **rank** running concurrently on its
+//! own thread with its own TLP pool and its own first-touch-allocated
+//! fields, exchanging serialized halo planes through a pluggable
+//! [`transport::Transport`] — in-process channels today, sockets
+//! tomorrow, the rank-side code unchanged either way.
+//!
+//! # Session lifecycle
+//!
+//! A [`world::CommsSession`] spawns the rank threads **once per run**
+//! ([`world::CommsWorld::session`]); each rank scatters its own planes
+//! out of the initial state, then serves a command loop until `Shutdown`,
+//! pausing at the command barrier between logging blocks:
+//!
+//! ```text
+//! driver (controller endpoint)          resident ranks (one thread each)
+//! ─────────────────────────────         ─────────────────────────────────
+//! session()                             allocate + scatter (first touch),
+//!                                       park at the command barrier
+//! advance(steps)     ── Advance ──►     step `steps` times (halo
+//!                                       exchange rank↔rank, overlapped)
+//! observables()      ── Observables ─►  reduce own interior
+//!        ◄── Partials (O(1) sums) ──    (targetdp::reduce), stay put
+//! gather(f, g)       ── Gather ──►      ship interior f, g
+//!        ◄── Interior x2 ──
+//! gather_phi()       ── GatherPhi ──►   fresh phi from g, own pool/VVL
+//!        ◄── Interior(phi) ──
+//! finish()           ── Shutdown ──►    send lifetime Report, exit
+//!        ◄── Report ──                  (threads joined)
+//! ```
+//!
+//! Between blocks **no global f/g state moves**: per-block observables
+//! are distributed reductions (each rank's exact interior sums, combined
+//! in rank order — the `MPI_Allreduce` shape), and the full state is
+//! gathered only at the end or for an explicit VTK snapshot. The one-shot
+//! [`world::CommsWorld::run`] / [`world::run_decomposed`] entry points
+//! are thin wrappers: session + one `Advance` + `Gather` + `finish`.
+//!
+//! # Wire frames
+//!
+//! Everything — halo planes *and* the control plane — travels as
+//! self-describing byte frames ([`wire::Frame`]), so the protocol is
+//! transport-agnostic and a socket transport drops in by moving bytes:
+//!
+//! | frame                  | direction        | carries                            |
+//! |------------------------|------------------|------------------------------------|
+//! | [`wire::PlaneMsg`]     | rank ↔ rank      | one tagged halo x-plane            |
+//! | [`wire::Command`]      | driver → rank    | `Advance{steps}` / `Observables` / `Gather` / `GatherPhi` / `Shutdown` |
+//! | [`wire::PartialObs`]   | rank → driver    | interior mass/momentum/phi/phi² sums |
+//! | [`wire::InteriorMsg`]  | rank → driver    | packed interior of f, g or phi     |
+//! | [`wire::ReportMsg`]    | rank → driver    | lifetime timing/traffic totals     |
 //!
 //! Concept map for readers coming from MPI:
 //!
 //! | here                                  | MPI                                    |
 //! |---------------------------------------|----------------------------------------|
 //! | [`world::CommsWorld`]                 | `MPI_COMM_WORLD` + `mpirun -np N`      |
+//! | [`world::CommsSession`]               | resident ranks + the driver rank       |
 //! | [`world::Rank`], `rank`/`nranks`      | rank, `MPI_Comm_rank`/`MPI_Comm_size`  |
 //! | [`world::Rank::isend`]                | `MPI_Isend` (returns once buffered)    |
 //! | [`world::Rank::wait`]                 | posted `MPI_Irecv` + `MPI_Wait`        |
 //! | the per-exchange pair of `wait` calls | `MPI_Waitall` on the recv requests     |
+//! | [`world::CommsSession::observables`]  | `MPI_Reduce` of per-rank partials      |
+//! | [`world::CommsSession::gather`]       | `MPI_Gather` of the distributed state  |
 //! | [`wire::Tag`] matching                | `(source, tag, comm)` envelope match   |
 //! | `Rank`'s pending-frame map            | the unexpected-message queue           |
 //! | [`transport::ChannelTransport`]       | a shared-memory BTL                    |
-//! | [`wire::PlaneMsg`] byte frames        | the network wire format                |
+//! | [`wire::Frame`] byte frames           | the network wire format                |
 //! | halo `pack_x_plane`/`unpack_x_plane`  | derived-datatype pack/unpack           |
 //!
 //! The point of the subsystem is **communication/computation overlap**
@@ -34,13 +83,21 @@
 //! driven by the `StreamTable` boundary/interior exception lists. The
 //! bulk-synchronous schedule is kept as a config toggle and is
 //! bit-identical (as is the single-domain path; `tests/comms_parity.rs`
-//! pins both, and `benches/halo_overlap.rs` measures the difference).
+//! and `tests/resident_world.rs` pin both, `benches/halo_overlap.rs` and
+//! `benches/resident_world.rs` measure the difference).
+//!
+//! Remaining for the socket transport follow-up (ROADMAP): implement
+//! [`transport::Transport`]'s three byte-level methods over TCP and a
+//! rank-launcher CLI. The session control frames already travel as wire
+//! bytes through the same transport as the halo planes, so the resident
+//! protocol carries over unchanged.
 
 pub mod transport;
 pub mod wire;
 pub mod world;
 
 pub use transport::{ChannelTransport, Transport};
-pub use wire::{FieldId, Phase, PlaneMsg, Side, Tag};
-pub use world::{run_decomposed, CommsConfig, CommsWorld, Rank, RankReport,
-                WorldReport};
+pub use wire::{Command, FieldId, Frame, InteriorField, InteriorMsg,
+               PartialObs, Phase, PlaneMsg, ReportMsg, Side, Tag};
+pub use world::{run_decomposed, CommsConfig, CommsSession, CommsWorld,
+                Rank, RankReport, WorldReport};

@@ -1,16 +1,24 @@
-//! Pluggable rank-to-rank transports.
+//! Pluggable endpoint-to-endpoint transports.
 //!
-//! A [`Transport`] is one rank's endpoint into the communication fabric —
+//! A [`Transport`] is one endpoint's port into the communication fabric —
 //! the role MPI's BTL/PML stack plays under `MPI_Isend`/`MPI_Recv`. The
-//! contract is deliberately minimal and byte-oriented: addressed,
-//! non-blocking sends of encoded [`PlaneMsg`] frames, and a blocking
-//! receive of the next frame addressed to this rank. Ordering is only
+//! contract is deliberately minimal and **byte-oriented**: addressed,
+//! non-blocking sends of encoded [`Frame`] bytes, and a blocking receive
+//! of the next frame addressed to this endpoint. Ordering is only
 //! guaranteed *per sender pair* (like MPI's non-overtaking rule); message
-//! matching by [`crate::comms::wire::Tag`] happens one layer up in
+//! matching by [`crate::comms::wire::Tag`] — and command sequencing for
+//! resident sessions — happens one layer up in
 //! [`crate::comms::world::Rank`].
 //!
-//! [`ChannelTransport`] is the in-process implementation: every rank runs
-//! on its own OS thread and frames travel through `std::sync::mpsc`
+//! Endpoints are the `nranks` compute ranks plus, for resident sessions,
+//! one **controller** (the driver thread) addressed as endpoint id
+//! `nranks`. Halo planes flow rank↔rank; command/partials/interior/report
+//! frames flow controller↔rank. All of them are encoded wire bytes, so a
+//! socket transport carries the whole session protocol by implementing
+//! the three byte-level methods — the control plane needs nothing extra.
+//!
+//! [`ChannelTransport`] is the in-process implementation: every endpoint
+//! runs on its own OS thread and frames travel through `std::sync::mpsc`
 //! channels (the shared-memory BTL analog). It still moves *encoded
 //! bytes*, not structs, so every run exercises the exact frames a socket
 //! transport would put on a TCP stream — dropping in a remote transport
@@ -19,55 +27,93 @@
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::time::Duration;
 
-use crate::comms::wire::{PlaneMsg, Tag};
+use crate::comms::wire::{Frame, PlaneMsg, Tag};
 use crate::error::{Error, Result};
 
-/// One rank's endpoint into the communication fabric.
+/// One endpoint's port into the communication fabric.
 pub trait Transport: Send {
-    /// This endpoint's rank id.
+    /// This endpoint's id (compute ranks are `0..nranks()`; a session
+    /// controller is `nranks()`).
     fn rank(&self) -> usize;
-    /// Number of ranks in the world (`MPI_Comm_size`).
+    /// Number of compute ranks in the world (`MPI_Comm_size`; the
+    /// controller endpoint is *not* counted).
     fn nranks(&self) -> usize;
-    /// Non-blocking addressed send (`MPI_Isend`): encode one tagged plane
-    /// for `dst` and return immediately — the frame is built straight
-    /// from the borrowed payload, no owned message needs to exist on the
-    /// sender side. Self-sends (`dst == rank()`) are legal — a 1-rank
-    /// world talks to itself across the periodic seam.
+    /// Non-blocking addressed send of one encoded frame (`MPI_Isend`):
+    /// the transport owns the bytes as soon as this returns. Self-sends
+    /// (`dst == rank()`) are legal only in a 1-rank world, which talks to
+    /// itself across the periodic seam.
+    fn send_bytes(&mut self, dst: usize, frame: Vec<u8>) -> Result<()>;
+    /// Blocking receive of the next frame's bytes addressed to this
+    /// endpoint, in per-sender arrival order.
+    fn recv_bytes(&mut self) -> Result<Vec<u8>>;
+    /// Like [`Transport::recv_bytes`] but gives up after `timeout`,
+    /// returning `Ok(None)` — the hook [`crate::comms::world::Rank`] uses
+    /// to turn a lost peer into an error instead of a hung world.
+    fn recv_bytes_timeout(&mut self, timeout: Duration)
+                          -> Result<Option<Vec<u8>>>;
+
+    /// Encode and send one tagged halo plane straight from a borrowed
+    /// payload — the only copy on the send hot path.
     fn send_plane(&mut self, dst: usize, src: u32, tag: Tag, data: &[f64])
-                  -> Result<()>;
-    /// Send an owned [`PlaneMsg`] (convenience over
-    /// [`Transport::send_plane`]).
-    fn send(&mut self, dst: usize, msg: &PlaneMsg) -> Result<()> {
-        self.send_plane(dst, msg.src, msg.tag, &msg.data)
+                  -> Result<()> {
+        self.send_bytes(dst, PlaneMsg::encode_from(src, tag, data))
     }
-    /// Blocking receive of the next frame addressed to this rank, in
-    /// per-sender arrival order.
-    fn recv(&mut self) -> Result<PlaneMsg>;
-    /// Like [`Transport::recv`] but gives up after `timeout`, returning
-    /// `Ok(None)` — the hook [`crate::comms::world::Rank::wait`] uses to
-    /// turn a lost neighbour into an error instead of a hung world.
-    fn recv_timeout(&mut self, timeout: Duration) -> Result<Option<PlaneMsg>>;
+
+    /// Encode and send any [`Frame`] (commands, partials, interiors,
+    /// reports).
+    fn send_frame(&mut self, dst: usize, frame: &Frame) -> Result<()> {
+        self.send_bytes(dst, frame.encode())
+    }
+
+    /// Blocking receive of the next decoded [`Frame`].
+    fn recv(&mut self) -> Result<Frame> {
+        Frame::decode(&self.recv_bytes()?)
+    }
+
+    /// Timed receive of the next decoded [`Frame`].
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<Option<Frame>> {
+        match self.recv_bytes_timeout(timeout)? {
+            Some(bytes) => Frame::decode(&bytes).map(Some),
+            None => Ok(None),
+        }
+    }
 }
 
-/// In-process transport: one mpsc inbox per rank, frames as encoded bytes.
+/// In-process transport: one mpsc inbox per endpoint, frames as encoded
+/// bytes.
 pub struct ChannelTransport {
     rank: usize,
     nranks: usize,
-    /// Senders to every rank. For `nranks > 1` the slot for *this* rank
-    /// is `None`: the slab ring never self-sends then, and holding our
-    /// own `Sender` would keep our inbox "connected" even after every
-    /// real peer died — dropping it makes a dead 2-rank world surface as
-    /// `Disconnected` immediately instead of waiting out a full recv
-    /// timeout.
+    /// Senders to every endpoint. The slot for *this* endpoint is `None`
+    /// unless it is the single rank of a 1-rank world (which self-sends
+    /// across the periodic seam): holding our own `Sender` would keep our
+    /// inbox "connected" even after every real peer died — dropping it
+    /// makes a dead world surface as `Disconnected` as soon as the last
+    /// real sender goes away instead of waiting out a full recv timeout.
     peers: Vec<Option<Sender<Vec<u8>>>>,
     inbox: Receiver<Vec<u8>>,
 }
 
 impl ChannelTransport {
-    /// Build a fully connected world of `nranks` endpoints.
+    /// Build a fully connected world of `nranks` rank endpoints (no
+    /// controller).
     pub fn mesh(nranks: usize) -> Vec<ChannelTransport> {
+        Self::build(nranks, nranks)
+    }
+
+    /// Build a world of `nranks` rank endpoints plus one controller
+    /// endpoint (id `nranks`) for a resident session's driver thread.
+    pub fn mesh_with_controller(nranks: usize)
+                                -> (Vec<ChannelTransport>, ChannelTransport)
+    {
+        let mut eps = Self::build(nranks + 1, nranks);
+        let controller = eps.pop().expect("controller endpoint exists");
+        (eps, controller)
+    }
+
+    fn build(endpoints: usize, nranks: usize) -> Vec<ChannelTransport> {
         let (senders, inboxes): (Vec<_>, Vec<_>) =
-            (0..nranks).map(|_| channel::<Vec<u8>>()).unzip();
+            (0..endpoints).map(|_| channel::<Vec<u8>>()).unzip();
         inboxes
             .into_iter()
             .enumerate()
@@ -78,7 +124,9 @@ impl ChannelTransport {
                     .iter()
                     .enumerate()
                     .map(|(dst, s)| {
-                        (nranks == 1 || dst != rank).then(|| s.clone())
+                        let keep = dst != rank
+                            || (nranks == 1 && rank < nranks);
+                        keep.then(|| s.clone())
                     })
                     .collect(),
                 inbox,
@@ -96,37 +144,35 @@ impl Transport for ChannelTransport {
         self.nranks
     }
 
-    fn send_plane(&mut self, dst: usize, src: u32, tag: Tag, data: &[f64])
-                  -> Result<()> {
+    fn send_bytes(&mut self, dst: usize, frame: Vec<u8>) -> Result<()> {
         let peer = self
             .peers
             .get(dst)
             .and_then(Option::as_ref)
             .ok_or_else(|| {
                 Error::Invalid(format!(
-                    "comms: send to rank {dst} of {} (self-sends only \
-                     exist in a 1-rank world)",
+                    "comms: send to endpoint {dst} of a {}-rank world \
+                     (self-sends only exist in a 1-rank world)",
                     self.nranks
                 ))
             })?;
-        peer.send(PlaneMsg::encode_from(src, tag, data)).map_err(|_| {
-            Error::Invalid(format!("comms: rank {dst} hung up"))
+        peer.send(frame).map_err(|_| {
+            Error::Invalid(format!("comms: endpoint {dst} hung up"))
         })
     }
 
-    fn recv(&mut self) -> Result<PlaneMsg> {
-        let bytes = self.inbox.recv().map_err(|_| {
+    fn recv_bytes(&mut self) -> Result<Vec<u8>> {
+        self.inbox.recv().map_err(|_| {
             Error::Invalid(
                 "comms: all peers hung up while receiving".to_string(),
             )
-        })?;
-        PlaneMsg::decode(&bytes)
+        })
     }
 
-    fn recv_timeout(&mut self, timeout: Duration)
-                    -> Result<Option<PlaneMsg>> {
+    fn recv_bytes_timeout(&mut self, timeout: Duration)
+                          -> Result<Option<Vec<u8>>> {
         match self.inbox.recv_timeout(timeout) {
-            Ok(bytes) => PlaneMsg::decode(&bytes).map(Some),
+            Ok(bytes) => Ok(Some(bytes)),
             Err(RecvTimeoutError::Timeout) => Ok(None),
             Err(RecvTimeoutError::Disconnected) => Err(Error::Invalid(
                 "comms: all peers hung up while receiving".to_string(),
@@ -138,7 +184,7 @@ impl Transport for ChannelTransport {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::comms::wire::{FieldId, Phase, Side, Tag};
+    use crate::comms::wire::{Command, FieldId, Phase, Side, Tag};
 
     fn msg(src: u32, step: u64, data: Vec<f64>) -> PlaneMsg {
         PlaneMsg {
@@ -153,6 +199,13 @@ mod tests {
         }
     }
 
+    fn recv_plane(t: &mut ChannelTransport) -> PlaneMsg {
+        match t.recv().unwrap() {
+            Frame::Plane(m) => m,
+            other => panic!("expected a plane, got {other:?}"),
+        }
+    }
+
     #[test]
     fn mesh_delivers_across_threads() {
         let mut world = ChannelTransport::mesh(3);
@@ -162,11 +215,12 @@ mod tests {
         let mut r1 = world.pop().unwrap();
         let mut r0 = world.pop().unwrap();
         let t = std::thread::spawn(move || {
-            r1.send(2, &msg(1, 7, vec![1.0, 2.0])).unwrap();
-            r1.recv().unwrap()
+            r1.send_frame(2, &Frame::Plane(msg(1, 7, vec![1.0, 2.0])))
+                .unwrap();
+            recv_plane(&mut r1)
         });
-        r0.send(1, &msg(0, 9, vec![-4.0])).unwrap();
-        let got2 = r2.recv().unwrap();
+        r0.send_frame(1, &Frame::Plane(msg(0, 9, vec![-4.0]))).unwrap();
+        let got2 = recv_plane(&mut r2);
         assert_eq!(got2.src, 1);
         assert_eq!(got2.data, vec![1.0, 2.0]);
         let got1 = t.join().unwrap();
@@ -178,8 +232,8 @@ mod tests {
     fn self_send_loops_back() {
         let mut world = ChannelTransport::mesh(1);
         let mut r0 = world.pop().unwrap();
-        r0.send(0, &msg(0, 3, vec![0.5])).unwrap();
-        let got = r0.recv().unwrap();
+        r0.send_frame(0, &Frame::Plane(msg(0, 3, vec![0.5]))).unwrap();
+        let got = recv_plane(&mut r0);
         assert_eq!(got.tag.step, 3);
         assert_eq!(got.data, vec![0.5]);
     }
@@ -188,10 +242,11 @@ mod tests {
     fn out_of_range_destination_rejected() {
         let mut world = ChannelTransport::mesh(2);
         let mut r0 = world.remove(0);
-        assert!(r0.send(5, &msg(0, 0, vec![])).is_err());
+        let m = Frame::Plane(msg(0, 0, vec![]));
+        assert!(r0.send_frame(5, &m).is_err());
         // multi-rank worlds never self-send (the slab ring has distinct
         // neighbours), and the dropped self-Sender makes it an error
-        assert!(r0.send(0, &msg(0, 0, vec![])).is_err());
+        assert!(r0.send_frame(0, &m).is_err());
     }
 
     #[test]
@@ -204,5 +259,54 @@ mod tests {
         assert!(r1
             .recv_timeout(Duration::from_secs(30))
             .is_err());
+    }
+
+    #[test]
+    fn controller_mesh_routes_commands_and_responses() {
+        let (mut ranks, mut ctl) = ChannelTransport::mesh_with_controller(2);
+        assert_eq!(ctl.rank(), 2, "controller id is nranks");
+        assert_eq!(ctl.nranks(), 2);
+        assert_eq!(ranks.len(), 2);
+        assert_eq!(ranks[0].nranks(), 2);
+
+        // controller → rank 1: a command
+        ctl.send_frame(1, &Frame::Command(Command::Advance { steps: 4 }))
+            .unwrap();
+        match ranks[1].recv().unwrap() {
+            Frame::Command(Command::Advance { steps }) => {
+                assert_eq!(steps, 4)
+            }
+            other => panic!("expected a command, got {other:?}"),
+        }
+        // rank 0 → controller (endpoint id nranks): a halo-style frame
+        ranks[0]
+            .send_frame(2, &Frame::Plane(msg(0, 1, vec![9.0])))
+            .unwrap();
+        let got = match ctl.recv().unwrap() {
+            Frame::Plane(m) => m,
+            other => panic!("expected a plane, got {other:?}"),
+        };
+        assert_eq!(got.src, 0);
+        // ranks still talk to each other directly
+        ranks[0]
+            .send_frame(1, &Frame::Plane(msg(0, 2, vec![1.0])))
+            .unwrap();
+        match ranks[1].recv().unwrap() {
+            Frame::Plane(m) => assert_eq!(m.tag.step, 2),
+            other => panic!("expected a plane, got {other:?}"),
+        }
+        // the controller never self-sends
+        assert!(ctl
+            .send_frame(2, &Frame::Command(Command::Shutdown))
+            .is_err());
+    }
+
+    #[test]
+    fn one_rank_world_with_controller_keeps_self_seam() {
+        let (mut ranks, _ctl) = ChannelTransport::mesh_with_controller(1);
+        let mut r0 = ranks.pop().unwrap();
+        // the single rank still self-sends across the periodic seam
+        r0.send_frame(0, &Frame::Plane(msg(0, 0, vec![2.0]))).unwrap();
+        assert_eq!(recv_plane(&mut r0).data, vec![2.0]);
     }
 }

@@ -1,40 +1,63 @@
-//! Serialized halo-plane wire format.
+//! Serialized wire format for the rank world: halo planes, session
+//! commands, and distributed-reduction frames.
 //!
-//! Every message between ranks is one x-plane of one SoA field, tagged
-//! with enough metadata for the receiver to match it against the exchange
-//! it is waiting on — the envelope an MPI implementation carries as
-//! `(source, tag, communicator)`. Payload doubles travel as little-endian
-//! `f64::to_le_bytes` images, so a decoded plane is **bit-identical** to
-//! the sent one: the multidomain parity guarantee survives serialization.
+//! Every message between endpoints is one self-describing **frame**.
+//! Payload doubles travel as little-endian `f64::to_le_bytes` images, so a
+//! decoded plane is **bit-identical** to the sent one: the multidomain
+//! parity guarantee survives serialization. Decoding is strict — magic,
+//! version, kind, enum ranges and exact lengths are all validated, because
+//! a socket transport feeds this arbitrary bytes.
 //!
 //! The in-process [`crate::comms::transport::ChannelTransport`] ships
 //! these exact bytes through channels, so the wire format is exercised on
 //! every run; a socket transport writes the same frames to a TCP stream
-//! (ROADMAP follow-up).
+//! (ROADMAP follow-up). The control plane (commands, partial-observable
+//! sums, interior payloads, rank reports) uses the *same* framing as the
+//! halo planes, so a resident session spanning real processes needs no new
+//! message types — only a transport that moves bytes.
 //!
-//! Frame layout (all integers little-endian):
+//! Common prelude (all integers little-endian):
 //!
 //! ```text
 //! offset  size  field
 //!      0     4  magic  "TDPW"
-//!      4     1  version (1)
-//!      5     1  phase   (0 = Moments, 1 = Stream)
-//!      6     1  field   (0 = F, 1 = G)
-//!      7     1  side    (0 = Low halo, 1 = High halo, at the receiver)
-//!      8     4  src rank
-//!     12     8  step index
-//!     20     4  payload element count
-//!     24  8*ec  payload (f64 LE)
+//!      4     1  version (2)
+//!      5     1  kind    (0 Plane, 1 Command, 2 Partials, 3 Interior,
+//!                        4 Report)
+//! ```
+//!
+//! Kind-specific layouts (offsets continue from the prelude):
+//!
+//! ```text
+//! Plane    6 phase(1)  7 field(1)  8 side(1)  9 src(4)  13 step(8)
+//!          21 count(4)  25 payload(8*count)
+//! Command  6 op(1)  7 arg(8)            [op: 0 Advance, 1 Observables,
+//!                                        2 Gather, 3 GatherPhi,
+//!                                        4 Shutdown; arg = steps]
+//! Partials 6 src(4)  10 steps(8)  18 sites(8)  26 mass(8)
+//!          34 momentum(24)  58 phi_total(8)  66 phi_sq(8)
+//! Interior 6 field(1)  7 src(4)  11 count(4)  15 payload(8*count)
+//!          [field: 0 F, 1 G, 2 Phi]
+//! Report   6 src(4)  10 interior_sites(8)  18 steps(8)  26 compute_s(8)
+//!          34 wait_s(8)  42 idle_s(8)  50 bytes_sent(8)  58 msgs_sent(8)
 //! ```
 
 use crate::error::{Error, Result};
 
 /// Frame magic: "targetDP wire".
 pub const MAGIC: [u8; 4] = *b"TDPW";
-/// Wire format version.
-pub const VERSION: u8 = 1;
-/// Fixed header size in bytes.
-pub const HEADER_LEN: usize = 24;
+/// Wire format version (2: multi-kind frames for resident sessions).
+pub const VERSION: u8 = 2;
+/// Fixed header size of a [`PlaneMsg`] frame in bytes.
+pub const PLANE_HEADER_LEN: usize = 25;
+/// Fixed header size of an [`InteriorMsg`] frame in bytes.
+pub const INTERIOR_HEADER_LEN: usize = 15;
+
+const KIND_PLANE: u8 = 0;
+const KIND_COMMAND: u8 = 1;
+const KIND_PARTIALS: u8 = 2;
+const KIND_INTERIOR: u8 = 3;
+const KIND_REPORT: u8 = 4;
 
 /// Which of the two per-step exchanges a plane belongs to.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -85,10 +108,100 @@ pub struct PlaneMsg {
     pub data: Vec<f64>,
 }
 
+/// Driver → rank session command. Broadcast by the controller; each rank
+/// executes commands strictly in arrival order (the transport's
+/// per-sender-pair ordering guarantee), so no sequence numbers are
+/// needed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Command {
+    /// Step the local slab `steps` more timesteps.
+    Advance { steps: u64 },
+    /// Reply with a [`PartialObs`] reduction of the current interior.
+    Observables,
+    /// Reply with two [`InteriorMsg`] frames: the interior `f` then `g`.
+    Gather,
+    /// Reply with one [`InteriorMsg`] frame carrying the interior phi
+    /// field (recomputed from the current `g` with the rank's own pool).
+    GatherPhi,
+    /// Send a final [`ReportMsg`] and exit the rank thread.
+    Shutdown,
+}
+
+/// Rank → driver partial observable sums over this rank's interior.
+/// Exact per-rank sums; the controller combines them in rank order, so
+/// the result is deterministic (though the summation order differs from a
+/// single global sweep — see `Observables::from_sums`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PartialObs {
+    pub src: u32,
+    /// Steps completed when the reduction ran (protocol sanity check).
+    pub steps: u64,
+    /// Interior sites reduced over.
+    pub sites: u64,
+    pub mass: f64,
+    pub momentum: [f64; 3],
+    pub phi_total: f64,
+    /// Sum of phi^2 over interior sites (for the variance).
+    pub phi_sq: f64,
+}
+
+/// Which field an [`InteriorMsg`] carries (distinct from the plane
+/// [`FieldId`] because gathers also move the derived phi field).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InteriorField {
+    F = 0,
+    G = 1,
+    Phi = 2,
+}
+
+/// Rank → driver interior payload: the rank's owned planes of one field,
+/// SoA component-major, halos excluded (`ncomp * lxl * plane` doubles).
+#[derive(Debug, Clone, PartialEq)]
+pub struct InteriorMsg {
+    pub src: u32,
+    pub field: InteriorField,
+    pub data: Vec<f64>,
+}
+
+/// Rank → driver final timing/traffic report (sent on `Shutdown`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ReportMsg {
+    pub src: u32,
+    pub interior_sites: u64,
+    pub steps: u64,
+    pub compute_s: f64,
+    pub wait_s: f64,
+    pub idle_s: f64,
+    pub bytes_sent: u64,
+    pub msgs_sent: u64,
+}
+
+/// Any frame on the wire.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    Plane(PlaneMsg),
+    Command(Command),
+    Partials(PartialObs),
+    Interior(InteriorMsg),
+    Report(ReportMsg),
+}
+
+fn prelude(out: &mut Vec<u8>, kind: u8) {
+    out.extend_from_slice(&MAGIC);
+    out.push(VERSION);
+    out.push(kind);
+}
+
+fn push_f64s(out: &mut Vec<u8>, data: &[f64]) {
+    for v in data {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
 impl PlaneMsg {
     /// Encoded frame size for a payload of `count` doubles.
     pub fn frame_len(count: usize) -> usize {
-        HEADER_LEN + 8 * count
+        PLANE_HEADER_LEN + 8 * count
     }
 
     /// Serialize to the wire frame.
@@ -101,76 +214,287 @@ impl PlaneMsg {
     /// with an owned `Vec<f64>` needs to exist on the sender side).
     pub fn encode_from(src: u32, tag: Tag, data: &[f64]) -> Vec<u8> {
         let mut out = Vec::with_capacity(Self::frame_len(data.len()));
-        out.extend_from_slice(&MAGIC);
-        out.push(VERSION);
+        prelude(&mut out, KIND_PLANE);
         out.push(tag.phase as u8);
         out.push(tag.field as u8);
         out.push(tag.side as u8);
         out.extend_from_slice(&src.to_le_bytes());
         out.extend_from_slice(&tag.step.to_le_bytes());
         out.extend_from_slice(&(data.len() as u32).to_le_bytes());
-        for v in data {
-            out.extend_from_slice(&v.to_le_bytes());
-        }
+        push_f64s(&mut out, data);
         out
     }
 
-    /// Parse a wire frame (strict: magic, version, enum ranges and exact
-    /// length are all validated — a socket transport feeds this arbitrary
-    /// bytes).
+    /// Parse a wire frame, requiring it to be a halo plane.
     pub fn decode(bytes: &[u8]) -> Result<PlaneMsg> {
-        let bad = |m: String| Error::Invalid(format!("comms wire: {m}"));
-        if bytes.len() < HEADER_LEN {
-            return Err(bad(format!("frame too short ({} B)", bytes.len())));
+        match Frame::decode(bytes)? {
+            Frame::Plane(msg) => Ok(msg),
+            other => Err(Error::Invalid(format!(
+                "comms wire: expected a halo plane, got {other:?}"
+            ))),
         }
-        if bytes[..4] != MAGIC {
-            return Err(bad(format!("bad magic {:02x?}", &bytes[..4])));
+    }
+}
+
+impl Command {
+    fn encode(&self) -> Vec<u8> {
+        let (op, arg): (u8, u64) = match *self {
+            Command::Advance { steps } => (0, steps),
+            Command::Observables => (1, 0),
+            Command::Gather => (2, 0),
+            Command::GatherPhi => (3, 0),
+            Command::Shutdown => (4, 0),
+        };
+        let mut out = Vec::with_capacity(15);
+        prelude(&mut out, KIND_COMMAND);
+        out.push(op);
+        out.extend_from_slice(&arg.to_le_bytes());
+        out
+    }
+}
+
+impl InteriorMsg {
+    fn encode(&self) -> Vec<u8> {
+        let mut out =
+            Vec::with_capacity(INTERIOR_HEADER_LEN + 8 * self.data.len());
+        prelude(&mut out, KIND_INTERIOR);
+        out.push(self.field as u8);
+        out.extend_from_slice(&self.src.to_le_bytes());
+        out.extend_from_slice(&(self.data.len() as u32).to_le_bytes());
+        push_f64s(&mut out, &self.data);
+        out
+    }
+}
+
+impl PartialObs {
+    fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(74);
+        prelude(&mut out, KIND_PARTIALS);
+        out.extend_from_slice(&self.src.to_le_bytes());
+        out.extend_from_slice(&self.steps.to_le_bytes());
+        out.extend_from_slice(&self.sites.to_le_bytes());
+        out.extend_from_slice(&self.mass.to_le_bytes());
+        push_f64s(&mut out, &self.momentum);
+        out.extend_from_slice(&self.phi_total.to_le_bytes());
+        out.extend_from_slice(&self.phi_sq.to_le_bytes());
+        out
+    }
+}
+
+impl ReportMsg {
+    fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(66);
+        prelude(&mut out, KIND_REPORT);
+        out.extend_from_slice(&self.src.to_le_bytes());
+        out.extend_from_slice(&self.interior_sites.to_le_bytes());
+        out.extend_from_slice(&self.steps.to_le_bytes());
+        out.extend_from_slice(&self.compute_s.to_le_bytes());
+        out.extend_from_slice(&self.wait_s.to_le_bytes());
+        out.extend_from_slice(&self.idle_s.to_le_bytes());
+        out.extend_from_slice(&self.bytes_sent.to_le_bytes());
+        out.extend_from_slice(&self.msgs_sent.to_le_bytes());
+        out
+    }
+}
+
+/// Strict bounds-checked reader over a received frame.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self.pos.checked_add(n).filter(|&e| e <= self.buf.len());
+        match end {
+            Some(end) => {
+                let s = &self.buf[self.pos..end];
+                self.pos = end;
+                Ok(s)
+            }
+            None => Err(Error::Invalid(format!(
+                "comms wire: frame truncated at byte {} (want {n} more \
+                 of {})",
+                self.pos,
+                self.buf.len()
+            ))),
         }
-        if bytes[4] != VERSION {
-            return Err(bad(format!(
-                "version {} (want {VERSION})", bytes[4]
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// Exactly `count` doubles which must exhaust the frame.
+    fn f64_tail(&mut self, count: usize) -> Result<Vec<f64>> {
+        let want = count.checked_mul(8).ok_or_else(|| {
+            Error::Invalid("comms wire: payload count overflows".into())
+        })?;
+        if self.buf.len() - self.pos != want {
+            return Err(Error::Invalid(format!(
+                "comms wire: length {} != header + {count} doubles",
+                self.buf.len()
             )));
         }
-        let phase = match bytes[5] {
-            0 => Phase::Moments,
-            1 => Phase::Stream,
-            v => return Err(bad(format!("unknown phase {v}"))),
-        };
-        let field = match bytes[6] {
-            0 => FieldId::F,
-            1 => FieldId::G,
-            v => return Err(bad(format!("unknown field {v}"))),
-        };
-        let side = match bytes[7] {
-            0 => Side::Low,
-            1 => Side::High,
-            v => return Err(bad(format!("unknown side {v}"))),
-        };
-        let le32 = |o: usize| {
-            u32::from_le_bytes(bytes[o..o + 4].try_into().unwrap())
-        };
-        let src = le32(8);
-        let step = u64::from_le_bytes(bytes[12..20].try_into().unwrap());
-        let count = le32(20) as usize;
-        // checked: an arbitrary (socket-fed) count must not overflow the
-        // expected-length computation on 32-bit targets
-        let expected = count
-            .checked_mul(8)
-            .and_then(|p| p.checked_add(HEADER_LEN));
-        if expected != Some(bytes.len()) {
-            return Err(bad(format!(
-                "length {} != header + {count} doubles", bytes.len()
-            )));
-        }
-        let data = bytes[HEADER_LEN..]
+        let data = self.take(want)?;
+        Ok(data
             .chunks_exact(8)
             .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
-            .collect();
-        Ok(PlaneMsg {
-            src,
-            tag: Tag { step, phase, field, side },
-            data,
-        })
+            .collect())
+    }
+
+    /// The frame must end exactly here.
+    fn done(&self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            return Err(Error::Invalid(format!(
+                "comms wire: {} trailing bytes after a complete frame",
+                self.buf.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+impl Frame {
+    /// Serialize any frame to its wire bytes.
+    pub fn encode(&self) -> Vec<u8> {
+        match self {
+            Frame::Plane(m) => m.encode(),
+            Frame::Command(c) => c.encode(),
+            Frame::Partials(p) => p.encode(),
+            Frame::Interior(i) => i.encode(),
+            Frame::Report(r) => r.encode(),
+        }
+    }
+
+    /// Parse a wire frame (strict: magic, version, kind, enum ranges and
+    /// exact length are all validated — a socket transport feeds this
+    /// arbitrary bytes).
+    pub fn decode(bytes: &[u8]) -> Result<Frame> {
+        let bad = |m: String| Error::Invalid(format!("comms wire: {m}"));
+        let mut r = Reader::new(bytes);
+        if r.take(4)? != &MAGIC[..] {
+            return Err(bad(format!("bad magic {:02x?}", &bytes[..4])));
+        }
+        let version = r.u8()?;
+        if version != VERSION {
+            return Err(bad(format!("version {version} (want {VERSION})")));
+        }
+        match r.u8()? {
+            KIND_PLANE => {
+                let phase = match r.u8()? {
+                    0 => Phase::Moments,
+                    1 => Phase::Stream,
+                    v => return Err(bad(format!("unknown phase {v}"))),
+                };
+                let field = match r.u8()? {
+                    0 => FieldId::F,
+                    1 => FieldId::G,
+                    v => return Err(bad(format!("unknown field {v}"))),
+                };
+                let side = match r.u8()? {
+                    0 => Side::Low,
+                    1 => Side::High,
+                    v => return Err(bad(format!("unknown side {v}"))),
+                };
+                let src = r.u32()?;
+                let step = r.u64()?;
+                let count = r.u32()? as usize;
+                let data = r.f64_tail(count)?;
+                Ok(Frame::Plane(PlaneMsg {
+                    src,
+                    tag: Tag { step, phase, field, side },
+                    data,
+                }))
+            }
+            KIND_COMMAND => {
+                let op = r.u8()?;
+                let arg = r.u64()?;
+                r.done()?;
+                let cmd = match op {
+                    0 => Command::Advance { steps: arg },
+                    1 => Command::Observables,
+                    2 => Command::Gather,
+                    3 => Command::GatherPhi,
+                    4 => Command::Shutdown,
+                    v => return Err(bad(format!("unknown command {v}"))),
+                };
+                Ok(Frame::Command(cmd))
+            }
+            KIND_PARTIALS => {
+                let src = r.u32()?;
+                let steps = r.u64()?;
+                let sites = r.u64()?;
+                let mass = r.f64()?;
+                let momentum = [r.f64()?, r.f64()?, r.f64()?];
+                let phi_total = r.f64()?;
+                let phi_sq = r.f64()?;
+                r.done()?;
+                Ok(Frame::Partials(PartialObs {
+                    src,
+                    steps,
+                    sites,
+                    mass,
+                    momentum,
+                    phi_total,
+                    phi_sq,
+                }))
+            }
+            KIND_INTERIOR => {
+                let field = match r.u8()? {
+                    0 => InteriorField::F,
+                    1 => InteriorField::G,
+                    2 => InteriorField::Phi,
+                    v => {
+                        return Err(bad(format!(
+                            "unknown interior field {v}"
+                        )))
+                    }
+                };
+                let src = r.u32()?;
+                let count = r.u32()? as usize;
+                let data = r.f64_tail(count)?;
+                Ok(Frame::Interior(InteriorMsg { src, field, data }))
+            }
+            KIND_REPORT => {
+                let src = r.u32()?;
+                let interior_sites = r.u64()?;
+                let steps = r.u64()?;
+                let compute_s = r.f64()?;
+                let wait_s = r.f64()?;
+                let idle_s = r.f64()?;
+                let bytes_sent = r.u64()?;
+                let msgs_sent = r.u64()?;
+                r.done()?;
+                Ok(Frame::Report(ReportMsg {
+                    src,
+                    interior_sites,
+                    steps,
+                    compute_s,
+                    wait_s,
+                    idle_s,
+                    bytes_sent,
+                    msgs_sent,
+                }))
+            }
+            v => Err(bad(format!("unknown frame kind {v}"))),
+        }
     }
 }
 
@@ -193,7 +517,7 @@ mod tests {
     }
 
     #[test]
-    fn round_trip_is_bit_exact() {
+    fn plane_round_trip_is_bit_exact() {
         let msg = sample();
         let back = PlaneMsg::decode(&msg.encode()).unwrap();
         assert_eq!(back.src, msg.src);
@@ -217,34 +541,131 @@ mod tests {
             data: vec![],
         };
         let bytes = msg.encode();
-        assert_eq!(bytes.len(), HEADER_LEN);
+        assert_eq!(bytes.len(), PLANE_HEADER_LEN);
         assert_eq!(PlaneMsg::decode(&bytes).unwrap(), msg);
+    }
+
+    #[test]
+    fn command_frames_round_trip() {
+        for cmd in [Command::Advance { steps: 7 },
+                    Command::Advance { steps: u64::MAX },
+                    Command::Observables,
+                    Command::Gather,
+                    Command::GatherPhi,
+                    Command::Shutdown] {
+            let fr = Frame::Command(cmd);
+            assert_eq!(Frame::decode(&fr.encode()).unwrap(), fr, "{cmd:?}");
+        }
+    }
+
+    #[test]
+    fn partials_frame_round_trips_bitwise() {
+        let p = PartialObs {
+            src: 2,
+            steps: 999,
+            sites: 12_345,
+            mass: 1.0 / 3.0,
+            momentum: [-0.0, f64::MIN_POSITIVE, 7.25e11],
+            phi_total: -41.5,
+            phi_sq: 1e-300,
+        };
+        let fr = Frame::Partials(p);
+        match Frame::decode(&fr.encode()).unwrap() {
+            Frame::Partials(back) => {
+                assert_eq!(back.src, p.src);
+                assert_eq!(back.steps, p.steps);
+                assert_eq!(back.sites, p.sites);
+                assert_eq!(back.mass.to_bits(), p.mass.to_bits());
+                for (a, b) in back.momentum.iter().zip(&p.momentum) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+                assert_eq!(back.phi_total.to_bits(), p.phi_total.to_bits());
+                assert_eq!(back.phi_sq.to_bits(), p.phi_sq.to_bits());
+            }
+            other => panic!("decoded {other:?}"),
+        }
+    }
+
+    #[test]
+    fn interior_and_report_frames_round_trip() {
+        let i = InteriorMsg {
+            src: 1,
+            field: InteriorField::Phi,
+            data: vec![0.5, -0.5, 1e-12],
+        };
+        let fr = Frame::Interior(i.clone());
+        assert_eq!(Frame::decode(&fr.encode()).unwrap(), fr);
+        assert_eq!(fr.encode().len(),
+                   INTERIOR_HEADER_LEN + 8 * i.data.len());
+
+        let r = ReportMsg {
+            src: 3,
+            interior_sites: 4096,
+            steps: 100,
+            compute_s: 1.25,
+            wait_s: 0.5,
+            idle_s: 0.125,
+            bytes_sent: 1 << 20,
+            msgs_sent: 600,
+        };
+        let fr = Frame::Report(r);
+        assert_eq!(Frame::decode(&fr.encode()).unwrap(), fr);
     }
 
     #[test]
     fn corrupt_frames_rejected() {
         let good = sample().encode();
         // truncated header
-        assert!(PlaneMsg::decode(&good[..10]).is_err());
+        assert!(Frame::decode(&good[..10]).is_err());
         // bad magic
         let mut bad = good.clone();
         bad[0] = b'X';
-        assert!(PlaneMsg::decode(&bad).is_err());
+        assert!(Frame::decode(&bad).is_err());
         // bad version
         let mut bad = good.clone();
         bad[4] = 9;
-        assert!(PlaneMsg::decode(&bad).is_err());
-        // enum out of range
+        assert!(Frame::decode(&bad).is_err());
+        // frame kind out of range
         let mut bad = good.clone();
         bad[5] = 7;
-        assert!(PlaneMsg::decode(&bad).is_err());
+        assert!(Frame::decode(&bad).is_err());
+        // plane phase out of range
+        let mut bad = good.clone();
+        bad[6] = 7;
+        assert!(Frame::decode(&bad).is_err());
         // payload length mismatch
         let mut bad = good.clone();
         bad.pop();
-        assert!(PlaneMsg::decode(&bad).is_err());
+        assert!(Frame::decode(&bad).is_err());
         // declared count larger than payload
         let mut bad = good.clone();
-        bad[20] = bad[20].wrapping_add(1);
-        assert!(PlaneMsg::decode(&bad).is_err());
+        bad[21] = bad[21].wrapping_add(1);
+        assert!(Frame::decode(&bad).is_err());
+        // command with trailing garbage
+        let mut bad = Frame::Command(Command::Shutdown).encode();
+        bad.push(0);
+        assert!(Frame::decode(&bad).is_err());
+        // command op out of range
+        let mut bad = Frame::Command(Command::Shutdown).encode();
+        bad[6] = 9;
+        assert!(Frame::decode(&bad).is_err());
+        // truncated report
+        let bad = Frame::Report(ReportMsg {
+            src: 0,
+            interior_sites: 0,
+            steps: 0,
+            compute_s: 0.0,
+            wait_s: 0.0,
+            idle_s: 0.0,
+            bytes_sent: 0,
+            msgs_sent: 0,
+        })
+        .encode();
+        assert!(Frame::decode(&bad[..bad.len() - 1]).is_err());
+        // a non-plane frame is rejected by the plane-specific decoder
+        assert!(PlaneMsg::decode(
+            &Frame::Command(Command::Observables).encode()
+        )
+        .is_err());
     }
 }

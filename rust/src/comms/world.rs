@@ -1,11 +1,23 @@
-//! The rank world: concurrent slab ranks with overlapped halo exchange.
+//! The rank world: resident slab ranks with overlapped halo exchange.
 //!
 //! [`CommsWorld`] plays the role of `MPI_COMM_WORLD`: it owns the slab
-//! decomposition and, per [`CommsWorld::run`], spawns **one OS thread per
-//! rank**. Each rank owns its local lattice (allocated and first-touched
-//! by its own TLP pool), steps independently, and talks to its two x
-//! neighbours only through [`Rank::isend`]/[`Rank::wait`] — there is no
-//! shared mutable state and no sequential domain loop anywhere.
+//! decomposition and, per [`CommsWorld::session`], spawns **one OS thread
+//! per rank** — exactly once per run. Each rank owns its local lattice
+//! (allocated and first-touched by its own TLP pool) for the entire
+//! simulation, steps independently, and talks to its two x neighbours
+//! only through [`Rank::isend`]/[`Rank::wait`] — there is no shared
+//! mutable state and no sequential domain loop anywhere.
+//!
+//! The driver holds a [`CommsSession`] and steers the resident ranks over
+//! the same [`Transport`] the halo planes use, with a small command
+//! protocol ([`Command`]): `Advance{steps}` runs a block of timesteps,
+//! `Observables` returns distributed partial reductions (no global
+//! gather), `Gather`/`GatherPhi` ship the interiors on demand (final
+//! state, VTK output), and `Shutdown` retires the rank with a final
+//! [`ReportMsg`]. Between commands a rank pauses at the command barrier
+//! ([`Rank::wait_command`]); neighbours that already started the next
+//! block may race ahead — their planes are parked in the pending queue,
+//! and the per-step [`Tag`] keeps every exchange unambiguous.
 //!
 //! Per timestep a rank performs two exchanges (three plane messages per
 //! side, down from the four the old bulk-synchronous loop copied):
@@ -23,13 +35,17 @@
 //! computing (the `MPI_Sendrecv`-everything reference schedule). Both
 //! orders run the identical per-site arithmetic, so they are bit-identical
 //! to each other *and* to the single-domain fused `FullStep` path
-//! (`tests/comms_parity.rs`).
+//! (`tests/comms_parity.rs`, `tests/resident_world.rs`).
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
+use std::sync::Arc;
+use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::comms::transport::{ChannelTransport, Transport};
-use crate::comms::wire::{FieldId, Phase, PlaneMsg, Side, Tag};
+use crate::comms::wire::{Command, FieldId, Frame, InteriorField,
+                         InteriorMsg, PartialObs, Phase, PlaneMsg,
+                         ReportMsg, Side, Tag};
 use crate::error::{Error, Result};
 use crate::free_energy::gradient::gradient_fd_range;
 use crate::free_energy::symmetric::FeParams;
@@ -38,15 +54,17 @@ use crate::lattice::geometry::Geometry;
 use crate::lattice::halo::{pack_x_plane, unpack_x_plane};
 use crate::lattice::stream_table::StreamTable;
 use crate::lb::collision::collide_lattice_range;
+use crate::lb::engine::Observables;
 use crate::lb::model::VelSet;
 use crate::lb::moments::phi_from_g_range;
 use crate::lb::propagation::stream_range;
 use crate::targetdp::ilp;
+use crate::targetdp::reduce::{reduce_sum_range, reduce_sum_sq_range};
 use crate::targetdp::tlp::{threads_per_rank, Schedule, TlpPool};
 
-/// A blocked [`Rank::wait`] gives up after this long — it converts the
-/// MPI-style deadlock of a lost neighbour into a diagnosable error
-/// instead of a hung world.
+/// A blocked [`Rank::wait`] / controller collect gives up after this long
+/// — it converts the MPI-style deadlock of a lost neighbour into a
+/// diagnosable error instead of a hung world.
 const WAIT_TIMEOUT: Duration = Duration::from_secs(120);
 
 /// Knobs for a decomposed run.
@@ -84,24 +102,31 @@ impl Default for CommsConfig {
     }
 }
 
-/// Per-rank timing/traffic summary (the output of one rank's run).
+/// Per-rank timing/traffic summary, accumulated by the resident rank over
+/// its whole life and reported at `Shutdown`.
 #[derive(Debug, Clone)]
 pub struct RankReport {
     pub rank: usize,
     /// Owned (interior) sites — halo planes excluded.
     pub interior_sites: usize,
     pub steps: u64,
-    /// Wall time spent computing (total minus blocked-in-wait).
+    /// Wall time spent computing (total minus blocked-in-wait and idle).
     pub compute_s: f64,
     /// Wall time blocked waiting for halo planes.
     pub wait_s: f64,
+    /// Wall time parked at the command barrier waiting for the driver
+    /// (between logging blocks; excluded from [`RankReport::mlups`]).
+    pub idle_s: f64,
+    /// Halo-exchange traffic only — control/response frames (commands,
+    /// partials, interiors, reports) are not counted.
     pub bytes_sent: u64,
     pub msgs_sent: u64,
 }
 
 impl RankReport {
     /// Million (interior) lattice-site updates per second of rank wall
-    /// time (compute + wait).
+    /// time spent on the simulation proper (compute + exchange wait;
+    /// driver idle excluded).
     pub fn mlups(&self) -> f64 {
         let wall = self.compute_s + self.wait_s;
         if wall <= 0.0 {
@@ -110,7 +135,8 @@ impl RankReport {
         self.interior_sites as f64 * self.steps as f64 / wall / 1e6
     }
 
-    /// Fraction of this rank's wall time spent blocked on halo arrival.
+    /// Fraction of this rank's working wall time spent blocked on halo
+    /// arrival.
     pub fn wait_fraction(&self) -> f64 {
         let wall = self.compute_s + self.wait_s;
         if wall <= 0.0 { 0.0 } else { self.wait_s / wall }
@@ -121,7 +147,7 @@ impl RankReport {
 #[derive(Debug, Clone)]
 pub struct WorldReport {
     pub ranks: Vec<RankReport>,
-    /// Wall time of the whole run (spawn to join).
+    /// Wall time of the whole run (session start to finish).
     pub seconds: f64,
     pub overlap: bool,
 }
@@ -153,15 +179,23 @@ impl WorldReport {
 /// transport owns the bytes as soon as it returns), [`Rank::wait`] is a
 /// posted `MPI_Irecv` + `MPI_Wait` pair, and the internal `pending` map is
 /// the unexpected-message queue an MPI progress engine keeps for frames
-/// that arrive before their receive is posted.
+/// that arrive before their receive is posted. Commands from the session
+/// controller share the same inbox: [`Rank::wait`] parks them for
+/// [`Rank::wait_command`], and vice versa, so halo planes from a
+/// neighbour that raced into the next block never block the command
+/// barrier.
 pub struct Rank {
     pub rank: usize,
     pub nranks: usize,
     transport: Box<dyn Transport>,
-    /// Frames that arrived while waiting for a different tag.
+    /// Halo frames that arrived while waiting for a different tag.
     pending: HashMap<Tag, Vec<f64>>,
+    /// Commands that arrived while waiting for a halo plane.
+    cmds: VecDeque<Command>,
     /// Seconds spent blocked in [`Rank::wait`].
     pub wait_s: f64,
+    /// Seconds spent parked in [`Rank::wait_command`].
+    pub idle_s: f64,
     pub bytes_sent: u64,
     pub msgs_sent: u64,
 }
@@ -173,7 +207,9 @@ impl Rank {
             nranks: transport.nranks(),
             transport,
             pending: HashMap::new(),
+            cmds: VecDeque::new(),
             wait_s: 0.0,
+            idle_s: 0.0,
             bytes_sent: 0,
             msgs_sent: 0,
         }
@@ -189,9 +225,14 @@ impl Rank {
         (self.rank + 1) % self.nranks
     }
 
+    /// The session controller's endpoint id.
+    pub fn controller(&self) -> usize {
+        self.nranks
+    }
+
     /// Non-blocking tagged send of one packed plane (`MPI_Isend`). The
     /// wire frame is encoded straight from `data` — the only copy on the
-    /// send path.
+    /// send path. Counted in the halo-traffic totals.
     pub fn isend(&mut self, dst: usize, tag: Tag, data: &[f64])
                  -> Result<()> {
         self.bytes_sent += PlaneMsg::frame_len(data.len()) as u64;
@@ -199,33 +240,54 @@ impl Rank {
         self.transport.send_plane(dst, self.rank as u32, tag, data)
     }
 
+    /// Send a control-plane response to the session controller (not
+    /// counted as halo traffic).
+    pub fn send_response(&mut self, frame: &Frame) -> Result<()> {
+        let dst = self.controller();
+        self.transport.send_frame(dst, frame)
+    }
+
+    /// Park an out-of-order halo plane for its own wait.
+    fn park(&mut self, msg: PlaneMsg) -> Result<()> {
+        // a duplicate tag means the transport broke the
+        // one-frame-per-tag protocol (e.g. a retransmitting socket);
+        // overwriting silently would corrupt physics
+        if self.pending.insert(msg.tag, msg.data).is_some() {
+            return Err(Error::Invalid(format!(
+                "comms: rank {} received a duplicate frame for {:?}",
+                self.rank, msg.tag
+            )));
+        }
+        Ok(())
+    }
+
     /// Block until the plane tagged `tag` has arrived and return its
     /// payload (`MPI_Wait` on the matching receive). Frames for other
-    /// tags encountered on the way are parked for their own waits.
+    /// tags encountered on the way are parked for their own waits;
+    /// commands are queued for [`Rank::wait_command`].
     pub fn wait(&mut self, tag: Tag) -> Result<Vec<f64>> {
         if let Some(data) = self.pending.remove(&tag) {
             return Ok(data);
         }
         let t0 = Instant::now();
         let data = loop {
+            // error strings are built only in the failure arms — this
+            // receive loop runs 6+ times per timestep on the halo path
             match self.transport.recv_timeout(WAIT_TIMEOUT)? {
-                Some(msg) if msg.tag == tag => break msg.data,
-                Some(msg) => {
-                    // a duplicate tag means the transport broke the
-                    // one-frame-per-tag protocol (e.g. a retransmitting
-                    // socket); overwriting silently would corrupt physics
-                    if self.pending.insert(msg.tag, msg.data).is_some() {
-                        return Err(Error::Invalid(format!(
-                            "comms: rank {} received a duplicate frame \
-                             for {:?}",
-                            self.rank, msg.tag
-                        )));
-                    }
+                Some(Frame::Plane(msg)) if msg.tag == tag => break msg.data,
+                Some(Frame::Plane(msg)) => self.park(msg)?,
+                Some(Frame::Command(cmd)) => self.cmds.push_back(cmd),
+                Some(other) => {
+                    return Err(Error::Invalid(format!(
+                        "comms: rank {} received a controller-bound frame \
+                         {other:?}",
+                        self.rank
+                    )))
                 }
                 None => {
                     return Err(Error::Invalid(format!(
                         "comms: rank {} timed out after {WAIT_TIMEOUT:?} \
-                         waiting for {tag:?} — neighbour lost?",
+                         waiting for {tag:?} — neighbour or driver lost?",
                         self.rank
                     )))
                 }
@@ -234,10 +296,40 @@ impl Rank {
         self.wait_s += t0.elapsed().as_secs_f64();
         Ok(data)
     }
+
+    /// Block at the command barrier until the controller's next
+    /// [`Command`] arrives. Halo planes from neighbours that already
+    /// started the next block are parked for their own waits. Unlike
+    /// [`Rank::wait`] this never times out — an idle driver (a long pause
+    /// between logging blocks) is legitimate; a *vanished* driver always
+    /// broadcasts `Shutdown` first (session `finish`/`Drop`), and a fully
+    /// dead world surfaces as a transport disconnect.
+    pub fn wait_command(&mut self) -> Result<Command> {
+        if let Some(cmd) = self.cmds.pop_front() {
+            return Ok(cmd);
+        }
+        let t0 = Instant::now();
+        let cmd = loop {
+            match self.transport.recv_timeout(WAIT_TIMEOUT)? {
+                None => continue, // idle at the barrier, keep waiting
+                Some(Frame::Command(cmd)) => break cmd,
+                Some(Frame::Plane(msg)) => self.park(msg)?,
+                Some(other) => {
+                    return Err(Error::Invalid(format!(
+                        "comms: rank {} received a controller-bound frame \
+                         {other:?}",
+                        self.rank
+                    )))
+                }
+            }
+        };
+        self.idle_s += t0.elapsed().as_secs_f64();
+        Ok(cmd)
+    }
 }
 
 /// The rank world (`MPI_COMM_WORLD`): a slab decomposition plus the run
-/// configuration, ready to spawn concurrent ranks.
+/// configuration, ready to spawn a resident session of concurrent ranks.
 #[derive(Debug, Clone)]
 pub struct CommsWorld {
     pub dec: SlabDecomposition,
@@ -257,99 +349,430 @@ impl CommsWorld {
         Ok(CommsWorld { dec, cfg })
     }
 
-    /// Advance the global state `nsteps` timesteps with one concurrent
-    /// rank per slab: scatter (each rank copies its own planes), run,
-    /// gather back into `f`/`g`. Blocks until every rank has finished.
-    pub fn run(&self, vs: &VelSet, p: &FeParams, f: &mut [f64],
-               g: &mut [f64], nsteps: u64) -> Result<WorldReport> {
+    /// Spawn the resident rank session: one thread per slab, each copying
+    /// its own planes out of the initial `f0`/`g0` (first touch on the
+    /// sweeping pool via [`TlpPool::zeros`]) and then parking at the
+    /// command barrier. The state lives rank-local until an explicit
+    /// [`CommsSession::gather`].
+    pub fn session(&self, vs: &'static VelSet, p: &FeParams, f0: Vec<f64>,
+                   g0: Vec<f64>) -> Result<CommsSession> {
         let n = self.dec.global.nsites();
-        if f.len() != vs.nvel * n || g.len() != vs.nvel * n {
+        if f0.len() != vs.nvel * n || g0.len() != vs.nvel * n {
             return Err(Error::Invalid(format!(
                 "comms: state is {}+{} doubles, want {} each",
-                f.len(),
-                g.len(),
+                f0.len(),
+                g0.len(),
                 vs.nvel * n
             )));
         }
-        let transports = ChannelTransport::mesh(self.cfg.ranks);
+        let (transports, controller) =
+            ChannelTransport::mesh_with_controller(self.cfg.ranks);
         let nthreads = threads_per_rank(self.cfg.threads, self.cfg.ranks);
-        let cfg = &self.cfg;
-        let f_in: &[f64] = f;
-        let g_in: &[f64] = g;
-        let t0 = Instant::now();
-        let results: Vec<Result<(Vec<f64>, Vec<f64>, RankReport)>> =
-            std::thread::scope(|s| {
-                let handles: Vec<_> = transports
-                    .into_iter()
-                    .zip(&self.dec.domains)
-                    .map(|(tr, d)| {
-                        s.spawn(move || {
-                            rank_main(d, vs, p, f_in, g_in, nsteps, cfg,
-                                      nthreads, tr)
-                        })
-                    })
-                    .collect();
-                handles
-                    .into_iter()
-                    .map(|h| match h.join() {
-                        Ok(r) => r,
-                        Err(e) => std::panic::resume_unwind(e),
-                    })
-                    .collect()
-            });
-        let seconds = t0.elapsed().as_secs_f64();
-
-        // a failing rank makes its neighbours fail too (timeout /
-        // hung-up errors); surface the root cause, not the knock-on —
-        // prefer the first error that is neither a wait timeout nor a
-        // dropped-peer symptom
-        if results.iter().any(|r| r.is_err()) {
-            let knock_on =
-                |e: &Error| {
-                    let msg = e.to_string();
-                    msg.contains("timed out") || msg.contains("hung up")
-                };
-            let mut first_any = None;
-            for r in results {
-                if let Err(e) = r {
-                    if !knock_on(&e) {
-                        return Err(e);
-                    }
-                    first_any.get_or_insert(e);
+        let f0 = Arc::new(f0);
+        let g0 = Arc::new(g0);
+        let p = *p;
+        let started = Instant::now();
+        let mut session = CommsSession {
+            dec: self.dec.clone(),
+            cfg: self.cfg.clone(),
+            vs,
+            controller,
+            handles: Vec::with_capacity(self.cfg.ranks),
+            steps_done: 0,
+            started,
+        };
+        for (tr, d) in transports.into_iter().zip(&self.dec.domains) {
+            let d = d.clone();
+            let cfg = self.cfg.clone();
+            let (f0, g0) = (Arc::clone(&f0), Arc::clone(&g0));
+            let handle = std::thread::Builder::new()
+                .name(format!("targetdp-rank{}", d.rank))
+                .spawn(move || {
+                    rank_main(d, vs, p, f0, g0, cfg, nthreads, tr)
+                });
+            match handle {
+                Ok(h) => session.handles.push(h),
+                Err(e) => {
+                    // session Drop shuts down the already-spawned ranks
+                    return Err(Error::Invalid(format!(
+                        "comms: failed to spawn rank thread: {e}"
+                    )));
                 }
             }
-            return Err(first_any.expect("an error exists"));
         }
-        let mut reports = Vec::with_capacity(self.cfg.ranks);
-        let mut f_locals = Vec::with_capacity(self.cfg.ranks);
-        let mut g_locals = Vec::with_capacity(self.cfg.ranks);
-        for r in results {
-            let (lf, lg, rep) = r?;
-            f_locals.push(lf);
-            g_locals.push(lg);
-            reports.push(rep);
-        }
-        self.dec.gather_into(&f_locals, vs.nvel, f);
-        self.dec.gather_into(&g_locals, vs.nvel, g);
-        Ok(WorldReport {
-            ranks: reports,
-            seconds,
-            overlap: self.cfg.overlap,
-        })
+        Ok(session)
+    }
+
+    /// One-shot convenience: session + single `Advance` + `Gather` +
+    /// `Shutdown`. Advance the global state `nsteps` timesteps with one
+    /// concurrent rank per slab and gather back into `f`/`g`. Blocks
+    /// until every rank has finished.
+    pub fn run(&self, vs: &'static VelSet, p: &FeParams, f: &mut [f64],
+               g: &mut [f64], nsteps: u64) -> Result<WorldReport> {
+        let mut session = self.session(vs, p, f.to_vec(), g.to_vec())?;
+        session.advance(nsteps)?;
+        session.gather(f, g)?;
+        session.finish()
     }
 }
 
 /// Convenience: build a [`CommsWorld`] and run it once.
-pub fn run_decomposed(geom: &Geometry, vs: &VelSet, p: &FeParams,
+pub fn run_decomposed(geom: &Geometry, vs: &'static VelSet, p: &FeParams,
                       f: &mut [f64], g: &mut [f64], nsteps: u64,
                       cfg: &CommsConfig) -> Result<WorldReport> {
     CommsWorld::new(*geom, cfg.clone())?.run(vs, p, f, g, nsteps)
 }
 
+/// A resident rank world: the rank threads were spawned once and keep
+/// their slab-local state across an arbitrary sequence of commands. The
+/// driver thread holds the controller transport endpoint and steers the
+/// ranks with [`CommsSession::advance`] / [`CommsSession::observables`] /
+/// [`CommsSession::gather`]; [`CommsSession::finish`] retires the world
+/// and returns the accumulated per-rank reports. Dropping an unfinished
+/// session broadcasts `Shutdown` and joins the ranks best-effort.
+pub struct CommsSession {
+    dec: SlabDecomposition,
+    cfg: CommsConfig,
+    vs: &'static VelSet,
+    controller: ChannelTransport,
+    handles: Vec<JoinHandle<Result<()>>>,
+    steps_done: u64,
+    started: Instant,
+}
+
+/// Is this error a knock-on symptom (a neighbour of the real failure
+/// timing out / finding a closed channel) rather than a root cause?
+fn knock_on(e: &Error) -> bool {
+    let msg = e.to_string();
+    msg.contains("timed out") || msg.contains("hung up")
+}
+
+/// Prefer the first root-cause error; fall back to the first knock-on.
+fn pick_root(errs: Vec<Error>) -> Option<Error> {
+    let mut first_any = None;
+    for e in errs {
+        if !knock_on(&e) {
+            return Some(e);
+        }
+        first_any.get_or_insert(e);
+    }
+    first_any
+}
+
+impl CommsSession {
+    pub fn nranks(&self) -> usize {
+        self.dec.domains.len()
+    }
+
+    /// Timesteps advanced so far (commands already issued).
+    pub fn steps_done(&self) -> u64 {
+        self.steps_done
+    }
+
+    fn broadcast(&mut self, cmd: Command) -> Result<()> {
+        for r in 0..self.dec.domains.len() {
+            self.controller.send_frame(r, &Frame::Command(cmd))?;
+        }
+        Ok(())
+    }
+
+    fn recv_from_ranks(&mut self, what: &str) -> Result<Frame> {
+        match self.controller.recv_timeout(WAIT_TIMEOUT)? {
+            Some(frame) => Ok(frame),
+            None => Err(Error::Invalid(format!(
+                "comms: driver timed out after {WAIT_TIMEOUT:?} waiting \
+                 for {what} — rank lost?"
+            ))),
+        }
+    }
+
+    /// Best-effort `Shutdown` to every rank individually — unlike
+    /// [`CommsSession::broadcast`] this must not short-circuit on the
+    /// first dead rank, or its still-healthy peers would never be
+    /// released from the command barrier and the join would hang.
+    fn shutdown_all(&mut self) {
+        for r in 0..self.dec.domains.len() {
+            let _ = self
+                .controller
+                .send_frame(r, &Frame::Command(Command::Shutdown));
+        }
+    }
+
+    /// A controller-side failure usually means a rank died: release any
+    /// ranks parked at the command barrier, join the threads, and surface
+    /// the root cause instead of the knock-on symptom.
+    fn fail(&mut self, err: Error) -> Error {
+        self.shutdown_all();
+        let mut errs = Vec::new();
+        for h in std::mem::take(&mut self.handles) {
+            match h.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => errs.push(e),
+                Err(payload) => std::panic::resume_unwind(payload),
+            }
+        }
+        pick_root(errs).unwrap_or(err)
+    }
+
+    /// Advance every rank `steps` timesteps (one logging block). Returns
+    /// as soon as the command is buffered — the next collecting call
+    /// (observables / gather / finish) is the block barrier.
+    pub fn advance(&mut self, steps: u64) -> Result<()> {
+        if let Err(e) = self.broadcast(Command::Advance { steps }) {
+            return Err(self.fail(e));
+        }
+        self.steps_done += steps;
+        Ok(())
+    }
+
+    /// Distributed observable reduction: every rank reduces its own
+    /// interior ([`crate::targetdp::reduce`]) and only the
+    /// O(ranks)-sized partial sums travel — no global state gather.
+    /// Partials are combined in rank order, so the result is
+    /// deterministic; the summation order differs from a single global
+    /// sweep (see [`Observables::from_sums`]).
+    pub fn observables(&mut self) -> Result<Observables> {
+        if let Err(e) = self.broadcast(Command::Observables) {
+            return Err(self.fail(e));
+        }
+        let nranks = self.dec.domains.len();
+        let mut partials: Vec<Option<PartialObs>> = vec![None; nranks];
+        let mut got = 0;
+        while got < nranks {
+            let frame = match self.recv_from_ranks("observable partials") {
+                Ok(f) => f,
+                Err(e) => return Err(self.fail(e)),
+            };
+            let p = match frame {
+                Frame::Partials(p) => p,
+                other => {
+                    return Err(self.fail(Error::Invalid(format!(
+                        "comms: driver expected partials, got {other:?}"
+                    ))))
+                }
+            };
+            let r = p.src as usize;
+            if r >= nranks || partials[r].is_some() {
+                return Err(self.fail(Error::Invalid(format!(
+                    "comms: duplicate or out-of-range partials from rank \
+                     {r}"
+                ))));
+            }
+            if p.steps != self.steps_done {
+                return Err(self.fail(Error::Invalid(format!(
+                    "comms: rank {r} reduced at step {} but the session \
+                     is at {}",
+                    p.steps, self.steps_done
+                ))));
+            }
+            partials[r] = Some(p);
+            got += 1;
+        }
+        let mut mass = 0.0;
+        let mut momentum = [0.0f64; 3];
+        let mut phi_total = 0.0;
+        let mut phi_sq = 0.0;
+        let mut sites = 0u64;
+        for p in partials.iter().flatten() {
+            mass += p.mass;
+            for (m, pm) in momentum.iter_mut().zip(&p.momentum) {
+                *m += pm;
+            }
+            phi_total += p.phi_total;
+            phi_sq += p.phi_sq;
+            sites += p.sites;
+        }
+        let n = self.dec.global.nsites();
+        if sites != n as u64 {
+            return Err(self.fail(Error::Invalid(format!(
+                "comms: partials cover {sites} sites, lattice has {n}"
+            ))));
+        }
+        Ok(Observables::from_sums(mass, momentum, phi_total, phi_sq, n))
+    }
+
+    /// Collect one interior payload per (rank, expected field) and place
+    /// each into its global buffer. Frames from different ranks arrive in
+    /// any interleaving (ordering is only per sender), so every frame is
+    /// routed by its (field, src) envelope rather than expected in
+    /// sequence.
+    fn collect_interiors(&mut self,
+                         wanted: &mut [(InteriorField, usize, &mut [f64])])
+                         -> Result<()> {
+        let nranks = self.dec.domains.len();
+        let mut seen = vec![false; wanted.len() * nranks];
+        let mut got = 0;
+        while got < wanted.len() * nranks {
+            let frame = match self.recv_from_ranks("interior payloads") {
+                Ok(f) => f,
+                Err(e) => return Err(self.fail(e)),
+            };
+            let msg = match frame {
+                Frame::Interior(m) => m,
+                other => {
+                    return Err(self.fail(Error::Invalid(format!(
+                        "comms: driver expected interiors, got {other:?}"
+                    ))))
+                }
+            };
+            let slot = wanted
+                .iter()
+                .position(|(field, _, _)| *field == msg.field);
+            let r = msg.src as usize;
+            let (w, dup) = match slot {
+                Some(w) if r < nranks => (w, seen[w * nranks + r]),
+                _ => {
+                    return Err(self.fail(Error::Invalid(format!(
+                        "comms: unexpected {:?} interior from rank {r}",
+                        msg.field
+                    ))))
+                }
+            };
+            if dup {
+                return Err(self.fail(Error::Invalid(format!(
+                    "comms: duplicate {:?} interior from rank {r}",
+                    msg.field
+                ))));
+            }
+            let d = &self.dec.domains[r];
+            let want_len = wanted[w].1 * d.lxl * d.plane();
+            if msg.data.len() != want_len {
+                return Err(self.fail(Error::Invalid(format!(
+                    "comms: rank {r} interior is {} doubles, want \
+                     {want_len}",
+                    msg.data.len()
+                ))));
+            }
+            let d = d.clone();
+            d.place_interior(&msg.data, wanted[w].1, wanted[w].2);
+            seen[w * nranks + r] = true;
+            got += 1;
+        }
+        Ok(())
+    }
+
+    /// Gather the full distributed state into `f`/`g` (the explicit
+    /// `MPI_Gather` of the final state or a VTK snapshot). The ranks keep
+    /// running — gathering does not disturb their local state.
+    pub fn gather(&mut self, f: &mut [f64], g: &mut [f64]) -> Result<()> {
+        let n = self.dec.global.nsites();
+        let nvel = self.vs.nvel;
+        if f.len() != nvel * n || g.len() != nvel * n {
+            return Err(Error::Invalid(format!(
+                "comms: gather buffers are {}+{} doubles, want {} each",
+                f.len(),
+                g.len(),
+                nvel * n
+            )));
+        }
+        if let Err(e) = self.broadcast(Command::Gather) {
+            return Err(self.fail(e));
+        }
+        self.collect_interiors(&mut [(InteriorField::F, nvel, f),
+                                     (InteriorField::G, nvel, g)])
+    }
+
+    /// Gather the per-site phi field, computed by the resident ranks from
+    /// their current `g` with their own pools and VVL (the decomposed
+    /// analog of `LbEngine::phi_field` — only `nsites` doubles travel,
+    /// not the `nvel`-component state).
+    pub fn gather_phi(&mut self) -> Result<Vec<f64>> {
+        if let Err(e) = self.broadcast(Command::GatherPhi) {
+            return Err(self.fail(e));
+        }
+        let mut phi = vec![0.0; self.dec.global.nsites()];
+        self.collect_interiors(&mut [(InteriorField::Phi, 1, &mut phi)])?;
+        Ok(phi)
+    }
+
+    /// Retire the session: every rank reports its accumulated
+    /// timing/traffic totals and exits; the threads are joined. Returns
+    /// the whole-run [`WorldReport`].
+    pub fn finish(mut self) -> Result<WorldReport> {
+        if let Err(e) = self.broadcast(Command::Shutdown) {
+            return Err(self.fail(e));
+        }
+        let nranks = self.dec.domains.len();
+        let mut reports: Vec<Option<RankReport>> = vec![None; nranks];
+        let mut got = 0;
+        while got < nranks {
+            let frame = match self.recv_from_ranks("rank reports") {
+                Ok(f) => f,
+                Err(e) => return Err(self.fail(e)),
+            };
+            let r = match frame {
+                Frame::Report(r) => r,
+                other => {
+                    return Err(self.fail(Error::Invalid(format!(
+                        "comms: driver expected reports, got {other:?}"
+                    ))))
+                }
+            };
+            let idx = r.src as usize;
+            if idx >= nranks || reports[idx].is_some() {
+                return Err(self.fail(Error::Invalid(format!(
+                    "comms: duplicate or out-of-range report from rank \
+                     {idx}"
+                ))));
+            }
+            reports[idx] = Some(RankReport {
+                rank: idx,
+                interior_sites: r.interior_sites as usize,
+                steps: r.steps,
+                compute_s: r.compute_s,
+                wait_s: r.wait_s,
+                idle_s: r.idle_s,
+                bytes_sent: r.bytes_sent,
+                msgs_sent: r.msgs_sent,
+            });
+            got += 1;
+        }
+        let mut errs = Vec::new();
+        for h in std::mem::take(&mut self.handles) {
+            match h.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => errs.push(e),
+                Err(payload) => std::panic::resume_unwind(payload),
+            }
+        }
+        if let Some(e) = pick_root(errs) {
+            return Err(e);
+        }
+        Ok(WorldReport {
+            ranks: reports
+                .into_iter()
+                .map(|r| r.expect("all ranks reported"))
+                .collect(),
+            seconds: self.started.elapsed().as_secs_f64(),
+            overlap: self.cfg.overlap,
+        })
+    }
+}
+
+impl Drop for CommsSession {
+    fn drop(&mut self) {
+        if self.handles.is_empty() {
+            return;
+        }
+        // release ranks parked at the command barrier; ignore errors — a
+        // dead world is exactly what this path cleans up after
+        self.shutdown_all();
+        if std::thread::panicking() {
+            // don't risk a join hang during unwind; detach instead
+            self.handles.clear();
+            return;
+        }
+        for h in std::mem::take(&mut self.handles) {
+            let _ = h.join();
+        }
+    }
+}
+
 /// Per-rank working state: local SoA fields + streaming double buffers +
 /// moment scratch + the plane pack buffer. Everything is allocated by the
 /// rank's own pool ([`TlpPool::zeros`]) so first touch happens on the
-/// thread(s) that sweep it.
+/// thread(s) that sweep it, and it all stays resident for the whole
+/// session.
 struct RankState {
     f: Vec<f64>,
     g: Vec<f64>,
@@ -361,13 +784,12 @@ struct RankState {
     send_buf: Vec<f64>,
 }
 
-/// Body of one rank thread: allocate + scatter, step `nsteps` times,
-/// return the local state and a timing report.
+/// Body of one resident rank thread: allocate + scatter once, then serve
+/// the controller's command loop until `Shutdown`.
 #[allow(clippy::too_many_arguments)]
-fn rank_main(d: &SubDomain, vs: &VelSet, p: &FeParams, f_global: &[f64],
-             g_global: &[f64], nsteps: u64, cfg: &CommsConfig,
-             nthreads: usize, transport: ChannelTransport)
-             -> Result<(Vec<f64>, Vec<f64>, RankReport)> {
+fn rank_main(d: SubDomain, vs: &'static VelSet, p: FeParams,
+             f0: Arc<Vec<f64>>, g0: Arc<Vec<f64>>, cfg: CommsConfig,
+             nthreads: usize, transport: ChannelTransport) -> Result<()> {
     let pool = TlpPool::new(nthreads, cfg.schedule);
     let ln = d.local.nsites();
     let nvel = vs.nvel;
@@ -381,27 +803,113 @@ fn rank_main(d: &SubDomain, vs: &VelSet, p: &FeParams, f_global: &[f64],
         lap: pool.zeros(ln),
         send_buf: vec![0.0; nvel * d.plane()],
     };
-    d.scatter_into(f_global, nvel, &mut st.f);
-    d.scatter_into(g_global, nvel, &mut st.g);
+    d.scatter_into(&f0, nvel, &mut st.f);
+    d.scatter_into(&g0, nvel, &mut st.g);
+    // the global initial state is only needed for the scatter — free our
+    // share of it before the long residency
+    drop(f0);
+    drop(g0);
     let table = StreamTable::cached(vs, &d.local);
     let mut rank = Rank::new(Box::new(transport));
 
     let t0 = Instant::now();
-    for step in 0..nsteps {
-        step_rank(d, vs, p, &table, &mut st, &mut rank, step, cfg, &pool)?;
+    let mut step: u64 = 0;
+    loop {
+        match rank.wait_command()? {
+            Command::Advance { steps } => {
+                for _ in 0..steps {
+                    step_rank(&d, vs, &p, &table, &mut st, &mut rank, step,
+                              &cfg, &pool)?;
+                    step += 1;
+                }
+            }
+            Command::Observables => {
+                let partials =
+                    rank_partials(&d, vs, &mut st, &pool, &cfg, step);
+                rank.send_response(&Frame::Partials(partials))?;
+            }
+            Command::Gather => {
+                let fi = d.interior_of(&st.f, nvel);
+                rank.send_response(&Frame::Interior(InteriorMsg {
+                    src: d.rank as u32,
+                    field: InteriorField::F,
+                    data: fi,
+                }))?;
+                let gi = d.interior_of(&st.g, nvel);
+                rank.send_response(&Frame::Interior(InteriorMsg {
+                    src: d.rank as u32,
+                    field: InteriorField::G,
+                    data: gi,
+                }))?;
+            }
+            Command::GatherPhi => {
+                // fresh phi from the current g, interior only, with this
+                // rank's own pool/VVL (st.phi is a per-step scratch, so
+                // overwriting it cannot perturb the next Advance)
+                phi_from_g_range(vs, &st.g, &mut st.phi, ln, d.interior(),
+                                 &pool, cfg.vvl);
+                let pi = d.interior_of(&st.phi, 1);
+                rank.send_response(&Frame::Interior(InteriorMsg {
+                    src: d.rank as u32,
+                    field: InteriorField::Phi,
+                    data: pi,
+                }))?;
+            }
+            Command::Shutdown => {
+                let wall = t0.elapsed().as_secs_f64();
+                let report = ReportMsg {
+                    src: d.rank as u32,
+                    interior_sites: (d.lxl * d.plane()) as u64,
+                    steps: step,
+                    compute_s: (wall - rank.wait_s - rank.idle_s).max(0.0),
+                    wait_s: rank.wait_s,
+                    idle_s: rank.idle_s,
+                    bytes_sent: rank.bytes_sent,
+                    msgs_sent: rank.msgs_sent,
+                };
+                rank.send_response(&Frame::Report(report))?;
+                return Ok(());
+            }
+        }
     }
-    let wall = t0.elapsed().as_secs_f64();
+}
 
-    let report = RankReport {
-        rank: d.rank,
-        interior_sites: d.lxl * d.plane(),
-        steps: nsteps,
-        compute_s: (wall - rank.wait_s).max(0.0),
-        wait_s: rank.wait_s,
-        bytes_sent: rank.bytes_sent,
-        msgs_sent: rank.msgs_sent,
-    };
-    Ok((st.f, st.g, report))
+/// Exact partial observable sums over this rank's interior, via the
+/// deterministic [`crate::targetdp::reduce`] kernels (TLP × ILP, chunk
+/// order fixed by (sites, vvl), independent of thread count).
+fn rank_partials(d: &SubDomain, vs: &VelSet, st: &mut RankState,
+                 pool: &TlpPool, cfg: &CommsConfig, step: u64)
+                 -> PartialObs {
+    let ln = d.local.nsites();
+    let interior = d.interior();
+    let vvl = cfg.vvl;
+    let mut fsum = vec![0.0; vs.nvel];
+    reduce_sum_range(&st.f, vs.nvel, ln, interior.clone(), pool, vvl,
+                     &mut fsum);
+    let mut gsum = vec![0.0; vs.nvel];
+    reduce_sum_range(&st.g, vs.nvel, ln, interior.clone(), pool, vvl,
+                     &mut gsum);
+    let mass: f64 = fsum.iter().sum();
+    let mut momentum = [0.0f64; 3];
+    for (i, fi) in fsum.iter().enumerate() {
+        for (m, c) in momentum.iter_mut().zip(&vs.cv[i]) {
+            *m += c * fi;
+        }
+    }
+    let phi_total: f64 = gsum.iter().sum();
+    // phi is a per-step scratch — safe to recompute here from post-step g
+    phi_from_g_range(vs, &st.g, &mut st.phi, ln, interior.clone(), pool,
+                     vvl);
+    let phi_sq = reduce_sum_sq_range(&st.phi, ln, interior, pool, vvl);
+    PartialObs {
+        src: d.rank as u32,
+        steps: step,
+        sites: (d.lxl * d.plane()) as u64,
+        mass,
+        momentum,
+        phi_total,
+        phi_sq,
+    }
 }
 
 /// Validate a received plane payload and scatter it into halo plane `p`.
@@ -574,6 +1082,7 @@ fn step_rank(d: &SubDomain, vs: &VelSet, p: &FeParams, table: &StreamTable,
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::lb::engine::state_observables;
     use crate::lb::init::init_spinodal;
     use crate::lb::model::{d2q9, d3q19};
     use crate::lb::propagation::stream;
@@ -655,6 +1164,102 @@ mod tests {
     }
 
     #[test]
+    fn multi_block_session_is_bit_identical_to_one_shot() {
+        // residency: 4 = 1 + 2 + 1 advances over a paused session must
+        // produce exactly the bits of a single 4-step world
+        let vs = d3q19();
+        let geom = Geometry::new(9, 3, 4);
+        let (f_want, g_want) = reference(vs, &geom, 4);
+        let world = CommsWorld::new(geom, CommsConfig {
+            ranks: 3,
+            ..CommsConfig::default()
+        })
+        .unwrap();
+        let (f0, g0) = spinodal(vs, &geom);
+        let mut session = world
+            .session(vs, &FeParams::default(), f0, g0)
+            .unwrap();
+        for block in [1u64, 2, 1] {
+            session.advance(block).unwrap();
+            // a reduction between blocks must not perturb the state
+            session.observables().unwrap();
+        }
+        assert_eq!(session.steps_done(), 4);
+        let n = geom.nsites();
+        let mut f = vec![0.0; vs.nvel * n];
+        let mut g = vec![0.0; vs.nvel * n];
+        session.gather(&mut f, &mut g).unwrap();
+        let rep = session.finish().unwrap();
+        assert_eq!(f, f_want);
+        assert_eq!(g, g_want);
+        assert!(rep.ranks.iter().all(|r| r.steps == 4));
+    }
+
+    #[test]
+    fn reduced_observables_match_gathered_state() {
+        // distributed partial sums vs the single-sweep reduction of the
+        // gathered state: same values up to summation order (documented
+        // in Observables::from_sums), at every block boundary
+        let vs = d3q19();
+        let geom = Geometry::new(10, 4, 3);
+        let n = geom.nsites();
+        let world = CommsWorld::new(geom, CommsConfig {
+            ranks: 3,
+            ..CommsConfig::default()
+        })
+        .unwrap();
+        let (f0, g0) = spinodal(vs, &geom);
+        let mut session = world
+            .session(vs, &FeParams::default(), f0, g0)
+            .unwrap();
+        let mut f = vec![0.0; vs.nvel * n];
+        let mut g = vec![0.0; vs.nvel * n];
+        let close = |a: f64, b: f64, what: &str| {
+            assert!((a - b).abs() <= 1e-12 + 1e-9 * b.abs(),
+                    "{what}: {a} vs {b}");
+        };
+        for _ in 0..3 {
+            session.advance(2).unwrap();
+            let got = session.observables().unwrap();
+            session.gather(&mut f, &mut g).unwrap();
+            let want = state_observables(vs, &f, &g, n);
+            close(got.mass, want.mass, "mass");
+            close(got.phi_total, want.phi_total, "phi_total");
+            close(got.phi_variance, want.phi_variance, "phi_variance");
+            for a in 0..3 {
+                close(got.momentum[a], want.momentum[a], "momentum");
+            }
+        }
+        session.finish().unwrap();
+    }
+
+    #[test]
+    fn gather_phi_matches_host_phi_moment() {
+        let vs = d2q9();
+        let geom = Geometry::new(8, 5, 1);
+        let n = geom.nsites();
+        let world =
+            CommsWorld::new(geom, CommsConfig { ranks: 2,
+                                                ..CommsConfig::default() })
+                .unwrap();
+        let (f0, g0) = spinodal(vs, &geom);
+        let mut session = world
+            .session(vs, &FeParams::default(), f0, g0)
+            .unwrap();
+        session.advance(3).unwrap();
+        let phi = session.gather_phi().unwrap();
+        let mut f = vec![0.0; vs.nvel * n];
+        let mut g = vec![0.0; vs.nvel * n];
+        session.gather(&mut f, &mut g).unwrap();
+        session.finish().unwrap();
+        let mut want = vec![0.0; n];
+        crate::lb::moments::phi_from_g(vs, &g, &mut want, n,
+                                       &TlpPool::serial(), 8);
+        // identical per-site arithmetic → identical bits
+        assert_eq!(phi, want);
+    }
+
+    #[test]
     fn report_accounts_for_all_ranks() {
         let vs = d2q9();
         let geom = Geometry::new(10, 4, 1);
@@ -667,10 +1272,12 @@ mod tests {
         assert_eq!(owned, geom.nsites());
         for r in &rep.ranks {
             assert_eq!(r.steps, 5);
-            // 2 + 4 messages per step
+            // 2 + 4 halo messages per step; control-plane frames
+            // (commands, gathers, reports) are not halo traffic
             assert_eq!(r.msgs_sent, 30);
             assert!(r.bytes_sent > 0);
             assert!(r.compute_s >= 0.0 && r.wait_s >= 0.0);
+            assert!(r.idle_s >= 0.0);
         }
         assert!(rep.mlups() >= 0.0);
         assert!(rep.max_wait_s() >= 0.0);
@@ -699,5 +1306,29 @@ mod tests {
         assert!(world
             .run(vs, &FeParams::default(), &mut short, &mut g, 1)
             .is_err());
+        // gather-buffer validation happens before any command goes out
+        let (f0, g0) = spinodal(vs, &geom);
+        let mut session = world
+            .session(vs, &FeParams::default(), f0, g0)
+            .unwrap();
+        let mut small = vec![0.0; 3];
+        assert!(session.gather(&mut small, &mut g.clone()).is_err());
+        session.finish().unwrap();
+    }
+
+    #[test]
+    fn dropping_an_unfinished_session_shuts_down_cleanly() {
+        let vs = d2q9();
+        let geom = Geometry::new(6, 4, 1);
+        let world =
+            CommsWorld::new(geom, CommsConfig { ranks: 2,
+                                                ..CommsConfig::default() })
+                .unwrap();
+        let (f0, g0) = spinodal(vs, &geom);
+        let mut session = world
+            .session(vs, &FeParams::default(), f0, g0)
+            .unwrap();
+        session.advance(2).unwrap();
+        drop(session); // must broadcast Shutdown and join, not hang
     }
 }

@@ -13,6 +13,17 @@ use crate::targetdp::tlp::{Schedule, TlpPool};
 use crate::targetdp::{HostTarget, Target, XlaTarget};
 use crate::util::toml::{parse, Section};
 
+/// How a decomposed run computes per-block observables (the `[target]
+/// observables` knob / `--observables` flag).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ObservablesMode {
+    /// Distributed reduction: every rank sums its own interior, only the
+    /// O(ranks) partial sums travel (the `MPI_Allreduce` shape).
+    Reduced,
+    /// Gather the full state each block and reduce it in one sweep.
+    Gather,
+}
+
 /// Complete run configuration.
 #[derive(Debug, Clone)]
 pub struct Config {
@@ -66,6 +77,13 @@ pub struct TargetCfg {
     /// Overlap halo exchange with interior compute when `ranks > 1`
     /// (`false` = bulk-synchronous reference schedule; same results).
     pub overlap: bool,
+    /// How a decomposed (`ranks > 1`) run computes per-block observables:
+    /// `"reduced"` (default) combines distributed per-rank partial sums —
+    /// no global state moves between logging blocks; `"gather"` pulls the
+    /// full state back every block and reduces it in one sweep (the
+    /// bit-exact match for the single-engine path, at O(state) cost per
+    /// block).
+    pub observables: String,
 }
 
 impl Default for TargetCfg {
@@ -81,6 +99,7 @@ impl Default for TargetCfg {
             xla_vvl_block: 0,
             ranks: 1,
             overlap: true,
+            observables: "reduced".into(),
         }
     }
 }
@@ -139,6 +158,7 @@ impl Config {
             xla_vvl_block: tgt.usize_or("xla_vvl_block", 0)?,
             ranks: tgt.usize_or("ranks", dt.ranks)?,
             overlap: tgt.bool_or("overlap", dt.overlap)?,
+            observables: tgt.str_or("observables", &dt.observables)?,
         };
 
         let fe = Section::of(&doc, "free_energy");
@@ -174,6 +194,18 @@ impl Config {
                 self.simulation.lattice
             ))
         })
+    }
+
+    /// Per-block observables strategy for a decomposed run.
+    pub fn observables_mode(&self) -> Result<ObservablesMode> {
+        match self.target.observables.as_str() {
+            "reduced" => Ok(ObservablesMode::Reduced),
+            "gather" => Ok(ObservablesMode::Gather),
+            other => Err(Error::Parse(format!(
+                "unknown observables mode {other:?} (want \"reduced\" or \
+                 \"gather\")"
+            ))),
+        }
     }
 
     /// Comms-layer knobs for a decomposed (`ranks > 1`) run. The rank
@@ -396,6 +428,27 @@ mod tests {
         let mut scalar = cfg;
         scalar.target.backend = "host-scalar".into();
         assert!(scalar.comms_config().unwrap().scalar);
+    }
+
+    #[test]
+    fn observables_knob_parses_and_rejects() {
+        let cfg = Config::from_toml_str(SAMPLE).unwrap();
+        assert_eq!(cfg.target.observables, "reduced",
+                   "distributed reductions are the default");
+        assert_eq!(cfg.observables_mode().unwrap(),
+                   ObservablesMode::Reduced);
+
+        let cfg = Config::from_toml_str(
+            "[simulation]\nlattice = \"d2q9\"\nlx = 8\nly = 8\nlz = 1\n\
+             steps = 5\n\n[target]\nobservables = \"gather\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.observables_mode().unwrap(),
+                   ObservablesMode::Gather);
+
+        let mut bad = cfg;
+        bad.target.observables = "telepathy".into();
+        assert!(bad.observables_mode().is_err());
     }
 
     #[test]

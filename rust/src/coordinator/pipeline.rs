@@ -3,7 +3,7 @@
 
 use std::path::Path;
 
-use crate::config::Config;
+use crate::config::{Config, ObservablesMode};
 use crate::error::Result;
 use crate::lattice::io::{write_vtk_scalar, CsvWriter};
 use crate::lb::engine::{state_observables, LbEngine, Observables};
@@ -181,23 +181,26 @@ pub fn run_simulation(cfg: &Config) -> Result<RunSummary> {
     Ok(summary)
 }
 
-/// The `ranks > 1` pipeline: scatter the state over a comms rank world,
-/// advance in logging blocks, report per-rank MLUPS and exchange-wait
-/// breakdowns, and gather for observables/output exactly like the
-/// single-engine path.
+/// The `ranks > 1` pipeline: spawn a **resident** comms rank session
+/// (threads spawned exactly once, each rank owning its slab-local state
+/// for the whole run), advance in logging blocks over the session command
+/// protocol, and report per-rank MLUPS and exchange-wait breakdowns from
+/// the session-accumulated [`crate::comms::WorldReport`].
 ///
-/// Each logging block is one [`crate::comms::CommsWorld::run`]: the
-/// block observables need the gathered global state, so every block pays
-/// rank-thread spawn + scatter + gather (all included in the reported
-/// seconds/MLUPS). With `output.every = 0` the whole run is a single
-/// block; pick a coarse `every` for long decomposed runs — keeping the
-/// rank threads resident across blocks is a noted ROADMAP refinement.
+/// Per-block observables are **distributed reductions** by default
+/// (`[target] observables = "reduced"`): every rank sums its own interior
+/// and only O(ranks) partial sums travel — no global f/g scatter/gather
+/// between blocks. `"gather"` restores the old pull-everything-back
+/// behaviour (bit-exact with the single-engine reduction) at O(state)
+/// cost per block. The full state is gathered only on demand: the VTK
+/// snapshot asks the resident ranks for phi directly.
 fn run_decomposed_simulation(cfg: &Config) -> Result<RunSummary> {
     let geom = cfg.geometry();
     let model = cfg.model()?;
     let vs = model.velset();
     let n = geom.nsites();
     let ccfg = cfg.comms_config()?;
+    let mode = cfg.observables_mode()?;
     let world = crate::comms::CommsWorld::new(geom, ccfg.clone())?;
     let target_desc = format!(
         "comms(ranks={},{},{},vvl={},threads={})",
@@ -210,39 +213,56 @@ fn run_decomposed_simulation(cfg: &Config) -> Result<RunSummary> {
     println!("target   : {target_desc}");
     println!("lattice  : {} {}x{}x{} ({} sites)", model.name(), geom.lx,
              geom.ly, geom.lz, n);
-    println!("pipeline : rank-parallel unfused (halo exchange {})",
+    println!("pipeline : resident ranks, unfused (halo exchange {}, {} \
+              observables)",
              if ccfg.overlap { "overlapped with interior compute" }
-             else { "bulk-synchronous" });
+             else { "bulk-synchronous" },
+             match mode {
+                 ObservablesMode::Reduced => "distributed-reduction",
+                 ObservablesMode::Gather => "gathered-state",
+             });
     for d in &world.dec.domains {
         println!("rank {:>4}: x = [{}, {}) ({} planes)", d.rank, d.x0,
                  d.x0 + d.lxl, d.lxl);
     }
 
-    let (mut f, mut g) = init_state(cfg, &geom);
-    let initial = state_observables(vs, &f, &g, n);
+    let (f0, g0) = init_state(cfg, &geom);
+    let initial = state_observables(vs, &f0, &g0, n);
     println!("initial  : mass={:.6} phi={:.6} var={:.3e}", initial.mass,
              initial.phi_total, initial.phi_variance);
+
+    // the initial state moves into the session: each rank copies its own
+    // planes out of it (first touch on the rank's pool) and the threads
+    // stay resident until `finish`
+    let mut session = world.session(vs, &cfg.free_energy, f0, g0)?;
 
     let mut csv = open_observables_csv(cfg, &initial)?;
     let block = block_size(cfg);
     let mut mlups = Mlups::new();
     let timer = Timer::start();
     let mut done = 0;
-    // accumulated per-rank compute/wait over all blocks
-    let mut compute_s = vec![0.0f64; ccfg.ranks];
-    let mut wait_s = vec![0.0f64; ccfg.ranks];
-    let mut bytes_sent = 0u64;
+    // gather-mode scratch, allocated only when the knob asks for it
+    let mut gathered = match mode {
+        ObservablesMode::Gather => {
+            Some((vec![0.0; vs.nvel * n], vec![0.0; vs.nvel * n]))
+        }
+        ObservablesMode::Reduced => None,
+    };
+    let mut last_obs = initial;
     while done < cfg.simulation.steps {
         let todo = block.min(cfg.simulation.steps - done);
-        let rep = world.run(vs, &cfg.free_energy, &mut f, &mut g, todo)?;
-        mlups.record(n, todo, rep.seconds);
-        for r in &rep.ranks {
-            compute_s[r.rank] += r.compute_s;
-            wait_s[r.rank] += r.wait_s;
-            bytes_sent += r.bytes_sent;
-        }
+        let t = Timer::start();
+        session.advance(todo)?;
+        let obs = match gathered.as_mut() {
+            None => session.observables()?,
+            Some((f, g)) => {
+                session.gather(f, g)?;
+                state_observables(vs, f, g, n)
+            }
+        };
+        mlups.record(n, todo, t.seconds());
         done += todo;
-        let obs = state_observables(vs, &f, &g, n);
+        last_obs = obs;
         println!(
             "step {done:>6}: mass={:.6} phi={:.6} var={:.4e} [{:.2} MLUPS]",
             obs.mass, obs.phi_total, obs.phi_variance, mlups.value()
@@ -252,39 +272,36 @@ fn run_decomposed_simulation(cfg: &Config) -> Result<RunSummary> {
                     mlups.value()])?;
         }
     }
-
-    let final_obs = state_observables(vs, &f, &g, n);
-    println!("per-rank : (exchange wait share of wall time)");
-    for (d, (c, w)) in
-        world.dec.domains.iter().zip(compute_s.iter().zip(&wait_s))
-    {
-        let wall = c + w;
-        let rank_mlups = if wall > 0.0 {
-            (d.lxl * d.plane()) as f64 * done as f64 / wall / 1e6
-        } else {
-            0.0
-        };
-        println!(
-            "rank {:>4}: {:>8.2} MLUPS  compute {:.3}s  wait {:.3}s \
-             ({:.1}%)",
-            d.rank, rank_mlups, c, w,
-            if wall > 0.0 { 100.0 * w / wall } else { 0.0 }
-        );
-    }
-    println!("exchange : {:.2} MiB total over {} steps",
-             bytes_sent as f64 / (1024.0 * 1024.0), done);
+    let final_obs = last_obs;
 
     if cfg.output.vtk && !cfg.output.dir.is_empty() {
-        // phi from the gathered g state (no engine/target in this path)
-        let mut phi = vec![0.0; n];
-        crate::lb::moments::phi_from_g(
-            vs, &g, &mut phi, n,
-            &crate::targetdp::tlp::TlpPool::serial(), 8,
-        );
+        // phi computed by the resident ranks (their own pools and VVL) —
+        // only nsites doubles travel, not the nvel-component state
+        let phi = session.gather_phi()?;
         let path = Path::new(&cfg.output.dir).join("phi_final.vtk");
         write_vtk_scalar(&path, &geom, "phi", &phi)?;
         println!("wrote {}", path.display());
     }
+
+    // retire the resident ranks; each reports its whole-run totals
+    let report = session.finish()?;
+    println!("per-rank : (exchange wait share of working wall time)");
+    for r in &report.ranks {
+        println!(
+            "rank {:>4}: {:>8.2} MLUPS  compute {:.3}s  wait {:.3}s \
+             ({:.1}%)  idle {:.3}s",
+            r.rank,
+            r.mlups(),
+            r.compute_s,
+            r.wait_s,
+            100.0 * r.wait_fraction(),
+            r.idle_s,
+        );
+    }
+    let bytes_sent: u64 = report.ranks.iter().map(|r| r.bytes_sent).sum();
+    println!("exchange : {:.2} MiB total over {} steps",
+             bytes_sent as f64 / (1024.0 * 1024.0), done);
+
     if let Some(w) = csv.as_mut() {
         w.flush()?;
     }
@@ -381,7 +398,7 @@ mod tests {
 
     #[test]
     fn decomposed_run_matches_single_engine_run() {
-        let mk = |ranks: usize, overlap: bool| {
+        let mk = |ranks: usize, overlap: bool, observables: &str| {
             let mut cfg = Config {
                 simulation: crate::config::SimulationCfg {
                     lattice: "d2q9".into(),
@@ -400,18 +417,32 @@ mod tests {
             };
             cfg.target.ranks = ranks;
             cfg.target.overlap = overlap;
+            cfg.target.observables = observables.into();
             run_simulation(&cfg).unwrap()
         };
-        let single = mk(1, true); // engine path (fused FullStep)
-        let multi = mk(2, true); // comms path, overlapped
-        let bulk = mk(2, false); // comms path, bulk-synchronous
+        let single = mk(1, true, "reduced"); // engine path (fused)
+        let multi = mk(2, true, "gather"); // comms path, overlapped
+        let bulk = mk(2, false, "gather"); // comms path, bulk-sync
         assert!(single.fused && !multi.fused);
         assert!(multi.target.starts_with("comms(ranks=2"));
-        // the distribution level must not change the physics at all
+        // the distribution level must not change the physics at all:
+        // gathered-state observables reduce the bit-identical global
+        // state with the single sweep the engine path uses
         assert_eq!(single.r#final.phi_variance, multi.r#final.phi_variance);
         assert_eq!(single.r#final.mass, multi.r#final.mass);
         assert_eq!(multi.r#final.phi_variance, bulk.r#final.phi_variance);
         assert!(multi.mass_drift() < 1e-12);
+
+        // the default distributed reduction sums the same interiors in
+        // per-rank partial order: equal to rounding, and conservation
+        // holds exactly as tightly
+        let reduced = mk(2, true, "reduced");
+        let close = |a: f64, b: f64| (a - b).abs() <= 1e-12 + 1e-9 * b.abs();
+        assert!(close(reduced.r#final.mass, multi.r#final.mass));
+        assert!(close(reduced.r#final.phi_total, multi.r#final.phi_total));
+        assert!(close(reduced.r#final.phi_variance,
+                      multi.r#final.phi_variance));
+        assert!(reduced.mass_drift() < 1e-9);
     }
 
     #[test]

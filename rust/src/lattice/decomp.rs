@@ -62,6 +62,41 @@ impl SubDomain {
         }
     }
 
+    /// Copy out the interior planes of a local SoA field as one packed
+    /// payload (halo planes dropped) — the body of a comms `Gather`
+    /// response wire frame (`ncomp * lxl * plane` doubles,
+    /// component-major).
+    pub fn interior_of(&self, local: &[f64], ncomp: usize) -> Vec<f64> {
+        let ln = self.local.nsites();
+        let plane = self.plane();
+        debug_assert_eq!(local.len(), ncomp * ln);
+        let mut out = Vec::with_capacity(ncomp * self.lxl * plane);
+        for c in 0..ncomp {
+            out.extend_from_slice(
+                &local[c * ln + plane..c * ln + (self.lxl + 1) * plane],
+            );
+        }
+        out
+    }
+
+    /// Place a packed interior payload (the [`SubDomain::interior_of`]
+    /// layout) into a global SoA field at this subdomain's x offset — the
+    /// receiving half of a comms `Gather`.
+    pub fn place_interior(&self, interior: &[f64], ncomp: usize,
+                          global: &mut [f64]) {
+        let plane = self.plane();
+        let il = self.lxl * plane;
+        let gn = global.len() / ncomp;
+        debug_assert_eq!(interior.len(), ncomp * il);
+        debug_assert_eq!(global.len(), ncomp * gn);
+        debug_assert!((self.x0 + self.lxl) * plane <= gn);
+        for c in 0..ncomp {
+            let lo = c * gn + self.x0 * plane;
+            global[lo..lo + il]
+                .copy_from_slice(&interior[c * il..(c + 1) * il]);
+        }
+    }
+
     /// Copy this subdomain's interior planes back into a global SoA field
     /// — the inverse of [`SubDomain::scatter_into`].
     pub fn gather_from(&self, local: &[f64], ncomp: usize,
@@ -170,6 +205,24 @@ mod tests {
             (0..2 * geom.nsites()).map(|i| i as f64).collect();
         let locals = dec.scatter(&field, 2);
         assert_eq!(dec.gather(&locals, 2), field);
+    }
+
+    #[test]
+    fn interior_roundtrip_matches_gather() {
+        let geom = Geometry::new(9, 2, 3);
+        let dec = SlabDecomposition::new(geom, 4).unwrap();
+        let field: Vec<f64> =
+            (0..2 * geom.nsites()).map(|i| i as f64 * 0.25).collect();
+        let locals = dec.scatter(&field, 2);
+        // interior_of drops the halo planes; place_interior lands each
+        // payload exactly where gather_from would
+        let mut global = vec![0.0; 2 * geom.nsites()];
+        for (d, local) in dec.domains.iter().zip(&locals) {
+            let interior = d.interior_of(local, 2);
+            assert_eq!(interior.len(), 2 * d.lxl * d.plane());
+            d.place_interior(&interior, 2, &mut global);
+        }
+        assert_eq!(global, field);
     }
 
     #[test]

@@ -86,6 +86,30 @@ pub fn state_observables(vs: &crate::lb::model::VelSet, f: &[f64],
     }
 }
 
+impl Observables {
+    /// Build observables from exact global sums — the distributed
+    /// (allreduce-style) path: each comms rank reduces its own interior
+    /// and only the partial sums travel. The variance uses the one-pass
+    /// identity `var = E[phi^2] - mean^2` (clamped at 0 against a
+    /// rounding-negative result), and the mass/momentum/phi sums combine
+    /// per-rank partials in rank order. Both choices make the values
+    /// deterministic for a fixed decomposition but their summation
+    /// *order* differs from the single global sweep of
+    /// [`state_observables`] — the two agree to floating-point rounding,
+    /// not bitwise (`tests/resident_world.rs` pins the tolerance).
+    pub fn from_sums(mass: f64, momentum: [f64; 3], phi_total: f64,
+                     phi_sq: f64, nsites: usize) -> Observables {
+        let n = nsites as f64;
+        let mean = phi_total / n;
+        Observables {
+            mass,
+            momentum,
+            phi_total,
+            phi_variance: (phi_sq / n - mean * mean).max(0.0),
+        }
+    }
+}
+
 /// Binary-fluid LB simulation bound to one execution target.
 pub struct LbEngine<'t> {
     target: &'t mut dyn Target,

@@ -20,7 +20,8 @@ targetdp — lattice-based data parallelism with portable performance
 USAGE:
     targetdp run [--config FILE] [--backend B] [--lattice L] [--size N]
                  [--steps K] [--vvl V] [--threads T] [--multi-step M]
-                 [--ranks R] [--overlap true|false] [--out DIR] [--vtk]
+                 [--ranks R] [--overlap true|false]
+                 [--observables reduced|gather] [--out DIR] [--vtk]
     targetdp info
     targetdp help
 
@@ -34,6 +35,9 @@ run options (ignored when --config is given):
     --multi-step  host blocked steps/launch, 0=auto [0]
     --ranks       concurrent slab ranks (comms)     [1]
     --overlap     overlap halo exchange w/ compute  [true]
+    --observables per-block reduction for ranks > 1:
+                  distributed partials (reduced) or
+                  full-state gather                 [reduced]
     --out         output directory for CSV/VTK      [none]
     --vtk         dump a phi snapshot at the end
 ";
@@ -77,6 +81,8 @@ fn run() -> targetdp::Result<()> {
                             multi_step: args.u64_or("multi-step", 0)?,
                             ranks: args.usize_or("ranks", 1)?,
                             overlap: args.bool_or("overlap", true)?,
+                            observables: args.str_or("observables",
+                                                     "reduced"),
                             ..Default::default()
                         },
                         free_energy: Default::default(),

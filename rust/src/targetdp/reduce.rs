@@ -10,27 +10,44 @@
 //! partials combine in chunk order so the result is *deterministic* for a
 //! fixed (nsites, vvl), independent of thread count or schedule.
 
+use std::ops::Range;
+
 use crate::targetdp::tlp::TlpPool;
 
 /// Per-component lattice sum. `field`: `ncomp * nsites` SoA; `out`: ncomp.
 pub fn reduce_sum(field: &[f64], ncomp: usize, nsites: usize,
                   pool: &TlpPool, vvl: usize, out: &mut [f64]) {
+    reduce_sum_range(field, ncomp, nsites, 0..nsites, pool, vvl, out);
+}
+
+/// Ranged variant: per-component sum over only the sites in `sites` (used
+/// by the comms ranks, whose observable partials reduce the interior of a
+/// halo-padded local lattice). Chunk order is fixed by
+/// (`sites.len()`, `vvl`), so the result is deterministic for a given
+/// range, independent of thread count or schedule.
+pub fn reduce_sum_range(field: &[f64], ncomp: usize, nsites: usize,
+                        sites: Range<usize>, pool: &TlpPool, vvl: usize,
+                        out: &mut [f64]) {
     debug_assert_eq!(field.len(), ncomp * nsites);
     debug_assert_eq!(out.len(), ncomp);
-    if nsites == 0 {
+    debug_assert!(sites.end <= nsites);
+    let start = sites.start;
+    let count = sites.len();
+    if count == 0 {
         out.fill(0.0);
         return;
     }
 
     // one partial per (chunk, component), written disjointly by chunks
-    let nchunks = nsites.div_ceil(vvl);
+    let nchunks = count.div_ceil(vvl);
     let mut partials = vec![0.0f64; nchunks * ncomp];
     let ptr = SendPtr(partials.as_mut_ptr());
-    pool.for_chunks(nsites, vvl, |base, len| {
+    pool.for_chunks(count, vvl, |base, len| {
         let ptr = ptr;
         let chunk = base / vvl;
         for c in 0..ncomp {
-            let row = &field[c * nsites + base..c * nsites + base + len];
+            let lo = c * nsites + start + base;
+            let row = &field[lo..lo + len];
             // TARGET_ILP: fixed-extent lane loop the compiler vectorises
             let mut acc = 0.0;
             for v in row {
@@ -49,6 +66,39 @@ pub fn reduce_sum(field: &[f64], ncomp: usize, nsites: usize,
             out[c] += partials[chunk * ncomp + c];
         }
     }
+}
+
+/// Deterministic sum of squares of a single-component field over the
+/// sites in `sites` — the second moment the distributed phi-variance
+/// reduction needs. Same TLP × ILP strip-mining and chunk-order combine
+/// as [`reduce_sum_range`].
+pub fn reduce_sum_sq_range(field: &[f64], nsites: usize,
+                           sites: Range<usize>, pool: &TlpPool, vvl: usize)
+                           -> f64 {
+    debug_assert_eq!(field.len(), nsites);
+    debug_assert!(sites.end <= nsites);
+    let start = sites.start;
+    let count = sites.len();
+    if count == 0 {
+        return 0.0;
+    }
+    let nchunks = count.div_ceil(vvl);
+    let mut partials = vec![0.0f64; nchunks];
+    let ptr = SendPtr(partials.as_mut_ptr());
+    pool.for_chunks(count, vvl, |base, len| {
+        let ptr = ptr;
+        let chunk = base / vvl;
+        let row = &field[start + base..start + base + len];
+        // TARGET_ILP: fixed-extent lane loop the compiler vectorises
+        let mut acc = 0.0;
+        for v in row {
+            acc += v * v;
+        }
+        unsafe {
+            *ptr.0.add(chunk) = acc;
+        }
+    });
+    partials.iter().sum()
 }
 
 #[derive(Clone, Copy)]
@@ -116,5 +166,60 @@ mod tests {
         let mut out = vec![1.0; 2];
         reduce_sum(&[], 2, 0, &TlpPool::serial(), 8, &mut out);
         assert_eq!(out, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn ranged_sum_matches_manual_range() {
+        let (ncomp, nsites) = (4, 61);
+        let f = field(ncomp, nsites);
+        let range = 9..47;
+        let want: Vec<f64> = (0..ncomp)
+            .map(|c| {
+                f[c * nsites + range.start..c * nsites + range.end]
+                    .iter()
+                    .sum()
+            })
+            .collect();
+        let mut out = vec![0.0; ncomp];
+        reduce_sum_range(&f, ncomp, nsites, range.clone(),
+                         &TlpPool::serial(), 8, &mut out);
+        for (a, b) in out.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-10);
+        }
+        // bitwise deterministic across pools, like the full reduction
+        for pool in [TlpPool::new(3, Schedule::Static),
+                     TlpPool::new(2, Schedule::Dynamic { batch: 3 })] {
+            let mut got = vec![0.0; ncomp];
+            reduce_sum_range(&f, ncomp, nsites, range.clone(), &pool, 8,
+                             &mut got);
+            assert_eq!(got, out);
+        }
+        // empty range is a zero sum
+        let mut out = vec![1.0; ncomp];
+        reduce_sum_range(&f, ncomp, nsites, 5..5, &TlpPool::serial(), 8,
+                         &mut out);
+        assert!(out.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn ranged_sum_of_squares() {
+        let nsites = 37;
+        let f: Vec<f64> =
+            (0..nsites).map(|i| (i as f64 - 11.0) * 0.5).collect();
+        let range = 4..30;
+        let want: f64 = f[range.clone()].iter().map(|v| v * v).sum();
+        let got = reduce_sum_sq_range(&f, nsites, range.clone(),
+                                      &TlpPool::serial(), 8);
+        assert!((got - want).abs() < 1e-10);
+        // deterministic across pools
+        for pool in [TlpPool::new(4, Schedule::Static),
+                     TlpPool::new(3, Schedule::Dynamic { batch: 2 })] {
+            let again =
+                reduce_sum_sq_range(&f, nsites, range.clone(), &pool, 8);
+            assert_eq!(again.to_bits(), got.to_bits());
+        }
+        assert_eq!(reduce_sum_sq_range(&f, nsites, 12..12,
+                                       &TlpPool::serial(), 8),
+                   0.0);
     }
 }

@@ -1,0 +1,249 @@
+//! Residency parity: a resident comms session advanced in logging blocks
+//! — rank threads spawned once, state staying slab-local, commands
+//! pausing the ranks at a barrier between blocks — must be
+//! **bit-identical** to the one-shot world (single `Advance`) and to the
+//! single-domain fused `FullStep` engine, for every block pattern, rank
+//! count and exchange schedule. Per-block distributed observables must
+//! match the gathered-state reduction to summation-order rounding (the
+//! documented contract of `Observables::from_sums`).
+
+use targetdp::comms::{run_decomposed, CommsConfig, CommsWorld};
+use targetdp::free_energy::symmetric::FeParams;
+use targetdp::lattice::geometry::Geometry;
+use targetdp::lb::engine::{state_observables, LbEngine, Observables};
+use targetdp::lb::init;
+use targetdp::lb::model::LatticeModel;
+use targetdp::targetdp::tlp::TlpPool;
+use targetdp::targetdp::HostTarget;
+
+const STEPS: u64 = 10;
+
+/// Block patterns summing to [`STEPS`]: single-step blocks, coarse blocks
+/// with an uneven remainder, and a two-block split.
+const PATTERNS: [&[u64]; 3] =
+    [&[1, 1, 1, 1, 1, 1, 1, 1, 1, 1], &[3, 3, 3, 1], &[4, 6]];
+
+fn initial_state(model: LatticeModel, geom: &Geometry)
+                 -> (Vec<f64>, Vec<f64>) {
+    let vs = model.velset();
+    let n = geom.nsites();
+    let mut f = vec![0.0; vs.nvel * n];
+    let mut g = vec![0.0; vs.nvel * n];
+    init::init_spinodal(vs, &FeParams::default(), geom, &mut f, &mut g,
+                        0.06, 2024);
+    (f, g)
+}
+
+/// Single-domain reference through the engine's fused `FullStep` tier.
+fn fullstep_reference(model: LatticeModel, geom: &Geometry)
+                      -> (Vec<f64>, Vec<f64>) {
+    let (f0, g0) = initial_state(model, geom);
+    let mut target = HostTarget::simd(8, TlpPool::serial()).unwrap();
+    let mut engine =
+        LbEngine::new(&mut target, *geom, model, FeParams::default())
+            .unwrap();
+    assert!(engine.fused_active(), "host target must take the fused tier");
+    engine.load_state(&f0, &g0).unwrap();
+    engine.run(STEPS).unwrap();
+    let mut f = vec![0.0; f0.len()];
+    let mut g = vec![0.0; g0.len()];
+    engine.fetch_state(&mut f, &mut g).unwrap();
+    (f, g)
+}
+
+fn check_model(model: LatticeModel, geom: Geometry) {
+    let vs = model.velset();
+    let n = geom.nsites();
+    let (f_want, g_want) = fullstep_reference(model, &geom);
+    for ranks in [1usize, 2, 4] {
+        for overlap in [false, true] {
+            let cfg = CommsConfig {
+                ranks,
+                overlap,
+                threads: 4, // shared budget: ranks get 4/ranks workers
+                ..CommsConfig::default()
+            };
+
+            // one-shot world: the wrapper (session + single Advance)
+            let (mut f1, mut g1) = initial_state(model, &geom);
+            let rep = run_decomposed(&geom, vs, &FeParams::default(),
+                                     &mut f1, &mut g1, STEPS, &cfg)
+                .unwrap();
+            assert_eq!(rep.ranks.len(), ranks);
+            assert!(rep.ranks.iter().all(|r| r.steps == STEPS));
+            assert_eq!(
+                f1, f_want,
+                "{} ranks={ranks} overlap={overlap}: one-shot f diverged",
+                model.name()
+            );
+            assert_eq!(
+                g1, g_want,
+                "{} ranks={ranks} overlap={overlap}: one-shot g diverged",
+                model.name()
+            );
+
+            // resident sessions: same steps split into pause/resume
+            // blocks, with a distributed reduction at every boundary
+            for pattern in PATTERNS {
+                assert_eq!(pattern.iter().sum::<u64>(), STEPS);
+                let world = CommsWorld::new(geom, cfg.clone()).unwrap();
+                let (f0, g0) = initial_state(model, &geom);
+                let mut session = world
+                    .session(vs, &FeParams::default(), f0, g0)
+                    .unwrap();
+                for &block in pattern {
+                    session.advance(block).unwrap();
+                    // the between-block reduction must not perturb state
+                    session.observables().unwrap();
+                }
+                assert_eq!(session.steps_done(), STEPS);
+                let mut f = vec![0.0; vs.nvel * n];
+                let mut g = vec![0.0; vs.nvel * n];
+                session.gather(&mut f, &mut g).unwrap();
+                let rep = session.finish().unwrap();
+                assert!(rep.ranks.iter().all(|r| r.steps == STEPS));
+                assert_eq!(
+                    f, f_want,
+                    "{} ranks={ranks} overlap={overlap} blocks={pattern:?}: \
+                     resident f diverged",
+                    model.name()
+                );
+                assert_eq!(
+                    g, g_want,
+                    "{} ranks={ranks} overlap={overlap} blocks={pattern:?}: \
+                     resident g diverged",
+                    model.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn d3q19_resident_blocks_match_fullstep_bitwise() {
+    // lx = 13 over 4 ranks -> slabs of 4,3,3,3: uneven split exercised
+    check_model(LatticeModel::D3Q19, Geometry::new(13, 4, 4));
+}
+
+#[test]
+fn d2q9_resident_blocks_match_fullstep_bitwise() {
+    // lx = 10 over 4 ranks -> slabs of 3,3,2,2
+    check_model(LatticeModel::D2Q9, Geometry::new(10, 12, 1));
+}
+
+/// Distributed per-block observables vs the gathered-state reduction at
+/// every block boundary. The partial sums are exact per rank and combine
+/// in rank order; only the summation *order* differs from the single
+/// global sweep of `state_observables`, so the values agree to rounding
+/// (documented on `Observables::from_sums`) — pinned here with an
+/// absolute + relative tolerance.
+#[test]
+fn reduced_observables_track_gathered_state_at_every_boundary() {
+    let model = LatticeModel::D3Q19;
+    let geom = Geometry::new(12, 5, 4);
+    let vs = model.velset();
+    let n = geom.nsites();
+    let close = |a: f64, b: f64, what: &str, step: u64| {
+        assert!((a - b).abs() <= 1e-12 + 1e-9 * b.abs(),
+                "step {step} {what}: reduced {a} vs gathered {b}");
+    };
+    for ranks in [1usize, 3] {
+        let world = CommsWorld::new(geom, CommsConfig {
+            ranks,
+            ..CommsConfig::default()
+        })
+        .unwrap();
+        let (f0, g0) = initial_state(model, &geom);
+        let mut session =
+            world.session(vs, &FeParams::default(), f0, g0).unwrap();
+        let mut f = vec![0.0; vs.nvel * n];
+        let mut g = vec![0.0; vs.nvel * n];
+        for &block in &[3u64, 3, 4] {
+            session.advance(block).unwrap();
+            let got = session.observables().unwrap();
+            session.gather(&mut f, &mut g).unwrap();
+            let want = state_observables(vs, &f, &g, n);
+            let step = session.steps_done();
+            close(got.mass, want.mass, "mass", step);
+            close(got.phi_total, want.phi_total, "phi_total", step);
+            close(got.phi_variance, want.phi_variance, "phi_variance",
+                  step);
+            for a in 0..3 {
+                close(got.momentum[a], want.momentum[a], "momentum", step);
+            }
+        }
+        session.finish().unwrap();
+    }
+}
+
+/// The distributed reduction is deterministic: two identical resident
+/// runs produce bit-identical observables at every boundary.
+#[test]
+fn reduced_observables_are_deterministic() {
+    let model = LatticeModel::D2Q9;
+    let geom = Geometry::new(9, 7, 1);
+    let vs = model.velset();
+    let run = || -> Vec<Observables> {
+        let world = CommsWorld::new(geom, CommsConfig {
+            ranks: 3,
+            threads: 4,
+            ..CommsConfig::default()
+        })
+        .unwrap();
+        let (f0, g0) = initial_state(model, &geom);
+        let mut session =
+            world.session(vs, &FeParams::default(), f0, g0).unwrap();
+        let mut out = Vec::new();
+        for _ in 0..4 {
+            session.advance(2).unwrap();
+            out.push(session.observables().unwrap());
+        }
+        session.finish().unwrap();
+        out
+    };
+    let a = run();
+    let b = run();
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.mass.to_bits(), y.mass.to_bits());
+        assert_eq!(x.phi_total.to_bits(), y.phi_total.to_bits());
+        assert_eq!(x.phi_variance.to_bits(), y.phi_variance.to_bits());
+        for (ma, mb) in x.momentum.iter().zip(&y.momentum) {
+            assert_eq!(ma.to_bits(), mb.to_bits());
+        }
+    }
+}
+
+/// The halo-traffic totals accumulate across blocks exactly like a
+/// one-shot run: the command plane adds no halo messages, and a resident
+/// multi-block run moves the same planes as a single Advance.
+#[test]
+fn resident_traffic_matches_one_shot() {
+    let model = LatticeModel::D2Q9;
+    let geom = Geometry::new(12, 6, 1);
+    let vs = model.velset();
+    let cfg = CommsConfig { ranks: 3, ..CommsConfig::default() };
+
+    let (mut f, mut g) = initial_state(model, &geom);
+    let one_shot = run_decomposed(&geom, vs, &FeParams::default(), &mut f,
+                                  &mut g, STEPS, &cfg)
+        .unwrap();
+
+    let world = CommsWorld::new(geom, cfg).unwrap();
+    let (f0, g0) = initial_state(model, &geom);
+    let mut session =
+        world.session(vs, &FeParams::default(), f0, g0).unwrap();
+    for &block in &[2u64, 5, 3] {
+        session.advance(block).unwrap();
+        session.observables().unwrap();
+    }
+    let resident = session.finish().unwrap();
+
+    for (a, b) in one_shot.ranks.iter().zip(&resident.ranks) {
+        assert_eq!(a.rank, b.rank);
+        // 6 halo messages per rank per step in both worlds
+        assert_eq!(a.msgs_sent, 6 * STEPS);
+        assert_eq!(b.msgs_sent, 6 * STEPS);
+        assert_eq!(a.bytes_sent, b.bytes_sent);
+        assert!(b.idle_s >= 0.0 && b.compute_s >= 0.0 && b.wait_s >= 0.0);
+    }
+}
