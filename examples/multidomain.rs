@@ -1,10 +1,12 @@
 //! Rank-parallel decomposition demo: targetDP "in conjunction with MPI"
-//! (paper section I), here through the in-process comms subsystem.
+//! (paper section I), through the comms subsystem — in-process rank
+//! threads by default, real rank OS processes over TCP with
+//! `--transport socket`.
 //!
-//! Splits a 48x16x16 binary-fluid run into x-slab ranks, each on its own
-//! thread with its own TLP pool, exchanging serialized halo planes. For
-//! every rank count it runs both exchange schedules — bulk-synchronous
-//! and overlapped-with-interior-compute — verifies all of them produce
+//! Splits a 48x16x16 binary-fluid run into x-slab ranks, each with its
+//! own TLP pool, exchanging serialized halo planes. For every rank count
+//! it runs both exchange schedules — bulk-synchronous and
+//! overlapped-with-interior-compute — verifies all of them produce
 //! *identical* physics (gathered state equal to the 1-rank reference),
 //! and prints the per-rank MLUPS plus the compute/exchange-wait
 //! breakdown the overlap exists to shrink.
@@ -12,34 +14,75 @@
 //! ```text
 //! cargo run --release --example multidomain [-- --ranks N] [--steps K]
 //!                                           [--block B]
+//!                                           [--transport channel|socket]
 //! ```
 //!
 //! `--ranks N` restricts the sweep to one rank count (the CI smoke runs
 //! 2 and 4); the default sweeps 1, 2, 3, 4. `--block B` (B > 0) drives a
-//! **resident** session in logging blocks of B steps — rank threads
-//! spawned once, a distributed observable reduction at every block
-//! boundary, state gathered only at the end — and additionally checks
-//! the reduced observables against the gathered-state reduction.
+//! **resident** session in logging blocks of B steps — ranks spawned
+//! once, a distributed observable reduction at every block boundary,
+//! state gathered only at the end — and additionally checks the reduced
+//! observables against the gathered-state reduction.
+//!
+//! `--transport socket` promotes each rank to an OS process on loopback:
+//! the example re-executes itself in a child role (`--rank-child`), the
+//! processes rendezvous through `comms::launcher`, and the gathered
+//! state must *still* be bit-identical to the in-process reference —
+//! the CI smoke runs this with 2 processes.
 
-use targetdp::comms::{run_decomposed, CommsConfig, CommsWorld,
-                      WorldReport};
+use targetdp::comms::launcher::{connect_rank, LocalRanks, RankServer};
+use targetdp::comms::{run_decomposed, serve_rank, CommsConfig, CommsWorld,
+                      Transport, WorldReport};
 use targetdp::free_energy::symmetric::FeParams;
 use targetdp::lattice::geometry::Geometry;
 use targetdp::lb::engine::state_observables;
 use targetdp::lb::init;
-use targetdp::lb::model::d3q19;
+use targetdp::lb::model::{d3q19, VelSet};
+use targetdp::targetdp::tlp::threads_per_rank;
 use targetdp::util::cli::Args;
 
-#[allow(clippy::too_many_arguments)]
-fn run_resident(geom: &Geometry, vs: &'static targetdp::lb::model::VelSet,
-                p: &FeParams, f0: &[f64], g0: &[f64], steps: u64,
-                block: u64, cfg: &CommsConfig)
-                -> (Vec<f64>, Vec<f64>, WorldReport) {
+/// The one lattice + initial condition every process derives
+/// independently (the initialiser is deterministic, so parent and rank
+/// children agree bitwise).
+fn setup(vs: &VelSet) -> (Geometry, Vec<f64>, Vec<f64>) {
+    let geom = Geometry::new(48, 16, 16);
     let n = geom.nsites();
-    let world = CommsWorld::new(*geom, cfg.clone()).expect("world");
-    let mut session = world
-        .session(vs, p, f0.to_vec(), g0.to_vec())
-        .expect("session");
+    let mut f0 = vec![0.0; vs.nvel * n];
+    let mut g0 = vec![0.0; vs.nvel * n];
+    init::init_spinodal(vs, &FeParams::default(), &geom, &mut f0, &mut g0,
+                        0.08, 99);
+    (geom, f0, g0)
+}
+
+/// Child role (`--rank-child`, spawned by the socket path): rendezvous
+/// with the parent and serve one rank until Shutdown.
+fn rank_child(args: &Args) {
+    let server = args.get("connect").expect("child needs --connect");
+    let rank = args.usize_or("rank", 0).unwrap();
+    let ranks = args.usize_or("ranks", 1).unwrap();
+    let overlap = args.bool_or("overlap", true).unwrap();
+    let threads = args.usize_or("threads", 0).unwrap();
+    let (transport, _payload) =
+        connect_rank(server, Some(rank)).expect("rendezvous");
+    let vs = d3q19();
+    let (geom, f0, g0) = setup(vs);
+    let cfg = CommsConfig { ranks, overlap, threads,
+                            ..CommsConfig::default() };
+    let world = CommsWorld::new(geom, cfg.clone()).expect("world");
+    let d = world.dec.domains[transport.rank()].clone();
+    let nthreads = threads_per_rank(threads, ranks);
+    serve_rank(d, vs, &FeParams::default(), f0, g0, &cfg, nthreads,
+               Box::new(transport))
+        .expect("serve rank");
+}
+
+/// Drive a resident session (blocks of `block` steps, one-shot when
+/// `block >= steps`) and return the gathered final state + report.
+fn drive(mut session: targetdp::comms::CommsSession,
+         vs: &'static VelSet, n: usize, steps: u64, block: u64,
+         check_reduced: bool)
+         -> (Vec<f64>, Vec<f64>, WorldReport) {
+    let block = if block > 0 { block } else { steps };
     let mut done = 0;
     let mut last = None;
     while done < steps {
@@ -55,37 +98,71 @@ fn run_resident(geom: &Geometry, vs: &'static targetdp::lb::model::VelSet,
 
     // the distributed per-block reduction must track the gathered state
     // to summation-order rounding (Observables::from_sums contract)
-    if let Some(got) = last {
-        let want = state_observables(vs, &f, &g, n);
-        let close = |a: f64, b: f64| (a - b).abs() <= 1e-12 + 1e-9 * b.abs();
-        assert!(close(got.mass, want.mass)
-                    && close(got.phi_total, want.phi_total)
-                    && close(got.phi_variance, want.phi_variance),
-                "reduced observables diverged from the gathered state");
+    if check_reduced {
+        if let Some(got) = last {
+            let want = state_observables(vs, &f, &g, n);
+            let close =
+                |a: f64, b: f64| (a - b).abs() <= 1e-12 + 1e-9 * b.abs();
+            assert!(close(got.mass, want.mass)
+                        && close(got.phi_total, want.phi_total)
+                        && close(got.phi_variance, want.phi_variance),
+                    "reduced observables diverged from the gathered state");
+        }
     }
     (f, g, rep)
+}
+
+/// One run over rank OS processes on loopback: bind the rendezvous
+/// server, re-execute this example `ranks` times in the child role, and
+/// drive the remote session exactly like the in-process one.
+fn run_socket(geom: &Geometry, vs: &'static VelSet, steps: u64, block: u64,
+              cfg: &CommsConfig) -> (Vec<f64>, Vec<f64>, WorldReport) {
+    let server = RankServer::bind("127.0.0.1:0").expect("bind rank server");
+    let addr = server.local_addr().expect("rank server addr").to_string();
+    let extra = vec!["--rank-child".to_string(),
+                     "--ranks".to_string(), cfg.ranks.to_string(),
+                     "--overlap".to_string(), cfg.overlap.to_string(),
+                     "--threads".to_string(), cfg.threads.to_string()];
+    let local = LocalRanks::spawn(cfg.ranks, &addr, &extra)
+        .expect("spawn rank processes");
+    let controller =
+        server.rendezvous(cfg.ranks, &[]).expect("rendezvous");
+    let world = CommsWorld::new(*geom, cfg.clone()).expect("world");
+    let session = world
+        .remote_session(vs, Box::new(controller))
+        .expect("remote session");
+    let out = drive(session, vs, geom.nsites(), steps, block, block > 0);
+    local.wait().expect("rank processes exited cleanly");
+    out
 }
 
 fn main() {
     let args = Args::parse(std::env::args().skip(1))
         .expect("usage: multidomain [--ranks N] [--steps K] [--threads T] \
-                 [--block B]");
+                 [--block B] [--transport channel|socket]");
+    if args.has("rank-child") {
+        rank_child(&args);
+        return;
+    }
     let only_ranks = args.usize_or("ranks", 0).unwrap();
     let steps = args.u64_or("steps", 20).unwrap();
     let threads = args.usize_or("threads", 0).unwrap(); // 0 = machine
     let block = args.u64_or("block", 0).unwrap(); // 0 = one-shot world
+    let transport = args.str_or("transport", "channel");
+    let socket = match transport.as_str() {
+        "socket" => true,
+        "channel" => false,
+        other => panic!("--transport {other:?}: want channel or socket"),
+    };
 
     let vs = d3q19();
-    let p = FeParams::default();
-    let geom = Geometry::new(48, 16, 16);
+    let (geom, f0, g0) = setup(vs);
     let n = geom.nsites();
 
-    let mut f0 = vec![0.0; vs.nvel * n];
-    let mut g0 = vec![0.0; vs.nvel * n];
-    init::init_spinodal(vs, &p, &geom, &mut f0, &mut g0, 0.08, 99);
-
     println!("48x16x16 D3Q19 binary fluid, {steps} steps, concurrent \
-              x-slab ranks{}\n",
+              x-slab ranks{}{}\n",
+             if socket { " as OS processes (socket transport)" }
+             else { "" },
              if block > 0 {
                  format!(" (resident session, blocks of {block})")
              } else {
@@ -98,10 +175,12 @@ fn main() {
         vec![1, 2, 3, 4]
     };
 
-    // reference: 1 rank, bulk-sync (identical to the single-domain path)
+    // reference: 1 rank, bulk-sync, in-process (identical to the
+    // single-domain path) — the socket runs must match it bitwise too
     let mut f_ref = f0.clone();
     let mut g_ref = g0.clone();
-    run_decomposed(&geom, vs, &p, &mut f_ref, &mut g_ref, steps,
+    run_decomposed(&geom, vs, &FeParams::default(), &mut f_ref, &mut g_ref,
+                   steps,
                    &CommsConfig { ranks: 1, overlap: false, threads,
                                   ..CommsConfig::default() })
         .expect("reference run");
@@ -111,13 +190,21 @@ fn main() {
             let mode = if overlap { "overlapped" } else { "bulk-sync " };
             let cfg = CommsConfig { ranks, overlap, threads,
                                     ..CommsConfig::default() };
-            let (f, g, rep) = if block > 0 {
-                run_resident(&geom, vs, &p, &f0, &g0, steps, block, &cfg)
+            let (f, g, rep) = if socket {
+                run_socket(&geom, vs, steps, block, &cfg)
+            } else if block > 0 {
+                let world =
+                    CommsWorld::new(geom, cfg.clone()).expect("world");
+                let session = world
+                    .session(vs, &FeParams::default(), f0.clone(),
+                             g0.clone())
+                    .expect("session");
+                drive(session, vs, n, steps, block, true)
             } else {
                 let mut f = f0.clone();
                 let mut g = g0.clone();
-                let rep = run_decomposed(&geom, vs, &p, &mut f, &mut g,
-                                         steps, &cfg)
+                let rep = run_decomposed(&geom, vs, &FeParams::default(),
+                                         &mut f, &mut g, steps, &cfg)
                     .expect("decomposed run");
                 (f, g, rep)
             };
@@ -159,6 +246,7 @@ fn main() {
               wire format move, {:.1}% of a 4-rank slab",
              100.0 * (2.0 * plane as f64) / (n as f64 / 4.0));
     println!("PASS: all rank counts and both exchange schedules \
-              bit-identical{}",
-             if block > 0 { " across resident blocks" } else { "" });
+              bit-identical{}{}",
+             if block > 0 { " across resident blocks" } else { "" },
+             if socket { " across rank OS processes" } else { "" });
 }

@@ -1,0 +1,608 @@
+//! Rank launcher: rendezvous that turns N OS processes into a socket
+//! world, plus a local process spawner.
+//!
+//! A socket run has one **driver** process (holding the session
+//! controller endpoint — the analog of
+//! [`crate::comms::transport::ChannelTransport::mesh_with_controller`]'s
+//! controller) and N **rank** processes. Only the driver's address must
+//! be known up front; everything else is negotiated:
+//!
+//! ```text
+//! driver                                rank process (x N)
+//! ──────────────────────────            ─────────────────────────────
+//! RankServer::bind(addr)
+//!                                       connect_rank(addr, want_rank):
+//!                                         connect to the driver,
+//!                                         bind an ephemeral listener,
+//!                              ◄─ Hello   {want_rank, listen_port}
+//! rendezvous(n, payload):
+//!   accept n Hellos,
+//!   assign rank ids,
+//!   Welcome ─►                            {rank, nranks, payload,
+//!                                          roster of rank addresses}
+//!                                         peer mesh: connect to every
+//!                                         lower rank (PeerHello{rank}),
+//!                                         accept every higher rank
+//!   returns the controller              returns (SocketTransport,
+//!   SocketTransport                              payload)
+//! ```
+//!
+//! The `payload` is an opaque setup blob the driver broadcasts in the
+//! `Welcome` — the CLI ships the full run configuration (TOML) through
+//! it so every rank process rebuilds an identical simulation from one
+//! source of truth, and an example can ship nothing and parameterise its
+//! children by argv instead.
+//!
+//! Rank ids: a rank may request a specific id (`want_rank`, what
+//! [`spawn_local`] children do) or take the next free one in arrival
+//! order (what manually started multi-host ranks do). Requesting a taken
+//! or out-of-range id fails the whole rendezvous.
+//!
+//! The peer mesh cannot deadlock: a rank's listener is bound *before*
+//! its `Hello` is sent, so every address in the roster is already
+//! accepting by the time any peer sees it; lower ranks accept while
+//! higher ranks connect, and the driver writes all `Welcome`s without
+//! waiting on any rank.
+//!
+//! Deployment shapes (see `docs/architecture.md` for the walkthrough):
+//!
+//! * **spawn-local** — the driver binds `127.0.0.1:0` and spawns N
+//!   children of its own executable ([`spawn_local`] /
+//!   [`LocalRanks::spawn`]): `targetdp run --transport socket`.
+//! * **multi-host** — the driver binds a routable address
+//!   (`--rank-server host:port`) and the operator starts
+//!   `targetdp rank --connect host:port` on each host.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::process::Child;
+use std::time::{Duration, Instant};
+
+use crate::comms::socket::SocketTransport;
+use crate::error::{Error, Result};
+
+/// How long the whole rendezvous (and each handshake read inside it) may
+/// take before a missing rank process is reported instead of waited on.
+pub const RENDEZVOUS_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// Cap on the `Welcome` setup payload (a run config is a few hundred
+/// bytes; anything larger than this is corruption).
+const MAX_PAYLOAD_LEN: usize = 16 << 20;
+/// Cap on one roster address string.
+const MAX_ADDR_LEN: usize = 256;
+/// Cap on the world size a `Welcome` may announce.
+const MAX_NRANKS: usize = 1 << 16;
+
+const HELLO_MAGIC: [u8; 4] = *b"TDPH";
+const WELCOME_MAGIC: [u8; 4] = *b"TDPR";
+const PEER_MAGIC: [u8; 4] = *b"TDPP";
+const HANDSHAKE_VERSION: u8 = 1;
+
+fn resolve(addr: &str) -> Result<SocketAddr> {
+    addr.to_socket_addrs()
+        .map_err(|e| {
+            Error::Invalid(format!(
+                "comms launcher: cannot resolve {addr:?}: {e}"
+            ))
+        })?
+        .next()
+        .ok_or_else(|| {
+            Error::Invalid(format!(
+                "comms launcher: {addr:?} resolves to no address"
+            ))
+        })
+}
+
+fn read_exact_checked(stream: &mut TcpStream, buf: &mut [u8], what: &str)
+                      -> Result<()> {
+    stream.read_exact(buf).map_err(|e| {
+        Error::Invalid(format!(
+            "comms launcher: short read in {what} handshake: {e}"
+        ))
+    })
+}
+
+fn check_magic(got: &[u8; 4], want: &[u8; 4], version: u8, what: &str)
+               -> Result<()> {
+    if got != want {
+        return Err(Error::Invalid(format!(
+            "comms launcher: bad {what} magic {got:02x?}"
+        )));
+    }
+    if version != HANDSHAKE_VERSION {
+        return Err(Error::Invalid(format!(
+            "comms launcher: {what} handshake version {version} (want \
+             {HANDSHAKE_VERSION})"
+        )));
+    }
+    Ok(())
+}
+
+/// `Hello`: magic(4) version(1) want_rank(i64, -1 = any) listen_port(u16).
+fn write_hello(stream: &mut TcpStream, want_rank: Option<usize>,
+               listen_port: u16) -> Result<()> {
+    let mut buf = Vec::with_capacity(15);
+    buf.extend_from_slice(&HELLO_MAGIC);
+    buf.push(HANDSHAKE_VERSION);
+    let want: i64 = match want_rank {
+        Some(r) => i64::try_from(r).map_err(|_| {
+            Error::Invalid(format!("comms launcher: rank {r} out of range"))
+        })?,
+        None => -1,
+    };
+    buf.extend_from_slice(&want.to_le_bytes());
+    buf.extend_from_slice(&listen_port.to_le_bytes());
+    stream.write_all(&buf).map_err(Error::from)
+}
+
+fn read_hello(stream: &mut TcpStream) -> Result<(Option<usize>, u16)> {
+    let mut buf = [0u8; 15];
+    read_exact_checked(stream, &mut buf, "Hello")?;
+    check_magic(&buf[..4].try_into().unwrap(), &HELLO_MAGIC, buf[4],
+                "Hello")?;
+    let want = i64::from_le_bytes(buf[5..13].try_into().unwrap());
+    let port = u16::from_le_bytes(buf[13..15].try_into().unwrap());
+    let want = if want < 0 { None } else { Some(want as usize) };
+    Ok((want, port))
+}
+
+/// `Welcome`: magic(4) version(1) rank(u32) nranks(u32) payload_len(u32)
+/// payload, then `nranks` length-prefixed (u16) UTF-8 `ip:port` roster
+/// entries, rank order.
+fn write_welcome(stream: &mut TcpStream, rank: usize, nranks: usize,
+                 payload: &[u8], roster: &[SocketAddr]) -> Result<()> {
+    let mut buf = Vec::with_capacity(17 + payload.len() + 24 * nranks);
+    buf.extend_from_slice(&WELCOME_MAGIC);
+    buf.push(HANDSHAKE_VERSION);
+    buf.extend_from_slice(&(rank as u32).to_le_bytes());
+    buf.extend_from_slice(&(nranks as u32).to_le_bytes());
+    buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    buf.extend_from_slice(payload);
+    for addr in roster {
+        let s = addr.to_string();
+        buf.extend_from_slice(&(s.len() as u16).to_le_bytes());
+        buf.extend_from_slice(s.as_bytes());
+    }
+    stream.write_all(&buf).map_err(Error::from)
+}
+
+fn read_welcome(stream: &mut TcpStream)
+                -> Result<(usize, usize, Vec<u8>, Vec<String>)> {
+    let mut head = [0u8; 17];
+    read_exact_checked(stream, &mut head, "Welcome")?;
+    check_magic(&head[..4].try_into().unwrap(), &WELCOME_MAGIC, head[4],
+                "Welcome")?;
+    let rank = u32::from_le_bytes(head[5..9].try_into().unwrap()) as usize;
+    let nranks = u32::from_le_bytes(head[9..13].try_into().unwrap()) as usize;
+    let plen = u32::from_le_bytes(head[13..17].try_into().unwrap()) as usize;
+    if nranks == 0 || nranks > MAX_NRANKS || rank >= nranks {
+        return Err(Error::Invalid(format!(
+            "comms launcher: Welcome assigns rank {rank} of {nranks}"
+        )));
+    }
+    if plen > MAX_PAYLOAD_LEN {
+        return Err(Error::Invalid(format!(
+            "comms launcher: Welcome payload of {plen} bytes exceeds cap"
+        )));
+    }
+    let mut payload = vec![0u8; plen];
+    read_exact_checked(stream, &mut payload, "Welcome")?;
+    let mut roster = Vec::with_capacity(nranks);
+    for _ in 0..nranks {
+        let mut len = [0u8; 2];
+        read_exact_checked(stream, &mut len, "Welcome roster")?;
+        let len = u16::from_le_bytes(len) as usize;
+        if len > MAX_ADDR_LEN {
+            return Err(Error::Invalid(format!(
+                "comms launcher: roster address of {len} bytes"
+            )));
+        }
+        let mut addr = vec![0u8; len];
+        read_exact_checked(stream, &mut addr, "Welcome roster")?;
+        roster.push(String::from_utf8(addr).map_err(|_| {
+            Error::Invalid(
+                "comms launcher: roster address is not UTF-8".into(),
+            )
+        })?);
+    }
+    Ok((rank, nranks, payload, roster))
+}
+
+/// `PeerHello`: magic(4) version(1) rank(u32) — sent by the connecting
+/// (higher-id peers are connected *to*) side of a rank↔rank link.
+fn write_peer_hello(stream: &mut TcpStream, rank: usize) -> Result<()> {
+    let mut buf = Vec::with_capacity(9);
+    buf.extend_from_slice(&PEER_MAGIC);
+    buf.push(HANDSHAKE_VERSION);
+    buf.extend_from_slice(&(rank as u32).to_le_bytes());
+    stream.write_all(&buf).map_err(Error::from)
+}
+
+fn read_peer_hello(stream: &mut TcpStream) -> Result<usize> {
+    let mut buf = [0u8; 9];
+    read_exact_checked(stream, &mut buf, "PeerHello")?;
+    check_magic(&buf[..4].try_into().unwrap(), &PEER_MAGIC, buf[4],
+                "PeerHello")?;
+    Ok(u32::from_le_bytes(buf[5..9].try_into().unwrap()) as usize)
+}
+
+/// Accept one connection with a deadline (the listener is switched to
+/// non-blocking and polled so a missing peer cannot hang the rendezvous
+/// forever).
+fn accept_deadline(listener: &TcpListener, deadline: Instant, what: &str)
+                   -> Result<(TcpStream, SocketAddr)> {
+    listener.set_nonblocking(true)?;
+    loop {
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                stream.set_nonblocking(false)?;
+                stream.set_read_timeout(Some(RENDEZVOUS_TIMEOUT))?;
+                return Ok((stream, peer));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if Instant::now() >= deadline {
+                    return Err(Error::Invalid(format!(
+                        "comms launcher: timed out waiting for {what}"
+                    )));
+                }
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+}
+
+/// The driver's side of the rendezvous: a bound listener waiting for N
+/// rank processes.
+pub struct RankServer {
+    listener: TcpListener,
+}
+
+impl RankServer {
+    /// Bind the rank server. `"127.0.0.1:0"` picks a free loopback port
+    /// for a spawn-local run; a routable `host:port` serves a multi-host
+    /// one.
+    pub fn bind(addr: &str) -> Result<RankServer> {
+        let listener = TcpListener::bind(addr).map_err(|e| {
+            Error::Invalid(format!(
+                "comms launcher: cannot bind rank server on {addr:?}: {e}"
+            ))
+        })?;
+        Ok(RankServer { listener })
+    }
+
+    /// The bound address — what rank processes pass to `--connect` (and
+    /// what [`spawn_local`] forwards for you).
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        self.listener.local_addr().map_err(Error::from)
+    }
+
+    /// Run the rendezvous: accept `nranks` Hellos, assign rank ids
+    /// (explicit requests first, arrival order for the rest), broadcast
+    /// the `Welcome` (with `payload` and the full roster), and return
+    /// the **controller** transport (endpoint id `nranks`) the driver
+    /// hands to [`crate::comms::CommsWorld::remote_session`].
+    pub fn rendezvous(self, nranks: usize, payload: &[u8])
+                      -> Result<SocketTransport> {
+        if nranks == 0 || nranks > MAX_NRANKS {
+            return Err(Error::Invalid(format!(
+                "comms launcher: cannot rendezvous {nranks} ranks"
+            )));
+        }
+        let deadline = Instant::now() + RENDEZVOUS_TIMEOUT;
+        let mut pending: Vec<(TcpStream, Option<usize>, SocketAddr)> =
+            Vec::with_capacity(nranks);
+        while pending.len() < nranks {
+            let what = format!(
+                "rank processes ({}/{nranks} connected)",
+                pending.len()
+            );
+            let (mut stream, peer) =
+                accept_deadline(&self.listener, deadline, &what)?;
+            let (want, port) = read_hello(&mut stream)?;
+            // the roster advertises the rank's listener on the address
+            // this connection actually came from — the interface peers
+            // can route to
+            pending.push((stream, want, SocketAddr::new(peer.ip(), port)));
+        }
+        // explicit requests claim their slots first ...
+        let mut by_rank: Vec<Option<(TcpStream, SocketAddr)>> =
+            (0..nranks).map(|_| None).collect();
+        let mut anonymous = Vec::new();
+        for (stream, want, addr) in pending {
+            match want {
+                Some(r) => {
+                    if r >= nranks {
+                        return Err(Error::Invalid(format!(
+                            "comms launcher: a process asked for rank {r} \
+                             of a {nranks}-rank world"
+                        )));
+                    }
+                    if by_rank[r].is_some() {
+                        return Err(Error::Invalid(format!(
+                            "comms launcher: two processes asked for rank \
+                             {r}"
+                        )));
+                    }
+                    by_rank[r] = Some((stream, addr));
+                }
+                None => anonymous.push((stream, addr)),
+            }
+        }
+        // ... then arrival order fills the gaps
+        let mut anonymous = anonymous.into_iter();
+        for slot in by_rank.iter_mut() {
+            if slot.is_none() {
+                *slot = anonymous.next();
+            }
+        }
+        debug_assert!(anonymous.next().is_none(), "counts match");
+        let roster: Vec<SocketAddr> = by_rank
+            .iter()
+            .map(|s| s.as_ref().expect("every slot filled").1)
+            .collect();
+        let mut conns = Vec::with_capacity(nranks);
+        for (r, slot) in by_rank.into_iter().enumerate() {
+            let (mut stream, _) = slot.expect("every slot filled");
+            write_welcome(&mut stream, r, nranks, payload, &roster)?;
+            conns.push((r, stream));
+        }
+        SocketTransport::assemble(nranks, nranks, conns)
+    }
+}
+
+/// The rank process's side of the rendezvous: dial the driver at
+/// `server` (`host:port`), optionally requesting a specific rank id, and
+/// build this rank's full socket world. Returns the transport plus the
+/// driver's opaque setup payload. The returned endpoint is what
+/// [`crate::comms::serve_rank`] runs on.
+pub fn connect_rank(server: &str, want_rank: Option<usize>)
+                    -> Result<(SocketTransport, Vec<u8>)> {
+    let addr = resolve(server)?;
+    let mut ctl = TcpStream::connect_timeout(&addr, RENDEZVOUS_TIMEOUT)
+        .map_err(|e| {
+            Error::Invalid(format!(
+                "comms launcher: cannot reach rank server {server}: {e}"
+            ))
+        })?;
+    ctl.set_read_timeout(Some(RENDEZVOUS_TIMEOUT))?;
+    // accept higher-id peers on the interface that routes to the driver
+    // (its IP is how they will see us in the roster)
+    let listener =
+        TcpListener::bind(SocketAddr::new(ctl.local_addr()?.ip(), 0))?;
+    let listen_port = listener.local_addr()?.port();
+    write_hello(&mut ctl, want_rank, listen_port)?;
+    let (rank, nranks, payload, roster) = read_welcome(&mut ctl)?;
+    if let Some(want) = want_rank {
+        if want != rank {
+            return Err(Error::Invalid(format!(
+                "comms launcher: asked for rank {want}, driver assigned \
+                 {rank}"
+            )));
+        }
+    }
+    if roster.len() != nranks {
+        return Err(Error::Invalid(format!(
+            "comms launcher: roster of {} for {nranks} ranks",
+            roster.len()
+        )));
+    }
+    let mut conns: Vec<(usize, TcpStream)> = Vec::with_capacity(nranks);
+    // connect downward: every lower rank is already listening (its
+    // listener was bound before its Hello was sent)
+    for (j, peer_addr) in roster.iter().enumerate().take(rank) {
+        let a = resolve(peer_addr)?;
+        let mut s = TcpStream::connect_timeout(&a, RENDEZVOUS_TIMEOUT)
+            .map_err(|e| {
+                Error::Invalid(format!(
+                    "comms launcher: rank {rank} cannot reach rank {j} at \
+                     {peer_addr}: {e}"
+                ))
+            })?;
+        s.set_read_timeout(Some(RENDEZVOUS_TIMEOUT))?;
+        write_peer_hello(&mut s, rank)?;
+        conns.push((j, s));
+    }
+    // accept upward
+    let deadline = Instant::now() + RENDEZVOUS_TIMEOUT;
+    let mut seen = vec![false; nranks];
+    for _ in rank + 1..nranks {
+        let what = format!("higher-rank peers of rank {rank}");
+        let (mut stream, _) =
+            accept_deadline(&listener, deadline, &what)?;
+        let j = read_peer_hello(&mut stream)?;
+        if j <= rank || j >= nranks || seen[j] {
+            return Err(Error::Invalid(format!(
+                "comms launcher: rank {rank} got a peer hello from \
+                 invalid rank {j}"
+            )));
+        }
+        seen[j] = true;
+        conns.push((j, stream));
+    }
+    // the rendezvous connection doubles as the control-plane link
+    conns.push((nranks, ctl));
+    let transport = SocketTransport::assemble(rank, nranks, conns)?;
+    Ok((transport, payload))
+}
+
+/// Spawn `nranks` local rank processes of **this executable** on this
+/// host, each invoked as `<current_exe> <extra...> --connect <connect>
+/// --rank <i>`. The children inherit stdio so rank-side errors stay
+/// visible. Used by `targetdp run --transport socket` (extra =
+/// `["rank"]`) and by examples that re-enter themselves in a child role.
+pub fn spawn_local(nranks: usize, connect: &str, extra: &[String])
+                   -> Result<Vec<Child>> {
+    let exe = std::env::current_exe().map_err(|e| {
+        Error::Invalid(format!(
+            "comms launcher: cannot find this executable to spawn ranks: \
+             {e}"
+        ))
+    })?;
+    let mut children = Vec::with_capacity(nranks);
+    for r in 0..nranks {
+        let spawned = std::process::Command::new(&exe)
+            .args(extra)
+            .arg("--connect")
+            .arg(connect)
+            .arg("--rank")
+            .arg(r.to_string())
+            .spawn();
+        match spawned {
+            Ok(child) => children.push(child),
+            Err(e) => {
+                for c in &mut children {
+                    let _ = c.kill();
+                    let _ = c.wait();
+                }
+                return Err(Error::Invalid(format!(
+                    "comms launcher: failed to spawn rank process {r}: {e}"
+                )));
+            }
+        }
+    }
+    Ok(children)
+}
+
+/// Owner of spawn-local rank processes: [`LocalRanks::wait`] reaps them
+/// and fails if any exited non-zero; dropping unawaited kills the
+/// stragglers so an aborted driver never leaks rank processes.
+pub struct LocalRanks {
+    children: Vec<Child>,
+}
+
+impl LocalRanks {
+    /// [`spawn_local`] wrapped in the reaping owner.
+    pub fn spawn(nranks: usize, connect: &str, extra: &[String])
+                 -> Result<LocalRanks> {
+        Ok(LocalRanks { children: spawn_local(nranks, connect, extra)? })
+    }
+
+    /// Block until every rank process exits; error if any failed.
+    pub fn wait(mut self) -> Result<()> {
+        let children = std::mem::take(&mut self.children);
+        let mut failures = Vec::new();
+        for (r, mut c) in children.into_iter().enumerate() {
+            match c.wait() {
+                Ok(status) if status.success() => {}
+                Ok(status) => failures
+                    .push(format!("rank process {r} exited with {status}")),
+                Err(e) => failures.push(format!("rank process {r}: {e}")),
+            }
+        }
+        if failures.is_empty() {
+            Ok(())
+        } else {
+            Err(Error::Invalid(format!(
+                "comms launcher: {}",
+                failures.join("; ")
+            )))
+        }
+    }
+}
+
+impl Drop for LocalRanks {
+    fn drop(&mut self) {
+        for c in &mut self.children {
+            let _ = c.kill();
+        }
+        for c in &mut self.children {
+            let _ = c.wait();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comms::transport::Transport;
+
+    /// Full loopback rendezvous: N connect_rank threads + the server.
+    fn loopback(nranks: usize, wants: Vec<Option<usize>>)
+                -> (Vec<SocketTransport>, SocketTransport, Vec<Vec<u8>>) {
+        let server = RankServer::bind("127.0.0.1:0").unwrap();
+        let addr = server.local_addr().unwrap().to_string();
+        let joins: Vec<_> = wants
+            .into_iter()
+            .map(|want| {
+                let addr = addr.clone();
+                std::thread::spawn(move || {
+                    connect_rank(&addr, want).unwrap()
+                })
+            })
+            .collect();
+        let ctl = server.rendezvous(nranks, b"setup-blob").unwrap();
+        let mut ranks: Vec<Option<SocketTransport>> =
+            (0..nranks).map(|_| None).collect();
+        let mut payloads = Vec::new();
+        for j in joins {
+            let (t, payload) = j.join().unwrap();
+            payloads.push(payload);
+            let r = t.rank();
+            assert!(ranks[r].is_none(), "duplicate rank {r}");
+            ranks[r] = Some(t);
+        }
+        (ranks.into_iter().map(Option::unwrap).collect(), ctl, payloads)
+    }
+
+    #[test]
+    fn rendezvous_assigns_requested_ranks_and_ships_payload() {
+        let (ranks, ctl, payloads) =
+            loopback(3, vec![Some(2), Some(0), Some(1)]);
+        assert_eq!(ranks.len(), 3);
+        assert_eq!(ctl.rank(), 3, "controller id is nranks");
+        assert_eq!(ctl.nranks(), 3);
+        for (r, t) in ranks.iter().enumerate() {
+            assert_eq!(t.rank(), r);
+            assert_eq!(t.nranks(), 3);
+        }
+        for p in payloads {
+            assert_eq!(p, b"setup-blob");
+        }
+    }
+
+    #[test]
+    fn anonymous_ranks_get_distinct_ids() {
+        let (ranks, _ctl, _) = loopback(2, vec![None, None]);
+        let ids: Vec<usize> = ranks.iter().map(|t| t.rank()).collect();
+        assert_eq!(ids, vec![0, 1]);
+    }
+
+    #[test]
+    fn mesh_routes_rank_to_rank_and_controller_both_ways() {
+        let (mut ranks, mut ctl, _) = loopback(3, vec![Some(0), Some(1),
+                                                       Some(2)]);
+        // rank 0 -> rank 2 (a connection rank 2 initiated)
+        ranks[0].send_bytes(2, vec![1]).unwrap();
+        assert_eq!(ranks[2].recv_bytes().unwrap(), vec![1]);
+        // rank 2 -> rank 0 (same connection, other direction)
+        ranks[2].send_bytes(0, vec![2]).unwrap();
+        assert_eq!(ranks[0].recv_bytes().unwrap(), vec![2]);
+        // controller -> rank and back over the rendezvous link
+        ctl.send_bytes(1, vec![3]).unwrap();
+        assert_eq!(ranks[1].recv_bytes().unwrap(), vec![3]);
+        ranks[1].send_bytes(3, vec![4]).unwrap();
+        assert_eq!(ctl.recv_bytes().unwrap(), vec![4]);
+    }
+
+    #[test]
+    fn single_rank_rendezvous_works() {
+        let (mut ranks, _ctl, _) = loopback(1, vec![None]);
+        // no peer sockets, but the periodic self-seam still loops back
+        ranks[0].send_bytes(0, vec![9]).unwrap();
+        assert_eq!(ranks[0].recv_bytes().unwrap(), vec![9]);
+    }
+
+    #[test]
+    fn out_of_range_rank_request_fails_rendezvous() {
+        let server = RankServer::bind("127.0.0.1:0").unwrap();
+        let addr = server.local_addr().unwrap().to_string();
+        let child = std::thread::spawn(move || {
+            // the server rejects the request, so this side sees an error
+            // (a dropped connection mid-handshake) rather than a world
+            connect_rank(&addr, Some(7))
+        });
+        assert!(server.rendezvous(1, &[]).is_err());
+        assert!(child.join().unwrap().is_err());
+    }
+}

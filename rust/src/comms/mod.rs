@@ -9,8 +9,10 @@
 //! x-slab decomposition becomes a **rank** running concurrently on its
 //! own thread with its own TLP pool and its own first-touch-allocated
 //! fields, exchanging serialized halo planes through a pluggable
-//! [`transport::Transport`] — in-process channels today, sockets
-//! tomorrow, the rank-side code unchanged either way.
+//! [`transport::Transport`] — in-process channels
+//! ([`transport::ChannelTransport`]) or real TCP sockets spanning OS
+//! processes and hosts ([`socket::SocketTransport`] +
+//! [`launcher`]), the rank-side code unchanged either way.
 //!
 //! # Session lifecycle
 //!
@@ -86,18 +88,32 @@
 //! and `tests/resident_world.rs` pin both, `benches/halo_overlap.rs` and
 //! `benches/resident_world.rs` measure the difference).
 //!
-//! Remaining for the socket transport follow-up (ROADMAP): implement
-//! [`transport::Transport`]'s three byte-level methods over TCP and a
-//! rank-launcher CLI. The session control frames already travel as wire
-//! bytes through the same transport as the halo planes, so the resident
-//! protocol carries over unchanged.
+//! # Multi-process worlds
+//!
+//! The session control frames travel as wire bytes through the same
+//! transport as the halo planes, so promoting a run from threads to OS
+//! processes is purely a transport swap: [`socket::SocketTransport`]
+//! implements the three byte-level methods over per-peer TCP connections
+//! (length-prefixed [`wire::Frame`] bytes, reused verbatim), and
+//! [`launcher`] provides the rendezvous that assembles N processes into
+//! a world — the driver holds the controller endpoint
+//! ([`world::CommsWorld::remote_session`]) and each rank process runs
+//! [`world::serve_rank`]. `targetdp run --transport socket` spawns local
+//! rank processes automatically; `--rank-server host:port` +
+//! `targetdp rank --connect host:port` spans hosts. Socket runs are
+//! bit-identical to channel runs and to the single-domain fused engine
+//! (`tests/socket_transport.rs`; `docs/architecture.md` is the operator
+//! guide).
 
+pub mod launcher;
+pub mod socket;
 pub mod transport;
 pub mod wire;
 pub mod world;
 
+pub use socket::SocketTransport;
 pub use transport::{ChannelTransport, Transport};
 pub use wire::{Command, FieldId, Frame, InteriorField, InteriorMsg,
                PartialObs, Phase, PlaneMsg, ReportMsg, Side, Tag};
-pub use world::{run_decomposed, CommsConfig, CommsSession, CommsWorld,
-                Rank, RankReport, WorldReport};
+pub use world::{run_decomposed, serve_rank, CommsConfig, CommsSession,
+                CommsWorld, Rank, RankReport, WorldReport};

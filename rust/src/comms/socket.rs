@@ -1,0 +1,426 @@
+//! TCP socket transport: the [`Transport`] contract over real sockets.
+//!
+//! [`SocketTransport`] is the inter-process/inter-host implementation of
+//! the byte-level transport the rank world runs on. It moves the
+//! **exact** [`crate::comms::wire::Frame`] bytes the in-process
+//! [`crate::comms::transport::ChannelTransport`] ships through channels —
+//! the wire format is reused verbatim — so the whole session protocol
+//! (halo planes, commands, partial reductions, interior gathers, rank
+//! reports) carries over to a run spanning OS processes and hosts with no
+//! change above this layer.
+//!
+//! # Stream framing
+//!
+//! TCP is a byte stream, so each frame is **length-prefixed**:
+//!
+//! ```text
+//! offset  size  field
+//!      0     4  frame length `n` (u32 little-endian, <= MAX_FRAME_LEN)
+//!      4     n  encoded wire::Frame bytes (self-describing, strict
+//!               decode one layer up)
+//! ```
+//!
+//! One TCP connection exists per endpoint pair that talks (rank ↔ rank
+//! neighbours plus controller ↔ every rank), established by the
+//! rendezvous handshake in [`crate::comms::launcher`], and is used in
+//! **both** directions. TCP's in-order delivery per connection gives
+//! exactly the per-sender-pair ordering the [`Transport`] contract asks
+//! for; ordering across different senders is unspecified, as in MPI.
+//!
+//! # Receive path and the no-partial-frame guarantee
+//!
+//! Each connection gets a reader thread that blocks on the socket,
+//! reassembles complete frames (handling short reads — a frame may arrive
+//! split across many TCP segments), and enqueues them on the endpoint's
+//! single inbox. [`Transport::recv_bytes`] /
+//! [`Transport::recv_bytes_timeout`] pop that queue, so a receive returns
+//! **only whole frames, never a partial one**: a timeout leaves a
+//! half-arrived frame with the reader thread, and a stream that dies
+//! mid-frame surfaces as an error, not as truncated bytes. A connection
+//! that closes cleanly *between* frames is a normal peer exit; when every
+//! connection is gone a blocked receive reports the dead world instead of
+//! hanging (mirroring `ChannelTransport`'s disconnect semantics). One
+//! exception: on a **rank** endpoint the *controller* link closing
+//! without a `Shutdown` frame means the driver is gone, and surfaces as
+//! an error immediately — a rank process parked at the command barrier
+//! still holds open links to its (equally parked) peers, so waiting for
+//! a full disconnect would orphan every rank process on every host.
+//!
+//! # Shutdown
+//!
+//! Dropping the transport shuts down every connection (both directions)
+//! and joins the reader threads. Bytes already written — e.g. the final
+//! `Report` frame a rank sends before exiting — are flushed by the OS
+//! before the FIN, so the deterministic session teardown (`Shutdown`
+//! frame → rank drains → `Report` → close) loses nothing.
+
+use std::io::Read;
+use std::net::{Shutdown, TcpStream};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::comms::transport::Transport;
+use crate::error::{Error, Result};
+
+/// Upper bound on one frame's encoded size (1 GiB). A length prefix above
+/// this is treated as stream corruption rather than honoured with a
+/// gigantic allocation.
+pub const MAX_FRAME_LEN: usize = 1 << 30;
+
+/// What a reader thread hands the inbox: one complete frame, or the
+/// reason its connection died mid-frame.
+type InboxItem = std::result::Result<Vec<u8>, String>;
+
+/// [`Transport`] over per-peer TCP connections.
+///
+/// Built by the rendezvous in [`crate::comms::launcher`] (never
+/// directly): ranks get one connection per peer they talk to plus one to
+/// the session controller; the controller gets one per rank. See the
+/// module docs for framing and ordering guarantees.
+pub struct SocketTransport {
+    rank: usize,
+    nranks: usize,
+    /// Write sides, indexed by endpoint id (`nranks` = controller). The
+    /// slot for this endpoint is `None` — self-sends go through
+    /// `self_tx` and only exist in a 1-rank world.
+    peers: Vec<Option<TcpStream>>,
+    /// Complete frames from every reader thread, in per-connection order.
+    inbox: Receiver<InboxItem>,
+    /// Loopback sender for the single-rank periodic seam (the lattice's
+    /// one rank exchanges halos with itself). `None` in every other
+    /// configuration so a dead world disconnects the inbox.
+    self_tx: Option<Sender<InboxItem>>,
+    readers: Vec<JoinHandle<()>>,
+}
+
+impl SocketTransport {
+    /// Assemble an endpoint from established, handshaken connections:
+    /// `(endpoint id, stream)` pairs, one per peer this endpoint talks
+    /// to. `rank == nranks` builds the controller endpoint.
+    pub(crate) fn assemble(rank: usize, nranks: usize,
+                           conns: Vec<(usize, TcpStream)>)
+                           -> Result<SocketTransport> {
+        let (tx, inbox) = channel::<InboxItem>();
+        let mut peers: Vec<Option<TcpStream>> =
+            (0..nranks + 1).map(|_| None).collect();
+        let mut readers = Vec::with_capacity(conns.len());
+        for (peer, stream) in conns {
+            if peer > nranks || peer == rank {
+                return Err(Error::Invalid(format!(
+                    "comms socket: endpoint {rank} given a connection to \
+                     invalid peer {peer} (nranks {nranks})"
+                )));
+            }
+            if peers[peer].is_some() {
+                return Err(Error::Invalid(format!(
+                    "comms socket: endpoint {rank} given two connections \
+                     to peer {peer}"
+                )));
+            }
+            // handshake may have set timeouts; the steady-state reader
+            // blocks indefinitely (liveness timeouts live one layer up,
+            // in Transport::recv_bytes_timeout)
+            stream.set_read_timeout(None)?;
+            stream.set_write_timeout(None)?;
+            // halo planes are latency-sensitive and sent as one buffered
+            // write each — don't let Nagle hold them back
+            stream.set_nodelay(true)?;
+            peers[peer] = Some(stream.try_clone()?);
+            let tx = tx.clone();
+            // A clean close from a *peer rank* is normal teardown (it
+            // already delivered everything; per-connection order makes
+            // its last frames arrive first), but for a rank endpoint the
+            // *controller* link closing cleanly without a Shutdown frame
+            // means the driver is gone — without this, a rank process
+            // parked at the command barrier would keep its peer links
+            // open (every peer is parked too), the inbox would never
+            // disconnect, and the orphaned process would wait forever.
+            let on_eof = (rank < nranks && peer == nranks).then(|| {
+                "comms socket: the session controller closed the \
+                 connection without Shutdown — driver gone"
+                    .to_string()
+            });
+            readers.push(std::thread::spawn(move || {
+                reader_loop(stream, &tx, on_eof)
+            }));
+        }
+        // mirror ChannelTransport: only the single rank of a 1-rank world
+        // keeps a handle to its own inbox (the periodic self-seam)
+        let self_tx = (nranks == 1 && rank == 0).then(|| tx.clone());
+        drop(tx);
+        Ok(SocketTransport { rank, nranks, peers, inbox, self_tx, readers })
+    }
+}
+
+/// Read frames off one connection until it closes, pushing each complete
+/// frame to the shared inbox. A clean close at a frame boundary ends the
+/// thread silently — unless `on_eof` carries a message (the controller
+/// link of a rank endpoint), in which case the close itself is reported;
+/// a death mid-frame (or an over-cap length prefix) always forwards the
+/// error so the blocked receiver can diagnose it.
+fn reader_loop(mut stream: TcpStream, tx: &Sender<InboxItem>,
+               on_eof: Option<String>) {
+    loop {
+        match read_frame(&mut stream) {
+            Ok(Some(bytes)) => {
+                if tx.send(Ok(bytes)).is_err() {
+                    return; // transport dropped; stop reading
+                }
+            }
+            Ok(None) => {
+                if let Some(msg) = on_eof {
+                    let _ = tx.send(Err(msg));
+                }
+                return;
+            }
+            Err(e) => {
+                let _ = tx.send(Err(format!(
+                    "comms socket: connection died mid-frame: {e}"
+                )));
+                return;
+            }
+        }
+    }
+}
+
+/// Read one length-prefixed frame. `Ok(None)` = the stream closed cleanly
+/// at a frame boundary; an EOF anywhere inside a frame is an error — a
+/// partial frame is never returned.
+fn read_frame(stream: &mut TcpStream) -> std::io::Result<Option<Vec<u8>>> {
+    use std::io::{Error as IoError, ErrorKind};
+    let mut len = [0u8; 4];
+    let mut got = 0;
+    while got < 4 {
+        let n = stream.read(&mut len[got..])?;
+        if n == 0 {
+            if got == 0 {
+                return Ok(None);
+            }
+            return Err(IoError::new(
+                ErrorKind::UnexpectedEof,
+                "stream ended inside a frame length prefix",
+            ));
+        }
+        got += n;
+    }
+    let len = u32::from_le_bytes(len) as usize;
+    if len > MAX_FRAME_LEN {
+        return Err(IoError::new(
+            ErrorKind::InvalidData,
+            format!("frame length {len} exceeds the {MAX_FRAME_LEN} cap"),
+        ));
+    }
+    let mut buf = vec![0u8; len];
+    stream.read_exact(&mut buf)?;
+    Ok(Some(buf))
+}
+
+impl Transport for SocketTransport {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn nranks(&self) -> usize {
+        self.nranks
+    }
+
+    fn send_bytes(&mut self, dst: usize, frame: Vec<u8>) -> Result<()> {
+        use std::io::Write;
+        if frame.len() > MAX_FRAME_LEN {
+            return Err(Error::Invalid(format!(
+                "comms socket: frame of {} bytes exceeds the \
+                 {MAX_FRAME_LEN} cap",
+                frame.len()
+            )));
+        }
+        if dst == self.rank {
+            // the single rank of a 1-rank world talks to itself across
+            // the periodic seam without touching a socket
+            let tx = self.self_tx.as_ref().ok_or_else(|| {
+                Error::Invalid(format!(
+                    "comms: send to endpoint {dst} of a {}-rank world \
+                     (self-sends only exist in a 1-rank world)",
+                    self.nranks
+                ))
+            })?;
+            return tx.send(Ok(frame)).map_err(|_| {
+                Error::Invalid("comms socket: self inbox closed".into())
+            });
+        }
+        let stream = self
+            .peers
+            .get_mut(dst)
+            .and_then(Option::as_mut)
+            .ok_or_else(|| {
+                Error::Invalid(format!(
+                    "comms: send to endpoint {dst} of a {}-rank world \
+                     (no connection)",
+                    self.nranks
+                ))
+            })?;
+        // one buffered write per frame: with TCP_NODELAY set, prefix and
+        // payload leave as a single segment instead of two packets
+        let mut msg = Vec::with_capacity(4 + frame.len());
+        msg.extend_from_slice(&(frame.len() as u32).to_le_bytes());
+        msg.extend_from_slice(&frame);
+        stream.write_all(&msg).map_err(|e| {
+            Error::Invalid(format!("comms: endpoint {dst} hung up ({e})"))
+        })
+    }
+
+    fn recv_bytes(&mut self) -> Result<Vec<u8>> {
+        match self.inbox.recv() {
+            Ok(Ok(bytes)) => Ok(bytes),
+            Ok(Err(msg)) => Err(Error::Invalid(msg)),
+            Err(_) => Err(Error::Invalid(
+                "comms: all peers hung up while receiving".to_string(),
+            )),
+        }
+    }
+
+    fn recv_bytes_timeout(&mut self, timeout: Duration)
+                          -> Result<Option<Vec<u8>>> {
+        match self.inbox.recv_timeout(timeout) {
+            Ok(Ok(bytes)) => Ok(Some(bytes)),
+            Ok(Err(msg)) => Err(Error::Invalid(msg)),
+            Err(RecvTimeoutError::Timeout) => Ok(None),
+            Err(RecvTimeoutError::Disconnected) => Err(Error::Invalid(
+                "comms: all peers hung up while receiving".to_string(),
+            )),
+        }
+    }
+}
+
+impl Drop for SocketTransport {
+    fn drop(&mut self) {
+        // closing both directions unblocks our reader threads (their
+        // reads return EOF/error on the shared underlying socket) and
+        // tells every peer we are gone; already-written bytes are still
+        // flushed before the FIN
+        for s in self.peers.iter().flatten() {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+        for h in self.readers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+    use std::net::TcpListener;
+
+    /// A raw socket pair on loopback (accepted, connected).
+    fn pair() -> (TcpStream, TcpStream) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let connect = std::thread::spawn(move || {
+            TcpStream::connect(addr).unwrap()
+        });
+        let (accepted, _) = listener.accept().unwrap();
+        (accepted, connect.join().unwrap())
+    }
+
+    #[test]
+    fn frames_cross_a_socket_pair_in_order() {
+        let (a, b) = pair();
+        let mut t0 = SocketTransport::assemble(0, 2, vec![(1, a)]).unwrap();
+        let mut t1 = SocketTransport::assemble(1, 2, vec![(0, b)]).unwrap();
+        t0.send_bytes(1, vec![1, 2, 3]).unwrap();
+        t0.send_bytes(1, vec![]).unwrap();
+        t0.send_bytes(1, vec![9; 100_000]).unwrap();
+        assert_eq!(t1.recv_bytes().unwrap(), vec![1, 2, 3]);
+        assert_eq!(t1.recv_bytes().unwrap(), Vec::<u8>::new());
+        assert_eq!(t1.recv_bytes().unwrap(), vec![9; 100_000]);
+        // and the reverse direction of the same connection
+        t1.send_bytes(0, vec![7]).unwrap();
+        assert_eq!(t0.recv_bytes().unwrap(), vec![7]);
+    }
+
+    #[test]
+    fn timeout_returns_none_without_consuming_anything() {
+        let (a, b) = pair();
+        let mut t0 = SocketTransport::assemble(0, 2, vec![(1, a)]).unwrap();
+        let mut t1 = SocketTransport::assemble(1, 2, vec![(0, b)]).unwrap();
+        assert!(t1
+            .recv_bytes_timeout(Duration::from_millis(20))
+            .unwrap()
+            .is_none());
+        t0.send_bytes(1, vec![5, 6]).unwrap();
+        assert_eq!(t1
+            .recv_bytes_timeout(Duration::from_secs(10))
+            .unwrap(),
+            Some(vec![5, 6]));
+    }
+
+    #[test]
+    fn truncated_frame_is_an_error_not_a_partial_delivery() {
+        let (a, mut raw) = pair();
+        let mut t = SocketTransport::assemble(0, 2, vec![(1, a)]).unwrap();
+        // a length prefix promising 16 bytes, then only 8, then FIN
+        raw.write_all(&16u32.to_le_bytes()).unwrap();
+        raw.write_all(&[0u8; 8]).unwrap();
+        drop(raw);
+        let got = t.recv_bytes_timeout(Duration::from_secs(10));
+        assert!(got.is_err(), "partial frame must error, got {got:?}");
+    }
+
+    #[test]
+    fn oversize_length_prefix_rejected() {
+        let (a, mut raw) = pair();
+        let mut t = SocketTransport::assemble(0, 2, vec![(1, a)]).unwrap();
+        raw.write_all(&u32::MAX.to_le_bytes()).unwrap();
+        let got = t.recv_bytes_timeout(Duration::from_secs(10));
+        assert!(got.is_err(), "over-cap length must error, got {got:?}");
+    }
+
+    #[test]
+    fn clean_close_surfaces_as_disconnect() {
+        let (a, b) = pair();
+        let mut t0 = SocketTransport::assemble(0, 2, vec![(1, a)]).unwrap();
+        let t1 = SocketTransport::assemble(1, 2, vec![(0, b)]).unwrap();
+        drop(t1); // peer exits between frames
+        assert!(t0.recv_bytes().is_err());
+        assert!(t0.recv_bytes_timeout(Duration::from_secs(30)).is_err());
+    }
+
+    #[test]
+    fn controller_eof_surfaces_to_a_rank_endpoint() {
+        // a rank endpoint whose controller link (peer id = nranks) dies
+        // cleanly without a Shutdown frame must see an error — not wait
+        // at the command barrier forever while its peer links stay open
+        let (a, raw) = pair();
+        let mut t = SocketTransport::assemble(0, 2, vec![(2, a)]).unwrap();
+        drop(raw); // the driver vanishes
+        let got = t.recv_bytes_timeout(Duration::from_secs(10));
+        assert!(got.is_err(), "controller EOF must error, got {got:?}");
+    }
+
+    #[test]
+    fn one_rank_world_self_sends_across_the_seam() {
+        // no sockets at all: the single rank's periodic seam is a local
+        // loopback, exactly like ChannelTransport::mesh(1)
+        let mut t = SocketTransport::assemble(0, 1, vec![]).unwrap();
+        t.send_bytes(0, vec![4, 2]).unwrap();
+        assert_eq!(t.recv_bytes().unwrap(), vec![4, 2]);
+    }
+
+    #[test]
+    fn invalid_destinations_rejected() {
+        let (a, _b) = pair();
+        let mut t = SocketTransport::assemble(0, 2, vec![(1, a)]).unwrap();
+        assert!(t.send_bytes(5, vec![1]).is_err(), "out of range");
+        assert!(t.send_bytes(0, vec![1]).is_err(),
+                "multi-rank worlds never self-send");
+        // assembling with a self-connection or duplicate peer is refused
+        let (c, _d) = pair();
+        assert!(SocketTransport::assemble(0, 2, vec![(0, c)]).is_err());
+        let (e, _f) = pair();
+        let (g, _h) = pair();
+        assert!(SocketTransport::assemble(0, 2, vec![(1, e), (1, g)])
+            .is_err());
+    }
+}

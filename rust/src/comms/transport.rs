@@ -17,12 +17,17 @@
 //! socket transport carries the whole session protocol by implementing
 //! the three byte-level methods — the control plane needs nothing extra.
 //!
-//! [`ChannelTransport`] is the in-process implementation: every endpoint
-//! runs on its own OS thread and frames travel through `std::sync::mpsc`
-//! channels (the shared-memory BTL analog). It still moves *encoded
-//! bytes*, not structs, so every run exercises the exact frames a socket
-//! transport would put on a TCP stream — dropping in a remote transport
-//! is implementing this trait over a socket pair (ROADMAP follow-up).
+//! Two implementations exist:
+//!
+//! * [`ChannelTransport`] — in-process: every endpoint runs on its own
+//!   OS thread and frames travel through `std::sync::mpsc` channels (the
+//!   shared-memory BTL analog). It still moves *encoded bytes*, not
+//!   structs, so every run exercises the exact frames the socket
+//!   transport puts on a TCP stream.
+//! * [`crate::comms::socket::SocketTransport`] — inter-process: the same
+//!   frames, length-prefixed, over per-peer TCP connections assembled by
+//!   the [`crate::comms::launcher`] rendezvous. A run spans real
+//!   processes and hosts with no change above this trait.
 
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::time::Duration;
@@ -31,6 +36,47 @@ use crate::comms::wire::{Frame, PlaneMsg, Tag};
 use crate::error::{Error, Result};
 
 /// One endpoint's port into the communication fabric.
+///
+/// # Contract every implementation must satisfy
+///
+/// * **Whole frames only.** A successful receive returns the complete
+///   byte image of exactly one sent frame — **never a partial frame, a
+///   concatenation, or a resend**. A timeout ([`recv_bytes_timeout`]
+///   returning `Ok(None)`) consumes nothing: a frame still in flight is
+///   delivered intact by a later receive. A connection that dies
+///   mid-frame must surface as an `Err`, not as truncated bytes.
+/// * **Per-sender-pair ordering.** Frames from one sender to one
+///   receiver arrive in send order (MPI's non-overtaking rule); no
+///   ordering is promised across different senders. The layers above
+///   depend on exactly this — commands are sequenced per sender, halo
+///   planes are disambiguated by [`Tag`].
+/// * **Local send completion.** [`send_bytes`] may buffer; it completes
+///   locally (`MPI_Isend`) and returning `Ok` does not imply delivery.
+/// * **Dead worlds surface.** When every peer is gone, a blocking
+///   receive must return an error rather than hang forever.
+///
+/// [`recv_bytes_timeout`]: Transport::recv_bytes_timeout
+/// [`send_bytes`]: Transport::send_bytes
+/// [`Tag`]: crate::comms::wire::Tag
+///
+/// # Examples
+///
+/// Drive a 2-rank world plus controller over the in-process transport —
+/// the exact frames a [`crate::comms::socket::SocketTransport`] puts on
+/// a TCP stream:
+///
+/// ```
+/// use std::time::Duration;
+/// use targetdp::comms::{ChannelTransport, Command, Frame, Transport};
+///
+/// let (mut ranks, mut ctl) = ChannelTransport::mesh_with_controller(2);
+/// ctl.send_frame(0, &Frame::Command(Command::Advance { steps: 3 }))?;
+/// assert_eq!(ranks[0].recv()?,
+///            Frame::Command(Command::Advance { steps: 3 }));
+/// // nothing is in flight for rank 1: a timed receive returns None
+/// assert!(ranks[1].recv_timeout(Duration::from_millis(5))?.is_none());
+/// # Ok::<(), targetdp::Error>(())
+/// ```
 pub trait Transport: Send {
     /// This endpoint's id (compute ranks are `0..nranks()`; a session
     /// controller is `nranks()`).
@@ -44,11 +90,14 @@ pub trait Transport: Send {
     /// itself across the periodic seam.
     fn send_bytes(&mut self, dst: usize, frame: Vec<u8>) -> Result<()>;
     /// Blocking receive of the next frame's bytes addressed to this
-    /// endpoint, in per-sender arrival order.
+    /// endpoint, in per-sender arrival order. Always one whole frame —
+    /// see the trait-level contract.
     fn recv_bytes(&mut self) -> Result<Vec<u8>>;
     /// Like [`Transport::recv_bytes`] but gives up after `timeout`,
     /// returning `Ok(None)` — the hook [`crate::comms::world::Rank`] uses
-    /// to turn a lost peer into an error instead of a hung world.
+    /// to turn a lost peer into an error instead of a hung world. A
+    /// timeout never returns (or discards) part of a frame: either one
+    /// complete frame arrived in time, or `None`.
     fn recv_bytes_timeout(&mut self, timeout: Duration)
                           -> Result<Option<Vec<u8>>>;
 

@@ -91,9 +91,13 @@ pub enum Side {
 /// arrival — a neighbour running up to a step ahead — is unambiguous.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct Tag {
+    /// Timestep the plane belongs to.
     pub step: u64,
+    /// Which of the two per-step exchanges.
     pub phase: Phase,
+    /// Which distribution field the payload carries.
     pub field: FieldId,
+    /// Which halo plane the payload fills at the receiver.
     pub side: Side,
 }
 
@@ -102,6 +106,7 @@ pub struct Tag {
 pub struct PlaneMsg {
     /// Sending rank (diagnostics; matching is by [`Tag`]).
     pub src: u32,
+    /// The envelope the receiver matches on.
     pub tag: Tag,
     /// `ncomp * plane_sites` doubles, SoA component-major (the
     /// `halo::pack_x_plane` layout).
@@ -133,13 +138,17 @@ pub enum Command {
 /// single global sweep — see `Observables::from_sums`).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct PartialObs {
+    /// Reporting rank.
     pub src: u32,
     /// Steps completed when the reduction ran (protocol sanity check).
     pub steps: u64,
     /// Interior sites reduced over.
     pub sites: u64,
+    /// Sum of all f components over interior sites.
     pub mass: f64,
+    /// Velocity-weighted f sums over interior sites.
     pub momentum: [f64; 3],
+    /// Sum of all g components (= sum of phi) over interior sites.
     pub phi_total: f64,
     /// Sum of phi^2 over interior sites (for the variance).
     pub phi_sq: f64,
@@ -158,21 +167,32 @@ pub enum InteriorField {
 /// SoA component-major, halos excluded (`ncomp * lxl * plane` doubles).
 #[derive(Debug, Clone, PartialEq)]
 pub struct InteriorMsg {
+    /// Sending rank — routes the payload to its global slab offset.
     pub src: u32,
+    /// Which field the payload is.
     pub field: InteriorField,
+    /// The packed interior planes, SoA component-major.
     pub data: Vec<f64>,
 }
 
 /// Rank → driver final timing/traffic report (sent on `Shutdown`).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ReportMsg {
+    /// Reporting rank.
     pub src: u32,
+    /// Sites this rank owned (halo planes excluded).
     pub interior_sites: u64,
+    /// Timesteps completed over the rank's lifetime.
     pub steps: u64,
+    /// Wall seconds computing (total minus wait and idle).
     pub compute_s: f64,
+    /// Wall seconds blocked waiting for halo planes.
     pub wait_s: f64,
+    /// Wall seconds parked at the command barrier.
     pub idle_s: f64,
+    /// Halo bytes sent over the rank's lifetime.
     pub bytes_sent: u64,
+    /// Halo plane messages sent over the rank's lifetime.
     pub msgs_sent: u64,
 }
 

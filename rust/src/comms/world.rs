@@ -106,9 +106,11 @@ impl Default for CommsConfig {
 /// its whole life and reported at `Shutdown`.
 #[derive(Debug, Clone)]
 pub struct RankReport {
+    /// Which rank this report describes.
     pub rank: usize,
     /// Owned (interior) sites — halo planes excluded.
     pub interior_sites: usize,
+    /// Timesteps this rank completed over its lifetime.
     pub steps: u64,
     /// Wall time spent computing (total minus blocked-in-wait and idle).
     pub compute_s: f64,
@@ -120,6 +122,7 @@ pub struct RankReport {
     /// Halo-exchange traffic only — control/response frames (commands,
     /// partials, interiors, reports) are not counted.
     pub bytes_sent: u64,
+    /// Halo plane messages sent over this rank's lifetime.
     pub msgs_sent: u64,
 }
 
@@ -146,9 +149,11 @@ impl RankReport {
 /// Whole-world summary of one decomposed run.
 #[derive(Debug, Clone)]
 pub struct WorldReport {
+    /// One lifetime report per rank, rank order.
     pub ranks: Vec<RankReport>,
     /// Wall time of the whole run (session start to finish).
     pub seconds: f64,
+    /// Whether the run overlapped halo exchange with interior compute.
     pub overlap: bool,
 }
 
@@ -185,7 +190,9 @@ impl WorldReport {
 /// neighbour that raced into the next block never block the command
 /// barrier.
 pub struct Rank {
+    /// This rank's id (`MPI_Comm_rank`).
     pub rank: usize,
+    /// Compute ranks in the world (`MPI_Comm_size`).
     pub nranks: usize,
     transport: Box<dyn Transport>,
     /// Halo frames that arrived while waiting for a different tag.
@@ -196,11 +203,16 @@ pub struct Rank {
     pub wait_s: f64,
     /// Seconds spent parked in [`Rank::wait_command`].
     pub idle_s: f64,
+    /// Halo bytes sent (wire frames, length prefix excluded) — the same
+    /// count whichever transport carries them.
     pub bytes_sent: u64,
+    /// Halo plane messages sent.
     pub msgs_sent: u64,
 }
 
 impl Rank {
+    /// Wrap a transport endpoint (any [`Transport`] — in-process channel
+    /// or TCP socket) as a tag-matching rank endpoint.
     pub fn new(transport: Box<dyn Transport>) -> Rank {
         Rank {
             rank: transport.rank(),
@@ -332,11 +344,16 @@ impl Rank {
 /// configuration, ready to spawn a resident session of concurrent ranks.
 #[derive(Debug, Clone)]
 pub struct CommsWorld {
+    /// The slab decomposition the ranks own (one subdomain per rank).
     pub dec: SlabDecomposition,
+    /// Run knobs (rank count, overlap, thread budget, VVL, schedule).
     pub cfg: CommsConfig,
 }
 
 impl CommsWorld {
+    /// Build the world: validate the knobs and split `geom` into
+    /// `cfg.ranks` x-slabs. No threads spawn until
+    /// [`CommsWorld::session`].
     pub fn new(geom: Geometry, cfg: CommsConfig) -> Result<Self> {
         if !cfg.scalar && !ilp::is_supported(cfg.vvl) {
             return Err(Error::Invalid(format!(
@@ -376,8 +393,9 @@ impl CommsWorld {
             dec: self.dec.clone(),
             cfg: self.cfg.clone(),
             vs,
-            controller,
+            controller: Box::new(controller),
             handles: Vec::with_capacity(self.cfg.ranks),
+            retired: false,
             steps_done: 0,
             started,
         };
@@ -388,7 +406,8 @@ impl CommsWorld {
             let handle = std::thread::Builder::new()
                 .name(format!("targetdp-rank{}", d.rank))
                 .spawn(move || {
-                    rank_main(d, vs, p, f0, g0, cfg, nthreads, tr)
+                    rank_main(d, vs, p, f0, g0, cfg, nthreads,
+                              Box::new(tr))
                 });
             match handle {
                 Ok(h) => session.handles.push(h),
@@ -401,6 +420,39 @@ impl CommsWorld {
             }
         }
         Ok(session)
+    }
+
+    /// Adopt a session whose ranks live in **other processes**: the
+    /// driver of a socket run holds only the controller endpoint (the
+    /// analog of the one [`ChannelTransport::mesh_with_controller`]
+    /// returns — a [`crate::comms::launcher::RankServer::rendezvous`]
+    /// result), and each rank process runs [`serve_rank`] on its own
+    /// endpoint. The command protocol is identical to an in-process
+    /// session; the only difference is that [`CommsSession::finish`] has
+    /// no rank threads to join — process lifetimes belong to the
+    /// launcher (e.g. [`crate::comms::launcher::LocalRanks::wait`]).
+    pub fn remote_session(&self, vs: &'static VelSet,
+                          controller: Box<dyn Transport>)
+                          -> Result<CommsSession> {
+        let nranks = self.cfg.ranks;
+        if controller.nranks() != nranks || controller.rank() != nranks {
+            return Err(Error::Invalid(format!(
+                "comms: controller endpoint {}/{} does not match a \
+                 {nranks}-rank world",
+                controller.rank(),
+                controller.nranks(),
+            )));
+        }
+        Ok(CommsSession {
+            dec: self.dec.clone(),
+            cfg: self.cfg.clone(),
+            vs,
+            controller,
+            handles: Vec::new(),
+            retired: false,
+            steps_done: 0,
+            started: Instant::now(),
+        })
     }
 
     /// One-shot convenience: session + single `Advance` + `Gather` +
@@ -430,12 +482,58 @@ pub fn run_decomposed(geom: &Geometry, vs: &'static VelSet, p: &FeParams,
 /// [`CommsSession::gather`]; [`CommsSession::finish`] retires the world
 /// and returns the accumulated per-rank reports. Dropping an unfinished
 /// session broadcasts `Shutdown` and joins the ranks best-effort.
+///
+/// Ranks may live in this process ([`CommsWorld::session`]) or in other
+/// processes over TCP ([`CommsWorld::remote_session`]); the driver-side
+/// API is identical.
+///
+/// # Examples
+///
+/// A two-rank in-process session driven through a full block lifecycle:
+///
+/// ```
+/// use targetdp::comms::{CommsConfig, CommsWorld};
+/// use targetdp::free_energy::symmetric::FeParams;
+/// use targetdp::lattice::geometry::Geometry;
+/// use targetdp::lb::init::init_spinodal;
+/// use targetdp::lb::model::d2q9;
+///
+/// let vs = d2q9();
+/// let geom = Geometry::new(6, 4, 1);
+/// let n = geom.nsites();
+/// let p = FeParams::default();
+/// let mut f = vec![0.0; vs.nvel * n];
+/// let mut g = vec![0.0; vs.nvel * n];
+/// init_spinodal(vs, &p, &geom, &mut f, &mut g, 0.05, 7);
+///
+/// let world = CommsWorld::new(geom, CommsConfig {
+///     ranks: 2,
+///     ..CommsConfig::default()
+/// })?;
+/// let mut session = world.session(vs, &p, f.clone(), g.clone())?;
+/// session.advance(2)?;                    // one logging block
+/// let obs = session.observables()?;       // distributed reduction
+/// assert!((obs.mass - n as f64).abs() < 1e-9, "mass is conserved");
+/// session.gather(&mut f, &mut g)?;        // explicit state gather
+/// let report = session.finish()?;         // retire + per-rank totals
+/// assert!(report.ranks.iter().all(|r| r.steps == 2));
+/// # Ok::<(), targetdp::Error>(())
+/// ```
 pub struct CommsSession {
     dec: SlabDecomposition,
     cfg: CommsConfig,
     vs: &'static VelSet,
-    controller: ChannelTransport,
+    /// The driver's endpoint — in-process channels for
+    /// [`CommsWorld::session`], a TCP socket endpoint for
+    /// [`CommsWorld::remote_session`]; the command protocol cannot tell
+    /// the difference.
+    controller: Box<dyn Transport>,
+    /// Rank threads of an in-process session (empty for a remote one,
+    /// whose rank processes are owned by the launcher).
     handles: Vec<JoinHandle<Result<()>>>,
+    /// `Shutdown` has been delivered and the ranks accounted for —
+    /// nothing left for `Drop` to clean up.
+    retired: bool,
     steps_done: u64,
     started: Instant,
 }
@@ -460,6 +558,7 @@ fn pick_root(errs: Vec<Error>) -> Option<Error> {
 }
 
 impl CommsSession {
+    /// Compute ranks in the session's world.
     pub fn nranks(&self) -> usize {
         self.dec.domains.len()
     }
@@ -503,6 +602,7 @@ impl CommsSession {
     /// the root cause instead of the knock-on symptom.
     fn fail(&mut self, err: Error) -> Error {
         self.shutdown_all();
+        self.retired = true;
         let mut errs = Vec::new();
         for h in std::mem::take(&mut self.handles) {
             match h.join() {
@@ -727,6 +827,9 @@ impl CommsSession {
             });
             got += 1;
         }
+        // every rank has acknowledged the Shutdown with its report —
+        // whatever happens below, Drop has nothing left to release
+        self.retired = true;
         let mut errs = Vec::new();
         for h in std::mem::take(&mut self.handles) {
             match h.join() {
@@ -751,11 +854,13 @@ impl CommsSession {
 
 impl Drop for CommsSession {
     fn drop(&mut self) {
-        if self.handles.is_empty() {
+        if self.retired {
             return;
         }
-        // release ranks parked at the command barrier; ignore errors — a
-        // dead world is exactly what this path cleans up after
+        // release ranks parked at the command barrier — including remote
+        // rank *processes*, which would otherwise idle there until their
+        // transport noticed the dead driver; ignore errors — a dead
+        // world is exactly what this path cleans up after
         self.shutdown_all();
         if std::thread::panicking() {
             // don't risk a join hang during unwind; detach instead
@@ -784,12 +889,53 @@ struct RankState {
     send_buf: Vec<f64>,
 }
 
+/// Serve one rank of a **remote** world: the rank-process entry point of
+/// a socket run (`targetdp rank`, or an example re-entering itself as a
+/// child). `transport` is this rank's endpoint from
+/// [`crate::comms::launcher::connect_rank`]; `f0`/`g0` are the *global*
+/// initial state, recomputed locally by the rank process (the
+/// initialisers are deterministic, so every process derives bit-identical
+/// state from the shipped config) — only this rank's slab is kept after
+/// the scatter. Blocks until the driver's `Shutdown`, exactly like an
+/// in-process rank thread: the same rank body is shared verbatim.
+#[allow(clippy::too_many_arguments)]
+pub fn serve_rank(d: SubDomain, vs: &'static VelSet, p: &FeParams,
+                  f0: Vec<f64>, g0: Vec<f64>, cfg: &CommsConfig,
+                  nthreads: usize, transport: Box<dyn Transport>)
+                  -> Result<()> {
+    if transport.rank() != d.rank {
+        return Err(Error::Invalid(format!(
+            "comms: transport endpoint {} serving subdomain of rank {}",
+            transport.rank(),
+            d.rank
+        )));
+    }
+    if transport.nranks() != cfg.ranks {
+        return Err(Error::Invalid(format!(
+            "comms: transport world of {} ranks, config says {}",
+            transport.nranks(),
+            cfg.ranks
+        )));
+    }
+    if f0.len() != g0.len() || f0.len() % vs.nvel != 0 {
+        return Err(Error::Invalid(format!(
+            "comms: initial state is {}+{} doubles, want equal multiples \
+             of nvel {}",
+            f0.len(),
+            g0.len(),
+            vs.nvel
+        )));
+    }
+    rank_main(d, vs, *p, Arc::new(f0), Arc::new(g0), cfg.clone(),
+              nthreads, transport)
+}
+
 /// Body of one resident rank thread: allocate + scatter once, then serve
 /// the controller's command loop until `Shutdown`.
 #[allow(clippy::too_many_arguments)]
 fn rank_main(d: SubDomain, vs: &'static VelSet, p: FeParams,
              f0: Arc<Vec<f64>>, g0: Arc<Vec<f64>>, cfg: CommsConfig,
-             nthreads: usize, transport: ChannelTransport) -> Result<()> {
+             nthreads: usize, transport: Box<dyn Transport>) -> Result<()> {
     let pool = TlpPool::new(nthreads, cfg.schedule);
     let ln = d.local.nsites();
     let nvel = vs.nvel;
@@ -810,7 +956,7 @@ fn rank_main(d: SubDomain, vs: &'static VelSet, p: FeParams,
     drop(f0);
     drop(g0);
     let table = StreamTable::cached(vs, &d.local);
-    let mut rank = Rank::new(Box::new(transport));
+    let mut rank = Rank::new(transport);
 
     let t0 = Instant::now();
     let mut step: u64 = 0;

@@ -13,6 +13,21 @@ use crate::targetdp::tlp::{Schedule, TlpPool};
 use crate::targetdp::{HostTarget, Target, XlaTarget};
 use crate::util::toml::{parse, Section};
 
+/// Which transport carries a decomposed run (the `[target] transport`
+/// knob / `--transport` flag).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransportMode {
+    /// In-process: one rank thread per slab, frames through channels
+    /// (`comms::ChannelTransport`). The default.
+    Channel,
+    /// Multi-process: one rank OS process per slab, frames over TCP
+    /// (`comms::SocketTransport`). Without `rank_server` the driver
+    /// spawns the rank processes locally on loopback; with it, the
+    /// driver listens there and the operator starts
+    /// `targetdp rank --connect host:port` on each host.
+    Socket,
+}
+
 /// How a decomposed run computes per-block observables (the `[target]
 /// observables` knob / `--observables` flag).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -84,6 +99,15 @@ pub struct TargetCfg {
     /// bit-exact match for the single-engine path, at O(state) cost per
     /// block).
     pub observables: String,
+    /// Transport for a decomposed run: `"channel"` (default — one rank
+    /// thread per slab, in-process) or `"socket"` (one rank OS process
+    /// per slab over TCP; bit-identical physics).
+    pub transport: String,
+    /// Socket mode only: `host:port` the driver's rank server listens on
+    /// for manually started ranks (`targetdp rank --connect host:port`
+    /// on each host). Empty (default) = spawn the rank processes locally
+    /// on an ephemeral loopback port.
+    pub rank_server: String,
 }
 
 impl Default for TargetCfg {
@@ -100,6 +124,8 @@ impl Default for TargetCfg {
             ranks: 1,
             overlap: true,
             observables: "reduced".into(),
+            transport: "channel".into(),
+            rank_server: String::new(),
         }
     }
 }
@@ -159,6 +185,8 @@ impl Config {
             ranks: tgt.usize_or("ranks", dt.ranks)?,
             overlap: tgt.bool_or("overlap", dt.overlap)?,
             observables: tgt.str_or("observables", &dt.observables)?,
+            transport: tgt.str_or("transport", &dt.transport)?,
+            rank_server: tgt.str_or("rank_server", &dt.rank_server)?,
         };
 
         let fe = Section::of(&doc, "free_energy");
@@ -194,6 +222,59 @@ impl Config {
                 self.simulation.lattice
             ))
         })
+    }
+
+    /// Transport for a decomposed run.
+    pub fn transport_mode(&self) -> Result<TransportMode> {
+        match self.target.transport.as_str() {
+            "channel" => Ok(TransportMode::Channel),
+            "socket" => Ok(TransportMode::Socket),
+            other => Err(Error::Parse(format!(
+                "unknown transport {other:?} (want \"channel\" or \
+                 \"socket\")"
+            ))),
+        }
+    }
+
+    /// Serialize back to the TOML subset [`Config::from_toml_str`] reads
+    /// — byte-exact round-trip of every knob. This is how a socket run
+    /// ships its configuration to the rank processes: the driver
+    /// broadcasts this string in the rendezvous `Welcome`, and every
+    /// rank rebuilds an identical (deterministic) simulation from it, so
+    /// there is exactly one source of truth per run. Floats use the
+    /// shortest representation that round-trips the f64 bits; strings
+    /// must not contain `"` (the TOML subset has no escapes).
+    pub fn to_toml_string(&self) -> String {
+        let s = &self.simulation;
+        let t = &self.target;
+        let fe = &self.free_energy;
+        let o = &self.output;
+        format!(
+            "[simulation]\n\
+             lattice = \"{}\"\n\
+             lx = {}\nly = {}\nlz = {}\n\
+             steps = {}\n\
+             init = \"{}\"\n\
+             noise = {:?}\nseed = {}\nradius = {:?}\n\
+             \n[target]\n\
+             backend = \"{}\"\n\
+             vvl = {}\nthreads = {}\n\
+             schedule = \"{}\"\nbatch = {}\n\
+             fusion = {}\nmulti_step = {}\nxla_vvl_block = {}\n\
+             ranks = {}\noverlap = {}\n\
+             observables = \"{}\"\n\
+             transport = \"{}\"\nrank_server = \"{}\"\n\
+             \n[free_energy]\n\
+             a = {:?}\nb = {:?}\nkappa = {:?}\ngamma = {:?}\n\
+             tau_f = {:?}\ntau_g = {:?}\n\
+             \n[output]\n\
+             every = {}\ndir = \"{}\"\nvtk = {}\n",
+            s.lattice, s.lx, s.ly, s.lz, s.steps, s.init, s.noise, s.seed,
+            s.radius, t.backend, t.vvl, t.threads, t.schedule, t.batch,
+            t.fusion, t.multi_step, t.xla_vvl_block, t.ranks, t.overlap,
+            t.observables, t.transport, t.rank_server, fe.a, fe.b,
+            fe.kappa, fe.gamma, fe.tau_f, fe.tau_g, o.every, o.dir, o.vtk,
+        )
     }
 
     /// Per-block observables strategy for a decomposed run.
@@ -449,6 +530,76 @@ mod tests {
         let mut bad = cfg;
         bad.target.observables = "telepathy".into();
         assert!(bad.observables_mode().is_err());
+    }
+
+    #[test]
+    fn transport_knob_parses_and_rejects() {
+        let cfg = Config::from_toml_str(SAMPLE).unwrap();
+        assert_eq!(cfg.target.transport, "channel",
+                   "in-process threads are the default");
+        assert_eq!(cfg.transport_mode().unwrap(), TransportMode::Channel);
+        assert_eq!(cfg.target.rank_server, "", "spawn-local by default");
+
+        let cfg = Config::from_toml_str(
+            "[simulation]\nlattice = \"d2q9\"\nlx = 8\nly = 8\nlz = 1\n\
+             steps = 5\n\n[target]\nranks = 2\ntransport = \"socket\"\n\
+             rank_server = \"0.0.0.0:7777\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.transport_mode().unwrap(), TransportMode::Socket);
+        assert_eq!(cfg.target.rank_server, "0.0.0.0:7777");
+
+        let mut bad = cfg;
+        bad.target.transport = "carrier-pigeon".into();
+        assert!(bad.transport_mode().is_err());
+    }
+
+    #[test]
+    fn toml_round_trip_is_lossless() {
+        // the serialized form is what a socket driver ships to its rank
+        // processes: every knob must survive, floats bit-exactly
+        let mut cfg = Config::from_toml_str(SAMPLE).unwrap();
+        cfg.simulation.noise = 0.07;
+        cfg.simulation.init = "droplet".into();
+        cfg.simulation.radius = 3.25;
+        cfg.target.ranks = 3;
+        cfg.target.overlap = false;
+        cfg.target.transport = "socket".into();
+        cfg.target.schedule = "dynamic".into();
+        cfg.target.multi_step = 4;
+        cfg.free_energy.kappa = 1.0 / 3.0; // not exactly representable
+        cfg.output.every = 7;
+        cfg.output.dir = "out/run1".into();
+        cfg.output.vtk = true;
+
+        let back = Config::from_toml_str(&cfg.to_toml_string()).unwrap();
+        assert_eq!(back.simulation.lattice, cfg.simulation.lattice);
+        assert_eq!(back.simulation.lx, cfg.simulation.lx);
+        assert_eq!(back.simulation.steps, cfg.simulation.steps);
+        assert_eq!(back.simulation.init, cfg.simulation.init);
+        assert_eq!(back.simulation.noise.to_bits(),
+                   cfg.simulation.noise.to_bits());
+        assert_eq!(back.simulation.seed, cfg.simulation.seed);
+        assert_eq!(back.simulation.radius.to_bits(),
+                   cfg.simulation.radius.to_bits());
+        assert_eq!(back.target.backend, cfg.target.backend);
+        assert_eq!(back.target.vvl, cfg.target.vvl);
+        assert_eq!(back.target.threads, cfg.target.threads);
+        assert_eq!(back.target.schedule, cfg.target.schedule);
+        assert_eq!(back.target.batch, cfg.target.batch);
+        assert_eq!(back.target.fusion, cfg.target.fusion);
+        assert_eq!(back.target.multi_step, cfg.target.multi_step);
+        assert_eq!(back.target.ranks, cfg.target.ranks);
+        assert_eq!(back.target.overlap, cfg.target.overlap);
+        assert_eq!(back.target.observables, cfg.target.observables);
+        assert_eq!(back.target.transport, cfg.target.transport);
+        assert_eq!(back.target.rank_server, cfg.target.rank_server);
+        assert_eq!(back.free_energy.kappa.to_bits(),
+                   cfg.free_energy.kappa.to_bits());
+        assert_eq!(back.free_energy, cfg.free_energy);
+        assert_eq!(back.output.every, cfg.output.every);
+        assert_eq!(back.output.dir, cfg.output.dir);
+        assert_eq!(back.output.vtk, cfg.output.vtk);
     }
 
     #[test]

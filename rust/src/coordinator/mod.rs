@@ -6,4 +6,4 @@ pub mod metrics;
 pub mod pipeline;
 
 pub use metrics::{Mlups, Timer};
-pub use pipeline::{run_simulation, RunSummary};
+pub use pipeline::{run_rank_process, run_simulation, RunSummary};

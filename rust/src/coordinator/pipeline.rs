@@ -3,13 +3,16 @@
 
 use std::path::Path;
 
-use crate::config::{Config, ObservablesMode};
-use crate::error::Result;
+use crate::comms::launcher::{connect_rank, LocalRanks, RankServer};
+use crate::comms::{CommsSession, CommsWorld};
+use crate::config::{Config, ObservablesMode, TransportMode};
+use crate::error::{Error, Result};
 use crate::lattice::io::{write_vtk_scalar, CsvWriter};
 use crate::lb::engine::{state_observables, LbEngine, Observables};
 use crate::lb::init;
 use crate::lb::model::LatticeModel;
 use crate::targetdp::target::KernelId;
+use crate::targetdp::tlp::threads_per_rank;
 
 use super::metrics::{Mlups, Timer};
 
@@ -47,10 +50,12 @@ impl RunSummary {
     }
 }
 
-/// Build the configured initial condition (shared by the single-engine
-/// and decomposed pipelines so the two paths cannot drift).
-fn init_state(cfg: &Config, geom: &crate::lattice::geometry::Geometry)
-              -> (Vec<f64>, Vec<f64>) {
+/// Build the configured initial condition — shared by the single-engine
+/// pipeline, the decomposed driver, *and* every socket rank process
+/// (which recomputes it locally from the shipped config), so no path can
+/// drift: both initialisers are deterministic functions of the config.
+pub fn initial_state(cfg: &Config, geom: &crate::lattice::geometry::Geometry)
+                     -> (Vec<f64>, Vec<f64>) {
     let vs = cfg.model().expect("validated by caller").velset();
     let n = geom.nsites();
     let mut f = vec![0.0; vs.nvel * n];
@@ -95,11 +100,13 @@ fn block_size(cfg: &Config) -> u64 {
 }
 
 /// Run a full simulation according to `cfg`, logging to stdout.
-/// `ranks > 1` routes through the comms subsystem (concurrent slab ranks
-/// with overlapped halo exchange) instead of a single engine.
+/// `ranks > 1` (or `transport = "socket"`) routes through the comms
+/// subsystem — concurrent slab ranks with overlapped halo exchange, as
+/// threads or as OS processes — instead of a single engine.
 pub fn run_simulation(cfg: &Config) -> Result<RunSummary> {
-    if cfg.target.ranks > 1 {
-        return run_decomposed_simulation(cfg);
+    let transport = cfg.transport_mode()?;
+    if cfg.target.ranks > 1 || transport == TransportMode::Socket {
+        return run_decomposed_simulation(cfg, transport);
     }
     let geom = cfg.geometry();
     let model = cfg.model()?;
@@ -124,7 +131,7 @@ pub fn run_simulation(cfg: &Config) -> Result<RunSummary> {
     });
 
     // initial condition
-    let (f, g) = init_state(cfg, &geom);
+    let (f, g) = initial_state(cfg, &geom);
     engine.load_state(&f, &g)?;
 
     let initial = engine.observables()?;
@@ -181,11 +188,13 @@ pub fn run_simulation(cfg: &Config) -> Result<RunSummary> {
     Ok(summary)
 }
 
-/// The `ranks > 1` pipeline: spawn a **resident** comms rank session
-/// (threads spawned exactly once, each rank owning its slab-local state
-/// for the whole run), advance in logging blocks over the session command
-/// protocol, and report per-rank MLUPS and exchange-wait breakdowns from
-/// the session-accumulated [`crate::comms::WorldReport`].
+/// The decomposed (`ranks > 1` or socket-transport) pipeline: bring up a
+/// **resident** comms rank session — in-process threads spawned exactly
+/// once, or rank OS processes assembled by the socket rendezvous — each
+/// rank owning its slab-local state for the whole run; advance in
+/// logging blocks over the session command protocol, and report per-rank
+/// MLUPS and exchange-wait breakdowns from the session-accumulated
+/// [`crate::comms::WorldReport`].
 ///
 /// Per-block observables are **distributed reductions** by default
 /// (`[target] observables = "reduced"`): every rank sums its own interior
@@ -194,17 +203,31 @@ pub fn run_simulation(cfg: &Config) -> Result<RunSummary> {
 /// behaviour (bit-exact with the single-engine reduction) at O(state)
 /// cost per block. The full state is gathered only on demand: the VTK
 /// snapshot asks the resident ranks for phi directly.
-fn run_decomposed_simulation(cfg: &Config) -> Result<RunSummary> {
+///
+/// Socket mode (`transport = "socket"`): with no `rank_server` the
+/// driver binds an ephemeral loopback port and spawns one
+/// `targetdp rank` child per slab; with `rank_server = "host:port"` it
+/// listens there for manually started ranks (one
+/// `targetdp rank --connect host:port` per host). Either way the full
+/// config travels in the rendezvous payload and each rank process
+/// recomputes the deterministic initial state locally, so the physics is
+/// bit-identical to the channel world and to the single-domain engine.
+fn run_decomposed_simulation(cfg: &Config, transport: TransportMode)
+                             -> Result<RunSummary> {
     let geom = cfg.geometry();
     let model = cfg.model()?;
     let vs = model.velset();
     let n = geom.nsites();
     let ccfg = cfg.comms_config()?;
     let mode = cfg.observables_mode()?;
-    let world = crate::comms::CommsWorld::new(geom, ccfg.clone())?;
+    let world = CommsWorld::new(geom, ccfg.clone())?;
     let target_desc = format!(
-        "comms(ranks={},{},{},vvl={},threads={})",
+        "comms(ranks={},{},{},{},vvl={},threads={})",
         ccfg.ranks,
+        match transport {
+            TransportMode::Channel => "channel",
+            TransportMode::Socket => "socket",
+        },
         if ccfg.overlap { "overlap" } else { "bulk-sync" },
         if ccfg.scalar { "host-scalar" } else { "host-simd" },
         ccfg.vvl,
@@ -226,15 +249,57 @@ fn run_decomposed_simulation(cfg: &Config) -> Result<RunSummary> {
                  d.x0 + d.lxl, d.lxl);
     }
 
-    let (f0, g0) = init_state(cfg, &geom);
+    let (f0, g0) = initial_state(cfg, &geom);
     let initial = state_observables(vs, &f0, &g0, n);
     println!("initial  : mass={:.6} phi={:.6} var={:.3e}", initial.mass,
              initial.phi_total, initial.phi_variance);
 
-    // the initial state moves into the session: each rank copies its own
-    // planes out of it (first touch on the rank's pool) and the threads
-    // stay resident until `finish`
-    let mut session = world.session(vs, &cfg.free_energy, f0, g0)?;
+    // channel mode: the initial state moves into the session — each rank
+    // thread copies its own planes out of it (first touch on the rank's
+    // pool). Socket mode: each rank *process* recomputes it from the
+    // config shipped in the rendezvous payload instead, so no state
+    // crosses the wire at startup. Either way the ranks stay resident
+    // until `finish`.
+    let (mut session, local_ranks): (CommsSession, Option<LocalRanks>) =
+        match transport {
+            TransportMode::Channel => {
+                (world.session(vs, &cfg.free_energy, f0, g0)?, None)
+            }
+            TransportMode::Socket => {
+                let listen = if cfg.target.rank_server.is_empty() {
+                    "127.0.0.1:0"
+                } else {
+                    cfg.target.rank_server.as_str()
+                };
+                let server = RankServer::bind(listen)?;
+                let addr = server.local_addr()?;
+                let local = if cfg.target.rank_server.is_empty() {
+                    println!("ranks    : spawning {} local rank \
+                              processes -> {addr}",
+                             ccfg.ranks);
+                    Some(LocalRanks::spawn(ccfg.ranks, &addr.to_string(),
+                                           &["rank".to_string()])?)
+                } else {
+                    // a wildcard bind (0.0.0.0 / ::) is not a dialable
+                    // address — tell the operator to substitute a host
+                    // the rank machines can actually route to
+                    let shown = if addr.ip().is_unspecified() {
+                        format!("<driver-host>:{}", addr.port())
+                    } else {
+                        addr.to_string()
+                    };
+                    println!("ranks    : waiting for {} ranks; start \
+                              `targetdp rank --connect {shown}` on each \
+                              host",
+                             ccfg.ranks);
+                    None
+                };
+                let controller = server
+                    .rendezvous(ccfg.ranks,
+                                cfg.to_toml_string().as_bytes())?;
+                (world.remote_session(vs, Box::new(controller))?, local)
+            }
+        };
 
     let mut csv = open_observables_csv(cfg, &initial)?;
     let block = block_size(cfg);
@@ -285,6 +350,11 @@ fn run_decomposed_simulation(cfg: &Config) -> Result<RunSummary> {
 
     // retire the resident ranks; each reports its whole-run totals
     let report = session.finish()?;
+    // a socket run then reaps its spawned rank processes: Shutdown has
+    // been acknowledged by every rank, so this only collects exit codes
+    if let Some(local) = local_ranks {
+        local.wait()?;
+    }
     println!("per-rank : (exchange wait share of working wall time)");
     for r in &report.ranks {
         println!(
@@ -321,6 +391,43 @@ fn run_decomposed_simulation(cfg: &Config) -> Result<RunSummary> {
         summary.steps, summary.seconds, summary.mlups, summary.mass_drift()
     );
     Ok(summary)
+}
+
+/// Entry point of a socket **rank process** (`targetdp rank --connect
+/// HOST:PORT [--rank R]`): rendezvous with the driver's rank server,
+/// rebuild the identical run from the config shipped in the `Welcome`
+/// payload, recompute the deterministic initial state locally, and serve
+/// this rank's slab until the driver's `Shutdown`.
+///
+/// The process is silent on success — all run logging belongs to the
+/// driver; errors surface through the exit code, which the driver's
+/// [`LocalRanks::wait`] (spawn-local) or the operator (multi-host)
+/// observes.
+pub fn run_rank_process(server: &str, want_rank: Option<usize>)
+                        -> Result<()> {
+    let (transport, payload) = connect_rank(server, want_rank)?;
+    let text = String::from_utf8(payload).map_err(|_| {
+        Error::Parse(
+            "comms launcher: setup payload is not UTF-8 TOML".into(),
+        )
+    })?;
+    let cfg = Config::from_toml_str(&text)?;
+    let geom = cfg.geometry();
+    let model = cfg.model()?;
+    let vs = model.velset();
+    let ccfg = cfg.comms_config()?;
+    let rank = crate::comms::Transport::rank(&transport);
+    let world = CommsWorld::new(geom, ccfg.clone())?;
+    let d = world.dec.domains.get(rank).cloned().ok_or_else(|| {
+        Error::Invalid(format!(
+            "comms launcher: assigned rank {rank}, world has {} slabs",
+            world.dec.domains.len()
+        ))
+    })?;
+    let (f0, g0) = initial_state(&cfg, &geom);
+    let nthreads = threads_per_rank(ccfg.threads, ccfg.ranks);
+    crate::comms::serve_rank(d, vs, &cfg.free_energy, f0, g0, &ccfg,
+                             nthreads, Box::new(transport))
 }
 
 /// Convenience: run a short spinodal simulation on a given backend without

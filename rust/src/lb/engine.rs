@@ -55,8 +55,11 @@ use crate::targetdp::target::{KernelId, LaunchArgs, Target};
 /// Observable summary of the current state.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Observables {
+    /// Total f mass (conserved by collision and streaming).
     pub mass: f64,
+    /// Total velocity-weighted f momentum (conserved).
     pub momentum: [f64; 3],
+    /// Total order parameter (conserved).
     pub phi_total: f64,
     /// Variance of phi over sites — grows during spinodal decomposition.
     pub phi_variance: f64,
@@ -113,8 +116,11 @@ impl Observables {
 /// Binary-fluid LB simulation bound to one execution target.
 pub struct LbEngine<'t> {
     target: &'t mut dyn Target,
+    /// Lattice extents.
     pub geom: Geometry,
+    /// Velocity-set model (D2Q9 or D3Q19).
     pub model: LatticeModel,
+    /// Free-energy sector parameters.
     pub params: FeParams,
     f: BufId,
     g: BufId,
@@ -130,6 +136,8 @@ pub struct LbEngine<'t> {
 }
 
 impl<'t> LbEngine<'t> {
+    /// Bind a simulation to `target`: allocate the state and scratch
+    /// buffers on it and upload the free-energy constants.
     pub fn new(target: &'t mut dyn Target, geom: Geometry,
                model: LatticeModel, params: FeParams) -> Result<Self> {
         let n = geom.nsites();
@@ -294,6 +302,7 @@ impl<'t> LbEngine<'t> {
         self.target.sync()
     }
 
+    /// Timesteps advanced since construction.
     pub fn steps_done(&self) -> u64 {
         self.steps_done
     }

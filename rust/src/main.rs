@@ -1,15 +1,18 @@
-//! targetDP CLI: run simulations, inspect artifacts/targets.
+//! targetDP CLI: run simulations, serve socket ranks, inspect
+//! artifacts/targets.
 //!
 //! ```text
 //! targetdp run --config examples/spinodal.toml
 //! targetdp run --backend xla --lattice d3q19 --size 16 --steps 100
+//! targetdp run --ranks 4 --transport socket          # 4 OS processes
+//! targetdp rank --connect host:7777                  # one remote rank
 //! targetdp info
 //! ```
 
 use std::process::ExitCode;
 
 use targetdp::config::{Config, OutputCfg, SimulationCfg, TargetCfg};
-use targetdp::coordinator::run_simulation;
+use targetdp::coordinator::{run_rank_process, run_simulation};
 use targetdp::runtime::Runtime;
 use targetdp::util::cli::Args;
 
@@ -21,7 +24,10 @@ USAGE:
     targetdp run [--config FILE] [--backend B] [--lattice L] [--size N]
                  [--steps K] [--vvl V] [--threads T] [--multi-step M]
                  [--ranks R] [--overlap true|false]
-                 [--observables reduced|gather] [--out DIR] [--vtk]
+                 [--observables reduced|gather]
+                 [--transport channel|socket] [--rank-server HOST:PORT]
+                 [--out DIR] [--vtk]
+    targetdp rank --connect HOST:PORT [--rank R]
     targetdp info
     targetdp help
 
@@ -38,8 +44,18 @@ run options (ignored when --config is given):
     --observables per-block reduction for ranks > 1:
                   distributed partials (reduced) or
                   full-state gather                 [reduced]
+    --transport   channel (rank threads) or socket
+                  (rank OS processes over TCP)      [channel]
+    --rank-server socket mode: listen on HOST:PORT
+                  for manually started ranks (one
+                  `targetdp rank --connect` each)
+                  instead of spawning them locally  [spawn-local]
     --out         output directory for CSV/VTK      [none]
     --vtk         dump a phi snapshot at the end
+
+rank options (a socket rank process; normally spawned by the driver):
+    --connect     the driver's rank-server address  (required)
+    --rank        request a specific rank id        [driver assigns]
 ";
 
 fn main() -> ExitCode {
@@ -83,6 +99,8 @@ fn run() -> targetdp::Result<()> {
                             overlap: args.bool_or("overlap", true)?,
                             observables: args.str_or("observables",
                                                      "reduced"),
+                            transport: args.str_or("transport", "channel"),
+                            rank_server: args.str_or("rank-server", ""),
                             ..Default::default()
                         },
                         free_energy: Default::default(),
@@ -96,6 +114,23 @@ fn run() -> targetdp::Result<()> {
             };
             run_simulation(&cfg)?;
             Ok(())
+        }
+        "rank" => {
+            let server = args
+                .get("connect")
+                .ok_or_else(|| {
+                    targetdp::Error::Invalid(
+                        "rank needs --connect HOST:PORT (the driver's \
+                         rank-server address)"
+                            .into(),
+                    )
+                })?
+                .to_string();
+            let want_rank = match args.get("rank") {
+                Some(_) => Some(args.usize_or("rank", 0)?),
+                None => None,
+            };
+            run_rank_process(&server, want_rank)
         }
         "info" => {
             println!("targetDP targets:");

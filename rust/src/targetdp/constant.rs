@@ -26,6 +26,7 @@ pub enum Constant {
 }
 
 impl Constant {
+    /// The `Double` payload, or a typed error.
     pub fn as_double(&self) -> Result<f64> {
         match self {
             Constant::Double(v) => Ok(*v),
@@ -35,6 +36,7 @@ impl Constant {
         }
     }
 
+    /// The `Int` payload, or a typed error.
     pub fn as_int(&self) -> Result<i64> {
         match self {
             Constant::Int(v) => Ok(*v),
@@ -44,6 +46,7 @@ impl Constant {
         }
     }
 
+    /// The `Double1DArray` payload, or a typed error.
     pub fn as_array(&self) -> Result<&[f64]> {
         match self {
             Constant::Double1DArray(v) => Ok(v),
@@ -61,6 +64,7 @@ pub struct ConstantTable {
 }
 
 impl ConstantTable {
+    /// An empty table.
     pub fn new() -> Self {
         Self::default()
     }
@@ -70,32 +74,39 @@ impl ConstantTable {
         self.values.insert(name.into(), value);
     }
 
+    /// Look a constant up by name (error when unset).
     pub fn get(&self, name: &str) -> Result<&Constant> {
         self.values
             .get(name)
             .ok_or_else(|| Error::Invalid(format!("constant {name:?} not set")))
     }
 
+    /// Typed lookup of a `Double` constant.
     pub fn get_double(&self, name: &str) -> Result<f64> {
         self.get(name)?.as_double()
     }
 
+    /// Typed lookup of an `Int` constant.
     pub fn get_int(&self, name: &str) -> Result<i64> {
         self.get(name)?.as_int()
     }
 
+    /// Typed lookup of a `Double1DArray` constant.
     pub fn get_array(&self, name: &str) -> Result<&[f64]> {
         self.get(name)?.as_array()
     }
 
+    /// Whether `name` has been set.
     pub fn contains(&self, name: &str) -> bool {
         self.values.contains_key(name)
     }
 
+    /// Number of constants set.
     pub fn len(&self) -> usize {
         self.values.len()
     }
 
+    /// Whether the table is empty.
     pub fn is_empty(&self) -> bool {
         self.values.is_empty()
     }

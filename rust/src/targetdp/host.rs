@@ -159,10 +159,12 @@ impl HostTarget {
         Self::simd(8, TlpPool::serial()).expect("8 is a supported VVL")
     }
 
+    /// The strip-mining virtual vector length this target sweeps with.
     pub fn vvl(&self) -> usize {
         self.vvl
     }
 
+    /// Scalar or SIMD kernel selection.
     pub fn mode(&self) -> HostMode {
         self.mode
     }

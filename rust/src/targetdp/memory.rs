@@ -21,6 +21,7 @@ pub struct FieldDesc {
 }
 
 impl FieldDesc {
+    /// Describe an `ncomp`-component SoA field over `nsites` sites.
     pub fn new(name: impl Into<String>, ncomp: usize, nsites: usize) -> Self {
         FieldDesc { name: name.into(), ncomp, nsites }
     }
@@ -30,6 +31,7 @@ impl FieldDesc {
         self.ncomp * self.nsites
     }
 
+    /// Whether the buffer holds no elements.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -38,7 +40,9 @@ impl FieldDesc {
 /// One allocated target buffer.
 #[derive(Debug)]
 pub struct HostBuf {
+    /// Shape and name of the field.
     pub desc: FieldDesc,
+    /// The target-resident f64 elements (`desc.len()` of them).
     pub data: Vec<f64>,
 }
 
@@ -50,6 +54,7 @@ pub struct HostPool {
 }
 
 impl HostPool {
+    /// An empty pool.
     pub fn new() -> Self {
         Self::default()
     }
@@ -88,6 +93,7 @@ impl HostPool {
         }
     }
 
+    /// Borrow a live buffer by handle.
     pub fn get(&self, id: BufId) -> Result<&HostBuf> {
         self.bufs
             .get(id)
@@ -95,6 +101,7 @@ impl HostPool {
             .ok_or(Error::BadBuffer(id))
     }
 
+    /// Mutably borrow a live buffer by handle.
     pub fn get_mut(&mut self, id: BufId) -> Result<&mut HostBuf> {
         self.bufs
             .get_mut(id)
@@ -111,6 +118,7 @@ impl HostPool {
             .ok_or(Error::BadBuffer(id))
     }
 
+    /// Put back a buffer removed with [`Self::take`].
     pub fn restore(&mut self, id: BufId, buf: HostBuf) {
         debug_assert!(id < self.bufs.len() && self.bufs[id].is_none());
         self.bufs[id] = Some(buf);

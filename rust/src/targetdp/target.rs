@@ -54,6 +54,7 @@ pub enum KernelId {
 }
 
 impl KernelId {
+    /// Stable snake_case name (artifact manifests key on it).
     pub fn name(&self) -> &'static str {
         match self {
             KernelId::Scale => "scale",
@@ -72,12 +73,15 @@ impl KernelId {
 /// (the argument list of the paper's `kernel TARGET_LAUNCH(N) (args)`).
 #[derive(Debug, Clone)]
 pub struct LaunchArgs {
+    /// Lattice extents the kernel sweeps.
     pub geometry: Geometry,
+    /// Velocity-set model the kernel is specialised for.
     pub model: LatticeModel,
     bufs: Vec<(&'static str, BufId)>,
 }
 
 impl LaunchArgs {
+    /// Start an argument list with no buffer bindings.
     pub fn new(geometry: Geometry, model: LatticeModel) -> Self {
         LaunchArgs { geometry, model, bufs: Vec::new() }
     }
@@ -88,6 +92,7 @@ impl LaunchArgs {
         self
     }
 
+    /// Look up the buffer bound to `name` (error when unbound).
     pub fn buf(&self, name: &str) -> Result<BufId> {
         self.bufs
             .iter()
@@ -98,6 +103,7 @@ impl LaunchArgs {
             })
     }
 
+    /// All `(name, buffer)` bindings, in bind order.
     pub fn bindings(&self) -> &[(&'static str, BufId)] {
         &self.bufs
     }
@@ -105,6 +111,7 @@ impl LaunchArgs {
 
 /// A targetDP execution target (host CPU or accelerator).
 pub trait Target {
+    /// Which hardware story this target tells.
     fn kind(&self) -> TargetKind;
 
     /// Diagnostic name, e.g. `host-simd(vvl=8,threads=1)`.

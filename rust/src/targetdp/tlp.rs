@@ -49,8 +49,29 @@ impl Default for Schedule {
 /// `nthreads > 1` spawns persistent parked workers at construction; with
 /// `nthreads == 1` launches run inline with zero overhead — the hot path
 /// on a single-core testbed. Dropping the pool shuts the workers down.
+///
+/// # Examples
+///
+/// The paper's `TARGET_TLP(baseIndex, N)` loop: 100 sites strip-mined
+/// into VVL-8 chunks, decomposed over 2 persistent workers — every site
+/// visited exactly once:
+///
+/// ```
+/// use std::sync::atomic::{AtomicUsize, Ordering};
+/// use targetdp::targetdp::{Schedule, TlpPool};
+///
+/// let pool = TlpPool::new(2, Schedule::Static);
+/// let visited = AtomicUsize::new(0);
+/// pool.for_chunks(100, 8, |base, len| {
+///     assert!(len == 8 || base + len == 100, "short chunk only at tail");
+///     visited.fetch_add(len, Ordering::Relaxed);
+/// });
+/// assert_eq!(visited.load(Ordering::Relaxed), 100);
+/// ```
 pub struct TlpPool {
+    /// Worker count (1 = inline execution, no worker threads).
     pub nthreads: usize,
+    /// Chunk-to-thread assignment policy.
     pub schedule: Schedule,
     workers: Option<WorkerPool>,
 }
@@ -104,6 +125,8 @@ fn env_or_available() -> usize {
 }
 
 impl TlpPool {
+    /// Spawn a pool of `nthreads` persistent workers (clamped to >= 1;
+    /// 1 runs launches inline).
     pub fn new(nthreads: usize, schedule: Schedule) -> Self {
         let nthreads = nthreads.max(1);
         let workers = (nthreads > 1).then(|| WorkerPool::spawn(nthreads));

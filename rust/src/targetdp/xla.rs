@@ -35,6 +35,7 @@ pub struct XlaTarget {
 }
 
 impl XlaTarget {
+    /// Wrap an already-loaded PJRT runtime as a target.
     pub fn new(runtime: Runtime) -> Self {
         XlaTarget {
             runtime,
@@ -48,6 +49,7 @@ impl XlaTarget {
         Ok(Self::new(Runtime::load(Runtime::default_dir())?))
     }
 
+    /// The PJRT runtime (platform + loaded artifacts).
     pub fn runtime(&self) -> &Runtime {
         &self.runtime
     }
