@@ -13,7 +13,7 @@
 //!
 //! ```text
 //! cargo run --release --example multidomain [-- --ranks N] [--steps K]
-//!                                           [--block B]
+//!                                           [--block B] [--comms-depth D]
 //!                                           [--transport channel|socket]
 //! ```
 //!
@@ -22,7 +22,10 @@
 //! **resident** session in logging blocks of B steps — ranks spawned
 //! once, a distributed observable reduction at every block boundary,
 //! state gathered only at the end — and additionally checks the reduced
-//! observables against the gathered-state reduction.
+//! observables against the gathered-state reduction. `--comms-depth D`
+//! (D > 1) turns on communication-avoiding super-steps: one depth-`2D`
+//! ghost-block exchange per `D` steps, still bit-identical to the
+//! depth-1 reference (the CI smoke runs depth 2 on both transports).
 //!
 //! `--transport socket` promotes each rank to an OS process on loopback:
 //! the example re-executes itself in a child role (`--rank-child`), the
@@ -62,11 +65,12 @@ fn rank_child(args: &Args) {
     let ranks = args.usize_or("ranks", 1).unwrap();
     let overlap = args.bool_or("overlap", true).unwrap();
     let threads = args.usize_or("threads", 0).unwrap();
+    let depth = args.usize_or("comms-depth", 1).unwrap();
     let (transport, _payload) =
         connect_rank(server, Some(rank)).expect("rendezvous");
     let vs = d3q19();
     let (geom, f0, g0) = setup(vs);
-    let cfg = CommsConfig { ranks, overlap, threads,
+    let cfg = CommsConfig { ranks, overlap, threads, depth,
                             ..CommsConfig::default() };
     let world = CommsWorld::new(geom, cfg.clone()).expect("world");
     let d = world.dec.domains[transport.rank()].clone();
@@ -122,7 +126,8 @@ fn run_socket(geom: &Geometry, vs: &'static VelSet, steps: u64, block: u64,
     let extra = vec!["--rank-child".to_string(),
                      "--ranks".to_string(), cfg.ranks.to_string(),
                      "--overlap".to_string(), cfg.overlap.to_string(),
-                     "--threads".to_string(), cfg.threads.to_string()];
+                     "--threads".to_string(), cfg.threads.to_string(),
+                     "--comms-depth".to_string(), cfg.depth.to_string()];
     let local = LocalRanks::spawn(cfg.ranks, &addr, &extra)
         .expect("spawn rank processes");
     let controller =
@@ -139,7 +144,8 @@ fn run_socket(geom: &Geometry, vs: &'static VelSet, steps: u64, block: u64,
 fn main() {
     let args = Args::parse(std::env::args().skip(1))
         .expect("usage: multidomain [--ranks N] [--steps K] [--threads T] \
-                 [--block B] [--transport channel|socket]");
+                 [--block B] [--comms-depth D] \
+                 [--transport channel|socket]");
     if args.has("rank-child") {
         rank_child(&args);
         return;
@@ -148,6 +154,7 @@ fn main() {
     let steps = args.u64_or("steps", 20).unwrap();
     let threads = args.usize_or("threads", 0).unwrap(); // 0 = machine
     let block = args.u64_or("block", 0).unwrap(); // 0 = one-shot world
+    let depth = args.usize_or("comms-depth", 1).unwrap();
     let transport = args.str_or("transport", "channel");
     let socket = match transport.as_str() {
         "socket" => true,
@@ -160,11 +167,17 @@ fn main() {
     let n = geom.nsites();
 
     println!("48x16x16 D3Q19 binary fluid, {steps} steps, concurrent \
-              x-slab ranks{}{}\n",
+              x-slab ranks{}{}{}\n",
              if socket { " as OS processes (socket transport)" }
              else { "" },
              if block > 0 {
                  format!(" (resident session, blocks of {block})")
+             } else {
+                 String::new()
+             },
+             if depth > 1 {
+                 format!(" (super-steps of {depth}: one ghost-block \
+                          exchange per {depth} steps)")
              } else {
                  String::new()
              });
@@ -188,7 +201,7 @@ fn main() {
     for &ranks in &rank_counts {
         for overlap in [false, true] {
             let mode = if overlap { "overlapped" } else { "bulk-sync " };
-            let cfg = CommsConfig { ranks, overlap, threads,
+            let cfg = CommsConfig { ranks, overlap, threads, depth,
                                     ..CommsConfig::default() };
             let (f, g, rep) = if socket {
                 run_socket(&geom, vs, steps, block, &cfg)
@@ -246,7 +259,10 @@ fn main() {
               wire format move, {:.1}% of a 4-rank slab",
              100.0 * (2.0 * plane as f64) / (n as f64 / 4.0));
     println!("PASS: all rank counts and both exchange schedules \
-              bit-identical{}{}",
+              bit-identical{}{}{}",
              if block > 0 { " across resident blocks" } else { "" },
+             if depth > 1 {
+                 " across communication-avoiding super-steps"
+             } else { "" },
              if socket { " across rank OS processes" } else { "" });
 }

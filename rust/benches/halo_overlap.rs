@@ -12,8 +12,19 @@
 //!
 //! Reports BENCH-CSV lines plus `OVERLAP-SPEEDUP` ratios for the
 //! experiment scripts.
+//!
+//! A second sweep measures **communication-avoiding super-steps**
+//! (`CommsConfig::depth`): one depth-`2k` ghost-block exchange per `k`
+//! steps instead of `6` plane messages per step, over both transports —
+//! in-process channels and real loopback TCP (where the saved
+//! per-message syscalls and round-trips matter most). Emits
+//! `DEPTH-SPEEDUP` ratios against the depth-1 schedule per transport.
 
-use targetdp::comms::{run_decomposed, CommsConfig};
+use std::thread;
+
+use targetdp::comms::launcher::{connect_rank, RankServer};
+use targetdp::comms::{run_decomposed, serve_rank, CommsConfig,
+                      CommsWorld, SocketTransport, Transport};
 use targetdp::free_energy::symmetric::FeParams;
 use targetdp::lattice::geometry::Geometry;
 use targetdp::lb::init;
@@ -21,6 +32,35 @@ use targetdp::lb::model::d3q19;
 
 const RANKS: [usize; 3] = [1, 2, 4];
 const STEPS: u64 = 4;
+
+/// Super-step depths swept by the communication-avoidance experiment
+/// (depth 8 needs 16 ghost planes per side, so slabs of >= 16 planes).
+const DEPTHS: [usize; 4] = [1, 2, 4, 8];
+const DEPTH_RANKS: usize = 2;
+const DEPTH_STEPS: u64 = 8;
+
+/// An N-rank + controller socket world on loopback: the production
+/// rendezvous, rank endpoints served from threads of this process.
+fn loopback_world(nranks: usize)
+                  -> (Vec<SocketTransport>, SocketTransport) {
+    let server = RankServer::bind("127.0.0.1:0").unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let joins: Vec<_> = (0..nranks)
+        .map(|r| {
+            let addr = addr.clone();
+            thread::spawn(move || connect_rank(&addr, Some(r)).unwrap())
+        })
+        .collect();
+    let ctl = server.rendezvous(nranks, b"").unwrap();
+    let mut ranks: Vec<Option<SocketTransport>> =
+        (0..nranks).map(|_| None).collect();
+    for j in joins {
+        let (t, _payload) = j.join().unwrap();
+        let r = t.rank();
+        ranks[r] = Some(t);
+    }
+    (ranks.into_iter().map(Option::unwrap).collect(), ctl)
+}
 
 fn label(tag: &str, ranks: usize, mode: &str) -> String {
     format!("{tag} ranks={ranks} {mode}")
@@ -70,6 +110,76 @@ fn main() {
             if let (Some(b), Some(o)) = (bulk, over) {
                 println!("OVERLAP-SPEEDUP,shape={tag},ranks={ranks},{:.3}",
                          b / o);
+            }
+        }
+    }
+
+    // ---- communication-avoiding super-steps: depth sweep --------------
+    // 64 planes over 2 ranks -> 32-plane slabs: deep enough for depth 8
+    let geom = Geometry::new(64, 8, 8);
+    let n = geom.nsites();
+    let mut f0 = vec![0.0; vs.nvel * n];
+    let mut g0 = vec![0.0; vs.nvel * n];
+    init::init_spinodal(vs, &p, &geom, &mut f0, &mut g0, 0.05, 7);
+    let sites = Some((n as u64 * DEPTH_STEPS) as f64);
+
+    let mut sweep = targetdp::bench::Bench::new(
+        "communication-avoiding super-steps: depth sweep, D3Q19 64x8x8");
+    let dlabel = |transport: &str, depth: usize| {
+        format!("{transport} depth={depth}")
+    };
+    for depth in DEPTHS {
+        let cfg = CommsConfig { ranks: DEPTH_RANKS, depth, threads: 0,
+                                ..CommsConfig::default() };
+
+        // channel transport: the one-shot in-process world
+        let mut f = f0.clone();
+        let mut g = g0.clone();
+        sweep.case(&dlabel("channel", depth), sites, || {
+            run_decomposed(&geom, vs, &p, &mut f, &mut g, DEPTH_STEPS,
+                           &cfg)
+                .unwrap();
+        });
+
+        // socket transport: a fresh loopback TCP world per iteration
+        // (rendezvous included — identical physics, real syscalls per
+        // message, which is exactly what deeper super-steps amortize)
+        sweep.case(&dlabel("socket", depth), sites, || {
+            let (rank_transports, ctl) = loopback_world(DEPTH_RANKS);
+            let world = CommsWorld::new(geom, cfg.clone()).unwrap();
+            let mut servers = Vec::new();
+            for t in rank_transports {
+                let d = world.dec.domains[t.rank()].clone();
+                let (f0, g0) = (f0.clone(), g0.clone());
+                let cfg = cfg.clone();
+                servers.push(thread::spawn(move || {
+                    serve_rank(d, vs, &p, f0, g0, &cfg, 1, Box::new(t))
+                }));
+            }
+            let mut session =
+                world.remote_session(vs, Box::new(ctl)).unwrap();
+            session.advance(DEPTH_STEPS).unwrap();
+            session.finish().unwrap();
+            for s in servers {
+                s.join().unwrap().unwrap();
+            }
+        });
+    }
+
+    sweep.report();
+
+    println!();
+    for transport in ["channel", "socket"] {
+        let base = sweep.mean_of(&dlabel(transport, 1));
+        for depth in DEPTHS {
+            let deep = sweep.mean_of(&dlabel(transport, depth));
+            if let (Some(b), Some(d)) = (base, deep) {
+                println!(
+                    "DEPTH-SPEEDUP,transport={transport},ranks={},\
+                     depth={depth},{:.3}",
+                    DEPTH_RANKS,
+                    b / d
+                );
             }
         }
     }

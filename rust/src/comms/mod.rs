@@ -51,13 +51,14 @@
 //! self-describing byte frames ([`wire::Frame`]), so the protocol is
 //! transport-agnostic and a socket transport drops in by moving bytes:
 //!
-//! | frame                  | direction        | carries                            |
-//! |------------------------|------------------|------------------------------------|
-//! | [`wire::PlaneMsg`]     | rank ↔ rank      | one tagged halo x-plane            |
-//! | [`wire::Command`]      | driver → rank    | `Advance{steps}` / `Observables` / `Gather` / `GatherPhi` / `Shutdown` |
-//! | [`wire::PartialObs`]   | rank → driver    | interior mass/momentum/phi/phi² sums |
-//! | [`wire::InteriorMsg`]  | rank → driver    | packed interior of f, g or phi     |
-//! | [`wire::ReportMsg`]    | rank → driver    | lifetime timing/traffic totals     |
+//! | frame                   | direction        | carries                            |
+//! |-------------------------|------------------|------------------------------------|
+//! | [`wire::PlaneMsg`]      | rank ↔ rank      | one tagged halo x-plane            |
+//! | [`wire::PlaneBlockMsg`] | rank ↔ rank      | a depth-tagged ghost block of `2k` x-planes (super-steps) |
+//! | [`wire::Command`]       | driver → rank    | `Advance{steps}` / `Observables` / `Gather` / `GatherPhi` / `Shutdown` |
+//! | [`wire::PartialObs`]    | rank → driver    | interior mass/momentum/phi/phi² sums |
+//! | [`wire::InteriorMsg`]   | rank → driver    | packed interior of f, g or phi     |
+//! | [`wire::ReportMsg`]     | rank → driver    | lifetime timing/traffic totals     |
 //!
 //! Concept map for readers coming from MPI:
 //!
@@ -88,6 +89,15 @@
 //! and `tests/resident_world.rs` pin both, `benches/halo_overlap.rs` and
 //! `benches/resident_world.rs` measure the difference).
 //!
+//! On top of overlap sits **communication avoidance**
+//! (`CommsConfig::depth`, the `[target] comms_depth` knob): with depth
+//! `k > 1` each rank exchanges one depth-tagged ghost *block* of `2k`
+//! planes per field per neighbour, then advances `k` trapezoid-blocked
+//! timesteps locally, recomputing the shrinking overlap exactly like the
+//! host `MultiStep` tier — 4 messages per `k` steps instead of `6k`,
+//! bit-identical to every other schedule (`tests/multistep_world.rs`,
+//! depth sweep in `benches/halo_overlap.rs`).
+//!
 //! # Multi-process worlds
 //!
 //! The session control frames travel as wire bytes through the same
@@ -114,6 +124,7 @@ pub mod world;
 pub use socket::SocketTransport;
 pub use transport::{ChannelTransport, Transport};
 pub use wire::{Command, FieldId, Frame, InteriorField, InteriorMsg,
-               PartialObs, Phase, PlaneMsg, ReportMsg, Side, Tag};
+               PartialObs, Phase, PlaneBlockMsg, PlaneMsg, ReportMsg,
+               Side, Tag};
 pub use world::{run_decomposed, serve_rank, CommsConfig, CommsSession,
                 CommsWorld, Rank, RankReport, WorldReport};

@@ -269,6 +269,67 @@ impl Transport for SocketTransport {
         })
     }
 
+    /// Coalesce a batch of frames into **one** `write_all`: with
+    /// TCP_NODELAY set, the whole super-step ghost-block batch (the f and
+    /// g [`crate::comms::wire::PlaneBlockMsg`]s for one neighbour) leaves
+    /// as a single buffered write instead of one syscall — and likely one
+    /// packet — per frame. Each frame keeps its own length prefix, so the
+    /// receiver still sees distinct whole frames in order; the no-partial-
+    /// frame guarantee is untouched because the reader thread reassembles
+    /// from the byte stream regardless of how the writes were grouped.
+    fn send_bytes_batch(&mut self, dst: usize, frames: Vec<Vec<u8>>)
+                        -> Result<()> {
+        use std::io::Write;
+        for frame in &frames {
+            if frame.len() > MAX_FRAME_LEN {
+                return Err(Error::Invalid(format!(
+                    "comms socket: frame of {} bytes exceeds the \
+                     {MAX_FRAME_LEN} cap",
+                    frame.len()
+                )));
+            }
+        }
+        if dst == self.rank {
+            // the 1-rank self-seam has no syscall to amortize; deliver
+            // each frame individually, exactly like send_bytes
+            let tx = self.self_tx.as_ref().ok_or_else(|| {
+                Error::Invalid(format!(
+                    "comms: send to endpoint {dst} of a {}-rank world \
+                     (self-sends only exist in a 1-rank world)",
+                    self.nranks
+                ))
+            })?;
+            for frame in frames {
+                tx.send(Ok(frame)).map_err(|_| {
+                    Error::Invalid(
+                        "comms socket: self inbox closed".into(),
+                    )
+                })?;
+            }
+            return Ok(());
+        }
+        let stream = self
+            .peers
+            .get_mut(dst)
+            .and_then(Option::as_mut)
+            .ok_or_else(|| {
+                Error::Invalid(format!(
+                    "comms: send to endpoint {dst} of a {}-rank world \
+                     (no connection)",
+                    self.nranks
+                ))
+            })?;
+        let total: usize = frames.iter().map(|f| 4 + f.len()).sum();
+        let mut msg = Vec::with_capacity(total);
+        for frame in &frames {
+            msg.extend_from_slice(&(frame.len() as u32).to_le_bytes());
+            msg.extend_from_slice(frame);
+        }
+        stream.write_all(&msg).map_err(|e| {
+            Error::Invalid(format!("comms: endpoint {dst} hung up ({e})"))
+        })
+    }
+
     fn recv_bytes(&mut self) -> Result<Vec<u8>> {
         match self.inbox.recv() {
             Ok(Ok(bytes)) => Ok(bytes),
@@ -338,6 +399,28 @@ mod tests {
         // and the reverse direction of the same connection
         t1.send_bytes(0, vec![7]).unwrap();
         assert_eq!(t0.recv_bytes().unwrap(), vec![7]);
+    }
+
+    #[test]
+    fn batched_frames_arrive_distinct_and_ordered() {
+        // one write_all on the sender side, but the receiver still pops
+        // each frame whole, in order — the batch is a syscall
+        // optimisation, not a wire-format change
+        let (a, b) = pair();
+        let mut t0 = SocketTransport::assemble(0, 2, vec![(1, a)]).unwrap();
+        let mut t1 = SocketTransport::assemble(1, 2, vec![(0, b)]).unwrap();
+        t0.send_bytes_batch(1, vec![vec![1, 2], vec![], vec![3; 50_000]])
+            .unwrap();
+        t0.send_bytes(1, vec![4]).unwrap();
+        assert_eq!(t1.recv_bytes().unwrap(), vec![1, 2]);
+        assert_eq!(t1.recv_bytes().unwrap(), Vec::<u8>::new());
+        assert_eq!(t1.recv_bytes().unwrap(), vec![3; 50_000]);
+        assert_eq!(t1.recv_bytes().unwrap(), vec![4]);
+        // the 1-rank self-seam takes the per-frame path
+        let mut solo = SocketTransport::assemble(0, 1, vec![]).unwrap();
+        solo.send_bytes_batch(0, vec![vec![7], vec![8, 9]]).unwrap();
+        assert_eq!(solo.recv_bytes().unwrap(), vec![7]);
+        assert_eq!(solo.recv_bytes().unwrap(), vec![8, 9]);
     }
 
     #[test]

@@ -101,6 +101,21 @@ pub trait Transport: Send {
     fn recv_bytes_timeout(&mut self, timeout: Duration)
                           -> Result<Option<Vec<u8>>>;
 
+    /// Send several already-encoded frames to one destination. The
+    /// frames stay **distinct messages** (each is received by its own
+    /// `recv_bytes`, in order), but an implementation may coalesce the
+    /// whole batch into a single carrier operation — the socket
+    /// transport turns it into one TCP write, the lever behind the
+    /// communication-avoiding super-step exchange. The default just
+    /// loops [`Transport::send_bytes`].
+    fn send_bytes_batch(&mut self, dst: usize, frames: Vec<Vec<u8>>)
+                        -> Result<()> {
+        for frame in frames {
+            self.send_bytes(dst, frame)?;
+        }
+        Ok(())
+    }
+
     /// Encode and send one tagged halo plane straight from a borrowed
     /// payload — the only copy on the send hot path.
     fn send_plane(&mut self, dst: usize, src: u32, tag: Tag, data: &[f64])
@@ -308,6 +323,22 @@ mod tests {
         assert!(r1
             .recv_timeout(Duration::from_secs(30))
             .is_err());
+    }
+
+    #[test]
+    fn batched_sends_stay_distinct_messages() {
+        let mut world = ChannelTransport::mesh(2);
+        let mut r1 = world.pop().unwrap();
+        let mut r0 = world.pop().unwrap();
+        let frames: Vec<Vec<u8>> = (0..3)
+            .map(|i| Frame::Plane(msg(0, i, vec![i as f64])).encode())
+            .collect();
+        r0.send_bytes_batch(1, frames).unwrap();
+        for i in 0..3 {
+            let got = recv_plane(&mut r1);
+            assert_eq!(got.tag.step, i, "batch preserves send order");
+            assert_eq!(got.data, vec![i as f64]);
+        }
     }
 
     #[test]

@@ -23,24 +23,32 @@
 //!      0     4  magic  "TDPW"
 //!      4     1  version (2)
 //!      5     1  kind    (0 Plane, 1 Command, 2 Partials, 3 Interior,
-//!                        4 Report)
+//!                        4 Report, 5 PlaneBlock)
 //! ```
 //!
 //! Kind-specific layouts (offsets continue from the prelude):
 //!
 //! ```text
-//! Plane    6 phase(1)  7 field(1)  8 side(1)  9 src(4)  13 step(8)
-//!          21 count(4)  25 payload(8*count)
-//! Command  6 op(1)  7 arg(8)            [op: 0 Advance, 1 Observables,
+//! Plane      6 phase(1)  7 field(1)  8 side(1)  9 src(4)  13 step(8)
+//!            21 count(4)  25 payload(8*count)
+//! Command    6 op(1)  7 arg(8)          [op: 0 Advance, 1 Observables,
 //!                                        2 Gather, 3 GatherPhi,
 //!                                        4 Shutdown; arg = steps]
-//! Partials 6 src(4)  10 steps(8)  18 sites(8)  26 mass(8)
-//!          34 momentum(24)  58 phi_total(8)  66 phi_sq(8)
-//! Interior 6 field(1)  7 src(4)  11 count(4)  15 payload(8*count)
-//!          [field: 0 F, 1 G, 2 Phi]
-//! Report   6 src(4)  10 interior_sites(8)  18 steps(8)  26 compute_s(8)
-//!          34 wait_s(8)  42 idle_s(8)  50 bytes_sent(8)  58 msgs_sent(8)
+//! Partials   6 src(4)  10 steps(8)  18 sites(8)  26 mass(8)
+//!            34 momentum(24)  58 phi_total(8)  66 phi_sq(8)
+//! Interior   6 field(1)  7 src(4)  11 count(4)  15 payload(8*count)
+//!            [field: 0 F, 1 G, 2 Phi]
+//! Report     6 src(4)  10 interior_sites(8)  18 steps(8)  26 compute_s(8)
+//!            34 wait_s(8)  42 idle_s(8)  50 bytes_sent(8)  58 msgs_sent(8)
+//! PlaneBlock 6 field(1)  7 side(1)  8 depth(4)  12 src(4)  16 step(8)
+//!            24 count(4)  28 payload(8*count)
 //! ```
+//!
+//! `PlaneBlock` is the communication-avoiding super-step frame: one
+//! message carries a whole `depth`-plane-deep ghost block (the
+//! `halo::pack_x_planes` layout), replacing `depth` individual `Plane`
+//! frames — one TCP write per super-step per (field, side) instead of
+//! per step per plane.
 
 use crate::error::{Error, Result};
 
@@ -52,12 +60,15 @@ pub const VERSION: u8 = 2;
 pub const PLANE_HEADER_LEN: usize = 25;
 /// Fixed header size of an [`InteriorMsg`] frame in bytes.
 pub const INTERIOR_HEADER_LEN: usize = 15;
+/// Fixed header size of a [`PlaneBlockMsg`] frame in bytes.
+pub const PLANE_BLOCK_HEADER_LEN: usize = 28;
 
 const KIND_PLANE: u8 = 0;
 const KIND_COMMAND: u8 = 1;
 const KIND_PARTIALS: u8 = 2;
 const KIND_INTERIOR: u8 = 3;
 const KIND_REPORT: u8 = 4;
+const KIND_PLANE_BLOCK: u8 = 5;
 
 /// Which of the two per-step exchanges a plane belongs to.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -110,6 +121,29 @@ pub struct PlaneMsg {
     pub tag: Tag,
     /// `ncomp * plane_sites` doubles, SoA component-major (the
     /// `halo::pack_x_plane` layout).
+    pub data: Vec<f64>,
+}
+
+/// A depth-tagged multi-plane ghost block in flight: one frame carrying
+/// `depth` consecutive halo planes of one field for one side — the
+/// communication-avoiding super-step exchange unit. The receiver matches
+/// on `(step, field, side)` where `step` is the global timestep at the
+/// start of the super-step, and validates `depth` against its own plan.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlaneBlockMsg {
+    /// Sending rank (diagnostics; matching is by `(step, field, side)`).
+    pub src: u32,
+    /// Global timestep at the start of the super-step the block feeds.
+    pub step: u64,
+    /// Which distribution field the payload carries.
+    pub field: FieldId,
+    /// Which ghost region the payload fills at the receiver.
+    pub side: Side,
+    /// Number of consecutive x-planes in the block.
+    pub depth: u32,
+    /// `ncomp * depth * plane_sites` doubles, SoA component-major with
+    /// the `depth` planes contiguous per component (the
+    /// `halo::pack_x_planes` layout).
     pub data: Vec<f64>,
 }
 
@@ -204,6 +238,7 @@ pub enum Frame {
     Partials(PartialObs),
     Interior(InteriorMsg),
     Report(ReportMsg),
+    PlaneBlock(PlaneBlockMsg),
 }
 
 fn prelude(out: &mut Vec<u8>, kind: u8) {
@@ -253,6 +288,41 @@ impl PlaneMsg {
                 "comms wire: expected a halo plane, got {other:?}"
             ))),
         }
+    }
+}
+
+impl PlaneBlockMsg {
+    /// Encoded frame size for a payload of `count` doubles.
+    pub fn frame_len(count: usize) -> usize {
+        PLANE_BLOCK_HEADER_LEN + 8 * count
+    }
+
+    /// Serialize to the wire frame.
+    pub fn encode(&self) -> Vec<u8> {
+        Self::encode_from(self.src, self.step, self.field, self.side,
+                          self.depth, &self.data)
+    }
+
+    /// Build the wire frame straight from a borrowed payload — the
+    /// zero-intermediate-copy form the super-step send path uses.
+    pub fn encode_from(
+        src: u32,
+        step: u64,
+        field: FieldId,
+        side: Side,
+        depth: u32,
+        data: &[f64],
+    ) -> Vec<u8> {
+        let mut out = Vec::with_capacity(Self::frame_len(data.len()));
+        prelude(&mut out, KIND_PLANE_BLOCK);
+        out.push(field as u8);
+        out.push(side as u8);
+        out.extend_from_slice(&depth.to_le_bytes());
+        out.extend_from_slice(&src.to_le_bytes());
+        out.extend_from_slice(&step.to_le_bytes());
+        out.extend_from_slice(&(data.len() as u32).to_le_bytes());
+        push_f64s(&mut out, data);
+        out
     }
 }
 
@@ -400,6 +470,7 @@ impl Frame {
             Frame::Partials(p) => p.encode(),
             Frame::Interior(i) => i.encode(),
             Frame::Report(r) => r.encode(),
+            Frame::PlaneBlock(b) => b.encode(),
         }
     }
 
@@ -511,6 +582,31 @@ impl Frame {
                     idle_s,
                     bytes_sent,
                     msgs_sent,
+                }))
+            }
+            KIND_PLANE_BLOCK => {
+                let field = match r.u8()? {
+                    0 => FieldId::F,
+                    1 => FieldId::G,
+                    v => return Err(bad(format!("unknown field {v}"))),
+                };
+                let side = match r.u8()? {
+                    0 => Side::Low,
+                    1 => Side::High,
+                    v => return Err(bad(format!("unknown side {v}"))),
+                };
+                let depth = r.u32()?;
+                let src = r.u32()?;
+                let step = r.u64()?;
+                let count = r.u32()? as usize;
+                let data = r.f64_tail(count)?;
+                Ok(Frame::PlaneBlock(PlaneBlockMsg {
+                    src,
+                    step,
+                    field,
+                    side,
+                    depth,
+                    data,
                 }))
             }
             v => Err(bad(format!("unknown frame kind {v}"))),
@@ -630,6 +726,81 @@ mod tests {
         };
         let fr = Frame::Report(r);
         assert_eq!(Frame::decode(&fr.encode()).unwrap(), fr);
+    }
+
+    fn sample_block() -> PlaneBlockMsg {
+        PlaneBlockMsg {
+            src: 2,
+            step: 12,
+            field: FieldId::F,
+            side: Side::Low,
+            depth: 4,
+            data: vec![0.0, -1.5, f64::MIN_POSITIVE, 1.0 / 3.0, -0.0,
+                       f64::MAX, 1e-300, 42.0],
+        }
+    }
+
+    #[test]
+    fn plane_block_round_trip_is_bit_exact() {
+        let msg = sample_block();
+        let bytes = msg.encode();
+        assert_eq!(bytes.len(),
+                   PLANE_BLOCK_HEADER_LEN + 8 * msg.data.len());
+        match Frame::decode(&bytes).unwrap() {
+            Frame::PlaneBlock(back) => {
+                assert_eq!(back.src, msg.src);
+                assert_eq!(back.step, msg.step);
+                assert_eq!(back.field, msg.field);
+                assert_eq!(back.side, msg.side);
+                assert_eq!(back.depth, msg.depth);
+                assert_eq!(back.data.len(), msg.data.len());
+                for (a, b) in back.data.iter().zip(&msg.data) {
+                    assert_eq!(a.to_bits(), b.to_bits(),
+                               "bitwise f64 transport");
+                }
+            }
+            other => panic!("decoded {other:?}"),
+        }
+    }
+
+    #[test]
+    fn empty_plane_block_round_trips() {
+        let msg = PlaneBlockMsg {
+            src: 0,
+            step: 0,
+            field: FieldId::G,
+            side: Side::High,
+            depth: 0,
+            data: vec![],
+        };
+        let bytes = msg.encode();
+        assert_eq!(bytes.len(), PLANE_BLOCK_HEADER_LEN);
+        assert_eq!(Frame::decode(&bytes).unwrap(), Frame::PlaneBlock(msg));
+    }
+
+    #[test]
+    fn corrupt_plane_blocks_rejected() {
+        let good = sample_block().encode();
+        // field out of range
+        let mut bad = good.clone();
+        bad[6] = 7;
+        assert!(Frame::decode(&bad).is_err());
+        // side out of range
+        let mut bad = good.clone();
+        bad[7] = 2;
+        assert!(Frame::decode(&bad).is_err());
+        // payload length mismatch
+        let mut bad = good.clone();
+        bad.pop();
+        assert!(Frame::decode(&bad).is_err());
+        // declared count larger than payload
+        let mut bad = good.clone();
+        bad[24] = bad[24].wrapping_add(1);
+        assert!(Frame::decode(&bad).is_err());
+        // truncated header
+        assert!(Frame::decode(&good[..20]).is_err());
+        // a block frame is rejected by the single-plane decoder
+        assert!(PlaneMsg::decode(&good).is_err());
     }
 
     #[test]

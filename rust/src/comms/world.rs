@@ -36,6 +36,25 @@
 //! orders run the identical per-site arithmetic, so they are bit-identical
 //! to each other *and* to the single-domain fused `FullStep` path
 //! (`tests/comms_parity.rs`, `tests/resident_world.rs`).
+//!
+//! # Communication-avoiding super-steps
+//!
+//! With [`CommsConfig::depth`] `k > 1` the per-step exchanges above are
+//! replaced by one exchange per **k-step super-step**: each rank extends
+//! its slab by `HALO_PER_STEP * k` ghost planes per side, receives a
+//! single depth-tagged ghost *block* of `2k` x-planes per field per
+//! neighbour ([`crate::comms::wire::PlaneBlockMsg`], batched so a socket
+//! transport issues one TCP write per neighbour), and then advances `k`
+//! fused collide→stream timesteps entirely locally, the valid window
+//! shrinking by two planes per side per step — exactly the trapezoid
+//! recurrence of the host [`crate::lb::multistep::MultiStepPlan`] tier,
+//! shifted into the rank's deep-halo slab. Per `k` steps a rank sends 4
+//! block messages instead of `6k` plane messages. The overlapped
+//! schedule still applies: the first blocked step's interior needs no
+//! ghost data and is computed while the blocks are in flight. Every
+//! per-site update is placement-independent, so depth-k runs are
+//! bit-identical to the depth-1 resident world and the fused engine
+//! (`tests/multistep_world.rs`).
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::Arc;
@@ -44,19 +63,21 @@ use std::time::{Duration, Instant};
 
 use crate::comms::transport::{ChannelTransport, Transport};
 use crate::comms::wire::{Command, FieldId, Frame, InteriorField,
-                         InteriorMsg, PartialObs, Phase, PlaneMsg,
-                         ReportMsg, Side, Tag};
+                         InteriorMsg, PartialObs, Phase, PlaneBlockMsg,
+                         PlaneMsg, ReportMsg, Side, Tag};
 use crate::error::{Error, Result};
 use crate::free_energy::gradient::gradient_fd_range;
 use crate::free_energy::symmetric::FeParams;
 use crate::lattice::decomp::{SlabDecomposition, SubDomain};
 use crate::lattice::geometry::Geometry;
-use crate::lattice::halo::{pack_x_plane, unpack_x_plane};
+use crate::lattice::halo::{pack_x_plane, pack_x_planes, unpack_x_plane,
+                           unpack_x_planes};
 use crate::lattice::stream_table::StreamTable;
-use crate::lb::collision::collide_lattice_range;
+use crate::lb::collision::{collide_lattice_range, collide_stream_range};
 use crate::lb::engine::Observables;
 use crate::lb::model::VelSet;
 use crate::lb::moments::phi_from_g_range;
+use crate::lb::multistep::HALO_PER_STEP;
 use crate::lb::propagation::stream_range;
 use crate::targetdp::ilp;
 use crate::targetdp::reduce::{reduce_sum_range, reduce_sum_sq_range};
@@ -87,6 +108,18 @@ pub struct CommsConfig {
     /// Chunk→thread assignment inside each rank's pool (the `[target]
     /// schedule` knob, honoured here exactly like the engine path).
     pub schedule: Schedule,
+    /// Timesteps advanced per halo exchange (the communication-avoiding
+    /// super-step depth). 1 = the classic per-step exchange; `k > 1`
+    /// trades `HALO_PER_STEP * k` ghost planes per side and trapezoid
+    /// overlap recompute for one ghost-block message per field per
+    /// neighbour per `k` steps. 0 ("auto") must be resolved before the
+    /// world is built — `Config::comms_config` does, via
+    /// `comms_depth_plan`.
+    pub depth: usize,
+    /// Pin each rank's TLP workers to cores, rank-major round-robin
+    /// (`sched_setaffinity` on Linux, a no-op elsewhere) — the `[target]
+    /// pin_threads` knob.
+    pub pin: bool,
 }
 
 impl Default for CommsConfig {
@@ -98,6 +131,8 @@ impl Default for CommsConfig {
             vvl: 8,
             scalar: false,
             schedule: Schedule::Static,
+            depth: 1,
+            pin: false,
         }
     }
 }
@@ -197,6 +232,10 @@ pub struct Rank {
     transport: Box<dyn Transport>,
     /// Halo frames that arrived while waiting for a different tag.
     pending: HashMap<Tag, Vec<f64>>,
+    /// Ghost-block frames that arrived before their wait was posted,
+    /// keyed by (super-step start, field, side); the value keeps the
+    /// sender's plane depth for validation at the matching wait.
+    pending_blocks: HashMap<(u64, FieldId, Side), (u32, Vec<f64>)>,
     /// Commands that arrived while waiting for a halo plane.
     cmds: VecDeque<Command>,
     /// Seconds spent blocked in [`Rank::wait`].
@@ -219,6 +258,7 @@ impl Rank {
             nranks: transport.nranks(),
             transport,
             pending: HashMap::new(),
+            pending_blocks: HashMap::new(),
             cmds: VecDeque::new(),
             wait_s: 0.0,
             idle_s: 0.0,
@@ -252,6 +292,26 @@ impl Rank {
         self.transport.send_plane(dst, self.rank as u32, tag, data)
     }
 
+    /// Non-blocking send of a batch of depth-tagged ghost blocks to one
+    /// neighbour — the super-step analog of [`Rank::isend`]. `depth` is
+    /// the number of x-planes each block carries; every block is its own
+    /// wire frame, but the whole batch is handed to the transport at once
+    /// ([`Transport::send_bytes_batch`]) so a socket can coalesce one
+    /// super-step's traffic to `dst` into a single TCP write. Counted in
+    /// the halo-traffic totals, one message per block.
+    pub fn isend_blocks(&mut self, dst: usize, step: u64, depth: u32,
+                        blocks: &[(FieldId, Side, &[f64])]) -> Result<()> {
+        let mut frames = Vec::with_capacity(blocks.len());
+        for (field, side, data) in blocks {
+            self.bytes_sent +=
+                PlaneBlockMsg::frame_len(data.len()) as u64;
+            self.msgs_sent += 1;
+            frames.push(PlaneBlockMsg::encode_from(
+                self.rank as u32, step, *field, *side, depth, data));
+        }
+        self.transport.send_bytes_batch(dst, frames)
+    }
+
     /// Send a control-plane response to the session controller (not
     /// counted as halo traffic).
     pub fn send_response(&mut self, frame: &Frame) -> Result<()> {
@@ -273,6 +333,23 @@ impl Rank {
         Ok(())
     }
 
+    /// Park an out-of-order ghost block for its own wait.
+    fn park_block(&mut self, msg: PlaneBlockMsg) -> Result<()> {
+        let PlaneBlockMsg { step, field, side, depth, data, .. } = msg;
+        if self
+            .pending_blocks
+            .insert((step, field, side), (depth, data))
+            .is_some()
+        {
+            return Err(Error::Invalid(format!(
+                "comms: rank {} received a duplicate ghost block for \
+                 step {step} {field:?} {side:?}",
+                self.rank
+            )));
+        }
+        Ok(())
+    }
+
     /// Block until the plane tagged `tag` has arrived and return its
     /// payload (`MPI_Wait` on the matching receive). Frames for other
     /// tags encountered on the way are parked for their own waits;
@@ -288,6 +365,7 @@ impl Rank {
             match self.transport.recv_timeout(WAIT_TIMEOUT)? {
                 Some(Frame::Plane(msg)) if msg.tag == tag => break msg.data,
                 Some(Frame::Plane(msg)) => self.park(msg)?,
+                Some(Frame::PlaneBlock(msg)) => self.park_block(msg)?,
                 Some(Frame::Command(cmd)) => self.cmds.push_back(cmd),
                 Some(other) => {
                     return Err(Error::Invalid(format!(
@@ -300,6 +378,63 @@ impl Rank {
                     return Err(Error::Invalid(format!(
                         "comms: rank {} timed out after {WAIT_TIMEOUT:?} \
                          waiting for {tag:?} — neighbour or driver lost?",
+                        self.rank
+                    )))
+                }
+            }
+        };
+        self.wait_s += t0.elapsed().as_secs_f64();
+        Ok(data)
+    }
+
+    /// Block until the ghost block keyed `(step, field, side)` has
+    /// arrived and return its payload — [`Rank::wait`] for the
+    /// super-step exchange. The sender's depth tag must match `depth`
+    /// (in planes): a mismatch means the two ends disagree on the
+    /// super-step schedule, which would silently corrupt physics.
+    pub fn wait_block(&mut self, step: u64, field: FieldId, side: Side,
+                      depth: u32) -> Result<Vec<f64>> {
+        let check = |got: u32| -> Result<()> {
+            if got != depth {
+                return Err(Error::Invalid(format!(
+                    "comms: ghost block for step {step} {field:?} \
+                     {side:?} carries {got} planes, want {depth}"
+                )));
+            }
+            Ok(())
+        };
+        if let Some((d, data)) =
+            self.pending_blocks.remove(&(step, field, side))
+        {
+            check(d)?;
+            return Ok(data);
+        }
+        let t0 = Instant::now();
+        let data = loop {
+            match self.transport.recv_timeout(WAIT_TIMEOUT)? {
+                Some(Frame::PlaneBlock(msg))
+                    if msg.step == step
+                        && msg.field == field
+                        && msg.side == side =>
+                {
+                    check(msg.depth)?;
+                    break msg.data;
+                }
+                Some(Frame::PlaneBlock(msg)) => self.park_block(msg)?,
+                Some(Frame::Plane(msg)) => self.park(msg)?,
+                Some(Frame::Command(cmd)) => self.cmds.push_back(cmd),
+                Some(other) => {
+                    return Err(Error::Invalid(format!(
+                        "comms: rank {} received a controller-bound frame \
+                         {other:?}",
+                        self.rank
+                    )))
+                }
+                None => {
+                    return Err(Error::Invalid(format!(
+                        "comms: rank {} timed out after {WAIT_TIMEOUT:?} \
+                         waiting for the step-{step} {field:?} {side:?} \
+                         ghost block — neighbour or driver lost?",
                         self.rank
                     )))
                 }
@@ -326,6 +461,7 @@ impl Rank {
                 None => continue, // idle at the barrier, keep waiting
                 Some(Frame::Command(cmd)) => break cmd,
                 Some(Frame::Plane(msg)) => self.park(msg)?,
+                Some(Frame::PlaneBlock(msg)) => self.park_block(msg)?,
                 Some(other) => {
                     return Err(Error::Invalid(format!(
                         "comms: rank {} received a controller-bound frame \
@@ -362,7 +498,31 @@ impl CommsWorld {
                 ilp::SUPPORTED_VVL
             )));
         }
+        if cfg.depth == 0 {
+            return Err(Error::Invalid(
+                "comms: super-step depth 0 (auto) must be resolved \
+                 before the world is built — Config::comms_config does \
+                 this via comms_depth_plan"
+                    .into(),
+            ));
+        }
         let dec = SlabDecomposition::new(geom, cfg.ranks)?;
+        if cfg.depth > 1 {
+            // every rank needs a full trapezoid foot: HALO_PER_STEP *
+            // depth ghost planes per side, no wider than its own slab
+            // (a deeper foot would reach past the nearest neighbour)
+            let halo = HALO_PER_STEP * cfg.depth;
+            let min_lxl =
+                dec.domains.iter().map(|d| d.lxl).min().unwrap_or(0);
+            if halo > min_lxl {
+                return Err(Error::Invalid(format!(
+                    "comms: super-step depth {} needs {halo} ghost \
+                     planes per side but the narrowest slab has only \
+                     {min_lxl} interior planes",
+                    cfg.depth
+                )));
+            }
+        }
         Ok(CommsWorld { dec, cfg })
     }
 
@@ -936,9 +1096,29 @@ pub fn serve_rank(d: SubDomain, vs: &'static VelSet, p: &FeParams,
 fn rank_main(d: SubDomain, vs: &'static VelSet, p: FeParams,
              f0: Arc<Vec<f64>>, g0: Arc<Vec<f64>>, cfg: CommsConfig,
              nthreads: usize, transport: Box<dyn Transport>) -> Result<()> {
-    let pool = TlpPool::new(nthreads, cfg.schedule);
-    let ln = d.local.nsites();
+    let pool = if cfg.pin {
+        // rank-major round-robin: rank r's workers land on CPUs
+        // r*nthreads, r*nthreads+1, ... (mod machine width)
+        TlpPool::new_pinned(nthreads, cfg.schedule, d.rank * nthreads)
+    } else {
+        TlpPool::new(nthreads, cfg.schedule)
+    };
+    let depth = cfg.depth.max(1);
+    // depth 1 keeps the classic one-plane halo layout and the per-step
+    // exchange path; a super-stepping rank extends its slab by
+    // HALO_PER_STEP ghost planes per blocked step, like MultiStepPlan
+    let halo = if depth > 1 { HALO_PER_STEP * depth } else { 1 };
+    let local = d.local_with_halo(halo);
+    let ln = local.nsites();
     let nvel = vs.nvel;
+    let send_len = if depth > 1 {
+        // the f and g ghost blocks bound for one neighbour live side by
+        // side (split_at_mut) so both frames of a batched send exist at
+        // the same time
+        2 * nvel * halo * d.plane()
+    } else {
+        nvel * d.plane()
+    };
     let mut st = RankState {
         f: pool.zeros(nvel * ln),
         g: pool.zeros(nvel * ln),
@@ -947,15 +1127,15 @@ fn rank_main(d: SubDomain, vs: &'static VelSet, p: FeParams,
         phi: pool.zeros(ln),
         grad: pool.zeros(3 * ln),
         lap: pool.zeros(ln),
-        send_buf: vec![0.0; nvel * d.plane()],
+        send_buf: vec![0.0; send_len],
     };
-    d.scatter_into(&f0, nvel, &mut st.f);
-    d.scatter_into(&g0, nvel, &mut st.g);
+    d.scatter_into_with_halo(&f0, nvel, &mut st.f, halo);
+    d.scatter_into_with_halo(&g0, nvel, &mut st.g, halo);
     // the global initial state is only needed for the scatter — free our
     // share of it before the long residency
     drop(f0);
     drop(g0);
-    let table = StreamTable::cached(vs, &d.local);
+    let table = StreamTable::cached(vs, &local);
     let mut rank = Rank::new(transport);
 
     let t0 = Instant::now();
@@ -963,25 +1143,39 @@ fn rank_main(d: SubDomain, vs: &'static VelSet, p: FeParams,
     loop {
         match rank.wait_command()? {
             Command::Advance { steps } => {
-                for _ in 0..steps {
-                    step_rank(&d, vs, &p, &table, &mut st, &mut rank, step,
-                              &cfg, &pool)?;
-                    step += 1;
+                if depth > 1 {
+                    // super-steps: one ghost-block exchange per up-to-k
+                    // timesteps; a short remainder shrinks the trapezoid
+                    // (base offset), never the exchange count
+                    let mut left = steps;
+                    while left > 0 {
+                        let sdepth = depth.min(left as usize);
+                        super_step(&d, vs, &p, &table, &mut st, &mut rank,
+                                   step, sdepth, halo, &cfg, &pool)?;
+                        step += sdepth as u64;
+                        left -= sdepth as u64;
+                    }
+                } else {
+                    for _ in 0..steps {
+                        step_rank(&d, vs, &p, &table, &mut st, &mut rank,
+                                  step, &cfg, &pool)?;
+                        step += 1;
+                    }
                 }
             }
             Command::Observables => {
-                let partials =
-                    rank_partials(&d, vs, &mut st, &pool, &cfg, step);
+                let partials = rank_partials(&d, vs, &mut st, &pool, &cfg,
+                                             step, halo);
                 rank.send_response(&Frame::Partials(partials))?;
             }
             Command::Gather => {
-                let fi = d.interior_of(&st.f, nvel);
+                let fi = d.interior_of_with_halo(&st.f, nvel, halo);
                 rank.send_response(&Frame::Interior(InteriorMsg {
                     src: d.rank as u32,
                     field: InteriorField::F,
                     data: fi,
                 }))?;
-                let gi = d.interior_of(&st.g, nvel);
+                let gi = d.interior_of_with_halo(&st.g, nvel, halo);
                 rank.send_response(&Frame::Interior(InteriorMsg {
                     src: d.rank as u32,
                     field: InteriorField::G,
@@ -992,9 +1186,10 @@ fn rank_main(d: SubDomain, vs: &'static VelSet, p: FeParams,
                 // fresh phi from the current g, interior only, with this
                 // rank's own pool/VVL (st.phi is a per-step scratch, so
                 // overwriting it cannot perturb the next Advance)
-                phi_from_g_range(vs, &st.g, &mut st.phi, ln, d.interior(),
-                                 &pool, cfg.vvl);
-                let pi = d.interior_of(&st.phi, 1);
+                phi_from_g_range(vs, &st.g, &mut st.phi, ln,
+                                 d.interior_with_halo(halo), &pool,
+                                 cfg.vvl);
+                let pi = d.interior_of_with_halo(&st.phi, 1, halo);
                 rank.send_response(&Frame::Interior(InteriorMsg {
                     src: d.rank as u32,
                     field: InteriorField::Phi,
@@ -1024,10 +1219,10 @@ fn rank_main(d: SubDomain, vs: &'static VelSet, p: FeParams,
 /// deterministic [`crate::targetdp::reduce`] kernels (TLP × ILP, chunk
 /// order fixed by (sites, vvl), independent of thread count).
 fn rank_partials(d: &SubDomain, vs: &VelSet, st: &mut RankState,
-                 pool: &TlpPool, cfg: &CommsConfig, step: u64)
-                 -> PartialObs {
-    let ln = d.local.nsites();
-    let interior = d.interior();
+                 pool: &TlpPool, cfg: &CommsConfig, step: u64,
+                 halo: usize) -> PartialObs {
+    let ln = d.local_with_halo(halo).nsites();
+    let interior = d.interior_with_halo(halo);
     let vvl = cfg.vvl;
     let mut fsum = vec![0.0; vs.nvel];
     reduce_sum_range(&st.f, vs.nvel, ln, interior.clone(), pool, vvl,
@@ -1069,6 +1264,181 @@ fn unpack_checked(field: &mut [f64], nvel: usize, ln: usize, plane: usize,
         )));
     }
     unpack_x_plane(field, nvel, ln, plane, p, data);
+    Ok(())
+}
+
+/// Validate a received depth-tagged ghost block and scatter it into the
+/// `np` ghost planes starting at local plane `p0`.
+fn unpack_block_checked(field: &mut [f64], nvel: usize, ln: usize,
+                        plane: usize, p0: usize, np: usize, data: &[f64])
+                        -> Result<()> {
+    if data.len() != nvel * np * plane {
+        return Err(Error::Invalid(format!(
+            "comms: ghost block is {} doubles, want {}",
+            data.len(),
+            nvel * np * plane
+        )));
+    }
+    unpack_x_planes(field, nvel, ln, plane, p0, np, data);
+    Ok(())
+}
+
+/// One trapezoid-blocked timestep inside a super-step: the
+/// [`crate::lb::multistep::MultiStepPlan`] j-recurrence shifted inward
+/// by `base` ghost planes (`base > 0` when a remainder super-step runs
+/// shallower than the allocated halo). Reads the window left fully valid
+/// by step `j - 1` and leaves `[base + 2j, lloc - base - 2j)` advanced;
+/// after the last step exactly the interior planes remain.
+#[allow(clippy::too_many_arguments)]
+fn blocked_step(local: &Geometry, vs: &VelSet, p: &FeParams,
+                table: &StreamTable, st: &mut RankState, base: usize,
+                j: usize, cfg: &CommsConfig, pool: &TlpPool) {
+    let (vvl, scalar) = (cfg.vvl, cfg.scalar);
+    let plane = local.ly * local.lz;
+    let lloc = local.lx;
+    let ln = local.nsites();
+    let c0 = base + 2 * j - 1;
+    let c1 = (lloc - base) - (2 * j - 1);
+    let p0 = base + 2 * j - 2;
+    let p1 = (lloc - base) - (2 * j - 2);
+    phi_from_g_range(vs, &st.g, &mut st.phi, ln, p0 * plane..p1 * plane,
+                     pool, vvl);
+    gradient_fd_range(local, &st.phi, &mut st.grad, &mut st.lap,
+                      c0 * plane..c1 * plane, pool, vvl);
+    collide_stream_range(vs, p, &st.f, &st.g, &mut st.f_tmp,
+                         &mut st.g_tmp, &st.grad, &st.lap, table, ln,
+                         c0 * plane..c1 * plane, pool, vvl, scalar);
+    std::mem::swap(&mut st.f, &mut st.f_tmp);
+    std::mem::swap(&mut st.g, &mut st.g_tmp);
+}
+
+/// One communication-avoiding super-step: advance this rank's slab
+/// `sdepth` fused timesteps behind a single depth-tagged ghost-block
+/// exchange.
+///
+/// Schedule (overlapped mode; bulk-sync waits up front instead):
+///
+/// ```text
+/// isend f,g ghost blocks (2k planes each) to both neighbours
+///                                   — 2 batched sends, 4 block messages
+/// step 1: phi + grad + collide-stream over the interior   ┐ overlapped
+///         (needs no ghost data)                           ┘ with flight
+/// wait   4 ghost blocks; finish step 1's rim on the fresh ghosts; swap
+/// steps 2..=k: full trapezoid sweeps, window shrinking two planes per
+///              side per step — purely local, no communication
+/// ```
+///
+/// The sends pack interior planes of the *pre-step* `f`/`g` (step 1
+/// writes only the `_tmp` buffers until its swap), so the blocks always
+/// carry time-t state. A remainder super-step (`sdepth < depth`, when
+/// `k` does not divide the block's steps) starts the trapezoid `base`
+/// planes inward and exchanges proportionally thinner blocks — the
+/// outer ghost planes hold stale garbage but are never read. Every
+/// per-site update is placement-independent, so the result is
+/// bit-identical to `sdepth` per-step exchanges.
+#[allow(clippy::too_many_arguments)]
+fn super_step(d: &SubDomain, vs: &VelSet, p: &FeParams,
+              table: &StreamTable, st: &mut RankState, rank: &mut Rank,
+              step: u64, sdepth: usize, halo: usize, cfg: &CommsConfig,
+              pool: &TlpPool) -> Result<()> {
+    let (vvl, scalar) = (cfg.vvl, cfg.scalar);
+    let plane = d.plane();
+    let lxl = d.lxl;
+    let local = d.local_with_halo(halo);
+    let lloc = local.lx;
+    let ln = local.nsites();
+    let nvel = vs.nvel;
+    // ghost planes actually consumed this super-step, and where the
+    // trapezoid foot starts (base = 0 at full depth)
+    let s2 = HALO_PER_STEP * sdepth;
+    let base = halo - s2;
+    let nb = nvel * s2 * plane;
+
+    // ---- post the ghost-block sends: my lowest interior planes fill
+    // the left neighbour's HIGH ghost region and vice versa, for both
+    // fields, one batched send per neighbour ----
+    {
+        let (f_half, g_half) =
+            st.send_buf.split_at_mut(nvel * halo * plane);
+        pack_x_planes(&st.f, nvel, ln, plane, halo, s2,
+                      &mut f_half[..nb]);
+        pack_x_planes(&st.g, nvel, ln, plane, halo, s2,
+                      &mut g_half[..nb]);
+        rank.isend_blocks(rank.left(), step, s2 as u32,
+                          &[(FieldId::F, Side::High, &f_half[..nb]),
+                            (FieldId::G, Side::High, &g_half[..nb])])?;
+        pack_x_planes(&st.f, nvel, ln, plane, halo + lxl - s2, s2,
+                      &mut f_half[..nb]);
+        pack_x_planes(&st.g, nvel, ln, plane, halo + lxl - s2, s2,
+                      &mut g_half[..nb]);
+        rank.isend_blocks(rank.right(), step, s2 as u32,
+                          &[(FieldId::F, Side::Low, &f_half[..nb]),
+                            (FieldId::G, Side::Low, &g_half[..nb])])?;
+    }
+
+    let wait_ghost_blocks =
+        |rank: &mut Rank, st: &mut RankState| -> Result<()> {
+            let f_lo =
+                rank.wait_block(step, FieldId::F, Side::Low, s2 as u32)?;
+            unpack_block_checked(&mut st.f, nvel, ln, plane, base, s2,
+                                 &f_lo)?;
+            let f_hi =
+                rank.wait_block(step, FieldId::F, Side::High, s2 as u32)?;
+            unpack_block_checked(&mut st.f, nvel, ln, plane, halo + lxl,
+                                 s2, &f_hi)?;
+            let g_lo =
+                rank.wait_block(step, FieldId::G, Side::Low, s2 as u32)?;
+            unpack_block_checked(&mut st.g, nvel, ln, plane, base, s2,
+                                 &g_lo)?;
+            let g_hi =
+                rank.wait_block(step, FieldId::G, Side::High, s2 as u32)?;
+            unpack_block_checked(&mut st.g, nvel, ln, plane, halo + lxl,
+                                 s2, &g_hi)?;
+            Ok(())
+        };
+
+    if !cfg.overlap {
+        // bulk-sync: ghosts first, then the whole trapezoid
+        wait_ghost_blocks(rank, st)?;
+        for j in 1..=sdepth {
+            blocked_step(&local, vs, p, table, st, base, j, cfg, pool);
+        }
+    } else {
+        // step 1 split: its interior planes need no ghost data — the
+        // k-step-wide overlap window is this sweep, computed while the
+        // ghost blocks are in flight
+        phi_from_g_range(vs, &st.g, &mut st.phi, ln,
+                         halo * plane..(halo + lxl) * plane, pool, vvl);
+        let deep = (halo + 1) * plane..(halo + lxl - 1) * plane;
+        gradient_fd_range(&local, &st.phi, &mut st.grad, &mut st.lap,
+                          deep.clone(), pool, vvl);
+        collide_stream_range(vs, p, &st.f, &st.g, &mut st.f_tmp,
+                             &mut st.g_tmp, &st.grad, &st.lap, table, ln,
+                             deep, pool, vvl, scalar);
+        // complete step 1's rim on the freshly filled ghost planes; the
+        // split ranges union to exactly the bulk step-1 ranges, each
+        // site computed once → bit-identical
+        wait_ghost_blocks(rank, st)?;
+        phi_from_g_range(vs, &st.g, &mut st.phi, ln,
+                         base * plane..halo * plane, pool, vvl);
+        phi_from_g_range(vs, &st.g, &mut st.phi, ln,
+                         (halo + lxl) * plane..(lloc - base) * plane,
+                         pool, vvl);
+        for rim in [(base + 1) * plane..(halo + 1) * plane,
+                    (halo + lxl - 1) * plane
+                        ..(lloc - base - 1) * plane] {
+            gradient_fd_range(&local, &st.phi, &mut st.grad, &mut st.lap,
+                              rim.clone(), pool, vvl);
+            collide_stream_range(vs, p, &st.f, &st.g, &mut st.f_tmp,
+                                 &mut st.g_tmp, &st.grad, &st.lap, table,
+                                 ln, rim, pool, vvl, scalar);
+        }
+        std::mem::swap(&mut st.f, &mut st.f_tmp);
+        std::mem::swap(&mut st.g, &mut st.g_tmp);
+        for j in 2..=sdepth {
+            blocked_step(&local, vs, p, table, st, base, j, cfg, pool);
+        }
+    }
     Ok(())
 }
 
@@ -1403,6 +1773,79 @@ mod tests {
                                        &TlpPool::serial(), 8);
         // identical per-site arithmetic → identical bits
         assert_eq!(phi, want);
+    }
+
+    #[test]
+    fn super_step_ranks_match_reference_bitwise() {
+        // depth-k worlds (with a k ∤ nsteps remainder) vs the unfused
+        // single-domain reference; one variant exercises pinned pools
+        let vs = d2q9();
+        let geom = Geometry::new(16, 4, 1);
+        let steps = 5;
+        let (f_want, g_want) = reference(vs, &geom, steps);
+        for (depth, pin) in [(2usize, false), (2, true), (4, false)] {
+            for overlap in [false, true] {
+                let (mut f, mut g) = spinodal(vs, &geom);
+                let cfg = CommsConfig { ranks: 2, depth, pin, overlap,
+                                        ..CommsConfig::default() };
+                run_decomposed(&geom, vs, &FeParams::default(), &mut f,
+                               &mut g, steps, &cfg)
+                    .unwrap();
+                assert_eq!(f, f_want,
+                           "depth={depth} overlap={overlap} pin={pin}");
+                assert_eq!(g, g_want,
+                           "depth={depth} overlap={overlap} pin={pin}");
+            }
+        }
+    }
+
+    #[test]
+    fn super_steps_cut_halo_message_count() {
+        // depth 1: 6 plane messages per step per rank; depth k: 4 block
+        // messages per super-step (f,g × two sides), remainder included
+        let vs = d2q9();
+        let geom = Geometry::new(16, 4, 1);
+        let steps = 5u64;
+        for (depth, want_msgs) in [(1usize, 6 * steps),
+                                   (2, 4 * steps.div_ceil(2)),
+                                   (4, 4 * steps.div_ceil(4))] {
+            let (mut f, mut g) = spinodal(vs, &geom);
+            let cfg = CommsConfig { ranks: 2, depth,
+                                    ..CommsConfig::default() };
+            let rep = run_decomposed(&geom, vs, &FeParams::default(),
+                                     &mut f, &mut g, steps, &cfg)
+                .unwrap();
+            for r in &rep.ranks {
+                assert_eq!(r.msgs_sent, want_msgs, "depth={depth}");
+                assert!(r.bytes_sent > 0);
+            }
+        }
+    }
+
+    #[test]
+    fn world_rejects_bad_depths() {
+        let geom = Geometry::new(8, 4, 1);
+        // auto depth must be resolved by the config layer first
+        assert!(CommsWorld::new(geom, CommsConfig {
+            depth: 0,
+            ..CommsConfig::default()
+        })
+        .is_err());
+        // ranks=2 → lxl=4; depth 2 needs 4 ghost planes per side: ok
+        assert!(CommsWorld::new(geom, CommsConfig {
+            ranks: 2,
+            depth: 2,
+            ..CommsConfig::default()
+        })
+        .is_ok());
+        // depth 3 needs 6 > 4: the trapezoid foot would span a
+        // neighbour's neighbour
+        assert!(CommsWorld::new(geom, CommsConfig {
+            ranks: 2,
+            depth: 3,
+            ..CommsConfig::default()
+        })
+        .is_err());
     }
 
     #[test]

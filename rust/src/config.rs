@@ -92,6 +92,17 @@ pub struct TargetCfg {
     /// Overlap halo exchange with interior compute when `ranks > 1`
     /// (`false` = bulk-synchronous reference schedule; same results).
     pub overlap: bool,
+    /// Communication-avoiding super-step depth for a decomposed run:
+    /// each rank exchanges a depth-`2k` ghost block once per `k` steps
+    /// and advances the `k` steps locally (trapezoid-blocked, like the
+    /// host `MultiStep` tier). 1 = classic one-exchange-per-step; 0 =
+    /// auto (the same cache heuristic as `multi_step`, resolved
+    /// deterministically so socket ranks agree with the driver).
+    pub comms_depth: u64,
+    /// Pin the TLP worker threads of each rank's pool to cores
+    /// (round-robin `sched_setaffinity`, rank-major; Linux only, a no-op
+    /// elsewhere). Off by default.
+    pub pin_threads: bool,
     /// How a decomposed (`ranks > 1`) run computes per-block observables:
     /// `"reduced"` (default) combines distributed per-rank partial sums —
     /// no global state moves between logging blocks; `"gather"` pulls the
@@ -123,6 +134,8 @@ impl Default for TargetCfg {
             xla_vvl_block: 0,
             ranks: 1,
             overlap: true,
+            comms_depth: 1,
+            pin_threads: false,
             observables: "reduced".into(),
             transport: "channel".into(),
             rank_server: String::new(),
@@ -184,6 +197,8 @@ impl Config {
             xla_vvl_block: tgt.usize_or("xla_vvl_block", 0)?,
             ranks: tgt.usize_or("ranks", dt.ranks)?,
             overlap: tgt.bool_or("overlap", dt.overlap)?,
+            comms_depth: tgt.u64_or("comms_depth", dt.comms_depth)?,
+            pin_threads: tgt.bool_or("pin_threads", dt.pin_threads)?,
             observables: tgt.str_or("observables", &dt.observables)?,
             transport: tgt.str_or("transport", &dt.transport)?,
             rank_server: tgt.str_or("rank_server", &dt.rank_server)?,
@@ -262,6 +277,7 @@ impl Config {
              schedule = \"{}\"\nbatch = {}\n\
              fusion = {}\nmulti_step = {}\nxla_vvl_block = {}\n\
              ranks = {}\noverlap = {}\n\
+             comms_depth = {}\npin_threads = {}\n\
              observables = \"{}\"\n\
              transport = \"{}\"\nrank_server = \"{}\"\n\
              \n[free_energy]\n\
@@ -272,6 +288,7 @@ impl Config {
             s.lattice, s.lx, s.ly, s.lz, s.steps, s.init, s.noise, s.seed,
             s.radius, t.backend, t.vvl, t.threads, t.schedule, t.batch,
             t.fusion, t.multi_step, t.xla_vvl_block, t.ranks, t.overlap,
+            t.comms_depth, t.pin_threads,
             t.observables, t.transport, t.rank_server, fe.a, fe.b,
             fe.kappa, fe.gamma, fe.tau_f, fe.tau_g, o.every, o.dir, o.vtk,
         )
@@ -292,8 +309,13 @@ impl Config {
     /// Comms-layer knobs for a decomposed (`ranks > 1`) run. The rank
     /// world drives the host kernels directly, so the backend must be a
     /// host one; `threads` is handed over as the total TLP budget the
-    /// ranks share.
+    /// ranks share. `comms_depth = 0` (auto) is resolved **here**, by the
+    /// deterministic [`crate::targetdp::host::comms_depth_plan`] cache
+    /// heuristic — the driver and every socket rank process parse the
+    /// same shipped TOML, so all of them resolve the same depth.
     pub fn comms_config(&self) -> Result<crate::comms::CommsConfig> {
+        use crate::targetdp::host::{comms_depth_plan,
+                                    MULTI_STEP_CACHE_BYTES};
         match self.target.backend.as_str() {
             "host-simd" | "host-scalar" => Ok(crate::comms::CommsConfig {
                 ranks: self.target.ranks,
@@ -307,6 +329,14 @@ impl Config {
                     },
                     _ => Schedule::Static,
                 },
+                depth: if self.target.comms_depth == 0 {
+                    comms_depth_plan(&self.geometry(), self.model()?,
+                                     self.target.ranks,
+                                     MULTI_STEP_CACHE_BYTES)
+                } else {
+                    self.target.comms_depth as usize
+                },
+                pin: self.target.pin_threads,
             }),
             other => Err(Error::Parse(format!(
                 "ranks > 1 needs a host backend (the comms ranks run the \
@@ -512,6 +542,32 @@ mod tests {
     }
 
     #[test]
+    fn comms_depth_knob_defaults_and_auto_resolves() {
+        let cfg = Config::from_toml_str(SAMPLE).unwrap();
+        assert_eq!(cfg.target.comms_depth, 1,
+                   "classic one-exchange-per-step is the default");
+        assert!(!cfg.target.pin_threads, "pinning is opt-in");
+        assert_eq!(cfg.comms_config().unwrap().depth, 1);
+        assert!(!cfg.comms_config().unwrap().pin);
+
+        // 0 = auto: resolved here by the deterministic cache heuristic,
+        // never handed to the world raw (the world rejects depth 0)
+        let mut auto = cfg.clone();
+        auto.target.ranks = 4;
+        auto.target.comms_depth = 0;
+        // 16^3 d3q19 over 4 ranks: 4-plane slabs fit a depth-2
+        // super-step (ghost-extended slab within the cache budget)
+        assert_eq!(auto.comms_config().unwrap().depth, 2);
+
+        let mut forced = cfg.clone();
+        forced.target.comms_depth = 4;
+        forced.target.pin_threads = true;
+        let cc = forced.comms_config().unwrap();
+        assert_eq!(cc.depth, 4);
+        assert!(cc.pin);
+    }
+
+    #[test]
     fn observables_knob_parses_and_rejects() {
         let cfg = Config::from_toml_str(SAMPLE).unwrap();
         assert_eq!(cfg.target.observables, "reduced",
@@ -567,6 +623,8 @@ mod tests {
         cfg.target.transport = "socket".into();
         cfg.target.schedule = "dynamic".into();
         cfg.target.multi_step = 4;
+        cfg.target.comms_depth = 2;
+        cfg.target.pin_threads = true;
         cfg.free_energy.kappa = 1.0 / 3.0; // not exactly representable
         cfg.output.every = 7;
         cfg.output.dir = "out/run1".into();
@@ -591,6 +649,8 @@ mod tests {
         assert_eq!(back.target.multi_step, cfg.target.multi_step);
         assert_eq!(back.target.ranks, cfg.target.ranks);
         assert_eq!(back.target.overlap, cfg.target.overlap);
+        assert_eq!(back.target.comms_depth, cfg.target.comms_depth);
+        assert_eq!(back.target.pin_threads, cfg.target.pin_threads);
         assert_eq!(back.target.observables, cfg.target.observables);
         assert_eq!(back.target.transport, cfg.target.transport);
         assert_eq!(back.target.rank_server, cfg.target.rank_server);

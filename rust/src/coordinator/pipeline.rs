@@ -222,7 +222,7 @@ fn run_decomposed_simulation(cfg: &Config, transport: TransportMode)
     let mode = cfg.observables_mode()?;
     let world = CommsWorld::new(geom, ccfg.clone())?;
     let target_desc = format!(
-        "comms(ranks={},{},{},{},vvl={},threads={})",
+        "comms(ranks={},{},{},{},vvl={},threads={},depth={}{})",
         ccfg.ranks,
         match transport {
             TransportMode::Channel => "channel",
@@ -232,6 +232,8 @@ fn run_decomposed_simulation(cfg: &Config, transport: TransportMode)
         if ccfg.scalar { "host-scalar" } else { "host-simd" },
         ccfg.vvl,
         ccfg.threads,
+        ccfg.depth,
+        if ccfg.pin { ",pinned" } else { "" },
     );
     println!("target   : {target_desc}");
     println!("lattice  : {} {}x{}x{} ({} sites)", model.name(), geom.lx,

@@ -38,7 +38,19 @@ impl SubDomain {
 
     /// Local site range covering the interior (contiguous by layout).
     pub fn interior(&self) -> std::ops::Range<usize> {
-        self.plane()..(self.lxl + 1) * self.plane()
+        self.interior_with_halo(1)
+    }
+
+    /// Local geometry for a deep ghost region of `halo` planes per side —
+    /// the lattice a communication-avoiding super-step runs on (`halo` =
+    /// `HALO_PER_STEP * depth`). `halo = 1` is [`SubDomain::local`].
+    pub fn local_with_halo(&self, halo: usize) -> Geometry {
+        Geometry::new(self.lxl + 2 * halo, self.local.ly, self.local.lz)
+    }
+
+    /// Interior site range inside a `halo`-deep local lattice.
+    pub fn interior_with_halo(&self, halo: usize) -> std::ops::Range<usize> {
+        halo * self.plane()..(halo + self.lxl) * self.plane()
     }
 
     /// Copy this subdomain's interior planes out of a global SoA field
@@ -48,7 +60,14 @@ impl SubDomain {
     /// first-touch-allocated local field is filled where it will be swept.
     pub fn scatter_into(&self, global: &[f64], ncomp: usize,
                         local: &mut [f64]) {
-        let ln = self.local.nsites();
+        self.scatter_into_with_halo(global, ncomp, local, 1)
+    }
+
+    /// [`SubDomain::scatter_into`] for a `halo`-deep local lattice (the
+    /// [`SubDomain::local_with_halo`] shape).
+    pub fn scatter_into_with_halo(&self, global: &[f64], ncomp: usize,
+                                  local: &mut [f64], halo: usize) {
+        let ln = self.local_with_halo(halo).nsites();
         let gn = global.len() / ncomp;
         let plane = self.plane();
         debug_assert_eq!(global.len(), ncomp * gn);
@@ -57,7 +76,8 @@ impl SubDomain {
         for c in 0..ncomp {
             let src = &global[c * gn + self.x0 * plane
                 ..c * gn + (self.x0 + self.lxl) * plane];
-            local[c * ln + plane..c * ln + (self.lxl + 1) * plane]
+            local[c * ln + halo * plane
+                ..c * ln + (halo + self.lxl) * plane]
                 .copy_from_slice(src);
         }
     }
@@ -67,13 +87,20 @@ impl SubDomain {
     /// response wire frame (`ncomp * lxl * plane` doubles,
     /// component-major).
     pub fn interior_of(&self, local: &[f64], ncomp: usize) -> Vec<f64> {
-        let ln = self.local.nsites();
+        self.interior_of_with_halo(local, ncomp, 1)
+    }
+
+    /// [`SubDomain::interior_of`] for a `halo`-deep local lattice.
+    pub fn interior_of_with_halo(&self, local: &[f64], ncomp: usize,
+                                 halo: usize) -> Vec<f64> {
+        let ln = self.local_with_halo(halo).nsites();
         let plane = self.plane();
         debug_assert_eq!(local.len(), ncomp * ln);
         let mut out = Vec::with_capacity(ncomp * self.lxl * plane);
         for c in 0..ncomp {
             out.extend_from_slice(
-                &local[c * ln + plane..c * ln + (self.lxl + 1) * plane],
+                &local[c * ln + halo * plane
+                    ..c * ln + (halo + self.lxl) * plane],
             );
         }
         out
@@ -223,6 +250,33 @@ mod tests {
             d.place_interior(&interior, 2, &mut global);
         }
         assert_eq!(global, field);
+    }
+
+    #[test]
+    fn deep_halo_variants_agree_with_depth_one() {
+        let geom = Geometry::new(12, 2, 3);
+        let dec = SlabDecomposition::new(geom, 3).unwrap();
+        let field: Vec<f64> =
+            (0..2 * geom.nsites()).map(|i| i as f64 * 0.5).collect();
+        for d in &dec.domains {
+            for halo in [1usize, 2, 4] {
+                let deep = d.local_with_halo(halo);
+                assert_eq!(deep.lx, d.lxl + 2 * halo);
+                let plane = d.plane();
+                assert_eq!(d.interior_with_halo(halo),
+                           halo * plane..(halo + d.lxl) * plane);
+                let mut local = vec![0.0; 2 * deep.nsites()];
+                d.scatter_into_with_halo(&field, 2, &mut local, halo);
+                // same interior payload whatever the ghost depth
+                let shallow = {
+                    let mut l = vec![0.0; 2 * d.local.nsites()];
+                    d.scatter_into(&field, 2, &mut l);
+                    d.interior_of(&l, 2)
+                };
+                assert_eq!(d.interior_of_with_halo(&local, 2, halo),
+                           shallow);
+            }
+        }
     }
 
     #[test]

@@ -67,6 +67,42 @@ pub fn unpack_x_plane(field: &mut [f64], ncomp: usize, nsites: usize,
     }
 }
 
+/// Pack `np` consecutive x-planes `p0..p0 + np` into a contiguous
+/// `ncomp * np * plane_sites` buffer, component-major with the planes
+/// contiguous per component — the depth-tagged ghost-block payload of a
+/// communication-avoiding super-step (one message instead of `np`).
+/// Because the planes are consecutive and z is fastest, each component is
+/// a single `np * plane_sites` slice copy.
+pub fn pack_x_planes(field: &[f64], ncomp: usize, nsites: usize,
+                     plane_sites: usize, p0: usize, np: usize,
+                     out: &mut [f64]) {
+    debug_assert_eq!(field.len(), ncomp * nsites);
+    debug_assert_eq!(out.len(), ncomp * np * plane_sites);
+    debug_assert!((p0 + np) * plane_sites <= nsites);
+    let block = np * plane_sites;
+    for c in 0..ncomp {
+        let src = c * nsites + p0 * plane_sites;
+        out[c * block..(c + 1) * block]
+            .copy_from_slice(&field[src..src + block]);
+    }
+}
+
+/// Inverse of [`pack_x_planes`]: scatter a received ghost-block payload
+/// into x-planes `p0..p0 + np` of the SoA field.
+pub fn unpack_x_planes(field: &mut [f64], ncomp: usize, nsites: usize,
+                       plane_sites: usize, p0: usize, np: usize,
+                       payload: &[f64]) {
+    debug_assert_eq!(field.len(), ncomp * nsites);
+    debug_assert_eq!(payload.len(), ncomp * np * plane_sites);
+    debug_assert!((p0 + np) * plane_sites <= nsites);
+    let block = np * plane_sites;
+    for c in 0..ncomp {
+        let dst = c * nsites + p0 * plane_sites;
+        field[dst..dst + block]
+            .copy_from_slice(&payload[c * block..(c + 1) * block]);
+    }
+}
+
 /// Fraction of sites selected by a mask.
 pub fn fill_fraction(mask: &[bool]) -> f64 {
     mask.iter().filter(|&&m| m).count() as f64 / mask.len() as f64
@@ -124,6 +160,36 @@ mod tests {
                     assert_eq!(back[c * n + p * plane + k],
                                field[c * n + p * plane + k]);
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn plane_block_pack_unpack_roundtrip() {
+        let geom = Geometry::new(7, 3, 2);
+        let (ncomp, n, plane) = (2usize, geom.nsites(), geom.ly * geom.lz);
+        let field: Vec<f64> = (0..ncomp * n).map(|i| i as f64).collect();
+        for (p0, np) in [(0, 2), (2, 3), (3, 4), (5, 1)] {
+            let mut buf = vec![0.0; ncomp * np * plane];
+            pack_x_planes(&field, ncomp, n, plane, p0, np, &mut buf);
+            // the block agrees plane-by-plane with pack_x_plane
+            for j in 0..np {
+                let mut one = vec![0.0; ncomp * plane];
+                pack_x_plane(&field, ncomp, n, plane, p0 + j, &mut one);
+                for c in 0..ncomp {
+                    assert_eq!(
+                        &buf[c * np * plane + j * plane
+                            ..c * np * plane + (j + 1) * plane],
+                        &one[c * plane..(c + 1) * plane]
+                    );
+                }
+            }
+            let mut back = vec![-1.0; ncomp * n];
+            unpack_x_planes(&mut back, ncomp, n, plane, p0, np, &buf);
+            for c in 0..ncomp {
+                let lo = c * n + p0 * plane;
+                assert_eq!(&back[lo..lo + np * plane],
+                           &field[lo..lo + np * plane]);
             }
         }
     }

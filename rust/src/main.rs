@@ -23,7 +23,8 @@ targetdp — lattice-based data parallelism with portable performance
 USAGE:
     targetdp run [--config FILE] [--backend B] [--lattice L] [--size N]
                  [--steps K] [--vvl V] [--threads T] [--multi-step M]
-                 [--ranks R] [--overlap true|false]
+                 [--ranks R] [--overlap true|false] [--comms-depth K]
+                 [--pin-threads true|false]
                  [--observables reduced|gather]
                  [--transport channel|socket] [--rank-server HOST:PORT]
                  [--out DIR] [--vtk]
@@ -41,6 +42,10 @@ run options (ignored when --config is given):
     --multi-step  host blocked steps/launch, 0=auto [0]
     --ranks       concurrent slab ranks (comms)     [1]
     --overlap     overlap halo exchange w/ compute  [true]
+    --comms-depth steps per halo exchange (super-
+                  steps; ranks > 1), 0 = auto       [1]
+    --pin-threads pin rank TLP workers to cores
+                  (Linux sched_setaffinity)         [false]
     --observables per-block reduction for ranks > 1:
                   distributed partials (reduced) or
                   full-state gather                 [reduced]
@@ -97,6 +102,9 @@ fn run() -> targetdp::Result<()> {
                             multi_step: args.u64_or("multi-step", 0)?,
                             ranks: args.usize_or("ranks", 1)?,
                             overlap: args.bool_or("overlap", true)?,
+                            comms_depth: args.u64_or("comms-depth", 1)?,
+                            pin_threads: args.bool_or("pin-threads",
+                                                      false)?,
                             observables: args.str_or("observables",
                                                      "reduced"),
                             transport: args.str_or("transport", "channel"),

@@ -101,6 +101,31 @@ pub fn multi_step_plan(geom: &Geometry, model: LatticeModel,
     None
 }
 
+/// Size the communication-avoiding super-step depth for a rank world:
+/// how many timesteps each rank advances per halo exchange. Mirrors the
+/// [`multi_step_plan`] cache arithmetic, but the "slab" is the rank's own
+/// x-extent (`lx / ranks`, the narrowest one under the uneven split), so
+/// a depth is accepted only when the deep ghost region still comes from a
+/// single neighbour (`2k <= min lxl`) and the whole deep local lattice
+/// stays within `cache_bytes`. Returns 1 (plain per-step exchange) when
+/// no deeper super-step qualifies.
+pub fn comms_depth_plan(geom: &Geometry, model: LatticeModel,
+                        ranks: usize, cache_bytes: usize) -> usize {
+    let vs = model.velset();
+    let plane = geom.ly * geom.lz;
+    let bytes_per_plane = plane * (4 * vs.nvel + 5) * 8;
+    let min_lxl = geom.lx / ranks.max(1);
+    for k in [4usize, 3, 2] {
+        let halo = HALO_PER_STEP * k;
+        if halo <= min_lxl
+            && (min_lxl + 2 * halo) * bytes_per_plane <= cache_bytes
+        {
+            return k;
+        }
+    }
+    1
+}
+
 /// Execution mode of the host backend.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum HostMode {
@@ -583,6 +608,27 @@ mod tests {
         assert_eq!(multi_step_plan(&fat, LatticeModel::D3Q19, 2, 500,
                                    MULTI_STEP_CACHE_BYTES),
                    Some((2, 128)));
+    }
+
+    #[test]
+    fn comms_depth_auto_tracks_slab_width_and_cache() {
+        // long-thin lattice, cache-resident slabs: deepest super-step
+        // qualifies
+        let geom = Geometry::new(256, 8, 1);
+        assert_eq!(comms_depth_plan(&geom, LatticeModel::D2Q9, 4,
+                                    MULTI_STEP_CACHE_BYTES),
+                   4);
+        // narrow slabs: the 2k-deep ghost region must come from a single
+        // neighbour, so depth is capped by lx / ranks
+        let narrow = Geometry::new(24, 4, 1);
+        assert_eq!(comms_depth_plan(&narrow, LatticeModel::D2Q9, 4,
+                                    MULTI_STEP_CACHE_BYTES),
+                   3); // min lxl = 6: 2k <= 6 first holds at k = 3
+        // fat cross-section blows the cache budget: stay at 1
+        let fat = Geometry::new(128, 64, 64);
+        assert_eq!(comms_depth_plan(&fat, LatticeModel::D3Q19, 2,
+                                    MULTI_STEP_CACHE_BYTES),
+                   1);
     }
 
     #[test]

@@ -73,6 +73,9 @@ pub struct TlpPool {
     pub nthreads: usize,
     /// Chunk-to-thread assignment policy.
     pub schedule: Schedule,
+    /// First logical CPU of this pool's round-robin core pin (`None` =
+    /// unpinned, the default).
+    pin: Option<usize>,
     workers: Option<WorkerPool>,
 }
 
@@ -83,9 +86,15 @@ impl Default for TlpPool {
 }
 
 impl Clone for TlpPool {
-    /// Clones the *configuration*; the clone gets its own fresh workers.
+    /// Clones the *configuration*; the clone gets its own fresh workers
+    /// (pinned to the same CPUs if the original was pinned).
     fn clone(&self) -> Self {
-        TlpPool::new(self.nthreads, self.schedule)
+        match self.pin {
+            Some(first) => {
+                TlpPool::new_pinned(self.nthreads, self.schedule, first)
+            }
+            None => TlpPool::new(self.nthreads, self.schedule),
+        }
     }
 }
 
@@ -129,13 +138,49 @@ impl TlpPool {
     /// 1 runs launches inline).
     pub fn new(nthreads: usize, schedule: Schedule) -> Self {
         let nthreads = nthreads.max(1);
-        let workers = (nthreads > 1).then(|| WorkerPool::spawn(nthreads));
-        TlpPool { nthreads, schedule, workers }
+        let workers =
+            (nthreads > 1).then(|| WorkerPool::spawn(nthreads, None));
+        TlpPool { nthreads, schedule, pin: None, workers }
+    }
+
+    /// [`TlpPool::new`] with each worker pinned to one logical CPU:
+    /// worker `i` lands on CPU `(first_cpu + i) % nproc` (Linux
+    /// `sched_setaffinity`; a no-op elsewhere). With `nthreads == 1`
+    /// launches run inline, so the *calling* thread is pinned instead —
+    /// in the comms layer that is the rank thread itself. Pinning is a
+    /// locality hint: failures are ignored, results never change.
+    pub fn new_pinned(nthreads: usize, schedule: Schedule,
+                      first_cpu: usize) -> Self {
+        let nthreads = nthreads.max(1);
+        if nthreads == 1 {
+            let nproc = std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1);
+            let _ = pin_to_cpu(first_cpu % nproc);
+            return TlpPool {
+                nthreads,
+                schedule,
+                pin: Some(first_cpu),
+                workers: None,
+            };
+        }
+        let workers = WorkerPool::spawn(nthreads, Some(first_cpu));
+        TlpPool {
+            nthreads,
+            schedule,
+            pin: Some(first_cpu),
+            workers: Some(workers),
+        }
     }
 
     /// Serial pool (inline execution, no worker threads).
     pub fn serial() -> Self {
-        TlpPool { nthreads: 1, schedule: Schedule::Static, workers: None }
+        TlpPool {
+            nthreads: 1,
+            schedule: Schedule::Static,
+            pin: None,
+            workers: None,
+        }
     }
 
     /// Strip-mine `nsites` into chunks of at most `vvl` sites and run
@@ -228,6 +273,33 @@ impl TlpPool {
 /// Zeroing grain (in f64 elements) for [`TlpPool::zeros`]: 8 pages.
 const FIRST_TOUCH_GRAIN: usize = 4096;
 
+/// Pin the calling thread to logical CPU `cpu` via `sched_setaffinity`.
+/// Declared directly (the crate is pure std, no libc dependency); the
+/// 1024-bit mask matches glibc's `cpu_set_t`. Returns whether the kernel
+/// accepted the mask — callers treat failure as "no pinning", never as
+/// an error, because affinity is purely a locality hint.
+#[cfg(target_os = "linux")]
+fn pin_to_cpu(cpu: usize) -> bool {
+    extern "C" {
+        fn sched_setaffinity(pid: i32, cpusetsize: usize,
+                             mask: *const u64) -> i32;
+    }
+    let mut set = [0u64; 16];
+    set[(cpu / 64) % set.len()] |= 1u64 << (cpu % 64);
+    // SAFETY: pid 0 = calling thread; the mask is a valid, live buffer of
+    // the size we pass.
+    unsafe {
+        sched_setaffinity(0, std::mem::size_of_val(&set), set.as_ptr())
+            == 0
+    }
+}
+
+/// Thread pinning is Linux-only; everywhere else the knob is a no-op.
+#[cfg(not(target_os = "linux"))]
+fn pin_to_cpu(_cpu: usize) -> bool {
+    false
+}
+
 #[derive(Clone, Copy)]
 struct ZeroPtr(*mut f64);
 unsafe impl Send for ZeroPtr {}
@@ -272,7 +344,11 @@ struct WorkerPool {
 }
 
 impl WorkerPool {
-    fn spawn(nthreads: usize) -> Self {
+    /// Spawn the persistent workers; with `pin_first = Some(first_cpu)`
+    /// worker `idx` pins itself to CPU `(first_cpu + idx) % nproc` before
+    /// parking (the round-robin layout the comms ranks use so rank r's
+    /// workers occupy CPUs `r * nthreads ..`).
+    fn spawn(nthreads: usize, pin_first: Option<usize>) -> Self {
         let shared = Arc::new(Shared {
             slot: Mutex::new(JobSlot {
                 generation: 0,
@@ -289,7 +365,15 @@ impl WorkerPool {
         let handles = (0..nthreads)
             .map(|idx| {
                 let shared = Arc::clone(&shared);
-                std::thread::spawn(move || worker_loop(&shared, idx))
+                std::thread::spawn(move || {
+                    if let Some(first) = pin_first {
+                        let nproc = std::thread::available_parallelism()
+                            .map(|n| n.get())
+                            .unwrap_or(1);
+                        let _ = pin_to_cpu((first + idx) % nproc);
+                    }
+                    worker_loop(&shared, idx)
+                })
             })
             .collect();
         WorkerPool { shared, handles }
@@ -527,6 +611,22 @@ mod tests {
         assert_eq!(threads_per_rank(1, 1), 1);
         // 0 = divide the detected machine width: at least 1 each
         assert!(threads_per_rank(0, 4) >= 1);
+    }
+
+    #[test]
+    fn pinned_pools_cover_every_site() {
+        // pinning is a locality hint: chunk coverage (and hence results)
+        // must be identical with and without it, on every platform
+        let pool = TlpPool::new_pinned(3, Schedule::Static, 0);
+        let hits = cover(103, 8, pool);
+        assert!(hits.iter().all(|&h| h == 1));
+        // nthreads == 1 pins the calling thread and runs inline; the
+        // clone re-pins its own fresh workers from the same first CPU
+        let one = TlpPool::new_pinned(1, Schedule::Static, 1);
+        let hits = cover(9, 4, one.clone());
+        assert!(hits.iter().all(|&h| h == 1));
+        let hits = cover(9, 4, one);
+        assert!(hits.iter().all(|&h| h == 1));
     }
 
     #[test]

@@ -1,0 +1,230 @@
+//! Communication-avoiding super-step parity: a rank world advancing
+//! `k` timesteps per halo exchange (depth-`2k` ghost blocks + the
+//! trapezoid-blocked local sweep) must be **bit-identical** to the
+//! classic depth-1 world and to the single-domain fused `FullStep`
+//! engine — for every rank count, both exchange schedules, both lattice
+//! models, both transports, and step counts the depth does not divide.
+//! The payoff is pinned too: the per-rank message count drops from
+//! `6 * steps` tagged planes to `4 * ceil(steps / k)` ghost blocks.
+
+use std::thread;
+
+use targetdp::comms::launcher::{connect_rank, RankServer};
+use targetdp::comms::{run_decomposed, serve_rank, CommsConfig,
+                      CommsWorld, SocketTransport, Transport};
+use targetdp::free_energy::symmetric::FeParams;
+use targetdp::lattice::geometry::Geometry;
+use targetdp::lb::engine::LbEngine;
+use targetdp::lb::init::init_spinodal;
+use targetdp::lb::model::LatticeModel;
+use targetdp::targetdp::tlp::TlpPool;
+use targetdp::targetdp::HostTarget;
+
+/// Odd step count on purpose: depth 2 leaves a 1-step remainder
+/// super-step and depth 4 a 1-step one, exercising the shrunk trapezoid.
+const STEPS: u64 = 5;
+
+fn initial_state(model: LatticeModel, geom: &Geometry)
+                 -> (Vec<f64>, Vec<f64>) {
+    let vs = model.velset();
+    let n = geom.nsites();
+    let mut f = vec![0.0; vs.nvel * n];
+    let mut g = vec![0.0; vs.nvel * n];
+    init_spinodal(vs, &FeParams::default(), geom, &mut f, &mut g, 0.05, 9);
+    (f, g)
+}
+
+/// Single-domain reference through the engine's fused `FullStep` tier.
+fn fullstep_reference(model: LatticeModel, geom: &Geometry, steps: u64)
+                      -> (Vec<f64>, Vec<f64>) {
+    let (f0, g0) = initial_state(model, geom);
+    let mut target = HostTarget::simd(8, TlpPool::serial()).unwrap();
+    let mut engine =
+        LbEngine::new(&mut target, *geom, model, FeParams::default())
+            .unwrap();
+    assert!(engine.fused_active(), "host target must take the fused tier");
+    engine.load_state(&f0, &g0).unwrap();
+    engine.run(steps).unwrap();
+    let mut f = vec![0.0; f0.len()];
+    let mut g = vec![0.0; g0.len()];
+    engine.fetch_state(&mut f, &mut g).unwrap();
+    (f, g)
+}
+
+fn check_model(model: LatticeModel, geom: Geometry) {
+    let vs = model.velset();
+    let (f_want, g_want) = fullstep_reference(model, &geom, STEPS);
+    // lx = 32 over 4 ranks -> 8-plane slabs: depth 4 (8 ghost planes per
+    // side) is exactly the deepest legal super-step on the narrowest slab
+    for depth in [1usize, 2, 4] {
+        for ranks in [1usize, 2, 4] {
+            for overlap in [false, true] {
+                let cfg = CommsConfig {
+                    ranks,
+                    overlap,
+                    depth,
+                    threads: 2, // shared budget across the ranks
+                    ..CommsConfig::default()
+                };
+                let (mut f, mut g) = initial_state(model, &geom);
+                let rep = run_decomposed(&geom, vs, &FeParams::default(),
+                                         &mut f, &mut g, STEPS, &cfg)
+                    .unwrap();
+                assert!(rep.ranks.iter().all(|r| r.steps == STEPS));
+                assert_eq!(
+                    f, f_want,
+                    "{} depth={depth} ranks={ranks} overlap={overlap}: \
+                     f diverged from the fused engine",
+                    model.name()
+                );
+                assert_eq!(
+                    g, g_want,
+                    "{} depth={depth} ranks={ranks} overlap={overlap}: \
+                     g diverged from the fused engine",
+                    model.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn d2q9_depth_k_worlds_match_fullstep_bitwise() {
+    check_model(LatticeModel::D2Q9, Geometry::new(32, 6, 1));
+}
+
+#[test]
+fn d3q19_depth_k_worlds_match_fullstep_bitwise() {
+    check_model(LatticeModel::D3Q19, Geometry::new(32, 4, 3));
+}
+
+/// The communication-avoidance payoff, pinned exactly: depth 1 sends 6
+/// tagged planes per rank per step; depth k sends 4 ghost blocks per
+/// super-step — `4 * ceil(steps / k)` messages, a ~2k-fold drop.
+#[test]
+fn super_steps_cut_message_counts_by_the_depth() {
+    let model = LatticeModel::D2Q9;
+    let geom = Geometry::new(32, 6, 1);
+    let vs = model.velset();
+    for (depth, want) in [(1usize, 6 * STEPS),
+                          (2, 4 * STEPS.div_ceil(2)),
+                          (4, 4 * STEPS.div_ceil(4))] {
+        let cfg = CommsConfig { ranks: 2, depth,
+                                ..CommsConfig::default() };
+        let (mut f, mut g) = initial_state(model, &geom);
+        let rep = run_decomposed(&geom, vs, &FeParams::default(), &mut f,
+                                 &mut g, STEPS, &cfg)
+            .unwrap();
+        for r in &rep.ranks {
+            assert_eq!(r.msgs_sent, want,
+                       "depth={depth}: rank {} message count", r.rank);
+            assert!(r.bytes_sent > 0);
+        }
+    }
+}
+
+/// A resident session splits the run into pause/resume blocks; each
+/// `Advance` re-chunks its own steps into super-steps, with a
+/// distributed reduction at every boundary — still bit-identical, and
+/// core pinning must not perturb anything either.
+#[test]
+fn resident_blocks_and_pinning_stay_bit_identical() {
+    let model = LatticeModel::D2Q9;
+    let geom = Geometry::new(32, 6, 1);
+    let vs = model.velset();
+    let n = geom.nsites();
+    let (f_want, g_want) = fullstep_reference(model, &geom, STEPS);
+    for pin in [false, true] {
+        let cfg = CommsConfig { ranks: 2, depth: 2, pin,
+                                ..CommsConfig::default() };
+        let world = CommsWorld::new(geom, cfg).unwrap();
+        let (f0, g0) = initial_state(model, &geom);
+        let mut session =
+            world.session(vs, &FeParams::default(), f0, g0).unwrap();
+        // 5 = 3 + 2: the first block ends on a 1-step remainder
+        // super-step, the second starts a fresh depth-2 one
+        for block in [3u64, 2] {
+            session.advance(block).unwrap();
+            session.observables().unwrap();
+        }
+        let mut f = vec![0.0; vs.nvel * n];
+        let mut g = vec![0.0; vs.nvel * n];
+        session.gather(&mut f, &mut g).unwrap();
+        let rep = session.finish().unwrap();
+        assert!(rep.ranks.iter().all(|r| r.steps == STEPS));
+        // blocks of 3 and 2 at depth 2: (2 + 2) super-steps of 4 msgs
+        assert!(rep.ranks.iter().all(|r| r.msgs_sent == 16));
+        assert_eq!(f, f_want, "pin={pin}: resident f diverged");
+        assert_eq!(g, g_want, "pin={pin}: resident g diverged");
+    }
+}
+
+/// Assemble an N-rank + controller socket world on loopback (the
+/// production rendezvous, rank endpoints in threads of this process).
+fn loopback_world(nranks: usize)
+                  -> (Vec<SocketTransport>, SocketTransport) {
+    let server = RankServer::bind("127.0.0.1:0").unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let joins: Vec<_> = (0..nranks)
+        .map(|r| {
+            let addr = addr.clone();
+            thread::spawn(move || connect_rank(&addr, Some(r)).unwrap())
+        })
+        .collect();
+    let ctl = server.rendezvous(nranks, b"").unwrap();
+    let mut ranks: Vec<Option<SocketTransport>> =
+        (0..nranks).map(|_| None).collect();
+    for j in joins {
+        let (t, _payload) = j.join().unwrap();
+        let r = t.rank();
+        assert!(ranks[r].is_none());
+        ranks[r] = Some(t);
+    }
+    (ranks.into_iter().map(Option::unwrap).collect(), ctl)
+}
+
+/// Depth-k ghost blocks over real TCP: the batched block frames cross
+/// the socket transport bit-identically to the channel world and the
+/// fused engine, with the same 4-messages-per-super-step accounting.
+#[test]
+fn socket_depth_k_worlds_match_channel_and_engine() {
+    let model = LatticeModel::D2Q9;
+    let vs = model.velset();
+    let geom = Geometry::new(17, 4, 1); // uneven 9+8 slab split
+    let n = geom.nsites();
+    let p = FeParams::default();
+    let (f_want, g_want) = fullstep_reference(model, &geom, STEPS);
+    for depth in [2usize, 4] {
+        let cfg = CommsConfig { ranks: 2, depth,
+                                ..CommsConfig::default() };
+        let (f0, g0) = initial_state(model, &geom);
+
+        let (rank_transports, ctl) = loopback_world(2);
+        let world = CommsWorld::new(geom, cfg.clone()).unwrap();
+        let mut servers = Vec::new();
+        for t in rank_transports {
+            let d = world.dec.domains[t.rank()].clone();
+            let (f0, g0) = (f0.clone(), g0.clone());
+            let cfg = cfg.clone();
+            servers.push(thread::spawn(move || {
+                serve_rank(d, vs, &p, f0, g0, &cfg, 1, Box::new(t))
+            }));
+        }
+        let mut session = world.remote_session(vs, Box::new(ctl)).unwrap();
+        session.advance(STEPS).unwrap();
+        let mut f = vec![0.0; vs.nvel * n];
+        let mut g = vec![0.0; vs.nvel * n];
+        session.gather(&mut f, &mut g).unwrap();
+        let rep = session.finish().unwrap();
+        for s in servers {
+            s.join().unwrap().unwrap();
+        }
+        assert_eq!(f, f_want, "depth={depth}: socket f diverged");
+        assert_eq!(g, g_want, "depth={depth}: socket g diverged");
+        for r in &rep.ranks {
+            assert_eq!(r.msgs_sent,
+                       4 * STEPS.div_ceil(depth as u64),
+                       "depth={depth}: rank {} message count", r.rank);
+        }
+    }
+}
