@@ -14,11 +14,16 @@
 //! ```text
 //! cargo run --release --example multidomain [-- --ranks N] [--steps K]
 //!                                           [--block B] [--comms-depth D]
+//!                                           [--grid PX,PY,PZ]
 //!                                           [--transport channel|socket]
 //! ```
 //!
 //! `--ranks N` restricts the sweep to one rank count (the CI smoke runs
-//! 2 and 4); the default sweeps 1, 2, 3, 4. `--block B` (B > 0) drives a
+//! 2 and 4); the default sweeps 1, 2, 3, 4. `--grid PX,PY,PZ` fixes the
+//! rank count to `PX·PY·PZ` and runs every schedule **twice** — once on
+//! the slab grid, once on the 3D Cartesian grid — asserting
+//! grid == slab == single-domain bitwise (the CI smoke runs a 2x2x1
+//! channel grid and a 1x2x1 two-process socket grid). `--block B` (B > 0) drives a
 //! **resident** session in logging blocks of B steps — ranks spawned
 //! once, a distributed observable reduction at every block boundary,
 //! state gathered only at the end — and additionally checks the reduced
@@ -57,6 +62,16 @@ fn setup(vs: &VelSet) -> (Geometry, Vec<f64>, Vec<f64>) {
     (geom, f0, g0)
 }
 
+/// Parse a `PX,PY,PZ` grid argument (`[0, 0, 0]` = the slab default).
+fn parse_grid(spec: &str) -> [usize; 3] {
+    let parts: Vec<usize> = spec
+        .split(',')
+        .map(|p| p.trim().parse().expect("--grid wants PX,PY,PZ"))
+        .collect();
+    assert_eq!(parts.len(), 3, "--grid wants PX,PY,PZ");
+    [parts[0], parts[1], parts[2]]
+}
+
 /// Child role (`--rank-child`, spawned by the socket path): rendezvous
 /// with the parent and serve one rank until Shutdown.
 fn rank_child(args: &Args) {
@@ -66,11 +81,12 @@ fn rank_child(args: &Args) {
     let overlap = args.bool_or("overlap", true).unwrap();
     let threads = args.usize_or("threads", 0).unwrap();
     let depth = args.usize_or("comms-depth", 1).unwrap();
+    let grid = parse_grid(&args.str_or("grid", "0,0,0"));
     let (transport, _payload) =
         connect_rank(server, Some(rank)).expect("rendezvous");
     let vs = d3q19();
     let (geom, f0, g0) = setup(vs);
-    let cfg = CommsConfig { ranks, overlap, threads, depth,
+    let cfg = CommsConfig { ranks, overlap, threads, depth, grid,
                             ..CommsConfig::default() };
     let world = CommsWorld::new(geom, cfg.clone()).expect("world");
     let d = world.dec.domains[transport.rank()].clone();
@@ -127,7 +143,10 @@ fn run_socket(geom: &Geometry, vs: &'static VelSet, steps: u64, block: u64,
                      "--ranks".to_string(), cfg.ranks.to_string(),
                      "--overlap".to_string(), cfg.overlap.to_string(),
                      "--threads".to_string(), cfg.threads.to_string(),
-                     "--comms-depth".to_string(), cfg.depth.to_string()];
+                     "--comms-depth".to_string(), cfg.depth.to_string(),
+                     "--grid".to_string(),
+                     format!("{},{},{}", cfg.grid[0], cfg.grid[1],
+                             cfg.grid[2])];
     let local = LocalRanks::spawn(cfg.ranks, &addr, &extra)
         .expect("spawn rank processes");
     let controller =
@@ -144,7 +163,7 @@ fn run_socket(geom: &Geometry, vs: &'static VelSet, steps: u64, block: u64,
 fn main() {
     let args = Args::parse(std::env::args().skip(1))
         .expect("usage: multidomain [--ranks N] [--steps K] [--threads T] \
-                 [--block B] [--comms-depth D] \
+                 [--block B] [--comms-depth D] [--grid PX,PY,PZ] \
                  [--transport channel|socket]");
     if args.has("rank-child") {
         rank_child(&args);
@@ -155,6 +174,16 @@ fn main() {
     let threads = args.usize_or("threads", 0).unwrap(); // 0 = machine
     let block = args.u64_or("block", 0).unwrap(); // 0 = one-shot world
     let depth = args.usize_or("comms-depth", 1).unwrap();
+    let grid_spec = args.str_or("grid", "");
+    let grid3d: Option<[usize; 3]> = if grid_spec.is_empty() {
+        None
+    } else {
+        let g = parse_grid(&grid_spec);
+        assert!(g.iter().all(|&p| p > 0), "--grid wants positive PX,PY,PZ");
+        assert!(depth == 1 || (g[1] == 1 && g[2] == 1),
+                "--comms-depth > 1 needs the slab grid");
+        Some(g)
+    };
     let transport = args.str_or("transport", "channel");
     let socket = match transport.as_str() {
         "socket" => true,
@@ -167,7 +196,12 @@ fn main() {
     let n = geom.nsites();
 
     println!("48x16x16 D3Q19 binary fluid, {steps} steps, concurrent \
-              x-slab ranks{}{}{}\n",
+              ranks{}{}{}{}\n",
+             match grid3d {
+                 Some(g) => format!(" on a {}x{}x{} Cartesian grid (vs \
+                                     the slab)", g[0], g[1], g[2]),
+                 None => " on the x-slab grid".to_string(),
+             },
              if socket { " as OS processes (socket transport)" }
              else { "" },
              if block > 0 {
@@ -182,7 +216,13 @@ fn main() {
                  String::new()
              });
 
-    let rank_counts: Vec<usize> = if only_ranks > 0 {
+    let rank_counts: Vec<usize> = if let Some(g) = grid3d {
+        let p = g.iter().product();
+        assert!(only_ranks == 0 || only_ranks == p,
+                "--ranks {only_ranks} contradicts --grid {grid_spec} \
+                 ({p} ranks)");
+        vec![p]
+    } else if only_ranks > 0 {
         vec![only_ranks]
     } else {
         vec![1, 2, 3, 4]
@@ -198,10 +238,18 @@ fn main() {
                                   ..CommsConfig::default() })
         .expect("reference run");
 
+    // when --grid is given every schedule runs on both shapes: the 3D
+    // grid must match the slab world, which must match the reference
+    let shapes: Vec<([usize; 3], &str)> = match grid3d {
+        Some(g) => vec![([0, 0, 0], "slab"), (g, "grid")],
+        None => vec![([0, 0, 0], "slab")],
+    };
     for &ranks in &rank_counts {
         for overlap in [false, true] {
+        for &(shape, shape_name) in &shapes {
             let mode = if overlap { "overlapped" } else { "bulk-sync " };
             let cfg = CommsConfig { ranks, overlap, threads, depth,
+                                    grid: shape,
                                     ..CommsConfig::default() };
             let (f, g, rep) = if socket {
                 run_socket(&geom, vs, steps, block, &cfg)
@@ -228,13 +276,13 @@ fn main() {
                 .map(|(a, b)| (a - b).abs())
                 .fold(0.0f64, f64::max);
             assert!(f == f_ref && g == g_ref,
-                    "ranks={ranks} {mode}: physics must be identical \
-                     (max |df| = {max_df:.3e})");
+                    "ranks={ranks} {shape_name} {mode}: physics must be \
+                     identical (max |df| = {max_df:.3e})");
 
             let bytes: u64 = rep.ranks.iter().map(|r| r.bytes_sent).sum();
             println!(
-                "ranks={ranks} {mode}  {:>7.2} MLUPS total  ({:.3} s, \
-                 {:.2} MiB exchanged, max |df| = {max_df:.1e})",
+                "ranks={ranks} {shape_name} {mode}  {:>7.2} MLUPS total  \
+                 ({:.3} s, {:.2} MiB exchanged, max |df| = {max_df:.1e})",
                 rep.mlups(),
                 rep.seconds,
                 bytes as f64 / (1024.0 * 1024.0),
@@ -251,6 +299,7 @@ fn main() {
                 );
             }
         }
+        }
     }
 
     let plane = geom.ly * geom.lz;
@@ -259,7 +308,10 @@ fn main() {
               wire format move, {:.1}% of a 4-rank slab",
              100.0 * (2.0 * plane as f64) / (n as f64 / 4.0));
     println!("PASS: all rank counts and both exchange schedules \
-              bit-identical{}{}{}",
+              bit-identical{}{}{}{}",
+             if grid3d.is_some() {
+                 " across slab and 3D Cartesian grids"
+             } else { "" },
              if block > 0 { " across resident blocks" } else { "" },
              if depth > 1 {
                  " across communication-avoiding super-steps"

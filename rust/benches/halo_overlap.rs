@@ -19,6 +19,13 @@
 //! in-process channels and real loopback TCP (where the saved
 //! per-message syscalls and round-trips matter most). Emits
 //! `DEPTH-SPEEDUP` ratios against the depth-1 schedule per transport.
+//!
+//! A third sweep holds the rank count fixed at 8 on a 32^3 cube and
+//! varies only the **grid shape** — slab 8x1x1, pencil 4x2x1, block
+//! 2x2x2 — where the decomposition's surface-to-volume ratio, not the
+//! schedule, sets the halo traffic. Emits `GRID-SPEEDUP` ratios against
+//! the slab plus `HALO-BYTES` totals from the per-rank traffic
+//! counters (the block grid must move the fewest bytes).
 
 use std::thread;
 
@@ -181,6 +188,55 @@ fn main() {
                     b / d
                 );
             }
+        }
+    }
+
+    // ---- grid-shape sweep: slab vs pencil vs block at 8 ranks ---------
+    // a 32^3 cube, where the block decomposition's surface-to-volume
+    // ratio beats the slab's (5832 vs 6144 site payloads per rank per step)
+    let geom = Geometry::new(32, 32, 32);
+    let n = geom.nsites();
+    let mut f0 = vec![0.0; vs.nvel * n];
+    let mut g0 = vec![0.0; vs.nvel * n];
+    init::init_spinodal(vs, &p, &geom, &mut f0, &mut g0, 0.05, 7);
+    let sites = Some((n as u64 * STEPS) as f64);
+
+    let mut grids = targetdp::bench::Bench::new(
+        "3D Cartesian grid shapes at 8 ranks, D3Q19 32^3");
+    let shapes: [(&str, [usize; 3]); 3] = [("slab", [8, 1, 1]),
+                                           ("pencil", [4, 2, 1]),
+                                           ("block", [2, 2, 2])];
+    let mut halo_bytes = Vec::new();
+    for (name, grid) in shapes {
+        let cfg = CommsConfig { ranks: 8, grid, threads: 0,
+                                ..CommsConfig::default() };
+        let mut f = f0.clone();
+        let mut g = g0.clone();
+        let mut bytes = 0u64;
+        grids.case(&format!("grid {name}"), sites, || {
+            let rep = run_decomposed(&geom, vs, &p, &mut f, &mut g, STEPS,
+                                     &cfg)
+                .unwrap();
+            bytes = rep.ranks.iter().map(|r| r.bytes_sent).sum();
+        });
+        halo_bytes.push((name, grid, bytes));
+    }
+
+    grids.report();
+
+    println!();
+    for (name, grid, bytes) in &halo_bytes {
+        println!(
+            "HALO-BYTES,shape={name},grid={}x{}x{},ranks=8,steps={STEPS},\
+             {bytes}",
+            grid[0], grid[1], grid[2]
+        );
+    }
+    let slab = grids.mean_of("grid slab");
+    for (name, _, _) in &halo_bytes {
+        let shaped = grids.mean_of(&format!("grid {name}"));
+        if let (Some(s), Some(g)) = (slab, shaped) {
+            println!("GRID-SPEEDUP,shape={name},ranks=8,{:.3}", s / g);
         }
     }
 }

@@ -14,10 +14,11 @@
 //!                                       connect_rank(addr, want_rank):
 //!                                         connect to the driver,
 //!                                         bind an ephemeral listener,
-//!                              ◄─ Hello   {want_rank, listen_port}
+//!                              ◄─ Hello   {want_rank, listen_port, host}
 //! rendezvous(n, payload):
 //!   accept n Hellos,
-//!   assign rank ids,
+//!   assign rank ids
+//!   (host-grouped),
 //!   Welcome ─►                            {rank, nranks, payload,
 //!                                          roster of rank addresses}
 //!                                         peer mesh: connect to every
@@ -34,9 +35,18 @@
 //! children by argv instead.
 //!
 //! Rank ids: a rank may request a specific id (`want_rank`, what
-//! [`spawn_local`] children do) or take the next free one in arrival
-//! order (what manually started multi-host ranks do). Requesting a taken
-//! or out-of-range id fails the whole rendezvous.
+//! [`spawn_local`] children do) or leave it to the driver (what manually
+//! started multi-host ranks do). Requesting a taken or out-of-range id
+//! fails the whole rendezvous.
+//!
+//! Anonymous id assignment is **topology-aware**: every `Hello` carries
+//! the sender's host tag ([`rank_host`]: `TARGETDP_HOST`, else the
+//! kernel hostname, else `"localhost"`), and the driver hands each
+//! host's ranks *consecutive* free ids, hosts in first-arrival order
+//! ([`host_grouped_order`]). Grid worlds number ranks z-fastest
+//! (`rank = (cx·py + cy)·pz + cz`), so consecutive ids are grid
+//! neighbours — host-grouped blocks keep as many of a rank's six face
+//! exchanges as possible on intra-host sockets instead of the network.
 //!
 //! The peer mesh cannot deadlock: a rank's listener is bound *before*
 //! its `Hello` is sent, so every address in the roster is already
@@ -76,7 +86,9 @@ const MAX_NRANKS: usize = 1 << 16;
 const HELLO_MAGIC: [u8; 4] = *b"TDPH";
 const WELCOME_MAGIC: [u8; 4] = *b"TDPR";
 const PEER_MAGIC: [u8; 4] = *b"TDPP";
-const HANDSHAKE_VERSION: u8 = 1;
+const HANDSHAKE_VERSION: u8 = 2;
+/// Cap on the `Hello` host tag string.
+const MAX_HOST_LEN: usize = 256;
 
 fn resolve(addr: &str) -> Result<SocketAddr> {
     addr.to_socket_addrs()
@@ -118,10 +130,53 @@ fn check_magic(got: &[u8; 4], want: &[u8; 4], version: u8, what: &str)
     Ok(())
 }
 
-/// `Hello`: magic(4) version(1) want_rank(i64, -1 = any) listen_port(u16).
+/// The host tag this process advertises in its `Hello`: the
+/// `TARGETDP_HOST` env var if set (the operator's override for
+/// placement experiments), else the kernel hostname, else
+/// `"localhost"`.
+pub fn rank_host() -> String {
+    if let Ok(h) = std::env::var("TARGETDP_HOST") {
+        let h = h.trim().to_string();
+        if !h.is_empty() {
+            return h;
+        }
+    }
+    if let Ok(h) = std::fs::read_to_string("/proc/sys/kernel/hostname") {
+        let h = h.trim().to_string();
+        if !h.is_empty() {
+            return h;
+        }
+    }
+    "localhost".to_string()
+}
+
+/// Topology-aware placement order for anonymous ranks: given the host
+/// tags in arrival order, return the arrival indices reordered so each
+/// host's ranks are consecutive (hosts kept in first-arrival order).
+/// Filling free rank slots in this order co-locates grid-neighbour
+/// ranks: ids are z-fastest on the Cartesian grid, so a host's
+/// consecutive block shares the most faces.
+pub fn host_grouped_order(hosts: &[String]) -> Vec<usize> {
+    let mut groups: Vec<(&str, Vec<usize>)> = Vec::new();
+    for (i, h) in hosts.iter().enumerate() {
+        match groups.iter_mut().find(|(name, _)| *name == h.as_str()) {
+            Some((_, idxs)) => idxs.push(i),
+            None => groups.push((h.as_str(), vec![i])),
+        }
+    }
+    groups.into_iter().flat_map(|(_, idxs)| idxs).collect()
+}
+
+/// `Hello`: magic(4) version(1) want_rank(i64, -1 = any) listen_port(u16)
+/// host_len(u16) host (UTF-8).
 fn write_hello(stream: &mut TcpStream, want_rank: Option<usize>,
-               listen_port: u16) -> Result<()> {
-    let mut buf = Vec::with_capacity(15);
+               listen_port: u16, host: &str) -> Result<()> {
+    let mut cut = host.len().min(MAX_HOST_LEN);
+    while !host.is_char_boundary(cut) {
+        cut -= 1;
+    }
+    let host = &host.as_bytes()[..cut];
+    let mut buf = Vec::with_capacity(17 + host.len());
     buf.extend_from_slice(&HELLO_MAGIC);
     buf.push(HANDSHAKE_VERSION);
     let want: i64 = match want_rank {
@@ -132,18 +187,32 @@ fn write_hello(stream: &mut TcpStream, want_rank: Option<usize>,
     };
     buf.extend_from_slice(&want.to_le_bytes());
     buf.extend_from_slice(&listen_port.to_le_bytes());
+    buf.extend_from_slice(&(host.len() as u16).to_le_bytes());
+    buf.extend_from_slice(host);
     stream.write_all(&buf).map_err(Error::from)
 }
 
-fn read_hello(stream: &mut TcpStream) -> Result<(Option<usize>, u16)> {
-    let mut buf = [0u8; 15];
+fn read_hello(stream: &mut TcpStream)
+              -> Result<(Option<usize>, u16, String)> {
+    let mut buf = [0u8; 17];
     read_exact_checked(stream, &mut buf, "Hello")?;
     check_magic(&buf[..4].try_into().unwrap(), &HELLO_MAGIC, buf[4],
                 "Hello")?;
     let want = i64::from_le_bytes(buf[5..13].try_into().unwrap());
     let port = u16::from_le_bytes(buf[13..15].try_into().unwrap());
+    let hlen = u16::from_le_bytes(buf[15..17].try_into().unwrap()) as usize;
+    if hlen > MAX_HOST_LEN {
+        return Err(Error::Invalid(format!(
+            "comms launcher: Hello host tag of {hlen} bytes"
+        )));
+    }
+    let mut host = vec![0u8; hlen];
+    read_exact_checked(stream, &mut host, "Hello host")?;
+    let host = String::from_utf8(host).map_err(|_| {
+        Error::Invalid("comms launcher: Hello host is not UTF-8".into())
+    })?;
     let want = if want < 0 { None } else { Some(want as usize) };
-    Ok((want, port))
+    Ok((want, port, host))
 }
 
 /// `Welcome`: magic(4) version(1) rank(u32) nranks(u32) payload_len(u32)
@@ -278,9 +347,10 @@ impl RankServer {
     }
 
     /// Run the rendezvous: accept `nranks` Hellos, assign rank ids
-    /// (explicit requests first, arrival order for the rest), broadcast
-    /// the `Welcome` (with `payload` and the full roster), and return
-    /// the **controller** transport (endpoint id `nranks`) the driver
+    /// (explicit requests first; anonymous ranks host-grouped into the
+    /// free slots, [`host_grouped_order`]), broadcast the `Welcome`
+    /// (with `payload` and the full roster), and return the
+    /// **controller** transport (endpoint id `nranks`) the driver
     /// hands to [`crate::comms::CommsWorld::remote_session`].
     pub fn rendezvous(self, nranks: usize, payload: &[u8])
                       -> Result<SocketTransport> {
@@ -290,8 +360,8 @@ impl RankServer {
             )));
         }
         let deadline = Instant::now() + RENDEZVOUS_TIMEOUT;
-        let mut pending: Vec<(TcpStream, Option<usize>, SocketAddr)> =
-            Vec::with_capacity(nranks);
+        let mut pending: Vec<(TcpStream, Option<usize>, SocketAddr,
+                              String)> = Vec::with_capacity(nranks);
         while pending.len() < nranks {
             let what = format!(
                 "rank processes ({}/{nranks} connected)",
@@ -299,17 +369,19 @@ impl RankServer {
             );
             let (mut stream, peer) =
                 accept_deadline(&self.listener, deadline, &what)?;
-            let (want, port) = read_hello(&mut stream)?;
+            let (want, port, host) = read_hello(&mut stream)?;
             // the roster advertises the rank's listener on the address
             // this connection actually came from — the interface peers
             // can route to
-            pending.push((stream, want, SocketAddr::new(peer.ip(), port)));
+            pending.push((stream, want, SocketAddr::new(peer.ip(), port),
+                          host));
         }
         // explicit requests claim their slots first ...
         let mut by_rank: Vec<Option<(TcpStream, SocketAddr)>> =
             (0..nranks).map(|_| None).collect();
         let mut anonymous = Vec::new();
-        for (stream, want, addr) in pending {
+        let mut hosts = Vec::new();
+        for (stream, want, addr, host) in pending {
             match want {
                 Some(r) => {
                     if r >= nranks {
@@ -326,17 +398,23 @@ impl RankServer {
                     }
                     by_rank[r] = Some((stream, addr));
                 }
-                None => anonymous.push((stream, addr)),
+                None => {
+                    anonymous.push(Some((stream, addr)));
+                    hosts.push(host);
+                }
             }
         }
-        // ... then arrival order fills the gaps
-        let mut anonymous = anonymous.into_iter();
+        // ... then host-grouped blocks fill the gaps: each host's ranks
+        // land on consecutive ids, which are z-neighbours on the grid
+        let order = host_grouped_order(&hosts);
+        let mut order = order.into_iter();
         for slot in by_rank.iter_mut() {
             if slot.is_none() {
-                *slot = anonymous.next();
+                *slot = anonymous[order.next().expect("counts match")]
+                    .take();
             }
         }
-        debug_assert!(anonymous.next().is_none(), "counts match");
+        debug_assert!(order.next().is_none(), "counts match");
         let roster: Vec<SocketAddr> = by_rank
             .iter()
             .map(|s| s.as_ref().expect("every slot filled").1)
@@ -371,7 +449,7 @@ pub fn connect_rank(server: &str, want_rank: Option<usize>)
     let listener =
         TcpListener::bind(SocketAddr::new(ctl.local_addr()?.ip(), 0))?;
     let listen_port = listener.local_addr()?.port();
-    write_hello(&mut ctl, want_rank, listen_port)?;
+    write_hello(&mut ctl, want_rank, listen_port, &rank_host())?;
     let (rank, nranks, payload, roster) = read_welcome(&mut ctl)?;
     if let Some(want) = want_rank {
         if want != rank {
@@ -591,6 +669,29 @@ mod tests {
         // no peer sockets, but the periodic self-seam still loops back
         ranks[0].send_bytes(0, vec![9]).unwrap();
         assert_eq!(ranks[0].recv_bytes().unwrap(), vec![9]);
+    }
+
+    #[test]
+    fn host_grouping_colocates_each_hosts_ranks() {
+        let h = |s: &str| s.to_string();
+        // interleaved arrivals from two hosts: each host's ranks end up
+        // on consecutive ids, hosts in first-arrival order
+        let hosts = vec![h("a"), h("b"), h("a"), h("b")];
+        assert_eq!(host_grouped_order(&hosts), vec![0, 2, 1, 3]);
+        // three hosts, uneven counts
+        let hosts = vec![h("n1"), h("n2"), h("n3"), h("n2"), h("n2")];
+        assert_eq!(host_grouped_order(&hosts), vec![0, 1, 3, 4, 2]);
+        // one host degenerates to arrival order
+        let hosts = vec![h("x"), h("x"), h("x")];
+        assert_eq!(host_grouped_order(&hosts), vec![0, 1, 2]);
+        assert_eq!(host_grouped_order(&[]), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn rank_host_is_never_empty() {
+        // env override > kernel hostname > "localhost" — whichever arm
+        // fires, every Hello carries a usable placement tag
+        assert!(!rank_host().is_empty());
     }
 
     #[test]

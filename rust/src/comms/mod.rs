@@ -5,10 +5,11 @@
 //! *inter-node* level; the follow-up paper (arXiv:1609.01479) scales that
 //! stack to thousands of GPUs with slab/pencil halo exchange as the
 //! dominant communication pattern — and keeps the ranks **resident** for
-//! the whole run. This module is that level: every subdomain of the
-//! x-slab decomposition becomes a **rank** running concurrently on its
-//! own thread with its own TLP pool and its own first-touch-allocated
-//! fields, exchanging serialized halo planes through a pluggable
+//! the whole run. This module is that level: every subdomain of a 3D
+//! Cartesian `(px, py, pz)` decomposition ([`crate::lattice::decomp`])
+//! becomes a **rank** running concurrently on its own thread with its
+//! own TLP pool and its own first-touch-allocated fields, exchanging
+//! serialized, axis-tagged halo faces through a pluggable
 //! [`transport::Transport`] — in-process channels
 //! ([`transport::ChannelTransport`]) or real TCP sockets spanning OS
 //! processes and hosts ([`socket::SocketTransport`] +
@@ -53,7 +54,7 @@
 //!
 //! | frame                   | direction        | carries                            |
 //! |-------------------------|------------------|------------------------------------|
-//! | [`wire::PlaneMsg`]      | rank ↔ rank      | one tagged halo x-plane            |
+//! | [`wire::PlaneMsg`]      | rank ↔ rank      | one axis-tagged halo face          |
 //! | [`wire::PlaneBlockMsg`] | rank ↔ rank      | a depth-tagged ghost block of `2k` x-planes (super-steps) |
 //! | [`wire::Command`]       | driver → rank    | `Advance{steps}` / `Observables` / `Gather` / `GatherPhi` / `Shutdown` |
 //! | [`wire::PartialObs`]    | rank → driver    | interior mass/momentum/phi/phi² sums |
@@ -98,6 +99,14 @@
 //! bit-identical to every other schedule (`tests/multistep_world.rs`,
 //! depth sweep in `benches/halo_overlap.rs`).
 //!
+//! Non-slab grids (`CommsConfig::grid`, the `[target] grid` knob) split
+//! more than one axis: each rank talks only to its **6 face neighbours**
+//! and the halo exchange runs as staged per-axis sweeps (x → y → z), so
+//! edge and corner halo data ride through the faces in 2–3 hops instead
+//! of 26-neighbour messages — still bit-identical to the slab world and
+//! the fused engine (`tests/grid_world.rs`; the grid sweep in
+//! `benches/halo_overlap.rs` measures the surface-to-volume win).
+//!
 //! # Multi-process worlds
 //!
 //! The session control frames travel as wire bytes through the same
@@ -123,7 +132,7 @@ pub mod world;
 
 pub use socket::SocketTransport;
 pub use transport::{ChannelTransport, Transport};
-pub use wire::{Command, FieldId, Frame, InteriorField, InteriorMsg,
+pub use wire::{Axis, Command, FieldId, Frame, InteriorField, InteriorMsg,
                PartialObs, Phase, PlaneBlockMsg, PlaneMsg, ReportMsg,
                Side, Tag};
 pub use world::{run_decomposed, serve_rank, CommsConfig, CommsSession,

@@ -248,7 +248,7 @@ impl Transport for ChannelTransport {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::comms::wire::{Command, FieldId, Phase, Side, Tag};
+    use crate::comms::wire::{Axis, Command, FieldId, Phase, Side, Tag};
 
     fn msg(src: u32, step: u64, data: Vec<f64>) -> PlaneMsg {
         PlaneMsg {
@@ -258,6 +258,7 @@ mod tests {
                 phase: Phase::Moments,
                 field: FieldId::G,
                 side: Side::Low,
+                axis: Axis::X,
             },
             data,
         }

@@ -21,7 +21,7 @@
 //! ```text
 //! offset  size  field
 //!      0     4  magic  "TDPW"
-//!      4     1  version (2)
+//!      4     1  version (3)
 //!      5     1  kind    (0 Plane, 1 Command, 2 Partials, 3 Interior,
 //!                        4 Report, 5 PlaneBlock)
 //! ```
@@ -29,8 +29,8 @@
 //! Kind-specific layouts (offsets continue from the prelude):
 //!
 //! ```text
-//! Plane      6 phase(1)  7 field(1)  8 side(1)  9 src(4)  13 step(8)
-//!            21 count(4)  25 payload(8*count)
+//! Plane      6 phase(1)  7 field(1)  8 side(1)  9 axis(1)  10 src(4)
+//!            14 step(8)  22 count(4)  26 payload(8*count)
 //! Command    6 op(1)  7 arg(8)          [op: 0 Advance, 1 Observables,
 //!                                        2 Gather, 3 GatherPhi,
 //!                                        4 Shutdown; arg = steps]
@@ -40,28 +40,37 @@
 //!            [field: 0 F, 1 G, 2 Phi]
 //! Report     6 src(4)  10 interior_sites(8)  18 steps(8)  26 compute_s(8)
 //!            34 wait_s(8)  42 idle_s(8)  50 bytes_sent(8)  58 msgs_sent(8)
-//! PlaneBlock 6 field(1)  7 side(1)  8 depth(4)  12 src(4)  16 step(8)
-//!            24 count(4)  28 payload(8*count)
+//! PlaneBlock 6 field(1)  7 side(1)  8 axis(1)  9 depth(4)  13 src(4)
+//!            17 step(8)  25 count(4)  29 payload(8*count)
 //! ```
+//!
+//! Version 3 added the `axis` byte (0 x, 1 y, 2 z) to `Plane` and
+//! `PlaneBlock`: a 3D Cartesian rank grid exchanges faces along up to
+//! three axes per step, and a rank with only two grid neighbours along
+//! an axis pair (a 2-wide axis) needs `(side, axis)` to disambiguate the
+//! two frames the *same* peer sends it. Slab worlds always send
+//! `axis = 0`.
 //!
 //! `PlaneBlock` is the communication-avoiding super-step frame: one
 //! message carries a whole `depth`-plane-deep ghost block (the
 //! `halo::pack_x_planes` layout), replacing `depth` individual `Plane`
 //! frames — one TCP write per super-step per (field, side) instead of
-//! per step per plane.
+//! per step per plane. Super-steps run on slab grids, so its axis is
+//! always `Axis::X` today; the byte keeps the two face-frame headers
+//! congruent.
 
 use crate::error::{Error, Result};
 
 /// Frame magic: "targetDP wire".
 pub const MAGIC: [u8; 4] = *b"TDPW";
-/// Wire format version (2: multi-kind frames for resident sessions).
-pub const VERSION: u8 = 2;
+/// Wire format version (3: axis-tagged face frames for Cartesian grids).
+pub const VERSION: u8 = 3;
 /// Fixed header size of a [`PlaneMsg`] frame in bytes.
-pub const PLANE_HEADER_LEN: usize = 25;
+pub const PLANE_HEADER_LEN: usize = 26;
 /// Fixed header size of an [`InteriorMsg`] frame in bytes.
 pub const INTERIOR_HEADER_LEN: usize = 15;
 /// Fixed header size of a [`PlaneBlockMsg`] frame in bytes.
-pub const PLANE_BLOCK_HEADER_LEN: usize = 28;
+pub const PLANE_BLOCK_HEADER_LEN: usize = 29;
 
 const KIND_PLANE: u8 = 0;
 const KIND_COMMAND: u8 = 1;
@@ -97,9 +106,37 @@ pub enum Side {
     High = 1,
 }
 
+/// Which lattice axis a face frame crosses — the staged x→y→z exchange
+/// of a 3D Cartesian rank grid tags each face with its axis, because a
+/// 2-wide grid axis makes both of a rank's frames along it arrive from
+/// the *same* peer and `(side, axis)` is what tells them apart. Slab
+/// worlds always send [`Axis::X`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Axis {
+    X = 0,
+    Y = 1,
+    Z = 2,
+}
+
+impl Axis {
+    /// The three axes in staged exchange order.
+    pub const ALL: [Axis; 3] = [Axis::X, Axis::Y, Axis::Z];
+
+    /// Axis for a 0/1/2 lattice-axis index (panics outside 0..3).
+    pub fn from_index(a: usize) -> Axis {
+        Self::ALL[a]
+    }
+
+    /// Lattice-axis index (0 = x, 1 = y, 2 = z).
+    pub fn index(self) -> usize {
+        self as usize
+    }
+}
+
 /// Message envelope: the MPI `(tag)` analog the receiver matches on.
-/// Unique per (step, exchange phase, field, halo side), so out-of-order
-/// arrival — a neighbour running up to a step ahead — is unambiguous.
+/// Unique per (step, exchange phase, field, halo side, axis), so
+/// out-of-order arrival — a neighbour running up to a step ahead, or the
+/// same peer sending both sides of a 2-wide grid axis — is unambiguous.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct Tag {
     /// Timestep the plane belongs to.
@@ -110,6 +147,8 @@ pub struct Tag {
     pub field: FieldId,
     /// Which halo plane the payload fills at the receiver.
     pub side: Side,
+    /// Which lattice axis the face crosses.
+    pub axis: Axis,
 }
 
 /// One halo plane in flight: envelope + payload.
@@ -139,6 +178,9 @@ pub struct PlaneBlockMsg {
     pub field: FieldId,
     /// Which ghost region the payload fills at the receiver.
     pub side: Side,
+    /// Which lattice axis the block crosses (always [`Axis::X`] today:
+    /// super-steps run on slab grids).
+    pub axis: Axis,
     /// Number of consecutive x-planes in the block.
     pub depth: u32,
     /// `ncomp * depth * plane_sites` doubles, SoA component-major with
@@ -273,6 +315,7 @@ impl PlaneMsg {
         out.push(tag.phase as u8);
         out.push(tag.field as u8);
         out.push(tag.side as u8);
+        out.push(tag.axis as u8);
         out.extend_from_slice(&src.to_le_bytes());
         out.extend_from_slice(&tag.step.to_le_bytes());
         out.extend_from_slice(&(data.len() as u32).to_le_bytes());
@@ -300,7 +343,7 @@ impl PlaneBlockMsg {
     /// Serialize to the wire frame.
     pub fn encode(&self) -> Vec<u8> {
         Self::encode_from(self.src, self.step, self.field, self.side,
-                          self.depth, &self.data)
+                          self.axis, self.depth, &self.data)
     }
 
     /// Build the wire frame straight from a borrowed payload — the
@@ -310,6 +353,7 @@ impl PlaneBlockMsg {
         step: u64,
         field: FieldId,
         side: Side,
+        axis: Axis,
         depth: u32,
         data: &[f64],
     ) -> Vec<u8> {
@@ -317,6 +361,7 @@ impl PlaneBlockMsg {
         prelude(&mut out, KIND_PLANE_BLOCK);
         out.push(field as u8);
         out.push(side as u8);
+        out.push(axis as u8);
         out.extend_from_slice(&depth.to_le_bytes());
         out.extend_from_slice(&src.to_le_bytes());
         out.extend_from_slice(&step.to_le_bytes());
@@ -504,13 +549,19 @@ impl Frame {
                     1 => Side::High,
                     v => return Err(bad(format!("unknown side {v}"))),
                 };
+                let axis = match r.u8()? {
+                    0 => Axis::X,
+                    1 => Axis::Y,
+                    2 => Axis::Z,
+                    v => return Err(bad(format!("unknown axis {v}"))),
+                };
                 let src = r.u32()?;
                 let step = r.u64()?;
                 let count = r.u32()? as usize;
                 let data = r.f64_tail(count)?;
                 Ok(Frame::Plane(PlaneMsg {
                     src,
-                    tag: Tag { step, phase, field, side },
+                    tag: Tag { step, phase, field, side, axis },
                     data,
                 }))
             }
@@ -595,6 +646,12 @@ impl Frame {
                     1 => Side::High,
                     v => return Err(bad(format!("unknown side {v}"))),
                 };
+                let axis = match r.u8()? {
+                    0 => Axis::X,
+                    1 => Axis::Y,
+                    2 => Axis::Z,
+                    v => return Err(bad(format!("unknown axis {v}"))),
+                };
                 let depth = r.u32()?;
                 let src = r.u32()?;
                 let step = r.u64()?;
@@ -605,6 +662,7 @@ impl Frame {
                     step,
                     field,
                     side,
+                    axis,
                     depth,
                     data,
                 }))
@@ -626,6 +684,7 @@ mod tests {
                 phase: Phase::Stream,
                 field: FieldId::G,
                 side: Side::High,
+                axis: Axis::Y,
             },
             data: vec![0.0, -1.5, f64::MIN_POSITIVE, 1.0 / 3.0, -0.0,
                        f64::MAX, 1e-300],
@@ -653,6 +712,7 @@ mod tests {
                 phase: Phase::Moments,
                 field: FieldId::F,
                 side: Side::Low,
+                axis: Axis::X,
             },
             data: vec![],
         };
@@ -734,6 +794,7 @@ mod tests {
             step: 12,
             field: FieldId::F,
             side: Side::Low,
+            axis: Axis::X,
             depth: 4,
             data: vec![0.0, -1.5, f64::MIN_POSITIVE, 1.0 / 3.0, -0.0,
                        f64::MAX, 1e-300, 42.0],
@@ -752,6 +813,7 @@ mod tests {
                 assert_eq!(back.step, msg.step);
                 assert_eq!(back.field, msg.field);
                 assert_eq!(back.side, msg.side);
+                assert_eq!(back.axis, msg.axis);
                 assert_eq!(back.depth, msg.depth);
                 assert_eq!(back.data.len(), msg.data.len());
                 for (a, b) in back.data.iter().zip(&msg.data) {
@@ -770,6 +832,7 @@ mod tests {
             step: 0,
             field: FieldId::G,
             side: Side::High,
+            axis: Axis::X,
             depth: 0,
             data: vec![],
         };
@@ -789,13 +852,17 @@ mod tests {
         let mut bad = good.clone();
         bad[7] = 2;
         assert!(Frame::decode(&bad).is_err());
+        // axis out of range
+        let mut bad = good.clone();
+        bad[8] = 3;
+        assert!(Frame::decode(&bad).is_err());
         // payload length mismatch
         let mut bad = good.clone();
         bad.pop();
         assert!(Frame::decode(&bad).is_err());
         // declared count larger than payload
         let mut bad = good.clone();
-        bad[24] = bad[24].wrapping_add(1);
+        bad[25] = bad[25].wrapping_add(1);
         assert!(Frame::decode(&bad).is_err());
         // truncated header
         assert!(Frame::decode(&good[..20]).is_err());
@@ -824,13 +891,17 @@ mod tests {
         let mut bad = good.clone();
         bad[6] = 7;
         assert!(Frame::decode(&bad).is_err());
+        // plane axis out of range
+        let mut bad = good.clone();
+        bad[9] = 3;
+        assert!(Frame::decode(&bad).is_err());
         // payload length mismatch
         let mut bad = good.clone();
         bad.pop();
         assert!(Frame::decode(&bad).is_err());
         // declared count larger than payload
         let mut bad = good.clone();
-        bad[21] = bad[21].wrapping_add(1);
+        bad[22] = bad[22].wrapping_add(1);
         assert!(Frame::decode(&bad).is_err());
         // command with trailing garbage
         let mut bad = Frame::Command(Command::Shutdown).encode();

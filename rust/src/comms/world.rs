@@ -1,12 +1,15 @@
-//! The rank world: resident slab ranks with overlapped halo exchange.
+//! The rank world: resident ranks on a 3D Cartesian grid with
+//! overlapped halo exchange.
 //!
-//! [`CommsWorld`] plays the role of `MPI_COMM_WORLD`: it owns the slab
-//! decomposition and, per [`CommsWorld::session`], spawns **one OS thread
-//! per rank** — exactly once per run. Each rank owns its local lattice
-//! (allocated and first-touched by its own TLP pool) for the entire
-//! simulation, steps independently, and talks to its two x neighbours
-//! only through [`Rank::isend`]/[`Rank::wait`] — there is no shared
-//! mutable state and no sequential domain loop anywhere.
+//! [`CommsWorld`] plays the role of `MPI_COMM_WORLD`: it owns the
+//! Cartesian decomposition (a `(px, py, pz)` rank grid; the classic
+//! x-slab world is the `(p, 1, 1)` special case) and, per
+//! [`CommsWorld::session`], spawns **one OS thread per rank** — exactly
+//! once per run. Each rank owns its local lattice (allocated and
+//! first-touched by its own TLP pool) for the entire simulation, steps
+//! independently, and talks to its face neighbours only through
+//! [`Rank::isend`]/[`Rank::wait`] — there is no shared mutable state and
+//! no sequential domain loop anywhere.
 //!
 //! The driver holds a [`CommsSession`] and steers the resident ranks over
 //! the same [`Transport`] the halo planes use, with a small command
@@ -55,22 +58,44 @@
 //! per-site update is placement-independent, so depth-k runs are
 //! bit-identical to the depth-1 resident world and the fused engine
 //! (`tests/multistep_world.rs`).
+//!
+//! # Grid worlds: staged per-axis face exchange
+//!
+//! On a non-slab grid every rank has up to six face neighbours. Instead
+//! of 26-neighbour messages, each exchange is staged per decomposed axis
+//! in x → y → z order: a face frame spans the *full* halo-padded local
+//! cross-section of the other two axes, so the y faces a rank packs
+//! after its x-wait already carry the freshly received x halos — edge
+//! (and corner) data flow to where the diagonal stencils need them
+//! through the staged sequence, later stages overwriting the staler
+//! edge values earlier stages deposited. Per step a grid rank sends 6
+//! face messages per decomposed axis (2 moments + 4 stream), each
+//! axis-tagged ([`Axis`]) so a 2-wide axis — where both neighbours are
+//! the same peer — stays unambiguous. The overlapped schedule computes
+//! the deep interior while the *first* axis's faces are in flight and
+//! finishes the face shell after the last stage; bulk-sync completes
+//! the whole staged exchange up front. Super-steps (`depth > 1`) remain
+//! slab-only. Every grid world is bit-identical to the slab world and
+//! the fused single-domain engine (`tests/grid_world.rs`).
 
 use std::collections::{HashMap, VecDeque};
+use std::ops::Range;
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::comms::transport::{ChannelTransport, Transport};
-use crate::comms::wire::{Command, FieldId, Frame, InteriorField,
+use crate::comms::wire::{Axis, Command, FieldId, Frame, InteriorField,
                          InteriorMsg, PartialObs, Phase, PlaneBlockMsg,
                          PlaneMsg, ReportMsg, Side, Tag};
 use crate::error::{Error, Result};
 use crate::free_energy::gradient::gradient_fd_range;
 use crate::free_energy::symmetric::FeParams;
-use crate::lattice::decomp::{SlabDecomposition, SubDomain};
+use crate::lattice::decomp::{box_runs, CartDecomposition, CartSubDomain,
+                             SubDomain, AXIS_NAMES};
 use crate::lattice::geometry::Geometry;
-use crate::lattice::halo::{pack_x_plane, pack_x_planes, unpack_x_plane,
+use crate::lattice::halo::{face_sites, pack_face, pack_x_plane,
+                           pack_x_planes, unpack_face, unpack_x_plane,
                            unpack_x_planes};
 use crate::lattice::stream_table::StreamTable;
 use crate::lb::collision::{collide_lattice_range, collide_stream_range};
@@ -120,6 +145,13 @@ pub struct CommsConfig {
     /// (`sched_setaffinity` on Linux, a no-op elsewhere) — the `[target]
     /// pin_threads` knob.
     pub pin: bool,
+    /// Rank grid `(px, py, pz)`. `[0, 0, 0]` ("unset") resolves to the
+    /// x-slab `[ranks, 1, 1]` here; `Config::comms_config` may instead
+    /// resolve it to a surface-minimizing factorization
+    /// ([`CartDecomposition::auto_grid`]). The product must equal
+    /// `ranks`. Non-slab grids take the staged per-axis face-exchange
+    /// path and support `depth == 1` only.
+    pub grid: [usize; 3],
 }
 
 impl Default for CommsConfig {
@@ -133,6 +165,7 @@ impl Default for CommsConfig {
             schedule: Schedule::Static,
             depth: 1,
             pin: false,
+            grid: [0, 0, 0],
         }
     }
 }
@@ -307,7 +340,8 @@ impl Rank {
                 PlaneBlockMsg::frame_len(data.len()) as u64;
             self.msgs_sent += 1;
             frames.push(PlaneBlockMsg::encode_from(
-                self.rank as u32, step, *field, *side, depth, data));
+                self.rank as u32, step, *field, *side, Axis::X, depth,
+                data));
         }
         self.transport.send_bytes_batch(dst, frames)
     }
@@ -476,20 +510,25 @@ impl Rank {
     }
 }
 
-/// The rank world (`MPI_COMM_WORLD`): a slab decomposition plus the run
-/// configuration, ready to spawn a resident session of concurrent ranks.
+/// The rank world (`MPI_COMM_WORLD`): a Cartesian decomposition plus the
+/// run configuration, ready to spawn a resident session of concurrent
+/// ranks.
 #[derive(Debug, Clone)]
 pub struct CommsWorld {
-    /// The slab decomposition the ranks own (one subdomain per rank).
-    pub dec: SlabDecomposition,
-    /// Run knobs (rank count, overlap, thread budget, VVL, schedule).
+    /// The Cartesian decomposition the ranks own (one subdomain per
+    /// rank; an x-slab world is the `(p, 1, 1)` grid).
+    pub dec: CartDecomposition,
+    /// Run knobs (rank count, grid, overlap, thread budget, VVL,
+    /// schedule).
     pub cfg: CommsConfig,
 }
 
 impl CommsWorld {
-    /// Build the world: validate the knobs and split `geom` into
-    /// `cfg.ranks` x-slabs. No threads spawn until
-    /// [`CommsWorld::session`].
+    /// Build the world: validate the knobs and split `geom` over the
+    /// rank grid (`cfg.grid`, defaulting to `cfg.ranks` x-slabs). Every
+    /// decomposed axis is validated independently — errors name the
+    /// axis that cannot carry the requested split or halo depth. No
+    /// threads spawn until [`CommsWorld::session`].
     pub fn new(geom: Geometry, cfg: CommsConfig) -> Result<Self> {
         if !cfg.scalar && !ilp::is_supported(cfg.vvl) {
             return Err(Error::Invalid(format!(
@@ -506,19 +545,39 @@ impl CommsWorld {
                     .into(),
             ));
         }
-        let dec = SlabDecomposition::new(geom, cfg.ranks)?;
+        let grid = if cfg.grid == [0, 0, 0] {
+            [cfg.ranks, 1, 1]
+        } else {
+            cfg.grid
+        };
+        let nr: usize = grid.iter().product();
+        if nr != cfg.ranks {
+            return Err(Error::Invalid(format!(
+                "comms: grid {}x{}x{} needs {nr} ranks, config says {}",
+                grid[0], grid[1], grid[2], cfg.ranks
+            )));
+        }
+        let dec = CartDecomposition::new(geom, grid)?;
         if cfg.depth > 1 {
+            if !dec.is_slab() {
+                return Err(Error::Invalid(format!(
+                    "comms: super-step depth {} needs a slab grid \
+                     (px,1,1) — the trapezoid recurrence is x-blocked — \
+                     but the grid is {}x{}x{}",
+                    cfg.depth, grid[0], grid[1], grid[2]
+                )));
+            }
             // every rank needs a full trapezoid foot: HALO_PER_STEP *
             // depth ghost planes per side, no wider than its own slab
             // (a deeper foot would reach past the nearest neighbour)
             let halo = HALO_PER_STEP * cfg.depth;
             let min_lxl =
-                dec.domains.iter().map(|d| d.lxl).min().unwrap_or(0);
+                dec.domains.iter().map(|d| d.ext[0]).min().unwrap_or(0);
             if halo > min_lxl {
                 return Err(Error::Invalid(format!(
                     "comms: super-step depth {} needs {halo} ghost \
                      planes per side but the narrowest slab has only \
-                     {min_lxl} interior planes",
+                     {min_lxl} interior planes on the x axis",
                     cfg.depth
                 )));
             }
@@ -526,9 +585,9 @@ impl CommsWorld {
         Ok(CommsWorld { dec, cfg })
     }
 
-    /// Spawn the resident rank session: one thread per slab, each copying
-    /// its own planes out of the initial `f0`/`g0` (first touch on the
-    /// sweeping pool via [`TlpPool::zeros`]) and then parking at the
+    /// Spawn the resident rank session: one thread per subdomain, each
+    /// copying its own box out of the initial `f0`/`g0` (first touch on
+    /// the sweeping pool via [`TlpPool::zeros`]) and then parking at the
     /// command barrier. The state lives rank-local until an explicit
     /// [`CommsSession::gather`].
     pub fn session(&self, vs: &'static VelSet, p: &FeParams, f0: Vec<f64>,
@@ -680,7 +739,7 @@ pub fn run_decomposed(geom: &Geometry, vs: &'static VelSet, p: &FeParams,
 /// # Ok::<(), targetdp::Error>(())
 /// ```
 pub struct CommsSession {
-    dec: SlabDecomposition,
+    dec: CartDecomposition,
     cfg: CommsConfig,
     vs: &'static VelSet,
     /// The driver's endpoint — in-process channels for
@@ -895,7 +954,7 @@ impl CommsSession {
                 ))));
             }
             let d = &self.dec.domains[r];
-            let want_len = wanted[w].1 * d.lxl * d.plane();
+            let want_len = wanted[w].1 * d.interior_sites();
             if msg.data.len() != want_len {
                 return Err(self.fail(Error::Invalid(format!(
                     "comms: rank {r} interior is {} doubles, want \
@@ -1059,7 +1118,7 @@ struct RankState {
 /// the scatter. Blocks until the driver's `Shutdown`, exactly like an
 /// in-process rank thread: the same rank body is shared verbatim.
 #[allow(clippy::too_many_arguments)]
-pub fn serve_rank(d: SubDomain, vs: &'static VelSet, p: &FeParams,
+pub fn serve_rank(d: CartSubDomain, vs: &'static VelSet, p: &FeParams,
                   f0: Vec<f64>, g0: Vec<f64>, cfg: &CommsConfig,
                   nthreads: usize, transport: Box<dyn Transport>)
                   -> Result<()> {
@@ -1090,10 +1149,26 @@ pub fn serve_rank(d: SubDomain, vs: &'static VelSet, p: &FeParams,
               nthreads, transport)
 }
 
-/// Body of one resident rank thread: allocate + scatter once, then serve
-/// the controller's command loop until `Shutdown`.
+/// Body of one resident rank thread (and of a remote rank process via
+/// [`serve_rank`]): dispatch on the grid shape. A slab-shaped grid
+/// `(px, 1, 1)` — including every depth-k super-step world — runs the
+/// contiguous x-plane path; anything else runs the staged per-axis
+/// face-exchange path.
 #[allow(clippy::too_many_arguments)]
-fn rank_main(d: SubDomain, vs: &'static VelSet, p: FeParams,
+fn rank_main(d: CartSubDomain, vs: &'static VelSet, p: FeParams,
+             f0: Arc<Vec<f64>>, g0: Arc<Vec<f64>>, cfg: CommsConfig,
+             nthreads: usize, transport: Box<dyn Transport>) -> Result<()> {
+    if d.is_slab() {
+        slab_main(d.to_slab(), vs, p, f0, g0, cfg, nthreads, transport)
+    } else {
+        grid_main(d, vs, p, f0, g0, cfg, nthreads, transport)
+    }
+}
+
+/// Serve loop of one slab rank: allocate + scatter once, then serve the
+/// controller's command loop until `Shutdown`.
+#[allow(clippy::too_many_arguments)]
+fn slab_main(d: SubDomain, vs: &'static VelSet, p: FeParams,
              f0: Arc<Vec<f64>>, g0: Arc<Vec<f64>>, cfg: CommsConfig,
              nthreads: usize, transport: Box<dyn Transport>) -> Result<()> {
     let pool = if cfg.pin {
@@ -1246,6 +1321,468 @@ fn rank_partials(d: &SubDomain, vs: &VelSet, st: &mut RankState,
         src: d.rank as u32,
         steps: step,
         sites: (d.lxl * d.plane()) as u64,
+        mass,
+        momentum,
+        phi_total,
+        phi_sq,
+    }
+}
+
+/// Precomputed exchange + sweep plan for one *decomposed* axis of a grid
+/// rank: the face neighbours, the local face coordinates the staged
+/// exchange packs and unpacks, and the range partitions the overlapped
+/// schedule sweeps once the staged exchange has delivered this axis's
+/// halos.
+struct AxisPlan {
+    /// Lattice axis (0 = x, 1 = y, 2 = z).
+    axis: usize,
+    /// The same axis as a wire tag.
+    wire: Axis,
+    /// Face neighbours, periodic in the rank grid (with a 2-wide axis
+    /// both are the same peer — the `(side, axis)` tag disambiguates).
+    lo_nbr: usize,
+    hi_nbr: usize,
+    /// Interior boundary planes sent (local coordinates along `axis`).
+    send_lo: usize,
+    send_hi: usize,
+    /// Halo planes the receives land in.
+    recv_lo: usize,
+    recv_hi: usize,
+    /// Sites per component in one face payload (spans the full
+    /// halo-padded local extent of the other two axes).
+    face: usize,
+    /// Runs of the two halo-face boxes — where phi is recomputed after
+    /// the staged moments exchange. Boxes of different axes overlap on
+    /// edge sites; phi is a pure per-site moment, so the recompute is
+    /// idempotent.
+    halo_runs: Vec<Range<usize>>,
+    /// Runs of this axis's slice of the interior shell: the two face
+    /// slabs, clipped to deep on earlier decomposed axes and interior on
+    /// later ones — across axes an exact disjoint partition of
+    /// interior-minus-deep, so in-place collide touches every site
+    /// exactly once.
+    shell_runs: Vec<Range<usize>>,
+}
+
+/// Build the per-axis plans of a grid rank, in staged x → y → z order.
+fn grid_plans(d: &CartSubDomain) -> Vec<AxisPlan> {
+    let local = &d.local;
+    let le = [local.lx, local.ly, local.lz];
+    let axes: Vec<usize> = (0..3).filter(|&a| d.grid[a] > 1).collect();
+    let mut plans = Vec::with_capacity(axes.len());
+    for &a in &axes {
+        let la = d.ext[a];
+        let mut halo_runs = Vec::new();
+        for p in [0, la + 1] {
+            let mut lo = [0; 3];
+            let mut hi = le;
+            lo[a] = p;
+            hi[a] = p + 1;
+            halo_runs.extend(box_runs(local, lo, hi));
+        }
+        let mut shell_runs = Vec::new();
+        // a one-plane extent has coinciding low and high faces
+        let mut face_planes = vec![1];
+        if la > 1 {
+            face_planes.push(la);
+        }
+        for &p in &face_planes {
+            let mut lo = [0; 3];
+            let mut hi = le;
+            for &b in &axes {
+                if b < a {
+                    lo[b] = 2;
+                    hi[b] = d.ext[b];
+                } else if b > a {
+                    lo[b] = 1;
+                    hi[b] = d.ext[b] + 1;
+                }
+            }
+            lo[a] = p;
+            hi[a] = p + 1;
+            shell_runs.extend(box_runs(local, lo, hi));
+        }
+        plans.push(AxisPlan {
+            axis: a,
+            wire: Axis::from_index(a),
+            lo_nbr: d.neighbor(a, false),
+            hi_nbr: d.neighbor(a, true),
+            send_lo: 1,
+            send_hi: la,
+            recv_lo: 0,
+            recv_hi: la + 1,
+            face: d.face_sites(a),
+            halo_runs,
+            shell_runs,
+        });
+    }
+    plans
+}
+
+/// Runs of the deep box: the interior shrunk by one plane per side on
+/// every decomposed axis — the sites whose whole (diagonal-including)
+/// stencil stays interior, computable while faces are in flight. Empty
+/// when an extent is too thin.
+fn deep_runs(d: &CartSubDomain) -> Vec<Range<usize>> {
+    let mut lo = [0; 3];
+    let mut hi = [d.local.lx, d.local.ly, d.local.lz];
+    for a in 0..3 {
+        if d.grid[a] > 1 {
+            lo[a] = 2;
+            hi[a] = d.ext[a];
+        }
+    }
+    box_runs(&d.local, lo, hi)
+}
+
+/// Validate a received face payload and scatter it into face plane `p`
+/// of `axis` — the error names the axis.
+fn unpack_face_checked(field: &mut [f64], nvel: usize, geom: &Geometry,
+                       axis: usize, p: usize, data: &[f64]) -> Result<()> {
+    let want = nvel * face_sites(geom, axis);
+    if data.len() != want {
+        return Err(Error::Invalid(format!(
+            "comms: {} face payload is {} doubles, want {want}",
+            AXIS_NAMES[axis],
+            data.len()
+        )));
+    }
+    unpack_face(field, nvel, geom, axis, p, data);
+    Ok(())
+}
+
+/// Post one axis's two face sends of `field` (`MPI_Isend` x2): the low
+/// interior face fills the low neighbour's HIGH halo and vice versa.
+#[allow(clippy::too_many_arguments)]
+fn isend_faces(rank: &mut Rank, data: &[f64], field: FieldId, phase: Phase,
+               step: u64, nvel: usize, local: &Geometry, plan: &AxisPlan,
+               buf: &mut [f64]) -> Result<()> {
+    let nb = nvel * plan.face;
+    pack_face(data, nvel, local, plan.axis, plan.send_lo, &mut buf[..nb]);
+    let tag = |side| Tag { step, phase, field, side, axis: plan.wire };
+    rank.isend(plan.lo_nbr, tag(Side::High), &buf[..nb])?;
+    pack_face(data, nvel, local, plan.axis, plan.send_hi, &mut buf[..nb]);
+    rank.isend(plan.hi_nbr, tag(Side::Low), &buf[..nb])?;
+    Ok(())
+}
+
+/// Complete one axis's two face receives of `field` (`MPI_Waitall`),
+/// scattering the payloads into this rank's halo planes.
+fn wait_faces(rank: &mut Rank, data: &mut [f64], field: FieldId,
+              phase: Phase, step: u64, nvel: usize, local: &Geometry,
+              plan: &AxisPlan) -> Result<()> {
+    let tag = |side| Tag { step, phase, field, side, axis: plan.wire };
+    let lo = rank.wait(tag(Side::Low))?;
+    unpack_face_checked(data, nvel, local, plan.axis, plan.recv_lo, &lo)?;
+    let hi = rank.wait(tag(Side::High))?;
+    unpack_face_checked(data, nvel, local, plan.axis, plan.recv_hi, &hi)?;
+    Ok(())
+}
+
+/// Serve loop of one non-slab grid rank: allocate + scatter the local
+/// box once, precompute the staged exchange plans and sweep partitions,
+/// then serve the controller's command loop until `Shutdown` — the grid
+/// analog of [`slab_main`].
+#[allow(clippy::too_many_arguments)]
+fn grid_main(d: CartSubDomain, vs: &'static VelSet, p: FeParams,
+             f0: Arc<Vec<f64>>, g0: Arc<Vec<f64>>, cfg: CommsConfig,
+             nthreads: usize, transport: Box<dyn Transport>) -> Result<()> {
+    let pool = if cfg.pin {
+        TlpPool::new_pinned(nthreads, cfg.schedule, d.rank * nthreads)
+    } else {
+        TlpPool::new(nthreads, cfg.schedule)
+    };
+    let local = d.local;
+    let ln = local.nsites();
+    let nvel = vs.nvel;
+    // one face frame is packed at a time: size the buffer for the widest
+    let send_len = (0..3)
+        .filter(|&a| d.grid[a] > 1)
+        .map(|a| nvel * d.face_sites(a))
+        .max()
+        .unwrap_or(0);
+    let mut st = RankState {
+        f: pool.zeros(nvel * ln),
+        g: pool.zeros(nvel * ln),
+        f_tmp: pool.zeros(nvel * ln),
+        g_tmp: pool.zeros(nvel * ln),
+        phi: pool.zeros(ln),
+        grad: pool.zeros(3 * ln),
+        lap: pool.zeros(ln),
+        send_buf: vec![0.0; send_len],
+    };
+    d.scatter_into(&f0, nvel, &mut st.f);
+    d.scatter_into(&g0, nvel, &mut st.g);
+    drop(f0);
+    drop(g0);
+    let table = StreamTable::cached(vs, &local);
+    let plans = grid_plans(&d);
+    let interior = d.interior_runs();
+    let deep = deep_runs(&d);
+    let mut rank = Rank::new(transport);
+
+    let t0 = Instant::now();
+    let mut step: u64 = 0;
+    loop {
+        match rank.wait_command()? {
+            Command::Advance { steps } => {
+                for _ in 0..steps {
+                    step_rank_grid(&d, vs, &p, &table, &plans, &interior,
+                                   &deep, &mut st, &mut rank, step, &cfg,
+                                   &pool)?;
+                    step += 1;
+                }
+            }
+            Command::Observables => {
+                let partials = grid_partials(&d, vs, &mut st, &interior,
+                                             &pool, &cfg, step);
+                rank.send_response(&Frame::Partials(partials))?;
+            }
+            Command::Gather => {
+                rank.send_response(&Frame::Interior(InteriorMsg {
+                    src: d.rank as u32,
+                    field: InteriorField::F,
+                    data: d.interior_of(&st.f, nvel),
+                }))?;
+                rank.send_response(&Frame::Interior(InteriorMsg {
+                    src: d.rank as u32,
+                    field: InteriorField::G,
+                    data: d.interior_of(&st.g, nvel),
+                }))?;
+            }
+            Command::GatherPhi => {
+                // fresh phi from the current g, interior only (st.phi is
+                // a per-step scratch, so overwriting it cannot perturb
+                // the next Advance)
+                for r in &interior {
+                    phi_from_g_range(vs, &st.g, &mut st.phi, ln, r.clone(),
+                                     &pool, cfg.vvl);
+                }
+                rank.send_response(&Frame::Interior(InteriorMsg {
+                    src: d.rank as u32,
+                    field: InteriorField::Phi,
+                    data: d.interior_of(&st.phi, 1),
+                }))?;
+            }
+            Command::Shutdown => {
+                let wall = t0.elapsed().as_secs_f64();
+                let report = ReportMsg {
+                    src: d.rank as u32,
+                    interior_sites: d.interior_sites() as u64,
+                    steps: step,
+                    compute_s: (wall - rank.wait_s - rank.idle_s).max(0.0),
+                    wait_s: rank.wait_s,
+                    idle_s: rank.idle_s,
+                    bytes_sent: rank.bytes_sent,
+                    msgs_sent: rank.msgs_sent,
+                };
+                rank.send_response(&Frame::Report(report))?;
+                return Ok(());
+            }
+        }
+    }
+}
+
+/// One binary-fluid LB timestep on this rank's grid box.
+///
+/// Schedule (overlapped mode; bulk-sync completes the whole staged
+/// exchange before each compute block instead):
+///
+/// ```text
+/// isend g faces, first axis        — moments stage 1    (MPI_Isend x2)
+/// phi   interior; grad + collide deep box               ┐ overlapped
+///                                                       ┘ with flight
+/// wait  stage 1; then per later axis: isend + wait      (staged x→y→z)
+/// phi   halo faces; grad + collide the interior shell
+/// isend f,g faces, first axis      — stream stage 1     (MPI_Isend x4)
+/// stream deep box destinations                          ─ overlapped
+/// wait  stage 1; then per later axis: isend + wait
+/// stream shell destinations; swap double buffers
+/// ```
+///
+/// Stages are strictly serialized (wait axis a before packing axis
+/// a + 1): a later face spans the earlier axes' freshly filled halos,
+/// which is what carries edge/corner data without diagonal messages.
+/// Every per-site update is position-independent, so the partitions
+/// produce bitwise the values of the bulk schedule, the slab world, and
+/// a single-domain sweep.
+#[allow(clippy::too_many_arguments)]
+fn step_rank_grid(d: &CartSubDomain, vs: &VelSet, p: &FeParams,
+                  table: &StreamTable, plans: &[AxisPlan],
+                  interior: &[Range<usize>], deep: &[Range<usize>],
+                  st: &mut RankState, rank: &mut Rank, step: u64,
+                  cfg: &CommsConfig, pool: &TlpPool) -> Result<()> {
+    let (vvl, scalar) = (cfg.vvl, cfg.scalar);
+    let local = &d.local;
+    let ln = local.nsites();
+    let nvel = vs.nvel;
+    let (first, rest) =
+        plans.split_first().expect("grid rank has a decomposed axis");
+
+    // ---- exchange 1: post-stream g faces (moments halo), staged ----
+    isend_faces(rank, &st.g, FieldId::G, Phase::Moments, step, nvel,
+                local, first, &mut st.send_buf)?;
+    if cfg.overlap {
+        // the interior needs no halo for phi, the deep box none for the
+        // gradient — compute both while stage 1 is in flight; collide
+        // mutates only deep sites, which no face plane intersects, so
+        // the later stages still pack pre-collision g
+        for r in interior {
+            phi_from_g_range(vs, &st.g, &mut st.phi, ln, r.clone(), pool,
+                             vvl);
+        }
+        for r in deep {
+            gradient_fd_range(local, &st.phi, &mut st.grad, &mut st.lap,
+                              r.clone(), pool, vvl);
+        }
+        for r in deep {
+            collide_lattice_range(vs, p, &mut st.f, &mut st.g, &st.grad,
+                                  &st.lap, ln, r.clone(), pool, vvl,
+                                  scalar);
+        }
+    }
+    wait_faces(rank, &mut st.g, FieldId::G, Phase::Moments, step, nvel,
+               local, first)?;
+    for plan in rest {
+        isend_faces(rank, &st.g, FieldId::G, Phase::Moments, step, nvel,
+                    local, plan, &mut st.send_buf)?;
+        wait_faces(rank, &mut st.g, FieldId::G, Phase::Moments, step,
+                   nvel, local, plan)?;
+    }
+    if cfg.overlap {
+        // complete the moments on the freshly filled halos: phi on the
+        // halo faces, then the gradient + collision over the shell — the
+        // shell slices union with the deep box to exactly the interior,
+        // each site collided once
+        for plan in plans {
+            for r in &plan.halo_runs {
+                phi_from_g_range(vs, &st.g, &mut st.phi, ln, r.clone(),
+                                 pool, vvl);
+            }
+        }
+        for plan in plans {
+            for r in &plan.shell_runs {
+                gradient_fd_range(local, &st.phi, &mut st.grad,
+                                  &mut st.lap, r.clone(), pool, vvl);
+            }
+            for r in &plan.shell_runs {
+                collide_lattice_range(vs, p, &mut st.f, &mut st.g,
+                                      &st.grad, &st.lap, ln, r.clone(),
+                                      pool, vvl, scalar);
+            }
+        }
+    } else {
+        // bulk-sync: halos are all fresh — one full-array phi sweep,
+        // then the whole interior in one pass
+        phi_from_g_range(vs, &st.g, &mut st.phi, ln, 0..ln, pool, vvl);
+        for r in interior {
+            gradient_fd_range(local, &st.phi, &mut st.grad, &mut st.lap,
+                              r.clone(), pool, vvl);
+        }
+        for r in interior {
+            collide_lattice_range(vs, p, &mut st.f, &mut st.g, &st.grad,
+                                  &st.lap, ln, r.clone(), pool, vvl,
+                                  scalar);
+        }
+    }
+
+    // ---- exchange 2: post-collision f,g faces (stream halo), staged ----
+    isend_faces(rank, &st.f, FieldId::F, Phase::Stream, step, nvel, local,
+                first, &mut st.send_buf)?;
+    isend_faces(rank, &st.g, FieldId::G, Phase::Stream, step, nvel, local,
+                first, &mut st.send_buf)?;
+    if cfg.overlap {
+        // deep destinations pull only interior sources (streaming writes
+        // the _tmp buffers, so the in-flight packs stay untouched)
+        for r in deep {
+            stream_range(vs, table, &st.f, &mut st.f_tmp, r.clone(), pool,
+                         vvl);
+        }
+        for r in deep {
+            stream_range(vs, table, &st.g, &mut st.g_tmp, r.clone(), pool,
+                         vvl);
+        }
+    }
+    wait_faces(rank, &mut st.f, FieldId::F, Phase::Stream, step, nvel,
+               local, first)?;
+    wait_faces(rank, &mut st.g, FieldId::G, Phase::Stream, step, nvel,
+               local, first)?;
+    for plan in rest {
+        isend_faces(rank, &st.f, FieldId::F, Phase::Stream, step, nvel,
+                    local, plan, &mut st.send_buf)?;
+        isend_faces(rank, &st.g, FieldId::G, Phase::Stream, step, nvel,
+                    local, plan, &mut st.send_buf)?;
+        wait_faces(rank, &mut st.f, FieldId::F, Phase::Stream, step, nvel,
+                   local, plan)?;
+        wait_faces(rank, &mut st.g, FieldId::G, Phase::Stream, step, nvel,
+                   local, plan)?;
+    }
+    if cfg.overlap {
+        for plan in plans {
+            for r in &plan.shell_runs {
+                stream_range(vs, table, &st.f, &mut st.f_tmp, r.clone(),
+                             pool, vvl);
+            }
+            for r in &plan.shell_runs {
+                stream_range(vs, table, &st.g, &mut st.g_tmp, r.clone(),
+                             pool, vvl);
+            }
+        }
+    } else {
+        for r in interior {
+            stream_range(vs, table, &st.f, &mut st.f_tmp, r.clone(), pool,
+                         vvl);
+        }
+        for r in interior {
+            stream_range(vs, table, &st.g, &mut st.g_tmp, r.clone(), pool,
+                         vvl);
+        }
+    }
+    std::mem::swap(&mut st.f, &mut st.f_tmp);
+    std::mem::swap(&mut st.g, &mut st.g_tmp);
+    Ok(())
+}
+
+/// Exact partial observable sums over a grid rank's interior box — the
+/// grid analog of [`rank_partials`]: the deterministic reduce kernels
+/// run per interior run (runs visited in a fixed order, so the combined
+/// sums are reproducible at any thread count).
+fn grid_partials(d: &CartSubDomain, vs: &VelSet, st: &mut RankState,
+                 interior: &[Range<usize>], pool: &TlpPool,
+                 cfg: &CommsConfig, step: u64) -> PartialObs {
+    let ln = d.local.nsites();
+    let vvl = cfg.vvl;
+    let mut fsum = vec![0.0; vs.nvel];
+    let mut gsum = vec![0.0; vs.nvel];
+    let mut scratch = vec![0.0; vs.nvel];
+    let mut phi_sq = 0.0;
+    for r in interior {
+        reduce_sum_range(&st.f, vs.nvel, ln, r.clone(), pool, vvl,
+                         &mut scratch);
+        for (acc, s) in fsum.iter_mut().zip(&scratch) {
+            *acc += s;
+        }
+        reduce_sum_range(&st.g, vs.nvel, ln, r.clone(), pool, vvl,
+                         &mut scratch);
+        for (acc, s) in gsum.iter_mut().zip(&scratch) {
+            *acc += s;
+        }
+        // phi is a per-step scratch — safe to recompute from post-step g
+        phi_from_g_range(vs, &st.g, &mut st.phi, ln, r.clone(), pool, vvl);
+        phi_sq += reduce_sum_sq_range(&st.phi, ln, r.clone(), pool, vvl);
+    }
+    let mass: f64 = fsum.iter().sum();
+    let mut momentum = [0.0f64; 3];
+    for (i, fi) in fsum.iter().enumerate() {
+        for (m, c) in momentum.iter_mut().zip(&vs.cv[i]) {
+            *m += c * fi;
+        }
+    }
+    let phi_total: f64 = gsum.iter().sum();
+    PartialObs {
+        src: d.rank as u32,
+        steps: step,
+        sites: d.interior_sites() as u64,
         mass,
         momentum,
         phi_total,
@@ -1483,6 +2020,7 @@ fn step_rank(d: &SubDomain, vs: &VelSet, p: &FeParams, table: &StreamTable,
         phase,
         field,
         side,
+        axis: Axis::X,
     };
 
     // ---- exchange 1: post-stream g edge planes (moments halo) ----
@@ -1919,5 +2457,149 @@ mod tests {
             .unwrap();
         session.advance(2).unwrap();
         drop(session); // must broadcast Shutdown and join, not hang
+    }
+
+    #[test]
+    fn grid_worlds_match_single_domain_bitwise() {
+        // uneven extents on every axis; pencil + block grids, both
+        // schedules — all must reproduce the reference bits
+        let vs = d3q19();
+        let geom = Geometry::new(7, 6, 5);
+        let steps = 3;
+        let (f_want, g_want) = reference(vs, &geom, steps);
+        for grid in [[1, 2, 1], [1, 2, 2], [2, 2, 1], [2, 2, 2]] {
+            let ranks = grid.iter().product();
+            for overlap in [false, true] {
+                let (mut f, mut g) = spinodal(vs, &geom);
+                let cfg = CommsConfig { ranks, grid, overlap,
+                                        ..CommsConfig::default() };
+                let rep = run_decomposed(&geom, vs, &FeParams::default(),
+                                         &mut f, &mut g, steps, &cfg)
+                    .unwrap();
+                assert_eq!(rep.ranks.len(), ranks);
+                assert_eq!(f, f_want, "grid={grid:?} overlap={overlap}");
+                assert_eq!(g, g_want, "grid={grid:?} overlap={overlap}");
+            }
+        }
+    }
+
+    #[test]
+    fn d2q9_grid_worlds_match_single_domain_bitwise() {
+        // lz == 1: z stays undecomposed, y faces exercise the strided
+        // pack; one-plane y boxes (ly=6 over py=3 is fine, py=6 makes
+        // single-plane extents)
+        let vs = d2q9();
+        let geom = Geometry::new(5, 6, 1);
+        let steps = 3;
+        let (f_want, g_want) = reference(vs, &geom, steps);
+        for grid in [[1, 2, 1], [2, 2, 1], [1, 6, 1]] {
+            let ranks = grid.iter().product();
+            for overlap in [false, true] {
+                let (mut f, mut g) = spinodal(vs, &geom);
+                let cfg = CommsConfig { ranks, grid, overlap,
+                                        ..CommsConfig::default() };
+                run_decomposed(&geom, vs, &FeParams::default(), &mut f,
+                               &mut g, steps, &cfg)
+                    .unwrap();
+                assert_eq!(f, f_want, "grid={grid:?} overlap={overlap}");
+                assert_eq!(g, g_want, "grid={grid:?} overlap={overlap}");
+            }
+        }
+    }
+
+    #[test]
+    fn grid_observables_and_phi_match_gathered_state() {
+        let vs = d3q19();
+        let geom = Geometry::new(6, 6, 4);
+        let n = geom.nsites();
+        let world = CommsWorld::new(geom, CommsConfig {
+            ranks: 4,
+            grid: [1, 2, 2],
+            ..CommsConfig::default()
+        })
+        .unwrap();
+        let (f0, g0) = spinodal(vs, &geom);
+        let mut session = world
+            .session(vs, &FeParams::default(), f0, g0)
+            .unwrap();
+        session.advance(2).unwrap();
+        let got = session.observables().unwrap();
+        let phi = session.gather_phi().unwrap();
+        let mut f = vec![0.0; vs.nvel * n];
+        let mut g = vec![0.0; vs.nvel * n];
+        session.gather(&mut f, &mut g).unwrap();
+        session.finish().unwrap();
+        let want = state_observables(vs, &f, &g, n);
+        let close = |a: f64, b: f64, what: &str| {
+            assert!((a - b).abs() <= 1e-12 + 1e-9 * b.abs(),
+                    "{what}: {a} vs {b}");
+        };
+        close(got.mass, want.mass, "mass");
+        close(got.phi_total, want.phi_total, "phi_total");
+        close(got.phi_variance, want.phi_variance, "phi_variance");
+        let mut phi_want = vec![0.0; n];
+        crate::lb::moments::phi_from_g(vs, &g, &mut phi_want, n,
+                                       &TlpPool::serial(), 8);
+        assert_eq!(phi, phi_want, "gathered phi is bit-exact");
+    }
+
+    #[test]
+    fn grid_sends_six_messages_per_decomposed_axis_per_step() {
+        let vs = d3q19();
+        let geom = Geometry::new(6, 6, 4);
+        let steps = 4u64;
+        for (grid, naxes) in
+            [([1, 2, 1], 1u64), ([2, 2, 1], 2), ([2, 2, 2], 3)]
+        {
+            let ranks = grid.iter().product();
+            let (mut f, mut g) = spinodal(vs, &geom);
+            let cfg = CommsConfig { ranks, grid,
+                                    ..CommsConfig::default() };
+            let rep = run_decomposed(&geom, vs, &FeParams::default(),
+                                     &mut f, &mut g, steps, &cfg)
+                .unwrap();
+            for r in &rep.ranks {
+                // 2 moments + 4 stream faces per decomposed axis
+                assert_eq!(r.msgs_sent, 6 * naxes * steps,
+                           "grid={grid:?}");
+                assert!(r.bytes_sent > 0);
+            }
+        }
+    }
+
+    #[test]
+    fn grid_world_rejects_bad_configs() {
+        let geom = Geometry::new(8, 8, 8);
+        // grid product must match the rank count
+        assert!(CommsWorld::new(geom, CommsConfig {
+            ranks: 4,
+            grid: [2, 2, 2],
+            ..CommsConfig::default()
+        })
+        .is_err());
+        // an unsplittable axis is named in the error
+        let err = CommsWorld::new(Geometry::new(8, 1, 1), CommsConfig {
+            ranks: 2,
+            grid: [1, 2, 1],
+            ..CommsConfig::default()
+        })
+        .unwrap_err();
+        assert!(err.to_string().contains("y axis"), "{err}");
+        // super-steps are slab-only
+        assert!(CommsWorld::new(geom, CommsConfig {
+            ranks: 4,
+            grid: [1, 2, 2],
+            depth: 2,
+            ..CommsConfig::default()
+        })
+        .is_err());
+        // the slab special case still accepts super-steps
+        assert!(CommsWorld::new(geom, CommsConfig {
+            ranks: 2,
+            grid: [2, 1, 1],
+            depth: 2,
+            ..CommsConfig::default()
+        })
+        .is_ok());
     }
 }

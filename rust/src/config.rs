@@ -119,6 +119,13 @@ pub struct TargetCfg {
     /// on each host). Empty (default) = spawn the rank processes locally
     /// on an ephemeral loopback port.
     pub rank_server: String,
+    /// Rank grid for a decomposed run: `"px,py,pz"` with
+    /// `px·py·pz = ranks` splits the lattice over a 3D Cartesian grid
+    /// (each rank exchanges axis-tagged faces with its 6 neighbours).
+    /// Empty (default) = auto: the factorisation of `ranks` that
+    /// minimises halo surface — unless `comms_depth > 1`, whose
+    /// x-blocked trapezoid recurrence needs the slab grid `(ranks,1,1)`.
+    pub grid: String,
 }
 
 impl Default for TargetCfg {
@@ -139,6 +146,7 @@ impl Default for TargetCfg {
             observables: "reduced".into(),
             transport: "channel".into(),
             rank_server: String::new(),
+            grid: String::new(),
         }
     }
 }
@@ -202,6 +210,7 @@ impl Config {
             observables: tgt.str_or("observables", &dt.observables)?,
             transport: tgt.str_or("transport", &dt.transport)?,
             rank_server: tgt.str_or("rank_server", &dt.rank_server)?,
+            grid: tgt.str_or("grid", &dt.grid)?,
         };
 
         let fe = Section::of(&doc, "free_energy");
@@ -280,6 +289,7 @@ impl Config {
              comms_depth = {}\npin_threads = {}\n\
              observables = \"{}\"\n\
              transport = \"{}\"\nrank_server = \"{}\"\n\
+             grid = \"{}\"\n\
              \n[free_energy]\n\
              a = {:?}\nb = {:?}\nkappa = {:?}\ngamma = {:?}\n\
              tau_f = {:?}\ntau_g = {:?}\n\
@@ -289,7 +299,7 @@ impl Config {
             s.radius, t.backend, t.vvl, t.threads, t.schedule, t.batch,
             t.fusion, t.multi_step, t.xla_vvl_block, t.ranks, t.overlap,
             t.comms_depth, t.pin_threads,
-            t.observables, t.transport, t.rank_server, fe.a, fe.b,
+            t.observables, t.transport, t.rank_server, t.grid, fe.a, fe.b,
             fe.kappa, fe.gamma, fe.tau_f, fe.tau_g, o.every, o.dir, o.vtk,
         )
     }
@@ -306,38 +316,94 @@ impl Config {
         }
     }
 
+    /// The rank grid for a decomposed run, resolved from the `grid`
+    /// knob. Explicit `"px,py,pz"` is validated against `ranks`; empty
+    /// (auto) picks the slab grid when the resolved super-step `depth`
+    /// demands it and the minimal-halo-surface factorisation
+    /// ([`crate::lattice::decomp::CartDecomposition::auto_grid`])
+    /// otherwise. Deterministic: socket rank processes parse the same
+    /// shipped TOML and resolve the same grid as the driver.
+    pub fn comms_grid(&self, depth: usize) -> Result<[usize; 3]> {
+        let ranks = self.target.ranks;
+        let spec = self.target.grid.trim();
+        if spec.is_empty() {
+            if depth > 1 {
+                // the trapezoid recurrence is x-blocked: slab only
+                return Ok([ranks, 1, 1]);
+            }
+            return Ok(crate::lattice::decomp::CartDecomposition::auto_grid(
+                &self.geometry(),
+                ranks,
+            ));
+        }
+        let parts: Vec<usize> = spec
+            .split(',')
+            .map(|p| p.trim().parse::<usize>())
+            .collect::<std::result::Result<_, _>>()
+            .map_err(|_| {
+                Error::Parse(format!(
+                    "grid {spec:?} is not \"px,py,pz\" (three positive \
+                     integers)"
+                ))
+            })?;
+        if parts.len() != 3 || parts.contains(&0) {
+            return Err(Error::Parse(format!(
+                "grid {spec:?} is not \"px,py,pz\" (three positive \
+                 integers)"
+            )));
+        }
+        let grid = [parts[0], parts[1], parts[2]];
+        if grid.iter().product::<usize>() != ranks {
+            return Err(Error::Parse(format!(
+                "grid {}x{}x{} needs {} ranks, but ranks = {ranks}",
+                grid[0],
+                grid[1],
+                grid[2],
+                grid.iter().product::<usize>(),
+            )));
+        }
+        Ok(grid)
+    }
+
     /// Comms-layer knobs for a decomposed (`ranks > 1`) run. The rank
     /// world drives the host kernels directly, so the backend must be a
     /// host one; `threads` is handed over as the total TLP budget the
     /// ranks share. `comms_depth = 0` (auto) is resolved **here**, by the
     /// deterministic [`crate::targetdp::host::comms_depth_plan`] cache
     /// heuristic — the driver and every socket rank process parse the
-    /// same shipped TOML, so all of them resolve the same depth.
+    /// same shipped TOML, so all of them resolve the same depth. The
+    /// rank grid is resolved after it ([`Config::comms_grid`]): a
+    /// super-step depth > 1 pins the auto grid to the slab.
     pub fn comms_config(&self) -> Result<crate::comms::CommsConfig> {
         use crate::targetdp::host::{comms_depth_plan,
                                     MULTI_STEP_CACHE_BYTES};
         match self.target.backend.as_str() {
-            "host-simd" | "host-scalar" => Ok(crate::comms::CommsConfig {
-                ranks: self.target.ranks,
-                overlap: self.target.overlap,
-                threads: self.target.threads,
-                vvl: self.target.vvl,
-                scalar: self.target.backend == "host-scalar",
-                schedule: match self.target.schedule.as_str() {
-                    "dynamic" => Schedule::Dynamic {
-                        batch: self.target.batch,
-                    },
-                    _ => Schedule::Static,
-                },
-                depth: if self.target.comms_depth == 0 {
+            "host-simd" | "host-scalar" => {
+                let depth = if self.target.comms_depth == 0 {
                     comms_depth_plan(&self.geometry(), self.model()?,
                                      self.target.ranks,
                                      MULTI_STEP_CACHE_BYTES)
                 } else {
                     self.target.comms_depth as usize
-                },
-                pin: self.target.pin_threads,
-            }),
+                };
+                let grid = self.comms_grid(depth)?;
+                Ok(crate::comms::CommsConfig {
+                    ranks: self.target.ranks,
+                    overlap: self.target.overlap,
+                    threads: self.target.threads,
+                    vvl: self.target.vvl,
+                    scalar: self.target.backend == "host-scalar",
+                    schedule: match self.target.schedule.as_str() {
+                        "dynamic" => Schedule::Dynamic {
+                            batch: self.target.batch,
+                        },
+                        _ => Schedule::Static,
+                    },
+                    depth,
+                    grid,
+                    pin: self.target.pin_threads,
+                })
+            }
             other => Err(Error::Parse(format!(
                 "ranks > 1 needs a host backend (the comms ranks run the \
                  host kernels), got {other:?}"
@@ -568,6 +634,48 @@ mod tests {
     }
 
     #[test]
+    fn grid_knob_parses_autosizes_and_rejects() {
+        let cfg = Config::from_toml_str(SAMPLE).unwrap();
+        assert_eq!(cfg.target.grid, "", "auto grid is the default");
+
+        // explicit grid reaches the comms config, product-checked
+        let cfg = Config::from_toml_str(
+            "[simulation]\nlattice = \"d3q19\"\nlx = 16\nly = 16\n\
+             lz = 16\nsteps = 5\n\n[target]\nranks = 4\n\
+             grid = \"2,2,1\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.comms_config().unwrap().grid, [2, 2, 1]);
+
+        // auto follows the surface-minimizing factorisation
+        let mut auto = cfg.clone();
+        auto.target.grid = String::new();
+        let want = crate::lattice::decomp::CartDecomposition::auto_grid(
+            &auto.geometry(),
+            auto.target.ranks,
+        );
+        assert_eq!(auto.comms_config().unwrap().grid, want);
+
+        // auto + super-step depth > 1: pinned to the slab (the
+        // trapezoid recurrence is x-blocked)
+        let mut deep = auto.clone();
+        deep.target.comms_depth = 2;
+        assert_eq!(deep.comms_config().unwrap().grid, [4, 1, 1]);
+
+        // product mismatch and malformed specs are config errors
+        let mut bad = cfg.clone();
+        bad.target.grid = "2,2,2".into();
+        let err = bad.comms_config().unwrap_err();
+        assert!(err.to_string().contains("8 ranks"), "{err}");
+        bad.target.grid = "2,2".into();
+        assert!(bad.comms_config().is_err());
+        bad.target.grid = "2,0,2".into();
+        assert!(bad.comms_config().is_err());
+        bad.target.grid = "a,b,c".into();
+        assert!(bad.comms_config().is_err());
+    }
+
+    #[test]
     fn observables_knob_parses_and_rejects() {
         let cfg = Config::from_toml_str(SAMPLE).unwrap();
         assert_eq!(cfg.target.observables, "reduced",
@@ -625,6 +733,7 @@ mod tests {
         cfg.target.multi_step = 4;
         cfg.target.comms_depth = 2;
         cfg.target.pin_threads = true;
+        cfg.target.grid = "3,1,1".into();
         cfg.free_energy.kappa = 1.0 / 3.0; // not exactly representable
         cfg.output.every = 7;
         cfg.output.dir = "out/run1".into();
@@ -654,6 +763,7 @@ mod tests {
         assert_eq!(back.target.observables, cfg.target.observables);
         assert_eq!(back.target.transport, cfg.target.transport);
         assert_eq!(back.target.rank_server, cfg.target.rank_server);
+        assert_eq!(back.target.grid, cfg.target.grid);
         assert_eq!(back.free_energy.kappa.to_bits(),
                    cfg.free_energy.kappa.to_bits());
         assert_eq!(back.free_energy, cfg.free_energy);

@@ -101,8 +101,9 @@ fn block_size(cfg: &Config) -> u64 {
 
 /// Run a full simulation according to `cfg`, logging to stdout.
 /// `ranks > 1` (or `transport = "socket"`) routes through the comms
-/// subsystem — concurrent slab ranks with overlapped halo exchange, as
-/// threads or as OS processes — instead of a single engine.
+/// subsystem — concurrent ranks on a Cartesian grid with overlapped
+/// halo exchange, as threads or as OS processes — instead of a single
+/// engine.
 pub fn run_simulation(cfg: &Config) -> Result<RunSummary> {
     let transport = cfg.transport_mode()?;
     if cfg.target.ranks > 1 || transport == TransportMode::Socket {
@@ -222,8 +223,16 @@ fn run_decomposed_simulation(cfg: &Config, transport: TransportMode)
     let mode = cfg.observables_mode()?;
     let world = CommsWorld::new(geom, ccfg.clone())?;
     let target_desc = format!(
-        "comms(ranks={},{},{},{},vvl={},threads={},depth={}{})",
+        "comms(ranks={}{},{},{},{},vvl={},threads={},depth={}{})",
         ccfg.ranks,
+        // the slab grid is the default shape — only a real 3D grid is
+        // worth a tag in the target line
+        if world.dec.is_slab() {
+            String::new()
+        } else {
+            format!(",grid={}x{}x{}", world.dec.grid[0],
+                    world.dec.grid[1], world.dec.grid[2])
+        },
         match transport {
             TransportMode::Channel => "channel",
             TransportMode::Socket => "socket",
@@ -247,8 +256,13 @@ fn run_decomposed_simulation(cfg: &Config, transport: TransportMode)
                  ObservablesMode::Gather => "gathered-state",
              });
     for d in &world.dec.domains {
-        println!("rank {:>4}: x = [{}, {}) ({} planes)", d.rank, d.x0,
-                 d.x0 + d.lxl, d.lxl);
+        println!(
+            "rank {:>4}: cell ({},{},{})  x = [{}, {})  y = [{}, {})  \
+             z = [{}, {})  ({} sites)",
+            d.rank, d.coords[0], d.coords[1], d.coords[2], d.origin[0],
+            d.origin[0] + d.ext[0], d.origin[1], d.origin[1] + d.ext[1],
+            d.origin[2], d.origin[2] + d.ext[2], d.interior_sites(),
+        );
     }
 
     let (f0, g0) = initial_state(cfg, &geom);
@@ -399,7 +413,7 @@ fn run_decomposed_simulation(cfg: &Config, transport: TransportMode)
 /// HOST:PORT [--rank R]`): rendezvous with the driver's rank server,
 /// rebuild the identical run from the config shipped in the `Welcome`
 /// payload, recompute the deterministic initial state locally, and serve
-/// this rank's slab until the driver's `Shutdown`.
+/// this rank's subdomain until the driver's `Shutdown`.
 ///
 /// The process is silent on success — all run logging belongs to the
 /// driver; errors surface through the exit code, which the driver's
@@ -422,7 +436,7 @@ pub fn run_rank_process(server: &str, want_rank: Option<usize>)
     let world = CommsWorld::new(geom, ccfg.clone())?;
     let d = world.dec.domains.get(rank).cloned().ok_or_else(|| {
         Error::Invalid(format!(
-            "comms launcher: assigned rank {rank}, world has {} slabs",
+            "comms launcher: assigned rank {rank}, world has {} domains",
             world.dec.domains.len()
         ))
     })?;
@@ -552,6 +566,38 @@ mod tests {
         assert!(close(reduced.r#final.phi_variance,
                       multi.r#final.phi_variance));
         assert!(reduced.mass_drift() < 1e-9);
+    }
+
+    #[test]
+    fn grid_run_matches_single_engine_run_and_tags_target() {
+        let mk = |ranks: usize, grid: &str| {
+            let mut cfg = Config {
+                simulation: crate::config::SimulationCfg {
+                    lattice: "d2q9".into(),
+                    lx: 8,
+                    ly: 7, // uneven over the 2-way y split
+                    lz: 1,
+                    steps: 5,
+                    init: "spinodal".into(),
+                    noise: 0.05,
+                    seed: 7,
+                    radius: 4.0,
+                },
+                target: Default::default(),
+                free_energy: Default::default(),
+                output: Default::default(),
+            };
+            cfg.target.ranks = ranks;
+            cfg.target.grid = grid.into();
+            cfg.target.observables = "gather".into();
+            run_simulation(&cfg).unwrap()
+        };
+        let single = mk(1, "");
+        let grid = mk(2, "1,2,1");
+        // the grid world is tagged in the target line and changes no bits
+        assert!(grid.target.contains("grid=1x2x1"), "{}", grid.target);
+        assert_eq!(single.r#final.phi_variance, grid.r#final.phi_variance);
+        assert_eq!(single.r#final.mass, grid.r#final.mass);
     }
 
     #[test]

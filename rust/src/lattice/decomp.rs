@@ -1,19 +1,33 @@
-//! Slab domain decomposition: the partitioning layer under the
-//! rank-parallel [`crate::comms`] subsystem.
+//! Domain decomposition: the partitioning layer under the rank-parallel
+//! [`crate::comms`] subsystem.
 //!
 //! The paper's framework is explicitly designed to combine with node-level
 //! parallelism ("targetDP may be used in conjunction with ... MPI"). This
-//! module owns the *geometry* of that level — the slab decomposition
-//! Ludwig uses along the x axis: each subdomain holds `lxl` interior
-//! planes plus one halo plane on each side. Everything that *moves* data
-//! between subdomains (halo exchange, overlap with compute, transports)
-//! lives in [`crate::comms`], which runs one concurrent rank per
-//! subdomain; this module only answers "which global sites does rank r
-//! own, and where do they sit in its local lattice".
+//! module owns the *geometry* of that level, in two tiers:
+//!
+//! * [`SlabDecomposition`] / [`SubDomain`] — the x-slab split Ludwig
+//!   historically used: each subdomain holds `lxl` interior planes plus
+//!   one (or, for super-steps, `k`) halo plane per side. The slab layout
+//!   keeps every exchanged plane a contiguous slice copy.
+//! * [`CartDecomposition`] / [`CartSubDomain`] — the general 3D Cartesian
+//!   `(px, py, pz)` rank grid (Ludwig's production MPI decomposition):
+//!   halo *surface* scales with the local surface-to-volume ratio instead
+//!   of growing linearly with rank count. A slab grid `(p, 1, 1)` is the
+//!   exact special case ([`CartSubDomain::to_slab`]), so every slab code
+//!   path keeps its meaning. [`CartDecomposition::auto_grid`] picks the
+//!   surface-minimizing factorization when only a rank count is given.
+//!
+//! Everything that *moves* data between subdomains (halo exchange,
+//! overlap with compute, transports) lives in [`crate::comms`], which
+//! runs one concurrent rank per subdomain; this module only answers
+//! "which global sites does rank r own, and where do they sit in its
+//! local lattice".
 //!
 //! With z fastest in memory, an x plane is a contiguous `ly * lz` block
-//! per SoA component, so scatters/gathers and halo-plane packing are pure
-//! slice copies (see `halo::pack_x_plane`).
+//! per SoA component, so slab scatters/gathers and x-halo packing are
+//! pure slice copies (see `halo::pack_x_plane`); y/z faces are strided
+//! (see `halo::pack_face`) and grid-interior traversal happens over the
+//! run list of [`box_runs`].
 
 use crate::error::{Error, Result};
 use crate::lattice::geometry::Geometry;
@@ -202,6 +216,363 @@ impl SlabDecomposition {
     }
 }
 
+/// Axis names for decomposition error messages ("x", "y", "z").
+pub const AXIS_NAMES: [&str; 3] = ["x", "y", "z"];
+
+/// Linear site ranges covering the axis-aligned box `lo..hi` (half-open
+/// per axis) of `geom`, in x-major / y / z-ascending order — the
+/// traversal order every packed payload in this module uses. Collapses
+/// to the fewest contiguous runs the layout allows: one run when the box
+/// spans full y and z (a slab of x planes), per-x runs when it spans
+/// full z, per-(x, y) z-rows otherwise. Empty when the box is.
+pub fn box_runs(geom: &Geometry, lo: [usize; 3], hi: [usize; 3])
+                -> Vec<std::ops::Range<usize>> {
+    debug_assert!(hi[0] <= geom.lx && hi[1] <= geom.ly && hi[2] <= geom.lz);
+    if (0..3).any(|a| lo[a] >= hi[a]) {
+        return Vec::new();
+    }
+    let full_y = lo[1] == 0 && hi[1] == geom.ly;
+    let full_z = lo[2] == 0 && hi[2] == geom.lz;
+    if full_y && full_z {
+        let plane = geom.ly * geom.lz;
+        return vec![lo[0] * plane..hi[0] * plane];
+    }
+    let mut runs = Vec::new();
+    if full_z {
+        for x in lo[0]..hi[0] {
+            let s = geom.index(x, lo[1], 0);
+            runs.push(s..s + (hi[1] - lo[1]) * geom.lz);
+        }
+    } else {
+        for x in lo[0]..hi[0] {
+            for y in lo[1]..hi[1] {
+                let s = geom.index(x, y, lo[2]);
+                runs.push(s..s + hi[2] - lo[2]);
+            }
+        }
+    }
+    runs
+}
+
+/// One subdomain of a 3D Cartesian rank grid: an `ext[0] x ext[1] x
+/// ext[2]` interior box plus `halo[a]` ghost planes per side on every
+/// *decomposed* axis (`grid[a] > 1`); non-decomposed axes keep the full
+/// global extent so local periodic wraps along them stay physical.
+///
+/// Carries its own `grid` and `global` so neighbour ranks and global
+/// placement are computable without the parent [`CartDecomposition`] —
+/// this is what ships to a rank process.
+#[derive(Debug, Clone)]
+pub struct CartSubDomain {
+    pub rank: usize,
+    /// Position in the rank grid: `coords[a] in 0..grid[a]`.
+    pub coords: [usize; 3],
+    /// Global coordinate of the first interior site, per axis.
+    pub origin: [usize; 3],
+    /// Interior extent per axis.
+    pub ext: [usize; 3],
+    /// Ghost planes per side per axis (0 on non-decomposed axes; the
+    /// slab special case reports `[1, 0, 0]` and the slab code path
+    /// substitutes its own super-step depth).
+    pub halo: [usize; 3],
+    /// Rank-grid shape `(px, py, pz)`.
+    pub grid: [usize; 3],
+    /// The global lattice being decomposed.
+    pub global: Geometry,
+    /// Local geometry *including* halos.
+    pub local: Geometry,
+}
+
+impl CartSubDomain {
+    /// Rank id of grid coordinates under the canonical x-slowest map
+    /// `r = (cx * py + cy) * pz + cz` — on a slab grid `(p, 1, 1)` this
+    /// is `r = cx`, so slab rank ids keep their meaning, and consecutive
+    /// ids are z-grid neighbours (what the topology-aware launcher packs
+    /// onto one host).
+    pub fn rank_of(grid: [usize; 3], coords: [usize; 3]) -> usize {
+        (coords[0] * grid[1] + coords[1]) * grid[2] + coords[2]
+    }
+
+    /// Number of interior (owned) sites.
+    pub fn interior_sites(&self) -> usize {
+        self.ext.iter().product()
+    }
+
+    /// True when the grid decomposes x only — the `(p, 1, 1)` shape the
+    /// slab code path (including depth-k super-steps) handles.
+    pub fn is_slab(&self) -> bool {
+        self.grid[1] == 1 && self.grid[2] == 1
+    }
+
+    /// The equivalent [`SubDomain`] of a slab-shaped grid.
+    pub fn to_slab(&self) -> SubDomain {
+        debug_assert!(self.is_slab());
+        SubDomain {
+            rank: self.rank,
+            x0: self.origin[0],
+            lxl: self.ext[0],
+            local: Geometry::new(self.ext[0] + 2, self.global.ly,
+                                 self.global.lz),
+        }
+    }
+
+    /// Rank id of the face neighbour along `axis` (`up`: toward larger
+    /// coordinates), periodic in the rank grid.
+    pub fn neighbor(&self, axis: usize, up: bool) -> usize {
+        let p = self.grid[axis];
+        let mut c = self.coords;
+        c[axis] = if up { (c[axis] + 1) % p } else { (c[axis] + p - 1) % p };
+        Self::rank_of(self.grid, c)
+    }
+
+    /// Sites in one face plane of `axis`, spanning the *full* local
+    /// extent (halos included) of the other two axes — the payload site
+    /// count of one face frame (see `halo::pack_face`).
+    pub fn face_sites(&self, axis: usize) -> usize {
+        let le = [self.local.lx, self.local.ly, self.local.lz];
+        (0..3).filter(|&b| b != axis).map(|b| le[b]).product()
+    }
+
+    /// Interior box bounds in local coordinates: `halo .. halo + ext`.
+    pub fn interior_box(&self) -> ([usize; 3], [usize; 3]) {
+        let lo = self.halo;
+        let hi = [lo[0] + self.ext[0], lo[1] + self.ext[1],
+                  lo[2] + self.ext[2]];
+        (lo, hi)
+    }
+
+    /// Contiguous local site runs covering the interior box (one run per
+    /// z-row in the worst case, one run total for a slab).
+    pub fn interior_runs(&self) -> Vec<std::ops::Range<usize>> {
+        let (lo, hi) = self.interior_box();
+        box_runs(&self.local, lo, hi)
+    }
+
+    /// Copy this subdomain's interior box out of a global SoA field into
+    /// `local` (halo sites untouched) — the grid analog of
+    /// [`SubDomain::scatter_into`], called by each rank on its own
+    /// thread so first-touch allocation lands where the sweeps run.
+    pub fn scatter_into(&self, global: &[f64], ncomp: usize,
+                        local: &mut [f64]) {
+        let gn = self.global.nsites();
+        let ln = self.local.nsites();
+        debug_assert_eq!(global.len(), ncomp * gn);
+        debug_assert_eq!(local.len(), ncomp * ln);
+        for c in 0..ncomp {
+            let gb = c * gn;
+            let lb = c * ln;
+            for x in 0..self.ext[0] {
+                for y in 0..self.ext[1] {
+                    let g0 = self.global.index(self.origin[0] + x,
+                                               self.origin[1] + y,
+                                               self.origin[2]);
+                    let l0 = self.local.index(self.halo[0] + x,
+                                              self.halo[1] + y,
+                                              self.halo[2]);
+                    local[lb + l0..lb + l0 + self.ext[2]].copy_from_slice(
+                        &global[gb + g0..gb + g0 + self.ext[2]],
+                    );
+                }
+            }
+        }
+    }
+
+    /// Pack the interior box of a local SoA field as one payload (halos
+    /// dropped): `ncomp * interior_sites()` doubles, component-major
+    /// then x / y / z order — bytewise identical to
+    /// [`SubDomain::interior_of`] on a slab grid, so `Gather` frames
+    /// are transport- and grid-agnostic.
+    pub fn interior_of(&self, local: &[f64], ncomp: usize) -> Vec<f64> {
+        let ln = self.local.nsites();
+        debug_assert_eq!(local.len(), ncomp * ln);
+        let mut out = Vec::with_capacity(ncomp * self.interior_sites());
+        for c in 0..ncomp {
+            let lb = c * ln;
+            for x in 0..self.ext[0] {
+                for y in 0..self.ext[1] {
+                    let l0 = self.local.index(self.halo[0] + x,
+                                              self.halo[1] + y,
+                                              self.halo[2]);
+                    out.extend_from_slice(
+                        &local[lb + l0..lb + l0 + self.ext[2]],
+                    );
+                }
+            }
+        }
+        out
+    }
+
+    /// Place a packed interior payload (the [`CartSubDomain::interior_of`]
+    /// layout) into a global SoA field at this subdomain's box — the
+    /// receiving half of a comms `Gather`.
+    pub fn place_interior(&self, interior: &[f64], ncomp: usize,
+                          global: &mut [f64]) {
+        let gn = global.len() / ncomp;
+        let il = self.interior_sites();
+        debug_assert_eq!(interior.len(), ncomp * il);
+        debug_assert_eq!(global.len(), ncomp * gn);
+        for c in 0..ncomp {
+            let gb = c * gn;
+            let mut src = c * il;
+            for x in 0..self.ext[0] {
+                for y in 0..self.ext[1] {
+                    let g0 = self.global.index(self.origin[0] + x,
+                                               self.origin[1] + y,
+                                               self.origin[2]);
+                    global[gb + g0..gb + g0 + self.ext[2]]
+                        .copy_from_slice(&interior[src..src + self.ext[2]]);
+                    src += self.ext[2];
+                }
+            }
+        }
+    }
+
+    /// Copy the interior box of a local field back into a global SoA
+    /// field — the inverse of [`CartSubDomain::scatter_into`].
+    pub fn gather_from(&self, local: &[f64], ncomp: usize,
+                       global: &mut [f64]) {
+        self.place_interior(&self.interior_of(local, ncomp), ncomp, global);
+    }
+}
+
+/// 3D Cartesian decomposition of a global periodic lattice over a
+/// `(px, py, pz)` rank grid.
+#[derive(Debug, Clone)]
+pub struct CartDecomposition {
+    pub global: Geometry,
+    pub grid: [usize; 3],
+    pub domains: Vec<CartSubDomain>,
+}
+
+impl CartDecomposition {
+    /// Split `global` over the rank grid. Every axis is validated
+    /// independently — the error names the axis that cannot be split.
+    /// Uneven extents follow the slab rule per axis: the first
+    /// `l mod p` domains get one extra plane.
+    pub fn new(global: Geometry, grid: [usize; 3]) -> Result<Self> {
+        let ext = [global.lx, global.ly, global.lz];
+        for a in 0..3 {
+            if grid[a] == 0 || ext[a] < grid[a] {
+                return Err(Error::Invalid(format!(
+                    "cannot split {axis}={l} into {p} domains along the \
+                     {axis} axis",
+                    axis = AXIS_NAMES[a],
+                    l = ext[a],
+                    p = grid[a]
+                )));
+            }
+        }
+        let slab = grid[1] == 1 && grid[2] == 1;
+        let halo = if slab {
+            [1, 0, 0]
+        } else {
+            [usize::from(grid[0] > 1), usize::from(grid[1] > 1),
+             usize::from(grid[2] > 1)]
+        };
+        let split = |a: usize, c: usize| -> (usize, usize) {
+            let (l, p) = (ext[a], grid[a]);
+            let e = l / p + usize::from(c < l % p);
+            let o = c * (l / p) + c.min(l % p);
+            (o, e)
+        };
+        let mut domains = Vec::with_capacity(grid.iter().product());
+        for cx in 0..grid[0] {
+            for cy in 0..grid[1] {
+                for cz in 0..grid[2] {
+                    let coords = [cx, cy, cz];
+                    let mut origin = [0; 3];
+                    let mut dext = [0; 3];
+                    for a in 0..3 {
+                        let (o, e) = split(a, coords[a]);
+                        origin[a] = o;
+                        dext[a] = e;
+                    }
+                    let local = Geometry::new(dext[0] + 2 * halo[0],
+                                              dext[1] + 2 * halo[1],
+                                              dext[2] + 2 * halo[2]);
+                    domains.push(CartSubDomain {
+                        rank: CartSubDomain::rank_of(grid, coords),
+                        coords,
+                        origin,
+                        ext: dext,
+                        halo,
+                        grid,
+                        global,
+                        local,
+                    });
+                }
+            }
+        }
+        domains.sort_by_key(|d| d.rank);
+        Ok(CartDecomposition { global, grid, domains })
+    }
+
+    /// True when this is the `(p, 1, 1)` slab special case.
+    pub fn is_slab(&self) -> bool {
+        self.grid[1] == 1 && self.grid[2] == 1
+    }
+
+    /// Surface-minimizing factorization of `ranks` into a `(px, py, pz)`
+    /// grid with `p_a <= l_a` per axis: minimizes the estimated halo
+    /// bytes per rank per step — for each decomposed axis, two faces
+    /// whose area is the product of the *other* axes' local extents
+    /// including their halo rows (face frames span the full halo-padded
+    /// cross-section, see `comms::world`). Ties break toward fewer
+    /// decomposed axes, then smaller `pz`, then smaller `py`, so a slab
+    /// wins whenever it is no worse — keeping thin lattices on the
+    /// contiguous (and super-step-capable) slab path.
+    pub fn auto_grid(global: &Geometry, ranks: usize) -> [usize; 3] {
+        let ext = [global.lx as f64, global.ly as f64, global.lz as f64];
+        let lim = [global.lx, global.ly, global.lz];
+        let mut best: Option<([usize; 3], (f64, usize, usize, usize))> =
+            None;
+        for px in 1..=ranks {
+            if ranks % px != 0 || px > lim[0] {
+                continue;
+            }
+            let rem = ranks / px;
+            for py in 1..=rem {
+                if rem % py != 0 || py > lim[1] {
+                    continue;
+                }
+                let pz = rem / py;
+                if pz > lim[2] {
+                    continue;
+                }
+                let grid = [px, py, pz];
+                let side = |a: usize| {
+                    ext[a] / grid[a] as f64
+                        + if grid[a] > 1 { 2.0 } else { 0.0 }
+                };
+                let mut cost = 0.0;
+                for a in 0..3 {
+                    if grid[a] > 1 {
+                        let mut face = 2.0;
+                        for b in 0..3 {
+                            if b != a {
+                                face *= side(b);
+                            }
+                        }
+                        cost += face;
+                    }
+                }
+                let naxes = grid.iter().filter(|&&p| p > 1).count();
+                let key = (cost, naxes, pz, py);
+                let better = match &best {
+                    None => true,
+                    Some((_, k)) => {
+                        key.partial_cmp(k) == Some(std::cmp::Ordering::Less)
+                    }
+                };
+                if better {
+                    best = Some((grid, key));
+                }
+            }
+        }
+        best.map_or([ranks, 1, 1], |(g, _)| g)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -294,5 +665,129 @@ mod tests {
             let plane = d.plane();
             assert_eq!(d.interior(), plane..(d.lxl + 1) * plane);
         }
+    }
+
+    #[test]
+    fn box_runs_collapse_by_layout() {
+        let g = Geometry::new(4, 3, 5);
+        // full y and z: one contiguous slab of x planes
+        assert_eq!(box_runs(&g, [1, 0, 0], [3, 3, 5]), vec![15..45]);
+        // full z only: one run per x plane
+        let runs = box_runs(&g, [0, 1, 0], [2, 3, 5]);
+        assert_eq!(runs, vec![5..15, 20..30]);
+        // partial z: one run per (x, y) row
+        let runs = box_runs(&g, [1, 1, 2], [3, 2, 4]);
+        assert_eq!(runs,
+                   vec![g.index(1, 1, 2)..g.index(1, 1, 4),
+                        g.index(2, 1, 2)..g.index(2, 1, 4)]);
+        // total coverage: runs of a box tile exactly its volume
+        let total: usize = box_runs(&g, [0, 1, 1], [4, 3, 4])
+            .iter()
+            .map(|r| r.len())
+            .sum();
+        assert_eq!(total, 4 * 2 * 3);
+        // empty boxes yield no runs
+        assert!(box_runs(&g, [2, 0, 0], [2, 3, 5]).is_empty());
+    }
+
+    #[test]
+    fn cart_slab_matches_slab_decomposition() {
+        let geom = Geometry::new(10, 4, 3);
+        let slab = SlabDecomposition::new(geom, 3).unwrap();
+        let cart = CartDecomposition::new(geom, [3, 1, 1]).unwrap();
+        assert!(cart.is_slab());
+        let field: Vec<f64> =
+            (0..2 * geom.nsites()).map(|i| i as f64 * 0.25).collect();
+        for (s, c) in slab.domains.iter().zip(&cart.domains) {
+            assert!(c.is_slab());
+            let back = c.to_slab();
+            assert_eq!((back.rank, back.x0, back.lxl), (s.rank, s.x0, s.lxl));
+            assert_eq!(back.local, s.local);
+            assert_eq!(c.halo, [1, 0, 0]);
+            assert_eq!(c.interior_sites(), s.lxl * s.plane());
+            // identical local images and identical packed payloads
+            let mut sl = vec![0.0; 2 * s.local.nsites()];
+            let mut cl = vec![0.0; 2 * c.local.nsites()];
+            s.scatter_into(&field, 2, &mut sl);
+            c.scatter_into(&field, 2, &mut cl);
+            assert_eq!(sl, cl);
+            assert_eq!(c.interior_of(&cl, 2), s.interior_of(&sl, 2));
+            // slab interior is one contiguous run
+            assert_eq!(c.interior_runs(), vec![s.interior()]);
+        }
+    }
+
+    #[test]
+    fn cart_grid_round_trips_uneven_boxes() {
+        let geom = Geometry::new(7, 6, 5);
+        let dec = CartDecomposition::new(geom, [2, 2, 2]).unwrap();
+        assert_eq!(dec.domains.len(), 8);
+        let covered: usize =
+            dec.domains.iter().map(CartSubDomain::interior_sites).sum();
+        assert_eq!(covered, geom.nsites());
+        let field: Vec<f64> =
+            (0..2 * geom.nsites()).map(|i| i as f64 * 0.5).collect();
+        let mut rebuilt = vec![0.0; field.len()];
+        for d in &dec.domains {
+            // ranks are ordered by the canonical x-slowest map
+            assert_eq!(d.rank, CartSubDomain::rank_of(d.grid, d.coords));
+            assert_eq!(d.halo, [1, 1, 1]);
+            let mut local = vec![0.0; 2 * d.local.nsites()];
+            d.scatter_into(&field, 2, &mut local);
+            let interior = d.interior_of(&local, 2);
+            assert_eq!(interior.len(), 2 * d.interior_sites());
+            d.place_interior(&interior, 2, &mut rebuilt);
+        }
+        assert_eq!(rebuilt, field);
+    }
+
+    #[test]
+    fn cart_neighbors_wrap_periodically() {
+        let dec =
+            CartDecomposition::new(Geometry::new(4, 4, 4), [2, 2, 1])
+                .unwrap();
+        // r = (cx*2 + cy)*1 + cz: rank 0 = (0,0,0), rank 3 = (1,1,0)
+        let d0 = &dec.domains[0];
+        assert_eq!(d0.neighbor(0, true), 2);
+        assert_eq!(d0.neighbor(0, false), 2); // px == 2 wraps to the same
+        assert_eq!(d0.neighbor(1, true), 1);
+        // y and z not decomposed for rank extents: z has pz == 1
+        assert_eq!(d0.halo, [1, 1, 0]);
+        assert_eq!(d0.local, Geometry::new(4, 4, 4));
+        // face sites span the full halo-padded cross-section
+        assert_eq!(d0.face_sites(0), 4 * 4);
+        assert_eq!(d0.face_sites(1), 4 * 4);
+    }
+
+    #[test]
+    fn cart_invalid_splits_name_the_axis() {
+        let geom = Geometry::new(8, 2, 4);
+        let err = CartDecomposition::new(geom, [1, 4, 1]).unwrap_err();
+        assert!(err.to_string().contains("y axis"), "{err}");
+        let err = CartDecomposition::new(geom, [1, 1, 0]).unwrap_err();
+        assert!(err.to_string().contains("z axis"), "{err}");
+        assert!(CartDecomposition::new(geom, [8, 2, 4]).is_ok());
+    }
+
+    #[test]
+    fn auto_grid_minimizes_halo_surface() {
+        // thin lattice: slab is strictly best
+        assert_eq!(CartDecomposition::auto_grid(&Geometry::new(64, 8, 8), 4),
+                   [4, 1, 1]);
+        // cube at 8 ranks: a pencil beats both slab and block once the
+        // +2 halo rows per transverse axis are charged
+        assert_eq!(CartDecomposition::auto_grid(&Geometry::new(32, 32, 32),
+                                                8),
+                   [4, 2, 1]);
+        // 2 ranks: always a slab (ties break toward fewer axes / low pz)
+        assert_eq!(CartDecomposition::auto_grid(&Geometry::new(16, 16, 16),
+                                                2),
+                   [2, 1, 1]);
+        // axis caps respected: lx = 2 is too thin to slab over 8 ranks,
+        // and too thin to be worth decomposing at all — the cheapest
+        // faces keep x whole and split the two big axes
+        assert_eq!(CartDecomposition::auto_grid(&Geometry::new(2, 32, 32),
+                                                8),
+                   [1, 4, 2]);
     }
 }

@@ -1,9 +1,13 @@
-//! Halo masks: boolean site-subsets for the paper's masked copies.
+//! Halo masks and halo-exchange pack/unpack helpers.
 //!
 //! The masked transfer API (section III-B) exists because halo exchange
 //! between MPI subdomains only needs the boundary shell of the lattice —
 //! these helpers build the standard masks, and `benches/masked_copy.rs`
 //! (E4) measures full vs masked transfer exactly as the paper motivates.
+//! The pack/unpack half serializes boundary planes into contiguous
+//! message payloads for [`crate::comms`]: contiguous x planes
+//! ([`pack_x_plane`], depth-k blocks via [`pack_x_planes`]) and the
+//! strided y/z faces of the 3D Cartesian grid ([`pack_face`]).
 
 use crate::lattice::geometry::Geometry;
 
@@ -103,6 +107,91 @@ pub fn unpack_x_planes(field: &mut [f64], ncomp: usize, nsites: usize,
     }
 }
 
+/// Sites in one face plane of `axis`: the product of the other two
+/// extents — the payload site count of [`pack_face`] / [`unpack_face`].
+pub fn face_sites(geom: &Geometry, axis: usize) -> usize {
+    match axis {
+        0 => geom.ly * geom.lz,
+        1 => geom.lx * geom.lz,
+        _ => geom.lx * geom.ly,
+    }
+}
+
+/// Pack face plane `p` of `axis` (coordinate along that axis) of an SoA
+/// field into a contiguous `ncomp * face_sites` buffer — the 3D-grid
+/// generalization of [`pack_x_plane`]. Layout: component-major, then the
+/// remaining axes in x / y / z order (so axis 0 is bytewise identical to
+/// [`pack_x_plane`]). With z fastest, an x face is one contiguous slice
+/// per component, a y face is `lx` runs of `lz`, and a z face gathers
+/// `lx * ly` strided singletons.
+pub fn pack_face(field: &[f64], ncomp: usize, geom: &Geometry,
+                 axis: usize, p: usize, out: &mut [f64]) {
+    let n = geom.nsites();
+    let fsites = face_sites(geom, axis);
+    debug_assert_eq!(field.len(), ncomp * n);
+    debug_assert_eq!(out.len(), ncomp * fsites);
+    match axis {
+        0 => pack_x_plane(field, ncomp, n, fsites, p, out),
+        1 => {
+            debug_assert!(p < geom.ly);
+            for c in 0..ncomp {
+                for x in 0..geom.lx {
+                    let src = c * n + geom.index(x, p, 0);
+                    let dst = c * fsites + x * geom.lz;
+                    out[dst..dst + geom.lz]
+                        .copy_from_slice(&field[src..src + geom.lz]);
+                }
+            }
+        }
+        _ => {
+            debug_assert!(p < geom.lz);
+            for c in 0..ncomp {
+                for x in 0..geom.lx {
+                    for y in 0..geom.ly {
+                        out[c * fsites + x * geom.ly + y] =
+                            field[c * n + geom.index(x, y, p)];
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Inverse of [`pack_face`]: scatter a received face payload into face
+/// plane `p` of `axis`.
+pub fn unpack_face(field: &mut [f64], ncomp: usize, geom: &Geometry,
+                   axis: usize, p: usize, payload: &[f64]) {
+    let n = geom.nsites();
+    let fsites = face_sites(geom, axis);
+    debug_assert_eq!(field.len(), ncomp * n);
+    debug_assert_eq!(payload.len(), ncomp * fsites);
+    match axis {
+        0 => unpack_x_plane(field, ncomp, n, fsites, p, payload),
+        1 => {
+            debug_assert!(p < geom.ly);
+            for c in 0..ncomp {
+                for x in 0..geom.lx {
+                    let dst = c * n + geom.index(x, p, 0);
+                    let src = c * fsites + x * geom.lz;
+                    field[dst..dst + geom.lz]
+                        .copy_from_slice(&payload[src..src + geom.lz]);
+                }
+            }
+        }
+        _ => {
+            debug_assert!(p < geom.lz);
+            for c in 0..ncomp {
+                for x in 0..geom.lx {
+                    for y in 0..geom.ly {
+                        field[c * n + geom.index(x, y, p)] =
+                            payload[c * fsites + x * geom.ly + y];
+                    }
+                }
+            }
+        }
+    }
+}
+
 /// Fraction of sites selected by a mask.
 pub fn fill_fraction(mask: &[bool]) -> f64 {
     mask.iter().filter(|&&m| m).count() as f64 / mask.len() as f64
@@ -191,6 +280,64 @@ mod tests {
                 assert_eq!(&back[lo..lo + np * plane],
                            &field[lo..lo + np * plane]);
             }
+        }
+    }
+
+    #[test]
+    fn face_pack_matches_hand_gather_and_round_trips() {
+        let geom = Geometry::new(4, 3, 5);
+        let (ncomp, n) = (2usize, geom.nsites());
+        let field: Vec<f64> =
+            (0..ncomp * n).map(|i| i as f64 * 0.5).collect();
+        for axis in 0..3 {
+            let ext = [geom.lx, geom.ly, geom.lz][axis];
+            let fsites = face_sites(&geom, axis);
+            for p in [0, 1, ext - 1] {
+                let mut buf = vec![0.0; ncomp * fsites];
+                pack_face(&field, ncomp, &geom, axis, p, &mut buf);
+                // every face value came from a site with coordinate p on
+                // `axis`, in x/y/z traversal order of the other axes
+                let mut k = vec![0usize; ncomp];
+                for (x, y, z, s) in geom.iter() {
+                    if [x, y, z][axis] != p {
+                        continue;
+                    }
+                    for (c, kc) in k.iter_mut().enumerate() {
+                        assert_eq!(buf[c * fsites + *kc],
+                                   field[c * n + s],
+                                   "axis {axis} p {p} c {c}");
+                        *kc += 1;
+                    }
+                }
+                // scatter back into a clean field: exactly the face
+                // plane lands, everything else untouched
+                let mut back = vec![-1.0; ncomp * n];
+                unpack_face(&mut back, ncomp, &geom, axis, p, &buf);
+                for (x, y, z, s) in geom.iter() {
+                    for c in 0..ncomp {
+                        let want = if [x, y, z][axis] == p {
+                            field[c * n + s]
+                        } else {
+                            -1.0
+                        };
+                        assert_eq!(back[c * n + s], want);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn face_axis0_is_bytewise_pack_x_plane() {
+        let geom = Geometry::new(5, 3, 2);
+        let (ncomp, n, plane) = (3usize, geom.nsites(), geom.ly * geom.lz);
+        let field: Vec<f64> = (0..ncomp * n).map(|i| i as f64).collect();
+        for p in 0..geom.lx {
+            let mut a = vec![0.0; ncomp * plane];
+            let mut b = vec![0.0; ncomp * plane];
+            pack_face(&field, ncomp, &geom, 0, p, &mut a);
+            pack_x_plane(&field, ncomp, n, plane, p, &mut b);
+            assert_eq!(a, b);
         }
     }
 

@@ -23,7 +23,8 @@ targetdp — lattice-based data parallelism with portable performance
 USAGE:
     targetdp run [--config FILE] [--backend B] [--lattice L] [--size N]
                  [--steps K] [--vvl V] [--threads T] [--multi-step M]
-                 [--ranks R] [--overlap true|false] [--comms-depth K]
+                 [--ranks R] [--grid PX,PY,PZ]
+                 [--overlap true|false] [--comms-depth K]
                  [--pin-threads true|false]
                  [--observables reduced|gather]
                  [--transport channel|socket] [--rank-server HOST:PORT]
@@ -40,7 +41,11 @@ run options (ignored when --config is given):
     --vvl         virtual vector length             [8]
     --threads     TLP threads (0 = autodetect)      [1]
     --multi-step  host blocked steps/launch, 0=auto [0]
-    --ranks       concurrent slab ranks (comms)     [1]
+    --ranks       concurrent comms ranks            [1]
+    --grid        rank grid PX,PY,PZ (product =
+                  ranks; 3D Cartesian decomposition
+                  with face exchange), \"\" = auto
+                  minimal-surface factorisation     [auto]
     --overlap     overlap halo exchange w/ compute  [true]
     --comms-depth steps per halo exchange (super-
                   steps; ranks > 1), 0 = auto       [1]
@@ -101,6 +106,7 @@ fn run() -> targetdp::Result<()> {
                             threads: args.usize_or("threads", 1)?,
                             multi_step: args.u64_or("multi-step", 0)?,
                             ranks: args.usize_or("ranks", 1)?,
+                            grid: args.str_or("grid", ""),
                             overlap: args.bool_or("overlap", true)?,
                             comms_depth: args.u64_or("comms-depth", 1)?,
                             pin_threads: args.bool_or("pin-threads",

@@ -137,7 +137,7 @@ fn wire_round_trip_preserves_halo_planes_bitwise() {
     // the serialized plane format must be lossless for arbitrary f64
     // payloads — the property the in-process transport exercises on
     // every message and a socket transport will inherit
-    use targetdp::comms::{FieldId, Phase, Side, Tag};
+    use targetdp::comms::{Axis, FieldId, Phase, Side, Tag};
     let payload: Vec<f64> = (0..19 * 16)
         .map(|i| {
             let x = (i as f64 * 0.7351).sin() * 1e3;
@@ -152,6 +152,7 @@ fn wire_round_trip_preserves_halo_planes_bitwise() {
             phase: Phase::Stream,
             field: FieldId::F,
             side: Side::Low,
+            axis: Axis::Z,
         },
         data: payload,
     };

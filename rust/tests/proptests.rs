@@ -202,6 +202,57 @@ fn prop_masked_copy_partition() {
     }
 }
 
+/// PROPERTY: axis-face pack/unpack is a lossless round trip onto exactly
+/// the face — for any axis (contiguous x planes, strided y runs,
+/// z singletons), plane index, component count and geometry — and never
+/// touches the complement.
+#[test]
+fn prop_face_pack_unpack_round_trip() {
+    use targetdp::lattice::halo::{face_sites, pack_face, unpack_face};
+    for case in 0..40u64 {
+        let mut rng = Rng64::new(11_000 + case);
+        let lx = 2 + (rng.next_u64() % 6) as usize;
+        let ly = 2 + (rng.next_u64() % 6) as usize;
+        let lz = 2 + (rng.next_u64() % 6) as usize;
+        let geom = Geometry::new(lx, ly, lz);
+        let n = geom.nsites();
+        let ncomp = 1 + (rng.next_u64() % 19) as usize;
+        let axis = (rng.next_u64() % 3) as usize;
+        let ext = [lx, ly, lz][axis];
+        let p = (rng.next_u64() % ext as u64) as usize;
+        let src: Vec<f64> =
+            (0..ncomp * n).map(|_| rng.uniform()).collect();
+
+        let fsites = face_sites(&geom, axis);
+        let mut payload = vec![0.0; ncomp * fsites];
+        pack_face(&src, ncomp, &geom, axis, p, &mut payload);
+        let sentinel = -77.5;
+        let mut dst = vec![sentinel; ncomp * n];
+        unpack_face(&mut dst, ncomp, &geom, axis, p, &payload);
+
+        for c in 0..ncomp {
+            for x in 0..lx {
+                for y in 0..ly {
+                    for z in 0..lz {
+                        let s = geom.index(x, y, z);
+                        let got = dst[c * n + s];
+                        if [x, y, z][axis] == p {
+                            assert_eq!(
+                                got.to_bits(),
+                                src[c * n + s].to_bits(),
+                                "case {case} axis={axis} plane={p}"
+                            );
+                        } else {
+                            assert_eq!(got, sentinel,
+                                       "case {case} axis={axis} leaked");
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
 /// PROPERTY: domain decomposition is exact for any domain count.
 #[test]
 fn prop_decomposition_exact() {

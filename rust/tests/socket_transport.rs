@@ -13,9 +13,10 @@ use std::thread;
 use std::time::Duration;
 
 use targetdp::comms::launcher::{connect_rank, RankServer};
-use targetdp::comms::{run_decomposed, serve_rank, Command, CommsConfig,
-                      CommsWorld, FieldId, Frame, PartialObs, Phase,
-                      PlaneMsg, Side, SocketTransport, Tag, Transport};
+use targetdp::comms::{run_decomposed, serve_rank, Axis, Command,
+                      CommsConfig, CommsWorld, FieldId, Frame, PartialObs,
+                      Phase, PlaneMsg, Side, SocketTransport, Tag,
+                      Transport};
 use targetdp::free_energy::symmetric::FeParams;
 use targetdp::lattice::geometry::Geometry;
 use targetdp::lb::engine::LbEngine;
@@ -65,6 +66,7 @@ fn wire_frames_round_trip_bitwise_over_tcp() {
             phase: Phase::Stream,
             field: FieldId::G,
             side: Side::High,
+            axis: Axis::Y,
         },
         data: awkward_doubles(),
     };
@@ -117,6 +119,7 @@ fn per_sender_order_is_preserved() {
         phase: Phase::Moments,
         field: FieldId::F,
         side: Side::Low,
+        axis: Axis::X,
     };
     for step in 0..50u64 {
         ranks[0]
@@ -151,6 +154,7 @@ fn timeout_is_whole_frame_or_none() {
             phase: Phase::Stream,
             field: FieldId::F,
             side: Side::Low,
+            axis: Axis::Z,
         },
         data: (0..100_000).map(|i| i as f64 * 0.5).collect(),
     };
