@@ -1,0 +1,162 @@
+//! Telemetry artifact checker: validates the JSON files a decomposed run
+//! writes with `--trace-out` / `--report-json`. Exits nonzero with a
+//! message naming the first violated invariant — the CI multidomain
+//! smoke runs it against a real 2-process socket run.
+//!
+//! ```text
+//! cargo run --release --example check_trace -- --trace trace.json \
+//!     [--report run.json] [--ranks N]
+//! ```
+//!
+//! Checks on the Chrome `trace_event` document:
+//! - it parses, and `traceEvents` is an array of objects;
+//! - every rank (pid) carries **at least one `wait_recv` and one
+//!   `interior` span** — the two phase classes that prove both the
+//!   exchange and the compute were timed;
+//! - every duration event has `dur >= 0` and a `step` arg;
+//! - `--ranks N` additionally pins the distinct pid count to N.
+//!
+//! Checks on the run report (when `--report` is given): it parses, and
+//! every per-rank entry has a complete 12-key phase histogram with
+//! non-negative seconds.
+
+use std::process::ExitCode;
+
+use targetdp::obs::trace::TracePhase;
+use targetdp::util::cli::Args;
+use targetdp::util::json::Json;
+
+fn fail(msg: &str) -> ExitCode {
+    eprintln!("check_trace: FAIL: {msg}");
+    ExitCode::FAILURE
+}
+
+fn main() -> ExitCode {
+    let args = Args::parse(std::env::args().skip(1))
+        .expect("usage: check_trace --trace FILE [--report FILE] \
+                 [--ranks N]");
+    let path = match args.get("trace") {
+        Some(p) => p.to_string(),
+        None => return fail("--trace FILE is required"),
+    };
+    let want_ranks = args.usize_or("ranks", 0).unwrap();
+
+    let text = match std::fs::read_to_string(&path) {
+        Ok(t) => t,
+        Err(e) => return fail(&format!("cannot read {path}: {e}")),
+    };
+    let doc = match Json::parse(&text) {
+        Ok(d) => d,
+        Err(e) => return fail(&format!("{path} is not valid JSON: {e}")),
+    };
+    let events = match doc.get("traceEvents").as_array() {
+        Ok(a) => a,
+        Err(_) => return fail("traceEvents is missing or not an array"),
+    };
+
+    // per-pid tallies of the phase classes the timeline must prove
+    let mut pids: Vec<usize> = Vec::new();
+    let mut waits: Vec<usize> = Vec::new();
+    let mut interiors: Vec<usize> = Vec::new();
+    let mut nspans = 0usize;
+    for ev in events {
+        let phase = match ev.get("ph").as_str() {
+            Ok(p) => p,
+            Err(_) => return fail("event without a \"ph\" field"),
+        };
+        if phase != "X" {
+            continue; // metadata events (process/thread names)
+        }
+        nspans += 1;
+        let pid = match ev.get("pid").as_usize() {
+            Ok(p) => p,
+            Err(_) => return fail("duration event without a pid"),
+        };
+        let name = match ev.get("name").as_str() {
+            Ok(n) => n,
+            Err(_) => return fail("duration event without a name"),
+        };
+        if TracePhase::ALL.iter().all(|p| p.name() != name) {
+            return fail(&format!("unknown phase name {name:?}"));
+        }
+        match ev.get("dur").as_f64() {
+            Ok(d) if d >= 0.0 => {}
+            _ => return fail(&format!("pid {pid} {name}: bad dur")),
+        }
+        if ev.get("args").get("step").as_f64().is_err() {
+            return fail(&format!("pid {pid} {name}: missing step arg"));
+        }
+        let slot = match pids.iter().position(|&p| p == pid) {
+            Some(i) => i,
+            None => {
+                pids.push(pid);
+                waits.push(0);
+                interiors.push(0);
+                pids.len() - 1
+            }
+        };
+        if name == TracePhase::WaitRecv.name() {
+            waits[slot] += 1;
+        }
+        if name == TracePhase::Interior.name() {
+            interiors[slot] += 1;
+        }
+    }
+    if pids.is_empty() {
+        return fail("no duration events: the run shipped no spans");
+    }
+    if want_ranks > 0 && pids.len() != want_ranks {
+        return fail(&format!("expected {want_ranks} rank pids, found {}",
+                             pids.len()));
+    }
+    for (i, &pid) in pids.iter().enumerate() {
+        if waits[i] == 0 {
+            return fail(&format!("rank pid {pid} has no wait_recv span"));
+        }
+        if interiors[i] == 0 {
+            return fail(&format!("rank pid {pid} has no interior span"));
+        }
+    }
+
+    if let Some(report) = args.get("report") {
+        let text = match std::fs::read_to_string(report) {
+            Ok(t) => t,
+            Err(e) => return fail(&format!("cannot read {report}: {e}")),
+        };
+        let doc = match Json::parse(&text) {
+            Ok(d) => d,
+            Err(e) => {
+                return fail(&format!("{report} is not valid JSON: {e}"))
+            }
+        };
+        let ranks = match doc.get("ranks").as_array() {
+            Ok(a) if !a.is_empty() => a,
+            _ => return fail("report has no per-rank entries"),
+        };
+        if want_ranks > 0 && ranks.len() != want_ranks {
+            return fail(&format!("report: expected {want_ranks} ranks, \
+                                  found {}",
+                                 ranks.len()));
+        }
+        for r in ranks {
+            let hist = match r.get("phase_seconds").as_object() {
+                Ok(h) => h,
+                Err(_) => return fail("rank entry without phase_seconds"),
+            };
+            for p in TracePhase::ALL {
+                match hist.get(p.name()).map(Json::as_f64) {
+                    Some(Ok(s)) if s >= 0.0 => {}
+                    _ => {
+                        return fail(&format!("phase_seconds missing or \
+                                              negative for {:?}",
+                                             p.name()))
+                    }
+                }
+            }
+        }
+    }
+
+    println!("check_trace: OK — {} ranks, {nspans} spans ({path})",
+             pids.len());
+    ExitCode::SUCCESS
+}

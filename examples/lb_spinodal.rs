@@ -29,7 +29,8 @@ fn cfg(backend: &str, steps: u64, dir: String) -> Config {
         target: TargetCfg { backend: backend.into(), vvl: 8,
                             ..Default::default() },
         free_energy: Default::default(),
-        output: OutputCfg { every: steps / 4, dir, vtk: true },
+        output: OutputCfg { every: steps / 4, dir, vtk: true,
+                            ..Default::default() },
     }
 }
 

@@ -60,6 +60,7 @@
 //! | [`wire::PartialObs`]    | rank → driver    | interior mass/momentum/phi/phi² sums |
 //! | [`wire::InteriorMsg`]   | rank → driver    | packed interior of f, g or phi     |
 //! | [`wire::ReportMsg`]     | rank → driver    | lifetime timing/traffic totals     |
+//! | [`wire::TraceMsg`]      | rank → driver    | phase span timeline (tracing runs only, just before the `Report`) |
 //!
 //! Concept map for readers coming from MPI:
 //!
@@ -134,6 +135,6 @@ pub use socket::SocketTransport;
 pub use transport::{ChannelTransport, Transport};
 pub use wire::{Axis, Command, FieldId, Frame, InteriorField, InteriorMsg,
                PartialObs, Phase, PlaneBlockMsg, PlaneMsg, ReportMsg,
-               Side, Tag};
+               Side, Tag, TraceMsg};
 pub use world::{run_decomposed, serve_rank, CommsConfig, CommsSession,
                 CommsWorld, Rank, RankReport, WorldReport};

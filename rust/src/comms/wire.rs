@@ -21,9 +21,9 @@
 //! ```text
 //! offset  size  field
 //!      0     4  magic  "TDPW"
-//!      4     1  version (3)
+//!      4     1  version (4)
 //!      5     1  kind    (0 Plane, 1 Command, 2 Partials, 3 Interior,
-//!                        4 Report, 5 PlaneBlock)
+//!                        4 Report, 5 PlaneBlock, 6 Trace)
 //! ```
 //!
 //! Kind-specific layouts (offsets continue from the prelude):
@@ -36,12 +36,20 @@
 //!                                        4 Shutdown; arg = steps]
 //! Partials   6 src(4)  10 steps(8)  18 sites(8)  26 mass(8)
 //!            34 momentum(24)  58 phi_total(8)  66 phi_sq(8)
+//!            74 wait_s(8)  82 busy_s(8)
 //! Interior   6 field(1)  7 src(4)  11 count(4)  15 payload(8*count)
 //!            [field: 0 F, 1 G, 2 Phi]
 //! Report     6 src(4)  10 interior_sites(8)  18 steps(8)  26 compute_s(8)
 //!            34 wait_s(8)  42 idle_s(8)  50 bytes_sent(8)  58 msgs_sent(8)
+//!            66 bytes_axis(24)  90 msgs_axis(24)  114 super_steps(8)
 //! PlaneBlock 6 field(1)  7 side(1)  8 axis(1)  9 depth(4)  13 src(4)
 //!            17 step(8)  25 count(4)  29 payload(8*count)
+//! Trace      6 src(4)  10 count(4)  14 records(31*count)
+//!            record: 0 phase(1)  1 axis(1)  2 side(1)  3 tid(4)
+//!                    7 step(8)  15 t_start(8)  23 t_end(8)
+//!            [phase: obs::TracePhase discriminant 0..=11; axis 0/1/2 or
+//!             255 = none; side 0 low / 1 high or 255 = none; t_* are
+//!             f64 seconds since the sending rank's epoch]
 //! ```
 //!
 //! Version 3 added the `axis` byte (0 x, 1 y, 2 z) to `Plane` and
@@ -50,6 +58,16 @@
 //! an axis pair (a 2-wide axis) needs `(side, axis)` to disambiguate the
 //! two frames the *same* peer sends it. Slab worlds always send
 //! `axis = 0`.
+//!
+//! Version 4 is the telemetry revision: `Report` grew per-axis halo
+//! byte/message counters and the super-step count, `Partials` grew the
+//! running wait/busy seconds (the driver heartbeat's wait fraction), and
+//! the `Trace` frame ships a rank's span timeline
+//! ([`crate::obs::trace::SpanRecorder`]) to the driver at `Shutdown` —
+//! a tracing rank sends its `Trace` immediately *before* its `Report`,
+//! so the per-sender ordering guarantee means the driver's report
+//! collection loop sees every timeline by the time the last report
+//! lands. Tracing-off runs never send a `Trace` frame.
 //!
 //! `PlaneBlock` is the communication-avoiding super-step frame: one
 //! message carries a whole `depth`-plane-deep ghost block (the
@@ -60,17 +78,23 @@
 //! congruent.
 
 use crate::error::{Error, Result};
+use crate::obs::trace::{Span, TracePhase, AXIS_NONE, SIDE_NONE};
 
 /// Frame magic: "targetDP wire".
 pub const MAGIC: [u8; 4] = *b"TDPW";
-/// Wire format version (3: axis-tagged face frames for Cartesian grids).
-pub const VERSION: u8 = 3;
+/// Wire format version (4: telemetry — `Trace` frames, per-axis report
+/// counters, heartbeat fields in `Partials`).
+pub const VERSION: u8 = 4;
 /// Fixed header size of a [`PlaneMsg`] frame in bytes.
 pub const PLANE_HEADER_LEN: usize = 26;
 /// Fixed header size of an [`InteriorMsg`] frame in bytes.
 pub const INTERIOR_HEADER_LEN: usize = 15;
 /// Fixed header size of a [`PlaneBlockMsg`] frame in bytes.
 pub const PLANE_BLOCK_HEADER_LEN: usize = 29;
+/// Fixed header size of a [`TraceMsg`] frame in bytes.
+pub const TRACE_HEADER_LEN: usize = 14;
+/// Encoded size of one span record inside a [`TraceMsg`] frame.
+pub const TRACE_RECORD_LEN: usize = 31;
 
 const KIND_PLANE: u8 = 0;
 const KIND_COMMAND: u8 = 1;
@@ -78,6 +102,7 @@ const KIND_PARTIALS: u8 = 2;
 const KIND_INTERIOR: u8 = 3;
 const KIND_REPORT: u8 = 4;
 const KIND_PLANE_BLOCK: u8 = 5;
+const KIND_TRACE: u8 = 6;
 
 /// Which of the two per-step exchanges a plane belongs to.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -228,6 +253,14 @@ pub struct PartialObs {
     pub phi_total: f64,
     /// Sum of phi^2 over interior sites (for the variance).
     pub phi_sq: f64,
+    /// Wall seconds this rank has spent blocked on halo messages so far
+    /// (a running snapshot of the final report's `wait_s` — feeds the
+    /// driver's `--heartbeat` wait fraction between blocks).
+    pub wait_s: f64,
+    /// Wall seconds of *working* time so far: compute + wait, idle at
+    /// the command barrier excluded. `wait_s / busy_s` is the rank's
+    /// running wait fraction.
+    pub busy_s: f64,
 }
 
 /// Which field an [`InteriorMsg`] carries (distinct from the plane
@@ -270,6 +303,28 @@ pub struct ReportMsg {
     pub bytes_sent: u64,
     /// Halo plane messages sent over the rank's lifetime.
     pub msgs_sent: u64,
+    /// `bytes_sent` split by exchange axis (x, y, z; the per-axis
+    /// entries sum to the total — an undecomposed axis stays 0).
+    pub bytes_axis: [u64; 3],
+    /// `msgs_sent` split by exchange axis (sums to the total).
+    pub msgs_axis: [u64; 3],
+    /// Communication-avoiding super-steps executed (0 on depth-1
+    /// schedules; each super-step covers up to `depth` timesteps).
+    pub super_steps: u64,
+}
+
+/// Rank → driver span timeline (sent on `Shutdown`, immediately before
+/// the [`ReportMsg`], and only when the run traced). Timestamps are
+/// seconds since the *sending rank's* epoch — timelines from different
+/// ranks are not mutually ordered (socket ranks are separate processes),
+/// which is why the trace export keeps one pid per rank.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceMsg {
+    /// Reporting rank.
+    pub src: u32,
+    /// The rank's recorded spans: the rank thread's (tid 0) followed by
+    /// each TLP worker's (tid = worker + 1), each group oldest-first.
+    pub spans: Vec<Span>,
 }
 
 /// Any frame on the wire.
@@ -281,6 +336,7 @@ pub enum Frame {
     Interior(InteriorMsg),
     Report(ReportMsg),
     PlaneBlock(PlaneBlockMsg),
+    Trace(TraceMsg),
 }
 
 fn prelude(out: &mut Vec<u8>, kind: u8) {
@@ -403,7 +459,7 @@ impl InteriorMsg {
 
 impl PartialObs {
     fn encode(&self) -> Vec<u8> {
-        let mut out = Vec::with_capacity(74);
+        let mut out = Vec::with_capacity(90);
         prelude(&mut out, KIND_PARTIALS);
         out.extend_from_slice(&self.src.to_le_bytes());
         out.extend_from_slice(&self.steps.to_le_bytes());
@@ -412,13 +468,15 @@ impl PartialObs {
         push_f64s(&mut out, &self.momentum);
         out.extend_from_slice(&self.phi_total.to_le_bytes());
         out.extend_from_slice(&self.phi_sq.to_le_bytes());
+        out.extend_from_slice(&self.wait_s.to_le_bytes());
+        out.extend_from_slice(&self.busy_s.to_le_bytes());
         out
     }
 }
 
 impl ReportMsg {
     fn encode(&self) -> Vec<u8> {
-        let mut out = Vec::with_capacity(66);
+        let mut out = Vec::with_capacity(122);
         prelude(&mut out, KIND_REPORT);
         out.extend_from_slice(&self.src.to_le_bytes());
         out.extend_from_slice(&self.interior_sites.to_le_bytes());
@@ -428,6 +486,37 @@ impl ReportMsg {
         out.extend_from_slice(&self.idle_s.to_le_bytes());
         out.extend_from_slice(&self.bytes_sent.to_le_bytes());
         out.extend_from_slice(&self.msgs_sent.to_le_bytes());
+        for v in &self.bytes_axis {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        for v in &self.msgs_axis {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out.extend_from_slice(&self.super_steps.to_le_bytes());
+        out
+    }
+}
+
+impl TraceMsg {
+    /// Encoded frame size for `count` span records.
+    pub fn frame_len(count: usize) -> usize {
+        TRACE_HEADER_LEN + TRACE_RECORD_LEN * count
+    }
+
+    fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(Self::frame_len(self.spans.len()));
+        prelude(&mut out, KIND_TRACE);
+        out.extend_from_slice(&self.src.to_le_bytes());
+        out.extend_from_slice(&(self.spans.len() as u32).to_le_bytes());
+        for s in &self.spans {
+            out.push(s.phase as u8);
+            out.push(s.axis);
+            out.push(s.side);
+            out.extend_from_slice(&s.tid.to_le_bytes());
+            out.extend_from_slice(&s.step.to_le_bytes());
+            out.extend_from_slice(&s.t_start.to_le_bytes());
+            out.extend_from_slice(&s.t_end.to_le_bytes());
+        }
         out
     }
 }
@@ -516,6 +605,7 @@ impl Frame {
             Frame::Interior(i) => i.encode(),
             Frame::Report(r) => r.encode(),
             Frame::PlaneBlock(b) => b.encode(),
+            Frame::Trace(t) => t.encode(),
         }
     }
 
@@ -587,6 +677,8 @@ impl Frame {
                 let momentum = [r.f64()?, r.f64()?, r.f64()?];
                 let phi_total = r.f64()?;
                 let phi_sq = r.f64()?;
+                let wait_s = r.f64()?;
+                let busy_s = r.f64()?;
                 r.done()?;
                 Ok(Frame::Partials(PartialObs {
                     src,
@@ -596,6 +688,8 @@ impl Frame {
                     momentum,
                     phi_total,
                     phi_sq,
+                    wait_s,
+                    busy_s,
                 }))
             }
             KIND_INTERIOR => {
@@ -623,6 +717,9 @@ impl Frame {
                 let idle_s = r.f64()?;
                 let bytes_sent = r.u64()?;
                 let msgs_sent = r.u64()?;
+                let bytes_axis = [r.u64()?, r.u64()?, r.u64()?];
+                let msgs_axis = [r.u64()?, r.u64()?, r.u64()?];
+                let super_steps = r.u64()?;
                 r.done()?;
                 Ok(Frame::Report(ReportMsg {
                     src,
@@ -633,6 +730,9 @@ impl Frame {
                     idle_s,
                     bytes_sent,
                     msgs_sent,
+                    bytes_axis,
+                    msgs_axis,
+                    super_steps,
                 }))
             }
             KIND_PLANE_BLOCK => {
@@ -666,6 +766,45 @@ impl Frame {
                     depth,
                     data,
                 }))
+            }
+            KIND_TRACE => {
+                let src = r.u32()?;
+                let count = r.u32()? as usize;
+                let want = count.checked_mul(TRACE_RECORD_LEN)
+                    .ok_or_else(|| bad("span count overflows".into()))?;
+                if bytes.len() != TRACE_HEADER_LEN + want {
+                    return Err(bad(format!(
+                        "length {} != header + {count} span records",
+                        bytes.len()
+                    )));
+                }
+                let mut spans = Vec::with_capacity(count);
+                for _ in 0..count {
+                    let phase = r.u8()?;
+                    let phase = TracePhase::from_u8(phase).ok_or_else(
+                        || bad(format!("unknown trace phase {phase}")),
+                    )?;
+                    let axis = r.u8()?;
+                    if axis > 2 && axis != AXIS_NONE {
+                        return Err(bad(format!(
+                            "unknown span axis {axis}"
+                        )));
+                    }
+                    let side = r.u8()?;
+                    if side > 1 && side != SIDE_NONE {
+                        return Err(bad(format!(
+                            "unknown span side {side}"
+                        )));
+                    }
+                    let tid = r.u32()?;
+                    let step = r.u64()?;
+                    let t_start = r.f64()?;
+                    let t_end = r.f64()?;
+                    spans.push(Span { phase, step, axis, side, tid,
+                                      t_start, t_end });
+                }
+                r.done()?;
+                Ok(Frame::Trace(TraceMsg { src, spans }))
             }
             v => Err(bad(format!("unknown frame kind {v}"))),
         }
@@ -744,6 +883,8 @@ mod tests {
             momentum: [-0.0, f64::MIN_POSITIVE, 7.25e11],
             phi_total: -41.5,
             phi_sq: 1e-300,
+            wait_s: 0.0625,
+            busy_s: 1.0 / 7.0,
         };
         let fr = Frame::Partials(p);
         match Frame::decode(&fr.encode()).unwrap() {
@@ -757,6 +898,8 @@ mod tests {
                 }
                 assert_eq!(back.phi_total.to_bits(), p.phi_total.to_bits());
                 assert_eq!(back.phi_sq.to_bits(), p.phi_sq.to_bits());
+                assert_eq!(back.wait_s.to_bits(), p.wait_s.to_bits());
+                assert_eq!(back.busy_s.to_bits(), p.busy_s.to_bits());
             }
             other => panic!("decoded {other:?}"),
         }
@@ -783,6 +926,10 @@ mod tests {
             idle_s: 0.125,
             bytes_sent: 1 << 20,
             msgs_sent: 600,
+            bytes_axis: [1 << 19, 1 << 18, (1 << 20) - (1 << 19)
+                         - (1 << 18)],
+            msgs_axis: [200, 300, 100],
+            super_steps: 50,
         };
         let fr = Frame::Report(r);
         assert_eq!(Frame::decode(&fr.encode()).unwrap(), fr);
@@ -921,6 +1068,9 @@ mod tests {
             idle_s: 0.0,
             bytes_sent: 0,
             msgs_sent: 0,
+            bytes_axis: [0; 3],
+            msgs_axis: [0; 3],
+            super_steps: 0,
         })
         .encode();
         assert!(Frame::decode(&bad[..bad.len() - 1]).is_err());
@@ -929,5 +1079,99 @@ mod tests {
             &Frame::Command(Command::Observables).encode()
         )
         .is_err());
+    }
+
+    fn sample_trace() -> TraceMsg {
+        TraceMsg {
+            src: 1,
+            spans: vec![
+                Span {
+                    phase: TracePhase::WaitRecv,
+                    step: 3,
+                    axis: 1,
+                    side: 0,
+                    tid: 0,
+                    t_start: 0.25,
+                    t_end: 1.0 / 3.0,
+                },
+                Span {
+                    phase: TracePhase::Collide,
+                    step: 3,
+                    axis: AXIS_NONE,
+                    side: SIDE_NONE,
+                    tid: 4,
+                    t_start: -0.0,
+                    t_end: f64::MIN_POSITIVE,
+                },
+                Span {
+                    phase: TracePhase::Idle,
+                    step: u64::MAX,
+                    axis: 2,
+                    side: 1,
+                    tid: u32::MAX,
+                    t_start: 1e-300,
+                    t_end: f64::MAX,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn trace_frame_round_trips_bitwise() {
+        let t = sample_trace();
+        let bytes = Frame::Trace(t.clone()).encode();
+        assert_eq!(bytes.len(), TraceMsg::frame_len(t.spans.len()));
+        match Frame::decode(&bytes).unwrap() {
+            Frame::Trace(back) => {
+                assert_eq!(back.src, t.src);
+                assert_eq!(back.spans.len(), t.spans.len());
+                for (a, b) in back.spans.iter().zip(&t.spans) {
+                    assert_eq!(a.phase, b.phase);
+                    assert_eq!(a.step, b.step);
+                    assert_eq!(a.axis, b.axis);
+                    assert_eq!(a.side, b.side);
+                    assert_eq!(a.tid, b.tid);
+                    assert_eq!(a.t_start.to_bits(), b.t_start.to_bits(),
+                               "bitwise f64 timestamps");
+                    assert_eq!(a.t_end.to_bits(), b.t_end.to_bits());
+                }
+            }
+            other => panic!("decoded {other:?}"),
+        }
+    }
+
+    #[test]
+    fn empty_trace_round_trips() {
+        let t = TraceMsg { src: 7, spans: vec![] };
+        let bytes = Frame::Trace(t.clone()).encode();
+        assert_eq!(bytes.len(), TRACE_HEADER_LEN);
+        assert_eq!(Frame::decode(&bytes).unwrap(), Frame::Trace(t));
+    }
+
+    #[test]
+    fn corrupt_trace_frames_rejected() {
+        let good = Frame::Trace(sample_trace()).encode();
+        // phase discriminant out of range (first record starts at 14)
+        let mut bad = good.clone();
+        bad[14] = 12;
+        assert!(Frame::decode(&bad).is_err());
+        // axis neither 0..3 nor the none marker
+        let mut bad = good.clone();
+        bad[15] = 3;
+        assert!(Frame::decode(&bad).is_err());
+        // side neither 0/1 nor the none marker
+        let mut bad = good.clone();
+        bad[16] = 2;
+        assert!(Frame::decode(&bad).is_err());
+        // truncated record tail
+        let mut bad = good.clone();
+        bad.pop();
+        assert!(Frame::decode(&bad).is_err());
+        // declared count larger than the payload
+        let mut bad = good.clone();
+        bad[10] = bad[10].wrapping_add(1);
+        assert!(Frame::decode(&bad).is_err());
+        // truncated header
+        assert!(Frame::decode(&good[..12]).is_err());
     }
 }

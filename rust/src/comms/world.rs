@@ -87,7 +87,7 @@ use std::time::{Duration, Instant};
 use crate::comms::transport::{ChannelTransport, Transport};
 use crate::comms::wire::{Axis, Command, FieldId, Frame, InteriorField,
                          InteriorMsg, PartialObs, Phase, PlaneBlockMsg,
-                         PlaneMsg, ReportMsg, Side, Tag};
+                         PlaneMsg, ReportMsg, Side, Tag, TraceMsg};
 use crate::error::{Error, Result};
 use crate::free_energy::gradient::gradient_fd_range;
 use crate::free_energy::symmetric::FeParams;
@@ -104,6 +104,8 @@ use crate::lb::model::VelSet;
 use crate::lb::moments::phi_from_g_range;
 use crate::lb::multistep::HALO_PER_STEP;
 use crate::lb::propagation::stream_range;
+use crate::obs::trace::{PoolTrace, Span, SpanRecorder, TracePhase,
+                        AXIS_NONE, SIDE_NONE};
 use crate::targetdp::ilp;
 use crate::targetdp::reduce::{reduce_sum_range, reduce_sum_sq_range};
 use crate::targetdp::tlp::{threads_per_rank, Schedule, TlpPool};
@@ -112,6 +114,38 @@ use crate::targetdp::tlp::{threads_per_rank, Schedule, TlpPool};
 /// — it converts the MPI-style deadlock of a lost neighbour into a
 /// diagnosable error instead of a hung world.
 const WAIT_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// Span-ring capacity of a tracing rank thread. A slab step records
+/// ~20 rank-thread spans, so this holds a few thousand steps before the
+/// ring starts overwriting the oldest (counted, never reallocated).
+const RANK_SPAN_CAP: usize = 65_536;
+
+/// Span-ring capacity per TLP worker (one span per worker per traced
+/// kernel launch).
+const WORKER_SPAN_CAP: usize = 16_384;
+
+/// Arm tracing on a rank's pool + thread recorder when the config asks
+/// for it: one [`PoolTrace`] ring per worker and a rank-thread
+/// [`SpanRecorder`], all timestamped against the rank's epoch `t0`.
+/// Returns the pool trace so the Shutdown path can drain the worker
+/// rings. With `trace` off both stay disabled and every instrumentation
+/// site costs one branch.
+fn arm_trace(pool: &mut TlpPool, rank: &mut Rank, trace: bool,
+             nthreads: usize, t0: Instant) -> Option<Arc<PoolTrace>> {
+    if !trace {
+        return None;
+    }
+    rank.trace = SpanRecorder::enabled(RANK_SPAN_CAP, t0);
+    // worker spans only exist on threaded launches; a 1-thread pool runs
+    // inline under the rank thread's own recorder
+    if nthreads > 1 {
+        let pt = PoolTrace::new(nthreads, t0, WORKER_SPAN_CAP);
+        pool.set_trace(Arc::clone(&pt));
+        Some(pt)
+    } else {
+        None
+    }
+}
 
 /// Knobs for a decomposed run.
 #[derive(Debug, Clone)]
@@ -152,6 +186,12 @@ pub struct CommsConfig {
     /// `ranks`. Non-slab grids take the staged per-axis face-exchange
     /// path and support `depth == 1` only.
     pub grid: [usize; 3],
+    /// Record phase span timelines on every rank (and its TLP workers)
+    /// and ship them to the driver as `Trace` frames at `Shutdown` —
+    /// the `--trace-out`/`--report-json` machinery. Off by default;
+    /// tracing only reads the clock around existing operations, so
+    /// results are bit-identical either way.
+    pub trace: bool,
 }
 
 impl Default for CommsConfig {
@@ -166,6 +206,7 @@ impl Default for CommsConfig {
             depth: 1,
             pin: false,
             grid: [0, 0, 0],
+            trace: false,
         }
     }
 }
@@ -188,16 +229,33 @@ pub struct RankReport {
     /// (between logging blocks; excluded from [`RankReport::mlups`]).
     pub idle_s: f64,
     /// Halo-exchange traffic only — control/response frames (commands,
-    /// partials, interiors, reports) are not counted.
+    /// partials, interiors, reports, traces) are not counted.
     pub bytes_sent: u64,
     /// Halo plane messages sent over this rank's lifetime.
     pub msgs_sent: u64,
+    /// [`RankReport::bytes_sent`] split by lattice axis (0 = x, 1 = y,
+    /// 2 = z). Sums to the total; undecomposed axes stay zero, and slab
+    /// super-step blocks count on x.
+    pub bytes_axis: [u64; 3],
+    /// [`RankReport::msgs_sent`] split by lattice axis; sums to the
+    /// total.
+    pub msgs_axis: [u64; 3],
+    /// Communication-avoiding super-steps executed (0 for depth-1
+    /// worlds, which take the per-step exchange path).
+    pub super_steps: u64,
 }
 
 impl RankReport {
     /// Million (interior) lattice-site updates per second of rank wall
-    /// time spent on the simulation proper (compute + exchange wait;
-    /// driver idle excluded).
+    /// time spent on the simulation proper.
+    ///
+    /// The wall clock here is **working time only**: `compute_s +
+    /// wait_s`. Driver-side pauses ([`RankReport::idle_s`], the time
+    /// parked at the command barrier between logging blocks) are
+    /// excluded — so a rank's MLUPS describes how fast it steps when it
+    /// is actually being stepped, not how busy the driver kept it. The
+    /// pipeline's per-rank table prints idle as its own column for the
+    /// same reason.
     pub fn mlups(&self) -> f64 {
         let wall = self.compute_s + self.wait_s;
         if wall <= 0.0 {
@@ -207,7 +265,9 @@ impl RankReport {
     }
 
     /// Fraction of this rank's working wall time spent blocked on halo
-    /// arrival.
+    /// arrival: `wait_s / (compute_s + wait_s)`. Uses the same
+    /// idle-excluded wall clock as [`RankReport::mlups`] — a rank left
+    /// parked by a slow driver does not look communication-bound.
     pub fn wait_fraction(&self) -> f64 {
         let wall = self.compute_s + self.wait_s;
         if wall <= 0.0 { 0.0 } else { self.wait_s / wall }
@@ -223,6 +283,10 @@ pub struct WorldReport {
     pub seconds: f64,
     /// Whether the run overlapped halo exchange with interior compute.
     pub overlap: bool,
+    /// Per-rank phase span timelines (rank order), shipped as `Trace`
+    /// frames just before each rank's report. Empty vectors unless the
+    /// run had [`CommsConfig::trace`] set.
+    pub traces: Vec<Vec<Span>>,
 }
 
 impl WorldReport {
@@ -280,6 +344,15 @@ pub struct Rank {
     pub bytes_sent: u64,
     /// Halo plane messages sent.
     pub msgs_sent: u64,
+    /// [`Rank::bytes_sent`] split by the lattice axis the frame crossed.
+    pub bytes_axis: [u64; 3],
+    /// [`Rank::msgs_sent`] split by lattice axis.
+    pub msgs_axis: [u64; 3],
+    /// Communication-avoiding super-steps executed.
+    pub super_steps: u64,
+    /// The rank thread's span recorder — disabled (free) unless the
+    /// world was built with [`CommsConfig::trace`].
+    pub trace: SpanRecorder,
 }
 
 impl Rank {
@@ -297,6 +370,10 @@ impl Rank {
             idle_s: 0.0,
             bytes_sent: 0,
             msgs_sent: 0,
+            bytes_axis: [0; 3],
+            msgs_axis: [0; 3],
+            super_steps: 0,
+            trace: SpanRecorder::disabled(),
         }
     }
 
@@ -320,9 +397,16 @@ impl Rank {
     /// send path. Counted in the halo-traffic totals.
     pub fn isend(&mut self, dst: usize, tag: Tag, data: &[f64])
                  -> Result<()> {
-        self.bytes_sent += PlaneMsg::frame_len(data.len()) as u64;
+        let nbytes = PlaneMsg::frame_len(data.len()) as u64;
+        self.bytes_sent += nbytes;
         self.msgs_sent += 1;
-        self.transport.send_plane(dst, self.rank as u32, tag, data)
+        self.bytes_axis[tag.axis.index()] += nbytes;
+        self.msgs_axis[tag.axis.index()] += 1;
+        let t0 = self.trace.now();
+        let r = self.transport.send_plane(dst, self.rank as u32, tag, data);
+        self.trace.close(TracePhase::Send, tag.step,
+                         tag.axis.index() as u8, tag.side as u8, t0);
+        r
     }
 
     /// Non-blocking send of a batch of depth-tagged ghost blocks to one
@@ -336,14 +420,20 @@ impl Rank {
                         blocks: &[(FieldId, Side, &[f64])]) -> Result<()> {
         let mut frames = Vec::with_capacity(blocks.len());
         for (field, side, data) in blocks {
-            self.bytes_sent +=
-                PlaneBlockMsg::frame_len(data.len()) as u64;
+            let nbytes = PlaneBlockMsg::frame_len(data.len()) as u64;
+            self.bytes_sent += nbytes;
             self.msgs_sent += 1;
+            // ghost blocks are x-blocked (super-steps are slab-only)
+            self.bytes_axis[0] += nbytes;
+            self.msgs_axis[0] += 1;
             frames.push(PlaneBlockMsg::encode_from(
                 self.rank as u32, step, *field, *side, Axis::X, depth,
                 data));
         }
-        self.transport.send_bytes_batch(dst, frames)
+        let t0 = self.trace.now();
+        let r = self.transport.send_bytes_batch(dst, frames);
+        self.trace.close(TracePhase::Send, step, 0, SIDE_NONE, t0);
+        r
     }
 
     /// Send a control-plane response to the session controller (not
@@ -389,7 +479,10 @@ impl Rank {
     /// tags encountered on the way are parked for their own waits;
     /// commands are queued for [`Rank::wait_command`].
     pub fn wait(&mut self, tag: Tag) -> Result<Vec<f64>> {
+        let tr0 = self.trace.now();
         if let Some(data) = self.pending.remove(&tag) {
+            self.trace.close(TracePhase::WaitRecv, tag.step,
+                             tag.axis.index() as u8, tag.side as u8, tr0);
             return Ok(data);
         }
         let t0 = Instant::now();
@@ -418,6 +511,8 @@ impl Rank {
             }
         };
         self.wait_s += t0.elapsed().as_secs_f64();
+        self.trace.close(TracePhase::WaitRecv, tag.step,
+                         tag.axis.index() as u8, tag.side as u8, tr0);
         Ok(data)
     }
 
@@ -437,10 +532,13 @@ impl Rank {
             }
             Ok(())
         };
+        let tr0 = self.trace.now();
         if let Some((d, data)) =
             self.pending_blocks.remove(&(step, field, side))
         {
             check(d)?;
+            self.trace.close(TracePhase::WaitRecv, step, 0, side as u8,
+                             tr0);
             return Ok(data);
         }
         let t0 = Instant::now();
@@ -475,6 +573,7 @@ impl Rank {
             }
         };
         self.wait_s += t0.elapsed().as_secs_f64();
+        self.trace.close(TracePhase::WaitRecv, step, 0, side as u8, tr0);
         Ok(data)
     }
 
@@ -489,6 +588,9 @@ impl Rank {
         if let Some(cmd) = self.cmds.pop_front() {
             return Ok(cmd);
         }
+        // Idle spans carry step 0 — a driver pause sits between blocks
+        // and belongs to no timestep
+        let tr0 = self.trace.now();
         let t0 = Instant::now();
         let cmd = loop {
             match self.transport.recv_timeout(WAIT_TIMEOUT)? {
@@ -506,6 +608,7 @@ impl Rank {
             }
         };
         self.idle_s += t0.elapsed().as_secs_f64();
+        self.trace.close(TracePhase::Idle, 0, AXIS_NONE, SIDE_NONE, tr0);
         Ok(cmd)
     }
 }
@@ -617,6 +720,7 @@ impl CommsWorld {
             retired: false,
             steps_done: 0,
             started,
+            last_max_wait: None,
         };
         for (tr, d) in transports.into_iter().zip(&self.dec.domains) {
             let d = d.clone();
@@ -671,6 +775,7 @@ impl CommsWorld {
             retired: false,
             steps_done: 0,
             started: Instant::now(),
+            last_max_wait: None,
         })
     }
 
@@ -755,6 +860,10 @@ pub struct CommsSession {
     retired: bool,
     steps_done: u64,
     started: Instant,
+    /// Worst per-rank wait fraction seen by the most recent
+    /// [`CommsSession::observables`] call — the driver's heartbeat signal
+    /// (`None` until the first observables block completes).
+    last_max_wait: Option<f64>,
 }
 
 /// Is this error a knock-on symptom (a neighbour of the real failure
@@ -887,6 +996,14 @@ impl CommsSession {
             partials[r] = Some(p);
             got += 1;
         }
+        self.last_max_wait = partials
+            .iter()
+            .flatten()
+            .filter(|p| p.busy_s > 0.0)
+            .map(|p| p.wait_s / p.busy_s)
+            .fold(None, |acc: Option<f64>, w| {
+                Some(acc.map_or(w, |a| a.max(w)))
+            });
         let mut mass = 0.0;
         let mut momentum = [0.0f64; 3];
         let mut phi_total = 0.0;
@@ -908,6 +1025,15 @@ impl CommsSession {
             ))));
         }
         Ok(Observables::from_sums(mass, momentum, phi_total, phi_sq, n))
+    }
+
+    /// Worst per-rank halo-wait fraction (`wait / (compute + wait)`,
+    /// session lifetime so far) reported with the most recent
+    /// [`CommsSession::observables`] block — the load-imbalance signal
+    /// behind the driver's `--heartbeat` line. `None` before the first
+    /// observables call.
+    pub fn max_wait_fraction(&self) -> Option<f64> {
+        self.last_max_wait
     }
 
     /// Collect one interior payload per (rank, expected field) and place
@@ -1013,6 +1139,7 @@ impl CommsSession {
         }
         let nranks = self.dec.domains.len();
         let mut reports: Vec<Option<RankReport>> = vec![None; nranks];
+        let mut traces: Vec<Vec<Span>> = vec![Vec::new(); nranks];
         let mut got = 0;
         while got < nranks {
             let frame = match self.recv_from_ranks("rank reports") {
@@ -1021,6 +1148,19 @@ impl CommsSession {
             };
             let r = match frame {
                 Frame::Report(r) => r,
+                // a tracing rank ships its span timeline immediately
+                // before its report (per-sender frame order), so every
+                // timeline is in hand by the time the last report lands
+                Frame::Trace(t) => {
+                    let idx = t.src as usize;
+                    if idx >= nranks {
+                        return Err(self.fail(Error::Invalid(format!(
+                            "comms: trace from out-of-range rank {idx}"
+                        ))));
+                    }
+                    traces[idx].extend(t.spans);
+                    continue;
+                }
                 other => {
                     return Err(self.fail(Error::Invalid(format!(
                         "comms: driver expected reports, got {other:?}"
@@ -1043,6 +1183,9 @@ impl CommsSession {
                 idle_s: r.idle_s,
                 bytes_sent: r.bytes_sent,
                 msgs_sent: r.msgs_sent,
+                bytes_axis: r.bytes_axis,
+                msgs_axis: r.msgs_axis,
+                super_steps: r.super_steps,
             });
             got += 1;
         }
@@ -1067,6 +1210,7 @@ impl CommsSession {
                 .collect(),
             seconds: self.started.elapsed().as_secs_f64(),
             overlap: self.cfg.overlap,
+            traces,
         })
     }
 }
@@ -1171,7 +1315,7 @@ fn rank_main(d: CartSubDomain, vs: &'static VelSet, p: FeParams,
 fn slab_main(d: SubDomain, vs: &'static VelSet, p: FeParams,
              f0: Arc<Vec<f64>>, g0: Arc<Vec<f64>>, cfg: CommsConfig,
              nthreads: usize, transport: Box<dyn Transport>) -> Result<()> {
-    let pool = if cfg.pin {
+    let mut pool = if cfg.pin {
         // rank-major round-robin: rank r's workers land on CPUs
         // r*nthreads, r*nthreads+1, ... (mod machine width)
         TlpPool::new_pinned(nthreads, cfg.schedule, d.rank * nthreads)
@@ -1214,6 +1358,11 @@ fn slab_main(d: SubDomain, vs: &'static VelSet, p: FeParams,
     let mut rank = Rank::new(transport);
 
     let t0 = Instant::now();
+    // armed only after allocation + scatter: zeros/first-touch launches
+    // never leave stray spans, and the epoch starts at the serve loop
+    let pool_trace =
+        arm_trace(&mut pool, &mut rank, cfg.trace, nthreads, t0);
+    let pool = pool;
     let mut step: u64 = 0;
     loop {
         match rank.wait_command()? {
@@ -1239,8 +1388,17 @@ fn slab_main(d: SubDomain, vs: &'static VelSet, p: FeParams,
                 }
             }
             Command::Observables => {
-                let partials = rank_partials(&d, vs, &mut st, &pool, &cfg,
-                                             step, halo);
+                pool.trace_context(TracePhase::Reduce, step);
+                let tr0 = rank.trace.now();
+                let mut partials = rank_partials(&d, vs, &mut st, &pool,
+                                                 &cfg, step, halo);
+                rank.trace.close(TracePhase::Reduce, step, AXIS_NONE,
+                                 SIDE_NONE, tr0);
+                // running wait-fraction snapshot for the driver's
+                // heartbeat: busy = working wall (idle excluded)
+                partials.wait_s = rank.wait_s;
+                partials.busy_s =
+                    (t0.elapsed().as_secs_f64() - rank.idle_s).max(0.0);
                 rank.send_response(&Frame::Partials(partials))?;
             }
             Command::Gather => {
@@ -1273,6 +1431,7 @@ fn slab_main(d: SubDomain, vs: &'static VelSet, p: FeParams,
             }
             Command::Shutdown => {
                 let wall = t0.elapsed().as_secs_f64();
+                ship_trace(&mut rank, &pool_trace, d.rank as u32)?;
                 let report = ReportMsg {
                     src: d.rank as u32,
                     interior_sites: (d.lxl * d.plane()) as u64,
@@ -1282,12 +1441,32 @@ fn slab_main(d: SubDomain, vs: &'static VelSet, p: FeParams,
                     idle_s: rank.idle_s,
                     bytes_sent: rank.bytes_sent,
                     msgs_sent: rank.msgs_sent,
+                    bytes_axis: rank.bytes_axis,
+                    msgs_axis: rank.msgs_axis,
+                    super_steps: rank.super_steps,
                 };
                 rank.send_response(&Frame::Report(report))?;
                 return Ok(());
             }
         }
     }
+}
+
+/// Ship a tracing rank's merged span timeline (rank thread first, then
+/// the TLP worker rings) to the driver as a `Trace` frame — sent
+/// immediately *before* the `Report`, so the per-sender ordering
+/// guarantee means the driver's report collection sees it first. A
+/// tracing-off rank sends nothing.
+fn ship_trace(rank: &mut Rank, pool_trace: &Option<Arc<PoolTrace>>,
+              src: u32) -> Result<()> {
+    if !rank.trace.is_enabled() {
+        return Ok(());
+    }
+    let mut spans = rank.trace.take_spans();
+    if let Some(pt) = pool_trace {
+        spans.extend(pt.drain());
+    }
+    rank.send_response(&Frame::Trace(TraceMsg { src, spans }))
 }
 
 /// Exact partial observable sums over this rank's interior, via the
@@ -1325,6 +1504,10 @@ fn rank_partials(d: &SubDomain, vs: &VelSet, st: &mut RankState,
         momentum,
         phi_total,
         phi_sq,
+        // timing snapshots are stamped by the serve loop, which owns
+        // the rank endpoint and its epoch
+        wait_s: 0.0,
+        busy_s: 0.0,
     }
 }
 
@@ -1457,12 +1640,15 @@ fn unpack_face_checked(field: &mut [f64], nvel: usize, geom: &Geometry,
 fn isend_faces(rank: &mut Rank, data: &[f64], field: FieldId, phase: Phase,
                step: u64, nvel: usize, local: &Geometry, plan: &AxisPlan,
                buf: &mut [f64]) -> Result<()> {
+    let tr0 = rank.trace.now();
     let nb = nvel * plan.face;
     pack_face(data, nvel, local, plan.axis, plan.send_lo, &mut buf[..nb]);
     let tag = |side| Tag { step, phase, field, side, axis: plan.wire };
     rank.isend(plan.lo_nbr, tag(Side::High), &buf[..nb])?;
     pack_face(data, nvel, local, plan.axis, plan.send_hi, &mut buf[..nb]);
     rank.isend(plan.hi_nbr, tag(Side::Low), &buf[..nb])?;
+    rank.trace.close(TracePhase::Pack, step, plan.axis as u8, SIDE_NONE,
+                     tr0);
     Ok(())
 }
 
@@ -1472,10 +1658,16 @@ fn wait_faces(rank: &mut Rank, data: &mut [f64], field: FieldId,
               phase: Phase, step: u64, nvel: usize, local: &Geometry,
               plan: &AxisPlan) -> Result<()> {
     let tag = |side| Tag { step, phase, field, side, axis: plan.wire };
+    // wait both, then unpack both: the two payloads land in disjoint
+    // halo planes, so deferring the first unpack past the second wait
+    // is bit-identical — and gives one clean Unpack span
     let lo = rank.wait(tag(Side::Low))?;
-    unpack_face_checked(data, nvel, local, plan.axis, plan.recv_lo, &lo)?;
     let hi = rank.wait(tag(Side::High))?;
+    let tr0 = rank.trace.now();
+    unpack_face_checked(data, nvel, local, plan.axis, plan.recv_lo, &lo)?;
     unpack_face_checked(data, nvel, local, plan.axis, plan.recv_hi, &hi)?;
+    rank.trace.close(TracePhase::Unpack, step, plan.axis as u8, SIDE_NONE,
+                     tr0);
     Ok(())
 }
 
@@ -1487,7 +1679,7 @@ fn wait_faces(rank: &mut Rank, data: &mut [f64], field: FieldId,
 fn grid_main(d: CartSubDomain, vs: &'static VelSet, p: FeParams,
              f0: Arc<Vec<f64>>, g0: Arc<Vec<f64>>, cfg: CommsConfig,
              nthreads: usize, transport: Box<dyn Transport>) -> Result<()> {
-    let pool = if cfg.pin {
+    let mut pool = if cfg.pin {
         TlpPool::new_pinned(nthreads, cfg.schedule, d.rank * nthreads)
     } else {
         TlpPool::new(nthreads, cfg.schedule)
@@ -1522,6 +1714,9 @@ fn grid_main(d: CartSubDomain, vs: &'static VelSet, p: FeParams,
     let mut rank = Rank::new(transport);
 
     let t0 = Instant::now();
+    let pool_trace =
+        arm_trace(&mut pool, &mut rank, cfg.trace, nthreads, t0);
+    let pool = pool;
     let mut step: u64 = 0;
     loop {
         match rank.wait_command()? {
@@ -1534,8 +1729,16 @@ fn grid_main(d: CartSubDomain, vs: &'static VelSet, p: FeParams,
                 }
             }
             Command::Observables => {
-                let partials = grid_partials(&d, vs, &mut st, &interior,
-                                             &pool, &cfg, step);
+                pool.trace_context(TracePhase::Reduce, step);
+                let tr0 = rank.trace.now();
+                let mut partials = grid_partials(&d, vs, &mut st,
+                                                 &interior, &pool, &cfg,
+                                                 step);
+                rank.trace.close(TracePhase::Reduce, step, AXIS_NONE,
+                                 SIDE_NONE, tr0);
+                partials.wait_s = rank.wait_s;
+                partials.busy_s =
+                    (t0.elapsed().as_secs_f64() - rank.idle_s).max(0.0);
                 rank.send_response(&Frame::Partials(partials))?;
             }
             Command::Gather => {
@@ -1566,6 +1769,7 @@ fn grid_main(d: CartSubDomain, vs: &'static VelSet, p: FeParams,
             }
             Command::Shutdown => {
                 let wall = t0.elapsed().as_secs_f64();
+                ship_trace(&mut rank, &pool_trace, d.rank as u32)?;
                 let report = ReportMsg {
                     src: d.rank as u32,
                     interior_sites: d.interior_sites() as u64,
@@ -1575,6 +1779,9 @@ fn grid_main(d: CartSubDomain, vs: &'static VelSet, p: FeParams,
                     idle_s: rank.idle_s,
                     bytes_sent: rank.bytes_sent,
                     msgs_sent: rank.msgs_sent,
+                    bytes_axis: rank.bytes_axis,
+                    msgs_axis: rank.msgs_axis,
+                    super_steps: rank.super_steps,
                 };
                 rank.send_response(&Frame::Report(report))?;
                 return Ok(());
@@ -1627,19 +1834,31 @@ fn step_rank_grid(d: &CartSubDomain, vs: &VelSet, p: &FeParams,
         // gradient — compute both while stage 1 is in flight; collide
         // mutates only deep sites, which no face plane intersects, so
         // the later stages still pack pre-collision g
+        pool.trace_context(TracePhase::Interior, step);
+        let tr0 = rank.trace.now();
         for r in interior {
             phi_from_g_range(vs, &st.g, &mut st.phi, ln, r.clone(), pool,
                              vvl);
         }
+        rank.trace.close(TracePhase::Interior, step, AXIS_NONE, SIDE_NONE,
+                         tr0);
+        pool.trace_context(TracePhase::Gradient, step);
+        let tr0 = rank.trace.now();
         for r in deep {
             gradient_fd_range(local, &st.phi, &mut st.grad, &mut st.lap,
                               r.clone(), pool, vvl);
         }
+        rank.trace.close(TracePhase::Gradient, step, AXIS_NONE, SIDE_NONE,
+                         tr0);
+        pool.trace_context(TracePhase::Collide, step);
+        let tr0 = rank.trace.now();
         for r in deep {
             collide_lattice_range(vs, p, &mut st.f, &mut st.g, &st.grad,
                                   &st.lap, ln, r.clone(), pool, vvl,
                                   scalar);
         }
+        rank.trace.close(TracePhase::Collide, step, AXIS_NONE, SIDE_NONE,
+                         tr0);
     }
     wait_faces(rank, &mut st.g, FieldId::G, Phase::Moments, step, nvel,
                local, first)?;
@@ -1654,6 +1873,8 @@ fn step_rank_grid(d: &CartSubDomain, vs: &VelSet, p: &FeParams,
         // halo faces, then the gradient + collision over the shell — the
         // shell slices union with the deep box to exactly the interior,
         // each site collided once
+        pool.trace_context(TracePhase::EdgeRim, step);
+        let tr0 = rank.trace.now();
         for plan in plans {
             for r in &plan.halo_runs {
                 phi_from_g_range(vs, &st.g, &mut st.phi, ln, r.clone(),
@@ -1671,19 +1892,33 @@ fn step_rank_grid(d: &CartSubDomain, vs: &VelSet, p: &FeParams,
                                       pool, vvl, scalar);
             }
         }
+        rank.trace.close(TracePhase::EdgeRim, step, AXIS_NONE, SIDE_NONE,
+                         tr0);
     } else {
         // bulk-sync: halos are all fresh — one full-array phi sweep,
         // then the whole interior in one pass
+        pool.trace_context(TracePhase::Interior, step);
+        let tr0 = rank.trace.now();
         phi_from_g_range(vs, &st.g, &mut st.phi, ln, 0..ln, pool, vvl);
+        rank.trace.close(TracePhase::Interior, step, AXIS_NONE, SIDE_NONE,
+                         tr0);
+        pool.trace_context(TracePhase::Gradient, step);
+        let tr0 = rank.trace.now();
         for r in interior {
             gradient_fd_range(local, &st.phi, &mut st.grad, &mut st.lap,
                               r.clone(), pool, vvl);
         }
+        rank.trace.close(TracePhase::Gradient, step, AXIS_NONE, SIDE_NONE,
+                         tr0);
+        pool.trace_context(TracePhase::Collide, step);
+        let tr0 = rank.trace.now();
         for r in interior {
             collide_lattice_range(vs, p, &mut st.f, &mut st.g, &st.grad,
                                   &st.lap, ln, r.clone(), pool, vvl,
                                   scalar);
         }
+        rank.trace.close(TracePhase::Collide, step, AXIS_NONE, SIDE_NONE,
+                         tr0);
     }
 
     // ---- exchange 2: post-collision f,g faces (stream halo), staged ----
@@ -1694,6 +1929,8 @@ fn step_rank_grid(d: &CartSubDomain, vs: &VelSet, p: &FeParams,
     if cfg.overlap {
         // deep destinations pull only interior sources (streaming writes
         // the _tmp buffers, so the in-flight packs stay untouched)
+        pool.trace_context(TracePhase::Stream, step);
+        let tr0 = rank.trace.now();
         for r in deep {
             stream_range(vs, table, &st.f, &mut st.f_tmp, r.clone(), pool,
                          vvl);
@@ -1702,6 +1939,8 @@ fn step_rank_grid(d: &CartSubDomain, vs: &VelSet, p: &FeParams,
             stream_range(vs, table, &st.g, &mut st.g_tmp, r.clone(), pool,
                          vvl);
         }
+        rank.trace.close(TracePhase::Stream, step, AXIS_NONE, SIDE_NONE,
+                         tr0);
     }
     wait_faces(rank, &mut st.f, FieldId::F, Phase::Stream, step, nvel,
                local, first)?;
@@ -1718,6 +1957,8 @@ fn step_rank_grid(d: &CartSubDomain, vs: &VelSet, p: &FeParams,
                    local, plan)?;
     }
     if cfg.overlap {
+        pool.trace_context(TracePhase::EdgeRim, step);
+        let tr0 = rank.trace.now();
         for plan in plans {
             for r in &plan.shell_runs {
                 stream_range(vs, table, &st.f, &mut st.f_tmp, r.clone(),
@@ -1728,7 +1969,11 @@ fn step_rank_grid(d: &CartSubDomain, vs: &VelSet, p: &FeParams,
                              pool, vvl);
             }
         }
+        rank.trace.close(TracePhase::EdgeRim, step, AXIS_NONE, SIDE_NONE,
+                         tr0);
     } else {
+        pool.trace_context(TracePhase::Stream, step);
+        let tr0 = rank.trace.now();
         for r in interior {
             stream_range(vs, table, &st.f, &mut st.f_tmp, r.clone(), pool,
                          vvl);
@@ -1737,6 +1982,8 @@ fn step_rank_grid(d: &CartSubDomain, vs: &VelSet, p: &FeParams,
             stream_range(vs, table, &st.g, &mut st.g_tmp, r.clone(), pool,
                          vvl);
         }
+        rank.trace.close(TracePhase::Stream, step, AXIS_NONE, SIDE_NONE,
+                         tr0);
     }
     std::mem::swap(&mut st.f, &mut st.f_tmp);
     std::mem::swap(&mut st.g, &mut st.g_tmp);
@@ -1787,6 +2034,9 @@ fn grid_partials(d: &CartSubDomain, vs: &VelSet, st: &mut RankState,
         momentum,
         phi_total,
         phi_sq,
+        // stamped by the serve loop (see the slab Observables arm)
+        wait_s: 0.0,
+        busy_s: 0.0,
     }
 }
 
@@ -1829,7 +2079,8 @@ fn unpack_block_checked(field: &mut [f64], nvel: usize, ln: usize,
 #[allow(clippy::too_many_arguments)]
 fn blocked_step(local: &Geometry, vs: &VelSet, p: &FeParams,
                 table: &StreamTable, st: &mut RankState, base: usize,
-                j: usize, cfg: &CommsConfig, pool: &TlpPool) {
+                j: usize, cfg: &CommsConfig, pool: &TlpPool,
+                trace: &mut SpanRecorder, step: u64) {
     let (vvl, scalar) = (cfg.vvl, cfg.scalar);
     let plane = local.ly * local.lz;
     let lloc = local.lx;
@@ -1838,13 +2089,22 @@ fn blocked_step(local: &Geometry, vs: &VelSet, p: &FeParams,
     let c1 = (lloc - base) - (2 * j - 1);
     let p0 = base + 2 * j - 2;
     let p1 = (lloc - base) - (2 * j - 2);
+    pool.trace_context(TracePhase::Interior, step);
+    let tr0 = trace.now();
     phi_from_g_range(vs, &st.g, &mut st.phi, ln, p0 * plane..p1 * plane,
                      pool, vvl);
+    trace.close(TracePhase::Interior, step, AXIS_NONE, SIDE_NONE, tr0);
+    pool.trace_context(TracePhase::Gradient, step);
+    let tr0 = trace.now();
     gradient_fd_range(local, &st.phi, &mut st.grad, &mut st.lap,
                       c0 * plane..c1 * plane, pool, vvl);
+    trace.close(TracePhase::Gradient, step, AXIS_NONE, SIDE_NONE, tr0);
+    pool.trace_context(TracePhase::Collide, step);
+    let tr0 = trace.now();
     collide_stream_range(vs, p, &st.f, &st.g, &mut st.f_tmp,
                          &mut st.g_tmp, &st.grad, &st.lap, table, ln,
                          c0 * plane..c1 * plane, pool, vvl, scalar);
+    trace.close(TracePhase::Collide, step, AXIS_NONE, SIDE_NONE, tr0);
     std::mem::swap(&mut st.f, &mut st.f_tmp);
     std::mem::swap(&mut st.g, &mut st.g_tmp);
 }
@@ -1891,10 +2151,13 @@ fn super_step(d: &SubDomain, vs: &VelSet, p: &FeParams,
     let base = halo - s2;
     let nb = nvel * s2 * plane;
 
+    rank.super_steps += 1;
+
     // ---- post the ghost-block sends: my lowest interior planes fill
     // the left neighbour's HIGH ghost region and vice versa, for both
     // fields, one batched send per neighbour ----
     {
+        let tr0 = rank.trace.now();
         let (f_half, g_half) =
             st.send_buf.split_at_mut(nvel * halo * plane);
         pack_x_planes(&st.f, nvel, ln, plane, halo, s2,
@@ -1911,26 +2174,29 @@ fn super_step(d: &SubDomain, vs: &VelSet, p: &FeParams,
         rank.isend_blocks(rank.right(), step, s2 as u32,
                           &[(FieldId::F, Side::Low, &f_half[..nb]),
                             (FieldId::G, Side::Low, &g_half[..nb])])?;
+        rank.trace.close(TracePhase::Pack, step, 0, SIDE_NONE, tr0);
     }
 
     let wait_ghost_blocks =
         |rank: &mut Rank, st: &mut RankState| -> Result<()> {
             let f_lo =
                 rank.wait_block(step, FieldId::F, Side::Low, s2 as u32)?;
-            unpack_block_checked(&mut st.f, nvel, ln, plane, base, s2,
-                                 &f_lo)?;
             let f_hi =
                 rank.wait_block(step, FieldId::F, Side::High, s2 as u32)?;
-            unpack_block_checked(&mut st.f, nvel, ln, plane, halo + lxl,
-                                 s2, &f_hi)?;
             let g_lo =
                 rank.wait_block(step, FieldId::G, Side::Low, s2 as u32)?;
-            unpack_block_checked(&mut st.g, nvel, ln, plane, base, s2,
-                                 &g_lo)?;
             let g_hi =
                 rank.wait_block(step, FieldId::G, Side::High, s2 as u32)?;
+            let tr0 = rank.trace.now();
+            unpack_block_checked(&mut st.f, nvel, ln, plane, base, s2,
+                                 &f_lo)?;
+            unpack_block_checked(&mut st.f, nvel, ln, plane, halo + lxl,
+                                 s2, &f_hi)?;
+            unpack_block_checked(&mut st.g, nvel, ln, plane, base, s2,
+                                 &g_lo)?;
             unpack_block_checked(&mut st.g, nvel, ln, plane, halo + lxl,
                                  s2, &g_hi)?;
+            rank.trace.close(TracePhase::Unpack, step, 0, SIDE_NONE, tr0);
             Ok(())
         };
 
@@ -1938,24 +2204,39 @@ fn super_step(d: &SubDomain, vs: &VelSet, p: &FeParams,
         // bulk-sync: ghosts first, then the whole trapezoid
         wait_ghost_blocks(rank, st)?;
         for j in 1..=sdepth {
-            blocked_step(&local, vs, p, table, st, base, j, cfg, pool);
+            blocked_step(&local, vs, p, table, st, base, j, cfg, pool,
+                         &mut rank.trace, step + j as u64 - 1);
         }
     } else {
         // step 1 split: its interior planes need no ghost data — the
         // k-step-wide overlap window is this sweep, computed while the
         // ghost blocks are in flight
+        pool.trace_context(TracePhase::Interior, step);
+        let tr0 = rank.trace.now();
         phi_from_g_range(vs, &st.g, &mut st.phi, ln,
                          halo * plane..(halo + lxl) * plane, pool, vvl);
+        rank.trace.close(TracePhase::Interior, step, AXIS_NONE, SIDE_NONE,
+                         tr0);
         let deep = (halo + 1) * plane..(halo + lxl - 1) * plane;
+        pool.trace_context(TracePhase::Gradient, step);
+        let tr0 = rank.trace.now();
         gradient_fd_range(&local, &st.phi, &mut st.grad, &mut st.lap,
                           deep.clone(), pool, vvl);
+        rank.trace.close(TracePhase::Gradient, step, AXIS_NONE, SIDE_NONE,
+                         tr0);
+        pool.trace_context(TracePhase::Collide, step);
+        let tr0 = rank.trace.now();
         collide_stream_range(vs, p, &st.f, &st.g, &mut st.f_tmp,
                              &mut st.g_tmp, &st.grad, &st.lap, table, ln,
                              deep, pool, vvl, scalar);
+        rank.trace.close(TracePhase::Collide, step, AXIS_NONE, SIDE_NONE,
+                         tr0);
         // complete step 1's rim on the freshly filled ghost planes; the
         // split ranges union to exactly the bulk step-1 ranges, each
         // site computed once → bit-identical
         wait_ghost_blocks(rank, st)?;
+        pool.trace_context(TracePhase::EdgeRim, step);
+        let tr0 = rank.trace.now();
         phi_from_g_range(vs, &st.g, &mut st.phi, ln,
                          base * plane..halo * plane, pool, vvl);
         phi_from_g_range(vs, &st.g, &mut st.phi, ln,
@@ -1970,10 +2251,13 @@ fn super_step(d: &SubDomain, vs: &VelSet, p: &FeParams,
                                  &mut st.g_tmp, &st.grad, &st.lap, table,
                                  ln, rim, pool, vvl, scalar);
         }
+        rank.trace.close(TracePhase::EdgeRim, step, AXIS_NONE, SIDE_NONE,
+                         tr0);
         std::mem::swap(&mut st.f, &mut st.f_tmp);
         std::mem::swap(&mut st.g, &mut st.g_tmp);
         for j in 2..=sdepth {
-            blocked_step(&local, vs, p, table, st, base, j, cfg, pool);
+            blocked_step(&local, vs, p, table, st, base, j, cfg, pool,
+                         &mut rank.trace, step + j as u64 - 1);
         }
     }
     Ok(())
@@ -2025,39 +2309,71 @@ fn step_rank(d: &SubDomain, vs: &VelSet, p: &FeParams, table: &StreamTable,
 
     // ---- exchange 1: post-stream g edge planes (moments halo) ----
     // my low edge fills the left neighbour's HIGH halo and vice versa
+    let tr0 = rank.trace.now();
     pack_x_plane(&st.g, nvel, ln, plane, 1, &mut st.send_buf);
     rank.isend(rank.left(), tag(Phase::Moments, FieldId::G, Side::High),
                &st.send_buf)?;
     pack_x_plane(&st.g, nvel, ln, plane, lxl, &mut st.send_buf);
     rank.isend(rank.right(), tag(Phase::Moments, FieldId::G, Side::Low),
                &st.send_buf)?;
+    rank.trace.close(TracePhase::Pack, step, 0, SIDE_NONE, tr0);
 
     if !cfg.overlap {
         // bulk-sync: halos first, then everything in one sweep
         let lo = rank.wait(tag(Phase::Moments, FieldId::G, Side::Low))?;
-        unpack_checked(&mut st.g, nvel, ln, plane, 0, &lo)?;
         let hi = rank.wait(tag(Phase::Moments, FieldId::G, Side::High))?;
+        let tr0 = rank.trace.now();
+        unpack_checked(&mut st.g, nvel, ln, plane, 0, &lo)?;
         unpack_checked(&mut st.g, nvel, ln, plane, lxl + 1, &hi)?;
+        rank.trace.close(TracePhase::Unpack, step, 0, SIDE_NONE, tr0);
+        pool.trace_context(TracePhase::Interior, step);
+        let tr0 = rank.trace.now();
         phi_from_g_range(vs, &st.g, &mut st.phi, ln, 0..ln, pool, vvl);
+        rank.trace.close(TracePhase::Interior, step, AXIS_NONE, SIDE_NONE,
+                         tr0);
+        pool.trace_context(TracePhase::Gradient, step);
+        let tr0 = rank.trace.now();
         gradient_fd_range(&d.local, &st.phi, &mut st.grad, &mut st.lap,
                           interior.clone(), pool, vvl);
+        rank.trace.close(TracePhase::Gradient, step, AXIS_NONE, SIDE_NONE,
+                         tr0);
+        pool.trace_context(TracePhase::Collide, step);
+        let tr0 = rank.trace.now();
         collide_lattice_range(vs, p, &mut st.f, &mut st.g, &st.grad,
                               &st.lap, ln, interior.clone(), pool, vvl,
                               scalar);
+        rank.trace.close(TracePhase::Collide, step, AXIS_NONE, SIDE_NONE,
+                         tr0);
     } else {
         // overlap: the interior needs no halo — compute it while the
         // edge planes are in flight
+        pool.trace_context(TracePhase::Interior, step);
+        let tr0 = rank.trace.now();
         phi_from_g_range(vs, &st.g, &mut st.phi, ln, interior.clone(),
                          pool, vvl);
+        rank.trace.close(TracePhase::Interior, step, AXIS_NONE, SIDE_NONE,
+                         tr0);
+        pool.trace_context(TracePhase::Gradient, step);
+        let tr0 = rank.trace.now();
         gradient_fd_range(&d.local, &st.phi, &mut st.grad, &mut st.lap,
                           deep.clone(), pool, vvl);
+        rank.trace.close(TracePhase::Gradient, step, AXIS_NONE, SIDE_NONE,
+                         tr0);
+        pool.trace_context(TracePhase::Collide, step);
+        let tr0 = rank.trace.now();
         collide_lattice_range(vs, p, &mut st.f, &mut st.g, &st.grad,
                               &st.lap, ln, deep.clone(), pool, vvl, scalar);
+        rank.trace.close(TracePhase::Collide, step, AXIS_NONE, SIDE_NONE,
+                         tr0);
         // complete the edges on arrival
         let lo = rank.wait(tag(Phase::Moments, FieldId::G, Side::Low))?;
-        unpack_checked(&mut st.g, nvel, ln, plane, 0, &lo)?;
         let hi = rank.wait(tag(Phase::Moments, FieldId::G, Side::High))?;
+        let tr0 = rank.trace.now();
+        unpack_checked(&mut st.g, nvel, ln, plane, 0, &lo)?;
         unpack_checked(&mut st.g, nvel, ln, plane, lxl + 1, &hi)?;
+        rank.trace.close(TracePhase::Unpack, step, 0, SIDE_NONE, tr0);
+        pool.trace_context(TracePhase::EdgeRim, step);
+        let tr0 = rank.trace.now();
         phi_from_g_range(vs, &st.g, &mut st.phi, ln, halo_lo, pool, vvl);
         phi_from_g_range(vs, &st.g, &mut st.phi, ln, halo_hi, pool, vvl);
         gradient_fd_range(&d.local, &st.phi, &mut st.grad, &mut st.lap,
@@ -2072,9 +2388,12 @@ fn step_rank(d: &SubDomain, vs: &VelSet, p: &FeParams, table: &StreamTable,
                                   &st.lap, ln, edge_hi.clone(), pool, vvl,
                                   scalar);
         }
+        rank.trace.close(TracePhase::EdgeRim, step, AXIS_NONE, SIDE_NONE,
+                         tr0);
     }
 
     // ---- exchange 2: post-collision f,g edge planes (stream halo) ----
+    let tr0 = rank.trace.now();
     pack_x_plane(&st.f, nvel, ln, plane, 1, &mut st.send_buf);
     rank.isend(rank.left(), tag(Phase::Stream, FieldId::F, Side::High),
                &st.send_buf)?;
@@ -2087,37 +2406,50 @@ fn step_rank(d: &SubDomain, vs: &VelSet, p: &FeParams, table: &StreamTable,
     pack_x_plane(&st.g, nvel, ln, plane, lxl, &mut st.send_buf);
     rank.isend(rank.right(), tag(Phase::Stream, FieldId::G, Side::Low),
                &st.send_buf)?;
+    rank.trace.close(TracePhase::Pack, step, 0, SIDE_NONE, tr0);
 
     let wait_stream_halos =
         |rank: &mut Rank, st: &mut RankState| -> Result<()> {
             let f_lo = rank.wait(tag(Phase::Stream, FieldId::F, Side::Low))?;
-            unpack_checked(&mut st.f, nvel, ln, plane, 0, &f_lo)?;
             let f_hi =
                 rank.wait(tag(Phase::Stream, FieldId::F, Side::High))?;
-            unpack_checked(&mut st.f, nvel, ln, plane, lxl + 1, &f_hi)?;
             let g_lo = rank.wait(tag(Phase::Stream, FieldId::G, Side::Low))?;
-            unpack_checked(&mut st.g, nvel, ln, plane, 0, &g_lo)?;
             let g_hi =
                 rank.wait(tag(Phase::Stream, FieldId::G, Side::High))?;
+            let tr0 = rank.trace.now();
+            unpack_checked(&mut st.f, nvel, ln, plane, 0, &f_lo)?;
+            unpack_checked(&mut st.f, nvel, ln, plane, lxl + 1, &f_hi)?;
+            unpack_checked(&mut st.g, nvel, ln, plane, 0, &g_lo)?;
             unpack_checked(&mut st.g, nvel, ln, plane, lxl + 1, &g_hi)?;
+            rank.trace.close(TracePhase::Unpack, step, 0, SIDE_NONE, tr0);
             Ok(())
         };
 
     if !cfg.overlap {
         wait_stream_halos(rank, st)?;
+        pool.trace_context(TracePhase::Stream, step);
+        let tr0 = rank.trace.now();
         stream_range(vs, table, &st.f, &mut st.f_tmp, interior.clone(),
                      pool, vvl);
         stream_range(vs, table, &st.g, &mut st.g_tmp, interior, pool, vvl);
+        rank.trace.close(TracePhase::Stream, step, AXIS_NONE, SIDE_NONE,
+                         tr0);
     } else {
         // deep destinations pull only post-collision interior sources —
         // exactly what the StreamTable exception lists certify
         debug_assert!((0..nvel).all(|i| {
             table.pull_sources_within(i, deep.clone(), &d.interior())
         }));
+        pool.trace_context(TracePhase::Stream, step);
+        let tr0 = rank.trace.now();
         stream_range(vs, table, &st.f, &mut st.f_tmp, deep.clone(), pool,
                      vvl);
         stream_range(vs, table, &st.g, &mut st.g_tmp, deep, pool, vvl);
+        rank.trace.close(TracePhase::Stream, step, AXIS_NONE, SIDE_NONE,
+                         tr0);
         wait_stream_halos(rank, st)?;
+        pool.trace_context(TracePhase::EdgeRim, step);
+        let tr0 = rank.trace.now();
         stream_range(vs, table, &st.f, &mut st.f_tmp, edge_lo.clone(),
                      pool, vvl);
         stream_range(vs, table, &st.g, &mut st.g_tmp, edge_lo, pool, vvl);
@@ -2127,6 +2459,8 @@ fn step_rank(d: &SubDomain, vs: &VelSet, p: &FeParams, table: &StreamTable,
             stream_range(vs, table, &st.g, &mut st.g_tmp, edge_hi, pool,
                          vvl);
         }
+        rank.trace.close(TracePhase::EdgeRim, step, AXIS_NONE, SIDE_NONE,
+                         tr0);
     }
     std::mem::swap(&mut st.f, &mut st.f_tmp);
     std::mem::swap(&mut st.g, &mut st.g_tmp);

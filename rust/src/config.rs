@@ -159,11 +159,34 @@ pub struct OutputCfg {
     pub dir: String,
     /// Dump a phi VTK snapshot at the end.
     pub vtk: bool,
+    /// Write a Chrome `trace_event` JSON timeline here at the end of a
+    /// decomposed run ("" = tracing off, the default). Setting it arms
+    /// the per-rank span recorders (`comms::CommsConfig::trace`); open
+    /// the file in `chrome://tracing` / Perfetto — one process row per
+    /// rank, one thread row per TLP worker.
+    pub trace_out: String,
+    /// Write a machine-readable JSON run report here at the end of a
+    /// decomposed run ("" = off): config echo + per-rank counters
+    /// (per-axis halo traffic, super-steps, phase-time histogram, MLUPS,
+    /// wait fraction). Also arms the span recorders — the phase
+    /// histogram is computed from the shipped spans.
+    pub report_json: String,
+    /// Print a one-line progress heartbeat (`step/total, mlups, max
+    /// wait%`) from the driver at most every N seconds between logging
+    /// blocks of a decomposed run (0 = off, the default).
+    pub heartbeat: u64,
 }
 
 impl Default for OutputCfg {
     fn default() -> Self {
-        OutputCfg { every: 50, dir: String::new(), vtk: false }
+        OutputCfg {
+            every: 50,
+            dir: String::new(),
+            vtk: false,
+            trace_out: String::new(),
+            report_json: String::new(),
+            heartbeat: 0,
+        }
     }
 }
 
@@ -229,6 +252,9 @@ impl Config {
             every: out.u64_or("every", 50)?,
             dir: out.str_or("dir", "")?,
             vtk: out.bool_or("vtk", false)?,
+            trace_out: out.str_or("trace_out", "")?,
+            report_json: out.str_or("report_json", "")?,
+            heartbeat: out.u64_or("heartbeat", 0)?,
         };
 
         Ok(Config { simulation, target, free_energy, output })
@@ -294,13 +320,15 @@ impl Config {
              a = {:?}\nb = {:?}\nkappa = {:?}\ngamma = {:?}\n\
              tau_f = {:?}\ntau_g = {:?}\n\
              \n[output]\n\
-             every = {}\ndir = \"{}\"\nvtk = {}\n",
+             every = {}\ndir = \"{}\"\nvtk = {}\n\
+             trace_out = \"{}\"\nreport_json = \"{}\"\nheartbeat = {}\n",
             s.lattice, s.lx, s.ly, s.lz, s.steps, s.init, s.noise, s.seed,
             s.radius, t.backend, t.vvl, t.threads, t.schedule, t.batch,
             t.fusion, t.multi_step, t.xla_vvl_block, t.ranks, t.overlap,
             t.comms_depth, t.pin_threads,
             t.observables, t.transport, t.rank_server, t.grid, fe.a, fe.b,
             fe.kappa, fe.gamma, fe.tau_f, fe.tau_g, o.every, o.dir, o.vtk,
+            o.trace_out, o.report_json, o.heartbeat,
         )
     }
 
@@ -402,6 +430,11 @@ impl Config {
                     depth,
                     grid,
                     pin: self.target.pin_threads,
+                    // either telemetry sink arms the span recorders: the
+                    // trace file consumes the spans directly, the JSON
+                    // report builds its phase histogram from them
+                    trace: !self.output.trace_out.is_empty()
+                        || !self.output.report_json.is_empty(),
                 })
             }
             other => Err(Error::Parse(format!(
@@ -738,6 +771,9 @@ mod tests {
         cfg.output.every = 7;
         cfg.output.dir = "out/run1".into();
         cfg.output.vtk = true;
+        cfg.output.trace_out = "out/trace.json".into();
+        cfg.output.report_json = "out/run.json".into();
+        cfg.output.heartbeat = 5;
 
         let back = Config::from_toml_str(&cfg.to_toml_string()).unwrap();
         assert_eq!(back.simulation.lattice, cfg.simulation.lattice);
@@ -770,6 +806,23 @@ mod tests {
         assert_eq!(back.output.every, cfg.output.every);
         assert_eq!(back.output.dir, cfg.output.dir);
         assert_eq!(back.output.vtk, cfg.output.vtk);
+        assert_eq!(back.output.trace_out, cfg.output.trace_out);
+        assert_eq!(back.output.report_json, cfg.output.report_json);
+        assert_eq!(back.output.heartbeat, cfg.output.heartbeat);
+    }
+
+    #[test]
+    fn telemetry_knobs_arm_the_comms_trace() {
+        let mut cfg = Config::from_toml_str(SAMPLE).unwrap();
+        cfg.target.ranks = 2;
+        assert!(!cfg.comms_config().unwrap().trace,
+                "tracing is off by default");
+        cfg.output.trace_out = "trace.json".into();
+        assert!(cfg.comms_config().unwrap().trace);
+        cfg.output.trace_out.clear();
+        cfg.output.report_json = "run.json".into();
+        assert!(cfg.comms_config().unwrap().trace,
+                "the JSON report's phase histogram needs spans too");
     }
 
     #[test]

@@ -2,17 +2,20 @@
 //! state, advance in blocks while logging observables, emit CSV/VTK.
 
 use std::path::Path;
+use std::time::Instant;
 
 use crate::comms::launcher::{connect_rank, LocalRanks, RankServer};
-use crate::comms::{CommsSession, CommsWorld};
+use crate::comms::{CommsSession, CommsWorld, WorldReport};
 use crate::config::{Config, ObservablesMode, TransportMode};
 use crate::error::{Error, Result};
 use crate::lattice::io::{write_vtk_scalar, CsvWriter};
 use crate::lb::engine::{state_observables, LbEngine, Observables};
 use crate::lb::init;
 use crate::lb::model::LatticeModel;
+use crate::obs::trace::{Span, TracePhase, AXIS_NONE, SIDE_NONE};
 use crate::targetdp::target::KernelId;
 use crate::targetdp::tlp::threads_per_rank;
+use crate::util::json::{obj, Json};
 
 use super::metrics::{Mlups, Timer};
 
@@ -108,6 +111,15 @@ pub fn run_simulation(cfg: &Config) -> Result<RunSummary> {
     let transport = cfg.transport_mode()?;
     if cfg.target.ranks > 1 || transport == TransportMode::Socket {
         return run_decomposed_simulation(cfg, transport);
+    }
+    if !cfg.output.trace_out.is_empty() || !cfg.output.report_json.is_empty()
+    {
+        // the span recorders live in the comms ranks; the single-engine
+        // path has none — surface the mismatch instead of silently
+        // writing nothing
+        println!("note     : --trace-out/--report-json trace the comms \
+                  ranks; this single-engine run (ranks = 1) writes no \
+                  telemetry");
     }
     let geom = cfg.geometry();
     let model = cfg.model()?;
@@ -330,6 +342,7 @@ fn run_decomposed_simulation(cfg: &Config, transport: TransportMode)
         ObservablesMode::Reduced => None,
     };
     let mut last_obs = initial;
+    let mut last_beat = Instant::now();
     while done < cfg.simulation.steps {
         let todo = block.min(cfg.simulation.steps - done);
         let t = Timer::start();
@@ -351,6 +364,21 @@ fn run_decomposed_simulation(cfg: &Config, transport: TransportMode)
         if let Some(w) = csv.as_mut() {
             w.row(&[done as f64, obs.mass, obs.phi_total, obs.phi_variance,
                     mlups.value()])?;
+        }
+        // progress heartbeat, rate-limited to at most one line per
+        // `heartbeat` seconds (gather-mode observables carry no wait
+        // partials, so the wait column shows n/a there)
+        if cfg.output.heartbeat > 0
+            && last_beat.elapsed().as_secs() >= cfg.output.heartbeat
+        {
+            let wait = match session.max_wait_fraction() {
+                Some(w) => format!("{:.1}%", 100.0 * w),
+                None => "n/a".into(),
+            };
+            println!("heartbeat: step {done}/{}, {:.2} MLUPS, max wait \
+                      {wait}",
+                     cfg.simulation.steps, mlups.value());
+            last_beat = Instant::now();
         }
     }
     let final_obs = last_obs;
@@ -388,6 +416,16 @@ fn run_decomposed_simulation(cfg: &Config, transport: TransportMode)
     println!("exchange : {:.2} MiB total over {} steps",
              bytes_sent as f64 / (1024.0 * 1024.0), done);
 
+    if !cfg.output.trace_out.is_empty() {
+        write_json_file(&cfg.output.trace_out,
+                        &chrome_trace_json(&report.traces))?;
+    }
+    if !cfg.output.report_json.is_empty() {
+        write_json_file(&cfg.output.report_json,
+                        &run_report_json(cfg, &report, done, n,
+                                         mlups.value()))?;
+    }
+
     if let Some(w) = csv.as_mut() {
         w.flush()?;
     }
@@ -407,6 +445,175 @@ fn run_decomposed_simulation(cfg: &Config, transport: TransportMode)
         summary.steps, summary.seconds, summary.mlups, summary.mass_drift()
     );
     Ok(summary)
+}
+
+/// Serialize `value` to `path` (parent directories created on demand)
+/// and log the destination like the CSV/VTK writers do.
+fn write_json_file(path: &str, value: &Json) -> Result<()> {
+    let p = Path::new(path);
+    if let Some(parent) = p.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(p, value.to_string())?;
+    println!("wrote {}", p.display());
+    Ok(())
+}
+
+/// Span axis tag → Chrome-trace arg string.
+fn axis_name(axis: u8) -> &'static str {
+    match axis {
+        0 => "x",
+        1 => "y",
+        2 => "z",
+        _ => "?",
+    }
+}
+
+/// Convert the wire-shipped span timelines into the Chrome
+/// `trace_event` JSON object format: one complete (`"ph": "X"`) event
+/// per span with microsecond timestamps against the rank's run epoch,
+/// one process row per rank (`pid` = rank), one thread row per recorder
+/// (`tid` 0 = the rank thread, `tid` t ≥ 1 = TLP worker t−1), with
+/// metadata events naming them. Open the file in `chrome://tracing` or
+/// <https://ui.perfetto.dev>.
+fn chrome_trace_json(traces: &[Vec<Span>]) -> Json {
+    let mut events = Vec::new();
+    for (rank, spans) in traces.iter().enumerate() {
+        if spans.is_empty() {
+            continue;
+        }
+        events.push(obj(vec![
+            ("name", Json::from("process_name")),
+            ("ph", Json::from("M")),
+            ("pid", Json::from(rank)),
+            ("args", obj(vec![("name",
+                               Json::from(format!("rank {rank}")))])),
+        ]));
+        let mut tids: Vec<u32> = spans.iter().map(|s| s.tid).collect();
+        tids.sort_unstable();
+        tids.dedup();
+        for tid in tids {
+            let label = if tid == 0 {
+                "rank thread".to_string()
+            } else {
+                format!("tlp worker {}", tid - 1)
+            };
+            events.push(obj(vec![
+                ("name", Json::from("thread_name")),
+                ("ph", Json::from("M")),
+                ("pid", Json::from(rank)),
+                ("tid", Json::from(tid as u64)),
+                ("args", obj(vec![("name", Json::from(label))])),
+            ]));
+        }
+        for s in spans {
+            let mut args = vec![("step", Json::from(s.step))];
+            if s.axis != AXIS_NONE {
+                args.push(("axis", Json::from(axis_name(s.axis))));
+            }
+            if s.side != SIDE_NONE {
+                args.push(("side", Json::from(if s.side == 0 {
+                    "low"
+                } else {
+                    "high"
+                })));
+            }
+            events.push(obj(vec![
+                ("name", Json::from(s.phase.name())),
+                ("ph", Json::from("X")),
+                ("pid", Json::from(rank)),
+                ("tid", Json::from(s.tid as u64)),
+                ("ts", Json::from(s.t_start * 1e6)),
+                ("dur", Json::from((s.t_end - s.t_start) * 1e6)),
+                ("args", obj(args)),
+            ]));
+        }
+    }
+    obj(vec![
+        ("displayTimeUnit", Json::from("ms")),
+        ("traceEvents", Json::Array(events)),
+    ])
+}
+
+/// Build the `--report-json` document: a config echo, whole-world
+/// summary, and per-rank counters (per-axis halo traffic, super-steps,
+/// MLUPS, wait fraction, and the wall-time-per-phase histogram summed
+/// from the rank thread's spans — nested phases like the `send` inside
+/// a `pack` each count their own wall time).
+fn run_report_json(cfg: &Config, report: &WorldReport, steps: u64,
+                   nsites: usize, mlups: f64) -> Json {
+    let s = &cfg.simulation;
+    let t = &cfg.target;
+    let config = obj(vec![
+        ("lattice", Json::from(s.lattice.as_str())),
+        ("lx", Json::from(s.lx)),
+        ("ly", Json::from(s.ly)),
+        ("lz", Json::from(s.lz)),
+        ("steps", Json::from(s.steps)),
+        ("init", Json::from(s.init.as_str())),
+        ("seed", Json::from(s.seed)),
+        ("backend", Json::from(t.backend.as_str())),
+        ("vvl", Json::from(t.vvl)),
+        ("threads", Json::from(t.threads)),
+        ("schedule", Json::from(t.schedule.as_str())),
+        ("ranks", Json::from(t.ranks)),
+        ("grid", Json::from(t.grid.as_str())),
+        ("overlap", Json::from(t.overlap)),
+        ("comms_depth", Json::from(t.comms_depth)),
+        ("observables", Json::from(t.observables.as_str())),
+        ("transport", Json::from(t.transport.as_str())),
+    ]);
+    let empty: Vec<Span> = Vec::new();
+    let ranks: Vec<Json> = report
+        .ranks
+        .iter()
+        .map(|r| {
+            let spans = report.traces.get(r.rank).unwrap_or(&empty);
+            let mut hist = [0.0f64; TracePhase::ALL.len()];
+            for s in spans.iter().filter(|s| s.tid == 0) {
+                hist[s.phase as usize] += s.t_end - s.t_start;
+            }
+            let phases = obj(TracePhase::ALL
+                .iter()
+                .map(|p| (p.name(), Json::from(hist[*p as usize])))
+                .collect());
+            obj(vec![
+                ("rank", Json::from(r.rank)),
+                ("interior_sites", Json::from(r.interior_sites)),
+                ("steps", Json::from(r.steps)),
+                ("compute_s", Json::from(r.compute_s)),
+                ("wait_s", Json::from(r.wait_s)),
+                ("idle_s", Json::from(r.idle_s)),
+                ("mlups", Json::from(r.mlups())),
+                ("wait_fraction", Json::from(r.wait_fraction())),
+                ("bytes_sent", Json::from(r.bytes_sent)),
+                ("msgs_sent", Json::from(r.msgs_sent)),
+                ("bytes_axis",
+                 Json::Array(r.bytes_axis.iter().copied().map(Json::from)
+                     .collect())),
+                ("msgs_axis",
+                 Json::Array(r.msgs_axis.iter().copied().map(Json::from)
+                     .collect())),
+                ("super_steps", Json::from(r.super_steps)),
+                ("spans", Json::from(spans.len())),
+                ("phase_seconds", phases),
+            ])
+        })
+        .collect();
+    obj(vec![
+        ("config", config),
+        ("world", obj(vec![
+            ("ranks", Json::from(report.ranks.len())),
+            ("steps", Json::from(steps)),
+            ("nsites", Json::from(nsites)),
+            ("seconds", Json::from(report.seconds)),
+            ("overlap", Json::from(report.overlap)),
+            ("mlups", Json::from(mlups)),
+        ])),
+        ("ranks", Json::Array(ranks)),
+    ])
 }
 
 /// Entry point of a socket **rank process** (`targetdp rank --connect
@@ -630,6 +837,79 @@ mod tests {
         s.initial.mass = -2.0;
         s.r#final.mass = -1.0;
         assert_eq!(s.mass_drift(), 0.5);
+    }
+
+    #[test]
+    fn telemetry_json_builders_emit_parseable_documents() {
+        use crate::comms::RankReport;
+        let span = |phase, tid, t0: f64, t1: f64| Span {
+            phase,
+            step: 3,
+            axis: AXIS_NONE,
+            side: SIDE_NONE,
+            tid,
+            t_start: t0,
+            t_end: t1,
+        };
+        let report = WorldReport {
+            ranks: vec![RankReport {
+                rank: 0,
+                interior_sites: 64,
+                steps: 6,
+                compute_s: 0.5,
+                wait_s: 0.1,
+                idle_s: 0.05,
+                bytes_sent: 1024,
+                msgs_sent: 12,
+                bytes_axis: [1024, 0, 0],
+                msgs_axis: [12, 0, 0],
+                super_steps: 0,
+            }],
+            seconds: 0.7,
+            overlap: true,
+            traces: vec![vec![span(TracePhase::Interior, 0, 0.0, 0.2),
+                              span(TracePhase::WaitRecv, 0, 0.2, 0.3),
+                              span(TracePhase::Collide, 1, 0.0, 0.1)]],
+        };
+
+        let trace = chrome_trace_json(&report.traces);
+        let parsed = Json::parse(&trace.to_string()).unwrap();
+        let events = parsed.get("traceEvents").as_array().unwrap();
+        // 1 process_name + 2 thread_name metadata + 3 span events
+        assert_eq!(events.len(), 6);
+        let interior = events
+            .iter()
+            .find(|e| e.get("name").as_str().unwrap() == "interior")
+            .expect("interior span event");
+        assert_eq!(interior.get("ph").as_str().unwrap(), "X");
+        assert_eq!(interior.get("pid").as_usize().unwrap(), 0);
+        assert_eq!(interior.get("dur").as_f64().unwrap(), 0.2 * 1e6);
+        assert_eq!(interior.get("args").get("step").as_usize().unwrap(), 3);
+
+        let cfg = Config::from_toml_str(
+            "[simulation]\nlattice = \"d2q9\"\nlx = 8\nly = 8\nlz = 1\n\
+             steps = 6\n\n[target]\nranks = 1\n",
+        )
+        .unwrap();
+        let doc = run_report_json(&cfg, &report, 6, 64, 1.5);
+        let parsed = Json::parse(&doc.to_string()).unwrap();
+        assert_eq!(parsed.get("config").get("lattice").as_str().unwrap(),
+                   "d2q9");
+        assert_eq!(parsed.get("world").get("ranks").as_usize().unwrap(), 1);
+        let ranks = parsed.get("ranks").as_array().unwrap();
+        assert_eq!(ranks[0].get("super_steps").as_usize().unwrap(), 0);
+        assert_eq!(ranks[0].get("bytes_axis").as_array().unwrap()[0]
+                       .as_usize()
+                       .unwrap(),
+                   1024);
+        let phases = ranks[0].get("phase_seconds");
+        assert!((phases.get("interior").as_f64().unwrap() - 0.2).abs()
+                    < 1e-12);
+        assert_eq!(phases.get("collide").as_f64().unwrap(), 0.0,
+                   "worker spans (tid > 0) stay out of the rank-thread \
+                    histogram");
+        assert_eq!(phases.get("idle").as_f64().unwrap(), 0.0,
+                   "every phase key is present, zeros included");
     }
 
     #[test]

@@ -34,6 +34,7 @@ use crate::lattice::stream_table::StreamTable;
 use crate::lb::collision::collide_stream_range;
 use crate::lb::model::VelSet;
 use crate::lb::moments::phi_from_g_range;
+use crate::obs::trace::{SpanRecorder, TracePhase, AXIS_NONE, SIDE_NONE};
 use crate::targetdp::tlp::TlpPool;
 
 /// Halo planes consumed per blocked timestep per side: one for the
@@ -106,6 +107,21 @@ impl MultiStepPlan {
     pub fn run(&mut self, vs: &VelSet, p: &FeParams, f: &[f64], g: &[f64],
                f_out: &mut [f64], g_out: &mut [f64], pool: &TlpPool,
                vvl: usize, scalar: bool) {
+        self.run_traced(vs, p, f, g, f_out, g_out, pool, vvl, scalar,
+                        &mut SpanRecorder::disabled(), 0);
+    }
+
+    /// [`MultiStepPlan::run`] with phase spans: the slab gathers record
+    /// as `Pack`, each blocked step's three sweeps as
+    /// `Interior`/`Gradient`/`Collide` (tagged `step0 + j`), and the
+    /// interior scatter as `Unpack`. With a disabled recorder this *is*
+    /// `run` — tracing only reads the clock around the existing sweeps,
+    /// so the output stays bit-identical either way.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_traced(&mut self, vs: &VelSet, p: &FeParams, f: &[f64],
+                      g: &[f64], f_out: &mut [f64], g_out: &mut [f64],
+                      pool: &TlpPool, vvl: usize, scalar: bool,
+                      trace: &mut SpanRecorder, step0: u64) {
         let n = self.global.nsites();
         let ln = self.local.nsites();
         let plane = self.global.ly * self.global.lz;
@@ -124,6 +140,7 @@ impl MultiStepPlan {
 
             // gather the extended slab [x0 - halo, x0 + slab_w + halo)
             // with periodic x wrap; planes are contiguous per component
+            let t0 = trace.now();
             for (q0, gx, len) in
                 wrapped_runs(self.global.lx, x0 as i64 - halo as i64, lloc)
             {
@@ -136,29 +153,44 @@ impl MultiStepPlan {
                         .copy_from_slice(&g[src..src + len * plane]);
                 }
             }
+            trace.close(TracePhase::Pack, step0, AXIS_NONE, SIDE_NONE, t0);
 
             // k blocked timesteps, the valid window shrinking by
             // HALO_PER_STEP planes per side per step
             for j in 1..=self.k {
+                let step = step0 + j as u64;
                 let c0 = 2 * j - 1;
                 let c1 = lloc - (2 * j - 1);
                 let p0 = 2 * j - 2;
                 let p1 = lloc - (2 * j - 2);
+                pool.trace_context(TracePhase::Interior, step);
+                let t0 = trace.now();
                 phi_from_g_range(vs, &self.g_a, &mut self.phi, ln,
                                  p0 * plane..p1 * plane, pool, vvl);
+                trace.close(TracePhase::Interior, step, AXIS_NONE,
+                            SIDE_NONE, t0);
+                pool.trace_context(TracePhase::Gradient, step);
+                let t0 = trace.now();
                 gradient_fd_range(&self.local, &self.phi, &mut self.grad,
                                   &mut self.lap, c0 * plane..c1 * plane,
                                   pool, vvl);
+                trace.close(TracePhase::Gradient, step, AXIS_NONE,
+                            SIDE_NONE, t0);
+                pool.trace_context(TracePhase::Collide, step);
+                let t0 = trace.now();
                 collide_stream_range(vs, p, &self.f_a, &self.g_a,
                                      &mut self.f_b, &mut self.g_b,
                                      &self.grad, &self.lap, &self.table,
                                      ln, c0 * plane..c1 * plane, pool, vvl,
                                      scalar);
+                trace.close(TracePhase::Collide, step, AXIS_NONE,
+                            SIDE_NONE, t0);
                 std::mem::swap(&mut self.f_a, &mut self.f_b);
                 std::mem::swap(&mut self.g_a, &mut self.g_b);
             }
 
             // scatter the (now fully advanced) interior planes back
+            let t0 = trace.now();
             for c in 0..self.nvel {
                 let src = c * ln + halo * plane;
                 let dst = c * n + x0 * plane;
@@ -167,6 +199,8 @@ impl MultiStepPlan {
                 g_out[dst..dst + wb * plane]
                     .copy_from_slice(&self.g_a[src..src + wb * plane]);
             }
+            trace.close(TracePhase::Unpack, step0 + self.k as u64,
+                        AXIS_NONE, SIDE_NONE, t0);
         }
     }
 }
@@ -263,6 +297,48 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn traced_run_is_bitwise_equal_and_labels_every_blocked_step() {
+        use std::time::Instant;
+        let vs = d2q9();
+        let p = FeParams::default();
+        let geom = Geometry::new(9, 6, 1);
+        let n = geom.nsites();
+        let mut f0 = vec![0.0; vs.nvel * n];
+        let mut g0 = vec![0.0; vs.nvel * n];
+        init::init_spinodal(vs, &p, &geom, &mut f0, &mut g0, 0.05, 5);
+
+        let mut plan = MultiStepPlan::new(vs, geom, 2, 4);
+        let mut f_ref = vec![0.0; vs.nvel * n];
+        let mut g_ref = vec![0.0; vs.nvel * n];
+        plan.run(vs, &p, &f0, &g0, &mut f_ref, &mut g_ref,
+                 &TlpPool::serial(), 8, false);
+
+        let mut rec = SpanRecorder::enabled(1024, Instant::now());
+        let mut f_out = vec![0.0; vs.nvel * n];
+        let mut g_out = vec![0.0; vs.nvel * n];
+        plan.run_traced(vs, &p, &f0, &g0, &mut f_out, &mut g_out,
+                        &TlpPool::serial(), 8, false, &mut rec, 10);
+        assert_eq!(f_out, f_ref, "tracing must not change the state");
+        assert_eq!(g_out, g_ref);
+
+        let spans = rec.take_spans();
+        assert!(!spans.is_empty());
+        // every blocked step (absolute: step0 + 1..=k) shows all three
+        // sweeps, and the gather/scatter bracket each slab
+        for step in [11u64, 12] {
+            for phase in [TracePhase::Interior, TracePhase::Gradient,
+                          TracePhase::Collide] {
+                assert!(spans.iter().any(|s| s.phase == phase
+                                         && s.step == step),
+                        "missing {phase:?} at step {step}");
+            }
+        }
+        assert!(spans.iter().any(|s| s.phase == TracePhase::Pack));
+        assert!(spans.iter().any(|s| s.phase == TracePhase::Unpack));
+        assert!(spans.iter().all(|s| s.t_end >= s.t_start && s.tid == 0));
     }
 
     #[test]

@@ -21,6 +21,9 @@
 //! * [`comms`] — the distribution level above targetDP (the paper's
 //!   "combined with MPI" tier): concurrent slab ranks over pluggable
 //!   transports with halo exchange overlapped against interior compute.
+//! * [`obs`] — observability: the per-thread phase span recorder behind
+//!   `--trace-out`/`--report-json` (Chrome-trace timelines and JSON run
+//!   reports for decomposed runs; off by default and free when off).
 //! * [`lb`] — the motivating application: a binary-fluid lattice-Boltzmann
 //!   engine (D2Q9/D3Q19) whose *binary collision* kernel is the paper's
 //!   Figure-1 benchmark.
@@ -45,6 +48,7 @@ pub mod error;
 pub mod free_energy;
 pub mod lattice;
 pub mod lb;
+pub mod obs;
 pub mod runtime;
 pub mod targetdp;
 pub mod util;

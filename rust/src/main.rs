@@ -28,7 +28,8 @@ USAGE:
                  [--pin-threads true|false]
                  [--observables reduced|gather]
                  [--transport channel|socket] [--rank-server HOST:PORT]
-                 [--out DIR] [--vtk]
+                 [--out DIR] [--vtk] [--trace-out FILE]
+                 [--report-json FILE] [--heartbeat SECS]
     targetdp rank --connect HOST:PORT [--rank R]
     targetdp info
     targetdp help
@@ -62,6 +63,15 @@ run options (ignored when --config is given):
                   instead of spawning them locally  [spawn-local]
     --out         output directory for CSV/VTK      [none]
     --vtk         dump a phi snapshot at the end
+    --trace-out   write a Chrome trace_event JSON
+                  span timeline (ranks > 1; open in
+                  chrome://tracing or Perfetto)     [off]
+    --report-json write a JSON run report: config
+                  echo + per-rank counters + phase
+                  histogram (ranks > 1)             [off]
+    --heartbeat   driver progress line at most every
+                  N seconds between logging blocks
+                  (step/total, mlups, max wait%)    [0 = off]
 
 rank options (a socket rank process; normally spawned by the driver):
     --connect     the driver's rank-server address  (required)
@@ -122,6 +132,9 @@ fn run() -> targetdp::Result<()> {
                             every: args.u64_or("every", 50)?,
                             dir: args.str_or("out", ""),
                             vtk: args.has("vtk"),
+                            trace_out: args.str_or("trace-out", ""),
+                            report_json: args.str_or("report-json", ""),
+                            heartbeat: args.u64_or("heartbeat", 0)?,
                         },
                     }
                 }

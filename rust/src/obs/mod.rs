@@ -1,0 +1,22 @@
+//! `obs` — observability: phase-level tracing and run telemetry.
+//!
+//! The comms tier reports three aggregate floats per rank
+//! (`compute_s`/`wait_s`/`idle_s`); this module adds the level below:
+//! **span timelines**. Every rank (and, optionally, every TLP worker)
+//! records `(phase, t_start, t_end, step, axis/side)` intervals into a
+//! preallocated ring buffer ([`trace::SpanRecorder`]) against a shared
+//! per-rank epoch. Recording is **off by default** and a disabled
+//! recorder is a no-op — the hot paths stay bit-identical and pay one
+//! branch per instrumentation site.
+//!
+//! At `Shutdown` a tracing rank ships its buffer to the driver as a
+//! `Trace` wire frame ([`crate::comms::wire::TraceMsg`]) just before its
+//! lifetime `Report`; the driver merges the per-rank timelines into a
+//! Chrome `trace_event` JSON (`--trace-out`, one pid per rank, one tid
+//! per TLP worker — open in `chrome://tracing` or Perfetto) and a
+//! machine-readable run report (`--report-json`) with per-rank counters
+//! and a per-phase time histogram.
+
+pub mod trace;
+
+pub use trace::{PoolTrace, Span, SpanRecorder, TracePhase};

@@ -1,0 +1,424 @@
+//! Low-overhead per-thread span recorder.
+//!
+//! A [`Span`] is one timed interval of a fixed [`TracePhase`] — pack,
+//! send, wait, unpack, the compute sweeps, reductions, idle — tagged
+//! with the timestep and (for halo traffic) the axis/side it served.
+//! Spans accumulate in a preallocated ring buffer ([`SpanRecorder`]);
+//! when the ring wraps, the oldest spans are overwritten and counted in
+//! [`SpanRecorder::dropped`], so a tracing run can never grow its memory
+//! footprint.
+//!
+//! Timestamps are `f64` seconds since a per-rank **epoch**
+//! ([`std::time::Instant`]) shared by the rank thread and its TLP
+//! workers — so one rank's spans are mutually ordered. Epochs are *not*
+//! synchronized across ranks (socket ranks are separate processes with
+//! separate clocks); the Chrome-trace export keeps one timeline (pid)
+//! per rank, which is exactly the granularity the epoch guarantees.
+//!
+//! A recorder built with [`SpanRecorder::disabled`] allocates nothing
+//! and turns [`SpanRecorder::record`] into a single branch — the
+//! parity-critical paths are instrumented unconditionally and pay only
+//! that branch when tracing is off.
+//!
+//! ```
+//! use std::time::Instant;
+//! use targetdp::obs::trace::{SpanRecorder, TracePhase, AXIS_NONE,
+//!                            SIDE_NONE};
+//!
+//! let mut rec = SpanRecorder::enabled(64, Instant::now());
+//! let t0 = rec.now();
+//! // ... the work being timed ...
+//! rec.close(TracePhase::Interior, 3, AXIS_NONE, SIDE_NONE, t0);
+//! assert_eq!(rec.len(), 1);
+//! let spans = rec.take_spans();
+//! assert_eq!(spans[0].phase, TracePhase::Interior);
+//! assert!(spans[0].t_end >= spans[0].t_start);
+//! ```
+
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// `axis` tag of a span that is not tied to a lattice axis.
+pub const AXIS_NONE: u8 = 255;
+/// `side` tag of a span that is not tied to a low/high side.
+pub const SIDE_NONE: u8 = 255;
+
+/// The fixed phase vocabulary of the instrumented hot paths. The
+/// discriminants are the wire encoding (`Trace` frame span records) and
+/// are stable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum TracePhase {
+    /// Packing halo faces / ghost blocks into send buffers.
+    Pack = 0,
+    /// Handing a packed message to the transport (`isend`).
+    Send = 1,
+    /// Blocked in `wait`/`wait_block` for a halo message.
+    WaitRecv = 2,
+    /// Unpacking a received face / ghost block into the halo.
+    Unpack = 3,
+    /// Interior compute that needs no halo (phi moments, deep sweeps).
+    Interior = 4,
+    /// Halo-adjacent compute finished after message arrival (edge
+    /// planes, shell runs, trapezoid rims).
+    EdgeRim = 5,
+    /// Finite-difference gradient/laplacian sweeps.
+    Gradient = 6,
+    /// Collision (collide, or fused collide→stream) sweeps.
+    Collide = 7,
+    /// Pure streaming sweeps (the unfused second exchange half).
+    Stream = 8,
+    /// Observable reductions (mass/momentum/phi partial sums).
+    Reduce = 9,
+    /// Synchronization that is neither wait-for-halo nor idle (reserved
+    /// for collective barriers; currently unused by the slab/grid
+    /// schedules).
+    Barrier = 10,
+    /// Parked at the command barrier between driver blocks.
+    Idle = 11,
+}
+
+impl TracePhase {
+    /// Every phase, in discriminant order.
+    pub const ALL: [TracePhase; 12] = [
+        TracePhase::Pack,
+        TracePhase::Send,
+        TracePhase::WaitRecv,
+        TracePhase::Unpack,
+        TracePhase::Interior,
+        TracePhase::EdgeRim,
+        TracePhase::Gradient,
+        TracePhase::Collide,
+        TracePhase::Stream,
+        TracePhase::Reduce,
+        TracePhase::Barrier,
+        TracePhase::Idle,
+    ];
+
+    /// Decode a wire discriminant; `None` for anything out of range.
+    pub fn from_u8(v: u8) -> Option<TracePhase> {
+        TracePhase::ALL.get(v as usize).copied()
+    }
+
+    /// Stable lowercase name (the Chrome-trace event name and the
+    /// `--report-json` histogram key).
+    pub fn name(self) -> &'static str {
+        match self {
+            TracePhase::Pack => "pack",
+            TracePhase::Send => "send",
+            TracePhase::WaitRecv => "wait_recv",
+            TracePhase::Unpack => "unpack",
+            TracePhase::Interior => "interior",
+            TracePhase::EdgeRim => "edge_rim",
+            TracePhase::Gradient => "gradient",
+            TracePhase::Collide => "collide",
+            TracePhase::Stream => "stream",
+            TracePhase::Reduce => "reduce",
+            TracePhase::Barrier => "barrier",
+            TracePhase::Idle => "idle",
+        }
+    }
+}
+
+/// One recorded interval: what ran, when, on which timestep, and (for
+/// halo traffic) which face it served. `tid` distinguishes the rank
+/// thread (0) from its TLP workers (worker index + 1) inside one rank's
+/// timeline.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Span {
+    pub phase: TracePhase,
+    pub step: u64,
+    /// 0/1/2 = x/y/z, or [`AXIS_NONE`].
+    pub axis: u8,
+    /// 0 = low, 1 = high, or [`SIDE_NONE`].
+    pub side: u8,
+    /// 0 = the rank thread, `w + 1` = TLP worker `w`.
+    pub tid: u32,
+    /// Seconds since the rank's epoch.
+    pub t_start: f64,
+    /// Seconds since the rank's epoch (`>= t_start`).
+    pub t_end: f64,
+}
+
+/// A preallocated ring buffer of [`Span`]s for one thread.
+///
+/// Disabled (the default everywhere) it allocates nothing and records
+/// nothing; enabled it holds at most `capacity` spans, overwriting the
+/// oldest on wrap (and counting the overwrites). Recording never
+/// allocates after construction.
+#[derive(Debug)]
+pub struct SpanRecorder {
+    enabled: bool,
+    epoch: Instant,
+    buf: Vec<Span>,
+    cap: usize,
+    /// Next write slot once the ring is full.
+    head: usize,
+    /// Spans overwritten after the ring wrapped.
+    dropped: u64,
+}
+
+impl SpanRecorder {
+    /// The no-op recorder: no buffer, `record` is one branch.
+    pub fn disabled() -> SpanRecorder {
+        SpanRecorder {
+            enabled: false,
+            epoch: Instant::now(),
+            buf: Vec::new(),
+            cap: 0,
+            head: 0,
+            dropped: 0,
+        }
+    }
+
+    /// A live recorder holding at most `capacity` spans, timestamped
+    /// against `epoch`.
+    pub fn enabled(capacity: usize, epoch: Instant) -> SpanRecorder {
+        let cap = capacity.max(1);
+        SpanRecorder {
+            enabled: true,
+            epoch,
+            buf: Vec::with_capacity(cap),
+            cap,
+            head: 0,
+            dropped: 0,
+        }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Seconds since the epoch — `0.0` (without reading the clock) when
+    /// disabled, so `let t0 = rec.now(); ...; rec.close(...)` costs two
+    /// branches on the parity path.
+    #[inline]
+    pub fn now(&self) -> f64 {
+        if self.enabled {
+            self.epoch.elapsed().as_secs_f64()
+        } else {
+            0.0
+        }
+    }
+
+    /// Append one span (no-op when disabled; overwrites the oldest span
+    /// once `capacity` is reached).
+    #[inline]
+    pub fn record(&mut self, span: Span) {
+        if !self.enabled {
+            return;
+        }
+        if self.buf.len() < self.cap {
+            self.buf.push(span);
+        } else {
+            self.buf[self.head] = span;
+            self.head = (self.head + 1) % self.cap;
+            self.dropped += 1;
+        }
+    }
+
+    /// Close an interval opened with [`SpanRecorder::now`] on the rank
+    /// thread (tid 0): `[t0, now]`.
+    #[inline]
+    pub fn close(&mut self, phase: TracePhase, step: u64, axis: u8,
+                 side: u8, t0: f64) {
+        if !self.enabled {
+            return;
+        }
+        let t_end = self.epoch.elapsed().as_secs_f64();
+        self.record(Span { phase, step, axis, side, tid: 0, t_start: t0,
+                           t_end });
+    }
+
+    /// Spans currently held (at most the capacity).
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Spans overwritten after the ring wrapped.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Drain the buffer oldest-first, leaving the recorder empty (and
+    /// still enabled).
+    pub fn take_spans(&mut self) -> Vec<Span> {
+        let head = std::mem::take(&mut self.head);
+        let buf = std::mem::take(&mut self.buf);
+        if self.enabled {
+            self.buf = Vec::with_capacity(self.cap);
+        }
+        if head == 0 {
+            return buf; // never wrapped: already oldest-first
+        }
+        let mut out = Vec::with_capacity(buf.len());
+        out.extend_from_slice(&buf[head..]);
+        out.extend_from_slice(&buf[..head]);
+        out
+    }
+}
+
+/// Span recording for the TLP worker pool: one ring per worker plus the
+/// *context* (phase, step) the rank thread publishes before each traced
+/// kernel launch.
+///
+/// The rank thread owns the kernel schedule but the workers own the
+/// time: before launching a traced sweep the rank calls
+/// [`PoolTrace::set_context`]; each worker times its own share of the
+/// launch and records one span (tid = worker + 1) under that context.
+/// Context reads/writes are relaxed atomics — the pool's launch
+/// handshake already orders them, and a torn read is impossible (two
+/// independent words, each updated before the launch they describe).
+#[derive(Debug)]
+pub struct PoolTrace {
+    epoch: Instant,
+    phase: AtomicU8,
+    step: AtomicU64,
+    recs: Vec<Mutex<SpanRecorder>>,
+}
+
+impl PoolTrace {
+    /// One ring of `capacity` spans per worker, timestamped against the
+    /// rank's `epoch`.
+    pub fn new(nworkers: usize, epoch: Instant, capacity: usize)
+               -> Arc<PoolTrace> {
+        let recs = (0..nworkers.max(1))
+            .map(|_| Mutex::new(SpanRecorder::enabled(capacity, epoch)))
+            .collect();
+        Arc::new(PoolTrace {
+            epoch,
+            phase: AtomicU8::new(TracePhase::Interior as u8),
+            step: AtomicU64::new(0),
+            recs,
+        })
+    }
+
+    /// Publish the phase/step the next traced launch belongs to.
+    #[inline]
+    pub fn set_context(&self, phase: TracePhase, step: u64) {
+        self.phase.store(phase as u8, Ordering::Relaxed);
+        self.step.store(step, Ordering::Relaxed);
+    }
+
+    /// Seconds since the rank's epoch.
+    #[inline]
+    pub fn now(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64()
+    }
+
+    /// Record worker `w`'s share of the current launch as `[t0, now]`
+    /// under the published context.
+    pub fn record(&self, w: usize, t0: f64) {
+        let t_end = self.now();
+        let phase = TracePhase::from_u8(self.phase.load(Ordering::Relaxed))
+            .unwrap_or(TracePhase::Interior);
+        let step = self.step.load(Ordering::Relaxed);
+        if let Some(rec) = self.recs.get(w) {
+            rec.lock().unwrap().record(Span {
+                phase,
+                step,
+                axis: AXIS_NONE,
+                side: SIDE_NONE,
+                tid: w as u32 + 1,
+                t_start: t0,
+                t_end,
+            });
+        }
+    }
+
+    /// Drain every worker's ring, worker-major.
+    pub fn drain(&self) -> Vec<Span> {
+        let mut out = Vec::new();
+        for rec in &self.recs {
+            out.extend(rec.lock().unwrap().take_spans());
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(phase: TracePhase, step: u64, t: f64) -> Span {
+        Span { phase, step, axis: AXIS_NONE, side: SIDE_NONE, tid: 0,
+               t_start: t, t_end: t + 0.5 }
+    }
+
+    #[test]
+    fn disabled_recorder_is_a_no_op() {
+        let mut rec = SpanRecorder::disabled();
+        assert!(!rec.is_enabled());
+        assert_eq!(rec.now(), 0.0, "disabled now() never reads the clock");
+        rec.record(span(TracePhase::Pack, 1, 0.0));
+        rec.close(TracePhase::Interior, 2, AXIS_NONE, SIDE_NONE, 0.0);
+        assert!(rec.is_empty());
+        assert_eq!(rec.buf.capacity(), 0, "disabled allocates nothing");
+        assert!(rec.take_spans().is_empty());
+    }
+
+    #[test]
+    fn capacity_wrap_keeps_newest_oldest_first() {
+        let mut rec = SpanRecorder::enabled(4, Instant::now());
+        for i in 0..7u64 {
+            rec.record(span(TracePhase::Collide, i, i as f64));
+        }
+        assert_eq!(rec.len(), 4);
+        assert_eq!(rec.dropped(), 3, "three spans overwritten");
+        let spans = rec.take_spans();
+        let steps: Vec<u64> = spans.iter().map(|s| s.step).collect();
+        assert_eq!(steps, vec![3, 4, 5, 6],
+                   "the newest capacity spans survive, oldest first");
+        // the recorder keeps working after a drain
+        assert!(rec.is_empty());
+        rec.record(span(TracePhase::Stream, 9, 0.0));
+        assert_eq!(rec.take_spans()[0].step, 9);
+    }
+
+    #[test]
+    fn epoch_timestamps_are_monotonic() {
+        let mut rec = SpanRecorder::enabled(16, Instant::now());
+        let mut last = 0.0;
+        for step in 0..5 {
+            let t0 = rec.now();
+            assert!(t0 >= last, "now() never goes backwards");
+            rec.close(TracePhase::Interior, step, AXIS_NONE, SIDE_NONE,
+                      t0);
+            last = rec.now();
+        }
+        let spans = rec.take_spans();
+        assert_eq!(spans.len(), 5);
+        for w in spans.windows(2) {
+            assert!(w[1].t_start >= w[0].t_start,
+                    "successive spans move forward in epoch time");
+        }
+        for s in &spans {
+            assert!(s.t_end >= s.t_start);
+            assert_eq!(s.tid, 0, "close() records the rank thread");
+        }
+    }
+
+    #[test]
+    fn pool_trace_records_under_published_context() {
+        let pt = PoolTrace::new(2, Instant::now(), 8);
+        pt.set_context(TracePhase::Gradient, 7);
+        let t0 = pt.now();
+        pt.record(0, t0);
+        pt.record(1, t0);
+        pt.set_context(TracePhase::Collide, 8);
+        pt.record(1, pt.now());
+        let spans = pt.drain();
+        assert_eq!(spans.len(), 3);
+        assert_eq!(spans[0].phase, TracePhase::Gradient);
+        assert_eq!(spans[0].step, 7);
+        assert_eq!(spans[0].tid, 1, "worker 0 records tid 1");
+        assert_eq!(spans[2].phase, TracePhase::Collide);
+        assert_eq!(spans[2].tid, 2);
+        assert!(pt.drain().is_empty(), "drain leaves the rings empty");
+    }
+}

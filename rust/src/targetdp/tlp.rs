@@ -28,6 +28,8 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
+use crate::obs::trace::{PoolTrace, TracePhase};
+
 /// Chunk-to-thread assignment policy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Schedule {
@@ -77,6 +79,9 @@ pub struct TlpPool {
     /// unpinned, the default).
     pin: Option<usize>,
     workers: Option<WorkerPool>,
+    /// Per-worker span sink armed by [`TlpPool::set_trace`] (`None` = no
+    /// tracing, the default — launches pay a single branch).
+    trace: Option<Arc<PoolTrace>>,
 }
 
 impl Default for TlpPool {
@@ -87,14 +92,17 @@ impl Default for TlpPool {
 
 impl Clone for TlpPool {
     /// Clones the *configuration*; the clone gets its own fresh workers
-    /// (pinned to the same CPUs if the original was pinned).
+    /// (pinned to the same CPUs if the original was pinned) and shares
+    /// the original's trace sink, if any.
     fn clone(&self) -> Self {
-        match self.pin {
+        let mut pool = match self.pin {
             Some(first) => {
                 TlpPool::new_pinned(self.nthreads, self.schedule, first)
             }
             None => TlpPool::new(self.nthreads, self.schedule),
-        }
+        };
+        pool.trace = self.trace.clone();
+        pool
     }
 }
 
@@ -104,6 +112,7 @@ impl std::fmt::Debug for TlpPool {
             .field("nthreads", &self.nthreads)
             .field("schedule", &self.schedule)
             .field("persistent", &self.workers.is_some())
+            .field("traced", &self.trace.is_some())
             .finish()
     }
 }
@@ -140,7 +149,7 @@ impl TlpPool {
         let nthreads = nthreads.max(1);
         let workers =
             (nthreads > 1).then(|| WorkerPool::spawn(nthreads, None));
-        TlpPool { nthreads, schedule, pin: None, workers }
+        TlpPool { nthreads, schedule, pin: None, workers, trace: None }
     }
 
     /// [`TlpPool::new`] with each worker pinned to one logical CPU:
@@ -162,6 +171,7 @@ impl TlpPool {
                 schedule,
                 pin: Some(first_cpu),
                 workers: None,
+                trace: None,
             };
         }
         let workers = WorkerPool::spawn(nthreads, Some(first_cpu));
@@ -170,6 +180,7 @@ impl TlpPool {
             schedule,
             pin: Some(first_cpu),
             workers: Some(workers),
+            trace: None,
         }
     }
 
@@ -180,6 +191,30 @@ impl TlpPool {
             schedule: Schedule::Static,
             pin: None,
             workers: None,
+            trace: None,
+        }
+    }
+
+    /// Arm per-worker span recording: every subsequent threaded launch
+    /// times each participating worker's share of the kernel and records
+    /// one span per worker per launch into `trace`, labelled with the
+    /// phase/step context last published via [`TlpPool::trace_context`].
+    /// Inline launches (`nthreads == 1` or a single chunk) are not
+    /// recorded — the calling rank's own recorder covers them.
+    ///
+    /// Tracing never reorders or re-times the kernel body itself; it only
+    /// reads the clock around the existing per-worker chunk loop, so
+    /// results are bit-identical with tracing on or off.
+    pub fn set_trace(&mut self, trace: Arc<PoolTrace>) {
+        self.trace = Some(trace);
+    }
+
+    /// Publish the phase/step context that the next launches' worker
+    /// spans will carry. A no-op (one branch) when tracing is off.
+    #[inline]
+    pub fn trace_context(&self, phase: TracePhase, step: u64) {
+        if let Some(tr) = &self.trace {
+            tr.set_context(phase, step);
         }
     }
 
@@ -210,6 +245,7 @@ impl TlpPool {
         let workers =
             self.workers.as_ref().expect("nthreads > 1 spawns workers");
         let nworkers = self.nthreads.min(nchunks);
+        let trace = self.trace.as_deref();
         match self.schedule {
             Schedule::Static => {
                 // contiguous ranges of chunks, remainder spread over the
@@ -217,23 +253,34 @@ impl TlpPool {
                 let per = nchunks / nworkers;
                 let rem = nchunks % nworkers;
                 workers.run(nworkers, &|t: usize| {
+                    let t0 = trace.map(|tr| tr.now());
                     let start = t * per + t.min(rem);
                     let count = per + usize::from(t < rem);
                     for c in start..start + count {
                         run_chunk(c);
+                    }
+                    if let (Some(tr), Some(t0)) = (trace, t0) {
+                        tr.record(t, t0);
                     }
                 });
             }
             Schedule::Dynamic { batch } => {
                 let batch = batch.max(1);
                 let cursor = AtomicUsize::new(0);
-                workers.run(nworkers, &|_t: usize| loop {
-                    let begin = cursor.fetch_add(batch, Ordering::Relaxed);
-                    if begin >= nchunks {
-                        break;
+                workers.run(nworkers, &|t: usize| {
+                    let t0 = trace.map(|tr| tr.now());
+                    loop {
+                        let begin =
+                            cursor.fetch_add(batch, Ordering::Relaxed);
+                        if begin >= nchunks {
+                            break;
+                        }
+                        for c in begin..(begin + batch).min(nchunks) {
+                            run_chunk(c);
+                        }
                     }
-                    for c in begin..(begin + batch).min(nchunks) {
-                        run_chunk(c);
+                    if let (Some(tr), Some(t0)) = (trace, t0) {
+                        tr.record(t, t0);
                     }
                 });
             }
@@ -626,6 +673,31 @@ mod tests {
         let hits = cover(9, 4, one.clone());
         assert!(hits.iter().all(|&h| h == 1));
         let hits = cover(9, 4, one);
+        assert!(hits.iter().all(|&h| h == 1));
+    }
+
+    #[test]
+    fn traced_pool_records_one_span_per_worker_per_launch() {
+        use crate::obs::trace::{PoolTrace, TracePhase};
+        use std::time::Instant;
+        let mut pool = TlpPool::new(3, Schedule::Static);
+        let trace = PoolTrace::new(3, Instant::now(), 64);
+        pool.set_trace(Arc::clone(&trace));
+        pool.trace_context(TracePhase::Collide, 9);
+        // clone shares the sink, and coverage is unchanged by tracing
+        let hits = cover(103, 8, pool.clone());
+        assert!(hits.iter().all(|&h| h == 1));
+        let spans = trace.drain();
+        assert_eq!(spans.len(), 3, "one span per participating worker");
+        for s in &spans {
+            assert_eq!(s.phase, TracePhase::Collide);
+            assert_eq!(s.step, 9);
+            assert!((1..=3).contains(&s.tid), "worker tids are 1-based");
+            assert!(s.t_end >= s.t_start);
+        }
+        // an untraced pool records nothing
+        let quiet = TlpPool::new(2, Schedule::Static);
+        let hits = cover(40, 4, quiet);
         assert!(hits.iter().all(|&h| h == 1));
     }
 

@@ -1,4 +1,6 @@
-//! Minimal JSON reader — just enough for `artifacts/manifest.json`.
+//! Minimal JSON reader + writer — the reader covers
+//! `artifacts/manifest.json`, the writer serializes the telemetry
+//! outputs (`--trace-out` Chrome traces, `--report-json` run reports).
 //!
 //! Full JSON value model, recursive-descent parser, no external deps.
 //! Numbers are f64 (the manifest only stores small integers and f64
@@ -78,6 +80,119 @@ impl Json {
 
     pub fn is_null(&self) -> bool {
         matches!(self, Json::Null)
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Number(n) => {
+                if n.is_finite() {
+                    // `{:?}` prints the shortest string that round-trips
+                    // the f64 bits (and always includes `.0` or an
+                    // exponent, both fine for the parser)
+                    out.push_str(&format!("{n:?}"));
+                } else {
+                    out.push_str("null");
+                }
+            }
+            Json::String(s) => write_escaped(s, out),
+            Json::Array(items) => {
+                out.push('[');
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.write(out);
+                }
+                out.push(']');
+            }
+            Json::Object(map) => {
+                out.push('{');
+                for (i, (k, v)) in map.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_escaped(k, out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+/// Serialize to compact JSON text (`value.to_string()`). The output
+/// parses back with [`Json::parse`]; numbers use Rust's shortest
+/// round-trip f64 formatting, and non-finite numbers (which JSON cannot
+/// represent) serialize as `null`.
+impl std::fmt::Display for Json {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut out = String::new();
+        self.write(&mut out);
+        f.write_str(&out)
+    }
+}
+
+/// Escape and quote a string for JSON output.
+fn write_escaped(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// Shorthand: an object from key/value pairs (keys in given order are
+/// fine — the `BTreeMap` sorts them, which keeps output deterministic).
+pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Object(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+impl From<f64> for Json {
+    fn from(n: f64) -> Json {
+        Json::Number(n)
+    }
+}
+
+impl From<u64> for Json {
+    fn from(n: u64) -> Json {
+        Json::Number(n as f64)
+    }
+}
+
+impl From<usize> for Json {
+    fn from(n: usize) -> Json {
+        Json::Number(n as f64)
+    }
+}
+
+impl From<&str> for Json {
+    fn from(s: &str) -> Json {
+        Json::String(s.to_string())
+    }
+}
+
+impl From<String> for Json {
+    fn from(s: String) -> Json {
+        Json::String(s)
+    }
+}
+
+impl From<bool> for Json {
+    fn from(b: bool) -> Json {
+        Json::Bool(b)
     }
 }
 
@@ -282,6 +397,40 @@ mod tests {
     fn unicode_escape() {
         assert_eq!(Json::parse("\"\\u0041\"").unwrap(),
                    Json::String("A".into()));
+    }
+
+    #[test]
+    fn writer_round_trips() {
+        let v = Json::parse(
+            r#"{"name": "x\n\"y\"", "dims": [1, 2.5, -3e2], "ok": true,
+                "none": null, "empty": [], "nested": {"a": {}}}"#,
+        )
+        .unwrap();
+        let text = v.to_string();
+        assert_eq!(Json::parse(&text).unwrap(), v);
+        // compact and deterministic (BTreeMap key order)
+        assert!(!text.contains(' '), "{text}");
+    }
+
+    #[test]
+    fn writer_formats_scalars() {
+        assert_eq!(Json::Null.to_string(), "null");
+        assert_eq!(Json::from(true).to_string(), "true");
+        assert_eq!(Json::from(1.5).to_string(), "1.5");
+        assert_eq!(Json::from(3u64).to_string(), "3.0");
+        assert_eq!(Json::from("a\tb").to_string(), "\"a\\tb\"");
+        assert_eq!(Json::from(f64::NAN).to_string(), "null",
+                   "JSON has no NaN");
+        assert_eq!(Json::from(f64::INFINITY).to_string(), "null");
+        assert_eq!(Json::from("\u{1}").to_string(), "\"\\u0001\"");
+    }
+
+    #[test]
+    fn obj_helper_builds_objects() {
+        let v = obj(vec![("b", Json::from(2u64)),
+                         ("a", Json::Array(vec![Json::from("x")]))]);
+        assert_eq!(v.to_string(), r#"{"a":["x"],"b":2.0}"#);
+        assert_eq!(Json::parse(&v.to_string()).unwrap(), v);
     }
 
     #[test]

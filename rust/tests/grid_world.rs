@@ -142,6 +142,21 @@ fn grid_traffic_is_six_messages_per_axis_and_schedule_independent() {
             for r in &rep.ranks {
                 assert_eq!(r.msgs_sent, 6 * naxes as u64 * steps,
                            "grid={grid:?} overlap={overlap}");
+                // the per-axis split is a partition of the totals
+                assert_eq!(r.msgs_axis.iter().sum::<u64>(), r.msgs_sent,
+                           "grid={grid:?}: per-axis messages sum to the \
+                            total");
+                assert_eq!(r.bytes_axis.iter().sum::<u64>(), r.bytes_sent,
+                           "grid={grid:?}: per-axis bytes sum to the \
+                            total");
+                // every decomposed axis carries its 6 messages per step,
+                // undecomposed axes carry none
+                for (a, &parts) in grid.iter().enumerate() {
+                    let want =
+                        if parts > 1 { 6 * steps } else { 0 };
+                    assert_eq!(r.msgs_axis[a], want,
+                               "grid={grid:?} axis {a}");
+                }
             }
             traffic.push(rep.ranks.iter()
                              .map(|r| r.bytes_sent)

@@ -304,6 +304,63 @@ fn prop_decomposition_exact() {
     }
 }
 
+/// PROPERTY: Trace frames survive the wire bit-exactly for any span
+/// batch — every phase/axis/side tag combination, arbitrary u64 steps,
+/// arbitrary f64 timestamps (bit-compared), any record count including
+/// zero.
+#[test]
+fn prop_trace_frame_round_trip() {
+    use targetdp::comms::{Frame, TraceMsg};
+    use targetdp::obs::trace::{Span, TracePhase, AXIS_NONE, SIDE_NONE};
+    for case in 0..40u64 {
+        let mut rng = Rng64::new(13_000 + case);
+        let count = (rng.next_u64() % 50) as usize;
+        let spans: Vec<Span> = (0..count)
+            .map(|_| {
+                let nphases = TracePhase::ALL.len() as u64;
+                let t0 = rng.uniform() + 0.5;
+                Span {
+                    phase: TracePhase::ALL
+                        [(rng.next_u64() % nphases) as usize],
+                    step: rng.next_u64(),
+                    axis: match rng.next_u64() % 4 {
+                        3 => AXIS_NONE,
+                        a => a as u8,
+                    },
+                    side: match rng.next_u64() % 3 {
+                        2 => SIDE_NONE,
+                        s => s as u8,
+                    },
+                    tid: (rng.next_u64() % 17) as u32,
+                    t_start: t0,
+                    t_end: t0 + rng.uniform() + 0.5,
+                }
+            })
+            .collect();
+        let msg = TraceMsg { src: (rng.next_u64() % 64) as u32,
+                             spans: spans.clone() };
+        let bytes = Frame::Trace(msg).encode();
+        assert_eq!(bytes.len(), TraceMsg::frame_len(count), "case {case}");
+        match Frame::decode(&bytes).unwrap() {
+            Frame::Trace(back) => {
+                assert_eq!(back.spans.len(), count, "case {case}");
+                for (a, b) in back.spans.iter().zip(&spans) {
+                    assert_eq!(a.phase, b.phase, "case {case}");
+                    assert_eq!(a.step, b.step, "case {case}");
+                    assert_eq!(a.axis, b.axis, "case {case}");
+                    assert_eq!(a.side, b.side, "case {case}");
+                    assert_eq!(a.tid, b.tid, "case {case}");
+                    assert_eq!(a.t_start.to_bits(), b.t_start.to_bits(),
+                               "case {case}");
+                    assert_eq!(a.t_end.to_bits(), b.t_end.to_bits(),
+                               "case {case}");
+                }
+            }
+            other => panic!("case {case}: expected trace, got {other:?}"),
+        }
+    }
+}
+
 /// PROPERTY: TLP chunk coverage is an exact partition for random (n, vvl,
 /// threads, schedule).
 #[test]

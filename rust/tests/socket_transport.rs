@@ -97,6 +97,8 @@ fn wire_frames_round_trip_bitwise_over_tcp() {
         momentum: [-0.0, f64::MIN_POSITIVE, 7.25e11],
         phi_total: -41.5,
         phi_sq: 1e-300,
+        wait_s: 0.125,
+        busy_s: 2.5,
     };
     ranks[1].send_frame(2, &Frame::Partials(p)).unwrap();
     match ctl.recv().unwrap() {

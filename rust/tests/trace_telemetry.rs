@@ -1,0 +1,188 @@
+//! Phase-trace telemetry: enabling span recording must be **free** —
+//! bit-identical fields, identical data-plane traffic accounting — while
+//! shipping a per-rank span timeline to the driver at `Shutdown`. Covers
+//! the channel world (both exchange schedules, super-step depths, rank
+//! grids) and a real 2-rank TCP socket world, where the `Trace` frames
+//! cross an actual byte stream.
+
+use std::thread;
+
+use targetdp::comms::launcher::{connect_rank, RankServer};
+use targetdp::comms::{run_decomposed, serve_rank, CommsConfig, CommsWorld,
+                      SocketTransport, Transport, WorldReport};
+use targetdp::free_energy::symmetric::FeParams;
+use targetdp::lattice::geometry::Geometry;
+use targetdp::lb::init::init_spinodal;
+use targetdp::lb::model::{d2q9, VelSet};
+use targetdp::obs::trace::TracePhase;
+
+const STEPS: u64 = 6;
+
+fn initial_state(vs: &VelSet, geom: &Geometry) -> (Vec<f64>, Vec<f64>) {
+    let n = geom.nsites();
+    let mut f = vec![0.0; vs.nvel * n];
+    let mut g = vec![0.0; vs.nvel * n];
+    init_spinodal(vs, &FeParams::default(), geom, &mut f, &mut g, 0.05,
+                  31);
+    (f, g)
+}
+
+/// Run one channel world to completion and return (f, g, report).
+fn run_world(geom: &Geometry, cfg: &CommsConfig)
+             -> (Vec<f64>, Vec<f64>, WorldReport) {
+    let vs = d2q9();
+    let (mut f, mut g) = initial_state(vs, geom);
+    let rep = run_decomposed(geom, vs, &FeParams::default(), &mut f,
+                             &mut g, STEPS, cfg)
+        .unwrap();
+    (f, g, rep)
+}
+
+/// Every rank's timeline must cover the required phase classes: at least
+/// one receive wait and at least one interior-compute span, all on a
+/// sane clock (`t_end >= t_start`, against the shared run epoch).
+fn check_timelines(rep: &WorldReport, label: &str) {
+    assert_eq!(rep.traces.len(), rep.ranks.len(), "{label}");
+    for (rank, spans) in rep.traces.iter().enumerate() {
+        assert!(!spans.is_empty(), "{label}: rank {rank} shipped no spans");
+        let count = |p: TracePhase| {
+            spans.iter().filter(|s| s.phase == p).count()
+        };
+        assert!(count(TracePhase::WaitRecv) >= 1,
+                "{label}: rank {rank} has no wait_recv span");
+        assert!(count(TracePhase::Interior) >= 1,
+                "{label}: rank {rank} has no interior span");
+        assert!(count(TracePhase::Pack) >= 1,
+                "{label}: rank {rank} has no pack span");
+        assert!(spans.iter().any(|s| s.tid == 0),
+                "{label}: rank {rank} has no rank-thread spans");
+        for s in spans {
+            assert!(s.t_end >= s.t_start,
+                    "{label}: rank {rank} span runs backwards: {s:?}");
+            assert!(s.t_start >= 0.0,
+                    "{label}: rank {rank} span precedes the epoch: {s:?}");
+        }
+    }
+}
+
+/// The headline guarantee: tracing only reads the clock around existing
+/// operations, so a traced world is **bit-identical** to an untraced one
+/// and ships the same data-plane traffic — across both exchange
+/// schedules, a communication-avoiding super-step depth, and a 2-D rank
+/// grid.
+#[test]
+fn tracing_is_bit_identical_and_free() {
+    let slab = Geometry::new(9, 6, 1); // 9 -> uneven 5+4 slab split
+    let cases: [(&str, Geometry, CommsConfig); 4] = [
+        ("bulk-sync slab", slab,
+         CommsConfig { ranks: 2, overlap: false,
+                       ..CommsConfig::default() }),
+        ("overlap slab", slab,
+         CommsConfig { ranks: 2, overlap: true,
+                       ..CommsConfig::default() }),
+        // wide slabs: depth 2 needs room for the ghost blocks
+        ("depth-2 super-step", Geometry::new(32, 6, 1),
+         CommsConfig { ranks: 2, depth: 2, ..CommsConfig::default() }),
+        ("2x2 rank grid", Geometry::new(9, 8, 1),
+         CommsConfig { ranks: 4, grid: [2, 2, 1],
+                       ..CommsConfig::default() }),
+    ];
+    for (label, geom, cfg) in cases {
+        let (f_off, g_off, rep_off) = run_world(&geom, &cfg);
+        let traced = CommsConfig { trace: true, ..cfg };
+        let (f_on, g_on, rep_on) = run_world(&geom, &traced);
+
+        assert_eq!(f_on, f_off, "{label}: tracing perturbed f");
+        assert_eq!(g_on, g_off, "{label}: tracing perturbed g");
+
+        // trace frames are control-plane: the halo-traffic accounting
+        // must not move by a single byte or message
+        for (on, off) in rep_on.ranks.iter().zip(&rep_off.ranks) {
+            assert_eq!(on.msgs_sent, off.msgs_sent,
+                       "{label}: tracing changed the message count");
+            assert_eq!(on.bytes_sent, off.bytes_sent,
+                       "{label}: tracing changed the byte count");
+            assert_eq!(on.msgs_axis, off.msgs_axis,
+                       "{label}: tracing changed per-axis messages");
+        }
+
+        // off by default: no rank ships a single span
+        assert!(rep_off.traces.iter().all(Vec::is_empty),
+                "{label}: untraced world shipped spans");
+        check_timelines(&rep_on, label);
+    }
+}
+
+/// Assemble an N-rank + controller socket world on loopback (same
+/// production rendezvous as the multi-process launcher).
+fn loopback_world(nranks: usize)
+                  -> (Vec<SocketTransport>, SocketTransport) {
+    let server = RankServer::bind("127.0.0.1:0").unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let joins: Vec<_> = (0..nranks)
+        .map(|r| {
+            let addr = addr.clone();
+            thread::spawn(move || connect_rank(&addr, Some(r)).unwrap())
+        })
+        .collect();
+    let ctl = server.rendezvous(nranks, b"").unwrap();
+    let mut ranks: Vec<Option<SocketTransport>> =
+        (0..nranks).map(|_| None).collect();
+    for j in joins {
+        let (t, _payload) = j.join().unwrap();
+        let r = t.rank();
+        assert!(ranks[r].is_none());
+        ranks[r] = Some(t);
+    }
+    (ranks.into_iter().map(Option::unwrap).collect(), ctl)
+}
+
+/// The socket acceptance test: a traced 2-rank TCP world is bit-identical
+/// to the untraced channel world, its `Trace` frames survive the real
+/// byte stream, and the wire-traffic pins still hold (trace frames ride
+/// the control plane, not the halo counters).
+#[test]
+fn traced_socket_world_is_bit_identical_and_ships_timelines() {
+    let vs = d2q9();
+    let geom = Geometry::new(9, 6, 1);
+    let n = geom.nsites();
+    let p = FeParams::default();
+    let (f0, g0) = initial_state(vs, &geom);
+
+    // reference: untraced channel world
+    let cfg_off = CommsConfig { ranks: 2, ..CommsConfig::default() };
+    let (f_ch, g_ch, _) = run_world(&geom, &cfg_off);
+
+    // traced socket world over real loopback TCP
+    let cfg = CommsConfig { trace: true, ..cfg_off };
+    let (rank_transports, ctl) = loopback_world(2);
+    let world = CommsWorld::new(geom, cfg.clone()).unwrap();
+    let mut servers = Vec::new();
+    for t in rank_transports {
+        let d = world.dec.domains[t.rank()].clone();
+        let (f0, g0) = (f0.clone(), g0.clone());
+        let cfg = cfg.clone();
+        servers.push(thread::spawn(move || {
+            serve_rank(d, vs, &p, f0, g0, &cfg, 1, Box::new(t))
+        }));
+    }
+    let mut session = world.remote_session(vs, Box::new(ctl)).unwrap();
+    session.advance(STEPS).unwrap();
+    let mut f_s = vec![0.0; vs.nvel * n];
+    let mut g_s = vec![0.0; vs.nvel * n];
+    session.gather(&mut f_s, &mut g_s).unwrap();
+    let report = session.finish().unwrap();
+    for s in servers {
+        s.join().unwrap().unwrap();
+    }
+
+    assert_eq!(f_s, f_ch, "traced socket world diverged from channel");
+    assert_eq!(g_s, g_ch);
+    for r in &report.ranks {
+        assert_eq!(r.steps, STEPS);
+        // trace frames must not leak into the halo-plane accounting
+        assert_eq!(r.msgs_sent, 6 * STEPS,
+                   "trace frames counted as data-plane messages");
+    }
+    check_timelines(&report, "socket");
+}
