@@ -15,7 +15,8 @@
 //! cargo run --release --example multidomain [-- --ranks N] [--steps K]
 //!                                           [--block B] [--comms-depth D]
 //!                                           [--grid PX,PY,PZ]
-//!                                           [--transport channel|socket]
+//!                                           [--transport channel|socket
+//!                                                        |hybrid]
 //! ```
 //!
 //! `--ranks N` restricts the sweep to one rank count (the CI smoke runs
@@ -37,8 +38,18 @@
 //! processes rendezvous through `comms::launcher`, and the gathered
 //! state must *still* be bit-identical to the in-process reference —
 //! the CI smoke runs this with 2 processes.
+//!
+//! `--transport hybrid` runs the one-process-per-**host** shape: the
+//! ranks are split over two simulated hosts (distinct `TARGETDP_HOST`
+//! tags on loopback), each child carries its block as resident threads,
+//! co-hosted neighbours exchange frames in-process and only the
+//! host-pair link uses TCP. On top of bitwise parity the run asserts
+//! the per-link traffic receipt: intra-host and inter-host bytes both
+//! flow (when the shape has both kinds of link) and their sum accounts
+//! for every halo byte — the CI smoke runs this as 2 hosts x 2 ranks.
 
-use targetdp::comms::launcher::{connect_rank, LocalRanks, RankServer};
+use targetdp::comms::launcher::{connect_world, HostSpec, LocalRanks,
+                                RankServer, WorldEndpoints};
 use targetdp::comms::{run_decomposed, serve_rank, CommsConfig, CommsWorld,
                       Transport, WorldReport};
 use targetdp::free_energy::symmetric::FeParams;
@@ -72,28 +83,51 @@ fn parse_grid(spec: &str) -> [usize; 3] {
     [parts[0], parts[1], parts[2]]
 }
 
-/// Child role (`--rank-child`, spawned by the socket path): rendezvous
-/// with the parent and serve one rank until Shutdown.
+/// Child role (`--rank-child`, spawned by the socket and hybrid paths):
+/// rendezvous with the parent and serve one rank — or, with
+/// `--local-ranks N > 1`, a whole host block of N resident rank threads
+/// — until Shutdown.
 fn rank_child(args: &Args) {
     let server = args.get("connect").expect("child needs --connect");
     let rank = args.usize_or("rank", 0).unwrap();
     let ranks = args.usize_or("ranks", 1).unwrap();
+    let local = args.usize_or("local-ranks", 1).unwrap();
     let overlap = args.bool_or("overlap", true).unwrap();
     let threads = args.usize_or("threads", 0).unwrap();
     let depth = args.usize_or("comms-depth", 1).unwrap();
     let grid = parse_grid(&args.str_or("grid", "0,0,0"));
-    let (transport, _payload) =
-        connect_rank(server, Some(rank)).expect("rendezvous");
     let vs = d3q19();
     let (geom, f0, g0) = setup(vs);
     let cfg = CommsConfig { ranks, overlap, threads, depth, grid,
                             ..CommsConfig::default() };
     let world = CommsWorld::new(geom, cfg.clone()).expect("world");
-    let d = world.dec.domains[transport.rank()].clone();
     let nthreads = threads_per_rank(threads, ranks);
-    serve_rank(d, vs, &FeParams::default(), f0, g0, &cfg, nthreads,
-               Box::new(transport))
-        .expect("serve rank");
+    let (endpoints, _payload) =
+        connect_world(server, Some(rank), local).expect("rendezvous");
+    match endpoints {
+        WorldEndpoints::Socket(transport) => {
+            let d = world.dec.domains[transport.rank()].clone();
+            serve_rank(d, vs, &FeParams::default(), f0, g0, &cfg,
+                       nthreads, Box::new(transport))
+                .expect("serve rank");
+        }
+        WorldEndpoints::Hybrid(eps) => {
+            // hybrid host process: one resident thread per carried rank
+            let mut joins = Vec::new();
+            for t in eps {
+                let d = world.dec.domains[t.rank()].clone();
+                let (f0, g0) = (f0.clone(), g0.clone());
+                let cfg = cfg.clone();
+                joins.push(std::thread::spawn(move || {
+                    serve_rank(d, vs, &FeParams::default(), f0, g0, &cfg,
+                               nthreads, Box::new(t))
+                }));
+            }
+            for j in joins {
+                j.join().unwrap().expect("serve rank");
+            }
+        }
+    }
 }
 
 /// Drive a resident session (blocks of `block` steps, one-shot when
@@ -160,11 +194,84 @@ fn run_socket(geom: &Geometry, vs: &'static VelSet, steps: u64, block: u64,
     out
 }
 
+/// Split `ranks` over two simulated hosts (distinct `TARGETDP_HOST`
+/// tags on loopback) — or a single host when there is only one rank.
+/// With the z-fastest rank numbering an even first/second split keeps
+/// the inner-axis faces co-hosted, so the highest-traffic links land on
+/// in-process channels.
+fn host_blocks(ranks: usize) -> Vec<HostSpec> {
+    let tag = |name: &str| {
+        vec![("TARGETDP_HOST".to_string(), name.to_string())]
+    };
+    if ranks < 2 {
+        return vec![HostSpec { first: 0, count: ranks, env: tag("hostA") }];
+    }
+    let half = ranks / 2;
+    vec![HostSpec { first: 0, count: half, env: tag("hostA") },
+         HostSpec { first: half, count: ranks - half, env: tag("hostB") }]
+}
+
+/// One run over host OS processes on loopback (hybrid transport): the
+/// ranks split over two simulated hosts, each child carrying its block
+/// as resident rank threads. Beyond bitwise parity (checked by the
+/// caller) this asserts the per-link traffic receipt: every rank's
+/// intra/inter split sums to its totals, co-hosted neighbours really
+/// exchanged in-process bytes, and the host pair really crossed the
+/// socket.
+fn run_hybrid(geom: &Geometry, vs: &'static VelSet, steps: u64, block: u64,
+              cfg: &CommsConfig) -> (Vec<f64>, Vec<f64>, WorldReport) {
+    let server = RankServer::bind("127.0.0.1:0").expect("bind rank server");
+    let addr = server.local_addr().expect("rank server addr").to_string();
+    let extra = vec!["--rank-child".to_string(),
+                     "--ranks".to_string(), cfg.ranks.to_string(),
+                     "--overlap".to_string(), cfg.overlap.to_string(),
+                     "--threads".to_string(), cfg.threads.to_string(),
+                     "--comms-depth".to_string(), cfg.depth.to_string(),
+                     "--grid".to_string(),
+                     format!("{},{},{}", cfg.grid[0], cfg.grid[1],
+                             cfg.grid[2])];
+    let hosts = host_blocks(cfg.ranks);
+    let local = LocalRanks::spawn_hosts(&hosts, &addr, &extra)
+        .expect("spawn host processes");
+    let controller =
+        server.rendezvous_hosts(cfg.ranks, &[]).expect("rendezvous");
+    let world = CommsWorld::new(*geom, cfg.clone()).expect("world");
+    let session = world
+        .remote_session(vs, Box::new(controller))
+        .expect("remote session");
+    let out = drive(session, vs, geom.nsites(), steps, block, block > 0);
+    local.wait().expect("host processes exited cleanly");
+
+    let rep = &out.2;
+    for r in &rep.ranks {
+        assert_eq!(r.bytes_intra + r.bytes_inter, r.bytes_sent,
+                   "rank {}: per-link byte split must sum to the total",
+                   r.rank);
+        assert_eq!(r.msgs_intra + r.msgs_inter, r.msgs_sent,
+                   "rank {}: per-link message split must sum to the total",
+                   r.rank);
+    }
+    let intra: u64 = rep.ranks.iter().map(|r| r.bytes_intra).sum();
+    let inter: u64 = rep.ranks.iter().map(|r| r.bytes_inter).sum();
+    if hosts.iter().any(|h| h.count > 1) {
+        assert!(intra > 0,
+                "co-hosted ranks exchanged no in-process bytes");
+    }
+    if hosts.len() > 1 && cfg.ranks > 1 {
+        assert!(inter > 0, "the host pair exchanged no socket bytes");
+    }
+    const MIB: f64 = 1024.0 * 1024.0;
+    println!("    per-link split: {:.2} MiB intra-host (channels), \
+              {:.2} MiB inter-host (sockets)",
+             intra as f64 / MIB, inter as f64 / MIB);
+    out
+}
+
 fn main() {
     let args = Args::parse(std::env::args().skip(1))
         .expect("usage: multidomain [--ranks N] [--steps K] [--threads T] \
                  [--block B] [--comms-depth D] [--grid PX,PY,PZ] \
-                 [--transport channel|socket]");
+                 [--transport channel|socket|hybrid]");
     if args.has("rank-child") {
         rank_child(&args);
         return;
@@ -185,11 +292,14 @@ fn main() {
         Some(g)
     };
     let transport = args.str_or("transport", "channel");
-    let socket = match transport.as_str() {
-        "socket" => true,
-        "channel" => false,
-        other => panic!("--transport {other:?}: want channel or socket"),
-    };
+    match transport.as_str() {
+        "channel" | "socket" | "hybrid" => {}
+        other => {
+            panic!("--transport {other:?}: want channel, socket or hybrid")
+        }
+    }
+    let socket = transport == "socket";
+    let hybrid = transport == "hybrid";
 
     let vs = d3q19();
     let (geom, f0, g0) = setup(vs);
@@ -203,7 +313,9 @@ fn main() {
                  None => " on the x-slab grid".to_string(),
              },
              if socket { " as OS processes (socket transport)" }
-             else { "" },
+             else if hybrid {
+                 " as 2 simulated host processes (hybrid transport)"
+             } else { "" },
              if block > 0 {
                  format!(" (resident session, blocks of {block})")
              } else {
@@ -251,7 +363,9 @@ fn main() {
             let cfg = CommsConfig { ranks, overlap, threads, depth,
                                     grid: shape,
                                     ..CommsConfig::default() };
-            let (f, g, rep) = if socket {
+            let (f, g, rep) = if hybrid {
+                run_hybrid(&geom, vs, steps, block, &cfg)
+            } else if socket {
                 run_socket(&geom, vs, steps, block, &cfg)
             } else if block > 0 {
                 let world =
@@ -316,5 +430,9 @@ fn main() {
              if depth > 1 {
                  " across communication-avoiding super-steps"
              } else { "" },
-             if socket { " across rank OS processes" } else { "" });
+             if socket { " across rank OS processes" }
+             else if hybrid {
+                 " across hybrid host processes (per-link intra/inter \
+                  split verified)"
+             } else { "" });
 }

@@ -26,12 +26,21 @@
 //! schedule, sets the halo traffic. Emits `GRID-SPEEDUP` ratios against
 //! the slab plus `HALO-BYTES` totals from the per-rank traffic
 //! counters (the block grid must move the fewest bytes).
+//!
+//! A fourth sweep pits the **hybrid transport** against pure sockets:
+//! the same 4-rank world once as 4 loopback TCP endpoints and once as 2
+//! simulated host processes of 2 resident ranks each, where co-hosted
+//! links ride in-process channels (no framing, no syscalls) and only
+//! the host pair crosses TCP. Identical physics and wire frames; the
+//! `HYBRID-SPEEDUP` ratio isolates the per-message transport cost the
+//! per-link routing removes.
 
 use std::thread;
 
-use targetdp::comms::launcher::{connect_rank, RankServer};
+use targetdp::comms::launcher::{connect_host, connect_rank, RankServer};
 use targetdp::comms::{run_decomposed, serve_rank, CommsConfig,
-                      CommsWorld, SocketTransport, Transport};
+                      CommsWorld, HybridTransport, SocketTransport,
+                      Transport};
 use targetdp::free_energy::symmetric::FeParams;
 use targetdp::lattice::geometry::Geometry;
 use targetdp::lb::init;
@@ -65,6 +74,38 @@ fn loopback_world(nranks: usize)
         let (t, _payload) = j.join().unwrap();
         let r = t.rank();
         ranks[r] = Some(t);
+    }
+    (ranks.into_iter().map(Option::unwrap).collect(), ctl)
+}
+
+/// The same world as a hybrid rendezvous: two simulated host processes
+/// (threads of this process) each carrying half the ranks as resident
+/// endpoints — co-hosted links on in-process channels, one TCP stream
+/// for the host pair and one per host to the controller.
+fn hybrid_world(nranks: usize)
+                -> (Vec<HybridTransport>, HybridTransport) {
+    let server = RankServer::bind("127.0.0.1:0").unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let half = nranks / 2;
+    let blocks = [(0usize, half), (half, nranks - half)];
+    let joins: Vec<_> = blocks
+        .iter()
+        .map(|&(first, count)| {
+            let addr = addr.clone();
+            thread::spawn(move || {
+                connect_host(&addr, Some(first), count).unwrap()
+            })
+        })
+        .collect();
+    let ctl = server.rendezvous_hosts(nranks, b"").unwrap();
+    let mut ranks: Vec<Option<HybridTransport>> =
+        (0..nranks).map(|_| None).collect();
+    for j in joins {
+        let (endpoints, _payload) = j.join().unwrap();
+        for t in endpoints {
+            let r = t.rank();
+            ranks[r] = Some(t);
+        }
     }
     (ranks.into_iter().map(Option::unwrap).collect(), ctl)
 }
@@ -237,6 +278,77 @@ fn main() {
         let shaped = grids.mean_of(&format!("grid {name}"));
         if let (Some(s), Some(g)) = (slab, shaped) {
             println!("GRID-SPEEDUP,shape={name},ranks=8,{:.3}", s / g);
+        }
+    }
+
+    // ---- hybrid vs socket: per-link transport routing -----------------
+    // 4 ranks, 2 simulated hosts of 2 resident ranks: the two inner
+    // slab faces ride channels, only the middle face crosses TCP —
+    // versus the pure-socket world where every face pays framing and
+    // syscalls. Fresh rendezvous per iteration on both sides so the
+    // setup cost cancels out of the ratio.
+    let geom = Geometry::new(64, 8, 8);
+    let n = geom.nsites();
+    let mut f0 = vec![0.0; vs.nvel * n];
+    let mut g0 = vec![0.0; vs.nvel * n];
+    init::init_spinodal(vs, &p, &geom, &mut f0, &mut g0, 0.05, 7);
+    let sites = Some((n as u64 * DEPTH_STEPS) as f64);
+
+    const HYBRID_RANKS: usize = 4;
+    const HYBRID_DEPTHS: [usize; 2] = [1, 2];
+    let mut hyb = targetdp::bench::Bench::new(
+        "hybrid vs socket transport: 4 ranks / 2 hosts, D3Q19 64x8x8");
+    for depth in HYBRID_DEPTHS {
+        let cfg = CommsConfig { ranks: HYBRID_RANKS, depth, threads: 0,
+                                ..CommsConfig::default() };
+        for transport in ["socket", "hybrid"] {
+            hyb.case(&dlabel(transport, depth), sites, || {
+                let world = CommsWorld::new(geom, cfg.clone()).unwrap();
+                let mut servers = Vec::new();
+                let mut serve = |t: Box<dyn Transport + Send>| {
+                    let d = world.dec.domains[t.rank()].clone();
+                    let (f0, g0) = (f0.clone(), g0.clone());
+                    let cfg = cfg.clone();
+                    servers.push(thread::spawn(move || {
+                        serve_rank(d, vs, &p, f0, g0, &cfg, 1, t)
+                    }));
+                };
+                let mut session = if transport == "socket" {
+                    let (rank_transports, ctl) =
+                        loopback_world(HYBRID_RANKS);
+                    for t in rank_transports {
+                        serve(Box::new(t));
+                    }
+                    world.remote_session(vs, Box::new(ctl)).unwrap()
+                } else {
+                    let (rank_transports, ctl) =
+                        hybrid_world(HYBRID_RANKS);
+                    for t in rank_transports {
+                        serve(Box::new(t));
+                    }
+                    world.remote_session(vs, Box::new(ctl)).unwrap()
+                };
+                session.advance(DEPTH_STEPS).unwrap();
+                session.finish().unwrap();
+                for s in servers {
+                    s.join().unwrap().unwrap();
+                }
+            });
+        }
+    }
+
+    hyb.report();
+
+    println!();
+    for depth in HYBRID_DEPTHS {
+        let sock = hyb.mean_of(&dlabel("socket", depth));
+        let hybm = hyb.mean_of(&dlabel("hybrid", depth));
+        if let (Some(s), Some(h)) = (sock, hybm) {
+            println!(
+                "HYBRID-SPEEDUP,ranks={HYBRID_RANKS},hosts=2,\
+                 depth={depth},{:.3}",
+                s / h
+            );
         }
     }
 }

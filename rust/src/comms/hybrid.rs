@@ -1,0 +1,868 @@
+//! Hybrid transport: per-link routing between in-process channels and
+//! host-to-host sockets.
+//!
+//! [`HybridTransport`] is the paper's MPI-combined deployment shape
+//! (threads inside a node, messages only across nodes) applied to the
+//! rank world: one OS process per **host** runs all of that host's
+//! ranks as resident threads, and every peer link is routed by where
+//! the peer lives —
+//!
+//! * **co-hosted peer** → an in-process `std::sync::mpsc` channel: the
+//!   encoded frame bytes are handed over directly, with no
+//!   length-prefix framing, no syscall, and no extra copy;
+//! * **remote peer** → a TCP stream to that peer's host process,
+//!   shared by every (local rank, remote rank) pair between the two
+//!   hosts — plus one stream per host to the driver for the control
+//!   plane.
+//!
+//! Because grid ranks are numbered z-fastest and the rendezvous places
+//! each host's ranks on consecutive ids
+//! ([`crate::comms::launcher::host_grouped_order`]), the co-hosted
+//! links are exactly the *inner-axis* grid faces — the highest-traffic
+//! ones — so a hybrid world moves most halo bytes over channels and
+//! only the outer-axis cut over the network.
+//!
+//! # Envelope framing on host links
+//!
+//! A wire frame carries its source but not its destination, and one
+//! stream now serves several (sender, receiver) pairs, so each frame
+//! on a host link travels in a small **envelope**:
+//!
+//! ```text
+//! offset  size  field
+//!      0     4  destination endpoint id (u32 little-endian)
+//!      4     4  frame length `n` (u32 little-endian, <= MAX_FRAME_LEN)
+//!      8     n  encoded wire::Frame bytes
+//! ```
+//!
+//! One reader thread per host link reassembles envelopes and routes
+//! each complete frame to the destination endpoint's inbox; writes go
+//! through one mutex-guarded writer per link, each frame (or
+//! [`Transport::send_bytes_batch`] batch) leaving as a single
+//! `write_all`. That preserves both transport guarantees across the
+//! merged path: no receive ever returns a partial frame (the reader
+//! owns reassembly), and per-sender-pair order holds because a
+//! sender's envelopes are written whole, in order, onto one TCP stream
+//! that delivers in order — and the reader enqueues in stream order.
+//! Channel links inherit both guarantees from `mpsc` directly.
+//!
+//! # Failure semantics
+//!
+//! Each link closing carries a per-link EOF policy, mirroring
+//! [`crate::comms::socket::SocketTransport`]: a host-pair link closing
+//! cleanly is normal teardown (silent); the *driver* link closing
+//! without a `Shutdown` frame means the driver is gone and surfaces as
+//! an error to every resident rank; and on the **driver's** side a
+//! host link that closes before every resident rank's `Report` frame
+//! crossed it means the host process died mid-run — also an error, so
+//! a lost host is diagnosed instead of waited on. A link dying
+//! mid-envelope is always an error, never truncated bytes.
+
+use std::io::{Read, Write};
+use std::net::{Shutdown, TcpStream};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::comms::socket::MAX_FRAME_LEN;
+use crate::comms::transport::Transport;
+use crate::comms::wire::is_report_frame;
+use crate::error::{Error, Result};
+
+/// Fixed size of one host-link envelope header.
+const ENVELOPE_LEN: usize = 8;
+
+/// What a link reader hands an inbox: one complete frame, or the
+/// reason the link died.
+type InboxItem = std::result::Result<Vec<u8>, String>;
+
+/// What a clean close of one host link means to the endpoints behind
+/// it.
+pub(crate) enum EofPolicy {
+    /// Normal teardown (host-pair links: the remote host finished its
+    /// shutdown and exited).
+    Silent,
+    /// Always an error (a rank's driver link: the driver never closes
+    /// before `Shutdown`, so a clean EOF means the driver is gone).
+    Always(String),
+    /// An error unless `expect` rank `Report` frames crossed the link
+    /// first (the driver's side of a host link: reports are the last
+    /// frames a rank sends, so a close with all of them delivered is a
+    /// normal host-process exit and anything earlier is a mid-run host
+    /// death).
+    UnlessReports { expect: usize, msg: String },
+}
+
+/// One established, handshaken host link: a stream plus the remote
+/// endpoint ids it serves and what its clean close means.
+pub(crate) struct HostLink {
+    pub stream: TcpStream,
+    /// Remote endpoint ids reachable over this stream (a remote host's
+    /// rank block, or `[nranks]` for the driver).
+    pub peers: Vec<usize>,
+    pub eof: EofPolicy,
+}
+
+/// Mutex-guarded write side of one host link, shared by every local
+/// endpoint that routes over it. Each envelope (or batch of envelopes)
+/// leaves as one `write_all` under the lock, so concurrent rank
+/// threads never interleave partial frames.
+struct LinkWriter {
+    stream: Mutex<TcpStream>,
+}
+
+impl LinkWriter {
+    fn write_checked(&self, dst: usize, msg: &[u8]) -> Result<()> {
+        let mut stream = self.stream.lock().map_err(|_| {
+            Error::Invalid(
+                "comms hybrid: a sender panicked holding the link writer"
+                    .to_string(),
+            )
+        })?;
+        stream.write_all(msg).map_err(|e| {
+            Error::Invalid(format!("comms: endpoint {dst} hung up ({e})"))
+        })
+    }
+
+    /// One frame, one buffered write (with TCP_NODELAY the envelope
+    /// and payload leave as a single segment).
+    fn send(&self, dst: usize, frame: &[u8]) -> Result<()> {
+        let mut msg = Vec::with_capacity(ENVELOPE_LEN + frame.len());
+        msg.extend_from_slice(&(dst as u32).to_le_bytes());
+        msg.extend_from_slice(&(frame.len() as u32).to_le_bytes());
+        msg.extend_from_slice(frame);
+        self.write_checked(dst, &msg)
+    }
+
+    /// A whole batch as **one** `write_all` — the super-step ghost
+    /// blocks keep their single-syscall coalescing on the socket side
+    /// of a hybrid world. Each frame keeps its own envelope, so the
+    /// receiver still sees distinct whole frames in order.
+    fn send_batch(&self, dst: usize, frames: &[Vec<u8>]) -> Result<()> {
+        let total: usize =
+            frames.iter().map(|f| ENVELOPE_LEN + f.len()).sum();
+        let mut msg = Vec::with_capacity(total);
+        for frame in frames {
+            msg.extend_from_slice(&(dst as u32).to_le_bytes());
+            msg.extend_from_slice(&(frame.len() as u32).to_le_bytes());
+            msg.extend_from_slice(frame);
+        }
+        self.write_checked(dst, &msg)
+    }
+}
+
+/// The per-process spine of a hybrid mesh: owns the link streams and
+/// reader threads on behalf of every resident endpoint. The last
+/// endpoint dropped drops this, which closes every link (both
+/// directions, unblocking the readers; already-written bytes — the
+/// final `Report` frames — are flushed before the FIN) and joins the
+/// readers.
+struct MeshCore {
+    streams: Vec<TcpStream>,
+    readers: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl Drop for MeshCore {
+    fn drop(&mut self) {
+        for s in &self.streams {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+        if let Ok(mut readers) = self.readers.lock() {
+            for h in readers.drain(..) {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+/// [`Transport`] with per-peer routing: channels to co-hosted
+/// endpoints, shared TCP links to remote hosts.
+///
+/// Built by [`assemble`] (via the rendezvous in
+/// [`crate::comms::launcher`], never directly): a host process gets
+/// one endpoint per resident rank, all sharing the host's link
+/// streams; the driver gets the lone controller endpoint. See the
+/// module docs for framing, ordering, and failure semantics.
+pub struct HybridTransport {
+    rank: usize,
+    nranks: usize,
+    /// Senders into co-hosted endpoints' inboxes, indexed by endpoint
+    /// id (`nranks` = controller). `None` for this endpoint itself and
+    /// for every remote endpoint.
+    chan: Vec<Option<Sender<InboxItem>>>,
+    /// Write sides of the host links, indexed by endpoint id — every
+    /// co-hosted endpoint shares the same `Arc` per link.
+    links: Vec<Option<Arc<LinkWriter>>>,
+    /// Complete frames from co-hosted senders and link readers, in
+    /// per-sender order.
+    inbox: Receiver<InboxItem>,
+    /// Loopback sender for the single-rank periodic seam; `None` in
+    /// every other configuration so a dead world disconnects the
+    /// inbox.
+    self_tx: Option<Sender<InboxItem>>,
+    /// Keeps the link streams and readers alive until the last
+    /// resident endpoint is gone.
+    _core: Arc<MeshCore>,
+}
+
+/// Build every resident endpoint of one hybrid process: `locals` are
+/// the endpoint ids living here (a host's rank block, or `[nranks]`
+/// for the driver), `links` the handshaken streams to every other
+/// host process and/or the driver. Every endpoint id `0..=nranks`
+/// must be covered exactly once, by `locals` or by one link.
+pub(crate) fn assemble(nranks: usize, locals: &[usize],
+                       links: Vec<HostLink>)
+                       -> Result<Vec<HybridTransport>> {
+    let endpoints = nranks + 1;
+    if locals.is_empty() {
+        return Err(Error::Invalid(
+            "comms hybrid: a process with no resident endpoints".into(),
+        ));
+    }
+    // every endpoint id is either resident or behind exactly one link
+    let mut owner: Vec<Option<&'static str>> = vec![None; endpoints];
+    let claim = |owner: &mut Vec<Option<&'static str>>, id: usize,
+                 what: &'static str|
+     -> Result<()> {
+        if id >= endpoints {
+            return Err(Error::Invalid(format!(
+                "comms hybrid: endpoint {id} out of range for a \
+                 {nranks}-rank world"
+            )));
+        }
+        if let Some(prev) = owner[id] {
+            return Err(Error::Invalid(format!(
+                "comms hybrid: endpoint {id} claimed twice ({prev} and \
+                 {what})"
+            )));
+        }
+        owner[id] = Some(what);
+        Ok(())
+    };
+    for &id in locals {
+        claim(&mut owner, id, "local")?;
+    }
+    for link in &links {
+        for &id in &link.peers {
+            claim(&mut owner, id, "a host link")?;
+        }
+    }
+    if let Some(id) = owner.iter().position(Option::is_none) {
+        return Err(Error::Invalid(format!(
+            "comms hybrid: endpoint {id} is neither resident nor behind \
+             any host link"
+        )));
+    }
+
+    // one inbox per resident endpoint
+    let mut txs: Vec<Option<Sender<InboxItem>>> = vec![None; endpoints];
+    let mut rxs: Vec<Option<Receiver<InboxItem>>> = Vec::new();
+    rxs.resize_with(endpoints, || None);
+    for &id in locals {
+        let (tx, rx) = channel::<InboxItem>();
+        txs[id] = Some(tx);
+        rxs[id] = Some(rx);
+    }
+
+    // wire the links: a shared writer per link plus one reader thread
+    // routing inbound envelopes to the resident inboxes
+    let mut writers: Vec<Option<Arc<LinkWriter>>> = vec![None; endpoints];
+    let mut streams = Vec::with_capacity(links.len());
+    let mut readers = Vec::with_capacity(links.len());
+    for link in links {
+        let HostLink { stream, peers, eof } = link;
+        // handshake may have set timeouts; steady state blocks (liveness
+        // timeouts live up in Transport::recv_bytes_timeout) and halo
+        // frames are latency-sensitive single writes — no Nagle
+        stream.set_read_timeout(None)?;
+        stream.set_write_timeout(None)?;
+        stream.set_nodelay(true)?;
+        let writer = Arc::new(LinkWriter {
+            stream: Mutex::new(stream.try_clone()?),
+        });
+        for &id in &peers {
+            writers[id] = Some(Arc::clone(&writer));
+        }
+        let routes: Vec<Option<Sender<InboxItem>>> = txs.clone();
+        let reader_stream = stream.try_clone()?;
+        streams.push(stream);
+        readers.push(std::thread::spawn(move || {
+            link_reader(reader_stream, routes, eof)
+        }));
+    }
+    let core = Arc::new(MeshCore {
+        streams,
+        readers: Mutex::new(readers),
+    });
+
+    // endpoints: channel senders to co-hosted peers, shared link
+    // writers to everyone else
+    let out = locals
+        .iter()
+        .map(|&me| {
+            let chan: Vec<Option<Sender<InboxItem>>> = txs
+                .iter()
+                .enumerate()
+                .map(|(id, tx)| {
+                    (id != me).then(|| tx.clone()).flatten()
+                })
+                .collect();
+            // mirror the other transports: only the single rank of a
+            // 1-rank world keeps a handle to its own inbox (the
+            // periodic self-seam)
+            let self_tx = (nranks == 1 && me == 0)
+                .then(|| txs[me].clone())
+                .flatten();
+            HybridTransport {
+                rank: me,
+                nranks,
+                chan,
+                links: writers.clone(),
+                inbox: rxs[me].take().expect("one endpoint per local id"),
+                self_tx,
+                _core: Arc::clone(&core),
+            }
+        })
+        .collect();
+    Ok(out)
+}
+
+/// Read envelopes off one host link until it closes, routing each
+/// complete frame to the destination endpoint's inbox. A frame for an
+/// endpoint that already exited is dropped (normal teardown skew: its
+/// co-hosted siblings may still be draining); a frame for an endpoint
+/// that was never resident here, a death mid-envelope, or a clean
+/// close the link's [`EofPolicy`] forbids is broadcast as an error to
+/// every resident inbox.
+fn link_reader(mut stream: TcpStream,
+               routes: Vec<Option<Sender<InboxItem>>>, eof: EofPolicy) {
+    let broadcast = |msg: String| {
+        for tx in routes.iter().flatten() {
+            let _ = tx.send(Err(msg.clone()));
+        }
+    };
+    let mut reports = 0usize;
+    loop {
+        match read_envelope(&mut stream) {
+            Ok(Some((dst, frame))) => {
+                if is_report_frame(&frame) {
+                    reports += 1;
+                }
+                match routes.get(dst).and_then(Option::as_ref) {
+                    Some(tx) => {
+                        // a send failure means that endpoint exited;
+                        // keep serving its co-hosted siblings
+                        let _ = tx.send(Ok(frame));
+                    }
+                    None => {
+                        broadcast(format!(
+                            "comms hybrid: a host link routed a frame to \
+                             endpoint {dst}, which is not resident here"
+                        ));
+                        return;
+                    }
+                }
+            }
+            Ok(None) => {
+                match eof {
+                    EofPolicy::Silent => {}
+                    EofPolicy::Always(msg) => broadcast(msg),
+                    EofPolicy::UnlessReports { expect, msg } => {
+                        if reports < expect {
+                            broadcast(msg);
+                        }
+                    }
+                }
+                return;
+            }
+            Err(e) => {
+                broadcast(format!(
+                    "comms hybrid: a host link died mid-frame: {e}"
+                ));
+                return;
+            }
+        }
+    }
+}
+
+/// Read one enveloped frame. `Ok(None)` = the stream closed cleanly at
+/// an envelope boundary; an EOF anywhere inside an envelope is an
+/// error — a partial frame is never surfaced.
+fn read_envelope(stream: &mut TcpStream)
+                 -> std::io::Result<Option<(usize, Vec<u8>)>> {
+    use std::io::{Error as IoError, ErrorKind};
+    let mut head = [0u8; ENVELOPE_LEN];
+    let mut got = 0;
+    while got < ENVELOPE_LEN {
+        let n = stream.read(&mut head[got..])?;
+        if n == 0 {
+            if got == 0 {
+                return Ok(None);
+            }
+            return Err(IoError::new(
+                ErrorKind::UnexpectedEof,
+                "stream ended inside an envelope header",
+            ));
+        }
+        got += n;
+    }
+    let dst = u32::from_le_bytes(head[..4].try_into().unwrap()) as usize;
+    let len = u32::from_le_bytes(head[4..].try_into().unwrap()) as usize;
+    if len > MAX_FRAME_LEN {
+        return Err(IoError::new(
+            ErrorKind::InvalidData,
+            format!("frame length {len} exceeds the {MAX_FRAME_LEN} cap"),
+        ));
+    }
+    let mut buf = vec![0u8; len];
+    stream.read_exact(&mut buf)?;
+    Ok(Some((dst, buf)))
+}
+
+impl HybridTransport {
+    fn no_link(&self, dst: usize) -> Error {
+        Error::Invalid(format!(
+            "comms: send to endpoint {dst} of a {}-rank world (no link)",
+            self.nranks
+        ))
+    }
+
+    fn check_len(&self, len: usize) -> Result<()> {
+        if len > MAX_FRAME_LEN {
+            return Err(Error::Invalid(format!(
+                "comms hybrid: frame of {len} bytes exceeds the \
+                 {MAX_FRAME_LEN} cap"
+            )));
+        }
+        Ok(())
+    }
+
+    fn send_self(&self, frame: Vec<u8>) -> Result<()> {
+        let tx = self.self_tx.as_ref().ok_or_else(|| {
+            Error::Invalid(format!(
+                "comms: send to endpoint {} of a {}-rank world \
+                 (self-sends only exist in a 1-rank world)",
+                self.rank, self.nranks
+            ))
+        })?;
+        tx.send(Ok(frame)).map_err(|_| {
+            Error::Invalid("comms hybrid: self inbox closed".into())
+        })
+    }
+}
+
+impl Transport for HybridTransport {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn nranks(&self) -> usize {
+        self.nranks
+    }
+
+    /// Channel links (co-hosted peers and the 1-rank self-seam) are
+    /// intra-host; host links are not.
+    fn peer_is_intra(&self, peer: usize) -> bool {
+        peer == self.rank
+            || self.chan.get(peer).map_or(false, Option::is_some)
+    }
+
+    fn send_bytes(&mut self, dst: usize, frame: Vec<u8>) -> Result<()> {
+        if dst == self.rank {
+            return self.send_self(frame);
+        }
+        if let Some(tx) = self.chan.get(dst).and_then(Option::as_ref) {
+            // co-hosted: hand the encoded bytes over, no framing, no
+            // syscall
+            return tx.send(Ok(frame)).map_err(|_| {
+                Error::Invalid(format!("comms: endpoint {dst} hung up"))
+            });
+        }
+        if let Some(writer) = self.links.get(dst).and_then(Option::as_ref)
+        {
+            self.check_len(frame.len())?;
+            return writer.send(dst, &frame);
+        }
+        Err(self.no_link(dst))
+    }
+
+    /// Batches keep the per-link split: a socket link coalesces the
+    /// whole batch into one `write_all` (the super-step lever), a
+    /// channel link hands each frame over individually — there is no
+    /// syscall to amortize, and frames stay distinct either way.
+    fn send_bytes_batch(&mut self, dst: usize, frames: Vec<Vec<u8>>)
+                        -> Result<()> {
+        if dst == self.rank {
+            for frame in frames {
+                self.send_self(frame)?;
+            }
+            return Ok(());
+        }
+        if let Some(tx) = self.chan.get(dst).and_then(Option::as_ref) {
+            for frame in frames {
+                tx.send(Ok(frame)).map_err(|_| {
+                    Error::Invalid(format!(
+                        "comms: endpoint {dst} hung up"
+                    ))
+                })?;
+            }
+            return Ok(());
+        }
+        if let Some(writer) = self.links.get(dst).and_then(Option::as_ref)
+        {
+            for frame in &frames {
+                self.check_len(frame.len())?;
+            }
+            return writer.send_batch(dst, &frames);
+        }
+        Err(self.no_link(dst))
+    }
+
+    fn recv_bytes(&mut self) -> Result<Vec<u8>> {
+        match self.inbox.recv() {
+            Ok(Ok(bytes)) => Ok(bytes),
+            Ok(Err(msg)) => Err(Error::Invalid(msg)),
+            Err(_) => Err(Error::Invalid(
+                "comms: all peers hung up while receiving".to_string(),
+            )),
+        }
+    }
+
+    fn recv_bytes_timeout(&mut self, timeout: Duration)
+                          -> Result<Option<Vec<u8>>> {
+        match self.inbox.recv_timeout(timeout) {
+            Ok(Ok(bytes)) => Ok(Some(bytes)),
+            Ok(Err(msg)) => Err(Error::Invalid(msg)),
+            Err(RecvTimeoutError::Timeout) => Ok(None),
+            Err(RecvTimeoutError::Disconnected) => Err(Error::Invalid(
+                "comms: all peers hung up while receiving".to_string(),
+            )),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comms::wire::{Frame, ReportMsg};
+    use std::net::TcpListener;
+
+    /// A raw socket pair on loopback (accepted, connected).
+    fn pair() -> (TcpStream, TcpStream) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let connect =
+            std::thread::spawn(move || TcpStream::connect(addr).unwrap());
+        let (accepted, _) = listener.accept().unwrap();
+        (accepted, connect.join().unwrap())
+    }
+
+    fn report_frame(src: u32) -> Vec<u8> {
+        Frame::Report(ReportMsg {
+            src,
+            interior_sites: 0,
+            steps: 0,
+            compute_s: 0.0,
+            wait_s: 0.0,
+            idle_s: 0.0,
+            bytes_sent: 0,
+            msgs_sent: 0,
+            bytes_axis: [0; 3],
+            msgs_axis: [0; 3],
+            super_steps: 0,
+            bytes_intra: 0,
+            bytes_inter: 0,
+            msgs_intra: 0,
+            msgs_inter: 0,
+        })
+        .encode()
+    }
+
+    /// A 4-rank world on two simulated hosts (ranks 0,1 | 2,3) plus a
+    /// driver: the full link shape the launcher's rendezvous builds.
+    fn two_host_world() -> (Vec<HybridTransport>, Vec<HybridTransport>,
+                            HybridTransport) {
+        let (ab_a, ab_b) = pair();
+        let (ad_a, ad_d) = pair();
+        let (bd_b, bd_d) = pair();
+        let driver_gone = || EofPolicy::Always("driver gone".into());
+        let host_gone = |expect| EofPolicy::UnlessReports {
+            expect,
+            msg: "host gone".into(),
+        };
+        let a = assemble(4, &[0, 1], vec![
+            HostLink { stream: ab_a, peers: vec![2, 3],
+                       eof: EofPolicy::Silent },
+            HostLink { stream: ad_a, peers: vec![4], eof: driver_gone() },
+        ])
+        .unwrap();
+        let b = assemble(4, &[2, 3], vec![
+            HostLink { stream: ab_b, peers: vec![0, 1],
+                       eof: EofPolicy::Silent },
+            HostLink { stream: bd_b, peers: vec![4], eof: driver_gone() },
+        ])
+        .unwrap();
+        let mut d = assemble(4, &[4], vec![
+            HostLink { stream: ad_d, peers: vec![0, 1],
+                       eof: host_gone(2) },
+            HostLink { stream: bd_d, peers: vec![2, 3],
+                       eof: host_gone(2) },
+        ])
+        .unwrap();
+        (a, b, d.pop().unwrap())
+    }
+
+    #[test]
+    fn routes_channel_and_socket_links_both_ways() {
+        let (mut a, mut b, mut ctl) = two_host_world();
+        // co-hosted: rank 0 -> rank 1 over a channel
+        a[0].send_bytes(1, vec![1, 2]).unwrap();
+        assert_eq!(a[1].recv_bytes().unwrap(), vec![1, 2]);
+        // cross-host: rank 0 -> rank 2 and rank 3 share one stream
+        a[0].send_bytes(2, vec![3]).unwrap();
+        a[0].send_bytes(3, vec![4]).unwrap();
+        assert_eq!(b[0].recv_bytes().unwrap(), vec![3]);
+        assert_eq!(b[1].recv_bytes().unwrap(), vec![4]);
+        // and back
+        b[1].send_bytes(0, vec![5]).unwrap();
+        assert_eq!(a[0].recv_bytes().unwrap(), vec![5]);
+        // control plane both ways over the driver links
+        ctl.send_bytes(1, vec![6]).unwrap();
+        assert_eq!(a[1].recv_bytes().unwrap(), vec![6]);
+        b[0].send_bytes(4, vec![7]).unwrap();
+        assert_eq!(ctl.recv_bytes().unwrap(), vec![7]);
+    }
+
+    #[test]
+    fn per_sender_order_holds_across_the_merged_inbox() {
+        let (mut a, mut b, _ctl) = two_host_world();
+        // rank 2 hears from rank 3 (channel) and rank 0 (socket); each
+        // sender's own sequence must arrive in order
+        for i in 0..50u8 {
+            a[0].send_bytes(2, vec![0, i]).unwrap();
+            b[1].send_bytes(2, vec![1, i]).unwrap();
+        }
+        let mut next = [0u8; 2];
+        for _ in 0..100 {
+            let got = b[0].recv_bytes().unwrap();
+            let sender = got[0] as usize;
+            assert_eq!(got[1], next[sender], "per-sender order");
+            next[sender] += 1;
+        }
+        assert_eq!(next, [50, 50]);
+    }
+
+    #[test]
+    fn peer_is_intra_reflects_link_kind() {
+        let (a, b, ctl) = two_host_world();
+        assert!(a[0].peer_is_intra(1), "co-hosted peer");
+        assert!(a[0].peer_is_intra(0), "self");
+        assert!(!a[0].peer_is_intra(2), "cross-host peer");
+        assert!(!a[0].peer_is_intra(4), "driver link");
+        assert!(b[1].peer_is_intra(2));
+        assert!(!ctl.peer_is_intra(0), "every rank is remote to the \
+                                        driver");
+    }
+
+    #[test]
+    fn batched_frames_arrive_distinct_and_ordered_on_both_link_kinds() {
+        let (mut a, mut b, _ctl) = two_host_world();
+        // socket link: one write_all, distinct frames on arrival
+        a[0].send_bytes_batch(3, vec![vec![1], vec![], vec![2; 50_000]])
+            .unwrap();
+        a[0].send_bytes(3, vec![9]).unwrap();
+        assert_eq!(b[1].recv_bytes().unwrap(), vec![1]);
+        assert_eq!(b[1].recv_bytes().unwrap(), Vec::<u8>::new());
+        assert_eq!(b[1].recv_bytes().unwrap(), vec![2; 50_000]);
+        assert_eq!(b[1].recv_bytes().unwrap(), vec![9]);
+        // channel link: frames hand over individually, still in order
+        a[1].send_bytes_batch(0, vec![vec![4], vec![5, 6]]).unwrap();
+        assert_eq!(a[0].recv_bytes().unwrap(), vec![4]);
+        assert_eq!(a[0].recv_bytes().unwrap(), vec![5, 6]);
+    }
+
+    #[test]
+    fn timeout_returns_none_without_consuming_anything() {
+        let (mut a, mut b, _ctl) = two_host_world();
+        assert!(b[0]
+            .recv_bytes_timeout(Duration::from_millis(20))
+            .unwrap()
+            .is_none());
+        a[0].send_bytes(2, vec![8]).unwrap();
+        assert_eq!(
+            b[0].recv_bytes_timeout(Duration::from_secs(10)).unwrap(),
+            Some(vec![8])
+        );
+    }
+
+    #[test]
+    fn invalid_destinations_rejected() {
+        let (mut a, _b, _ctl) = two_host_world();
+        assert!(a[0].send_bytes(9, vec![1]).is_err(), "out of range");
+        assert!(a[0].send_bytes(0, vec![1]).is_err(),
+                "multi-rank worlds never self-send");
+    }
+
+    #[test]
+    fn misrouted_envelope_surfaces_as_an_error() {
+        // a link whose remote claims to serve rank 1 but addresses a
+        // frame to endpoint 3, which lives nowhere near this process
+        let (ours, mut raw) = pair();
+        let mut eps = assemble(3, &[0, 2], vec![HostLink {
+            stream: ours,
+            peers: vec![1, 3],
+            eof: EofPolicy::Silent,
+        }])
+        .unwrap();
+        let mut msg = Vec::new();
+        msg.extend_from_slice(&3u32.to_le_bytes());
+        msg.extend_from_slice(&1u32.to_le_bytes());
+        msg.push(42);
+        raw.write_all(&msg).unwrap();
+        let got = eps[0].recv_bytes_timeout(Duration::from_secs(10));
+        assert!(got.is_err(), "misroute must error, got {got:?}");
+    }
+
+    #[test]
+    fn truncated_envelope_is_an_error_not_a_partial_delivery() {
+        let (ours, mut raw) = pair();
+        let mut eps = assemble(1, &[0], vec![HostLink {
+            stream: ours,
+            peers: vec![1],
+            eof: EofPolicy::Silent,
+        }])
+        .unwrap();
+        // an envelope promising 16 bytes, then only 4, then FIN
+        let mut msg = Vec::new();
+        msg.extend_from_slice(&0u32.to_le_bytes());
+        msg.extend_from_slice(&16u32.to_le_bytes());
+        msg.extend_from_slice(&[0u8; 4]);
+        raw.write_all(&msg).unwrap();
+        drop(raw);
+        let got = eps[0].recv_bytes_timeout(Duration::from_secs(10));
+        assert!(got.is_err(), "partial frame must error, got {got:?}");
+    }
+
+    #[test]
+    fn driver_link_eof_surfaces_to_resident_ranks() {
+        let (ours, raw) = pair();
+        let mut eps = assemble(2, &[0, 1], vec![HostLink {
+            stream: ours,
+            peers: vec![2],
+            eof: EofPolicy::Always("driver gone".into()),
+        }])
+        .unwrap();
+        drop(raw); // the driver vanishes
+        for ep in &mut eps {
+            let got = ep.recv_bytes_timeout(Duration::from_secs(10));
+            assert!(got.is_err(),
+                    "driver EOF must error on every rank, got {got:?}");
+        }
+    }
+
+    #[test]
+    fn host_death_before_reports_errors_but_clean_exit_is_silent() {
+        // mid-run death: the host closes with no reports delivered
+        let (ours, raw) = pair();
+        let mut ctl = assemble(2, &[2], vec![HostLink {
+            stream: ours,
+            peers: vec![0, 1],
+            eof: EofPolicy::UnlessReports {
+                expect: 2,
+                msg: "host gone".into(),
+            },
+        }])
+        .unwrap();
+        drop(raw);
+        let got = ctl[0].recv_bytes_timeout(Duration::from_secs(10));
+        assert!(got.is_err(), "host death must error, got {got:?}");
+
+        // normal teardown: both reports cross the link, then EOF —
+        // silent, like a socket rank link closing after its report
+        let (ours, raw) = pair();
+        let mut ctl = assemble(2, &[2], vec![HostLink {
+            stream: ours,
+            peers: vec![0, 1],
+            eof: EofPolicy::UnlessReports {
+                expect: 2,
+                msg: "host gone".into(),
+            },
+        }])
+        .unwrap();
+        {
+            let mut sender = assemble(2, &[0, 1], vec![HostLink {
+                stream: raw,
+                peers: vec![2],
+                eof: EofPolicy::Silent,
+            }])
+            .unwrap();
+            sender[0].send_bytes(2, report_frame(0)).unwrap();
+            sender[1].send_bytes(2, report_frame(1)).unwrap();
+        } // host process exits cleanly
+        assert!(is_report_frame(&ctl[0].recv_bytes().unwrap()));
+        assert!(is_report_frame(&ctl[0].recv_bytes().unwrap()));
+        assert!(ctl[0]
+            .recv_bytes_timeout(Duration::from_millis(100))
+            .unwrap()
+            .is_none(),
+            "clean post-report exit stays silent");
+    }
+
+    #[test]
+    fn one_rank_world_self_sends_across_the_seam() {
+        let (ours, _raw) = pair();
+        let mut eps = assemble(1, &[0], vec![HostLink {
+            stream: ours,
+            peers: vec![1],
+            eof: EofPolicy::Silent,
+        }])
+        .unwrap();
+        eps[0].send_bytes(0, vec![4, 2]).unwrap();
+        assert_eq!(eps[0].recv_bytes().unwrap(), vec![4, 2]);
+        eps[0].send_bytes_batch(0, vec![vec![7], vec![8]]).unwrap();
+        assert_eq!(eps[0].recv_bytes().unwrap(), vec![7]);
+        assert_eq!(eps[0].recv_bytes().unwrap(), vec![8]);
+    }
+
+    #[test]
+    fn dead_world_disconnects_instead_of_hanging() {
+        let (mut a, b, ctl) = two_host_world();
+        let mut r0 = a.remove(0);
+        drop(a); // co-hosted sibling gone
+        drop(b); // remote host gone (its MeshCore closes the A–B link)
+        drop(ctl); // driver gone — but its link EOF carries a message
+        let got = r0.recv_bytes_timeout(Duration::from_secs(10));
+        assert!(got.is_err(), "dead world must error, got {got:?}");
+    }
+
+    #[test]
+    fn assemble_validates_coverage() {
+        // endpoint claimed twice (local + link)
+        let (s, _k) = pair();
+        assert!(assemble(2, &[0, 1], vec![HostLink {
+            stream: s,
+            peers: vec![1, 2],
+            eof: EofPolicy::Silent,
+        }])
+        .is_err());
+        // endpoint out of range
+        let (s, _k) = pair();
+        assert!(assemble(2, &[0, 1], vec![HostLink {
+            stream: s,
+            peers: vec![7],
+            eof: EofPolicy::Silent,
+        }])
+        .is_err());
+        // uncovered endpoint (nobody serves the controller id 2)
+        assert!(assemble(2, &[0, 1], vec![]).is_err());
+        // no resident endpoints at all
+        let (s, _k) = pair();
+        assert!(assemble(2, &[], vec![HostLink {
+            stream: s,
+            peers: vec![0, 1, 2],
+            eof: EofPolicy::Silent,
+        }])
+        .is_err());
+    }
+}

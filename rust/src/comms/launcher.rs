@@ -1,5 +1,5 @@
 //! Rank launcher: rendezvous that turns N OS processes into a socket
-//! world, plus a local process spawner.
+//! or hybrid world, plus a local process spawner.
 //!
 //! A socket run has one **driver** process (holding the session
 //! controller endpoint — the analog of
@@ -54,20 +54,46 @@
 //! higher ranks connect, and the driver writes all `Welcome`s without
 //! waiting on any rank.
 //!
+//! # Hybrid worlds
+//!
+//! A **hybrid** run replaces the one-process-per-rank shape with one
+//! process per *host*: each connecting process declares in its `Hello`
+//! how many ranks it will carry (`nlocal`), the driver assigns it a
+//! *contiguous block* of rank ids (explicit `want_rank` = the block's
+//! first id; anonymous blocks are host-grouped exactly like socket
+//! ranks), and the `Welcome` carries the whole **host→ranks map** —
+//! every block's `(first, count, address)` — instead of a per-rank
+//! roster. Each host process then builds its in-process channel mesh
+//! locally and dials **one** socket per lower-block host
+//! (lower-`first` blocks accept, higher connect: the socket world's
+//! lower-connect/higher-accept rule lifted to host pairs), so a
+//! 2-host world has exactly three streams: host↔host, and one
+//! driver↔host each. [`RankServer::rendezvous_hosts`] /
+//! [`connect_host`] drive this; [`connect_world`] lets one entry point
+//! serve whichever mode the driver runs. Both modes speak the same
+//! version-3 handshake — a socket world is the degenerate case where
+//! every block has `count == 1`.
+//!
 //! Deployment shapes (see `docs/architecture.md` for the walkthrough):
 //!
-//! * **spawn-local** — the driver binds `127.0.0.1:0` and spawns N
+//! * **spawn-local** — the driver binds `127.0.0.1:0` and spawns
 //!   children of its own executable ([`spawn_local`] /
-//!   [`LocalRanks::spawn`]): `targetdp run --transport socket`.
+//!   [`LocalRanks::spawn`]): `targetdp run --transport socket` (one
+//!   child per rank) or `--transport hybrid`
+//!   ([`LocalRanks::spawn_hosts`]: one child per host, which on a
+//!   single machine means one child carrying every rank).
 //! * **multi-host** — the driver binds a routable address
 //!   (`--rank-server host:port`) and the operator starts
-//!   `targetdp rank --connect host:port` on each host.
+//!   `targetdp rank --connect host:port` on each host — adding
+//!   `--local-ranks N` to carry that host's N ranks in one process
+//!   when the driver runs hybrid.
 
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::process::Child;
 use std::time::{Duration, Instant};
 
+use crate::comms::hybrid::{self, EofPolicy, HostLink, HybridTransport};
 use crate::comms::socket::SocketTransport;
 use crate::error::{Error, Result};
 
@@ -86,7 +112,14 @@ const MAX_NRANKS: usize = 1 << 16;
 const HELLO_MAGIC: [u8; 4] = *b"TDPH";
 const WELCOME_MAGIC: [u8; 4] = *b"TDPR";
 const PEER_MAGIC: [u8; 4] = *b"TDPP";
-const HANDSHAKE_VERSION: u8 = 2;
+/// Version 3: `Hello` declares how many ranks the connecting process
+/// carries (`nlocal`), and `Welcome` grew a mode byte plus a
+/// host-block roster (`(first, count, addr)` per host) in hybrid mode.
+const HANDSHAKE_VERSION: u8 = 3;
+/// `Welcome` mode byte: one process per rank, per-rank roster.
+const MODE_SOCKET: u8 = 0;
+/// `Welcome` mode byte: one process per host, host-block roster.
+const MODE_HYBRID: u8 = 1;
 /// Cap on the `Hello` host tag string.
 const MAX_HOST_LEN: usize = 256;
 
@@ -168,15 +201,27 @@ pub fn host_grouped_order(hosts: &[String]) -> Vec<usize> {
 }
 
 /// `Hello`: magic(4) version(1) want_rank(i64, -1 = any) listen_port(u16)
-/// host_len(u16) host (UTF-8).
+/// nlocal(u16) host_len(u16) host (UTF-8). `nlocal` is how many ranks
+/// this process will carry (1 for a socket-world rank process); with
+/// `nlocal > 1`, `want_rank` names the *first* rank of the requested
+/// contiguous block.
 fn write_hello(stream: &mut TcpStream, want_rank: Option<usize>,
-               listen_port: u16, host: &str) -> Result<()> {
+               listen_port: u16, nlocal: usize, host: &str)
+               -> Result<()> {
     let mut cut = host.len().min(MAX_HOST_LEN);
     while !host.is_char_boundary(cut) {
         cut -= 1;
     }
     let host = &host.as_bytes()[..cut];
-    let mut buf = Vec::with_capacity(17 + host.len());
+    let nlocal = u16::try_from(nlocal)
+        .ok()
+        .filter(|&n| n > 0)
+        .ok_or_else(|| {
+            Error::Invalid(format!(
+                "comms launcher: a process cannot carry {nlocal} ranks"
+            ))
+        })?;
+    let mut buf = Vec::with_capacity(19 + host.len());
     buf.extend_from_slice(&HELLO_MAGIC);
     buf.push(HANDSHAKE_VERSION);
     let want: i64 = match want_rank {
@@ -187,20 +232,28 @@ fn write_hello(stream: &mut TcpStream, want_rank: Option<usize>,
     };
     buf.extend_from_slice(&want.to_le_bytes());
     buf.extend_from_slice(&listen_port.to_le_bytes());
+    buf.extend_from_slice(&nlocal.to_le_bytes());
     buf.extend_from_slice(&(host.len() as u16).to_le_bytes());
     buf.extend_from_slice(host);
     stream.write_all(&buf).map_err(Error::from)
 }
 
 fn read_hello(stream: &mut TcpStream)
-              -> Result<(Option<usize>, u16, String)> {
-    let mut buf = [0u8; 17];
+              -> Result<(Option<usize>, u16, usize, String)> {
+    let mut buf = [0u8; 19];
     read_exact_checked(stream, &mut buf, "Hello")?;
     check_magic(&buf[..4].try_into().unwrap(), &HELLO_MAGIC, buf[4],
                 "Hello")?;
     let want = i64::from_le_bytes(buf[5..13].try_into().unwrap());
     let port = u16::from_le_bytes(buf[13..15].try_into().unwrap());
-    let hlen = u16::from_le_bytes(buf[15..17].try_into().unwrap()) as usize;
+    let nlocal =
+        u16::from_le_bytes(buf[15..17].try_into().unwrap()) as usize;
+    let hlen = u16::from_le_bytes(buf[17..19].try_into().unwrap()) as usize;
+    if nlocal == 0 {
+        return Err(Error::Invalid(
+            "comms launcher: Hello from a process carrying 0 ranks".into(),
+        ));
+    }
     if hlen > MAX_HOST_LEN {
         return Err(Error::Invalid(format!(
             "comms launcher: Hello host tag of {hlen} bytes"
@@ -212,21 +265,63 @@ fn read_hello(stream: &mut TcpStream)
         Error::Invalid("comms launcher: Hello host is not UTF-8".into())
     })?;
     let want = if want < 0 { None } else { Some(want as usize) };
-    Ok((want, port, host))
+    Ok((want, port, nlocal, host))
 }
 
-/// `Welcome`: magic(4) version(1) rank(u32) nranks(u32) payload_len(u32)
-/// payload, then `nranks` length-prefixed (u16) UTF-8 `ip:port` roster
-/// entries, rank order.
-fn write_welcome(stream: &mut TcpStream, rank: usize, nranks: usize,
-                 payload: &[u8], roster: &[SocketAddr]) -> Result<()> {
-    let mut buf = Vec::with_capacity(17 + payload.len() + 24 * nranks);
+/// One host's slice of a hybrid world, as announced in the `Welcome`
+/// host-block roster: the contiguous rank block `[first, first+count)`
+/// served by one host process at `addr`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HostBlock {
+    /// First rank id of the block.
+    pub first: usize,
+    /// Number of ranks the host process carries.
+    pub count: usize,
+    /// The host process's peer listener, `ip:port`.
+    pub addr: String,
+}
+
+impl HostBlock {
+    /// The rank ids of this block.
+    fn ranks(&self) -> std::ops::Range<usize> {
+        self.first..self.first + self.count
+    }
+}
+
+/// A decoded `Welcome`, by mode.
+enum WelcomeMsg {
+    /// One process per rank: this process is `rank`, the roster is one
+    /// `ip:port` per rank.
+    Socket { rank: usize, nranks: usize, payload: Vec<u8>,
+             roster: Vec<String> },
+    /// One process per host: this process carries the block starting
+    /// at `first`; the roster is one [`HostBlock`] per host, sorted by
+    /// `first` and covering `0..nranks` exactly.
+    Hybrid { first: usize, nranks: usize, payload: Vec<u8>,
+             blocks: Vec<HostBlock> },
+}
+
+/// `Welcome`: magic(4) version(1) mode(1) rank(u32) nranks(u32)
+/// payload_len(u32) payload, then the mode's roster. Mode 0 (socket):
+/// `nranks` length-prefixed (u16) UTF-8 `ip:port` entries, rank order.
+/// Mode 1 (hybrid): nblocks(u16), then per block first(u32) count(u32)
+/// addr_len(u16) addr — blocks sorted by `first`, covering `0..nranks`
+/// contiguously; `rank` is the recipient's block `first`.
+fn write_welcome_head(buf: &mut Vec<u8>, mode: u8, rank: usize,
+                      nranks: usize, payload: &[u8]) {
     buf.extend_from_slice(&WELCOME_MAGIC);
     buf.push(HANDSHAKE_VERSION);
+    buf.push(mode);
     buf.extend_from_slice(&(rank as u32).to_le_bytes());
     buf.extend_from_slice(&(nranks as u32).to_le_bytes());
     buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
     buf.extend_from_slice(payload);
+}
+
+fn write_welcome(stream: &mut TcpStream, rank: usize, nranks: usize,
+                 payload: &[u8], roster: &[SocketAddr]) -> Result<()> {
+    let mut buf = Vec::with_capacity(18 + payload.len() + 24 * nranks);
+    write_welcome_head(&mut buf, MODE_SOCKET, rank, nranks, payload);
     for addr in roster {
         let s = addr.to_string();
         buf.extend_from_slice(&(s.len() as u16).to_le_bytes());
@@ -235,15 +330,49 @@ fn write_welcome(stream: &mut TcpStream, rank: usize, nranks: usize,
     stream.write_all(&buf).map_err(Error::from)
 }
 
-fn read_welcome(stream: &mut TcpStream)
-                -> Result<(usize, usize, Vec<u8>, Vec<String>)> {
-    let mut head = [0u8; 17];
+fn write_welcome_hybrid(stream: &mut TcpStream, first: usize,
+                        nranks: usize, payload: &[u8],
+                        blocks: &[HostBlock]) -> Result<()> {
+    let mut buf =
+        Vec::with_capacity(20 + payload.len() + 32 * blocks.len());
+    write_welcome_head(&mut buf, MODE_HYBRID, first, nranks, payload);
+    buf.extend_from_slice(&(blocks.len() as u16).to_le_bytes());
+    for b in blocks {
+        buf.extend_from_slice(&(b.first as u32).to_le_bytes());
+        buf.extend_from_slice(&(b.count as u32).to_le_bytes());
+        buf.extend_from_slice(&(b.addr.len() as u16).to_le_bytes());
+        buf.extend_from_slice(b.addr.as_bytes());
+    }
+    stream.write_all(&buf).map_err(Error::from)
+}
+
+fn read_addr_entry(stream: &mut TcpStream) -> Result<String> {
+    let mut len = [0u8; 2];
+    read_exact_checked(stream, &mut len, "Welcome roster")?;
+    let len = u16::from_le_bytes(len) as usize;
+    if len > MAX_ADDR_LEN {
+        return Err(Error::Invalid(format!(
+            "comms launcher: roster address of {len} bytes"
+        )));
+    }
+    let mut addr = vec![0u8; len];
+    read_exact_checked(stream, &mut addr, "Welcome roster")?;
+    String::from_utf8(addr).map_err(|_| {
+        Error::Invalid("comms launcher: roster address is not UTF-8".into())
+    })
+}
+
+fn read_welcome(stream: &mut TcpStream) -> Result<WelcomeMsg> {
+    let mut head = [0u8; 18];
     read_exact_checked(stream, &mut head, "Welcome")?;
     check_magic(&head[..4].try_into().unwrap(), &WELCOME_MAGIC, head[4],
                 "Welcome")?;
-    let rank = u32::from_le_bytes(head[5..9].try_into().unwrap()) as usize;
-    let nranks = u32::from_le_bytes(head[9..13].try_into().unwrap()) as usize;
-    let plen = u32::from_le_bytes(head[13..17].try_into().unwrap()) as usize;
+    let mode = head[5];
+    let rank = u32::from_le_bytes(head[6..10].try_into().unwrap()) as usize;
+    let nranks =
+        u32::from_le_bytes(head[10..14].try_into().unwrap()) as usize;
+    let plen =
+        u32::from_le_bytes(head[14..18].try_into().unwrap()) as usize;
     if nranks == 0 || nranks > MAX_NRANKS || rank >= nranks {
         return Err(Error::Invalid(format!(
             "comms launcher: Welcome assigns rank {rank} of {nranks}"
@@ -256,25 +385,60 @@ fn read_welcome(stream: &mut TcpStream)
     }
     let mut payload = vec![0u8; plen];
     read_exact_checked(stream, &mut payload, "Welcome")?;
-    let mut roster = Vec::with_capacity(nranks);
-    for _ in 0..nranks {
-        let mut len = [0u8; 2];
-        read_exact_checked(stream, &mut len, "Welcome roster")?;
-        let len = u16::from_le_bytes(len) as usize;
-        if len > MAX_ADDR_LEN {
-            return Err(Error::Invalid(format!(
-                "comms launcher: roster address of {len} bytes"
-            )));
+    match mode {
+        MODE_SOCKET => {
+            let mut roster = Vec::with_capacity(nranks);
+            for _ in 0..nranks {
+                roster.push(read_addr_entry(stream)?);
+            }
+            Ok(WelcomeMsg::Socket { rank, nranks, payload, roster })
         }
-        let mut addr = vec![0u8; len];
-        read_exact_checked(stream, &mut addr, "Welcome roster")?;
-        roster.push(String::from_utf8(addr).map_err(|_| {
-            Error::Invalid(
-                "comms launcher: roster address is not UTF-8".into(),
-            )
-        })?);
+        MODE_HYBRID => {
+            let mut nb = [0u8; 2];
+            read_exact_checked(stream, &mut nb, "Welcome blocks")?;
+            let nblocks = u16::from_le_bytes(nb) as usize;
+            if nblocks == 0 || nblocks > nranks {
+                return Err(Error::Invalid(format!(
+                    "comms launcher: Welcome with {nblocks} host blocks \
+                     for {nranks} ranks"
+                )));
+            }
+            let mut blocks = Vec::with_capacity(nblocks);
+            let mut next = 0usize;
+            for _ in 0..nblocks {
+                let mut fc = [0u8; 8];
+                read_exact_checked(stream, &mut fc, "Welcome blocks")?;
+                let first =
+                    u32::from_le_bytes(fc[..4].try_into().unwrap())
+                        as usize;
+                let count =
+                    u32::from_le_bytes(fc[4..].try_into().unwrap())
+                        as usize;
+                let addr = read_addr_entry(stream)?;
+                // blocks must tile 0..nranks in order — gaps, overlaps
+                // or empty blocks are corruption
+                if first != next || count == 0 {
+                    return Err(Error::Invalid(format!(
+                        "comms launcher: Welcome host block \
+                         ({first},{count}) breaks the contiguous tiling \
+                         at rank {next}"
+                    )));
+                }
+                next += count;
+                blocks.push(HostBlock { first, count, addr });
+            }
+            if next != nranks {
+                return Err(Error::Invalid(format!(
+                    "comms launcher: Welcome host blocks cover {next} of \
+                     {nranks} ranks"
+                )));
+            }
+            Ok(WelcomeMsg::Hybrid { first: rank, nranks, payload, blocks })
+        }
+        v => Err(Error::Invalid(format!(
+            "comms launcher: unknown Welcome mode {v}"
+        ))),
     }
-    Ok((rank, nranks, payload, roster))
 }
 
 /// `PeerHello`: magic(4) version(1) rank(u32) — sent by the connecting
@@ -369,7 +533,14 @@ impl RankServer {
             );
             let (mut stream, peer) =
                 accept_deadline(&self.listener, deadline, &what)?;
-            let (want, port, host) = read_hello(&mut stream)?;
+            let (want, port, nlocal, host) = read_hello(&mut stream)?;
+            if nlocal != 1 {
+                return Err(Error::Invalid(format!(
+                    "comms launcher: a host process carrying {nlocal} \
+                     ranks connected to a socket-world rendezvous (run \
+                     the driver with --transport hybrid)"
+                )));
+            }
             // the roster advertises the rank's listener on the address
             // this connection actually came from — the interface peers
             // can route to
@@ -427,15 +598,165 @@ impl RankServer {
         }
         SocketTransport::assemble(nranks, nranks, conns)
     }
+
+    /// The hybrid-world rendezvous: accept host processes until their
+    /// declared rank counts sum to `nranks`, assign each a contiguous
+    /// rank block (explicit `want_rank` requests claim `[want,
+    /// want+nlocal)` first; anonymous hosts are placed in host-grouped
+    /// arrival order into the lowest free runs), broadcast the
+    /// mode-1 `Welcome` with the full host-block roster, and return
+    /// the **controller** transport (endpoint id `nranks`) for
+    /// [`crate::comms::CommsWorld::remote_session`]. The controller
+    /// holds one link per host; a link that closes before every
+    /// resident rank's report crossed it surfaces a mid-run host death
+    /// as an error.
+    pub fn rendezvous_hosts(self, nranks: usize, payload: &[u8])
+                            -> Result<HybridTransport> {
+        if nranks == 0 || nranks > MAX_NRANKS {
+            return Err(Error::Invalid(format!(
+                "comms launcher: cannot rendezvous {nranks} ranks"
+            )));
+        }
+        let deadline = Instant::now() + RENDEZVOUS_TIMEOUT;
+        let mut pending: Vec<(TcpStream, Option<usize>, SocketAddr,
+                              usize, String)> = Vec::new();
+        let mut total = 0usize;
+        while total < nranks {
+            let what = format!(
+                "host processes ({total}/{nranks} ranks connected)"
+            );
+            let (mut stream, peer) =
+                accept_deadline(&self.listener, deadline, &what)?;
+            let (want, port, nlocal, host) = read_hello(&mut stream)?;
+            total += nlocal;
+            if total > nranks {
+                return Err(Error::Invalid(format!(
+                    "comms launcher: host processes declare {total} \
+                     ranks for a {nranks}-rank world"
+                )));
+            }
+            pending.push((stream, want, SocketAddr::new(peer.ip(), port),
+                          nlocal, host));
+        }
+        // explicit requests claim their contiguous blocks first ...
+        let mut claimed = vec![false; nranks];
+        let mut placed: Vec<(TcpStream, HostBlock)> = Vec::new();
+        let mut anonymous = Vec::new();
+        let mut hosts = Vec::new();
+        for (stream, want, addr, nlocal, host) in pending {
+            match want {
+                Some(first) => {
+                    if first + nlocal > nranks
+                        || claimed[first..first + nlocal]
+                            .iter()
+                            .any(|&c| c)
+                    {
+                        return Err(Error::Invalid(format!(
+                            "comms launcher: a host process asked for \
+                             ranks {first}..{} of a {nranks}-rank world \
+                             (out of range or already claimed)",
+                            first + nlocal
+                        )));
+                    }
+                    claimed[first..first + nlocal].fill(true);
+                    placed.push((stream, HostBlock {
+                        first,
+                        count: nlocal,
+                        addr: addr.to_string(),
+                    }));
+                }
+                None => {
+                    anonymous.push(Some((stream, addr, nlocal)));
+                    hosts.push(host);
+                }
+            }
+        }
+        // ... then anonymous hosts fill the lowest free runs in
+        // host-grouped arrival order: two processes tagged with the
+        // same host land on adjacent blocks, keeping their shared grid
+        // faces off the network
+        for i in host_grouped_order(&hosts) {
+            let (stream, addr, nlocal) =
+                anonymous[i].take().expect("each host placed once");
+            let first = find_free_run(&claimed, nlocal).ok_or_else(|| {
+                Error::Invalid(format!(
+                    "comms launcher: no contiguous run of {nlocal} free \
+                     rank ids left for a host process (explicit \
+                     requests fragmented the id space)"
+                ))
+            })?;
+            claimed[first..first + nlocal].fill(true);
+            placed.push((stream, HostBlock {
+                first,
+                count: nlocal,
+                addr: addr.to_string(),
+            }));
+        }
+        placed.sort_by_key(|(_, b)| b.first);
+        let blocks: Vec<HostBlock> =
+            placed.iter().map(|(_, b)| b.clone()).collect();
+        let mut links = Vec::with_capacity(placed.len());
+        for (mut stream, block) in placed {
+            write_welcome_hybrid(&mut stream, block.first, nranks,
+                                 payload, &blocks)?;
+            let last = block.first + block.count - 1;
+            links.push(HostLink {
+                stream,
+                peers: block.ranks().collect(),
+                eof: EofPolicy::UnlessReports {
+                    expect: block.count,
+                    msg: format!(
+                        "comms hybrid: the host process carrying ranks \
+                         {}..={last} closed its link before delivering \
+                         every report — host process died mid-run",
+                        block.first
+                    ),
+                },
+            });
+        }
+        let mut eps = hybrid::assemble(nranks, &[nranks], links)?;
+        Ok(eps.pop().expect("one controller endpoint"))
+    }
 }
 
-/// The rank process's side of the rendezvous: dial the driver at
-/// `server` (`host:port`), optionally requesting a specific rank id, and
-/// build this rank's full socket world. Returns the transport plus the
-/// driver's opaque setup payload. The returned endpoint is what
-/// [`crate::comms::serve_rank`] runs on.
-pub fn connect_rank(server: &str, want_rank: Option<usize>)
-                    -> Result<(SocketTransport, Vec<u8>)> {
+/// Lowest index of a contiguous run of `len` unclaimed rank ids, if
+/// one exists.
+fn find_free_run(claimed: &[bool], len: usize) -> Option<usize> {
+    let mut run = 0usize;
+    for (i, &c) in claimed.iter().enumerate() {
+        if c {
+            run = 0;
+        } else {
+            run += 1;
+            if run == len {
+                return Some(i + 1 - len);
+            }
+        }
+    }
+    None
+}
+
+/// What [`connect_world`] built, depending on the mode the driver's
+/// `Welcome` announced.
+pub enum WorldEndpoints {
+    /// A socket-world rank endpoint (one process per rank).
+    Socket(SocketTransport),
+    /// A hybrid host process's endpoints: one per resident rank, in
+    /// block order. Each is served by its own thread
+    /// ([`crate::comms::serve_rank`]); they share the host's links.
+    Hybrid(Vec<HybridTransport>),
+}
+
+/// The connecting process's side of the rendezvous: dial the driver at
+/// `server` (`host:port`), declare how many ranks this process carries
+/// (`nlocal`; 1 for a plain rank process) and optionally which block
+/// it wants (`want_first` = the first rank id), then build whichever
+/// world the driver's `Welcome` announces — a per-rank socket mesh or
+/// a hybrid host process. Returns the endpoints plus the driver's
+/// opaque setup payload.
+pub fn connect_world(server: &str, want_first: Option<usize>,
+                     nlocal: usize)
+                     -> Result<(WorldEndpoints, Vec<u8>)> {
     let addr = resolve(server)?;
     let mut ctl = TcpStream::connect_timeout(&addr, RENDEZVOUS_TIMEOUT)
         .map_err(|e| {
@@ -444,64 +765,198 @@ pub fn connect_rank(server: &str, want_rank: Option<usize>)
             ))
         })?;
     ctl.set_read_timeout(Some(RENDEZVOUS_TIMEOUT))?;
-    // accept higher-id peers on the interface that routes to the driver
+    // accept higher peers on the interface that routes to the driver
     // (its IP is how they will see us in the roster)
     let listener =
         TcpListener::bind(SocketAddr::new(ctl.local_addr()?.ip(), 0))?;
     let listen_port = listener.local_addr()?.port();
-    write_hello(&mut ctl, want_rank, listen_port, &rank_host())?;
-    let (rank, nranks, payload, roster) = read_welcome(&mut ctl)?;
-    if let Some(want) = want_rank {
-        if want != rank {
-            return Err(Error::Invalid(format!(
-                "comms launcher: asked for rank {want}, driver assigned \
-                 {rank}"
-            )));
+    write_hello(&mut ctl, want_first, listen_port, nlocal, &rank_host())?;
+    match read_welcome(&mut ctl)? {
+        WelcomeMsg::Socket { rank, nranks, payload, roster } => {
+            if nlocal != 1 {
+                return Err(Error::Invalid(format!(
+                    "comms launcher: the driver runs a socket world but \
+                     this process carries {nlocal} ranks"
+                )));
+            }
+            check_assignment(want_first, rank)?;
+            if roster.len() != nranks {
+                return Err(Error::Invalid(format!(
+                    "comms launcher: roster of {} for {nranks} ranks",
+                    roster.len()
+                )));
+            }
+            let mut conns: Vec<(usize, TcpStream)> =
+                Vec::with_capacity(nranks);
+            // connect downward: every lower rank is already listening
+            // (its listener was bound before its Hello was sent)
+            for (j, peer_addr) in roster.iter().enumerate().take(rank) {
+                let a = resolve(peer_addr)?;
+                let mut s =
+                    TcpStream::connect_timeout(&a, RENDEZVOUS_TIMEOUT)
+                        .map_err(|e| {
+                            Error::Invalid(format!(
+                                "comms launcher: rank {rank} cannot \
+                                 reach rank {j} at {peer_addr}: {e}"
+                            ))
+                        })?;
+                s.set_read_timeout(Some(RENDEZVOUS_TIMEOUT))?;
+                write_peer_hello(&mut s, rank)?;
+                conns.push((j, s));
+            }
+            // accept upward
+            let deadline = Instant::now() + RENDEZVOUS_TIMEOUT;
+            let mut seen = vec![false; nranks];
+            for _ in rank + 1..nranks {
+                let what = format!("higher-rank peers of rank {rank}");
+                let (mut stream, _) =
+                    accept_deadline(&listener, deadline, &what)?;
+                let j = read_peer_hello(&mut stream)?;
+                if j <= rank || j >= nranks || seen[j] {
+                    return Err(Error::Invalid(format!(
+                        "comms launcher: rank {rank} got a peer hello \
+                         from invalid rank {j}"
+                    )));
+                }
+                seen[j] = true;
+                conns.push((j, stream));
+            }
+            // the rendezvous connection doubles as the control link
+            conns.push((nranks, ctl));
+            let transport = SocketTransport::assemble(rank, nranks,
+                                                      conns)?;
+            Ok((WorldEndpoints::Socket(transport), payload))
+        }
+        WelcomeMsg::Hybrid { first, nranks, payload, blocks } => {
+            check_assignment(want_first, first)?;
+            let mine = blocks
+                .iter()
+                .find(|b| b.first == first)
+                .ok_or_else(|| {
+                    Error::Invalid(format!(
+                        "comms launcher: Welcome assigns block {first} \
+                         but no host block starts there"
+                    ))
+                })?
+                .clone();
+            if mine.count != nlocal {
+                return Err(Error::Invalid(format!(
+                    "comms launcher: driver assigned a {}-rank block to \
+                     a process carrying {nlocal} ranks",
+                    mine.count
+                )));
+            }
+            let locals: Vec<usize> = mine.ranks().collect();
+            let mut links = Vec::with_capacity(blocks.len());
+            // host-pair links, lower-first connects / higher accepts —
+            // the socket world's deadlock-free rule, per host pair
+            for b in blocks.iter().filter(|b| b.first < first) {
+                let a = resolve(&b.addr)?;
+                let mut s =
+                    TcpStream::connect_timeout(&a, RENDEZVOUS_TIMEOUT)
+                        .map_err(|e| {
+                            Error::Invalid(format!(
+                                "comms launcher: host block {first} \
+                                 cannot reach host block {} at {}: {e}",
+                                b.first, b.addr
+                            ))
+                        })?;
+                s.set_read_timeout(Some(RENDEZVOUS_TIMEOUT))?;
+                write_peer_hello(&mut s, first)?;
+                links.push(HostLink {
+                    stream: s,
+                    peers: b.ranks().collect(),
+                    eof: EofPolicy::Silent,
+                });
+            }
+            let higher =
+                blocks.iter().filter(|b| b.first > first).count();
+            let deadline = Instant::now() + RENDEZVOUS_TIMEOUT;
+            let mut seen = vec![false; blocks.len()];
+            for _ in 0..higher {
+                let what =
+                    format!("higher host blocks of block {first}");
+                let (mut stream, _) =
+                    accept_deadline(&listener, deadline, &what)?;
+                let j = read_peer_hello(&mut stream)?;
+                let bi = blocks
+                    .iter()
+                    .position(|b| b.first == j)
+                    .filter(|&bi| j > first && !seen[bi])
+                    .ok_or_else(|| {
+                        Error::Invalid(format!(
+                            "comms launcher: host block {first} got a \
+                             peer hello from invalid block {j}"
+                        ))
+                    })?;
+                seen[bi] = true;
+                links.push(HostLink {
+                    stream,
+                    peers: blocks[bi].ranks().collect(),
+                    eof: EofPolicy::Silent,
+                });
+            }
+            // the rendezvous connection doubles as the control link;
+            // its clean close before Shutdown means the driver is gone
+            links.push(HostLink {
+                stream: ctl,
+                peers: vec![nranks],
+                eof: EofPolicy::Always(
+                    "comms hybrid: the session controller closed the \
+                     connection without Shutdown — driver gone"
+                        .to_string(),
+                ),
+            });
+            let eps = hybrid::assemble(nranks, &locals, links)?;
+            Ok((WorldEndpoints::Hybrid(eps), payload))
         }
     }
-    if roster.len() != nranks {
-        return Err(Error::Invalid(format!(
-            "comms launcher: roster of {} for {nranks} ranks",
-            roster.len()
-        )));
+}
+
+fn check_assignment(want: Option<usize>, got: usize) -> Result<()> {
+    match want {
+        Some(w) if w != got => Err(Error::Invalid(format!(
+            "comms launcher: asked for rank {w}, driver assigned {got}"
+        ))),
+        _ => Ok(()),
     }
-    let mut conns: Vec<(usize, TcpStream)> = Vec::with_capacity(nranks);
-    // connect downward: every lower rank is already listening (its
-    // listener was bound before its Hello was sent)
-    for (j, peer_addr) in roster.iter().enumerate().take(rank) {
-        let a = resolve(peer_addr)?;
-        let mut s = TcpStream::connect_timeout(&a, RENDEZVOUS_TIMEOUT)
-            .map_err(|e| {
-                Error::Invalid(format!(
-                    "comms launcher: rank {rank} cannot reach rank {j} at \
-                     {peer_addr}: {e}"
-                ))
-            })?;
-        s.set_read_timeout(Some(RENDEZVOUS_TIMEOUT))?;
-        write_peer_hello(&mut s, rank)?;
-        conns.push((j, s));
+}
+
+/// The rank process's side of a **socket**-world rendezvous: dial the
+/// driver, optionally requesting a specific rank id, and build this
+/// rank's per-peer socket mesh. Returns the transport plus the
+/// driver's opaque setup payload. The returned endpoint is what
+/// [`crate::comms::serve_rank`] runs on. Errors if the driver runs a
+/// hybrid world — use [`connect_world`] (or [`connect_host`]) there.
+pub fn connect_rank(server: &str, want_rank: Option<usize>)
+                    -> Result<(SocketTransport, Vec<u8>)> {
+    match connect_world(server, want_rank, 1)? {
+        (WorldEndpoints::Socket(t), payload) => Ok((t, payload)),
+        (WorldEndpoints::Hybrid(_), _) => Err(Error::Invalid(
+            "comms launcher: the driver runs a hybrid world; \
+             connect_rank builds socket worlds only"
+                .into(),
+        )),
     }
-    // accept upward
-    let deadline = Instant::now() + RENDEZVOUS_TIMEOUT;
-    let mut seen = vec![false; nranks];
-    for _ in rank + 1..nranks {
-        let what = format!("higher-rank peers of rank {rank}");
-        let (mut stream, _) =
-            accept_deadline(&listener, deadline, &what)?;
-        let j = read_peer_hello(&mut stream)?;
-        if j <= rank || j >= nranks || seen[j] {
-            return Err(Error::Invalid(format!(
-                "comms launcher: rank {rank} got a peer hello from \
-                 invalid rank {j}"
-            )));
-        }
-        seen[j] = true;
-        conns.push((j, stream));
+}
+
+/// The host process's side of a **hybrid**-world rendezvous: dial the
+/// driver, declare a block of `nlocal` ranks (optionally pinned to
+/// start at `want_first`), and build one [`HybridTransport`] endpoint
+/// per resident rank — each to be driven by its own
+/// [`crate::comms::serve_rank`] thread. Errors if the driver runs a
+/// socket world.
+pub fn connect_host(server: &str, want_first: Option<usize>,
+                    nlocal: usize)
+                    -> Result<(Vec<HybridTransport>, Vec<u8>)> {
+    match connect_world(server, want_first, nlocal)? {
+        (WorldEndpoints::Hybrid(eps), payload) => Ok((eps, payload)),
+        (WorldEndpoints::Socket(_), _) => Err(Error::Invalid(
+            "comms launcher: the driver runs a socket world; \
+             connect_host builds hybrid host processes only"
+                .into(),
+        )),
     }
-    // the rendezvous connection doubles as the control-plane link
-    conns.push((nranks, ctl));
-    let transport = SocketTransport::assemble(rank, nranks, conns)?;
-    Ok((transport, payload))
 }
 
 /// Spawn `nranks` local rank processes of **this executable** on this
@@ -542,6 +997,64 @@ pub fn spawn_local(nranks: usize, connect: &str, extra: &[String])
     Ok(children)
 }
 
+/// One host process to spawn for a hybrid world: which contiguous rank
+/// block it carries and any extra environment variables (the hybrid
+/// smoke tests use `TARGETDP_HOST` here to give loopback children
+/// distinct host tags).
+pub struct HostSpec {
+    /// First rank id of the block.
+    pub first: usize,
+    /// Number of resident ranks (>= 1).
+    pub count: usize,
+    /// Extra environment variables for the child process.
+    pub env: Vec<(String, String)>,
+}
+
+/// Spawn one local **host process** of this executable per [`HostSpec`],
+/// each invoked as `<current_exe> <extra...> --connect <connect>
+/// --rank <first> --local-ranks <count>` with the spec's extra
+/// environment applied. The hybrid counterpart of [`spawn_local`]: one
+/// child per host, not per rank.
+pub fn spawn_local_hosts(hosts: &[HostSpec], connect: &str,
+                         extra: &[String]) -> Result<Vec<Child>> {
+    let exe = std::env::current_exe().map_err(|e| {
+        Error::Invalid(format!(
+            "comms launcher: cannot find this executable to spawn hosts: \
+             {e}"
+        ))
+    })?;
+    let mut children = Vec::with_capacity(hosts.len());
+    for h in hosts {
+        let mut cmd = std::process::Command::new(&exe);
+        cmd.args(extra)
+            .arg("--connect")
+            .arg(connect)
+            .arg("--rank")
+            .arg(h.first.to_string())
+            .arg("--local-ranks")
+            .arg(h.count.to_string());
+        for (k, v) in &h.env {
+            cmd.env(k, v);
+        }
+        match cmd.spawn() {
+            Ok(child) => children.push(child),
+            Err(e) => {
+                for c in &mut children {
+                    let _ = c.kill();
+                    let _ = c.wait();
+                }
+                return Err(Error::Invalid(format!(
+                    "comms launcher: failed to spawn host process for \
+                     ranks {}..={}: {e}",
+                    h.first,
+                    h.first + h.count - 1
+                )));
+            }
+        }
+    }
+    Ok(children)
+}
+
 /// Owner of spawn-local rank processes: [`LocalRanks::wait`] reaps them
 /// and fails if any exited non-zero; dropping unawaited kills the
 /// stragglers so an aborted driver never leaks rank processes.
@@ -554,6 +1067,15 @@ impl LocalRanks {
     pub fn spawn(nranks: usize, connect: &str, extra: &[String])
                  -> Result<LocalRanks> {
         Ok(LocalRanks { children: spawn_local(nranks, connect, extra)? })
+    }
+
+    /// [`spawn_local_hosts`] wrapped in the reaping owner: one child
+    /// per host process of a hybrid world.
+    pub fn spawn_hosts(hosts: &[HostSpec], connect: &str,
+                       extra: &[String]) -> Result<LocalRanks> {
+        Ok(LocalRanks {
+            children: spawn_local_hosts(hosts, connect, extra)?,
+        })
     }
 
     /// Block until every rank process exits; error if any failed.
@@ -705,5 +1227,120 @@ mod tests {
         });
         assert!(server.rendezvous(1, &[]).is_err());
         assert!(child.join().unwrap().is_err());
+    }
+
+    /// Full loopback **hybrid** rendezvous: one connect_host thread per
+    /// `(want_first, nlocal)` spec + the driver. Returns every rank
+    /// endpoint in rank order plus the controller.
+    fn hybrid_loopback(nranks: usize, specs: Vec<(Option<usize>, usize)>)
+                       -> (Vec<HybridTransport>, HybridTransport,
+                           Vec<Vec<u8>>) {
+        let server = RankServer::bind("127.0.0.1:0").unwrap();
+        let addr = server.local_addr().unwrap().to_string();
+        let joins: Vec<_> = specs
+            .into_iter()
+            .map(|(want, nlocal)| {
+                let addr = addr.clone();
+                std::thread::spawn(move || {
+                    connect_host(&addr, want, nlocal).unwrap()
+                })
+            })
+            .collect();
+        let ctl = server.rendezvous_hosts(nranks, b"hy-blob").unwrap();
+        let mut ranks: Vec<Option<HybridTransport>> =
+            (0..nranks).map(|_| None).collect();
+        let mut payloads = Vec::new();
+        for j in joins {
+            let (eps, payload) = j.join().unwrap();
+            payloads.push(payload);
+            for t in eps {
+                let r = t.rank();
+                assert!(ranks[r].is_none(), "duplicate rank {r}");
+                ranks[r] = Some(t);
+            }
+        }
+        (ranks.into_iter().map(Option::unwrap).collect(), ctl, payloads)
+    }
+
+    #[test]
+    fn hybrid_rendezvous_routes_channels_inside_and_sockets_between() {
+        // 2 hosts x 2 ranks: blocks [0,1] and [2,3]
+        let (mut ranks, mut ctl, payloads) =
+            hybrid_loopback(4, vec![(Some(0), 2), (Some(2), 2)]);
+        for p in payloads {
+            assert_eq!(p, b"hy-blob");
+        }
+        for (r, t) in ranks.iter().enumerate() {
+            assert_eq!(t.rank(), r);
+            assert_eq!(t.nranks(), 4);
+        }
+        // co-hosted peers are channel links, cross-host ones sockets
+        assert!(ranks[0].peer_is_intra(1));
+        assert!(!ranks[0].peer_is_intra(2));
+        assert!(ranks[3].peer_is_intra(2));
+        assert!(!ranks[3].peer_is_intra(1));
+        // intra-host hop
+        ranks[0].send_bytes(1, vec![1]).unwrap();
+        assert_eq!(ranks[1].recv_bytes().unwrap(), vec![1]);
+        // inter-host hop, both directions over the one host-pair stream
+        ranks[1].send_bytes(2, vec![2]).unwrap();
+        assert_eq!(ranks[2].recv_bytes().unwrap(), vec![2]);
+        ranks[3].send_bytes(0, vec![3]).unwrap();
+        assert_eq!(ranks[0].recv_bytes().unwrap(), vec![3]);
+        // controller <-> rank over each host's driver link
+        ctl.send_bytes(3, vec![4]).unwrap();
+        assert_eq!(ranks[3].recv_bytes().unwrap(), vec![4]);
+        ranks[3].send_bytes(4, vec![5]).unwrap();
+        assert_eq!(ctl.recv_bytes().unwrap(), vec![5]);
+    }
+
+    #[test]
+    fn hybrid_rendezvous_serves_single_rank_blocks_too() {
+        // a hybrid world where every host carries one rank degenerates
+        // to the socket shape, but over host links
+        let (mut ranks, mut ctl, _) =
+            hybrid_loopback(2, vec![(Some(0), 1), (Some(1), 1)]);
+        assert!(!ranks[0].peer_is_intra(1));
+        ranks[0].send_bytes(1, vec![7]).unwrap();
+        assert_eq!(ranks[1].recv_bytes().unwrap(), vec![7]);
+        ctl.send_bytes(0, vec![8]).unwrap();
+        assert_eq!(ranks[0].recv_bytes().unwrap(), vec![8]);
+    }
+
+    #[test]
+    fn hybrid_rendezvous_rejects_overlapping_blocks() {
+        let server = RankServer::bind("127.0.0.1:0").unwrap();
+        let addr = server.local_addr().unwrap().to_string();
+        let a = addr.clone();
+        let h1 = std::thread::spawn(move || connect_host(&a, Some(0), 3));
+        let h2 =
+            std::thread::spawn(move || connect_host(&addr, Some(2), 2));
+        // 3 + 2 = 5 ranks declared for a 4-rank world: the driver
+        // rejects before placement even considers the overlap
+        assert!(server.rendezvous_hosts(4, &[]).is_err());
+        assert!(h1.join().unwrap().is_err()
+                    || h2.join().unwrap().is_err());
+    }
+
+    #[test]
+    fn socket_rendezvous_rejects_host_processes() {
+        let server = RankServer::bind("127.0.0.1:0").unwrap();
+        let addr = server.local_addr().unwrap().to_string();
+        let child =
+            std::thread::spawn(move || connect_host(&addr, Some(0), 2));
+        assert!(server.rendezvous(2, &[]).is_err());
+        assert!(child.join().unwrap().is_err());
+    }
+
+    #[test]
+    fn find_free_run_picks_lowest_fit() {
+        let c = |bits: &[u8]| -> Vec<bool> {
+            bits.iter().map(|&b| b == 1).collect()
+        };
+        assert_eq!(find_free_run(&c(&[0, 0, 0, 0]), 2), Some(0));
+        assert_eq!(find_free_run(&c(&[1, 0, 0, 1]), 2), Some(1));
+        assert_eq!(find_free_run(&c(&[1, 0, 1, 0, 0]), 2), Some(3));
+        assert_eq!(find_free_run(&c(&[1, 0, 1, 0]), 2), None);
+        assert_eq!(find_free_run(&c(&[0]), 1), Some(0));
     }
 }

@@ -124,13 +124,34 @@
 //! bit-identical to channel runs and to the single-domain fused engine
 //! (`tests/socket_transport.rs`; `docs/architecture.md` is the operator
 //! guide).
+//!
+//! # Hybrid worlds
+//!
+//! `--transport hybrid` keeps the multi-process reach but collapses each
+//! host to **one OS process carrying all of that host's ranks as
+//! resident threads**: [`hybrid::HybridTransport`] routes every peer
+//! link by locality — co-hosted neighbours exchange encoded frames over
+//! in-process channels (no length-prefix framing, no syscalls) while
+//! cross-host links share one TCP stream per host pair, multiplexed by
+//! destination envelopes. The rendezvous ([`launcher::connect_host`] /
+//! `RankServer::rendezvous_hosts`) ships the host→ranks map in the
+//! `Welcome`, so each host builds its channel mesh locally and dials
+//! only inter-host sockets. Because grid ranks are numbered z-fastest
+//! and placement is host-grouped, the highest-traffic inner-axis faces
+//! land on channel links — [`wire::ReportMsg`]'s intra/inter traffic
+//! split is the receipt (`tests/hybrid_world.rs` pins bitwise parity
+//! against the channel, socket and fused-engine references).
 
+pub mod hybrid;
 pub mod launcher;
 pub mod socket;
 pub mod transport;
 pub mod wire;
 pub mod world;
 
+pub use hybrid::HybridTransport;
+pub use launcher::{connect_host, connect_rank, connect_world, HostBlock,
+                   HostSpec, LocalRanks, RankServer, WorldEndpoints};
 pub use socket::SocketTransport;
 pub use transport::{ChannelTransport, Transport};
 pub use wire::{Axis, Command, FieldId, Frame, InteriorField, InteriorMsg,

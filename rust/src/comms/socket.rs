@@ -225,6 +225,13 @@ impl Transport for SocketTransport {
         self.nranks
     }
 
+    /// Only the 1-rank periodic self-seam stays in-process; every real
+    /// peer link is a socket — including co-hosted loopback ones, which
+    /// still pay the full frame/syscall cost.
+    fn peer_is_intra(&self, peer: usize) -> bool {
+        peer == self.rank
+    }
+
     fn send_bytes(&mut self, dst: usize, frame: Vec<u8>) -> Result<()> {
         use std::io::Write;
         if frame.len() > MAX_FRAME_LEN {

@@ -17,7 +17,7 @@
 //! socket transport carries the whole session protocol by implementing
 //! the three byte-level methods — the control plane needs nothing extra.
 //!
-//! Two implementations exist:
+//! Three implementations exist:
 //!
 //! * [`ChannelTransport`] — in-process: every endpoint runs on its own
 //!   OS thread and frames travel through `std::sync::mpsc` channels (the
@@ -28,6 +28,12 @@
 //!   frames, length-prefixed, over per-peer TCP connections assembled by
 //!   the [`crate::comms::launcher`] rendezvous. A run spans real
 //!   processes and hosts with no change above this trait.
+//! * [`crate::comms::hybrid::HybridTransport`] — per-link routing: one
+//!   OS process per *host* runs that host's ranks as threads; co-hosted
+//!   peers exchange frames through in-process channels, only cross-host
+//!   links touch a socket. [`Transport::peer_is_intra`] reports which
+//!   kind a given peer link is, feeding the per-link traffic split in
+//!   [`crate::comms::wire::ReportMsg`].
 
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::time::Duration;
@@ -100,6 +106,19 @@ pub trait Transport: Send {
     /// complete frame arrived in time, or `None`.
     fn recv_bytes_timeout(&mut self, timeout: Duration)
                           -> Result<Option<Vec<u8>>>;
+
+    /// Whether the link to `peer` stays inside this OS process (an
+    /// in-process channel or the 1-rank periodic self-seam) rather than
+    /// crossing a socket. Purely informational — it feeds the
+    /// intra/inter-host traffic split in
+    /// [`crate::comms::wire::ReportMsg`] and never changes routing. The
+    /// conservative default says no link is intra-process; a pure-socket
+    /// world deliberately keeps that answer even for co-hosted loopback
+    /// peers, because those links still pay the full frame/syscall cost
+    /// the hybrid transport removes.
+    fn peer_is_intra(&self, _peer: usize) -> bool {
+        false
+    }
 
     /// Send several already-encoded frames to one destination. The
     /// frames stay **distinct messages** (each is received by its own
@@ -206,6 +225,11 @@ impl Transport for ChannelTransport {
 
     fn nranks(&self) -> usize {
         self.nranks
+    }
+
+    /// Every channel link lives inside this process.
+    fn peer_is_intra(&self, _peer: usize) -> bool {
+        true
     }
 
     fn send_bytes(&mut self, dst: usize, frame: Vec<u8>) -> Result<()> {

@@ -42,6 +42,8 @@
 //! Report     6 src(4)  10 interior_sites(8)  18 steps(8)  26 compute_s(8)
 //!            34 wait_s(8)  42 idle_s(8)  50 bytes_sent(8)  58 msgs_sent(8)
 //!            66 bytes_axis(24)  90 msgs_axis(24)  114 super_steps(8)
+//!            122 bytes_intra(8)  130 bytes_inter(8)  138 msgs_intra(8)
+//!            146 msgs_inter(8)
 //! PlaneBlock 6 field(1)  7 side(1)  8 axis(1)  9 depth(4)  13 src(4)
 //!            17 step(8)  25 count(4)  29 payload(8*count)
 //! Trace      6 src(4)  10 count(4)  14 records(31*count)
@@ -69,6 +71,15 @@
 //! collection loop sees every timeline by the time the last report
 //! lands. Tracing-off runs never send a `Trace` frame.
 //!
+//! Version 5 is the hybrid-world revision: `Report` grew the per-link
+//! traffic split — halo bytes/messages carried over **intra-host**
+//! links (in-process channels inside a hybrid host process, or the
+//! 1-rank periodic self-seam) vs **inter-host** links (TCP sockets).
+//! `bytes_intra + bytes_inter == bytes_sent` and likewise for messages;
+//! a pure-socket world counts everything inter (even co-hosted loopback
+//! links — that full serialize/syscall cost is exactly what the hybrid
+//! transport removes), a pure-channel world counts everything intra.
+//!
 //! `PlaneBlock` is the communication-avoiding super-step frame: one
 //! message carries a whole `depth`-plane-deep ghost block (the
 //! `halo::pack_x_planes` layout), replacing `depth` individual `Plane`
@@ -82,9 +93,9 @@ use crate::obs::trace::{Span, TracePhase, AXIS_NONE, SIDE_NONE};
 
 /// Frame magic: "targetDP wire".
 pub const MAGIC: [u8; 4] = *b"TDPW";
-/// Wire format version (4: telemetry — `Trace` frames, per-axis report
-/// counters, heartbeat fields in `Partials`).
-pub const VERSION: u8 = 4;
+/// Wire format version (5: hybrid worlds — intra-host vs inter-host
+/// traffic split in `Report`).
+pub const VERSION: u8 = 5;
 /// Fixed header size of a [`PlaneMsg`] frame in bytes.
 pub const PLANE_HEADER_LEN: usize = 26;
 /// Fixed header size of an [`InteriorMsg`] frame in bytes.
@@ -311,6 +322,19 @@ pub struct ReportMsg {
     /// Communication-avoiding super-steps executed (0 on depth-1
     /// schedules; each super-step covers up to `depth` timesteps).
     pub super_steps: u64,
+    /// `bytes_sent` carried over intra-host links (in-process channels
+    /// in a hybrid world, or the 1-rank periodic self-seam). Sums with
+    /// `bytes_inter` to `bytes_sent`.
+    pub bytes_intra: u64,
+    /// `bytes_sent` carried over inter-host links (TCP sockets). A
+    /// pure-socket world counts everything here, even co-hosted
+    /// loopback links.
+    pub bytes_inter: u64,
+    /// `msgs_sent` carried over intra-host links (sums with
+    /// `msgs_inter` to `msgs_sent`).
+    pub msgs_intra: u64,
+    /// `msgs_sent` carried over inter-host links.
+    pub msgs_inter: u64,
 }
 
 /// Rank → driver span timeline (sent on `Shutdown`, immediately before
@@ -343,6 +367,14 @@ fn prelude(out: &mut Vec<u8>, kind: u8) {
     out.extend_from_slice(&MAGIC);
     out.push(VERSION);
     out.push(kind);
+}
+
+/// Whether an encoded frame is a rank [`ReportMsg`] — a header peek, no
+/// decode. The hybrid transport's driver-side link readers use this to
+/// tell a normal post-report host-process exit (every resident rank's
+/// report already crossed the link) from a mid-run host death.
+pub(crate) fn is_report_frame(bytes: &[u8]) -> bool {
+    bytes.len() >= 6 && bytes[..4] == MAGIC && bytes[5] == KIND_REPORT
 }
 
 fn push_f64s(out: &mut Vec<u8>, data: &[f64]) {
@@ -476,7 +508,7 @@ impl PartialObs {
 
 impl ReportMsg {
     fn encode(&self) -> Vec<u8> {
-        let mut out = Vec::with_capacity(122);
+        let mut out = Vec::with_capacity(154);
         prelude(&mut out, KIND_REPORT);
         out.extend_from_slice(&self.src.to_le_bytes());
         out.extend_from_slice(&self.interior_sites.to_le_bytes());
@@ -493,6 +525,10 @@ impl ReportMsg {
             out.extend_from_slice(&v.to_le_bytes());
         }
         out.extend_from_slice(&self.super_steps.to_le_bytes());
+        out.extend_from_slice(&self.bytes_intra.to_le_bytes());
+        out.extend_from_slice(&self.bytes_inter.to_le_bytes());
+        out.extend_from_slice(&self.msgs_intra.to_le_bytes());
+        out.extend_from_slice(&self.msgs_inter.to_le_bytes());
         out
     }
 }
@@ -720,6 +756,10 @@ impl Frame {
                 let bytes_axis = [r.u64()?, r.u64()?, r.u64()?];
                 let msgs_axis = [r.u64()?, r.u64()?, r.u64()?];
                 let super_steps = r.u64()?;
+                let bytes_intra = r.u64()?;
+                let bytes_inter = r.u64()?;
+                let msgs_intra = r.u64()?;
+                let msgs_inter = r.u64()?;
                 r.done()?;
                 Ok(Frame::Report(ReportMsg {
                     src,
@@ -733,6 +773,10 @@ impl Frame {
                     bytes_axis,
                     msgs_axis,
                     super_steps,
+                    bytes_intra,
+                    bytes_inter,
+                    msgs_intra,
+                    msgs_inter,
                 }))
             }
             KIND_PLANE_BLOCK => {
@@ -930,6 +974,10 @@ mod tests {
                          - (1 << 18)],
             msgs_axis: [200, 300, 100],
             super_steps: 50,
+            bytes_intra: 1 << 19,
+            bytes_inter: (1 << 20) - (1 << 19),
+            msgs_intra: 400,
+            msgs_inter: 200,
         };
         let fr = Frame::Report(r);
         assert_eq!(Frame::decode(&fr.encode()).unwrap(), fr);
@@ -1071,6 +1119,10 @@ mod tests {
             bytes_axis: [0; 3],
             msgs_axis: [0; 3],
             super_steps: 0,
+            bytes_intra: 0,
+            bytes_inter: 0,
+            msgs_intra: 0,
+            msgs_inter: 0,
         })
         .encode();
         assert!(Frame::decode(&bad[..bad.len() - 1]).is_err());

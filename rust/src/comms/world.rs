@@ -243,6 +243,18 @@ pub struct RankReport {
     /// Communication-avoiding super-steps executed (0 for depth-1
     /// worlds, which take the per-step exchange path).
     pub super_steps: u64,
+    /// Halo bytes that stayed inside this rank's OS process
+    /// ([`Transport::peer_is_intra`] links: in-process channels, a
+    /// hybrid world's co-hosted neighbours, the 1-rank self-seam).
+    /// `bytes_intra + bytes_inter == bytes_sent`.
+    pub bytes_intra: u64,
+    /// Halo bytes that crossed a socket to another process or host.
+    pub bytes_inter: u64,
+    /// Halo messages on intra-process links;
+    /// `msgs_intra + msgs_inter == msgs_sent`.
+    pub msgs_intra: u64,
+    /// Halo messages that crossed a socket.
+    pub msgs_inter: u64,
 }
 
 impl RankReport {
@@ -350,6 +362,17 @@ pub struct Rank {
     pub msgs_axis: [u64; 3],
     /// Communication-avoiding super-steps executed.
     pub super_steps: u64,
+    /// Halo bytes on links that stay inside this OS process
+    /// ([`Transport::peer_is_intra`]); the rest are
+    /// [`Rank::bytes_inter`]. Together they sum to
+    /// [`Rank::bytes_sent`].
+    pub bytes_intra: u64,
+    /// Halo bytes that crossed a socket to another process or host.
+    pub bytes_inter: u64,
+    /// Halo messages on intra-process links.
+    pub msgs_intra: u64,
+    /// Halo messages that crossed a socket.
+    pub msgs_inter: u64,
     /// The rank thread's span recorder — disabled (free) unless the
     /// world was built with [`CommsConfig::trace`].
     pub trace: SpanRecorder,
@@ -373,6 +396,10 @@ impl Rank {
             bytes_axis: [0; 3],
             msgs_axis: [0; 3],
             super_steps: 0,
+            bytes_intra: 0,
+            bytes_inter: 0,
+            msgs_intra: 0,
+            msgs_inter: 0,
             trace: SpanRecorder::disabled(),
         }
     }
@@ -402,6 +429,13 @@ impl Rank {
         self.msgs_sent += 1;
         self.bytes_axis[tag.axis.index()] += nbytes;
         self.msgs_axis[tag.axis.index()] += 1;
+        if self.transport.peer_is_intra(dst) {
+            self.bytes_intra += nbytes;
+            self.msgs_intra += 1;
+        } else {
+            self.bytes_inter += nbytes;
+            self.msgs_inter += 1;
+        }
         let t0 = self.trace.now();
         let r = self.transport.send_plane(dst, self.rank as u32, tag, data);
         self.trace.close(TracePhase::Send, tag.step,
@@ -419,6 +453,7 @@ impl Rank {
     pub fn isend_blocks(&mut self, dst: usize, step: u64, depth: u32,
                         blocks: &[(FieldId, Side, &[f64])]) -> Result<()> {
         let mut frames = Vec::with_capacity(blocks.len());
+        let intra = self.transport.peer_is_intra(dst);
         for (field, side, data) in blocks {
             let nbytes = PlaneBlockMsg::frame_len(data.len()) as u64;
             self.bytes_sent += nbytes;
@@ -426,6 +461,13 @@ impl Rank {
             // ghost blocks are x-blocked (super-steps are slab-only)
             self.bytes_axis[0] += nbytes;
             self.msgs_axis[0] += 1;
+            if intra {
+                self.bytes_intra += nbytes;
+                self.msgs_intra += 1;
+            } else {
+                self.bytes_inter += nbytes;
+                self.msgs_inter += 1;
+            }
             frames.push(PlaneBlockMsg::encode_from(
                 self.rank as u32, step, *field, *side, Axis::X, depth,
                 data));
@@ -1186,6 +1228,10 @@ impl CommsSession {
                 bytes_axis: r.bytes_axis,
                 msgs_axis: r.msgs_axis,
                 super_steps: r.super_steps,
+                bytes_intra: r.bytes_intra,
+                bytes_inter: r.bytes_inter,
+                msgs_intra: r.msgs_intra,
+                msgs_inter: r.msgs_inter,
             });
             got += 1;
         }
@@ -1444,6 +1490,10 @@ fn slab_main(d: SubDomain, vs: &'static VelSet, p: FeParams,
                     bytes_axis: rank.bytes_axis,
                     msgs_axis: rank.msgs_axis,
                     super_steps: rank.super_steps,
+                    bytes_intra: rank.bytes_intra,
+                    bytes_inter: rank.bytes_inter,
+                    msgs_intra: rank.msgs_intra,
+                    msgs_inter: rank.msgs_inter,
                 };
                 rank.send_response(&Frame::Report(report))?;
                 return Ok(());
@@ -1782,6 +1832,10 @@ fn grid_main(d: CartSubDomain, vs: &'static VelSet, p: FeParams,
                     bytes_axis: rank.bytes_axis,
                     msgs_axis: rank.msgs_axis,
                     super_steps: rank.super_steps,
+                    bytes_intra: rank.bytes_intra,
+                    bytes_inter: rank.bytes_inter,
+                    msgs_intra: rank.msgs_intra,
+                    msgs_inter: rank.msgs_inter,
                 };
                 rank.send_response(&Frame::Report(report))?;
                 return Ok(());
@@ -2737,6 +2791,12 @@ mod tests {
             // (commands, gathers, reports) are not halo traffic
             assert_eq!(r.msgs_sent, 30);
             assert!(r.bytes_sent > 0);
+            // the intra/inter split always accounts for every frame,
+            // and a channel world is all-intra by definition
+            assert_eq!(r.bytes_intra + r.bytes_inter, r.bytes_sent);
+            assert_eq!(r.msgs_intra + r.msgs_inter, r.msgs_sent);
+            assert_eq!(r.bytes_inter, 0);
+            assert_eq!(r.msgs_inter, 0);
             assert!(r.compute_s >= 0.0 && r.wait_s >= 0.0);
             assert!(r.idle_s >= 0.0);
         }

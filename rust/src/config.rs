@@ -26,6 +26,14 @@ pub enum TransportMode {
     /// driver listens there and the operator starts
     /// `targetdp rank --connect host:port` on each host.
     Socket,
+    /// Hybrid: one OS process **per host** carrying all of that host's
+    /// ranks as resident threads (`comms::HybridTransport`) — co-hosted
+    /// neighbours exchange frames over in-process channels, only
+    /// cross-host links use sockets (one TCP stream per host pair).
+    /// Without `rank_server` the driver spawns a single local host
+    /// process carrying every rank; with it, the operator starts
+    /// `targetdp rank --connect host:port --local-ranks N` per host.
+    Hybrid,
 }
 
 /// How a decomposed run computes per-block observables (the `[target]
@@ -111,13 +119,16 @@ pub struct TargetCfg {
     /// block).
     pub observables: String,
     /// Transport for a decomposed run: `"channel"` (default — one rank
-    /// thread per slab, in-process) or `"socket"` (one rank OS process
-    /// per slab over TCP; bit-identical physics).
+    /// thread per slab, in-process), `"socket"` (one rank OS process
+    /// per slab over TCP) or `"hybrid"` (one OS process per host;
+    /// channel links inside, sockets between — bit-identical physics
+    /// all three ways).
     pub transport: String,
-    /// Socket mode only: `host:port` the driver's rank server listens on
-    /// for manually started ranks (`targetdp rank --connect host:port`
-    /// on each host). Empty (default) = spawn the rank processes locally
-    /// on an ephemeral loopback port.
+    /// Socket/hybrid mode only: `host:port` the driver's rank server
+    /// listens on for manually started ranks (`targetdp rank --connect
+    /// host:port` on each host, plus `--local-ranks N` in hybrid mode).
+    /// Empty (default) = spawn the rank (or host) processes locally on
+    /// an ephemeral loopback port.
     pub rank_server: String,
     /// Rank grid for a decomposed run: `"px,py,pz"` with
     /// `px·py·pz = ranks` splits the lattice over a 3D Cartesian grid
@@ -279,9 +290,10 @@ impl Config {
         match self.target.transport.as_str() {
             "channel" => Ok(TransportMode::Channel),
             "socket" => Ok(TransportMode::Socket),
+            "hybrid" => Ok(TransportMode::Hybrid),
             other => Err(Error::Parse(format!(
-                "unknown transport {other:?} (want \"channel\" or \
-                 \"socket\")"
+                "unknown transport {other:?} (want \"channel\", \
+                 \"socket\" or \"hybrid\")"
             ))),
         }
     }
@@ -746,6 +758,10 @@ mod tests {
         assert_eq!(cfg.transport_mode().unwrap(), TransportMode::Socket);
         assert_eq!(cfg.target.rank_server, "0.0.0.0:7777");
 
+        let mut cfg = cfg;
+        cfg.target.transport = "hybrid".into();
+        assert_eq!(cfg.transport_mode().unwrap(), TransportMode::Hybrid);
+
         let mut bad = cfg;
         bad.target.transport = "carrier-pigeon".into();
         assert!(bad.transport_mode().is_err());
@@ -761,7 +777,7 @@ mod tests {
         cfg.simulation.radius = 3.25;
         cfg.target.ranks = 3;
         cfg.target.overlap = false;
-        cfg.target.transport = "socket".into();
+        cfg.target.transport = "hybrid".into();
         cfg.target.schedule = "dynamic".into();
         cfg.target.multi_step = 4;
         cfg.target.comms_depth = 2;

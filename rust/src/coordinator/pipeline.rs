@@ -4,7 +4,8 @@
 use std::path::Path;
 use std::time::Instant;
 
-use crate::comms::launcher::{connect_rank, LocalRanks, RankServer};
+use crate::comms::launcher::{connect_world, HostSpec, LocalRanks,
+                             RankServer, WorldEndpoints};
 use crate::comms::{CommsSession, CommsWorld, WorldReport};
 use crate::config::{Config, ObservablesMode, TransportMode};
 use crate::error::{Error, Result};
@@ -103,13 +104,13 @@ fn block_size(cfg: &Config) -> u64 {
 }
 
 /// Run a full simulation according to `cfg`, logging to stdout.
-/// `ranks > 1` (or `transport = "socket"`) routes through the comms
-/// subsystem — concurrent ranks on a Cartesian grid with overlapped
-/// halo exchange, as threads or as OS processes — instead of a single
-/// engine.
+/// `ranks > 1` (or `transport = "socket"` / `"hybrid"`) routes through
+/// the comms subsystem — concurrent ranks on a Cartesian grid with
+/// overlapped halo exchange, as threads, OS processes or per-host
+/// processes — instead of a single engine.
 pub fn run_simulation(cfg: &Config) -> Result<RunSummary> {
     let transport = cfg.transport_mode()?;
-    if cfg.target.ranks > 1 || transport == TransportMode::Socket {
+    if cfg.target.ranks > 1 || transport != TransportMode::Channel {
         return run_decomposed_simulation(cfg, transport);
     }
     if !cfg.output.trace_out.is_empty() || !cfg.output.report_json.is_empty()
@@ -248,6 +249,7 @@ fn run_decomposed_simulation(cfg: &Config, transport: TransportMode)
         match transport {
             TransportMode::Channel => "channel",
             TransportMode::Socket => "socket",
+            TransportMode::Hybrid => "hybrid",
         },
         if ccfg.overlap { "overlap" } else { "bulk-sync" },
         if ccfg.scalar { "host-scalar" } else { "host-simd" },
@@ -284,10 +286,10 @@ fn run_decomposed_simulation(cfg: &Config, transport: TransportMode)
 
     // channel mode: the initial state moves into the session — each rank
     // thread copies its own planes out of it (first touch on the rank's
-    // pool). Socket mode: each rank *process* recomputes it from the
-    // config shipped in the rendezvous payload instead, so no state
-    // crosses the wire at startup. Either way the ranks stay resident
-    // until `finish`.
+    // pool). Socket/hybrid mode: each rank (or host) *process*
+    // recomputes it from the config shipped in the rendezvous payload
+    // instead, so no state crosses the wire at startup. Either way the
+    // ranks stay resident until `finish`.
     let (mut session, local_ranks): (CommsSession, Option<LocalRanks>) =
         match transport {
             TransportMode::Channel => {
@@ -325,6 +327,41 @@ fn run_decomposed_simulation(cfg: &Config, transport: TransportMode)
                 let controller = server
                     .rendezvous(ccfg.ranks,
                                 cfg.to_toml_string().as_bytes())?;
+                (world.remote_session(vs, Box::new(controller))?, local)
+            }
+            TransportMode::Hybrid => {
+                let listen = if cfg.target.rank_server.is_empty() {
+                    "127.0.0.1:0"
+                } else {
+                    cfg.target.rank_server.as_str()
+                };
+                let server = RankServer::bind(listen)?;
+                let addr = server.local_addr()?;
+                let local = if cfg.target.rank_server.is_empty() {
+                    // one machine = one host process carrying every
+                    // rank; every link is an in-process channel
+                    println!("ranks    : spawning 1 local host process \
+                              carrying {} ranks -> {addr}",
+                             ccfg.ranks);
+                    Some(LocalRanks::spawn_hosts(
+                        &[HostSpec { first: 0, count: ccfg.ranks,
+                                     env: vec![] }],
+                        &addr.to_string(), &["rank".to_string()])?)
+                } else {
+                    let shown = if addr.ip().is_unspecified() {
+                        format!("<driver-host>:{}", addr.port())
+                    } else {
+                        addr.to_string()
+                    };
+                    println!("ranks    : waiting for {} ranks; start \
+                              `targetdp rank --connect {shown} \
+                              --local-ranks <n>` on each host",
+                             ccfg.ranks);
+                    None
+                };
+                let controller = server
+                    .rendezvous_hosts(ccfg.ranks,
+                                      cfg.to_toml_string().as_bytes())?;
                 (world.remote_session(vs, Box::new(controller))?, local)
             }
         };
@@ -413,8 +450,15 @@ fn run_decomposed_simulation(cfg: &Config, transport: TransportMode)
         );
     }
     let bytes_sent: u64 = report.ranks.iter().map(|r| r.bytes_sent).sum();
-    println!("exchange : {:.2} MiB total over {} steps",
-             bytes_sent as f64 / (1024.0 * 1024.0), done);
+    let bytes_intra: u64 =
+        report.ranks.iter().map(|r| r.bytes_intra).sum();
+    let bytes_inter: u64 =
+        report.ranks.iter().map(|r| r.bytes_inter).sum();
+    const MIB: f64 = 1024.0 * 1024.0;
+    println!("exchange : {:.2} MiB total over {} steps \
+              ({:.2} MiB intra-host, {:.2} MiB inter-host)",
+             bytes_sent as f64 / MIB, done, bytes_intra as f64 / MIB,
+             bytes_inter as f64 / MIB);
 
     if !cfg.output.trace_out.is_empty() {
         write_json_file(&cfg.output.trace_out,
@@ -590,6 +634,10 @@ fn run_report_json(cfg: &Config, report: &WorldReport, steps: u64,
                 ("wait_fraction", Json::from(r.wait_fraction())),
                 ("bytes_sent", Json::from(r.bytes_sent)),
                 ("msgs_sent", Json::from(r.msgs_sent)),
+                ("bytes_intra", Json::from(r.bytes_intra)),
+                ("bytes_inter", Json::from(r.bytes_inter)),
+                ("msgs_intra", Json::from(r.msgs_intra)),
+                ("msgs_inter", Json::from(r.msgs_inter)),
                 ("bytes_axis",
                  Json::Array(r.bytes_axis.iter().copied().map(Json::from)
                      .collect())),
@@ -616,19 +664,25 @@ fn run_report_json(cfg: &Config, report: &WorldReport, steps: u64,
     ])
 }
 
-/// Entry point of a socket **rank process** (`targetdp rank --connect
-/// HOST:PORT [--rank R]`): rendezvous with the driver's rank server,
-/// rebuild the identical run from the config shipped in the `Welcome`
-/// payload, recompute the deterministic initial state locally, and serve
-/// this rank's subdomain until the driver's `Shutdown`.
+/// Entry point of a **rank process** (`targetdp rank --connect
+/// HOST:PORT [--rank R] [--local-ranks N]`): rendezvous with the
+/// driver's rank server, rebuild the identical run from the config
+/// shipped in the `Welcome` payload, recompute the deterministic
+/// initial state locally, and serve until the driver's `Shutdown`.
+/// Against a socket driver this serves one rank; against a hybrid
+/// driver it becomes a **host process** driving `local_ranks` resident
+/// rank threads off the one rendezvous connection — co-hosted
+/// neighbours exchange frames in-process, and the same rank body
+/// ([`crate::comms::serve_rank`]) runs per thread either way.
 ///
 /// The process is silent on success — all run logging belongs to the
 /// driver; errors surface through the exit code, which the driver's
 /// [`LocalRanks::wait`] (spawn-local) or the operator (multi-host)
 /// observes.
-pub fn run_rank_process(server: &str, want_rank: Option<usize>)
-                        -> Result<()> {
-    let (transport, payload) = connect_rank(server, want_rank)?;
+pub fn run_rank_process(server: &str, want_rank: Option<usize>,
+                        local_ranks: usize) -> Result<()> {
+    let (endpoints, payload) =
+        connect_world(server, want_rank, local_ranks)?;
     let text = String::from_utf8(payload).map_err(|_| {
         Error::Parse(
             "comms launcher: setup payload is not UTF-8 TOML".into(),
@@ -639,18 +693,63 @@ pub fn run_rank_process(server: &str, want_rank: Option<usize>)
     let model = cfg.model()?;
     let vs = model.velset();
     let ccfg = cfg.comms_config()?;
-    let rank = crate::comms::Transport::rank(&transport);
     let world = CommsWorld::new(geom, ccfg.clone())?;
-    let d = world.dec.domains.get(rank).cloned().ok_or_else(|| {
-        Error::Invalid(format!(
-            "comms launcher: assigned rank {rank}, world has {} domains",
-            world.dec.domains.len()
-        ))
-    })?;
-    let (f0, g0) = initial_state(&cfg, &geom);
     let nthreads = threads_per_rank(ccfg.threads, ccfg.ranks);
-    crate::comms::serve_rank(d, vs, &cfg.free_energy, f0, g0, &ccfg,
-                             nthreads, Box::new(transport))
+    let domain_of = |rank: usize| {
+        world.dec.domains.get(rank).cloned().ok_or_else(|| {
+            Error::Invalid(format!(
+                "comms launcher: assigned rank {rank}, world has {} \
+                 domains",
+                world.dec.domains.len()
+            ))
+        })
+    };
+    match endpoints {
+        WorldEndpoints::Socket(transport) => {
+            let rank = crate::comms::Transport::rank(&transport);
+            let d = domain_of(rank)?;
+            let (f0, g0) = initial_state(&cfg, &geom);
+            crate::comms::serve_rank(d, vs, &cfg.free_energy, f0, g0,
+                                     &ccfg, nthreads, Box::new(transport))
+        }
+        WorldEndpoints::Hybrid(eps) => {
+            // one resident thread per endpoint, all sharing this
+            // process's links; each recomputes the deterministic
+            // initial state and keeps only its own planes
+            let fe = cfg.free_energy;
+            let mut joins = Vec::with_capacity(eps.len());
+            for t in eps {
+                let rank = crate::comms::Transport::rank(&t);
+                let d = domain_of(rank)?;
+                let (f0, g0) = initial_state(&cfg, &geom);
+                let ccfg = ccfg.clone();
+                joins.push(std::thread::spawn(move || {
+                    crate::comms::serve_rank(d, vs, &fe, f0, g0, &ccfg,
+                                             nthreads, Box::new(t))
+                }));
+            }
+            let mut first_err = None;
+            for j in joins {
+                match j.join() {
+                    Ok(Ok(())) => {}
+                    Ok(Err(e)) => {
+                        first_err.get_or_insert(e);
+                    }
+                    Err(_) => {
+                        first_err.get_or_insert(Error::Invalid(
+                            "comms hybrid: a resident rank thread \
+                             panicked"
+                                .into(),
+                        ));
+                    }
+                }
+            }
+            match first_err {
+                None => Ok(()),
+                Some(e) => Err(e),
+            }
+        }
+    }
 }
 
 /// Convenience: run a short spinodal simulation on a given backend without
@@ -864,6 +963,10 @@ mod tests {
                 bytes_axis: [1024, 0, 0],
                 msgs_axis: [12, 0, 0],
                 super_steps: 0,
+                bytes_intra: 256,
+                bytes_inter: 768,
+                msgs_intra: 3,
+                msgs_inter: 9,
             }],
             seconds: 0.7,
             overlap: true,
@@ -898,6 +1001,10 @@ mod tests {
         assert_eq!(parsed.get("world").get("ranks").as_usize().unwrap(), 1);
         let ranks = parsed.get("ranks").as_array().unwrap();
         assert_eq!(ranks[0].get("super_steps").as_usize().unwrap(), 0);
+        assert_eq!(ranks[0].get("bytes_intra").as_usize().unwrap(), 256);
+        assert_eq!(ranks[0].get("bytes_inter").as_usize().unwrap(), 768);
+        assert_eq!(ranks[0].get("msgs_intra").as_usize().unwrap(), 3);
+        assert_eq!(ranks[0].get("msgs_inter").as_usize().unwrap(), 9);
         assert_eq!(ranks[0].get("bytes_axis").as_array().unwrap()[0]
                        .as_usize()
                        .unwrap(),

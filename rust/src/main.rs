@@ -5,7 +5,9 @@
 //! targetdp run --config examples/spinodal.toml
 //! targetdp run --backend xla --lattice d3q19 --size 16 --steps 100
 //! targetdp run --ranks 4 --transport socket          # 4 OS processes
+//! targetdp run --ranks 4 --transport hybrid          # 1 process/host
 //! targetdp rank --connect host:7777                  # one remote rank
+//! targetdp rank --connect host:7777 --local-ranks 4  # one remote host
 //! targetdp info
 //! ```
 
@@ -27,10 +29,11 @@ USAGE:
                  [--overlap true|false] [--comms-depth K]
                  [--pin-threads true|false]
                  [--observables reduced|gather]
-                 [--transport channel|socket] [--rank-server HOST:PORT]
+                 [--transport channel|socket|hybrid]
+                 [--rank-server HOST:PORT]
                  [--out DIR] [--vtk] [--trace-out FILE]
                  [--report-json FILE] [--heartbeat SECS]
-    targetdp rank --connect HOST:PORT [--rank R]
+    targetdp rank --connect HOST:PORT [--rank R] [--local-ranks N]
     targetdp info
     targetdp help
 
@@ -55,12 +58,18 @@ run options (ignored when --config is given):
     --observables per-block reduction for ranks > 1:
                   distributed partials (reduced) or
                   full-state gather                 [reduced]
-    --transport   channel (rank threads) or socket
-                  (rank OS processes over TCP)      [channel]
-    --rank-server socket mode: listen on HOST:PORT
-                  for manually started ranks (one
-                  `targetdp rank --connect` each)
-                  instead of spawning them locally  [spawn-local]
+    --transport   channel (rank threads), socket
+                  (one OS process per rank) or
+                  hybrid (one OS process per host;
+                  channel links inside, sockets
+                  between hosts)                    [channel]
+    --rank-server socket/hybrid mode: listen on
+                  HOST:PORT for manually started
+                  ranks (one `targetdp rank
+                  --connect` per rank, or per host
+                  with --local-ranks N in hybrid
+                  mode) instead of spawning them
+                  locally                           [spawn-local]
     --out         output directory for CSV/VTK      [none]
     --vtk         dump a phi snapshot at the end
     --trace-out   write a Chrome trace_event JSON
@@ -73,9 +82,13 @@ run options (ignored when --config is given):
                   N seconds between logging blocks
                   (step/total, mlups, max wait%)    [0 = off]
 
-rank options (a socket rank process; normally spawned by the driver):
+rank options (a rank/host process; normally spawned by the driver):
     --connect     the driver's rank-server address  (required)
-    --rank        request a specific rank id        [driver assigns]
+    --rank        request a specific rank id (the
+                  block's first id with
+                  --local-ranks > 1)                [driver assigns]
+    --local-ranks ranks this process carries as
+                  resident threads (hybrid driver)  [1]
 ";
 
 fn main() -> ExitCode {
@@ -157,7 +170,8 @@ fn run() -> targetdp::Result<()> {
                 Some(_) => Some(args.usize_or("rank", 0)?),
                 None => None,
             };
-            run_rank_process(&server, want_rank)
+            let local_ranks = args.usize_or("local-ranks", 1)?;
+            run_rank_process(&server, want_rank, local_ranks)
         }
         "info" => {
             println!("targetDP targets:");

@@ -1,0 +1,309 @@
+//! Hybrid worlds: multi-rank host processes with per-link transport
+//! routing. Each simulated "host" is a `connect_host` block whose ranks
+//! share one process — co-hosted neighbours exchange frames over
+//! in-process channels while cross-host links ride one TCP stream per
+//! host pair. The headline guarantees pinned here:
+//!
+//! * **bit-identical physics** — every hybrid world matches the channel
+//!   world, the socket-style references and the single-domain fused
+//!   engine, over slab and grid shapes, both schedules, depth 1 and
+//!   depth 2, D2Q9 and D3Q19;
+//! * **per-link traffic split** — `bytes_intra + bytes_inter ==
+//!   bytes_sent` everywhere, co-hosted faces count as intra, and on a
+//!   2x2x2 grid over 2 hosts the inner-axis (y, z) faces land on
+//!   channel links while only the x faces cross the network;
+//! * **failure semantics** — a host process dying mid-run surfaces as
+//!   an error on the driver (and on surviving hosts), never a hang.
+
+use std::thread;
+use std::time::Duration;
+
+use targetdp::comms::launcher::{connect_host, RankServer};
+use targetdp::comms::{run_decomposed, serve_rank, CommsConfig, CommsWorld,
+                      HybridTransport, Transport, WorldReport};
+use targetdp::free_energy::symmetric::FeParams;
+use targetdp::lattice::geometry::Geometry;
+use targetdp::lb::engine::LbEngine;
+use targetdp::lb::init::init_spinodal;
+use targetdp::lb::model::LatticeModel;
+use targetdp::targetdp::tlp::TlpPool;
+use targetdp::targetdp::HostTarget;
+
+fn initial_state(model: LatticeModel, geom: &Geometry)
+                 -> (Vec<f64>, Vec<f64>) {
+    let vs = model.velset();
+    let n = geom.nsites();
+    let mut f = vec![0.0; vs.nvel * n];
+    let mut g = vec![0.0; vs.nvel * n];
+    init_spinodal(vs, &FeParams::default(), geom, &mut f, &mut g, 0.05,
+                  2026);
+    (f, g)
+}
+
+/// Single-domain reference through the engine's fused `FullStep` tier.
+fn fullstep_reference(model: LatticeModel, geom: &Geometry, steps: u64)
+                      -> (Vec<f64>, Vec<f64>) {
+    let (f0, g0) = initial_state(model, geom);
+    let mut target = HostTarget::simd(8, TlpPool::serial()).unwrap();
+    let mut engine =
+        LbEngine::new(&mut target, *geom, model, FeParams::default())
+            .unwrap();
+    assert!(engine.fused_active(), "host target must take the fused tier");
+    engine.load_state(&f0, &g0).unwrap();
+    engine.run(steps).unwrap();
+    let mut f = vec![0.0; f0.len()];
+    let mut g = vec![0.0; g0.len()];
+    engine.fetch_state(&mut f, &mut g).unwrap();
+    (f, g)
+}
+
+/// Assemble a hybrid world on loopback through the production
+/// rendezvous: one `connect_host` thread per `(first, count)` block
+/// (each a simulated host process), the driver running
+/// `rendezvous_hosts`. Returns the rank endpoints in rank order plus
+/// the controller.
+fn hybrid_loopback(nranks: usize, blocks: &[(usize, usize)])
+                   -> (Vec<HybridTransport>, HybridTransport) {
+    let server = RankServer::bind("127.0.0.1:0").unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let joins: Vec<_> = blocks
+        .iter()
+        .map(|&(first, count)| {
+            let addr = addr.clone();
+            thread::spawn(move || {
+                connect_host(&addr, Some(first), count).unwrap()
+            })
+        })
+        .collect();
+    let ctl = server.rendezvous_hosts(nranks, b"").unwrap();
+    let mut ranks: Vec<Option<HybridTransport>> =
+        (0..nranks).map(|_| None).collect();
+    for j in joins {
+        let (eps, _payload) = j.join().unwrap();
+        for t in eps {
+            let r = t.rank();
+            assert!(ranks[r].is_none());
+            ranks[r] = Some(t);
+        }
+    }
+    (ranks.into_iter().map(Option::unwrap).collect(), ctl)
+}
+
+/// Run one hybrid world to completion: serve every endpoint on its own
+/// resident thread (exactly what a host process does), drive the
+/// session from the controller, and return the gathered state plus the
+/// world report.
+fn run_hybrid(model: LatticeModel, geom: &Geometry, steps: u64,
+              cfg: &CommsConfig, blocks: &[(usize, usize)])
+              -> (Vec<f64>, Vec<f64>, WorldReport) {
+    let vs = model.velset();
+    let (f0, g0) = initial_state(model, geom);
+    let (endpoints, ctl) = hybrid_loopback(cfg.ranks, blocks);
+    let world = CommsWorld::new(*geom, cfg.clone()).unwrap();
+    let p = FeParams::default();
+    let mut servers = Vec::new();
+    for t in endpoints {
+        let d = world.dec.domains[t.rank()].clone();
+        let (f0, g0) = (f0.clone(), g0.clone());
+        let cfg = cfg.clone();
+        servers.push(thread::spawn(move || {
+            serve_rank(d, vs, &p, f0, g0, &cfg, 1, Box::new(t))
+        }));
+    }
+    let mut session = world.remote_session(vs, Box::new(ctl)).unwrap();
+    session.advance(steps).unwrap();
+    let n = geom.nsites();
+    let mut f = vec![0.0; vs.nvel * n];
+    let mut g = vec![0.0; vs.nvel * n];
+    session.gather(&mut f, &mut g).unwrap();
+    let report = session.finish().unwrap();
+    for s in servers {
+        s.join().unwrap().unwrap();
+    }
+    (f, g, report)
+}
+
+/// Every rank's intra/inter split must account for every halo frame.
+fn assert_split_sums(report: &WorldReport) {
+    for r in &report.ranks {
+        assert_eq!(r.bytes_intra + r.bytes_inter, r.bytes_sent,
+                   "rank {}: byte split must sum to the total", r.rank);
+        assert_eq!(r.msgs_intra + r.msgs_inter, r.msgs_sent,
+                   "rank {}: message split must sum to the total",
+                   r.rank);
+    }
+}
+
+/// Slab world, 2 hosts x 2 ranks, both schedules: bit-identical to the
+/// channel world and the fused engine, with the periodic ring split
+/// half-and-half between channel and socket links.
+#[test]
+fn slab_hybrid_world_matches_channel_and_engine() {
+    let model = LatticeModel::D2Q9;
+    let geom = Geometry::new(9, 6, 1); // 9 -> uneven slab split
+    let steps = 6u64;
+    let (f_en, g_en) = fullstep_reference(model, &geom, steps);
+    for overlap in [false, true] {
+        let cfg = CommsConfig { ranks: 4, overlap,
+                                ..CommsConfig::default() };
+        let (mut f_ch, mut g_ch) = initial_state(model, &geom);
+        run_decomposed(&geom, model.velset(), &FeParams::default(),
+                       &mut f_ch, &mut g_ch, steps, &cfg)
+            .unwrap();
+        assert_eq!(f_ch, f_en, "channel reference matches the engine");
+        assert_eq!(g_ch, g_en);
+
+        let (f, g, report) =
+            run_hybrid(model, &geom, steps, &cfg, &[(0, 2), (2, 2)]);
+        assert_eq!(f, f_ch, "overlap={overlap}: hybrid f diverged");
+        assert_eq!(g, g_ch, "overlap={overlap}: hybrid g diverged");
+        assert_split_sums(&report);
+        for r in &report.ranks {
+            // blocks [0,1] and [2,3] on the 4-ring: every rank has one
+            // co-hosted neighbour and one cross-host neighbour, and a
+            // slab rank sends 3 planes per side per step
+            assert_eq!(r.msgs_sent, 6 * steps);
+            assert_eq!(r.msgs_intra, 3 * steps,
+                       "rank {}: one neighbour is co-hosted", r.rank);
+            assert_eq!(r.msgs_inter, 3 * steps,
+                       "rank {}: one neighbour is cross-host", r.rank);
+            assert!(r.bytes_intra > 0 && r.bytes_inter > 0);
+        }
+    }
+}
+
+/// D3Q19 2x2x2 grid over 2 hosts: ranks are numbered z-fastest and the
+/// blocks split on x, so **every y and z face stays on a channel link**
+/// and only the x faces cross the socket — the perf story the per-link
+/// counters must prove. Physics stays bit-identical to the channel
+/// world and the fused engine, both schedules.
+#[test]
+fn grid_hybrid_world_keeps_inner_axis_faces_on_channels() {
+    let model = LatticeModel::D3Q19;
+    let geom = Geometry::new(8, 6, 4);
+    let steps = 4u64;
+    let grid = [2, 2, 2];
+    let (f_en, g_en) = fullstep_reference(model, &geom, steps);
+    for overlap in [false, true] {
+        let cfg = CommsConfig { ranks: 8, overlap, grid,
+                                ..CommsConfig::default() };
+        let (mut f_ch, mut g_ch) = initial_state(model, &geom);
+        run_decomposed(&geom, model.velset(), &FeParams::default(),
+                       &mut f_ch, &mut g_ch, steps, &cfg)
+            .unwrap();
+        assert_eq!(f_ch, f_en);
+        assert_eq!(g_ch, g_en);
+
+        // rank = (cx*py + cy)*pz + cz: ranks 0..4 are the cx=0 cell
+        // column, 4..8 the cx=1 one — one host per x layer
+        let (f, g, report) =
+            run_hybrid(model, &geom, steps, &cfg, &[(0, 4), (4, 4)]);
+        assert_eq!(f, f_ch, "overlap={overlap}: hybrid f diverged");
+        assert_eq!(g, g_ch, "overlap={overlap}: hybrid g diverged");
+        assert_split_sums(&report);
+        for r in &report.ranks {
+            // staged exchange: 6 face messages per decomposed axis per
+            // step; the x faces are the only inter-host traffic
+            assert_eq!(r.msgs_sent, 18 * steps);
+            assert_eq!(r.bytes_inter, r.bytes_axis[0],
+                       "rank {}: x faces cross hosts", r.rank);
+            assert_eq!(r.bytes_intra,
+                       r.bytes_axis[1] + r.bytes_axis[2],
+                       "rank {}: y/z faces stay on channels", r.rank);
+            assert_eq!(r.msgs_inter, r.msgs_axis[0]);
+            assert_eq!(r.msgs_intra, r.msgs_axis[1] + r.msgs_axis[2]);
+            assert!(r.bytes_intra > r.bytes_inter,
+                    "co-hosting the z-fastest blocks keeps most bytes \
+                     off the network");
+        }
+    }
+}
+
+/// Depth-2 super-steps over a hybrid slab: ghost-block batches keep
+/// socket-side coalescing while channel links skip framing — and the
+/// communication-avoiding message count holds with an even
+/// channel/socket split.
+#[test]
+fn depth2_hybrid_slab_matches_channel_with_batched_blocks() {
+    let model = LatticeModel::D2Q9;
+    let geom = Geometry::new(16, 4, 1);
+    let steps = 6u64;
+    let cfg = CommsConfig { ranks: 4, depth: 2,
+                            ..CommsConfig::default() };
+    let (mut f_ch, mut g_ch) = initial_state(model, &geom);
+    run_decomposed(&geom, model.velset(), &FeParams::default(), &mut f_ch,
+                   &mut g_ch, steps, &cfg)
+        .unwrap();
+
+    let (f, g, report) =
+        run_hybrid(model, &geom, steps, &cfg, &[(0, 2), (2, 2)]);
+    assert_eq!(f, f_ch, "depth-2 hybrid f diverged");
+    assert_eq!(g, g_ch, "depth-2 hybrid g diverged");
+    assert_split_sums(&report);
+    let supers = steps.div_ceil(2);
+    for r in &report.ranks {
+        assert_eq!(r.super_steps, supers);
+        // 4 ghost-block messages (2 fields x 2 sides) per super-step,
+        // one neighbour co-hosted and one cross-host per rank
+        assert_eq!(r.msgs_sent, 4 * supers);
+        assert_eq!(r.msgs_intra, 2 * supers);
+        assert_eq!(r.msgs_inter, 2 * supers);
+        // symmetric slabs: both neighbours get identical block bytes
+        assert_eq!(r.bytes_intra, r.bytes_inter);
+    }
+}
+
+/// One host carrying every rank (the spawn-local hybrid shape): all
+/// traffic is intra-process, zero socket bytes — and still
+/// bit-identical to the channel world.
+#[test]
+fn single_host_hybrid_world_is_all_channel_traffic() {
+    let model = LatticeModel::D2Q9;
+    let geom = Geometry::new(10, 4, 1);
+    let steps = 4u64;
+    let cfg = CommsConfig { ranks: 3, ..CommsConfig::default() };
+    let (mut f_ch, mut g_ch) = initial_state(model, &geom);
+    run_decomposed(&geom, model.velset(), &FeParams::default(), &mut f_ch,
+                   &mut g_ch, steps, &cfg)
+        .unwrap();
+
+    let (f, g, report) = run_hybrid(model, &geom, steps, &cfg, &[(0, 3)]);
+    assert_eq!(f, f_ch);
+    assert_eq!(g, g_ch);
+    assert_split_sums(&report);
+    for r in &report.ranks {
+        assert!(r.bytes_intra > 0);
+        assert_eq!(r.bytes_inter, 0,
+                   "co-hosted ranks never touch a socket");
+        assert_eq!(r.msgs_inter, 0);
+    }
+}
+
+/// A host process dying mid-run (its link closing before its residents'
+/// reports crossed) surfaces as a prompt error on the driver — and the
+/// driver vanishing surfaces on the surviving hosts' ranks. No hangs.
+#[test]
+fn host_process_death_errors_instead_of_hanging() {
+    let (mut ranks, mut ctl) = hybrid_loopback(4, &[(0, 2), (2, 2)]);
+    // "host B dies": drop ranks 2 and 3 without sending any report;
+    // the driver-side link reader sees EOF with 0 of 2 reports seen
+    drop(ranks.pop().unwrap());
+    drop(ranks.pop().unwrap());
+    let err = loop {
+        // frames from the healthy host may still be queued; the death
+        // notice arrives through the same merged inbox
+        match ctl.recv_bytes_timeout(Duration::from_secs(30)) {
+            Ok(Some(_)) => continue,
+            Ok(None) => panic!("death must surface, not time out"),
+            Err(e) => break e,
+        }
+    };
+    assert!(format!("{err}").contains("host process died"),
+            "got: {err}");
+
+    // the driver dropping its controller surfaces on surviving ranks
+    drop(ctl);
+    let mut r0 = ranks.remove(0);
+    assert!(r0.recv_bytes().is_err(),
+            "driver-gone must error on resident ranks");
+}
