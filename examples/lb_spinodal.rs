@@ -31,6 +31,7 @@ fn cfg(backend: &str, steps: u64, dir: String) -> Config {
         free_energy: Default::default(),
         output: OutputCfg { every: steps / 4, dir, vtk: true,
                             ..Default::default() },
+        fault: Default::default(),
     }
 }
 

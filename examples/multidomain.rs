@@ -39,6 +39,16 @@
 //! state must *still* be bit-identical to the in-process reference —
 //! the CI smoke runs this with 2 processes.
 //!
+//! `--kill-step S` (with `--kill-rank R`, `--checkpoint-every C`,
+//! `--transport socket`) runs the **kill-and-resume** scenario instead
+//! of the sweep: a socket world armed with the deterministic fault
+//! injection hook checkpoints every C logging blocks until rank R dies
+//! at step S, then a second world of fresh processes restores from the
+//! last checkpoint, finishes the run, and the final state must be
+//! bit-identical to an uninterrupted reference — the CI smoke runs
+//! 2 processes, blocks of 2, a checkpoint every 2 blocks and a kill at
+//! step 5.
+//!
 //! `--transport hybrid` runs the one-process-per-**host** shape: the
 //! ranks are split over two simulated hosts (distinct `TARGETDP_HOST`
 //! tags on loopback), each child carries its block as resident threads,
@@ -48,10 +58,13 @@
 //! flow (when the shape has both kinds of link) and their sum accounts
 //! for every halo byte — the CI smoke runs this as 2 hosts x 2 ranks.
 
+use std::time::Duration;
+
 use targetdp::comms::launcher::{connect_world, HostSpec, LocalRanks,
                                 RankServer, WorldEndpoints};
-use targetdp::comms::{run_decomposed, serve_rank, CommsConfig, CommsWorld,
-                      Transport, WorldReport};
+use targetdp::comms::{run_decomposed, serve_rank, Checkpoint,
+                      CheckpointField, CommsConfig, CommsWorld, FaultPoint,
+                      FaultSpec, Transport, WorldReport};
 use targetdp::free_energy::symmetric::FeParams;
 use targetdp::lattice::geometry::Geometry;
 use targetdp::lb::engine::state_observables;
@@ -97,9 +110,38 @@ fn rank_child(args: &Args) {
     let depth = args.usize_or("comms-depth", 1).unwrap();
     let grid = parse_grid(&args.str_or("grid", "0,0,0"));
     let vs = d3q19();
-    let (geom, f0, g0) = setup(vs);
-    let cfg = CommsConfig { ranks, overlap, threads, depth, grid,
-                            ..CommsConfig::default() };
+    let (geom, mut f0, mut g0) = setup(vs);
+    // kill-and-resume scenario plumbing: the parent arms the fault and
+    // ships the checkpoint path; each child restores its own copy of the
+    // global state and keeps only its planes, like the fresh initialiser
+    let restore = args.str_or("restore", "");
+    if !restore.is_empty() {
+        let mut ck = Checkpoint::read_file(std::path::Path::new(&restore))
+            .expect("read checkpoint");
+        let want = vs.nvel * geom.nsites();
+        f0 = ck.take_field("f", want).expect("checkpoint f");
+        g0 = ck.take_field("g", want).expect("checkpoint g");
+    }
+    let kill_step = args.u64_or("kill-step", 0).unwrap();
+    let fault = if kill_step > 0 {
+        Some(FaultSpec {
+            rank: args.usize_or("kill-rank", 0).unwrap(),
+            step: kill_step,
+            point: match args.str_or("kill-point", "step").as_str() {
+                "mid" => FaultPoint::Mid,
+                "barrier" => FaultPoint::Barrier,
+                _ => FaultPoint::Step,
+            },
+        })
+    } else {
+        None
+    };
+    let wt = args.u64_or("wait-timeout", 0).unwrap();
+    let cfg = CommsConfig {
+        ranks, overlap, threads, depth, grid, fault,
+        wait_timeout: Duration::from_secs(if wt == 0 { 120 } else { wt }),
+        ..CommsConfig::default()
+    };
     let world = CommsWorld::new(geom, cfg.clone()).expect("world");
     let nthreads = threads_per_rank(threads, ranks);
     let (endpoints, _payload) =
@@ -267,11 +309,166 @@ fn run_hybrid(geom: &Geometry, vs: &'static VelSet, steps: u64, block: u64,
     out
 }
 
+/// The kill-and-resume scenario (`--kill-step S`): prove the
+/// checkpoint/fault-tolerance layer end to end over real OS processes.
+/// Run 1 is a socket world armed with the deterministic fault hook,
+/// checkpointing every `every` logging blocks until the injected death
+/// surfaces as a world error; run 2 spawns fresh rank processes that
+/// restore from the last checkpoint and finish the remaining steps. The
+/// final gathered state must be bit-identical to an uninterrupted
+/// in-process reference — same invariant as every other schedule here.
+#[allow(clippy::too_many_arguments)]
+fn run_kill_and_resume(geom: &Geometry, vs: &'static VelSet, f0: &[f64],
+                       g0: &[f64], steps: u64, block: u64, ranks: usize,
+                       threads: usize, kill_rank: usize, kill_step: u64,
+                       kill_point: &str, every: u64) {
+    let n = geom.nsites();
+    let block = if block > 0 { block } else { 1 };
+    let every = if every > 0 { every } else { 1 };
+
+    // uninterrupted reference: 1 rank, in-process
+    let mut f_ref = f0.to_vec();
+    let mut g_ref = g0.to_vec();
+    run_decomposed(geom, vs, &FeParams::default(), &mut f_ref, &mut g_ref,
+                   steps,
+                   &CommsConfig { ranks: 1, overlap: false, threads,
+                                  ..CommsConfig::default() })
+        .expect("reference run");
+
+    let ck_path = std::env::temp_dir()
+        .join(format!("multidomain-ck-{}.tdpk", std::process::id()));
+    let ck_str = ck_path.to_string_lossy().into_owned();
+    let child_args = |restore: &str, armed: bool| {
+        let mut e = vec!["--rank-child".to_string(),
+                         "--ranks".to_string(), ranks.to_string(),
+                         "--threads".to_string(), threads.to_string(),
+                         "--wait-timeout".to_string(), "5".to_string()];
+        if armed {
+            e.extend(["--kill-rank".to_string(), kill_rank.to_string(),
+                      "--kill-step".to_string(), kill_step.to_string(),
+                      "--kill-point".to_string(), kill_point.to_string()]);
+        }
+        if !restore.is_empty() {
+            e.extend(["--restore".to_string(), restore.to_string()]);
+        }
+        e
+    };
+
+    println!("run 1: {ranks}-process socket world armed to kill rank \
+              {kill_rank} at step {kill_step} ({kill_point}), \
+              checkpoint every {every} block(s) of {block}");
+    let fault = Some(FaultSpec {
+        rank: kill_rank,
+        step: kill_step,
+        point: match kill_point {
+            "mid" => FaultPoint::Mid,
+            "barrier" => FaultPoint::Barrier,
+            _ => FaultPoint::Step,
+        },
+    });
+    let cfg = CommsConfig { ranks, threads, fault,
+                            wait_timeout: Duration::from_secs(5),
+                            ..CommsConfig::default() };
+    let server = RankServer::bind("127.0.0.1:0").expect("bind rank server");
+    let addr = server.local_addr().expect("rank server addr").to_string();
+    let local = LocalRanks::spawn(ranks, &addr, &child_args("", true))
+        .expect("spawn rank processes");
+    let controller = server.rendezvous(ranks, &[]).expect("rendezvous");
+    let world = CommsWorld::new(*geom, cfg.clone()).expect("world");
+    let mut session = world
+        .remote_session(vs, Box::new(controller))
+        .expect("remote session");
+
+    let dims = [geom.lx as u64, geom.ly as u64, geom.lz as u64];
+    let mut done = 0u64;
+    let mut blocks = 0u64;
+    let mut ck_step = 0u64;
+    let died = loop {
+        assert!(done < steps, "the injected fault never fired");
+        let todo = block.min(steps - done);
+        if let Err(e) = session.advance(todo) {
+            break e;
+        }
+        if let Err(e) = session.observables() {
+            break e;
+        }
+        done += todo;
+        blocks += 1;
+        if blocks % every == 0 && done < steps {
+            let mut f = vec![0.0; vs.nvel * n];
+            let mut g = vec![0.0; vs.nvel * n];
+            if let Err(e) = session.checkpoint(&mut f, &mut g) {
+                break e;
+            }
+            let nvel = vs.nvel as u32;
+            Checkpoint {
+                step: done,
+                dims,
+                nvel,
+                config_toml: String::new(),
+                fields: vec![
+                    CheckpointField { name: "f".into(), ncomp: nvel,
+                                      data: f },
+                    CheckpointField { name: "g".into(), ncomp: nvel,
+                                      data: g },
+                ],
+            }
+            .write_file(&ck_path)
+            .expect("write checkpoint");
+            ck_step = done;
+            println!("  checkpoint at step {done} -> {ck_str}");
+        }
+    };
+    println!("  world died as injected: {died}");
+    drop(session);
+    // the killed rank exits nonzero by design; its neighbours bail on
+    // the broken link — ignore the exit statuses, the error above is
+    // the receipt
+    let _ = local.wait();
+    assert!(ck_step > 0,
+            "no checkpoint landed before the fault (kill_step \
+             {kill_step} fires before checkpoint_every {every} x block \
+             {block} steps)");
+
+    println!("run 2: fresh processes resume {} remaining step(s) from \
+              the step-{ck_step} checkpoint",
+             steps - ck_step);
+    let cfg = CommsConfig { ranks, threads,
+                            wait_timeout: Duration::from_secs(5),
+                            ..CommsConfig::default() };
+    let server = RankServer::bind("127.0.0.1:0").expect("bind rank server");
+    let addr = server.local_addr().expect("rank server addr").to_string();
+    let local = LocalRanks::spawn(ranks, &addr, &child_args(&ck_str, false))
+        .expect("spawn rank processes");
+    let controller = server.rendezvous(ranks, &[]).expect("rendezvous");
+    let world = CommsWorld::new(*geom, cfg.clone()).expect("world");
+    let session = world
+        .remote_session(vs, Box::new(controller))
+        .expect("remote session");
+    let (f, g, _rep) = drive(session, vs, n, steps - ck_step, block, false);
+    local.wait().expect("resumed rank processes exited cleanly");
+    let _ = std::fs::remove_file(&ck_path);
+
+    let max_df = f
+        .iter()
+        .zip(&f_ref)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f64, f64::max);
+    assert!(f == f_ref && g == g_ref,
+            "kill-and-resume diverged from the uninterrupted run \
+             (max |df| = {max_df:.3e})");
+    println!("PASS: killed at step {kill_step}, resumed from the step-\
+              {ck_step} checkpoint, final state bit-identical to the \
+              uninterrupted run (max |df| = {max_df:.1e})");
+}
+
 fn main() {
     let args = Args::parse(std::env::args().skip(1))
         .expect("usage: multidomain [--ranks N] [--steps K] [--threads T] \
                  [--block B] [--comms-depth D] [--grid PX,PY,PZ] \
-                 [--transport channel|socket|hybrid]");
+                 [--transport channel|socket|hybrid] \
+                 [--kill-rank R --kill-step S [--kill-point P] \
+                 --checkpoint-every C]");
     if args.has("rank-child") {
         rank_child(&args);
         return;
@@ -304,6 +501,20 @@ fn main() {
     let vs = d3q19();
     let (geom, f0, g0) = setup(vs);
     let n = geom.nsites();
+
+    let kill_step = args.u64_or("kill-step", 0).unwrap();
+    if kill_step > 0 {
+        assert!(socket, "--kill-step drives the kill-and-resume \
+                         scenario over --transport socket");
+        let ranks = if only_ranks > 0 { only_ranks } else { 2 };
+        run_kill_and_resume(&geom, vs, &f0, &g0, steps, block, ranks,
+                            threads,
+                            args.usize_or("kill-rank", 0).unwrap(),
+                            kill_step,
+                            &args.str_or("kill-point", "step"),
+                            args.u64_or("checkpoint-every", 1).unwrap());
+        return;
+    }
 
     println!("48x16x16 D3Q19 binary fluid, {steps} steps, concurrent \
               ranks{}{}{}{}\n",

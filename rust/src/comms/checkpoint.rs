@@ -1,0 +1,411 @@
+//! Versioned checkpoint encoding: a decomposition-independent snapshot
+//! of the global simulation state, written by the driver between
+//! logging blocks and restored into **any** world shape.
+//!
+//! The snapshot is taken with the [`Command::Checkpoint`] session
+//! command ([`crate::comms::wire`]): every resident rank streams its
+//! interior `f` and `g` to the driver exactly like a `Gather`, the
+//! driver places the sub-domains into global arrays, and this module
+//! serializes those global arrays. Because the *global* state is what
+//! lands on disk, a checkpoint taken at 4 ranks on a slab restores into
+//! any rank count, grid shape, transport, or comms depth — including
+//! the single-domain fused engine. `f` and `g` are sufficient for exact
+//! resume at a step boundary: phi, the gradients and the Laplacian are
+//! recomputed from `g` at the start of every step, and the stepping
+//! itself is deterministic, so a run resumed from the step-`c` snapshot
+//! finishes **bitwise identical** to the uninterrupted run.
+//!
+//! File layout (all integers little-endian, doubles as
+//! `f64::to_le_bytes` images — the same bit-exact encoding as the wire
+//! frames):
+//!
+//! ```text
+//! offset  size  field
+//!      0     4  magic   "TDPK"
+//!      4     1  version (1)
+//!      5     8  step    (timesteps completed when the snapshot was cut)
+//!     13    24  lx, ly, lz (u64 each — global lattice extents)
+//!     37     4  nvel    (velocity-set size, e.g. 9 or 19)
+//!     41     4  config_len
+//!     45     …  config  (config_len bytes of UTF-8 TOML — the driver
+//!                        config echo, for provenance / `--restore`
+//!                        sanity checks)
+//!            1  nfields
+//!  per field:
+//!            1  name_len
+//!            …  name    (name_len bytes of UTF-8, e.g. "f", "g")
+//!            4  ncomp   (doubles per lattice site)
+//!            8  count   (must equal ncomp * lx * ly * lz)
+//!            …  payload (count doubles, LE f64)
+//! ```
+//!
+//! Decoding is strict — magic, version, UTF-8, the `count` cross-check
+//! against `ncomp * dims`, and the exact total length are all
+//! validated, because `--restore` feeds this arbitrary bytes.
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+/// Checkpoint file magic: "targetDP checkpoint".
+pub const CHECKPOINT_MAGIC: [u8; 4] = *b"TDPK";
+/// Checkpoint encoding version.
+pub const CHECKPOINT_VERSION: u8 = 1;
+/// Fixed header size in bytes (up to and excluding the config echo).
+pub const CHECKPOINT_HEADER_LEN: usize = 45;
+
+fn bad(m: String) -> Error {
+    Error::Invalid(format!("checkpoint: {m}"))
+}
+
+/// One named global field inside a checkpoint (`"f"`, `"g"`, …).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CheckpointField {
+    /// Field name (`"f"` and `"g"` today).
+    pub name: String,
+    /// Doubles per lattice site (the velocity-set size for f/g).
+    pub ncomp: u32,
+    /// `ncomp * lx * ly * lz` doubles in the engine's SoA site order.
+    pub data: Vec<f64>,
+}
+
+/// A decomposition-independent snapshot of the global simulation state.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    /// Timesteps completed when the snapshot was cut; a restored run
+    /// resumes at this step and runs `steps - step` more.
+    pub step: u64,
+    /// Global lattice extents `[lx, ly, lz]`.
+    pub dims: [u64; 3],
+    /// Velocity-set size the state was produced with (9 or 19).
+    pub nvel: u32,
+    /// Driver config echo (TOML) for provenance; restore validates the
+    /// *lattice*, not this echo, so a restored run may change ranks,
+    /// grid, transport or depth freely.
+    pub config_toml: String,
+    /// The global fields, in write order.
+    pub fields: Vec<CheckpointField>,
+}
+
+/// Strict little-endian cursor over the checkpoint image.
+struct Reader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(bytes: &'a [u8]) -> Self {
+        Reader { bytes, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self.pos.checked_add(n).ok_or_else(|| {
+            bad("length overflow".into())
+        })?;
+        if end > self.bytes.len() {
+            return Err(bad(format!(
+                "truncated: need {end} bytes, have {}",
+                self.bytes.len()
+            )));
+        }
+        let out = &self.bytes[self.pos..end];
+        self.pos = end;
+        Ok(out)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn done(&self) -> Result<()> {
+        if self.pos != self.bytes.len() {
+            return Err(bad(format!(
+                "{} trailing bytes after the last field",
+                self.bytes.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+impl Checkpoint {
+    /// Global site count `lx * ly * lz` (overflow-checked).
+    pub fn nsites(&self) -> Result<u64> {
+        self.dims[0]
+            .checked_mul(self.dims[1])
+            .and_then(|v| v.checked_mul(self.dims[2]))
+            .ok_or_else(|| bad(format!("dims {:?} overflow", self.dims)))
+    }
+
+    /// Serialize to the on-disk image.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(&CHECKPOINT_MAGIC);
+        out.push(CHECKPOINT_VERSION);
+        out.extend_from_slice(&self.step.to_le_bytes());
+        for d in self.dims {
+            out.extend_from_slice(&d.to_le_bytes());
+        }
+        out.extend_from_slice(&self.nvel.to_le_bytes());
+        let config = self.config_toml.as_bytes();
+        assert!(config.len() <= u32::MAX as usize, "config echo too large");
+        out.extend_from_slice(&(config.len() as u32).to_le_bytes());
+        out.extend_from_slice(config);
+        assert!(self.fields.len() <= u8::MAX as usize, "too many fields");
+        out.push(self.fields.len() as u8);
+        for field in &self.fields {
+            let name = field.name.as_bytes();
+            assert!(name.len() <= u8::MAX as usize, "field name too long");
+            out.push(name.len() as u8);
+            out.extend_from_slice(name);
+            out.extend_from_slice(&field.ncomp.to_le_bytes());
+            out.extend_from_slice(&(field.data.len() as u64).to_le_bytes());
+            for v in &field.data {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        out
+    }
+
+    /// Parse an on-disk image (strict: magic, version, UTF-8, the
+    /// per-field `count == ncomp * lx*ly*lz` cross-check and the exact
+    /// total length are all validated).
+    pub fn decode(bytes: &[u8]) -> Result<Checkpoint> {
+        let mut r = Reader::new(bytes);
+        let magic = r.take(4)?;
+        if magic != CHECKPOINT_MAGIC {
+            return Err(bad(format!("bad magic {magic:02x?}")));
+        }
+        let version = r.u8()?;
+        if version != CHECKPOINT_VERSION {
+            return Err(bad(format!(
+                "version {version} (want {CHECKPOINT_VERSION})"
+            )));
+        }
+        let step = r.u64()?;
+        let dims = [r.u64()?, r.u64()?, r.u64()?];
+        let nvel = r.u32()?;
+        let nsites = dims[0]
+            .checked_mul(dims[1])
+            .and_then(|v| v.checked_mul(dims[2]))
+            .ok_or_else(|| bad(format!("dims {dims:?} overflow")))?;
+        if nsites == 0 {
+            return Err(bad(format!("degenerate dims {dims:?}")));
+        }
+        let config_len = r.u32()? as usize;
+        let config_toml = std::str::from_utf8(r.take(config_len)?)
+            .map_err(|e| bad(format!("config echo is not UTF-8: {e}")))?
+            .to_string();
+        let nfields = r.u8()?;
+        let mut fields = Vec::with_capacity(nfields as usize);
+        for _ in 0..nfields {
+            let name_len = r.u8()? as usize;
+            let name = std::str::from_utf8(r.take(name_len)?)
+                .map_err(|e| bad(format!("field name is not UTF-8: {e}")))?
+                .to_string();
+            let ncomp = r.u32()?;
+            let count = r.u64()?;
+            let want = (ncomp as u64).checked_mul(nsites).ok_or_else(|| {
+                bad(format!("field {name:?}: ncomp {ncomp} overflows"))
+            })?;
+            if count != want {
+                return Err(bad(format!(
+                    "field {name:?}: count {count} != ncomp {ncomp} x \
+                     {nsites} sites (dims {dims:?})"
+                )));
+            }
+            let nbytes = count.checked_mul(8).ok_or_else(|| {
+                bad(format!("field {name:?}: payload overflows"))
+            })?;
+            if nbytes > (bytes.len() - r.pos) as u64 {
+                return Err(bad(format!(
+                    "field {name:?}: truncated payload ({} bytes left, \
+                     need {nbytes})",
+                    bytes.len() - r.pos
+                )));
+            }
+            let raw = r.take(nbytes as usize)?;
+            let data = raw
+                .chunks_exact(8)
+                .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            fields.push(CheckpointField { name, ncomp, data });
+        }
+        r.done()?;
+        Ok(Checkpoint { step, dims, nvel, config_toml, fields })
+    }
+
+    /// Look up a field by name.
+    pub fn field(&self, name: &str) -> Option<&CheckpointField> {
+        self.fields.iter().find(|f| f.name == name)
+    }
+
+    /// Remove and return a field's payload, validating its length.
+    pub fn take_field(&mut self, name: &str, want: usize)
+                      -> Result<Vec<f64>> {
+        let idx = self
+            .fields
+            .iter()
+            .position(|f| f.name == name)
+            .ok_or_else(|| {
+                bad(format!("snapshot has no field {name:?}"))
+            })?;
+        let field = self.fields.remove(idx);
+        if field.data.len() != want {
+            return Err(bad(format!(
+                "field {name:?} holds {} doubles, this run needs {want}",
+                field.data.len()
+            )));
+        }
+        Ok(field.data)
+    }
+
+    /// Write the image atomically: a sibling `.tmp` file is renamed into
+    /// place, so a crash mid-write never corrupts the previous
+    /// checkpoint a supervised restart would restore from.
+    pub fn write_file<P: AsRef<Path>>(&self, path: P) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let mut tmp_name = path.as_os_str().to_os_string();
+        tmp_name.push(".tmp");
+        let tmp = std::path::PathBuf::from(tmp_name);
+        std::fs::write(&tmp, self.encode())?;
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    /// Read and parse a checkpoint file.
+    pub fn read_file<P: AsRef<Path>>(path: P) -> Result<Checkpoint> {
+        let path = path.as_ref();
+        let bytes = std::fs::read(path).map_err(|e| {
+            bad(format!("cannot read {}: {e}", path.display()))
+        })?;
+        Self::decode(&bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            step: 41,
+            dims: [3, 2, 1],
+            nvel: 9,
+            config_toml: "[simulation]\nlattice = \"d2q9\"\n".into(),
+            fields: vec![
+                CheckpointField {
+                    name: "f".into(),
+                    ncomp: 9,
+                    data: (0..54)
+                        .map(|i| (i as f64) * 0.5 - 1e-300)
+                        .collect(),
+                },
+                CheckpointField {
+                    name: "g".into(),
+                    ncomp: 9,
+                    data: vec![1.0 / 3.0; 54],
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn round_trip_is_bit_exact() {
+        let ck = sample();
+        let back = Checkpoint::decode(&ck.encode()).unwrap();
+        assert_eq!(back.step, ck.step);
+        assert_eq!(back.dims, ck.dims);
+        assert_eq!(back.nvel, ck.nvel);
+        assert_eq!(back.config_toml, ck.config_toml);
+        assert_eq!(back.fields.len(), 2);
+        for (a, b) in back.fields.iter().zip(&ck.fields) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.ncomp, b.ncomp);
+            assert_eq!(a.data.len(), b.data.len());
+            for (x, y) in a.data.iter().zip(&b.data) {
+                assert_eq!(x.to_bits(), y.to_bits(), "bitwise f64 image");
+            }
+        }
+    }
+
+    #[test]
+    fn every_truncation_is_rejected() {
+        let bytes = sample().encode();
+        for len in 0..bytes.len() {
+            assert!(
+                Checkpoint::decode(&bytes[..len]).is_err(),
+                "prefix of {len} bytes must not decode"
+            );
+        }
+    }
+
+    #[test]
+    fn corrupt_images_rejected() {
+        let good = sample().encode();
+        // oversize: trailing garbage after the last field
+        let mut bad = good.clone();
+        bad.push(0);
+        assert!(Checkpoint::decode(&bad).is_err());
+        // bad magic
+        let mut bad = good.clone();
+        bad[0] = b'X';
+        assert!(Checkpoint::decode(&bad).is_err());
+        // bad version
+        let mut bad = good.clone();
+        bad[4] = 9;
+        assert!(Checkpoint::decode(&bad).is_err());
+        // dim mismatch: shrink lz so the field counts no longer match
+        let mut bad = good.clone();
+        bad[13] = 7; // lx: 3 -> 7
+        assert!(Checkpoint::decode(&bad).is_err());
+        // degenerate dims
+        let mut bad = good.clone();
+        bad[13] = 0;
+        assert!(Checkpoint::decode(&bad).is_err());
+    }
+
+    #[test]
+    fn take_field_validates_name_and_length() {
+        let mut ck = sample();
+        assert!(ck.take_field("phi", 54).is_err(), "unknown field");
+        assert!(ck.clone().take_field("f", 53).is_err(), "length check");
+        let f = ck.take_field("f", 54).unwrap();
+        assert_eq!(f.len(), 54);
+        assert!(ck.field("f").is_none(), "taken fields are removed");
+        assert!(ck.field("g").is_some());
+    }
+
+    #[test]
+    fn file_round_trip_through_tmp_rename() {
+        let dir = std::env::temp_dir().join(format!(
+            "tdpk-unit-{}",
+            std::process::id()
+        ));
+        let path = dir.join("nested/ck.tdpk");
+        let ck = sample();
+        ck.write_file(&path).unwrap();
+        let back = Checkpoint::read_file(&path).unwrap();
+        assert_eq!(back, ck);
+        assert!(!path.with_extension("tdpk.tmp").exists(),
+                "the .tmp staging file is renamed away");
+        // overwrite in place: the rename replaces the old image
+        ck.write_file(&path).unwrap();
+        assert_eq!(Checkpoint::read_file(&path).unwrap(), ck);
+        std::fs::remove_dir_all(&dir).ok();
+        assert!(Checkpoint::read_file(&path).is_err(), "missing file");
+    }
+}

@@ -810,6 +810,44 @@ mod tests {
     }
 
     #[test]
+    fn trace_frames_do_not_satisfy_the_report_count() {
+        use crate::comms::wire::TraceMsg;
+        // a tracing host ships its span batch just before its Report —
+        // if it dies *between* the two, the EOF accounting must still
+        // flag the missing report: only true Report frames count, a
+        // Trace must never make the death look like a clean exit
+        let (ours, raw) = pair();
+        let mut ctl = assemble(1, &[1], vec![HostLink {
+            stream: ours,
+            peers: vec![0],
+            eof: EofPolicy::UnlessReports {
+                expect: 1,
+                msg: "host gone".into(),
+            },
+        }])
+        .unwrap();
+        {
+            let mut sender = assemble(1, &[0], vec![HostLink {
+                stream: raw,
+                peers: vec![1],
+                eof: EofPolicy::Silent,
+            }])
+            .unwrap();
+            sender[0]
+                .send_bytes(1,
+                            Frame::Trace(TraceMsg { src: 0, spans: vec![] })
+                                .encode())
+                .unwrap();
+        } // the host process dies before its Report crosses the link
+        let first = ctl[0].recv_bytes().unwrap();
+        assert!(!is_report_frame(&first),
+                "the trace batch itself arrives, and is not a report");
+        let got = ctl[0].recv_bytes_timeout(Duration::from_secs(10));
+        assert!(got.is_err(),
+                "death between Trace and Report must error, got {got:?}");
+    }
+
+    #[test]
     fn one_rank_world_self_sends_across_the_seam() {
         let (ours, _raw) = pair();
         let mut eps = assemble(1, &[0], vec![HostLink {

@@ -56,7 +56,7 @@
 //! |-------------------------|------------------|------------------------------------|
 //! | [`wire::PlaneMsg`]      | rank ↔ rank      | one axis-tagged halo face          |
 //! | [`wire::PlaneBlockMsg`] | rank ↔ rank      | a depth-tagged ghost block of `2k` x-planes (super-steps) |
-//! | [`wire::Command`]       | driver → rank    | `Advance{steps}` / `Observables` / `Gather` / `GatherPhi` / `Shutdown` |
+//! | [`wire::Command`]       | driver → rank    | `Advance{steps}` / `Observables` / `Gather` / `GatherPhi` / `Shutdown` / `Checkpoint` |
 //! | [`wire::PartialObs`]    | rank → driver    | interior mass/momentum/phi/phi² sums |
 //! | [`wire::InteriorMsg`]   | rank → driver    | packed interior of f, g or phi     |
 //! | [`wire::ReportMsg`]     | rank → driver    | lifetime timing/traffic totals     |
@@ -141,7 +141,27 @@
 //! land on channel links — [`wire::ReportMsg`]'s intra/inter traffic
 //! split is the receipt (`tests/hybrid_world.rs` pins bitwise parity
 //! against the channel, socket and fused-engine references).
+//!
+//! # Checkpoint/restart and fault tolerance
+//!
+//! [`world::CommsSession::checkpoint`] broadcasts
+//! [`wire::Command::Checkpoint`] between logging blocks: every rank
+//! streams its interior f/g to the driver (the `Gather` payload path,
+//! bit-exact LE doubles) and [`checkpoint`] serializes the reassembled
+//! **global** state — so a snapshot taken at 4 slab ranks restores into
+//! any rank count, grid shape, transport, comms depth, or the fused
+//! single-domain engine, and a resumed run finishes bitwise identical
+//! to an uninterrupted one (`tests/checkpoint_restart.rs`). The
+//! supervised driver loop in [`crate::coordinator`] turns a world error
+//! (rank/host death via the launcher's exit status and the hybrid
+//! [`wire::ReportMsg`]-counting EOF policies) into a bounded-retry
+//! relaunch from the last checkpoint, optionally at reduced rank count.
+//! `CommsConfig::fault` arms a deterministic fault-injection hook — a
+//! chosen rank dies at a chosen step, mid-exchange or at the command
+//! barrier — which is how `tests/fault_recovery.rs` and CI prove the
+//! recovery path end to end.
 
+pub mod checkpoint;
 pub mod hybrid;
 pub mod launcher;
 pub mod socket;
@@ -149,6 +169,8 @@ pub mod transport;
 pub mod wire;
 pub mod world;
 
+pub use checkpoint::{Checkpoint, CheckpointField, CHECKPOINT_HEADER_LEN,
+                     CHECKPOINT_MAGIC, CHECKPOINT_VERSION};
 pub use hybrid::HybridTransport;
 pub use launcher::{connect_host, connect_rank, connect_world, HostBlock,
                    HostSpec, LocalRanks, RankServer, WorldEndpoints};
@@ -158,4 +180,5 @@ pub use wire::{Axis, Command, FieldId, Frame, InteriorField, InteriorMsg,
                PartialObs, Phase, PlaneBlockMsg, PlaneMsg, ReportMsg,
                Side, Tag, TraceMsg};
 pub use world::{run_decomposed, serve_rank, CommsConfig, CommsSession,
-                CommsWorld, Rank, RankReport, WorldReport};
+                CommsWorld, FaultPoint, FaultSpec, Rank, RankReport,
+                WorldReport};

@@ -33,7 +33,8 @@
 //!            14 step(8)  22 count(4)  26 payload(8*count)
 //! Command    6 op(1)  7 arg(8)          [op: 0 Advance, 1 Observables,
 //!                                        2 Gather, 3 GatherPhi,
-//!                                        4 Shutdown; arg = steps]
+//!                                        4 Shutdown, 5 Checkpoint;
+//!                                        arg = steps]
 //! Partials   6 src(4)  10 steps(8)  18 sites(8)  26 mass(8)
 //!            34 momentum(24)  58 phi_total(8)  66 phi_sq(8)
 //!            74 wait_s(8)  82 busy_s(8)
@@ -80,6 +81,15 @@
 //! links — that full serialize/syscall cost is exactly what the hybrid
 //! transport removes), a pure-channel world counts everything intra.
 //!
+//! Version 6 is the checkpoint revision: `Command` grew op 5,
+//! `Checkpoint` — the driver's request for a full sub-domain state
+//! snapshot. A rank answers exactly like `Gather` (its interior `f`
+//! then `g` as [`InteriorMsg`] frames, bit-exact LE doubles), but the
+//! distinct op lets the driver checkpoint mid-run without disturbing
+//! observable or gather bookkeeping, and gives supervised restart a
+//! frame to pin in tests. The gathered global state is what
+//! [`crate::comms::checkpoint`] serializes to disk.
+//!
 //! `PlaneBlock` is the communication-avoiding super-step frame: one
 //! message carries a whole `depth`-plane-deep ghost block (the
 //! `halo::pack_x_planes` layout), replacing `depth` individual `Plane`
@@ -93,9 +103,9 @@ use crate::obs::trace::{Span, TracePhase, AXIS_NONE, SIDE_NONE};
 
 /// Frame magic: "targetDP wire".
 pub const MAGIC: [u8; 4] = *b"TDPW";
-/// Wire format version (5: hybrid worlds — intra-host vs inter-host
-/// traffic split in `Report`).
-pub const VERSION: u8 = 5;
+/// Wire format version (6: checkpoint/restart — the `Checkpoint`
+/// session command).
+pub const VERSION: u8 = 6;
 /// Fixed header size of a [`PlaneMsg`] frame in bytes.
 pub const PLANE_HEADER_LEN: usize = 26;
 /// Fixed header size of an [`InteriorMsg`] frame in bytes.
@@ -242,6 +252,11 @@ pub enum Command {
     GatherPhi,
     /// Send a final [`ReportMsg`] and exit the rank thread.
     Shutdown,
+    /// Reply exactly like [`Command::Gather`] — interior `f` then `g` as
+    /// [`InteriorMsg`] frames — but as a checkpoint snapshot request, so
+    /// the driver can persist a decomposition-independent restart image
+    /// between logging blocks ([`crate::comms::checkpoint`]).
+    Checkpoint,
 }
 
 /// Rank → driver partial observable sums over this rank's interior.
@@ -467,6 +482,7 @@ impl Command {
             Command::Gather => (2, 0),
             Command::GatherPhi => (3, 0),
             Command::Shutdown => (4, 0),
+            Command::Checkpoint => (5, 0),
         };
         let mut out = Vec::with_capacity(15);
         prelude(&mut out, KIND_COMMAND);
@@ -701,6 +717,7 @@ impl Frame {
                     2 => Command::Gather,
                     3 => Command::GatherPhi,
                     4 => Command::Shutdown,
+                    5 => Command::Checkpoint,
                     v => return Err(bad(format!("unknown command {v}"))),
                 };
                 Ok(Frame::Command(cmd))
@@ -911,7 +928,8 @@ mod tests {
                     Command::Observables,
                     Command::Gather,
                     Command::GatherPhi,
-                    Command::Shutdown] {
+                    Command::Shutdown,
+                    Command::Checkpoint] {
             let fr = Frame::Command(cmd);
             assert_eq!(Frame::decode(&fr.encode()).unwrap(), fr, "{cmd:?}");
         }

@@ -192,6 +192,17 @@ pub struct CommsConfig {
     /// tracing only reads the clock around existing operations, so
     /// results are bit-identical either way.
     pub trace: bool,
+    /// Deterministic fault injection: the armed rank returns a named
+    /// error at the configured step and point, killing its thread (or,
+    /// over sockets/hybrid, its OS process) exactly like a real crash —
+    /// the `[fault] kill_rank`/`kill_step` knobs. `None` (the default)
+    /// injects nothing and costs one branch per check site.
+    pub fault: Option<FaultSpec>,
+    /// How long a blocked rank wait / controller collect may stall
+    /// before surfacing a lost-neighbour error (the `[fault]
+    /// wait_timeout_s` knob; fault tests shrink it so a killed
+    /// neighbour is diagnosed in seconds, not minutes).
+    pub wait_timeout: Duration,
 }
 
 impl Default for CommsConfig {
@@ -207,8 +218,67 @@ impl Default for CommsConfig {
             pin: false,
             grid: [0, 0, 0],
             trace: false,
+            fault: None,
+            wait_timeout: WAIT_TIMEOUT,
         }
     }
+}
+
+/// Where an injected fault fires within the armed rank's step loop.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultPoint {
+    /// At the top of the step (super-step) covering `kill_step`, before
+    /// any halo traffic for it moves.
+    Step,
+    /// Mid-exchange: after the rank has posted its first batch of halo
+    /// sends for `kill_step` but before it waits on its neighbours —
+    /// peers are left holding half a handshake.
+    Mid,
+    /// At the command barrier, once `kill_step` steps have completed —
+    /// the rank dies parked between logging blocks, exactly where the
+    /// driver's next broadcast will find the corpse.
+    Barrier,
+}
+
+/// A deterministic injected fault: `rank` dies at `step` (counted from
+/// the start of this world incarnation) at `point`. Carried in
+/// [`CommsConfig::fault`] and TOML-round-tripped through the `[fault]`
+/// section, so socket/hybrid rank processes arm it from the rendezvous
+/// payload.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultSpec {
+    /// The rank that dies.
+    pub rank: usize,
+    /// The step it dies at (0-based; [`FaultPoint::Barrier`] fires at
+    /// the first barrier with at least this many steps completed).
+    pub step: u64,
+    /// Where within the step loop it dies.
+    pub point: FaultPoint,
+}
+
+/// The named error an injected fault surfaces as. The text deliberately
+/// avoids the transport-blame phrases (`timed out`, `hung up`) so the
+/// session's root-cause filter reports the injected death, not the
+/// secondary wreckage on the surviving ranks.
+fn fault_error(rank: usize, step: u64, point: &str) -> Error {
+    Error::Invalid(format!(
+        "fault: injected kill of rank {rank} at step {step} ({point})"
+    ))
+}
+
+/// Fire the injected fault if `rank` is armed for `point` within the
+/// step range `[step, upto)` — the range is one step wide except for
+/// super-steps, which cover `depth` steps per exchange.
+fn fault_check(fault: &Option<FaultSpec>, rank: usize, point: FaultPoint,
+               step: u64, upto: u64, label: &str) -> Result<()> {
+    if let Some(f) = fault {
+        if f.rank == rank && f.point == point && f.step >= step
+            && f.step < upto
+        {
+            return Err(fault_error(rank, f.step, label));
+        }
+    }
+    Ok(())
 }
 
 /// Per-rank timing/traffic summary, accumulated by the resident rank over
@@ -376,6 +446,12 @@ pub struct Rank {
     /// The rank thread's span recorder — disabled (free) unless the
     /// world was built with [`CommsConfig::trace`].
     pub trace: SpanRecorder,
+    /// How long a blocked [`Rank::wait`]/[`Rank::wait_block`] may stall
+    /// before surfacing a lost-neighbour error. Defaults to the
+    /// conservative production value; the serve loops override it from
+    /// [`CommsConfig::wait_timeout`] so fault-injection tests diagnose a
+    /// killed neighbour in seconds.
+    pub timeout: Duration,
 }
 
 impl Rank {
@@ -401,6 +477,7 @@ impl Rank {
             msgs_intra: 0,
             msgs_inter: 0,
             trace: SpanRecorder::disabled(),
+            timeout: WAIT_TIMEOUT,
         }
     }
 
@@ -531,7 +608,7 @@ impl Rank {
         let data = loop {
             // error strings are built only in the failure arms — this
             // receive loop runs 6+ times per timestep on the halo path
-            match self.transport.recv_timeout(WAIT_TIMEOUT)? {
+            match self.transport.recv_timeout(self.timeout)? {
                 Some(Frame::Plane(msg)) if msg.tag == tag => break msg.data,
                 Some(Frame::Plane(msg)) => self.park(msg)?,
                 Some(Frame::PlaneBlock(msg)) => self.park_block(msg)?,
@@ -545,9 +622,9 @@ impl Rank {
                 }
                 None => {
                     return Err(Error::Invalid(format!(
-                        "comms: rank {} timed out after {WAIT_TIMEOUT:?} \
+                        "comms: rank {} timed out after {:?} \
                          waiting for {tag:?} — neighbour or driver lost?",
-                        self.rank
+                        self.rank, self.timeout
                     )))
                 }
             }
@@ -585,7 +662,7 @@ impl Rank {
         }
         let t0 = Instant::now();
         let data = loop {
-            match self.transport.recv_timeout(WAIT_TIMEOUT)? {
+            match self.transport.recv_timeout(self.timeout)? {
                 Some(Frame::PlaneBlock(msg))
                     if msg.step == step
                         && msg.field == field
@@ -606,10 +683,10 @@ impl Rank {
                 }
                 None => {
                     return Err(Error::Invalid(format!(
-                        "comms: rank {} timed out after {WAIT_TIMEOUT:?} \
+                        "comms: rank {} timed out after {:?} \
                          waiting for the step-{step} {field:?} {side:?} \
                          ghost block — neighbour or driver lost?",
-                        self.rank
+                        self.rank, self.timeout
                     )))
                 }
             }
@@ -635,7 +712,7 @@ impl Rank {
         let tr0 = self.trace.now();
         let t0 = Instant::now();
         let cmd = loop {
-            match self.transport.recv_timeout(WAIT_TIMEOUT)? {
+            match self.transport.recv_timeout(self.timeout)? {
                 None => continue, // idle at the barrier, keep waiting
                 Some(Frame::Command(cmd)) => break cmd,
                 Some(Frame::Plane(msg)) => self.park(msg)?,
@@ -946,10 +1023,11 @@ impl CommsSession {
     }
 
     fn recv_from_ranks(&mut self, what: &str) -> Result<Frame> {
-        match self.controller.recv_timeout(WAIT_TIMEOUT)? {
+        let timeout = self.cfg.wait_timeout;
+        match self.controller.recv_timeout(timeout)? {
             Some(frame) => Ok(frame),
             None => Err(Error::Invalid(format!(
-                "comms: driver timed out after {WAIT_TIMEOUT:?} waiting \
+                "comms: driver timed out after {timeout:?} waiting \
                  for {what} — rank lost?"
             ))),
         }
@@ -1153,6 +1231,33 @@ impl CommsSession {
             )));
         }
         if let Err(e) = self.broadcast(Command::Gather) {
+            return Err(self.fail(e));
+        }
+        self.collect_interiors(&mut [(InteriorField::F, nvel, f),
+                                     (InteriorField::G, nvel, g)])
+    }
+
+    /// Cut a checkpoint snapshot: broadcast [`Command::Checkpoint`] and
+    /// reassemble every rank's interior f/g into the global buffers —
+    /// the same bit-exact payload path as [`CommsSession::gather`], under
+    /// the dedicated checkpoint command. The ranks keep running; the
+    /// driver serializes the result via
+    /// [`crate::comms::checkpoint::Checkpoint`], decomposition-free, so
+    /// the snapshot restores into any world shape.
+    pub fn checkpoint(&mut self, f: &mut [f64], g: &mut [f64])
+                      -> Result<()> {
+        let n = self.dec.global.nsites();
+        let nvel = self.vs.nvel;
+        if f.len() != nvel * n || g.len() != nvel * n {
+            return Err(Error::Invalid(format!(
+                "comms: checkpoint buffers are {}+{} doubles, want {} \
+                 each",
+                f.len(),
+                g.len(),
+                nvel * n
+            )));
+        }
+        if let Err(e) = self.broadcast(Command::Checkpoint) {
             return Err(self.fail(e));
         }
         self.collect_interiors(&mut [(InteriorField::F, nvel, f),
@@ -1402,6 +1507,7 @@ fn slab_main(d: SubDomain, vs: &'static VelSet, p: FeParams,
     drop(g0);
     let table = StreamTable::cached(vs, &local);
     let mut rank = Rank::new(transport);
+    rank.timeout = cfg.wait_timeout;
 
     let t0 = Instant::now();
     // armed only after allocation + scatter: zeros/first-touch launches
@@ -1411,6 +1517,8 @@ fn slab_main(d: SubDomain, vs: &'static VelSet, p: FeParams,
     let pool = pool;
     let mut step: u64 = 0;
     loop {
+        fault_check(&cfg.fault, d.rank, FaultPoint::Barrier, 0,
+                    step.saturating_add(1), "command barrier")?;
         match rank.wait_command()? {
             Command::Advance { steps } => {
                 if depth > 1 {
@@ -1420,6 +1528,9 @@ fn slab_main(d: SubDomain, vs: &'static VelSet, p: FeParams,
                     let mut left = steps;
                     while left > 0 {
                         let sdepth = depth.min(left as usize);
+                        fault_check(&cfg.fault, d.rank, FaultPoint::Step,
+                                    step, step + sdepth as u64,
+                                    "super-step start")?;
                         super_step(&d, vs, &p, &table, &mut st, &mut rank,
                                    step, sdepth, halo, &cfg, &pool)?;
                         step += sdepth as u64;
@@ -1427,6 +1538,8 @@ fn slab_main(d: SubDomain, vs: &'static VelSet, p: FeParams,
                     }
                 } else {
                     for _ in 0..steps {
+                        fault_check(&cfg.fault, d.rank, FaultPoint::Step,
+                                    step, step + 1, "step start")?;
                         step_rank(&d, vs, &p, &table, &mut st, &mut rank,
                                   step, &cfg, &pool)?;
                         step += 1;
@@ -1447,7 +1560,9 @@ fn slab_main(d: SubDomain, vs: &'static VelSet, p: FeParams,
                     (t0.elapsed().as_secs_f64() - rank.idle_s).max(0.0);
                 rank.send_response(&Frame::Partials(partials))?;
             }
-            Command::Gather => {
+            // a checkpoint snapshot is the gather payload path under its
+            // own command: ship the interior f then g, bit-exact
+            Command::Gather | Command::Checkpoint => {
                 let fi = d.interior_of_with_halo(&st.f, nvel, halo);
                 rank.send_response(&Frame::Interior(InteriorMsg {
                     src: d.rank as u32,
@@ -1762,6 +1877,7 @@ fn grid_main(d: CartSubDomain, vs: &'static VelSet, p: FeParams,
     let interior = d.interior_runs();
     let deep = deep_runs(&d);
     let mut rank = Rank::new(transport);
+    rank.timeout = cfg.wait_timeout;
 
     let t0 = Instant::now();
     let pool_trace =
@@ -1769,9 +1885,13 @@ fn grid_main(d: CartSubDomain, vs: &'static VelSet, p: FeParams,
     let pool = pool;
     let mut step: u64 = 0;
     loop {
+        fault_check(&cfg.fault, d.rank, FaultPoint::Barrier, 0,
+                    step.saturating_add(1), "command barrier")?;
         match rank.wait_command()? {
             Command::Advance { steps } => {
                 for _ in 0..steps {
+                    fault_check(&cfg.fault, d.rank, FaultPoint::Step,
+                                step, step + 1, "step start")?;
                     step_rank_grid(&d, vs, &p, &table, &plans, &interior,
                                    &deep, &mut st, &mut rank, step, &cfg,
                                    &pool)?;
@@ -1791,7 +1911,9 @@ fn grid_main(d: CartSubDomain, vs: &'static VelSet, p: FeParams,
                     (t0.elapsed().as_secs_f64() - rank.idle_s).max(0.0);
                 rank.send_response(&Frame::Partials(partials))?;
             }
-            Command::Gather => {
+            // a checkpoint snapshot is the gather payload path under its
+            // own command: ship the interior f then g, bit-exact
+            Command::Gather | Command::Checkpoint => {
                 rank.send_response(&Frame::Interior(InteriorMsg {
                     src: d.rank as u32,
                     field: InteriorField::F,
@@ -1883,6 +2005,10 @@ fn step_rank_grid(d: &CartSubDomain, vs: &VelSet, p: &FeParams,
     // ---- exchange 1: post-stream g faces (moments halo), staged ----
     isend_faces(rank, &st.g, FieldId::G, Phase::Moments, step, nvel,
                 local, first, &mut st.send_buf)?;
+    // mid-exchange fault point: the first stage's faces are posted, the
+    // neighbours are owed the rest of the handshake
+    fault_check(&cfg.fault, d.rank, FaultPoint::Mid, step, step + 1,
+                "mid-step, after the first face sends")?;
     if cfg.overlap {
         // the interior needs no halo for phi, the deep box none for the
         // gradient — compute both while stage 1 is in flight; collide
@@ -2231,6 +2357,12 @@ fn super_step(d: &SubDomain, vs: &VelSet, p: &FeParams,
         rank.trace.close(TracePhase::Pack, step, 0, SIDE_NONE, tr0);
     }
 
+    // mid-super-step fault point: both ghost-block batches are posted,
+    // the neighbours are owed nothing more but this rank never collects
+    fault_check(&cfg.fault, d.rank, FaultPoint::Mid, step,
+                step + sdepth as u64,
+                "mid-super-step, after the ghost-block sends")?;
+
     let wait_ghost_blocks =
         |rank: &mut Rank, st: &mut RankState| -> Result<()> {
             let f_lo =
@@ -2371,6 +2503,12 @@ fn step_rank(d: &SubDomain, vs: &VelSet, p: &FeParams, table: &StreamTable,
     rank.isend(rank.right(), tag(Phase::Moments, FieldId::G, Side::Low),
                &st.send_buf)?;
     rank.trace.close(TracePhase::Pack, step, 0, SIDE_NONE, tr0);
+
+    // mid-exchange fault point: both moments planes are posted, the
+    // neighbours are left waiting for the stream exchange that never
+    // comes
+    fault_check(&cfg.fault, d.rank, FaultPoint::Mid, step, step + 1,
+                "mid-step, after the moments sends")?;
 
     if !cfg.overlap {
         // bulk-sync: halos first, then everything in one sweep

@@ -54,6 +54,7 @@ pub struct Config {
     pub target: TargetCfg,
     pub free_energy: FeParams,
     pub output: OutputCfg,
+    pub fault: FaultCfg,
 }
 
 #[derive(Debug, Clone)]
@@ -186,6 +187,21 @@ pub struct OutputCfg {
     /// wait%`) from the driver at most every N seconds between logging
     /// blocks of a decomposed run (0 = off, the default).
     pub heartbeat: u64,
+    /// Write a checkpoint ([`crate::comms::checkpoint`], the `TDPK`
+    /// encoding) every N **logging blocks** of a decomposed run (0 = off,
+    /// the default). Snapshots are decomposition-independent: restore
+    /// into any rank count, grid, transport or comms depth and finish
+    /// bitwise identical to an uninterrupted run.
+    pub checkpoint_every: u64,
+    /// Checkpoint file path ("" = `<dir>/checkpoint.tdpk`, falling back
+    /// to `checkpoint.tdpk` in the working directory when `dir` is empty
+    /// too). Each write replaces the previous snapshot atomically
+    /// (tmp-file + rename).
+    pub checkpoint_out: String,
+    /// Resume from this checkpoint file instead of the `[simulation]`
+    /// initial condition ("" = fresh start). The lattice dims and model
+    /// must match the config; the run continues from the recorded step.
+    pub restore: String,
 }
 
 impl Default for OutputCfg {
@@ -197,6 +213,67 @@ impl Default for OutputCfg {
             trace_out: String::new(),
             report_json: String::new(),
             heartbeat: 0,
+            checkpoint_every: 0,
+            checkpoint_out: String::new(),
+            restore: String::new(),
+        }
+    }
+}
+
+/// Fault injection + supervised-recovery knobs (the `[fault]` section).
+///
+/// The kill trio arms a **deterministic** fault: rank `kill_rank` dies
+/// with a named error at step `kill_step` (counted from the start of the
+/// current world incarnation), at the point chosen by `kill_point`. The
+/// knobs ride the TOML round trip, so socket/hybrid rank processes arm
+/// the same fault from the rendezvous payload. The recovery knobs drive
+/// the supervised driver loop in [`crate::coordinator`]: a world error is
+/// retried from the last checkpoint up to `max_restarts` times.
+#[derive(Debug, Clone)]
+pub struct FaultCfg {
+    /// Rank index to kill (ignored while `kill_step` is 0).
+    pub kill_rank: u64,
+    /// Step at which the fault fires; 0 = fault injection off (the
+    /// default). Counted within the current world incarnation, so after
+    /// a restart a non-`kill_repeat` fault is disarmed by the driver.
+    pub kill_step: u64,
+    /// Where within the step the rank dies: `"step"` (at the start of
+    /// the step or super-step), `"mid"` (mid-exchange, after the halo
+    /// sends are posted) or `"barrier"` (at the command barrier between
+    /// logging blocks).
+    pub kill_point: String,
+    /// Keep the fault armed across supervised restarts (every
+    /// incarnation dies — for retry-exhaustion tests). Default false:
+    /// the driver disarms the fault after the first death.
+    pub kill_repeat: bool,
+    /// Supervised restarts: on a world error the driver tears the world
+    /// down and relaunches from the last checkpoint up to this many
+    /// times (0 = unsupervised, the error surfaces immediately).
+    pub max_restarts: u64,
+    /// Sleep `backoff_ms * attempt` milliseconds before each relaunch.
+    pub backoff_ms: u64,
+    /// Elastic recovery: relaunch with this many ranks instead of
+    /// `[target] ranks` (0 = same rank count). The rank grid is
+    /// re-resolved (`CartDecomposition::auto_grid`), which is sound
+    /// because checkpoints are decomposition-independent.
+    pub retry_ranks: u64,
+    /// Rank receive timeout in seconds (0 = the 120 s default). A dead
+    /// neighbour is detected no later than this, so fault tests shrink
+    /// it to keep recovery fast.
+    pub wait_timeout_s: u64,
+}
+
+impl Default for FaultCfg {
+    fn default() -> Self {
+        FaultCfg {
+            kill_rank: 0,
+            kill_step: 0,
+            kill_point: "step".into(),
+            kill_repeat: false,
+            max_restarts: 0,
+            backoff_ms: 100,
+            retry_ranks: 0,
+            wait_timeout_s: 0,
         }
     }
 }
@@ -266,9 +343,26 @@ impl Config {
             trace_out: out.str_or("trace_out", "")?,
             report_json: out.str_or("report_json", "")?,
             heartbeat: out.u64_or("heartbeat", 0)?,
+            checkpoint_every: out.u64_or("checkpoint_every", 0)?,
+            checkpoint_out: out.str_or("checkpoint_out", "")?,
+            restore: out.str_or("restore", "")?,
         };
 
-        Ok(Config { simulation, target, free_energy, output })
+        let flt = Section::of(&doc, "fault");
+        let df = FaultCfg::default();
+        let fault = FaultCfg {
+            kill_rank: flt.u64_or("kill_rank", df.kill_rank)?,
+            kill_step: flt.u64_or("kill_step", df.kill_step)?,
+            kill_point: flt.str_or("kill_point", &df.kill_point)?,
+            kill_repeat: flt.bool_or("kill_repeat", df.kill_repeat)?,
+            max_restarts: flt.u64_or("max_restarts", df.max_restarts)?,
+            backoff_ms: flt.u64_or("backoff_ms", df.backoff_ms)?,
+            retry_ranks: flt.u64_or("retry_ranks", df.retry_ranks)?,
+            wait_timeout_s: flt.u64_or("wait_timeout_s",
+                                       df.wait_timeout_s)?,
+        };
+
+        Ok(Config { simulation, target, free_energy, output, fault })
     }
 
     pub fn geometry(&self) -> Geometry {
@@ -311,6 +405,7 @@ impl Config {
         let t = &self.target;
         let fe = &self.free_energy;
         let o = &self.output;
+        let fl = &self.fault;
         format!(
             "[simulation]\n\
              lattice = \"{}\"\n\
@@ -333,14 +428,23 @@ impl Config {
              tau_f = {:?}\ntau_g = {:?}\n\
              \n[output]\n\
              every = {}\ndir = \"{}\"\nvtk = {}\n\
-             trace_out = \"{}\"\nreport_json = \"{}\"\nheartbeat = {}\n",
+             trace_out = \"{}\"\nreport_json = \"{}\"\nheartbeat = {}\n\
+             checkpoint_every = {}\ncheckpoint_out = \"{}\"\n\
+             restore = \"{}\"\n\
+             \n[fault]\n\
+             kill_rank = {}\nkill_step = {}\nkill_point = \"{}\"\n\
+             kill_repeat = {}\nmax_restarts = {}\nbackoff_ms = {}\n\
+             retry_ranks = {}\nwait_timeout_s = {}\n",
             s.lattice, s.lx, s.ly, s.lz, s.steps, s.init, s.noise, s.seed,
             s.radius, t.backend, t.vvl, t.threads, t.schedule, t.batch,
             t.fusion, t.multi_step, t.xla_vvl_block, t.ranks, t.overlap,
             t.comms_depth, t.pin_threads,
             t.observables, t.transport, t.rank_server, t.grid, fe.a, fe.b,
             fe.kappa, fe.gamma, fe.tau_f, fe.tau_g, o.every, o.dir, o.vtk,
-            o.trace_out, o.report_json, o.heartbeat,
+            o.trace_out, o.report_json, o.heartbeat, o.checkpoint_every,
+            o.checkpoint_out, o.restore, fl.kill_rank, fl.kill_step,
+            fl.kill_point, fl.kill_repeat, fl.max_restarts, fl.backoff_ms,
+            fl.retry_ranks, fl.wait_timeout_s,
         )
     }
 
@@ -447,6 +551,14 @@ impl Config {
                     // report builds its phase histogram from them
                     trace: !self.output.trace_out.is_empty()
                         || !self.output.report_json.is_empty(),
+                    fault: self.fault_spec()?,
+                    wait_timeout: std::time::Duration::from_secs(
+                        if self.fault.wait_timeout_s == 0 {
+                            120
+                        } else {
+                            self.fault.wait_timeout_s
+                        },
+                    ),
                 })
             }
             other => Err(Error::Parse(format!(
@@ -454,6 +566,38 @@ impl Config {
                  host kernels), got {other:?}"
             ))),
         }
+    }
+
+    /// The armed fault, if any (`kill_step` 0 = fault injection off).
+    /// Validated here so every process — driver and rendezvoused rank
+    /// processes alike — rejects a bad spec the same way.
+    pub fn fault_spec(&self) -> Result<Option<crate::comms::FaultSpec>> {
+        use crate::comms::{FaultPoint, FaultSpec};
+        if self.fault.kill_step == 0 {
+            return Ok(None);
+        }
+        if self.fault.kill_rank as usize >= self.target.ranks {
+            return Err(Error::Parse(format!(
+                "fault: kill_rank = {} but the world has {} rank(s)",
+                self.fault.kill_rank, self.target.ranks,
+            )));
+        }
+        let point = match self.fault.kill_point.as_str() {
+            "step" => FaultPoint::Step,
+            "mid" => FaultPoint::Mid,
+            "barrier" => FaultPoint::Barrier,
+            other => {
+                return Err(Error::Parse(format!(
+                    "fault: unknown kill_point {other:?} (want \"step\", \
+                     \"mid\" or \"barrier\")"
+                )))
+            }
+        };
+        Ok(Some(FaultSpec {
+            rank: self.fault.kill_rank as usize,
+            step: self.fault.kill_step,
+            point,
+        }))
     }
 
     pub fn tlp_pool(&self) -> TlpPool {
@@ -790,6 +934,17 @@ mod tests {
         cfg.output.trace_out = "out/trace.json".into();
         cfg.output.report_json = "out/run.json".into();
         cfg.output.heartbeat = 5;
+        cfg.output.checkpoint_every = 2;
+        cfg.output.checkpoint_out = "out/ck.tdpk".into();
+        cfg.output.restore = "out/prev.tdpk".into();
+        cfg.fault.kill_rank = 1;
+        cfg.fault.kill_step = 9;
+        cfg.fault.kill_point = "mid".into();
+        cfg.fault.kill_repeat = true;
+        cfg.fault.max_restarts = 3;
+        cfg.fault.backoff_ms = 50;
+        cfg.fault.retry_ranks = 2;
+        cfg.fault.wait_timeout_s = 4;
 
         let back = Config::from_toml_str(&cfg.to_toml_string()).unwrap();
         assert_eq!(back.simulation.lattice, cfg.simulation.lattice);
@@ -825,6 +980,57 @@ mod tests {
         assert_eq!(back.output.trace_out, cfg.output.trace_out);
         assert_eq!(back.output.report_json, cfg.output.report_json);
         assert_eq!(back.output.heartbeat, cfg.output.heartbeat);
+        assert_eq!(back.output.checkpoint_every,
+                   cfg.output.checkpoint_every);
+        assert_eq!(back.output.checkpoint_out, cfg.output.checkpoint_out);
+        assert_eq!(back.output.restore, cfg.output.restore);
+        assert_eq!(back.fault.kill_rank, cfg.fault.kill_rank);
+        assert_eq!(back.fault.kill_step, cfg.fault.kill_step);
+        assert_eq!(back.fault.kill_point, cfg.fault.kill_point);
+        assert_eq!(back.fault.kill_repeat, cfg.fault.kill_repeat);
+        assert_eq!(back.fault.max_restarts, cfg.fault.max_restarts);
+        assert_eq!(back.fault.backoff_ms, cfg.fault.backoff_ms);
+        assert_eq!(back.fault.retry_ranks, cfg.fault.retry_ranks);
+        assert_eq!(back.fault.wait_timeout_s, cfg.fault.wait_timeout_s);
+    }
+
+    #[test]
+    fn fault_knobs_parse_validate_and_reach_comms_config() {
+        use crate::comms::FaultPoint;
+        let cfg = Config::from_toml_str(SAMPLE).unwrap();
+        assert_eq!(cfg.fault.kill_step, 0, "fault injection is opt-in");
+        assert!(cfg.fault_spec().unwrap().is_none());
+
+        let cfg = Config::from_toml_str(
+            "[simulation]\nlattice = \"d2q9\"\nlx = 8\nly = 8\nlz = 1\n\
+             steps = 5\n\n[target]\nranks = 4\n\n[fault]\n\
+             kill_rank = 2\nkill_step = 3\nkill_point = \"mid\"\n\
+             wait_timeout_s = 2\n",
+        )
+        .unwrap();
+        let spec = cfg.fault_spec().unwrap().unwrap();
+        assert_eq!(spec.rank, 2);
+        assert_eq!(spec.step, 3);
+        assert_eq!(spec.point, FaultPoint::Mid);
+        let cc = cfg.comms_config().unwrap();
+        assert_eq!(cc.fault, Some(spec));
+        assert_eq!(cc.wait_timeout,
+                   std::time::Duration::from_secs(2));
+        // wait_timeout_s = 0 keeps the 120 s default
+        let mut dflt = cfg.clone();
+        dflt.fault.wait_timeout_s = 0;
+        assert_eq!(dflt.comms_config().unwrap().wait_timeout,
+                   std::time::Duration::from_secs(120));
+
+        // out-of-range rank and unknown point are config errors, caught
+        // identically by the driver and the rendezvoused rank processes
+        let mut bad = cfg.clone();
+        bad.fault.kill_rank = 4;
+        let err = bad.fault_spec().unwrap_err();
+        assert!(err.to_string().contains("kill_rank"), "{err}");
+        let mut bad = cfg;
+        bad.fault.kill_point = "eventually".into();
+        assert!(bad.fault_spec().is_err());
     }
 
     #[test]

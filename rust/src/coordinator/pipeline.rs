@@ -6,7 +6,8 @@ use std::time::Instant;
 
 use crate::comms::launcher::{connect_world, HostSpec, LocalRanks,
                              RankServer, WorldEndpoints};
-use crate::comms::{CommsSession, CommsWorld, WorldReport};
+use crate::comms::{Checkpoint, CheckpointField, CommsSession, CommsWorld,
+                   WorldReport};
 use crate::config::{Config, ObservablesMode, TransportMode};
 use crate::error::{Error, Result};
 use crate::lattice::io::{write_vtk_scalar, CsvWriter};
@@ -76,6 +77,94 @@ pub fn initial_state(cfg: &Config, geom: &crate::lattice::geometry::Geometry)
     (f, g)
 }
 
+/// Build the state a run starts from: the deterministic initial
+/// condition at step 0, or — when `[output] restore` names a checkpoint
+/// file — the recorded global f/g at the recorded step. Shared by the
+/// single-engine pipeline, the decomposed driver *and* every
+/// socket/hybrid rank process (the restore path ships in the rendezvous
+/// TOML, so remote ranks rebuild the identical state locally). The
+/// checkpoint is decomposition-independent: it validates only the
+/// lattice dims and velocity-set width against the config, never the
+/// rank count or grid it was taken at.
+pub fn starting_state(cfg: &Config,
+                      geom: &crate::lattice::geometry::Geometry)
+                      -> Result<(Vec<f64>, Vec<f64>, u64)> {
+    if cfg.output.restore.is_empty() {
+        let (f, g) = initial_state(cfg, geom);
+        return Ok((f, g, 0));
+    }
+    let ck = Checkpoint::read_file(Path::new(&cfg.output.restore))?;
+    let dims = [geom.lx as u64, geom.ly as u64, geom.lz as u64];
+    if ck.dims != dims {
+        return Err(Error::Invalid(format!(
+            "checkpoint: {} holds a {}x{}x{} lattice, config wants \
+             {}x{}x{}",
+            cfg.output.restore, ck.dims[0], ck.dims[1], ck.dims[2],
+            dims[0], dims[1], dims[2],
+        )));
+    }
+    let nvel = cfg.model()?.velset().nvel as u32;
+    if ck.nvel != nvel {
+        return Err(Error::Invalid(format!(
+            "checkpoint: {} holds nvel = {}, config wants {nvel}",
+            cfg.output.restore, ck.nvel,
+        )));
+    }
+    if ck.step > cfg.simulation.steps {
+        return Err(Error::Invalid(format!(
+            "checkpoint: {} was taken at step {}, past the configured \
+             {} steps",
+            cfg.output.restore, ck.step, cfg.simulation.steps,
+        )));
+    }
+    let want = nvel as usize * geom.nsites();
+    let mut ck = ck;
+    let f = ck.take_field("f", want)?;
+    let g = ck.take_field("g", want)?;
+    Ok((f, g, ck.step))
+}
+
+/// Where a checkpointing run writes its snapshot: `checkpoint_out` when
+/// set, else `<dir>/checkpoint.tdpk`, else `checkpoint.tdpk` in the
+/// working directory. `None` while `checkpoint_every` is 0.
+pub fn checkpoint_path(cfg: &Config) -> Option<String> {
+    if cfg.output.checkpoint_every == 0 {
+        return None;
+    }
+    if !cfg.output.checkpoint_out.is_empty() {
+        return Some(cfg.output.checkpoint_out.clone());
+    }
+    if !cfg.output.dir.is_empty() {
+        return Some(
+            Path::new(&cfg.output.dir)
+                .join("checkpoint.tdpk")
+                .to_string_lossy()
+                .into_owned(),
+        );
+    }
+    Some("checkpoint.tdpk".into())
+}
+
+/// Assemble and atomically write a TDPK snapshot of the global state.
+fn write_checkpoint(cfg: &Config, path: &str, step: u64, f: Vec<f64>,
+                    g: Vec<f64>) -> Result<()> {
+    let geom = cfg.geometry();
+    let nvel = cfg.model()?.velset().nvel as u32;
+    let ck = Checkpoint {
+        step,
+        dims: [geom.lx as u64, geom.ly as u64, geom.lz as u64],
+        nvel,
+        config_toml: cfg.to_toml_string(),
+        fields: vec![
+            CheckpointField { name: "f".into(), ncomp: nvel, data: f },
+            CheckpointField { name: "g".into(), ncomp: nvel, data: g },
+        ],
+    };
+    ck.write_file(Path::new(path))?;
+    println!("ckpt     : step {step} -> {path}");
+    Ok(())
+}
+
 /// Open the observables CSV (when an output dir is configured) and write
 /// the step-0 row — shared column schema for both pipelines.
 fn open_observables_csv(cfg: &Config, initial: &Observables)
@@ -111,7 +200,7 @@ fn block_size(cfg: &Config) -> u64 {
 pub fn run_simulation(cfg: &Config) -> Result<RunSummary> {
     let transport = cfg.transport_mode()?;
     if cfg.target.ranks > 1 || transport != TransportMode::Channel {
-        return run_decomposed_simulation(cfg, transport);
+        return run_supervised(cfg, transport);
     }
     if !cfg.output.trace_out.is_empty() || !cfg.output.report_json.is_empty()
     {
@@ -144,9 +233,15 @@ pub fn run_simulation(cfg: &Config) -> Result<RunSummary> {
         None => "unfused (5 kernels)".to_string(),
     });
 
-    // initial condition
-    let (f, g) = initial_state(cfg, &geom);
+    // initial condition — or a restored checkpoint, in which case the
+    // run continues from the recorded step, bitwise identical to an
+    // uninterrupted run (the stepping is deterministic and
+    // block-boundary-independent)
+    let (f, g, step0) = starting_state(cfg, &geom)?;
     engine.load_state(&f, &g)?;
+    if step0 > 0 {
+        println!("restore  : {} at step {step0}", cfg.output.restore);
+    }
 
     let initial = engine.observables()?;
     println!("initial  : mass={:.6} phi={:.6} var={:.3e}", initial.mass,
@@ -154,15 +249,18 @@ pub fn run_simulation(cfg: &Config) -> Result<RunSummary> {
 
     let mut csv = open_observables_csv(cfg, &initial)?;
     let block = block_size(cfg);
+    let ck_path = checkpoint_path(cfg);
     let mut mlups = Mlups::new();
     let timer = Timer::start();
-    let mut done = 0;
+    let mut done = step0;
+    let mut blocks_done = 0u64;
     while done < cfg.simulation.steps {
         let todo = block.min(cfg.simulation.steps - done);
         let t = Timer::start();
         engine.run(todo)?;
         mlups.record(n, todo, t.seconds());
         done += todo;
+        blocks_done += 1;
         let obs = engine.observables()?;
         println!(
             "step {done:>6}: mass={:.6} phi={:.6} var={:.4e} [{:.2} MLUPS]",
@@ -171,6 +269,16 @@ pub fn run_simulation(cfg: &Config) -> Result<RunSummary> {
         if let Some(w) = csv.as_mut() {
             w.row(&[done as f64, obs.mass, obs.phi_total, obs.phi_variance,
                     mlups.value()])?;
+        }
+        if let Some(path) = ck_path.as_ref() {
+            if blocks_done % cfg.output.checkpoint_every == 0
+                && done < cfg.simulation.steps
+            {
+                let mut ckf = vec![0.0; model.velset().nvel * n];
+                let mut ckg = vec![0.0; model.velset().nvel * n];
+                engine.fetch_state(&mut ckf, &mut ckg)?;
+                write_checkpoint(cfg, path, done, ckf, ckg)?;
+            }
         }
     }
 
@@ -200,6 +308,73 @@ pub fn run_simulation(cfg: &Config) -> Result<RunSummary> {
         summary.steps, summary.seconds, summary.mlups, summary.mass_drift()
     );
     Ok(summary)
+}
+
+/// Supervised driver loop for decomposed runs: run the world, and on a
+/// world error — a dead rank or host surfacing through the transport
+/// timeouts, the launcher's exit statuses, or the hybrid EOF policies —
+/// tear the world down and relaunch it from the last checkpoint, up to
+/// `[fault] max_restarts` times with `backoff_ms * attempt` sleeps in
+/// between. Each relaunch:
+///
+/// - disarms the injected fault (unless `kill_repeat`, which is how the
+///   retry-exhaustion tests drive every incarnation into the ground),
+/// - points `[output] restore` at the checkpoint file when one exists
+///   (otherwise the world restarts from the initial condition — still
+///   correct, just more recompute), and
+/// - optionally re-decomposes at `retry_ranks` ranks (the explicit
+///   `grid` is cleared so the auto factorisation re-resolves), which is
+///   sound because checkpoints are decomposition-independent.
+///
+/// `max_restarts = 0` (the default) is unsupervised: the first error
+/// surfaces unchanged. Exhaustion returns a named error wrapping the
+/// last failure — never a hang, because every receive in the world is
+/// bounded by `CommsConfig::wait_timeout`.
+fn run_supervised(cfg: &Config, transport: TransportMode)
+                  -> Result<RunSummary> {
+    let retries = cfg.fault.max_restarts;
+    if retries == 0 {
+        return run_decomposed_simulation(cfg, transport);
+    }
+    let ck = checkpoint_path(cfg);
+    let mut attempt_cfg = cfg.clone();
+    let mut last_err =
+        match run_decomposed_simulation(&attempt_cfg, transport) {
+            Ok(s) => return Ok(s),
+            Err(e) => e,
+        };
+    for attempt in 1..=retries {
+        println!("recover  : world error ({last_err}); restart \
+                  {attempt}/{retries}");
+        if !cfg.fault.kill_repeat {
+            // the fault fired in the incarnation that just died; a
+            // real failed node would not deterministically fail again
+            attempt_cfg.fault.kill_step = 0;
+        }
+        if cfg.fault.retry_ranks > 0 {
+            attempt_cfg.target.ranks = cfg.fault.retry_ranks as usize;
+            // the explicit grid was sized for the old rank count; let
+            // auto_grid re-factorise the new one
+            attempt_cfg.target.grid = String::new();
+        }
+        if let Some(path) = ck.as_ref() {
+            if Path::new(path).exists() {
+                attempt_cfg.output.restore = path.clone();
+                println!("recover  : resuming from {path}");
+            }
+        }
+        std::thread::sleep(std::time::Duration::from_millis(
+            cfg.fault.backoff_ms.saturating_mul(attempt),
+        ));
+        match run_decomposed_simulation(&attempt_cfg, transport) {
+            Ok(s) => return Ok(s),
+            Err(e) => last_err = e,
+        }
+    }
+    Err(Error::Invalid(format!(
+        "comms: world failed after {retries} restart(s); last error: \
+         {last_err}"
+    )))
 }
 
 /// The decomposed (`ranks > 1` or socket-transport) pipeline: bring up a
@@ -279,7 +454,10 @@ fn run_decomposed_simulation(cfg: &Config, transport: TransportMode)
         );
     }
 
-    let (f0, g0) = initial_state(cfg, &geom);
+    let (f0, g0, step0) = starting_state(cfg, &geom)?;
+    if step0 > 0 {
+        println!("restore  : {} at step {step0}", cfg.output.restore);
+    }
     let initial = state_observables(vs, &f0, &g0, n);
     println!("initial  : mass={:.6} phi={:.6} var={:.3e}", initial.mass,
              initial.phi_total, initial.phi_variance);
@@ -368,9 +546,11 @@ fn run_decomposed_simulation(cfg: &Config, transport: TransportMode)
 
     let mut csv = open_observables_csv(cfg, &initial)?;
     let block = block_size(cfg);
+    let ck_path = checkpoint_path(cfg);
     let mut mlups = Mlups::new();
     let timer = Timer::start();
-    let mut done = 0;
+    let mut done = step0;
+    let mut blocks_done = 0u64;
     // gather-mode scratch, allocated only when the knob asks for it
     let mut gathered = match mode {
         ObservablesMode::Gather => {
@@ -393,6 +573,7 @@ fn run_decomposed_simulation(cfg: &Config, transport: TransportMode)
         };
         mlups.record(n, todo, t.seconds());
         done += todo;
+        blocks_done += 1;
         last_obs = obs;
         println!(
             "step {done:>6}: mass={:.6} phi={:.6} var={:.4e} [{:.2} MLUPS]",
@@ -401,6 +582,19 @@ fn run_decomposed_simulation(cfg: &Config, transport: TransportMode)
         if let Some(w) = csv.as_mut() {
             w.row(&[done as f64, obs.mass, obs.phi_total, obs.phi_variance,
                     mlups.value()])?;
+        }
+        // checkpoint between logging blocks: the resident ranks stream
+        // their interiors up the bit-exact gather payload path and the
+        // reassembled global state lands on disk atomically
+        if let Some(path) = ck_path.as_ref() {
+            if blocks_done % cfg.output.checkpoint_every == 0
+                && done < cfg.simulation.steps
+            {
+                let mut ckf = vec![0.0; vs.nvel * n];
+                let mut ckg = vec![0.0; vs.nvel * n];
+                session.checkpoint(&mut ckf, &mut ckg)?;
+                write_checkpoint(cfg, path, done, ckf, ckg)?;
+            }
         }
         // progress heartbeat, rate-limited to at most one line per
         // `heartbeat` seconds (gather-mode observables carry no wait
@@ -708,7 +902,10 @@ pub fn run_rank_process(server: &str, want_rank: Option<usize>,
         WorldEndpoints::Socket(transport) => {
             let rank = crate::comms::Transport::rank(&transport);
             let d = domain_of(rank)?;
-            let (f0, g0) = initial_state(&cfg, &geom);
+            // restore ships as a path in the rendezvous TOML; the rank
+            // process reads the checkpoint locally and keeps only its
+            // own planes, exactly like the fresh initial condition
+            let (f0, g0, _step0) = starting_state(&cfg, &geom)?;
             crate::comms::serve_rank(d, vs, &cfg.free_energy, f0, g0,
                                      &ccfg, nthreads, Box::new(transport))
         }
@@ -721,7 +918,7 @@ pub fn run_rank_process(server: &str, want_rank: Option<usize>,
             for t in eps {
                 let rank = crate::comms::Transport::rank(&t);
                 let d = domain_of(rank)?;
-                let (f0, g0) = initial_state(&cfg, &geom);
+                let (f0, g0, _step0) = starting_state(&cfg, &geom)?;
                 let ccfg = ccfg.clone();
                 joins.push(std::thread::spawn(move || {
                     crate::comms::serve_rank(d, vs, &fe, f0, g0, &ccfg,
@@ -776,6 +973,7 @@ pub fn quick_spinodal(backend: &str, lattice: LatticeModel,
         },
         free_energy: Default::default(),
         output: Default::default(),
+        fault: Default::default(),
     };
     run_simulation(&cfg)
 }
@@ -814,6 +1012,7 @@ mod tests {
                 target: Default::default(),
                 free_energy: Default::default(),
                 output: Default::default(),
+                fault: Default::default(),
             };
             cfg.target.fusion = fusion;
             run_simulation(&cfg).unwrap()
@@ -843,6 +1042,7 @@ mod tests {
                 target: Default::default(),
                 free_energy: Default::default(),
                 output: Default::default(),
+                fault: Default::default(),
             };
             cfg.target.ranks = ranks;
             cfg.target.overlap = overlap;
@@ -892,6 +1092,7 @@ mod tests {
                 target: Default::default(),
                 free_energy: Default::default(),
                 output: Default::default(),
+                fault: Default::default(),
             };
             cfg.target.ranks = ranks;
             cfg.target.grid = grid.into();

@@ -13,7 +13,8 @@
 
 use std::process::ExitCode;
 
-use targetdp::config::{Config, OutputCfg, SimulationCfg, TargetCfg};
+use targetdp::config::{Config, FaultCfg, OutputCfg, SimulationCfg,
+                       TargetCfg};
 use targetdp::coordinator::{run_rank_process, run_simulation};
 use targetdp::runtime::Runtime;
 use targetdp::util::cli::Args;
@@ -33,6 +34,9 @@ USAGE:
                  [--rank-server HOST:PORT]
                  [--out DIR] [--vtk] [--trace-out FILE]
                  [--report-json FILE] [--heartbeat SECS]
+                 [--checkpoint-every BLOCKS] [--checkpoint-out FILE]
+                 [--restore FILE] [--max-restarts N]
+                 [--kill-rank R --kill-step S [--kill-point P]]
     targetdp rank --connect HOST:PORT [--rank R] [--local-ranks N]
     targetdp info
     targetdp help
@@ -81,6 +85,31 @@ run options (ignored when --config is given):
     --heartbeat   driver progress line at most every
                   N seconds between logging blocks
                   (step/total, mlups, max wait%)    [0 = off]
+    --checkpoint-every
+                  write a TDPK checkpoint every N
+                  logging blocks (ranks > 1;
+                  decomposition-independent, restore
+                  anywhere)                         [0 = off]
+    --checkpoint-out
+                  checkpoint file path              [<out>/checkpoint.tdpk]
+    --restore     resume from this checkpoint file
+                  instead of the initial condition  [off]
+    --max-restarts
+                  supervised recovery: on a world
+                  error relaunch from the last
+                  checkpoint up to N times          [0 = off]
+    --backoff-ms  sleep N*attempt ms before each
+                  supervised relaunch               [100]
+    --retry-ranks relaunch with this many ranks
+                  (elastic recovery; 0 = same)      [0]
+    --wait-timeout
+                  rank receive timeout in seconds
+                  (dead-neighbour detection bound)  [0 = 120]
+    --kill-rank   fault injection: rank to kill     [0]
+    --kill-step   step at which the fault fires     [0 = off]
+    --kill-point  step | mid | barrier              [step]
+    --kill-repeat keep the fault armed across
+                  supervised restarts               [false]
 
 rank options (a rank/host process; normally spawned by the driver):
     --connect     the driver's rank-server address  (required)
@@ -148,6 +177,24 @@ fn run() -> targetdp::Result<()> {
                             trace_out: args.str_or("trace-out", ""),
                             report_json: args.str_or("report-json", ""),
                             heartbeat: args.u64_or("heartbeat", 0)?,
+                            checkpoint_every:
+                                args.u64_or("checkpoint-every", 0)?,
+                            checkpoint_out:
+                                args.str_or("checkpoint-out", ""),
+                            restore: args.str_or("restore", ""),
+                        },
+                        fault: FaultCfg {
+                            kill_rank: args.u64_or("kill-rank", 0)?,
+                            kill_step: args.u64_or("kill-step", 0)?,
+                            kill_point: args.str_or("kill-point", "step"),
+                            kill_repeat: args.bool_or("kill-repeat",
+                                                      false)?,
+                            max_restarts:
+                                args.u64_or("max-restarts", 0)?,
+                            backoff_ms: args.u64_or("backoff-ms", 100)?,
+                            retry_ranks: args.u64_or("retry-ranks", 0)?,
+                            wait_timeout_s:
+                                args.u64_or("wait-timeout", 0)?,
                         },
                     }
                 }

@@ -1,0 +1,263 @@
+//! Checkpoint/restart parity: a TDPK snapshot captured at step `s`
+//! through `Command::Checkpoint` is **decomposition-independent** — it
+//! restores into any rank count, grid shape, transport, or comms depth,
+//! and into the single-domain fused engine, and the resumed run always
+//! finishes bit-identical to an uninterrupted reference. Snapshot steps
+//! that do not divide the total (remainder cases) are included, and the
+//! restored state is the *decoded image* of the encoded bytes, so the
+//! codec itself sits inside every parity path here.
+
+use std::thread;
+
+use targetdp::comms::launcher::{connect_rank, RankServer};
+use targetdp::comms::{run_decomposed, serve_rank, Checkpoint,
+                      CheckpointField, CommsConfig, CommsWorld,
+                      SocketTransport, Transport};
+use targetdp::free_energy::symmetric::FeParams;
+use targetdp::lattice::geometry::Geometry;
+use targetdp::lb::engine::LbEngine;
+use targetdp::lb::init::init_spinodal;
+use targetdp::lb::model::{d2q9, d3q19, LatticeModel, VelSet};
+use targetdp::targetdp::tlp::TlpPool;
+use targetdp::targetdp::HostTarget;
+
+fn spinodal(vs: &VelSet, geom: &Geometry, seed: u64)
+            -> (Vec<f64>, Vec<f64>) {
+    let n = geom.nsites();
+    let mut f = vec![0.0; vs.nvel * n];
+    let mut g = vec![0.0; vs.nvel * n];
+    init_spinodal(vs, &FeParams::default(), geom, &mut f, &mut g, 0.05,
+                  seed);
+    (f, g)
+}
+
+/// Advance a resident channel world `snap` steps, capture the
+/// `Command::Checkpoint` snapshot of the global state, and return the
+/// decoded image of its encoded bytes.
+fn snapshot(geom: &Geometry, vs: &'static VelSet, f0: &[f64], g0: &[f64],
+            cfg: &CommsConfig, snap: u64) -> Checkpoint {
+    let p = FeParams::default();
+    let world = CommsWorld::new(*geom, cfg.clone()).unwrap();
+    let mut session =
+        world.session(vs, &p, f0.to_vec(), g0.to_vec()).unwrap();
+    session.advance(snap).unwrap();
+    let n = geom.nsites();
+    let mut f = vec![0.0; vs.nvel * n];
+    let mut g = vec![0.0; vs.nvel * n];
+    session.checkpoint(&mut f, &mut g).unwrap();
+    session.finish().unwrap();
+    let nvel = vs.nvel as u32;
+    let ck = Checkpoint {
+        step: snap,
+        dims: [geom.lx as u64, geom.ly as u64, geom.lz as u64],
+        nvel,
+        config_toml: "checkpoint-restart-test".into(),
+        fields: vec![
+            CheckpointField { name: "f".into(), ncomp: nvel, data: f },
+            CheckpointField { name: "g".into(), ncomp: nvel, data: g },
+        ],
+    };
+    Checkpoint::decode(&ck.encode()).unwrap()
+}
+
+/// Pull bit-exact f/g copies out of a snapshot without consuming it.
+fn take_fg(ck: &Checkpoint, want: usize) -> (Vec<f64>, Vec<f64>) {
+    let mut ck = ck.clone();
+    let f = ck.take_field("f", want).unwrap();
+    let g = ck.take_field("g", want).unwrap();
+    (f, g)
+}
+
+/// D2Q9: a snapshot taken at step 4 of 7 (3 remainder steps — the
+/// snapshot step does not divide the run) by a 4-rank slab world
+/// restores into the decomposition it came from, a 2-rank y-split grid,
+/// a depth-2 communication-avoiding slab (3 = one full + one remainder
+/// super-step), a single rank, and the fused single-domain engine —
+/// every one finishing bit-identical to the uninterrupted reference.
+#[test]
+fn d2q9_snapshot_restores_across_decompositions() {
+    let vs = d2q9();
+    let geom = Geometry::new(12, 6, 1);
+    let n = geom.nsites();
+    let want = vs.nvel * n;
+    let p = FeParams::default();
+    let (f0, g0) = spinodal(vs, &geom, 11);
+    let (steps, snap) = (7u64, 4u64);
+
+    let mut f_ref = f0.clone();
+    let mut g_ref = g0.clone();
+    run_decomposed(&geom, vs, &p, &mut f_ref, &mut g_ref, steps,
+                   &CommsConfig { ranks: 1, ..CommsConfig::default() })
+        .unwrap();
+
+    let ck = snapshot(&geom, vs, &f0, &g0,
+                      &CommsConfig { ranks: 4, ..CommsConfig::default() },
+                      snap);
+    assert_eq!(ck.step, snap);
+    assert_eq!(ck.nvel, vs.nvel as u32);
+
+    let shapes: [(usize, [usize; 3], usize); 4] = [
+        (4, [0, 0, 0], 1), // the decomposition it was taken at
+        (2, [1, 2, 1], 1), // different rank count AND grid shape
+        (2, [0, 0, 0], 2), // depth-2 super-steps over the remainder
+        (1, [0, 0, 0], 1), // single-rank world
+    ];
+    for (ranks, grid, depth) in shapes {
+        let (mut f, mut g) = take_fg(&ck, want);
+        let cfg =
+            CommsConfig { ranks, grid, depth, ..CommsConfig::default() };
+        run_decomposed(&geom, vs, &p, &mut f, &mut g, steps - snap, &cfg)
+            .unwrap();
+        assert_eq!(f, f_ref,
+                   "restore into ranks={ranks} grid={grid:?} \
+                    depth={depth} must finish bit-identical");
+        assert_eq!(g, g_ref,
+                   "restore into ranks={ranks} grid={grid:?} \
+                    depth={depth} must finish bit-identical");
+    }
+
+    // the fused single-domain engine is also a valid restore target
+    let (f, g) = take_fg(&ck, want);
+    let mut target = HostTarget::simd(8, TlpPool::serial()).unwrap();
+    let mut engine =
+        LbEngine::new(&mut target, geom, LatticeModel::D2Q9, p).unwrap();
+    assert!(engine.fused_active());
+    engine.load_state(&f, &g).unwrap();
+    engine.run(steps - snap).unwrap();
+    let mut f_en = vec![0.0; want];
+    let mut g_en = vec![0.0; want];
+    engine.fetch_state(&mut f_en, &mut g_en).unwrap();
+    assert_eq!(f_en, f_ref, "fused-engine restore matches the reference");
+    assert_eq!(g_en, g_ref, "fused-engine restore matches the reference");
+}
+
+/// D3Q19: the snapshot comes from a depth-2 super-stepping world and
+/// restores into a real TCP socket world (and a 1-rank world) — a
+/// transport *and* depth change across the checkpoint boundary.
+#[test]
+fn d3q19_snapshot_crosses_transports_and_depths() {
+    let vs = d3q19();
+    let geom = Geometry::new(8, 4, 4);
+    let n = geom.nsites();
+    let want = vs.nvel * n;
+    let p = FeParams::default();
+    let (f0, g0) = spinodal(vs, &geom, 23);
+    let (steps, snap) = (6u64, 4u64);
+
+    let mut f_ref = f0.clone();
+    let mut g_ref = g0.clone();
+    run_decomposed(&geom, vs, &p, &mut f_ref, &mut g_ref, steps,
+                   &CommsConfig { ranks: 1, ..CommsConfig::default() })
+        .unwrap();
+
+    // snapshot out of a 2-rank depth-2 world (advance(4) = 2 super-steps)
+    let ck = snapshot(&geom, vs, &f0, &g0,
+                      &CommsConfig { ranks: 2, depth: 2,
+                                     ..CommsConfig::default() },
+                      snap);
+
+    // restore into a 2-rank depth-1 socket world on loopback
+    let cfg = CommsConfig { ranks: 2, ..CommsConfig::default() };
+    let (mut f_sk, mut g_sk) = take_fg(&ck, want);
+    let server = RankServer::bind("127.0.0.1:0").unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let joins: Vec<_> = (0..cfg.ranks)
+        .map(|r| {
+            let addr = addr.clone();
+            thread::spawn(move || connect_rank(&addr, Some(r)).unwrap())
+        })
+        .collect();
+    let ctl = server.rendezvous(cfg.ranks, b"").unwrap();
+    let mut endpoints: Vec<Option<SocketTransport>> =
+        (0..cfg.ranks).map(|_| None).collect();
+    for j in joins {
+        let (t, _payload) = j.join().unwrap();
+        let r = t.rank();
+        endpoints[r] = Some(t);
+    }
+    let world = CommsWorld::new(geom, cfg.clone()).unwrap();
+    let mut servers = Vec::new();
+    for t in endpoints.into_iter().map(Option::unwrap) {
+        let d = world.dec.domains[t.rank()].clone();
+        let (f, g) = (f_sk.clone(), g_sk.clone());
+        let cfg = cfg.clone();
+        servers.push(thread::spawn(move || {
+            serve_rank(d, vs, &p, f, g, &cfg, 1, Box::new(t))
+        }));
+    }
+    let mut session = world.remote_session(vs, Box::new(ctl)).unwrap();
+    session.advance(steps - snap).unwrap();
+    session.gather(&mut f_sk, &mut g_sk).unwrap();
+    session.finish().unwrap();
+    for s in servers {
+        s.join().unwrap().unwrap();
+    }
+    assert_eq!(f_sk, f_ref,
+               "socket restore of a super-step snapshot matches the \
+                uninterrupted reference");
+    assert_eq!(g_sk, g_ref);
+
+    // and into a single rank, for completeness
+    let (mut f1, mut g1) = take_fg(&ck, want);
+    run_decomposed(&geom, vs, &p, &mut f1, &mut g1, steps - snap,
+                   &CommsConfig { ranks: 1, ..CommsConfig::default() })
+        .unwrap();
+    assert_eq!(f1, f_ref);
+    assert_eq!(g1, g_ref);
+}
+
+/// The driver-level plumbing: a decomposed `run_simulation` with
+/// `checkpoint_every` leaves a TDPK file behind, and a second
+/// `run_simulation` restoring from it — down a *different* path, the
+/// single-engine pipeline — reports bit-identical final observables.
+/// The checkpoint lands at step 6 of 10 (a remainder of two logging
+/// blocks), exercising the `blocks % checkpoint_every` bookkeeping.
+#[test]
+fn run_simulation_checkpoints_and_restores_across_pipelines() {
+    use targetdp::config::Config;
+    use targetdp::coordinator::pipeline::checkpoint_path;
+    use targetdp::coordinator::run_simulation;
+
+    let dir = std::env::temp_dir()
+        .join(format!("tdpk-restart-{}", std::process::id()));
+    let ck = dir.join("ck.tdpk");
+    let ck_str = ck.to_string_lossy().into_owned();
+    let base = "[simulation]\nlattice = \"d2q9\"\nlx = 8\nly = 8\n\
+                lz = 1\nsteps = 10\n\n[target]\nranks = 2\n\
+                observables = \"gather\"\n\n[output]\nevery = 2\n\
+                checkpoint_every = 3\n";
+
+    let mut cfg = Config::from_toml_str(base).unwrap();
+    cfg.output.checkpoint_out = ck_str.clone();
+    assert_eq!(checkpoint_path(&cfg).as_deref(), Some(ck_str.as_str()));
+    let full = run_simulation(&cfg).unwrap();
+    assert!(ck.exists(), "the decomposed run left a checkpoint behind");
+
+    // the snapshot records step 6 (blocks of 2, every 3rd block) and
+    // carries a config echo naming this run
+    let snap = Checkpoint::read_file(&ck).unwrap();
+    assert_eq!(snap.step, 6);
+    assert!(snap.config_toml.contains("checkpoint_every = 3"));
+
+    // resume through the *single-engine* pipeline: ranks = 1 routes off
+    // the comms path entirely, and the fused engine finishes the run
+    let mut resumed = Config::from_toml_str(base).unwrap();
+    resumed.target.ranks = 1;
+    resumed.output.checkpoint_every = 0;
+    resumed.output.restore = ck_str.clone();
+    let half = run_simulation(&resumed).unwrap();
+    assert_eq!(half.r#final.mass.to_bits(), full.r#final.mass.to_bits());
+    assert_eq!(half.r#final.phi_total.to_bits(),
+               full.r#final.phi_total.to_bits());
+    assert_eq!(half.r#final.phi_variance.to_bits(),
+               full.r#final.phi_variance.to_bits());
+
+    // a dims mismatch is a named config-time error, not a bad run
+    let mut wrong = Config::from_toml_str(base).unwrap();
+    wrong.simulation.lx = 16;
+    wrong.output.restore = ck_str;
+    let err = run_simulation(&wrong).unwrap_err();
+    assert!(err.to_string().contains("checkpoint"), "{err}");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}

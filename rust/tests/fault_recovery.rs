@@ -1,0 +1,165 @@
+//! Fault injection → supervised recovery: a rank killed deterministically
+//! at a step, mid-step, mid-super-step, or at the command barrier takes
+//! the world down with a *named* error (never a hang — every receive is
+//! bounded by `wait_timeout`), and the supervised driver relaunches from
+//! the last checkpoint and finishes **bit-identical** to a run that was
+//! never interrupted. Retry exhaustion surfaces a named error too.
+
+use std::time::Duration;
+
+use targetdp::comms::{run_decomposed, CommsConfig, FaultPoint, FaultSpec};
+use targetdp::config::Config;
+use targetdp::coordinator::run_simulation;
+use targetdp::free_energy::symmetric::FeParams;
+use targetdp::lattice::geometry::Geometry;
+use targetdp::lb::init::init_spinodal;
+use targetdp::lb::model::d2q9;
+
+/// An 8x8 D2Q9 config: 2 ranks, 8 steps in blocks of 2, a checkpoint
+/// after every block, gather observables (decomposition-independent, so
+/// finals compare bitwise even across elastic rank-count changes).
+fn base_cfg() -> Config {
+    let mut cfg = Config::from_toml_str(
+        "[simulation]\nlattice = \"d2q9\"\nlx = 8\nly = 8\nlz = 1\n\
+         steps = 8\n\n[target]\nranks = 2\nobservables = \"gather\"\n\n\
+         [output]\nevery = 2\ncheckpoint_every = 1\n\n[fault]\n\
+         kill_rank = 1\nkill_step = 5\nmax_restarts = 2\n\
+         backoff_ms = 1\nwait_timeout_s = 2\n",
+    )
+    .unwrap();
+    cfg.output.checkpoint_out = std::env::temp_dir()
+        .join(format!("tdpk-fault-{}.tdpk", std::process::id()))
+        .to_string_lossy()
+        .into_owned();
+    cfg
+}
+
+/// The same run with nothing armed: no fault, no checkpointing.
+fn uninterrupted(cfg: &Config) -> Config {
+    let mut c = cfg.clone();
+    c.fault.kill_step = 0;
+    c.fault.max_restarts = 0;
+    c.output.checkpoint_every = 0;
+    c
+}
+
+/// An injected kill in a channel world surfaces as the *root cause* —
+/// the session's error filter reports the fault text, not the timeout /
+/// hangup wreckage on the surviving rank.
+#[test]
+fn channel_fault_error_is_the_root_cause() {
+    let vs = d2q9();
+    let geom = Geometry::new(10, 4, 1);
+    let p = FeParams::default();
+    let n = geom.nsites();
+    for point in [FaultPoint::Step, FaultPoint::Mid, FaultPoint::Barrier] {
+        let mut f = vec![0.0; vs.nvel * n];
+        let mut g = vec![0.0; vs.nvel * n];
+        init_spinodal(vs, &p, &geom, &mut f, &mut g, 0.05, 5);
+        let cfg = CommsConfig {
+            ranks: 2,
+            fault: Some(FaultSpec { rank: 1, step: 2, point }),
+            wait_timeout: Duration::from_secs(5),
+            ..CommsConfig::default()
+        };
+        let err = run_decomposed(&geom, vs, &p, &mut f, &mut g, 4, &cfg)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("fault: injected kill of rank 1"),
+                "{point:?} death must surface the injected fault, \
+                 got: {err}");
+        assert!(!err.contains("timed out") && !err.contains("hung up"),
+                "{point:?} must not be blamed on the transport: {err}");
+    }
+}
+
+/// The headline recovery invariant: rank 1 killed at step 5 — in the
+/// step loop, mid-step between exchange and compute, or at the command
+/// barrier — and the supervised driver resumes from the step-4
+/// checkpoint and finishes bitwise identical to the uninterrupted run.
+#[test]
+fn supervised_recovery_is_bitwise_across_fault_points() {
+    let base = base_cfg();
+    let full = run_simulation(&uninterrupted(&base)).unwrap();
+
+    for point in ["step", "mid", "barrier"] {
+        let mut cfg = base.clone();
+        cfg.fault.kill_point = point.into();
+        cfg.output.checkpoint_out = format!("{}.{point}",
+                                            base.output.checkpoint_out);
+        let s = run_simulation(&cfg).unwrap_or_else(|e| {
+            panic!("supervised run must recover from a {point} kill: {e}")
+        });
+        assert_eq!(s.r#final.mass.to_bits(), full.r#final.mass.to_bits(),
+                   "{point}: recovered mass differs");
+        assert_eq!(s.r#final.phi_total.to_bits(),
+                   full.r#final.phi_total.to_bits(),
+                   "{point}: recovered phi differs");
+        assert_eq!(s.r#final.phi_variance.to_bits(),
+                   full.r#final.phi_variance.to_bits(),
+                   "{point}: recovered variance differs");
+        let _ = std::fs::remove_file(&cfg.output.checkpoint_out);
+    }
+}
+
+/// Depth-2 super-steps: the fault fires *inside* a ghost-block exchange
+/// window (mid-super-step), and recovery still lands bitwise.
+#[test]
+fn supervised_recovery_survives_a_mid_super_step_kill() {
+    let mut base = base_cfg();
+    base.target.comms_depth = 2;
+    base.output.checkpoint_out = format!("{}.d2",
+                                         base.output.checkpoint_out);
+    let full = run_simulation(&uninterrupted(&base)).unwrap();
+
+    let mut cfg = base.clone();
+    cfg.fault.kill_point = "mid".into();
+    let s = run_simulation(&cfg).unwrap();
+    assert_eq!(s.r#final.mass.to_bits(), full.r#final.mass.to_bits());
+    assert_eq!(s.r#final.phi_total.to_bits(),
+               full.r#final.phi_total.to_bits());
+    assert_eq!(s.r#final.phi_variance.to_bits(),
+               full.r#final.phi_variance.to_bits());
+    let _ = std::fs::remove_file(&cfg.output.checkpoint_out);
+}
+
+/// Elastic recovery: the 2-rank world dies and is relaunched as a
+/// *1-rank* world (`retry_ranks`) from the checkpoint — sound because
+/// checkpoints are decomposition-independent — and still finishes
+/// bitwise identical.
+#[test]
+fn supervised_recovery_can_shrink_the_world() {
+    let mut base = base_cfg();
+    base.output.checkpoint_out = format!("{}.elastic",
+                                         base.output.checkpoint_out);
+    let full = run_simulation(&uninterrupted(&base)).unwrap();
+
+    let mut cfg = base.clone();
+    cfg.fault.kill_step = 3; // dies in block [2,4); checkpoint at step 2
+    cfg.fault.retry_ranks = 1;
+    let s = run_simulation(&cfg).unwrap();
+    assert_eq!(s.r#final.mass.to_bits(), full.r#final.mass.to_bits());
+    assert_eq!(s.r#final.phi_total.to_bits(),
+               full.r#final.phi_total.to_bits());
+    assert_eq!(s.r#final.phi_variance.to_bits(),
+               full.r#final.phi_variance.to_bits());
+    let _ = std::fs::remove_file(&cfg.output.checkpoint_out);
+}
+
+/// A fault that stays armed (`kill_repeat`) drives every incarnation
+/// into the ground; exhaustion is a *named* error naming the retry count
+/// and wrapping the injected fault — never a hang.
+#[test]
+fn retry_exhaustion_surfaces_a_named_error() {
+    let mut cfg = base_cfg();
+    cfg.output.checkpoint_out = format!("{}.exhaust",
+                                        cfg.output.checkpoint_out);
+    cfg.fault.kill_step = 1; // dies in the first block, no checkpoint yet
+    cfg.fault.kill_repeat = true;
+    let err = run_simulation(&cfg).unwrap_err().to_string();
+    assert!(err.contains("after 2 restart(s)"),
+            "exhaustion must name the retry count: {err}");
+    assert!(err.contains("fault: injected kill"),
+            "exhaustion must wrap the root cause: {err}");
+    let _ = std::fs::remove_file(&cfg.output.checkpoint_out);
+}

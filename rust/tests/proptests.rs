@@ -361,6 +361,136 @@ fn prop_trace_frame_round_trip() {
     }
 }
 
+/// PROPERTY: the TDPK checkpoint image round-trips bit-exactly for any
+/// step, dims, velocity-set width, config echo and field set — and the
+/// strict decoder rejects every truncation, trailing garbage, bad
+/// magic/version, a corrupted per-field count, and a dims edit that
+/// breaks the `count == ncomp * nsites` cross-check.
+#[test]
+fn prop_checkpoint_image_round_trip_and_strict_decode() {
+    use targetdp::comms::{Checkpoint, CheckpointField,
+                          CHECKPOINT_HEADER_LEN};
+    let palette = [0.0, -0.0, 1.0 / 3.0, f64::MIN_POSITIVE, f64::MAX,
+                   -1e-300, f64::EPSILON, -255.25];
+    for case in 0..30u64 {
+        let mut rng = Rng64::new(17_000 + case);
+        let dims = [1 + rng.next_u64() % 5, 1 + rng.next_u64() % 4,
+                    1 + rng.next_u64() % 3];
+        let nsites = (dims[0] * dims[1] * dims[2]) as usize;
+        let config_toml: String = (0..(rng.next_u64() % 60) as usize)
+            .map(|_| (b' ' + (rng.next_u64() % 94) as u8) as char)
+            .collect();
+        let nfields = (rng.next_u64() % 4) as usize;
+        let fields: Vec<CheckpointField> = (0..nfields)
+            .map(|i| {
+                let ncomp = 1 + (rng.next_u64() % 19) as u32;
+                CheckpointField {
+                    name: format!("field-{i}"),
+                    ncomp,
+                    data: (0..ncomp as usize * nsites)
+                        .map(|_| match rng.next_u64() % 3 {
+                            0 => palette
+                                [(rng.next_u64() % 8) as usize],
+                            _ => rng.uniform(),
+                        })
+                        .collect(),
+                }
+            })
+            .collect();
+        let ck = Checkpoint { step: rng.next_u64(), dims,
+                              nvel: rng.next_u64() as u32,
+                              config_toml, fields };
+        let bytes = ck.encode();
+
+        // bit-exact round trip (PartialEq on f64 misses -0.0 vs 0.0
+        // and would accept it; compare payload bits explicitly)
+        let back = Checkpoint::decode(&bytes).unwrap();
+        assert_eq!(back, ck, "case {case}");
+        for (a, b) in back.fields.iter().zip(&ck.fields) {
+            for (x, y) in a.data.iter().zip(&b.data) {
+                assert_eq!(x.to_bits(), y.to_bits(), "case {case}");
+            }
+        }
+
+        // every strict prefix is rejected — whole image or nothing
+        for len in 0..bytes.len() {
+            assert!(Checkpoint::decode(&bytes[..len]).is_err(),
+                    "case {case}: {len}-byte prefix decoded");
+        }
+        // oversize: trailing garbage after the last field
+        let mut oversize = bytes.clone();
+        oversize.push((rng.next_u64() % 256) as u8);
+        assert!(Checkpoint::decode(&oversize).is_err(), "case {case}");
+        // bad magic / version
+        let mut bad = bytes.clone();
+        bad[0] ^= 0xff;
+        assert!(Checkpoint::decode(&bad).is_err(), "case {case}");
+        let mut bad = bytes.clone();
+        bad[4] = bad[4].wrapping_add(1);
+        assert!(Checkpoint::decode(&bad).is_err(), "case {case}");
+        // a dims edit breaks every field's count cross-check (or, with
+        // no fields, survives as a *different* valid header — never UB)
+        let mut bad = bytes.clone();
+        bad[13] = bad[13].wrapping_add(1);
+        if nfields > 0 {
+            assert!(Checkpoint::decode(&bad).is_err(), "case {case}");
+        }
+        // corrupting a field's count is caught by the cross-check
+        if let Some(first) = ck.fields.first() {
+            let count_at = CHECKPOINT_HEADER_LEN
+                + ck.config_toml.len() // config echo
+                + 1                    // nfields
+                + 1 + first.name.len() // name_len + name
+                + 4;                   // ncomp
+            let mut bad = bytes.clone();
+            bad[count_at] = bad[count_at].wrapping_add(1);
+            assert!(Checkpoint::decode(&bad).is_err(), "case {case}");
+        }
+        // a non-UTF-8 config echo is rejected, not lossily accepted
+        if !ck.config_toml.is_empty() {
+            let mut bad = bytes;
+            bad[CHECKPOINT_HEADER_LEN] = 0xff;
+            assert!(Checkpoint::decode(&bad).is_err(), "case {case}");
+        }
+    }
+}
+
+/// PROPERTY: every `Command` wire frame — including the v6 `Checkpoint`
+/// op — is 15 bytes, round-trips exactly, and survives no truncation,
+/// trailing byte, or out-of-range op.
+#[test]
+fn prop_command_frame_strict() {
+    use targetdp::comms::{Command, Frame};
+    for case in 0..40u64 {
+        let mut rng = Rng64::new(19_000 + case);
+        let cmds = [Command::Advance { steps: rng.next_u64() },
+                    Command::Observables, Command::Gather,
+                    Command::GatherPhi, Command::Shutdown,
+                    Command::Checkpoint];
+        for cmd in cmds {
+            let bytes = Frame::Command(cmd).encode();
+            assert_eq!(bytes.len(), 15, "case {case} {cmd:?}");
+            match Frame::decode(&bytes).unwrap() {
+                Frame::Command(back) => {
+                    assert_eq!(back, cmd, "case {case}")
+                }
+                other => panic!("case {case}: got {other:?}"),
+            }
+            for len in 0..bytes.len() {
+                assert!(Frame::decode(&bytes[..len]).is_err(),
+                        "case {case} {cmd:?}: {len}-byte prefix");
+            }
+            let mut bad = bytes.clone();
+            bad.push(0);
+            assert!(Frame::decode(&bad).is_err(), "case {case} {cmd:?}");
+            // op byte (offset 6) out of range: 5 is the last command
+            let mut bad = bytes;
+            bad[6] = 6 + (rng.next_u64() % 250) as u8;
+            assert!(Frame::decode(&bad).is_err(), "case {case} {cmd:?}");
+        }
+    }
+}
+
 /// PROPERTY: TLP chunk coverage is an exact partition for random (n, vvl,
 /// threads, schedule).
 #[test]
